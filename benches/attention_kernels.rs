@@ -1,0 +1,60 @@
+//! Bench: attention hot paths — host sparse attention, γ-combine, and the
+//! device `static_attn` / `combine` artifacts (the L1 Pallas kernels as
+//! compiled into the serving stack).
+//!
+//! Includes the on-device vs on-host combine ablation (DESIGN.md §5).
+
+use retrieval_attention::attention::{attend_subset, combine, PartialAttention};
+use retrieval_attention::runtime::{literal_f32, Runtime};
+use retrieval_attention::util::bench::{black_box, Bencher};
+use retrieval_attention::util::rng::Rng;
+use retrieval_attention::workload::geometry::{generate, GeometryParams};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "full");
+    let mut b = if full { Bencher::default() } else { Bencher::quick() };
+
+    // Host sparse attention over a retrieved set (the Omega side).
+    let g = generate(&GeometryParams::default(), 131_072, 8, 3);
+    let q = g.queries.row(0).to_vec();
+    for topk in [100usize, 500, 2000] {
+        let ids: Vec<u32> = (0..topk as u32).map(|i| i * 61 % 131_072).collect();
+        b.bench(&format!("host/attend_subset/k={topk}"), || {
+            black_box(attend_subset(&q, &g.keys, &g.values, &ids, 0.125).lse)
+        });
+    }
+
+    // Host gamma-combine.
+    let mut rng = Rng::seed_from(5);
+    let mk = |rng: &mut Rng| PartialAttention {
+        o: (0..64).map(|_| rng.normal()).collect(),
+        lse: rng.normal() * 3.0,
+    };
+    let p1 = mk(&mut rng);
+    let p2 = mk(&mut rng);
+    b.bench("host/combine/d=64", || black_box(combine(&[p1.clone(), p2.clone()]).lse));
+
+    // Device artifacts (needs `make artifacts`).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = Runtime::load("artifacts", "llama3-mini").expect("runtime");
+        let spec = rt.meta().spec.clone();
+        let (s, kv, h, dh) = (spec.static_len, spec.kv_heads, spec.q_heads, spec.head_dim);
+        let qs = literal_f32(&vec![0.1; h * dh], &[h as i64, dh as i64]).unwrap();
+        let ks = literal_f32(&vec![0.2; s * kv * dh], &[s as i64, kv as i64, dh as i64]).unwrap();
+        let vs = literal_f32(&vec![0.3; s * kv * dh], &[s as i64, kv as i64, dh as i64]).unwrap();
+        let ms = literal_f32(&vec![0.0; s], &[s as i64]).unwrap();
+        b.bench("device/static_attn(pallas flash_decode, S=640)", || {
+            black_box(rt.exec("static_attn", &[&qs, &ks, &vs, &ms]).unwrap().len())
+        });
+
+        let o1 = literal_f32(&vec![0.1; h * dh], &[h as i64, dh as i64]).unwrap();
+        let l1 = literal_f32(&vec![1.0; h], &[h as i64]).unwrap();
+        b.bench("device/combine(pallas) [ablation vs host/combine]", || {
+            black_box(rt.exec("combine", &[&o1, &l1, &o1, &l1]).unwrap().len())
+        });
+    } else {
+        eprintln!("artifacts/ missing; skipping device kernels (run `make artifacts`)");
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_attention.json", b.to_json().to_string_pretty()).ok();
+}

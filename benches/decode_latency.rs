@@ -1,0 +1,55 @@
+//! Bench: end-to-end per-token decode latency by method and context
+//! length — the measured backbone of Tables 4/7/8.
+//!
+//! `cargo bench --bench decode_latency [-- full]`
+
+use retrieval_attention::config::{Method, ServeConfig};
+use retrieval_attention::model::Engine;
+use retrieval_attention::util::bench::{black_box, Bencher};
+use retrieval_attention::workload::geometry::{generate, GeometryParams};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts/ missing; run `make artifacts` first");
+        return;
+    }
+    let full = std::env::args().any(|a| a == "full");
+    let lengths: &[usize] = if full { &[8_192, 32_768, 131_072] } else { &[4_096, 16_384] };
+    let methods =
+        [Method::StreamingLlm, Method::Flat, Method::Ivf, Method::RetrievalAttention];
+    let mut b = if full { Bencher::default() } else { Bencher::quick() };
+    b.max_iters = if full { 50 } else { 10 };
+
+    let mut cfg = ServeConfig::default();
+    cfg.model = "llama3-mini".into();
+    let engine = Engine::from_config(cfg).expect("engine");
+    let spec = engine.spec().clone();
+
+    for &n in lengths {
+        let heads: Vec<Vec<_>> = (0..spec.layers)
+            .map(|l| {
+                (0..spec.kv_heads)
+                    .map(|k| {
+                        generate(
+                            &GeometryParams { head_dim: spec.head_dim, ..Default::default() },
+                            n,
+                            512,
+                            (l * 7 + k) as u64,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        for &m in &methods {
+            let mut sess = engine.synthetic_session(heads.clone(), m).expect("session");
+            engine.decode_step(&mut sess, 1).unwrap(); // warmup
+            let mut i = 0u32;
+            b.bench(&format!("decode/{}/n={n}", m.label()), || {
+                i += 1;
+                black_box(engine.decode_step(&mut sess, i % 97).unwrap().token)
+            });
+        }
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_decode.json", b.to_json().to_string_pretty()).ok();
+}

@@ -1,0 +1,50 @@
+//! Bench: index construction cost (the prefill-side price of each method).
+//!
+//! The paper's index build happens once per prompt during prefill (§3.2,
+//! exact KNN on GPU + projection); this bench measures our host-side
+//! build across index families and corpus sizes, plus the ablation of
+//! RoarGraph's `kb` (bipartite degree) — a DESIGN.md §5 design choice.
+
+use retrieval_attention::index::{
+    hnsw::{HnswIndex, HnswParams}, ivf::IvfIndex, roargraph::{RoarGraph, RoarParams},
+    VectorIndex,
+};
+use retrieval_attention::tensor::Matrix;
+use retrieval_attention::util::bench::{black_box, Bencher};
+use retrieval_attention::workload::geometry::{generate, GeometryParams};
+use std::sync::Arc;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "full");
+    let sizes: &[usize] = if full { &[16_384, 65_536] } else { &[8_192, 16_384] };
+    let mut b = if full { Bencher::default() } else { Bencher::quick() };
+    b.max_iters = 5;
+
+    for &n in sizes {
+        let g = generate(&GeometryParams::default(), n, 1024, 7);
+        let keys = Arc::new(g.keys);
+        let train = Matrix::from_fn(512, 64, |r, c| g.queries[(r, c)]);
+
+        b.bench(&format!("build/ivf/n={n}"), || {
+            black_box(IvfIndex::build(keys.clone(), None, 1).nlist())
+        });
+        b.bench(&format!("build/hnsw/n={n}"), || {
+            black_box(HnswIndex::build(keys.clone(), HnswParams::default()).len())
+        });
+        // Ablation: bipartite KNN degree kb (quality-vs-build-cost knob).
+        for kb in [16usize, 32, 64] {
+            b.bench(&format!("build/roargraph/kb={kb}/n={n}"), || {
+                black_box(
+                    RoarGraph::build(
+                        keys.clone(),
+                        &train,
+                        RoarParams { kb, m: 32, repair_sample: 256 },
+                    )
+                    .avg_degree(),
+                )
+            });
+        }
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_index_build.json", b.to_json().to_string_pretty()).ok();
+}

@@ -1,0 +1,54 @@
+//! Bench: index search latency & scan fractions (backs Tables 4/5, Fig 6).
+//!
+//! `cargo bench --bench index_search [-- full]`
+
+use retrieval_attention::index::{
+    flat::FlatIndex, hnsw::{HnswIndex, HnswParams}, ivf::IvfIndex,
+    roargraph::{RoarGraph, RoarParams}, SearchParams, VectorIndex,
+};
+use retrieval_attention::tensor::Matrix;
+use retrieval_attention::util::bench::{black_box, Bencher};
+use retrieval_attention::workload::geometry::{generate, GeometryParams};
+use std::sync::Arc;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "full");
+    let sizes: &[usize] = if full { &[16_384, 65_536, 131_072] } else { &[16_384, 65_536] };
+    let mut b = if full { Bencher::default() } else { Bencher::quick() };
+
+    for &n in sizes {
+        let g = generate(&GeometryParams::default(), n, 2048 + 64, 42);
+        let keys = Arc::new(g.keys);
+        let train = Matrix::from_fn(2048, 64, |r, c| g.queries[(64 + r, c)]);
+        let queries: Vec<Vec<f32>> = (0..64).map(|i| g.queries.row(i).to_vec()).collect();
+
+        let flat = FlatIndex::new(keys.clone());
+        let ivf = IvfIndex::build(keys.clone(), None, 1);
+        let hnsw = HnswIndex::build(keys.clone(), HnswParams::default());
+        let roar = RoarGraph::build(keys.clone(), &train, RoarParams::default());
+
+        let mut qi = 0usize;
+        let mut run = |name: String, index: &dyn VectorIndex, p: SearchParams| {
+            let mut scanned = 0usize;
+            let mut count = 0usize;
+            b.bench(&name, || {
+                let q = &queries[qi % queries.len()];
+                qi += 1;
+                let r = index.search(q, 100, &p);
+                scanned += r.scanned;
+                count += 1;
+                black_box(r.ids.len())
+            });
+            println!(
+                "    -> mean scan fraction {:.2}%",
+                100.0 * scanned as f64 / (count * n) as f64
+            );
+        };
+        run(format!("flat/top100/n={n}"), &flat, SearchParams::default());
+        run(format!("ivf/np32/n={n}"), &ivf, SearchParams { ef: 0, nprobe: 32 });
+        run(format!("hnsw/ef128/n={n}"), &hnsw, SearchParams { ef: 128, nprobe: 0 });
+        run(format!("roargraph/ef128/n={n}"), &roar, SearchParams { ef: 128, nprobe: 0 });
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_index_search.json", b.to_json().to_string_pretty()).ok();
+}

@@ -1,0 +1,87 @@
+//! Index explorer: build all four ANNS indexes on attention-shaped
+//! geometry and compare recall-vs-scan tradeoffs interactively.
+//!
+//! ```bash
+//! cargo run --release --example index_explorer -- [keys] [queries-direction]
+//! # e.g. 65536 qk   (default: 16384 qk)
+//! ```
+
+use retrieval_attention::index::{
+    exact_topk, flat::FlatIndex, hnsw::{HnswIndex, HnswParams}, ivf::IvfIndex,
+    roargraph::{RoarGraph, RoarParams}, SearchParams, VectorIndex,
+};
+use retrieval_attention::tensor::Matrix;
+use retrieval_attention::workload::geometry::{generate, GeometryParams};
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(16384);
+    let dir = args.get(1).map(|s| s.as_str()).unwrap_or("qk");
+    let nq = 32;
+
+    println!("generating {n} keys of attention geometry ...");
+    let g = generate(&GeometryParams::default(), n + nq, 2048 + nq, 42);
+    let keys = Arc::new(Matrix::from_fn(n, 64, |r, c| g.keys[(r, c)]));
+    let queries = if dir == "kk" {
+        println!("direction: K->K (in-distribution)");
+        Matrix::from_fn(nq, 64, |r, c| g.keys[(n + r, c)])
+    } else {
+        println!("direction: Q->K (the OOD case the paper targets)");
+        Matrix::from_fn(nq, 64, |r, c| g.queries[(r, c)])
+    };
+    let train = Matrix::from_fn(2048, 64, |r, c| g.queries[(nq + r, c)]);
+
+    println!("building indexes ...");
+    let t = std::time::Instant::now();
+    let flat = FlatIndex::new(keys.clone());
+    println!("  Flat: {:.1}s", t.elapsed().as_secs_f64());
+    let t = std::time::Instant::now();
+    let ivf = IvfIndex::build(keys.clone(), None, 1);
+    println!("  IVF ({} lists): {:.1}s", ivf.nlist(), t.elapsed().as_secs_f64());
+    let t = std::time::Instant::now();
+    let hnsw = HnswIndex::build(keys.clone(), HnswParams::default());
+    println!("  HNSW: {:.1}s", t.elapsed().as_secs_f64());
+    let t = std::time::Instant::now();
+    let roar = RoarGraph::build(keys.clone(), &train, RoarParams::default());
+    println!(
+        "  RoarGraph (attention-aware, avg degree {:.1}): {:.1}s",
+        roar.avg_degree(),
+        t.elapsed().as_secs_f64()
+    );
+
+    let truths: Vec<Vec<u32>> =
+        (0..nq).map(|qi| exact_topk(&keys, queries.row(qi), 100)).collect();
+
+    println!("\n{:<20} {:>10} {:>12} {:>10}", "index", "knob", "scan %", "recall@100");
+    let eval = |index: &dyn VectorIndex, knob: &str, p: SearchParams| {
+        let mut recall = 0.0;
+        let mut scanned = 0usize;
+        for (qi, truth) in truths.iter().enumerate() {
+            let r = index.search(queries.row(qi), 100, &p);
+            recall += r.recall_against(truth);
+            scanned += r.scanned;
+        }
+        println!(
+            "{:<20} {:>10} {:>11.2}% {:>10.3}",
+            index.name(),
+            knob,
+            100.0 * scanned as f64 / (nq * n) as f64,
+            recall / nq as f32
+        );
+    };
+    eval(&flat, "-", SearchParams::default());
+    for nprobe in [4usize, 32, 128] {
+        eval(&ivf, &format!("np={nprobe}"), SearchParams { ef: 0, nprobe });
+    }
+    for ef in [128usize, 512] {
+        eval(&hnsw, &format!("ef={ef}"), SearchParams { ef, nprobe: 0 });
+    }
+    for ef in [128usize, 512] {
+        eval(&roar, &format!("ef={ef}"), SearchParams { ef, nprobe: 0 });
+    }
+    println!(
+        "\npaper shape: on Q->K, RoarGraph reaches recall >=0.95 at a scan \
+         fraction conventional indexes need 10-30x more scanning for."
+    );
+}

@@ -1,0 +1,55 @@
+//! Serving over the network: start the json-lines TCP server on an
+//! ephemeral port, connect a client, stream a generation.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_longcontext
+//! ```
+
+use retrieval_attention::config::{Method, ServeConfig};
+use retrieval_attention::coordinator::router::Router;
+use retrieval_attention::kvcache::StaticPattern;
+use retrieval_attention::server::{Client, Server};
+use retrieval_attention::util::rng::Rng;
+use retrieval_attention::workload::tasks;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ServeConfig::default();
+    cfg.model = "induction-mini".into();
+    cfg.method = Method::RetrievalAttention;
+    cfg.pattern = StaticPattern { sink: 32, window: 128 };
+    cfg.retrieval.top_k = 32;
+
+    // Two replicas behind the least-outstanding router.
+    let router = Arc::new(Router::spawn(cfg, 2));
+    let server = Server::start(router.clone(), "127.0.0.1:0")?;
+    println!("server listening on {} with {} replicas", server.addr, router.replica_count());
+
+    // Two concurrent clients, each with its own prompt.
+    let addr = server.addr;
+    let handles: Vec<_> = (0..2u64)
+        .map(|cid| {
+            std::thread::spawn(move || -> anyhow::Result<()> {
+                let mut rng = Rng::seed_from(100 + cid);
+                let sample = tasks::kv_retrieval(&mut rng, 1536, 96);
+                let mut client = Client::connect(addr)?;
+                let t = std::time::Instant::now();
+                let (tokens, done) = client.generate(&sample.prompt, sample.expect.len())?;
+                println!(
+                    "client {cid}: {} tokens in {:.2}s, grade {:.0}%, ttft {:.2}s, search share {:.0}%",
+                    tokens.len(),
+                    t.elapsed().as_secs_f64(),
+                    sample.grade(&tokens) * 100.0,
+                    done.req_f64("ttft_s")?,
+                    done.req_f64("search_share")? * 100.0,
+                );
+                Ok(())
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread")?;
+    }
+    println!("all clients done; shutting down");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts + manifest.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--presets a,b,...]
+
+Python runs exactly once, here. The Rust binary is self-contained after
+`make artifacts`: it reads `manifest.json` for shapes and loads the
+`.hlo.txt` files through the PJRT CPU client.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, arg_specs):
+    # keep_unused: presets with norm disabled never read the gain tensors,
+    # but the Rust runtime feeds a fixed buffer list per artifact — the
+    # entry signature must stay stable across presets.
+    return jax.jit(fn, keep_unused=True).lower(*arg_specs)
+
+
+def spec_json(s):
+    return {"shape": list(s.shape), "dtype": s.dtype.name}
+
+
+def build_preset(spec: model.ModelSpec, out_dir: str) -> dict:
+    """Lower every entry point of one preset; returns its manifest stanza."""
+    preset_dir = os.path.join(out_dir, spec.name)
+    os.makedirs(preset_dir, exist_ok=True)
+    artifacts = {}
+    for name, (fn, args) in model.entry_points(spec).items():
+        lowered = lower_entry(fn, args)
+        text = to_hlo_text(lowered)
+        rel = os.path.join(spec.name, f"{name}.hlo.txt")
+        path = os.path.join(out_dir, rel)
+        with open(path, "w") as f:
+            f.write(text)
+        outs = [spec_json(s) for s in jax.tree_util.tree_leaves(lowered.out_info)]
+        artifacts[name] = {
+            "file": rel,
+            "args": [spec_json(s) for s in args],
+            "outs": outs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {spec.name}/{name}: {len(text)} chars, "
+              f"{len(args)} args -> {len(outs)} outs")
+    return {
+        "spec": {
+            "layers": spec.layers,
+            "d_model": spec.d_model,
+            "q_heads": spec.q_heads,
+            "kv_heads": spec.kv_heads,
+            "head_dim": spec.head_dim,
+            "vocab": spec.vocab,
+            "norm": spec.norm,
+            "ffn_dim": spec.ffn_dim,
+            "static_len": spec.static_len,
+        },
+        "artifacts": artifacts,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--presets",
+        default=",".join(model.PRESETS),
+        help="comma-separated preset names",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "presets": {}}
+    for name in args.presets.split(","):
+        spec = model.PRESETS[name]
+        print(f"preset {name}:")
+        manifest["presets"][name] = build_preset(spec, args.out_dir)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out_dir}/manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

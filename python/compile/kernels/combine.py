@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: exact two-set attention combination (Eq. 4/5).
+
+Merges the device partial ``(o_W, lse_W)`` with the host partial
+``(o_Omega, lse_Omega)`` using the FlashAttention-style rescaling of
+Appendix B.1. The default serving path performs this merge on the host
+(it is O(H*d) — trivially cheap); this kernel exists for the on-device
+ablation (`bench: ablation_combine`) where the merge is fused into the
+device step, and as the simplest possible Pallas example in the repo.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(o1_ref, lse1_ref, o2_ref, lse2_ref, o_ref, lse_ref):
+    o1 = o1_ref[...]          # [1, d]
+    o2 = o2_ref[...]
+    lse1 = lse1_ref[...]      # [1, 1]
+    lse2 = lse2_ref[...]
+
+    m = jnp.maximum(lse1, lse2)
+    # logaddexp with the empty-set convention: exp(-inf - -inf) -> handled
+    # by clamping m away from -inf.
+    m = jnp.maximum(m, -1e30)
+    w1 = jnp.exp(lse1 - m)
+    w2 = jnp.exp(lse2 - m)
+    total = w1 + w2
+    lse_ref[...] = m + jnp.log(total)
+    g1 = w1 / total
+    g2 = w2 / total
+    o_ref[...] = o1 * g1 + o2 * g2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def combine(o1, lse1, o2, lse2, *, interpret=True):
+    """Merge two per-head partial attentions.
+
+    Args:
+      o1, o2:     [H, d] partial outputs (normalized within their sets).
+      lse1, lse2: [H]    log-sum-exp of each set's scaled logits.
+
+    Returns:
+      o:   [H, d] attention over the union of the two sets.
+      lse: [H]
+    """
+    h, d = o1.shape
+    o, lse = pl.pallas_call(
+        _combine_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, d), o1.dtype),
+            jax.ShapeDtypeStruct((h, 1), o1.dtype),
+        ],
+        interpret=interpret,
+    )(o1, lse1.reshape(h, 1), o2, lse2.reshape(h, 1))
+    return o, lse[:, 0]

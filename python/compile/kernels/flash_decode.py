@@ -1,0 +1,145 @@
+"""Layer-1 Pallas kernel: blocked decode attention with online softmax.
+
+The device-side half of RetrievalAttention's CPU-GPU co-execution (§3.3):
+attention of one decode query over the *static* KV set ``W`` (sink +
+sliding window), emitting the partial output *and* the log-sum-exp so the
+Rust coordinator can gamma-combine it with the host-side retrieved partial
+(Appendix B.1, Eq. 4/5).
+
+Hardware adaptation (DESIGN.md §3): the paper's CUDA FlashAttention tiles
+HBM->shared-memory per threadblock; here the KV sequence is blocked with
+``BlockSpec((BLOCK_K, d))`` so each grid step streams one KV tile
+HBM->VMEM and the contraction ``q @ K_tile^T`` runs all query heads at
+once — an [H, d] x [d, BLOCK_K] matmul that keeps the 128x128 MXU
+occupied (H rows of systolic input instead of 1; decode attention is
+bandwidth-bound either way, so the kernel's job is to keep the KV stream
+saturated). The running ``(o, m, l)`` online-softmax state lives in the
+revisited output blocks (their index map ignores the KV-block axis), which
+Pallas keeps resident across the sequential grid — the VMEM-scratch idiom
+without `scratch_shapes`, portable to ``interpret=True``.
+
+Grid layout note (EXPERIMENTS.md §Perf, L1 iteration 2): an earlier
+version used grid=(heads, blocks_k) with one query row per step; folding
+the head loop into the tile matmul cut the grid from H*blocks to blocks
+steps — 8x fewer interpreter dispatches on the CPU path and a strictly
+better MXU shape on TPU.
+
+All kernels in this repo are lowered with ``interpret=True``: the CPU PJRT
+client cannot execute Mosaic custom-calls. Real-TPU performance is
+estimated analytically in EXPERIMENTS.md §Perf (VMEM footprint / MXU
+occupancy), not measured.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# KV-sequence tile. Perf iterations (EXPERIMENTS.md §Perf, L1):
+#   (1) grid=(H, S/128), 1 query row/step:        17 ms/call (interpret)
+#   (2) grid=(S/128,), all heads batched:          2.8 ms/call
+#   (3) tile 320 -> 2 grid steps (this setting):   1.7 ms/call
+# 320 keeps the cross-block online-softmax recurrence on the production
+# path (tile 640 = single block would degenerate it) while the per-step
+# VMEM footprint stays tiny: BLOCK_K*d*2*4B*H = 1.3MB for d=64, H=8 —
+# well under the ~16MB VMEM budget, leaving room for double buffering.
+# The interpreter dispatch cost per grid step is a CPU-substrate artifact;
+# on real TPU the tile choice trades VMEM residency vs pipeline depth.
+BLOCK_K = 320
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *, blocks_k):
+    """One KV-block grid step, all query heads at once.
+
+    Grid is (blocks_k,), sequential. Outputs are indexed by nothing (block
+    0 always), so (o, m, l) are revisited every step and carry the
+    online-softmax state.
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...]            # [H, d]
+    k = k_ref[...]            # [H, BLOCK_K, d]
+    v = v_ref[...]            # [H, BLOCK_K, d]
+    mask = mask_ref[...]      # [H, BLOCK_K]
+
+    # Scores for this tile: one batched MXU pass per head group.
+    s = jnp.einsum("hd,htd->ht", q, k) + mask      # [H, BLOCK_K]
+
+    m_prev = m_ref[...]                            # [H, 1]
+    l_prev = l_ref[...]
+    o_prev = o_ref[...]                            # [H, d]
+
+    m_cur = jnp.max(s, axis=-1, keepdims=True)     # [H, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                         # [H, BLOCK_K]
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    o_new = o_prev * corr + jnp.einsum("ht,htd->hd", p, v)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    is_last = j == blocks_k - 1
+
+    @pl.when(is_last)
+    def _final():
+        # Epilogue: normalize once at the end.
+        o_ref[...] = o_new / l_new
+
+    @pl.when(jnp.logical_not(is_last))
+    def _carry():
+        o_ref[...] = o_new
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode(q, keys, values, mask, *, interpret=True):
+    """Decode attention of per-head queries over a fixed KV set.
+
+    Args:
+      q:      [H, d]      already scaled by 1/sqrt(d).
+      keys:   [H, S, d]   per-head key tile (GQA groups pre-expanded by the
+                          L2 wrapper via a gather, keeping the kernel dense).
+      values: [H, S, d]
+      mask:   [H, S]      additive mask (0 valid / -inf padding).
+
+    Returns:
+      o:   [H, d] partial attention output (normalized within the set).
+      lse: [H]    log-sum-exp of the scaled logits (for gamma-combine).
+    """
+    h, s, d = keys.shape
+    assert s % BLOCK_K == 0, f"S={s} must be a multiple of {BLOCK_K}"
+    blocks_k = s // BLOCK_K
+
+    kernel = functools.partial(_attn_kernel, blocks_k=blocks_k)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(blocks_k,),
+        in_specs=[
+            pl.BlockSpec((h, d), lambda j: (0, 0)),            # q (all heads)
+            pl.BlockSpec((h, BLOCK_K, d), lambda j: (0, j, 0)),
+            pl.BlockSpec((h, BLOCK_K, d), lambda j: (0, j, 0)),
+            pl.BlockSpec((h, BLOCK_K), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((h, d), lambda j: (0, 0)),            # o
+            pl.BlockSpec((h, 1), lambda j: (0, 0)),            # running max
+            pl.BlockSpec((h, 1), lambda j: (0, 0)),            # running sum
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, d), q.dtype),
+            jax.ShapeDtypeStruct((h, 1), q.dtype),
+            jax.ShapeDtypeStruct((h, 1), q.dtype),
+        ],
+        interpret=interpret,
+    )(q, keys, values, mask)
+    lse = m[:, 0] + jnp.log(l[:, 0])
+    return o, lse

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in kernels/ has an exact reference here; pytest asserts
+allclose between the kernel (interpret=True) and these references across
+shape/dtype sweeps. This is the build-time correctness gate of the
+three-layer stack.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_attention(q, keys, values, mask):
+    """Exact decode attention with LSE, matching flash_decode's contract.
+
+    Args:
+      q:      [H, d] (pre-scaled).
+      keys:   [H, S, d]
+      values: [H, S, d]
+      mask:   [H, S] additive.
+
+    Returns:
+      o: [H, d], lse: [H]
+    """
+    s = jnp.einsum("hd,hsd->hs", q, keys) + mask
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("hs,hsd->hd", p / l, values)
+    lse = (m + jnp.log(l))[:, 0]
+    return o, lse
+
+
+def ref_combine(o1, lse1, o2, lse2):
+    """Exact two-set merge (Eq. 4/5)."""
+    m = jnp.maximum(jnp.maximum(lse1, lse2), -1e30)
+    w1 = jnp.exp(lse1 - m)
+    w2 = jnp.exp(lse2 - m)
+    total = w1 + w2
+    g1 = (w1 / total)[:, None]
+    g2 = (w2 / total)[:, None]
+    return o1 * g1 + o2 * g2, m + jnp.log(total)
+
+
+def ref_joint(q, k1, v1, mask1, k2, v2, mask2):
+    """Attention over the union of two disjoint KV sets — the ground truth
+    that combine(ref_attention(set1), ref_attention(set2)) must equal."""
+    keys = jnp.concatenate([k1, k2], axis=1)
+    values = jnp.concatenate([v1, v2], axis=1)
+    mask = jnp.concatenate([mask1, mask2], axis=1)
+    return ref_attention(q, keys, values, mask)

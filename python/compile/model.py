@@ -1,0 +1,250 @@
+"""Layer-2: the transformer compute graph in JAX.
+
+Defines the model ops the Rust coordinator drives at serve time, all as
+pure functions of (weights, activations) so a single AOT artifact per op
+serves every layer — weights are runtime inputs, not baked constants.
+This is what lets the Rust side construct weights itself (including the
+hand-built induction-head model used for end-to-end task accuracy) while
+the compute graph stays fixed.
+
+Architecture (llama-style, knobs per preset):
+  * pre-norm RMSNorm (disable-able: the induction construction needs raw
+    residual-stream algebra),
+  * GQA attention with head_dim d_h, H query heads, KV kv-heads,
+  * SwiGLU FFN,
+  * positions are *additive codes baked into the embedding table
+    construction on the Rust side* (no RoPE in the graph — the induction
+    construction derives its layer-1 shift from rotation-equivariant
+    position codes, see rust/src/model/induction.rs).
+
+The attention over the device-resident static set W goes through the
+Pallas `flash_decode` kernel so that the paper's kernel is on the real
+execution path of every decode step.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.combine import combine as pallas_combine
+from compile.kernels.flash_decode import flash_decode
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Geometry of one served model preset."""
+
+    name: str
+    layers: int
+    d_model: int
+    q_heads: int
+    kv_heads: int
+    head_dim: int
+    vocab: int
+    norm: bool
+    ffn_dim: int
+    # Device static-set size (sink + window), the S of flash_decode.
+    static_len: int
+
+    @property
+    def group_size(self) -> int:
+        assert self.q_heads % self.kv_heads == 0
+        return self.q_heads // self.kv_heads
+
+
+# The model presets served by the Rust coordinator. Head-dim 64 matches the
+# paper's models; layer/head counts are scaled (DESIGN.md §2 substitutions).
+PRESETS = {
+    # Hand-constructed induction-head model: 2 attention layers, single
+    # head, no norm, inert FFN. Solves associative recall exactly, which is
+    # what turns retrieval recall into task accuracy in Tables 2/3/5.
+    "induction-mini": ModelSpec(
+        name="induction-mini",
+        layers=2,
+        d_model=192,
+        q_heads=1,
+        kv_heads=1,
+        head_dim=192,
+        vocab=4096,
+        norm=False,
+        ffn_dim=8,
+        static_len=640,
+    ),
+    # Llama-3-8B-like geometry, scaled: GQA 8Q/2KV, head dim 64.
+    "llama3-mini": ModelSpec(
+        name="llama3-mini",
+        layers=4,
+        d_model=512,
+        q_heads=8,
+        kv_heads=2,
+        head_dim=64,
+        vocab=8192,
+        norm=True,
+        ffn_dim=1024,
+        static_len=640,
+    ),
+    # Yi-6B-like: wider GQA ratio (8Q/1KV).
+    "yi6-mini": ModelSpec(
+        name="yi6-mini",
+        layers=4,
+        d_model=512,
+        q_heads=8,
+        kv_heads=1,
+        head_dim=64,
+        vocab=8192,
+        norm=True,
+        ffn_dim=1024,
+        static_len=640,
+    ),
+    # Yi-9B-like: deeper.
+    "yi9-mini": ModelSpec(
+        name="yi9-mini",
+        layers=6,
+        d_model=512,
+        q_heads=8,
+        kv_heads=1,
+        head_dim=64,
+        vocab=8192,
+        norm=True,
+        ffn_dim=1024,
+        static_len=640,
+    ),
+}
+
+
+def rmsnorm(x, g, enabled: bool):
+    if not enabled:
+        return x
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def embed(spec: ModelSpec, table, ids, pos):
+    """Token embedding lookup plus additive position code.
+
+    table: [vocab, d_model], ids: [B] int32, pos: [B, d_model].
+
+    Position codes are computed by the Rust coordinator (they are a pure
+    function of the absolute position — sinusoidal planes for the induction
+    construction, zeros for the random presets) and added on-device here,
+    keeping the embedding artifact position-agnostic.
+    """
+    return jnp.take(table, ids, axis=0) + pos
+
+
+def qkv(spec: ModelSpec, x, g, wq, wk, wv):
+    """Pre-norm QKV projection.
+
+    x: [B, d_model] -> q: [B, H, d_h], k: [B, KV, d_h], v: [B, KV, d_h].
+    """
+    b = x.shape[0]
+    xn = rmsnorm(x, g, spec.norm)
+    q = (xn @ wq).reshape(b, spec.q_heads, spec.head_dim)
+    k = (xn @ wk).reshape(b, spec.kv_heads, spec.head_dim)
+    v = (xn @ wv).reshape(b, spec.kv_heads, spec.head_dim)
+    return q, k, v
+
+
+def static_attn(spec: ModelSpec, q, keys, values, mask):
+    """Device-side partial attention over the static set W (Algorithm 1 #6).
+
+    q:    [H, d_h] — one decode step's query heads (unscaled).
+    keys: [S, KV, d_h], values: [S, KV, d_h] — the W tile (padded to S).
+    mask: [S] additive (0 valid / -1e30 padding).
+
+    Returns (o: [H, d_h], lse: [H]) for the gamma-combine.
+    """
+    scale = spec.head_dim ** -0.5
+    # GQA: expand KV groups to query heads (gather, no copy after fusion).
+    group = jnp.arange(spec.q_heads) // spec.group_size          # [H]
+    kh = jnp.take(keys, group, axis=1).transpose(1, 0, 2)        # [H, S, d_h]
+    vh = jnp.take(values, group, axis=1).transpose(1, 0, 2)
+    maskh = jnp.broadcast_to(mask[None, :], (spec.q_heads, mask.shape[0]))
+    return flash_decode(q * scale, kh, vh, maskh)
+
+
+def combine(o1, lse1, o2, lse2):
+    """Exact two-set merge (Eq. 4/5) via the Pallas combine kernel."""
+    return pallas_combine(o1, lse1, o2, lse2)
+
+
+def post_attn(spec: ModelSpec, x, attn, wo, g2, w1, w3, w2):
+    """Output projection + residual + SwiGLU FFN.
+
+    x: [B, d_model], attn: [B, H*d_h] (flattened head outputs).
+    """
+    h = x + attn @ wo
+    hn = rmsnorm(h, g2, spec.norm)
+    ffn = (jax.nn.silu(hn @ w1) * (hn @ w3)) @ w2
+    return h + ffn
+
+
+def lm_head(spec: ModelSpec, x, gf, wu):
+    """Final norm + unembedding. x: [B, d_model] -> logits [B, vocab]."""
+    return rmsnorm(x, gf, spec.norm) @ wu
+
+
+# ----------------------------------------------------------------------------
+# Entry points for AOT lowering. Each artifact is (jax function, example
+# argument specs); aot.py lowers them to HLO text + manifest entries.
+# ----------------------------------------------------------------------------
+
+
+def entry_points(spec: ModelSpec, batches=(1, 256)):
+    """All artifacts for one preset: name -> (fn, [ShapeDtypeStruct...])."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    d, dh, h, kv, f, s, v = (
+        spec.d_model,
+        spec.head_dim,
+        spec.q_heads,
+        spec.kv_heads,
+        spec.ffn_dim,
+        spec.static_len,
+        spec.vocab,
+    )
+    eps = {}
+    for b in batches:
+        eps[f"embed_b{b}"] = (
+            lambda table, ids, pos: (embed(spec, table, ids, pos),),
+            [sd((v, d), f32), sd((b,), i32), sd((b, d), f32)],
+        )
+        eps[f"qkv_b{b}"] = (
+            lambda x, g, wq, wk, wv: qkv(spec, x, g, wq, wk, wv),
+            [
+                sd((b, d), f32),
+                sd((d,), f32),
+                sd((d, h * dh), f32),
+                sd((d, kv * dh), f32),
+                sd((d, kv * dh), f32),
+            ],
+        )
+        eps[f"post_b{b}"] = (
+            lambda x, attn, wo, g2, w1, w3, w2: (
+                post_attn(spec, x, attn, wo, g2, w1, w3, w2),
+            ),
+            [
+                sd((b, d), f32),
+                sd((b, h * dh), f32),
+                sd((h * dh, d), f32),
+                sd((d,), f32),
+                sd((d, f), f32),
+                sd((d, f), f32),
+                sd((f, d), f32),
+            ],
+        )
+        eps[f"lm_head_b{b}"] = (
+            lambda x, gf, wu: (lm_head(spec, x, gf, wu),),
+            [sd((b, d), f32), sd((d,), f32), sd((d, v), f32)],
+        )
+    eps["static_attn"] = (
+        lambda q, k, val, m: static_attn(spec, q, k, val, m),
+        [sd((h, dh), f32), sd((s, kv, dh), f32), sd((s, kv, dh), f32), sd((s,), f32)],
+    )
+    eps["combine"] = (
+        lambda o1, l1, o2, l2: combine(o1, l1, o2, l2),
+        [sd((h, dh), f32), sd((h,), f32), sd((h, dh), f32), sd((h,), f32)],
+    )
+    return eps

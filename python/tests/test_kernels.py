@@ -1,0 +1,125 @@
+"""L1 correctness gate: Pallas kernels vs pure-jnp oracles.
+
+Sweeps shapes and data regimes (the `hypothesis` package is not available
+in this environment, so the sweep is an explicit seeded parameter grid —
+same coverage intent: many shapes x dtypes x data regimes, deterministic
+replay via the seed in the test id).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels.combine import combine
+from compile.kernels.flash_decode import BLOCK_K, flash_decode
+from compile.kernels.ref import ref_attention, ref_combine, ref_joint
+
+
+def rand_case(seed, h, s, d, scale=1.0, pad=0):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((h, d), dtype=np.float32) * scale
+    k = rng.standard_normal((h, s, d), dtype=np.float32)
+    v = rng.standard_normal((h, s, d), dtype=np.float32)
+    mask = np.zeros((h, s), dtype=np.float32)
+    if pad:
+        mask[:, s - pad:] = -1e30
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(mask)
+
+
+# Shape sweep: heads x seq-blocks x head-dim. S must be a BLOCK_K multiple
+# (the serving static set is 640 = 5 * 128).
+SHAPES = [
+    (1, BLOCK_K, 64),
+    (1, 5 * BLOCK_K, 192),     # induction-mini geometry
+    (2, 2 * BLOCK_K, 32),
+    (4, 4 * BLOCK_K, 64),
+    (8, 5 * BLOCK_K, 64),      # llama3-mini geometry
+    (8, BLOCK_K, 128),
+    (3, 3 * BLOCK_K, 16),
+]
+
+
+@pytest.mark.parametrize("h,s,d", SHAPES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_flash_decode_matches_ref(h, s, d, seed):
+    q, k, v, mask = rand_case(seed * 1000 + h * 10 + d, h, s, d)
+    o, lse = flash_decode(q, k, v, mask)
+    o_ref, lse_ref = ref_attention(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("pad", [1, 63, BLOCK_K - 1, BLOCK_K, 2 * BLOCK_K])
+def test_flash_decode_respects_padding_mask(pad):
+    """Padded tail positions must not influence the output."""
+    h, s, d = 2, 4 * BLOCK_K, 32
+    q, k, v, mask = rand_case(7, h, s, d, pad=pad)
+    o, lse = flash_decode(q, k, v, mask)
+    # Reference computed only over the valid prefix.
+    valid = s - pad
+    o_ref, lse_ref = ref_attention(q, k[:, :valid], v[:, :valid],
+                                   jnp.zeros((h, valid), jnp.float32))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("scale", [1e-3, 1.0, 30.0])
+def test_flash_decode_extreme_logits(scale):
+    """Online softmax must stay stable for sharp and flat score regimes."""
+    h, s, d = 2, 2 * BLOCK_K, 64
+    q, k, v, mask = rand_case(11, h, s, d, scale=scale)
+    o, lse = flash_decode(q, k, v, mask)
+    assert np.isfinite(np.asarray(o)).all()
+    assert np.isfinite(np.asarray(lse)).all()
+    o_ref, lse_ref = ref_attention(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("h,d", [(1, 16), (4, 64), (8, 192)])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_combine_matches_ref(h, d, seed):
+    rng = np.random.default_rng(seed)
+    o1 = jnp.asarray(rng.standard_normal((h, d), dtype=np.float32))
+    o2 = jnp.asarray(rng.standard_normal((h, d), dtype=np.float32))
+    lse1 = jnp.asarray(rng.standard_normal(h).astype(np.float32) * 3)
+    lse2 = jnp.asarray(rng.standard_normal(h).astype(np.float32) * 3)
+    o, lse = combine(o1, lse1, o2, lse2)
+    o_ref, lse_ref = ref_combine(o1, lse1, o2, lse2)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref), rtol=1e-5, atol=1e-6)
+
+
+def test_split_combine_equals_joint_attention():
+    """The Appendix B.1 guarantee end-to-end at the kernel level:
+    attend(W) + attend(Omega) + combine == attend(W u Omega)."""
+    h, d = 4, 64
+    s1, s2 = 2 * BLOCK_K, 3 * BLOCK_K
+    rng = np.random.default_rng(21)
+    q = jnp.asarray(rng.standard_normal((h, d), dtype=np.float32))
+    k1 = jnp.asarray(rng.standard_normal((h, s1, d), dtype=np.float32))
+    v1 = jnp.asarray(rng.standard_normal((h, s1, d), dtype=np.float32))
+    k2 = jnp.asarray(rng.standard_normal((h, s2, d), dtype=np.float32))
+    v2 = jnp.asarray(rng.standard_normal((h, s2, d), dtype=np.float32))
+    z1 = jnp.zeros((h, s1), jnp.float32)
+    z2 = jnp.zeros((h, s2), jnp.float32)
+
+    o1, lse1 = flash_decode(q, k1, v1, z1)
+    o2, lse2 = flash_decode(q, k2, v2, z2)
+    o, lse = combine(o1, lse1, o2, lse2)
+
+    o_ref, lse_ref = ref_joint(q, k1, v1, z1, k2, v2, z2)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref), rtol=3e-5, atol=3e-5)
+
+
+def test_combine_with_empty_set():
+    """An empty partial (lse = -inf) must be the identity."""
+    h, d = 2, 32
+    rng = np.random.default_rng(5)
+    o1 = jnp.asarray(rng.standard_normal((h, d), dtype=np.float32))
+    lse1 = jnp.asarray(rng.standard_normal(h).astype(np.float32))
+    o2 = jnp.zeros((h, d), jnp.float32)
+    lse2 = jnp.full((h,), -1e30, jnp.float32)
+    o, lse = combine(o1, lse1, o2, lse2)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o1), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse1), rtol=1e-4, atol=1e-4)

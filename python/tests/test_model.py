@@ -1,0 +1,134 @@
+"""L2 correctness: model ops, GQA wiring, and the decode-step algebra."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import ref_attention
+
+
+SPEC = model.PRESETS["llama3-mini"]
+
+
+def rand_weights(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    d, dh, h, kv, f = spec.d_model, spec.head_dim, spec.q_heads, spec.kv_heads, spec.ffn_dim
+    w = lambda *shape: jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * 0.05)
+    return {
+        "g": jnp.ones((d,), jnp.float32),
+        "wq": w(d, h * dh),
+        "wk": w(d, kv * dh),
+        "wv": w(d, kv * dh),
+        "wo": w(h * dh, d),
+        "g2": jnp.ones((d,), jnp.float32),
+        "w1": w(d, f),
+        "w3": w(d, f),
+        "w2": w(f, d),
+        "gf": jnp.ones((d,), jnp.float32),
+        "wu": w(d, spec.vocab),
+        "table": w(spec.vocab, d),
+    }
+
+
+def test_qkv_shapes():
+    w = rand_weights(SPEC)
+    x = jnp.ones((3, SPEC.d_model), jnp.float32)
+    q, k, v = model.qkv(SPEC, x, w["g"], w["wq"], w["wk"], w["wv"])
+    assert q.shape == (3, SPEC.q_heads, SPEC.head_dim)
+    assert k.shape == (3, SPEC.kv_heads, SPEC.head_dim)
+    assert v.shape == (3, SPEC.kv_heads, SPEC.head_dim)
+
+
+def test_rmsnorm_unit_scale():
+    x = jnp.asarray([[3.0, 4.0]])
+    g = jnp.ones((2,), jnp.float32)
+    y = model.rmsnorm(x, g, True)
+    # RMS of [3,4] = sqrt(12.5); output RMS must be ~1.
+    rms = float(jnp.sqrt(jnp.mean(y**2)))
+    assert abs(rms - 1.0) < 1e-3
+    # Disabled norm is the identity.
+    np.testing.assert_array_equal(np.asarray(model.rmsnorm(x, g, False)), np.asarray(x))
+
+
+def test_embed_lookup():
+    w = rand_weights(SPEC)
+    ids = jnp.asarray([5, 0, 5], jnp.int32)
+    pos = jnp.zeros((3, SPEC.d_model), jnp.float32)
+    x = model.embed(SPEC, w["table"], ids, pos)
+    np.testing.assert_array_equal(np.asarray(x[0]), np.asarray(w["table"][5]))
+    np.testing.assert_array_equal(np.asarray(x[0]), np.asarray(x[2]))
+    pos1 = jnp.ones((3, SPEC.d_model), jnp.float32)
+    x1 = model.embed(SPEC, w["table"], ids, pos1)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x) + 1.0)
+
+
+@pytest.mark.parametrize("preset", ["llama3-mini", "yi6-mini", "induction-mini"])
+def test_static_attn_matches_ref_with_gqa(preset):
+    """The GQA expansion + Pallas call must equal a per-head reference."""
+    spec = model.PRESETS[preset]
+    rng = np.random.default_rng(3)
+    s = spec.static_len
+    q = jnp.asarray(rng.standard_normal((spec.q_heads, spec.head_dim), dtype=np.float32))
+    k = jnp.asarray(rng.standard_normal((s, spec.kv_heads, spec.head_dim), dtype=np.float32))
+    v = jnp.asarray(rng.standard_normal((s, spec.kv_heads, spec.head_dim), dtype=np.float32))
+    mask = np.zeros((s,), np.float32)
+    mask[s - 100:] = -1e30  # padded tail
+    mask = jnp.asarray(mask)
+
+    o, lse = model.static_attn(spec, q, k, v, mask)
+
+    group = np.arange(spec.q_heads) // spec.group_size
+    kh = jnp.asarray(np.asarray(k)[:, group, :].transpose(1, 0, 2))
+    vh = jnp.asarray(np.asarray(v)[:, group, :].transpose(1, 0, 2))
+    maskh = jnp.broadcast_to(mask[None, :], (spec.q_heads, s))
+    scale = spec.head_dim ** -0.5
+    o_ref, lse_ref = ref_attention(q * scale, kh, vh, maskh)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref), rtol=3e-5, atol=3e-5)
+
+
+def test_post_attn_residual_path():
+    """With zero FFN weights, post_attn must reduce to x + attn @ wo."""
+    spec = SPEC
+    w = rand_weights(spec)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((2, spec.d_model), dtype=np.float32))
+    attn = jnp.asarray(
+        np.random.default_rng(2).standard_normal((2, spec.q_heads * spec.head_dim), dtype=np.float32)
+    )
+    zero1 = jnp.zeros_like(w["w1"])
+    zero3 = jnp.zeros_like(w["w3"])
+    zero2 = jnp.zeros_like(w["w2"])
+    y = model.post_attn(spec, x, attn, w["wo"], w["g2"], zero1, zero3, zero2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x + attn @ w["wo"]), rtol=1e-5, atol=1e-6)
+
+
+def test_lm_head_logits():
+    spec = SPEC
+    w = rand_weights(spec)
+    x = jnp.ones((1, spec.d_model), jnp.float32)
+    logits = model.lm_head(spec, x, w["gf"], w["wu"])
+    assert logits.shape == (1, spec.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_entry_points_cover_decode_and_prefill():
+    eps = model.entry_points(SPEC)
+    for required in [
+        "embed_b1", "embed_b256", "qkv_b1", "qkv_b256", "post_b1",
+        "post_b256", "lm_head_b1", "lm_head_b256", "static_attn", "combine",
+    ]:
+        assert required in eps, f"missing entry point {required}"
+    # Shapes of the decode-step qkv artifact.
+    fn, args = eps["qkv_b1"]
+    assert tuple(args[0].shape) == (1, SPEC.d_model)
+    out = fn(*[jnp.zeros(a.shape, a.dtype) for a in args])
+    assert out[0].shape == (1, SPEC.q_heads, SPEC.head_dim)
+
+
+def test_presets_are_consistent():
+    for name, spec in model.PRESETS.items():
+        assert spec.q_heads % spec.kv_heads == 0, name
+        assert spec.static_len % 128 == 0, f"{name}: static_len must be BLOCK_K-aligned"
+        assert spec.name == name

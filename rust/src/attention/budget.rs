@@ -1,0 +1,70 @@
+//! Per-layer retrieval budget allocation (Appendix F).
+//!
+//! The paper's default gives every layer the same retrieval top-k. The
+//! PyramidKV-style variant allocates more budget to lower layers and less
+//! to higher ones (lower layers attend more broadly; upper layers are
+//! sharper), keeping the *total* budget constant.
+
+/// How the per-layer retrieval top-k is chosen.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BudgetPolicy {
+    /// Same top-k for every layer (the paper's default).
+    Uniform { k: usize },
+    /// PyramidKV-style linear decay from `2k·β/(β+1)` at layer 0 down to
+    /// `2k/(β+1)` at the top layer, preserving the mean k.
+    Pyramid { k: usize, beta: f32 },
+}
+
+impl BudgetPolicy {
+    /// Retrieval top-k for `layer` out of `n_layers`.
+    pub fn k_for_layer(&self, layer: usize, n_layers: usize) -> usize {
+        match *self {
+            BudgetPolicy::Uniform { k } => k,
+            BudgetPolicy::Pyramid { k, beta } => {
+                if n_layers <= 1 {
+                    return k;
+                }
+                let top = 2.0 * k as f32 * beta / (beta + 1.0);
+                let bottom = 2.0 * k as f32 / (beta + 1.0);
+                let frac = layer as f32 / (n_layers - 1) as f32;
+                let v = top + (bottom - top) * frac;
+                v.round().max(1.0) as usize
+            }
+        }
+    }
+
+    /// Total budget across all layers.
+    pub fn total(&self, n_layers: usize) -> usize {
+        (0..n_layers).map(|l| self.k_for_layer(l, n_layers)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_flat() {
+        let p = BudgetPolicy::Uniform { k: 100 };
+        assert_eq!(p.k_for_layer(0, 8), 100);
+        assert_eq!(p.k_for_layer(7, 8), 100);
+        assert_eq!(p.total(8), 800);
+    }
+
+    #[test]
+    fn pyramid_decays_and_preserves_total() {
+        let p = BudgetPolicy::Pyramid { k: 100, beta: 3.0 };
+        let first = p.k_for_layer(0, 8);
+        let last = p.k_for_layer(7, 8);
+        assert!(first > last, "lower layers must get more budget");
+        let total = p.total(8);
+        // Rounding slack of one token per layer.
+        assert!((total as i64 - 800).unsigned_abs() as usize <= 8, "total {total}");
+    }
+
+    #[test]
+    fn single_layer_degenerate() {
+        let p = BudgetPolicy::Pyramid { k: 64, beta: 2.0 };
+        assert_eq!(p.k_for_layer(0, 1), 64);
+    }
+}

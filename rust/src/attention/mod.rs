@@ -1,0 +1,204 @@
+//! The attention engine: full attention, subset (sparse) attention, and the
+//! exact two-set combination of Appendix B.1.
+//!
+//! The decode-time contract (Algorithm 1): the device computes
+//! `(o_W, lse_W)` over the static set `W` via the AOT FlashAttention
+//! artifact; the host computes `(o_Ω, lse_Ω)` over the retrieved set `Ω`;
+//! [`combine`] merges them with the `γ₁/γ₂` rescaling of Eq. 4/5, which is
+//! *exact*: the merged output equals attention computed jointly over
+//! `W ∪ Ω` (verified by unit and property tests).
+
+pub mod budget;
+pub mod ood;
+pub mod sparsity;
+
+use crate::tensor::{axpy, dot, Matrix};
+
+/// A partial attention output over some token subset: the within-subset
+/// softmax-weighted value sum plus the subset's log-sum-exp of the scaled
+/// logits. `(o, lse)` is exactly what the Pallas `flash_decode` kernel
+/// returns from the device side.
+#[derive(Clone, Debug)]
+pub struct PartialAttention {
+    pub o: Vec<f32>,
+    pub lse: f32,
+}
+
+impl PartialAttention {
+    /// The additive identity: an empty subset.
+    pub fn empty(d: usize) -> Self {
+        PartialAttention { o: vec![0.0; d], lse: f32::NEG_INFINITY }
+    }
+}
+
+/// Attention of `q` over the tokens `ids` of `(keys, values)`, returning
+/// the partial `(o, lse)` pair. `scale` is `1/sqrt(d_head)`.
+pub fn attend_subset(
+    q: &[f32],
+    keys: &Matrix,
+    values: &Matrix,
+    ids: &[u32],
+    scale: f32,
+) -> PartialAttention {
+    let d = values.cols();
+    if ids.is_empty() {
+        return PartialAttention::empty(d);
+    }
+    // Online softmax (single pass over ids, FlashAttention-style).
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    let mut acc = vec![0.0f32; d];
+    for &id in ids {
+        let z = dot(q, keys.row(id as usize)) * scale;
+        if z > m {
+            let corr = (m - z).exp();
+            for a in acc.iter_mut() {
+                *a *= corr;
+            }
+            l *= corr;
+            m = z;
+        }
+        let p = (z - m).exp();
+        l += p;
+        axpy(p, values.row(id as usize), &mut acc);
+    }
+    let inv = 1.0 / l;
+    for a in acc.iter_mut() {
+        *a *= inv;
+    }
+    PartialAttention { o: acc, lse: m + l.ln() }
+}
+
+/// Full attention over all tokens `0..keys.rows()`.
+pub fn full_attention(q: &[f32], keys: &Matrix, values: &Matrix, scale: f32) -> Vec<f32> {
+    let ids: Vec<u32> = (0..keys.rows() as u32).collect();
+    attend_subset(q, keys, values, &ids, scale).o
+}
+
+/// Merge disjoint partial attentions exactly (Eq. 4/5): the γ factors are
+/// `exp(lse_i - lse_total)` with `lse_total = logaddexp(lse_1, ..., lse_n)`.
+pub fn combine(parts: &[PartialAttention]) -> PartialAttention {
+    let d = parts.iter().map(|p| p.o.len()).max().unwrap_or(0);
+    let m = parts.iter().map(|p| p.lse).fold(f32::NEG_INFINITY, f32::max);
+    if m == f32::NEG_INFINITY {
+        return PartialAttention::empty(d);
+    }
+    // total = m + ln(sum exp(lse_i - m))
+    let sum: f32 = parts.iter().map(|p| (p.lse - m).exp()).sum();
+    let lse = m + sum.ln();
+    let mut o = vec![0.0f32; d];
+    for p in parts {
+        let gamma = (p.lse - lse).exp();
+        if gamma > 0.0 {
+            axpy(gamma, &p.o, &mut o);
+        }
+    }
+    PartialAttention { o, lse }
+}
+
+/// Raw scaled attention logits of `q` against every key (profiling paths).
+pub fn logits(q: &[f32], keys: &Matrix, scale: f32) -> Vec<f32> {
+    (0..keys.rows()).map(|i| dot(q, keys.row(i)) * scale).collect()
+}
+
+/// Softmax scores of `q` against every key.
+pub fn scores(q: &[f32], keys: &Matrix, scale: f32) -> Vec<f32> {
+    let mut z = logits(q, keys, scale);
+    crate::tensor::softmax_inplace(&mut z);
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, d: usize, seed: u64) -> (Vec<f32>, Matrix, Matrix) {
+        let mut rng = Rng::seed_from(seed);
+        let q: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+        let k = Matrix::from_fn(n, d, |_, _| rng.f32() - 0.5);
+        let v = Matrix::from_fn(n, d, |_, _| rng.f32() - 0.5);
+        (q, k, v)
+    }
+
+    #[test]
+    fn subset_of_everything_is_full_attention() {
+        let (q, k, v) = setup(50, 8, 1);
+        let ids: Vec<u32> = (0..50).collect();
+        let part = attend_subset(&q, &k, &v, &ids, 0.35);
+        let full = full_attention(&q, &k, &v, 0.35);
+        for (a, b) in part.o.iter().zip(full.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn combine_is_exact() {
+        // Split tokens into two disjoint sets; combining the partials must
+        // equal attention over the union — the Appendix B.1 guarantee.
+        let (q, k, v) = setup(100, 16, 2);
+        let scale = 1.0 / 4.0;
+        let w: Vec<u32> = (0..30).collect();
+        let omega: Vec<u32> = (30..100).collect();
+        let p1 = attend_subset(&q, &k, &v, &w, scale);
+        let p2 = attend_subset(&q, &k, &v, &omega, scale);
+        let merged = combine(&[p1, p2]);
+        let full = full_attention(&q, &k, &v, scale);
+        for (a, b) in merged.o.iter().zip(full.iter()) {
+            assert!((a - b).abs() < 1e-5, "combine must be exact: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn combine_three_way() {
+        let (q, k, v) = setup(60, 8, 3);
+        let scale = 0.5;
+        let sets: Vec<Vec<u32>> = vec![(0..10).collect(), (10..35).collect(), (35..60).collect()];
+        let parts: Vec<PartialAttention> =
+            sets.iter().map(|s| attend_subset(&q, &k, &v, s, scale)).collect();
+        let merged = combine(&parts);
+        let full = full_attention(&q, &k, &v, scale);
+        for (a, b) in merged.o.iter().zip(full.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn combine_with_empty_partial() {
+        let (q, k, v) = setup(20, 4, 4);
+        let ids: Vec<u32> = (0..20).collect();
+        let p = attend_subset(&q, &k, &v, &ids, 0.5);
+        let merged = combine(&[p.clone(), PartialAttention::empty(4)]);
+        for (a, b) in merged.o.iter().zip(p.o.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert!((merged.lse - p.lse).abs() < 1e-5);
+    }
+
+    #[test]
+    fn numerically_stable_with_huge_logits() {
+        let q = vec![100.0f32, 0.0];
+        let k = Matrix::from_vec(2, 2, vec![10.0, 0.0, 9.9, 0.0]);
+        let v = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let out = full_attention(&q, &k, &v, 1.0);
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert!(out[0] > 0.9, "sharp softmax should pick token 0");
+    }
+
+    #[test]
+    fn empty_subset_is_identity_under_combine() {
+        let e = PartialAttention::empty(3);
+        let merged = combine(&[e]);
+        assert_eq!(merged.o, vec![0.0; 3]);
+        assert_eq!(merged.lse, f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn scores_sum_to_one() {
+        let (q, k, _) = setup(40, 8, 9);
+        let s = scores(&q, &k, 0.35);
+        let sum: f32 = s.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+    }
+}

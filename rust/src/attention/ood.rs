@@ -1,0 +1,195 @@
+//! Out-of-distribution measurement (§2.4, Fig 3b).
+//!
+//! The paper quantifies the Q/K distribution gap with the Mahalanobis
+//! distance from a vector to the key distribution: queries sit >10× farther
+//! from K than keys themselves do. We reproduce the measurement with a
+//! shrinkage-regularised covariance (keeps the estimate well-conditioned
+//! for head dims up to 128 with a few thousand samples).
+
+use crate::tensor::{col_mean, Matrix};
+
+/// Gaussian summary of a vector population: mean + inverse covariance.
+pub struct Distribution {
+    mean: Vec<f32>,
+    cov_inv: Matrix,
+}
+
+impl Distribution {
+    /// Fit from samples (rows). `shrink` in [0,1] blends the empirical
+    /// covariance toward its diagonal average (Ledoit-Wolf-style).
+    pub fn fit(samples: &Matrix, shrink: f32) -> Self {
+        let n = samples.rows();
+        let d = samples.cols();
+        assert!(n > 1, "need at least 2 samples");
+        let mean = col_mean(samples);
+        let mut cov = Matrix::zeros(d, d);
+        for r in 0..n {
+            let row = samples.row(r);
+            for i in 0..d {
+                let xi = row[i] - mean[i];
+                let cov_row = cov.row_mut(i);
+                for j in 0..d {
+                    cov_row[j] += xi * (row[j] - mean[j]);
+                }
+            }
+        }
+        let inv_n = 1.0 / (n - 1) as f32;
+        for v in cov.as_mut_slice() {
+            *v *= inv_n;
+        }
+        // Shrink toward sigma^2 * I.
+        let trace: f32 = (0..d).map(|i| cov[(i, i)]).sum();
+        let sigma2 = (trace / d as f32).max(1e-6);
+        for i in 0..d {
+            for j in 0..d {
+                let target = if i == j { sigma2 } else { 0.0 };
+                cov[(i, j)] = (1.0 - shrink) * cov[(i, j)] + shrink * target;
+            }
+        }
+        let cov_inv = invert(&cov);
+        Distribution { mean, cov_inv }
+    }
+
+    /// Mahalanobis distance from `x` to this distribution.
+    pub fn mahalanobis(&self, x: &[f32]) -> f32 {
+        let d = self.mean.len();
+        let diff: Vec<f32> = x.iter().zip(&self.mean).map(|(a, b)| a - b).collect();
+        let mut acc = 0.0f32;
+        for i in 0..d {
+            let mut t = 0.0f32;
+            let row = self.cov_inv.row(i);
+            for j in 0..d {
+                t += row[j] * diff[j];
+            }
+            acc += diff[i] * t;
+        }
+        acc.max(0.0).sqrt()
+    }
+}
+
+/// Gauss-Jordan inversion with partial pivoting (d ≤ 128, off hot path).
+fn invert(a: &Matrix) -> Matrix {
+    let d = a.rows();
+    assert_eq!(d, a.cols());
+    let mut aug = Matrix::from_fn(d, 2 * d, |r, c| {
+        if c < d {
+            a[(r, c)]
+        } else if c - d == r {
+            1.0
+        } else {
+            0.0
+        }
+    });
+    for col in 0..d {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..d {
+            if aug[(r, col)].abs() > aug[(piv, col)].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for c in 0..2 * d {
+                let tmp = aug[(col, c)];
+                aug[(col, c)] = aug[(piv, c)];
+                aug[(piv, c)] = tmp;
+            }
+        }
+        let p = aug[(col, col)];
+        assert!(p.abs() > 1e-12, "singular covariance (increase shrinkage)");
+        let inv_p = 1.0 / p;
+        for c in 0..2 * d {
+            aug[(col, c)] *= inv_p;
+        }
+        for r in 0..d {
+            if r == col {
+                continue;
+            }
+            let f = aug[(r, col)];
+            if f == 0.0 {
+                continue;
+            }
+            for c in 0..2 * d {
+                aug[(r, c)] -= f * aug[(col, c)];
+            }
+        }
+    }
+    Matrix::from_fn(d, d, |r, c| aug[(r, c + d)])
+}
+
+/// Fig 3b summary: mean Mahalanobis distance of query samples and of
+/// held-out key samples to the key distribution.
+pub struct OodReport {
+    pub q_to_k: f32,
+    pub k_to_k: f32,
+}
+
+impl OodReport {
+    /// How many times farther queries are than in-distribution keys —
+    /// the paper reports >10×.
+    pub fn gap(&self) -> f32 {
+        self.q_to_k / self.k_to_k.max(1e-9)
+    }
+}
+
+/// Compute the Fig 3b measurement: fit the key distribution on `keys_fit`,
+/// then average distances of `queries` and of `keys_holdout`.
+pub fn measure_ood(keys_fit: &Matrix, keys_holdout: &Matrix, queries: &Matrix) -> OodReport {
+    let dist = Distribution::fit(keys_fit, 0.1);
+    let avg = |m: &Matrix| -> f32 {
+        (0..m.rows()).map(|r| dist.mahalanobis(m.row(r))).sum::<f32>() / m.rows().max(1) as f32
+    };
+    OodReport { q_to_k: avg(queries), k_to_k: avg(keys_holdout) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn invert_identity() {
+        let i = Matrix::from_fn(4, 4, |r, c| if r == c { 1.0 } else { 0.0 });
+        assert_eq!(invert(&i), i);
+    }
+
+    #[test]
+    fn invert_known_2x2() {
+        let a = Matrix::from_vec(2, 2, vec![4.0, 7.0, 2.0, 6.0]);
+        let inv = invert(&a);
+        let prod = a.matmul(&inv);
+        for r in 0..2 {
+            for c in 0..2 {
+                let expect = if r == c { 1.0 } else { 0.0 };
+                assert!((prod[(r, c)] - expect).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn in_distribution_distance_small() {
+        let mut rng = Rng::seed_from(3);
+        let keys = Matrix::from_fn(2000, 8, |_, _| rng.f32() - 0.5);
+        let holdout = Matrix::from_fn(200, 8, |_, _| rng.f32() - 0.5);
+        // Queries: shifted far away.
+        let queries = Matrix::from_fn(200, 8, |_, _| rng.f32() - 0.5 + 5.0);
+        let rep = measure_ood(&keys, &holdout, &queries);
+        assert!(rep.k_to_k < 4.0, "in-dist distance should be ~sqrt(d): {}", rep.k_to_k);
+        assert!(rep.gap() > 5.0, "OOD queries must be far: gap={}", rep.gap());
+    }
+
+    #[test]
+    fn mahalanobis_accounts_for_scale() {
+        // A point 3 units along a high-variance axis is *closer* in
+        // Mahalanobis terms than 3 units along a low-variance axis.
+        let mut rng = Rng::seed_from(4);
+        let samples = Matrix::from_fn(5000, 2, |_, c| {
+            (rng.f32() - 0.5) * if c == 0 { 10.0 } else { 0.5 }
+        });
+        let dist = Distribution::fit(&samples, 0.0);
+        let wide = dist.mahalanobis(&[3.0, 0.0]);
+        let narrow = dist.mahalanobis(&[0.0, 3.0]);
+        assert!(narrow > 3.0 * wide, "wide={wide} narrow={narrow}");
+    }
+}

@@ -1,0 +1,159 @@
+//! InfiniGen (Lee et al. 2024): speculative top-k via low-rank score
+//! approximation.
+//!
+//! Keys are pre-projected into an r-dimensional sketch; at decode time the
+//! query is sketched the same way and approximate scores pick the top-k
+//! tokens, which are then attended exactly. Cheap (r ≪ d per key) but the
+//! sketch loses rank — the paper observes a noticeable accuracy drop from
+//! speculation misses (Table 2: InfiniGen −4.6 vs full attention).
+
+use super::{HostRetriever, Retrieval, RetrieverInputs};
+use crate::tensor::{argtopk, dot, Matrix};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Sketch rank (channel reduction d -> R).
+const R: usize = 16;
+
+pub struct InfiniGenRetriever {
+    ids: Arc<Vec<u32>>,
+    /// Random projection `[d, R]` (shared by keys and queries).
+    proj: Matrix,
+    /// Projected keys `[n, R]`.
+    sketches: Matrix,
+    d: usize,
+}
+
+impl InfiniGenRetriever {
+    pub fn build(inp: &RetrieverInputs<'_>) -> Self {
+        let n = inp.host_keys.rows();
+        let d = inp.host_keys.cols();
+        let mut rng = Rng::seed_from(inp.seed ^ 0x1AF1_6E4);
+        let scale = 1.0 / (R as f32).sqrt();
+        let proj = Matrix::from_fn(d, R, |_, _| rng.normal() * scale);
+        let mut sketches = Matrix::zeros(n, R);
+        for i in 0..n {
+            let key = inp.host_keys.row(i);
+            let out = sketches.row_mut(i);
+            for (j, o) in out.iter_mut().enumerate() {
+                let mut s = 0.0;
+                for (kk, &kv) in key.iter().enumerate() {
+                    s += kv * proj[(kk, j)];
+                }
+                *o = s;
+            }
+        }
+        InfiniGenRetriever { ids: inp.host_ids.clone(), proj, sketches, d }
+    }
+}
+
+impl HostRetriever for InfiniGenRetriever {
+    fn retrieve(&self, q: &[f32], k: usize) -> Retrieval {
+        let n = self.sketches.rows();
+        if n == 0 {
+            return Retrieval::default();
+        }
+        // Sketch the query.
+        let mut qs = vec![0.0f32; R];
+        for (j, o) in qs.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for (i, &qv) in q.iter().enumerate() {
+                s += qv * self.proj[(i, j)];
+            }
+            *o = s;
+        }
+        // Approximate scores over all sketches.
+        let scores: Vec<f32> = (0..n).map(|i| dot(&qs, self.sketches.row(i))).collect();
+        let top = argtopk(&scores, k.min(n));
+        // Scan cost: n sketch reads of R dims ≈ n*R/d full-key equivalents.
+        let scanned = (n * R).div_ceil(self.d);
+        Retrieval { ids: top.into_iter().map(|i| self.ids[i]).collect(), scanned }
+    }
+
+    fn name(&self) -> &'static str {
+        "InfiniGen"
+    }
+
+    fn speculates_from_previous_layer(&self) -> bool {
+        true
+    }
+
+    fn memory_bytes(&self) -> usize {
+        (self.sketches.as_slice().len() + self.proj.as_slice().len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::tests::test_inputs;
+    use crate::config::RetrievalConfig;
+
+    fn build(n: usize, d: usize, seed: u64) -> (InfiniGenRetriever, Arc<Matrix>, Arc<Vec<u32>>) {
+        let (keys, ids, queries) = test_inputs(n, d, seed);
+        let cfg = RetrievalConfig::default();
+        let inp = RetrieverInputs {
+            host_keys: keys.clone(),
+            host_ids: ids.clone(),
+            prefill_queries: &queries,
+            scale: 0.25,
+            cfg: &cfg,
+            seed,
+        };
+        (InfiniGenRetriever::build(&inp), keys, ids)
+    }
+
+    #[test]
+    fn speculation_finds_strong_signal() {
+        // A key with an overwhelming inner product must survive sketching.
+        let (_, _, _) = build(10, 16, 1);
+        let mut rng = Rng::seed_from(2);
+        let mut keys = Matrix::from_fn(400, 32, |_, _| rng.normal() * 0.3);
+        let q: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        // Plant key 217 = 5x the query direction.
+        for (j, v) in keys.row_mut(217).iter_mut().enumerate() {
+            *v = q[j] * 5.0;
+        }
+        let keys = Arc::new(keys);
+        let ids = Arc::new((0..400u32).collect::<Vec<_>>());
+        let queries = Matrix::from_fn(4, 32, |_, _| 0.1);
+        let cfg = RetrievalConfig::default();
+        let inp = RetrieverInputs {
+            host_keys: keys,
+            host_ids: ids,
+            prefill_queries: &queries,
+            scale: 0.2,
+            cfg: &cfg,
+            seed: 3,
+        };
+        let r = InfiniGenRetriever::build(&inp);
+        let out = r.retrieve(&q, 20);
+        assert!(out.ids.contains(&217), "planted key missed by speculation");
+    }
+
+    #[test]
+    fn approximation_is_lossy() {
+        // With rank 16 << d and near-uniform scores, speculation should NOT
+        // perfectly match exact top-k — that loss is InfiniGen's accuracy
+        // story in Table 2.
+        let (r, keys, ids) = build(2000, 64, 4);
+        let mut rng = Rng::seed_from(5);
+        let q: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let exact: Vec<u32> =
+            crate::index::exact_topk(&keys, &q, 50).iter().map(|&i| ids[i as usize]).collect();
+        let out = r.retrieve(&q, 50);
+        let hits = out.ids.iter().filter(|i| exact.contains(i)).count();
+        // Random chance would be 50*50/2000 ≈ 1.25 hits; the sketch must
+        // beat that, but rank 16 ≪ 64 on near-uniform scores is far from
+        // exact — this lossiness is InfiniGen's Table-2 accuracy story.
+        assert!(hits >= 3, "sketch should keep some signal: {hits}/50");
+        assert!(hits < 45, "rank-16 sketch should not be near-exact");
+    }
+
+    #[test]
+    fn scan_cost_reflects_rank_reduction() {
+        let (r, _, _) = build(1000, 64, 6);
+        let out = r.retrieve(&[0.1; 64], 10);
+        assert_eq!(out.scanned, 1000 * R / 64);
+    }
+}

@@ -1,0 +1,260 @@
+//! Host-side retrieval policies: the paper's method and every baseline.
+//!
+//! The engine decomposes each decode step's attention into the device set
+//! `W` (static pattern, always attended) and a host set chosen per query.
+//! Each method is a [`HostRetriever`] deciding that host set:
+//!
+//! | Method              | Host set                                          |
+//! |---------------------|---------------------------------------------------|
+//! | FullAttention/vLLM  | every host token (exact)                          |
+//! | StreamingLLM        | ∅ (device static pattern only)                    |
+//! | SnapKV              | fixed set scored by the last prompt window        |
+//! | InfLLM              | top blocks by representative-key score            |
+//! | Quest               | top pages by min/max criticality bound            |
+//! | InfiniGen           | top-k under a low-rank score speculation          |
+//! | Flat                | exact KNN over host keys                          |
+//! | IVF                 | IVF index search                                  |
+//! | HNSW                | HNSW index search (ablation)                      |
+//! | RetrievalAttention  | attention-aware RoarGraph search                  |
+//!
+//! Retrievers are built once per (layer, query-head) at prefill and are
+//! immutable afterwards, so decode-time searches fan out across heads
+//! (Appendix C).
+
+pub mod infinigen;
+pub mod infllm;
+pub mod quest;
+pub mod snapkv;
+
+use crate::config::{Method, RetrievalConfig};
+use crate::index::{
+    flat::FlatIndex,
+    hnsw::{HnswIndex, HnswParams},
+    ivf::IvfIndex,
+    roargraph::{RoarGraph, RoarParams},
+    SearchParams, VectorIndex,
+};
+use crate::tensor::Matrix;
+use std::sync::Arc;
+
+/// Result of one host retrieval: *absolute* token ids + scan count.
+#[derive(Clone, Debug, Default)]
+pub struct Retrieval {
+    pub ids: Vec<u32>,
+    pub scanned: usize,
+}
+
+/// A per-(layer, query-head) host retrieval policy.
+pub trait HostRetriever: Send + Sync {
+    fn retrieve(&self, q: &[f32], k: usize) -> Retrieval;
+    fn name(&self) -> &'static str;
+    /// Index/metadata heap bytes (memory accounting).
+    fn memory_bytes(&self) -> usize {
+        0
+    }
+    /// InfiniGen's defining trick: layer *l*'s critical tokens are
+    /// speculated from layer *l−1*'s query (so the prefetch can overlap
+    /// with layer l−1's compute). The engine passes the previous layer's
+    /// query to retrievers that return true — and this speculation
+    /// mismatch is exactly the accuracy gap Table 2 shows for InfiniGen.
+    fn speculates_from_previous_layer(&self) -> bool {
+        false
+    }
+}
+
+/// Everything a retriever constructor may need.
+pub struct RetrieverInputs<'a> {
+    /// Dense host key matrix (rows = indexed host tokens, in id order).
+    pub host_keys: Arc<Matrix>,
+    /// Absolute token id per dense row.
+    pub host_ids: Arc<Vec<u32>>,
+    /// This query head's prefill queries (training data for RoarGraph and
+    /// scoring data for SnapKV).
+    pub prefill_queries: &'a Matrix,
+    /// Attention softmax scale (1/sqrt(d_h)).
+    pub scale: f32,
+    pub cfg: &'a RetrievalConfig,
+    pub seed: u64,
+}
+
+/// Build the retriever for a method.
+pub fn build_retriever(method: Method, inp: RetrieverInputs<'_>) -> Box<dyn HostRetriever> {
+    match method {
+        Method::StreamingLlm => Box::new(EmptyRetriever),
+        Method::Full | Method::VllmLike => Box::new(AllRetriever {
+            ids: inp.host_ids.clone(),
+            n: inp.host_keys.rows(),
+        }),
+        Method::SnapKv => Box::new(snapkv::SnapKvRetriever::build(&inp)),
+        Method::InfLlm => Box::new(infllm::InfLlmRetriever::build(&inp)),
+        Method::Quest => Box::new(quest::QuestRetriever::build(&inp)),
+        Method::InfiniGen => Box::new(infinigen::InfiniGenRetriever::build(&inp)),
+        Method::Flat => Box::new(IndexRetriever {
+            index: Box::new(FlatIndex::new(inp.host_keys.clone())),
+            ids: inp.host_ids.clone(),
+            params: SearchParams { ef: inp.cfg.ef, nprobe: inp.cfg.nprobe },
+            label: "Flat",
+        }),
+        Method::Ivf => Box::new(IndexRetriever {
+            index: Box::new(IvfIndex::build(inp.host_keys.clone(), None, inp.seed)),
+            ids: inp.host_ids.clone(),
+            params: SearchParams { ef: inp.cfg.ef, nprobe: inp.cfg.nprobe },
+            label: "IVF",
+        }),
+        Method::Hnsw => Box::new(IndexRetriever {
+            index: Box::new(HnswIndex::build(
+                inp.host_keys.clone(),
+                HnswParams { m: inp.cfg.m, ef_construction: inp.cfg.ef.max(64), seed: inp.seed },
+            )),
+            ids: inp.host_ids.clone(),
+            params: SearchParams { ef: inp.cfg.ef, nprobe: inp.cfg.nprobe },
+            label: "HNSW",
+        }),
+        Method::RetrievalAttention => Box::new(IndexRetriever {
+            index: Box::new(RoarGraph::build(
+                inp.host_keys.clone(),
+                inp.prefill_queries,
+                RoarParams { kb: inp.cfg.kb, m: inp.cfg.m, repair_sample: 256 },
+            )),
+            ids: inp.host_ids.clone(),
+            params: SearchParams { ef: inp.cfg.ef, nprobe: inp.cfg.nprobe },
+            label: "RetrievalAttention",
+        }),
+    }
+}
+
+/// StreamingLLM: no host tokens at all.
+pub struct EmptyRetriever;
+
+impl HostRetriever for EmptyRetriever {
+    fn retrieve(&self, _q: &[f32], _k: usize) -> Retrieval {
+        Retrieval::default()
+    }
+
+    fn name(&self) -> &'static str {
+        "StreamingLLM"
+    }
+}
+
+/// Full attention: every host token, no scan savings.
+pub struct AllRetriever {
+    ids: Arc<Vec<u32>>,
+    n: usize,
+}
+
+impl HostRetriever for AllRetriever {
+    fn retrieve(&self, _q: &[f32], _k: usize) -> Retrieval {
+        Retrieval { ids: self.ids.as_ref().clone(), scanned: self.n }
+    }
+
+    fn name(&self) -> &'static str {
+        "FullAttention"
+    }
+}
+
+/// Any [`VectorIndex`] adapted to absolute ids.
+pub struct IndexRetriever {
+    index: Box<dyn VectorIndex>,
+    ids: Arc<Vec<u32>>,
+    params: SearchParams,
+    label: &'static str,
+}
+
+impl IndexRetriever {
+    pub fn index(&self) -> &dyn VectorIndex {
+        self.index.as_ref()
+    }
+}
+
+impl HostRetriever for IndexRetriever {
+    fn retrieve(&self, q: &[f32], k: usize) -> Retrieval {
+        let r = self.index.search(q, k, &self.params);
+        Retrieval {
+            ids: r.ids.iter().map(|&dense| self.ids[dense as usize]).collect(),
+            scanned: r.scanned,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.index.memory_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn test_inputs(
+        n: usize,
+        d: usize,
+        seed: u64,
+    ) -> (Arc<Matrix>, Arc<Vec<u32>>, Matrix) {
+        let mut rng = Rng::seed_from(seed);
+        let keys = Arc::new(Matrix::from_fn(n, d, |_, _| rng.normal()));
+        // Absolute ids offset by the sink size (host tokens start past it).
+        let ids = Arc::new((0..n as u32).map(|i| i + 128).collect::<Vec<_>>());
+        let queries = Matrix::from_fn(64, d, |_, c| rng.normal() + if c < d / 4 { 1.5 } else { 0.0 });
+        (keys, ids, queries)
+    }
+
+    #[test]
+    fn empty_retriever_is_empty() {
+        let r = EmptyRetriever.retrieve(&[1.0, 2.0], 10);
+        assert!(r.ids.is_empty());
+        assert_eq!(r.scanned, 0);
+    }
+
+    #[test]
+    fn all_retriever_returns_everything() {
+        let (keys, ids, _) = test_inputs(50, 8, 1);
+        let r = AllRetriever { ids: ids.clone(), n: keys.rows() };
+        let out = r.retrieve(&[0.0; 8], 5);
+        assert_eq!(out.ids.len(), 50);
+        assert_eq!(out.scanned, 50);
+    }
+
+    #[test]
+    fn every_method_builds_and_retrieves() {
+        let (keys, ids, queries) = test_inputs(512, 16, 2);
+        let cfg = RetrievalConfig::default();
+        for method in Method::ALL {
+            let inp = RetrieverInputs {
+                host_keys: keys.clone(),
+                host_ids: ids.clone(),
+                prefill_queries: &queries,
+                scale: 0.25,
+                cfg: &cfg,
+                seed: 3,
+            };
+            let r = build_retriever(method, inp);
+            let q: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).sin()).collect();
+            let out = r.retrieve(&q, 20);
+            // All ids must be valid absolute ids.
+            for id in &out.ids {
+                assert!(ids.contains(id), "{}: bogus id {id}", r.name());
+            }
+            if !matches!(method, Method::StreamingLlm) {
+                assert!(!out.ids.is_empty(), "{}: empty retrieval", r.name());
+            }
+        }
+    }
+
+    #[test]
+    fn index_retriever_maps_dense_to_absolute() {
+        let (keys, ids, _) = test_inputs(100, 8, 4);
+        let r = IndexRetriever {
+            index: Box::new(FlatIndex::new(keys.clone())),
+            ids: ids.clone(),
+            params: SearchParams::default(),
+            label: "Flat",
+        };
+        let q: Vec<f32> = keys.row(7).to_vec();
+        let out = r.retrieve(&q, 1);
+        assert_eq!(out.ids, vec![ids[7]]);
+    }
+}

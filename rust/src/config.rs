@@ -1,0 +1,326 @@
+//! The serving configuration system.
+//!
+//! Everything the launcher needs is described by one [`ServeConfig`]
+//! (JSON on disk, `--config` on the CLI), mirroring how vLLM/SGLang expose
+//! engine knobs: model preset, retrieval method, index/build parameters,
+//! static pattern, scheduler limits, hardware profile. Serialization goes
+//! through the in-crate [`crate::util::json`] module.
+
+use crate::attention::budget::BudgetPolicy;
+use crate::kvcache::StaticPattern;
+use crate::util::json::{self, Value};
+use std::path::Path;
+
+/// Which attention/retrieval method the engine uses — every comparator row
+/// of Tables 2–4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Exact attention over the full KV cache.
+    Full,
+    /// vLLM-like: full attention with paged device KV (OOMs past budget).
+    VllmLike,
+    /// Sink + window only (drops the rest).
+    StreamingLlm,
+    /// Critical tokens observed from the last prompt window.
+    SnapKv,
+    /// Block representatives, top-k blocks retrieved from host.
+    InfLlm,
+    /// Page min/max criticality bound.
+    Quest,
+    /// Low-rank speculation of important tokens.
+    InfiniGen,
+    /// Exact KNN over host keys.
+    Flat,
+    /// IVF index over host keys.
+    Ivf,
+    /// HNSW index over host keys (ablation; not in the paper's main tables).
+    Hnsw,
+    /// The paper's method: attention-aware RoarGraph index.
+    RetrievalAttention,
+}
+
+impl Method {
+    pub const ALL: [Method; 11] = [
+        Method::Full,
+        Method::VllmLike,
+        Method::StreamingLlm,
+        Method::SnapKv,
+        Method::InfLlm,
+        Method::Quest,
+        Method::InfiniGen,
+        Method::Flat,
+        Method::Ivf,
+        Method::Hnsw,
+        Method::RetrievalAttention,
+    ];
+
+    /// Display name matching the paper's tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Full => "FullAttention",
+            Method::VllmLike => "vLLM",
+            Method::StreamingLlm => "StreamingLLM",
+            Method::SnapKv => "SnapKV",
+            Method::InfLlm => "InfLLM",
+            Method::Quest => "Quest",
+            Method::InfiniGen => "InfiniGen",
+            Method::Flat => "Flat",
+            Method::Ivf => "IVF",
+            Method::Hnsw => "HNSW",
+            Method::RetrievalAttention => "RetrievalAttention",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Method::ALL.iter().copied().find(|m| m.label().eq_ignore_ascii_case(s))
+    }
+}
+
+/// Retrieval/index knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct RetrievalConfig {
+    /// Tokens retrieved per decode step (paper default: top-100).
+    pub top_k: usize,
+    /// Graph beam width at search time.
+    pub ef: usize,
+    /// IVF probes at search time.
+    pub nprobe: usize,
+    /// RoarGraph: per-training-query KNN list length.
+    pub kb: usize,
+    /// Graph max out-degree.
+    pub m: usize,
+    /// Per-layer budget policy (Appendix F).
+    pub budget: BudgetPolicy,
+}
+
+impl Default for RetrievalConfig {
+    fn default() -> Self {
+        RetrievalConfig {
+            top_k: 100,
+            ef: 128,
+            nprobe: 8,
+            kb: 32,
+            m: 32,
+            budget: BudgetPolicy::Uniform { k: 100 },
+        }
+    }
+}
+
+/// Scheduler/batcher limits.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Max concurrent sessions admitted.
+    pub max_sessions: usize,
+    /// Max decode requests batched per engine step.
+    pub max_batch: usize,
+    /// Queue depth before admission rejects new requests (backpressure).
+    pub max_queue: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_sessions: 64, max_batch: 8, max_queue: 256 }
+    }
+}
+
+/// Top-level engine configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Model preset name (see `model::presets`).
+    pub model: String,
+    pub method: Method,
+    pub pattern: StaticPattern,
+    pub retrieval: RetrievalConfig,
+    pub scheduler: SchedulerConfig,
+    /// Hardware profile name for modeled numbers ("localhost" = raw).
+    pub hw: String,
+    /// Directory holding AOT artifacts.
+    pub artifacts_dir: String,
+    /// Deterministic seed for synthetic weights/workloads.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "induction-mini".into(),
+            method: Method::RetrievalAttention,
+            pattern: StaticPattern::PAPER,
+            retrieval: RetrievalConfig::default(),
+            scheduler: SchedulerConfig::default(),
+            hw: "localhost".into(),
+            artifacts_dir: "artifacts".into(),
+            seed: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("model", self.model.as_str());
+        o.set("method", self.method.label());
+        let mut p = Value::obj();
+        p.set("sink", self.pattern.sink).set("window", self.pattern.window);
+        o.set("pattern", p);
+        let mut r = Value::obj();
+        r.set("top_k", self.retrieval.top_k)
+            .set("ef", self.retrieval.ef)
+            .set("nprobe", self.retrieval.nprobe)
+            .set("kb", self.retrieval.kb)
+            .set("m", self.retrieval.m);
+        match self.retrieval.budget {
+            BudgetPolicy::Uniform { k } => {
+                let mut b = Value::obj();
+                b.set("policy", "uniform").set("k", k);
+                r.set("budget", b);
+            }
+            BudgetPolicy::Pyramid { k, beta } => {
+                let mut b = Value::obj();
+                b.set("policy", "pyramid").set("k", k).set("beta", beta as f64);
+                r.set("budget", b);
+            }
+        }
+        o.set("retrieval", r);
+        let mut s = Value::obj();
+        s.set("max_sessions", self.scheduler.max_sessions)
+            .set("max_batch", self.scheduler.max_batch)
+            .set("max_queue", self.scheduler.max_queue);
+        o.set("scheduler", s);
+        o.set("hw", self.hw.as_str());
+        o.set("artifacts_dir", self.artifacts_dir.as_str());
+        o.set("seed", self.seed);
+        o
+    }
+
+    /// Parse from a JSON value; absent fields fall back to defaults.
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let mut c = ServeConfig::default();
+        if let Some(m) = v.get("model").and_then(Value::as_str) {
+            c.model = m.to_string();
+        }
+        if let Some(m) = v.get("method").and_then(Value::as_str) {
+            c.method =
+                Method::parse(m).ok_or_else(|| anyhow::anyhow!("unknown method `{m}`"))?;
+        }
+        if let Some(p) = v.get("pattern") {
+            c.pattern = StaticPattern {
+                sink: p.req_usize("sink")?,
+                window: p.req_usize("window")?,
+            };
+        }
+        if let Some(r) = v.get("retrieval") {
+            if let Some(x) = r.get("top_k").and_then(Value::as_usize) {
+                c.retrieval.top_k = x;
+            }
+            if let Some(x) = r.get("ef").and_then(Value::as_usize) {
+                c.retrieval.ef = x;
+            }
+            if let Some(x) = r.get("nprobe").and_then(Value::as_usize) {
+                c.retrieval.nprobe = x;
+            }
+            if let Some(x) = r.get("kb").and_then(Value::as_usize) {
+                c.retrieval.kb = x;
+            }
+            if let Some(x) = r.get("m").and_then(Value::as_usize) {
+                c.retrieval.m = x;
+            }
+            if let Some(b) = r.get("budget") {
+                let k = b.req_usize("k")?;
+                c.retrieval.budget = match b.req_str("policy")? {
+                    "uniform" => BudgetPolicy::Uniform { k },
+                    "pyramid" => BudgetPolicy::Pyramid {
+                        k,
+                        beta: b.get("beta").and_then(Value::as_f64).unwrap_or(3.0) as f32,
+                    },
+                    other => anyhow::bail!("unknown budget policy `{other}`"),
+                };
+            }
+        }
+        if let Some(s) = v.get("scheduler") {
+            if let Some(x) = s.get("max_sessions").and_then(Value::as_usize) {
+                c.scheduler.max_sessions = x;
+            }
+            if let Some(x) = s.get("max_batch").and_then(Value::as_usize) {
+                c.scheduler.max_batch = x;
+            }
+            if let Some(x) = s.get("max_queue").and_then(Value::as_usize) {
+                c.scheduler.max_queue = x;
+            }
+        }
+        if let Some(h) = v.get("hw").and_then(Value::as_str) {
+            c.hw = h.to_string();
+        }
+        if let Some(a) = v.get("artifacts_dir").and_then(Value::as_str) {
+            c.artifacts_dir = a.to_string();
+        }
+        if let Some(s) = v.get("seed").and_then(Value::as_u64) {
+            c.seed = s;
+        }
+        Ok(c)
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(&path)?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    pub fn to_file(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_json() {
+        let c = ServeConfig::default();
+        let v = c.to_json();
+        let back = ServeConfig::from_json(&v).unwrap();
+        assert_eq!(back.method, Method::RetrievalAttention);
+        assert_eq!(back.pattern, StaticPattern::PAPER);
+        assert_eq!(back.retrieval.top_k, c.retrieval.top_k);
+        assert_eq!(back.scheduler.max_batch, c.scheduler.max_batch);
+    }
+
+    #[test]
+    fn method_labels_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.label()), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let v = json::parse(r#"{"model":"x","method":"Flat"}"#).unwrap();
+        let c = ServeConfig::from_json(&v).unwrap();
+        assert_eq!(c.method, Method::Flat);
+        assert_eq!(c.pattern, StaticPattern::PAPER);
+        assert_eq!(c.retrieval.top_k, 100);
+        assert_eq!(c.hw, "localhost");
+    }
+
+    #[test]
+    fn pyramid_budget_roundtrips() {
+        let mut c = ServeConfig::default();
+        c.retrieval.budget = BudgetPolicy::Pyramid { k: 64, beta: 2.0 };
+        let back = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.retrieval.budget, BudgetPolicy::Pyramid { k: 64, beta: 2.0 });
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ra-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        let c = ServeConfig::default();
+        c.to_file(&path).unwrap();
+        let back = ServeConfig::from_file(&path).unwrap();
+        assert_eq!(back.model, c.model);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

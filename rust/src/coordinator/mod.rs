@@ -1,0 +1,302 @@
+//! The serving coordinator: admission, scheduling, batching, routing.
+//!
+//! Architecture (DESIGN.md §7):
+//!
+//! ```text
+//! client → router → replica worker (owns the Engine, which is !Send:
+//!            |        PJRT handles live on one thread)
+//!            |        ├─ admission: bounded queue (backpressure)
+//!            |        ├─ prefill: FCFS
+//!            |        └─ decode: continuous batching — every active
+//!            |             session advances one token per engine round,
+//!            |             up to `max_batch` sessions interleaved
+//!            └─ least-outstanding-requests replica choice
+//! ```
+//!
+//! Requests stream tokens back over a channel as they decode (the TTFT /
+//! TPOT split every serving paper reports).
+
+pub mod router;
+
+use crate::config::ServeConfig;
+use crate::metrics::PhaseBreakdown;
+use crate::model::{Engine, Session};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_tokens: usize,
+}
+
+/// Streaming events for one request.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// One generated token.
+    Token(u64, u32),
+    /// Generation finished.
+    Done(u64, RequestMetrics),
+    /// The request failed (e.g. device OOM for the vLLM baseline).
+    Failed(u64, String),
+}
+
+/// Per-request serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct RequestMetrics {
+    /// Prompt length.
+    pub prompt_tokens: usize,
+    /// Generated tokens.
+    pub output_tokens: usize,
+    /// Prefill wall-clock (s).
+    pub prefill_s: f64,
+    /// Time to first token (s).
+    pub ttft_s: f64,
+    /// Mean time per output token after the first (s).
+    pub tpot_s: f64,
+    /// Summed decode phase breakdown.
+    pub breakdown: PhaseBreakdown,
+}
+
+struct Job {
+    req: Request,
+    reply: Sender<Event>,
+    submitted: Instant,
+}
+
+struct Active {
+    job: Job,
+    sess: Session,
+    produced: Vec<u32>,
+    cur: u32,
+    prefill_s: f64,
+    first_token_at: Option<Instant>,
+    decode_bd: PhaseBreakdown,
+}
+
+/// Handle to one replica worker (engine thread).
+pub struct Replica {
+    tx: Sender<Job>,
+    outstanding: Arc<AtomicUsize>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Replica {
+    /// Spawn a replica: the engine is constructed *inside* the worker
+    /// thread (PJRT handles are not Send).
+    pub fn spawn(cfg: ServeConfig) -> Replica {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let outstanding = Arc::new(AtomicUsize::new(0));
+        let out_clone = outstanding.clone();
+        let handle = std::thread::Builder::new()
+            .name("replica-worker".into())
+            .spawn(move || {
+                let engine = match Engine::from_config(cfg.clone()) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        // Drain jobs with failures until the channel closes.
+                        while let Ok(job) = rx.recv() {
+                            let _ = job
+                                .reply
+                                .send(Event::Failed(job.req.id, format!("engine init: {e}")));
+                            out_clone.fetch_sub(1, Ordering::Relaxed);
+                        }
+                        return;
+                    }
+                };
+                worker_loop(&engine, &cfg, rx, &out_clone);
+            })
+            .expect("spawn replica worker");
+        Replica { tx, outstanding, handle: Some(handle) }
+    }
+
+    /// Submit a request; events stream on the returned receiver.
+    pub fn submit(&self, req: Request) -> Receiver<Event> {
+        let (reply, events) = mpsc::channel();
+        self.outstanding.fetch_add(1, Ordering::Relaxed);
+        let job = Job { req, reply, submitted: Instant::now() };
+        if self.tx.send(job).is_err() {
+            self.outstanding.fetch_sub(1, Ordering::Relaxed);
+        }
+        events
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Replica {
+    fn drop(&mut self) {
+        // Closing the channel stops the worker after the current round.
+        let (dummy_tx, _) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.tx, dummy_tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The replica scheduling loop: FCFS prefill + continuous decode batching.
+fn worker_loop(
+    engine: &Engine,
+    cfg: &ServeConfig,
+    rx: Receiver<Job>,
+    outstanding: &AtomicUsize,
+) {
+    let mut waiting: VecDeque<Job> = VecDeque::new();
+    let mut active: Vec<Active> = Vec::new();
+
+    loop {
+        // Pull new jobs. Block only when fully idle.
+        loop {
+            match rx.try_recv() {
+                Ok(job) => {
+                    if waiting.len() >= cfg.scheduler.max_queue {
+                        outstanding.fetch_sub(1, Ordering::Relaxed);
+                        let _ = job.reply.send(Event::Failed(
+                            job.req.id,
+                            "queue full (backpressure)".into(),
+                        ));
+                    } else {
+                        waiting.push_back(job);
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    if waiting.is_empty() && active.is_empty() {
+                        return;
+                    }
+                    break;
+                }
+            }
+        }
+        if waiting.is_empty() && active.is_empty() {
+            match rx.recv() {
+                Ok(job) => waiting.push_back(job),
+                Err(_) => return,
+            }
+        }
+
+        // Admit prefills while there is decode capacity.
+        while active.len() < cfg.scheduler.max_batch {
+            let Some(job) = waiting.pop_front() else { break };
+            let t = Instant::now();
+            match admit(engine, &job) {
+                Ok(sess) => {
+                    let prefill_s = t.elapsed().as_secs_f64();
+                    active.push(Active {
+                        job,
+                        sess,
+                        produced: Vec::new(),
+                        cur: 0,
+                        prefill_s,
+                        first_token_at: None,
+                        decode_bd: PhaseBreakdown::default(),
+                    });
+                }
+                Err(e) => {
+                    outstanding.fetch_sub(1, Ordering::Relaxed);
+                    let _ = job.reply.send(Event::Failed(job.req.id, e.to_string()));
+                }
+            }
+        }
+
+        // One decode round: every active session advances one token.
+        let mut finished: Vec<usize> = Vec::new();
+        for (idx, a) in active.iter_mut().enumerate() {
+            let step = if a.produced.is_empty() {
+                engine.first_token(&a.sess).map(|t| (t, PhaseBreakdown::default()))
+            } else {
+                engine.decode_step(&mut a.sess, a.cur).map(|o| (o.token, o.breakdown))
+            };
+            match step {
+                Ok((tok, bd)) => {
+                    a.decode_bd.add(&bd);
+                    a.produced.push(tok);
+                    a.cur = tok;
+                    if a.first_token_at.is_none() {
+                        a.first_token_at = Some(Instant::now());
+                    }
+                    let _ = a.job.reply.send(Event::Token(a.job.req.id, tok));
+                    if a.produced.len() >= a.job.req.max_tokens {
+                        finished.push(idx);
+                    }
+                }
+                Err(e) => {
+                    let _ = a.job.reply.send(Event::Failed(a.job.req.id, e.to_string()));
+                    finished.push(idx);
+                }
+            }
+        }
+        // Retire finished sessions (reverse order keeps indices valid).
+        for idx in finished.into_iter().rev() {
+            let a = active.swap_remove(idx);
+            let ttft = a
+                .first_token_at
+                .map(|t| t.duration_since(a.job.submitted).as_secs_f64())
+                .unwrap_or(0.0);
+            let n_out = a.produced.len();
+            let decode_total = a.decode_bd.total();
+            let metrics = RequestMetrics {
+                prompt_tokens: a.job.req.prompt.len(),
+                output_tokens: n_out,
+                prefill_s: a.prefill_s,
+                ttft_s: ttft,
+                tpot_s: if n_out > 1 { decode_total / (n_out - 1) as f64 } else { 0.0 },
+                breakdown: a.decode_bd,
+            };
+            // Decrement BEFORE the Done event so a client that reads Done
+            // observes the freed capacity (load-balancing correctness).
+            outstanding.fetch_sub(1, Ordering::Relaxed);
+            let _ = a.job.reply.send(Event::Done(a.job.req.id, metrics));
+        }
+    }
+}
+
+/// Admission: enforce device-memory limits for the vLLM-like baseline
+/// (full KV on device ⇒ OOM past the budget), then prefill.
+fn admit(engine: &Engine, job: &Job) -> Result<Session> {
+    if engine.cfg.method == crate::config::Method::VllmLike {
+        if let Some(hw) = crate::hw::HwProfile::by_name(&engine.cfg.hw) {
+            let spec = engine.spec();
+            let geom = crate::hw::ModelGeometry {
+                layers: spec.layers,
+                q_heads: spec.q_heads,
+                kv_heads: spec.kv_heads,
+                head_dim: spec.head_dim,
+                elt_size: 2,
+            };
+            // Full-model weights claim their share of device memory first.
+            let weight_bytes = engine.weights.param_count() * 2;
+            let budget = hw.device_mem_bytes.saturating_sub(weight_bytes);
+            let need = geom.kv_bytes(job.req.prompt.len() + job.req.max_tokens);
+            anyhow::ensure!(
+                need <= budget,
+                "device OOM: KV needs {:.1} GiB, {:.1} GiB free",
+                need as f64 / (1u64 << 30) as f64,
+                budget as f64 / (1u64 << 30) as f64
+            );
+        }
+    }
+    engine.prefill(&job.req.prompt)
+}
+
+/// Collect a full generation from an event stream (blocking helper).
+pub fn collect(events: &Receiver<Event>) -> Result<(Vec<u32>, RequestMetrics)> {
+    let mut tokens = Vec::new();
+    loop {
+        match events.recv() {
+            Ok(Event::Token(_, t)) => tokens.push(t),
+            Ok(Event::Done(_, m)) => return Ok((tokens, m)),
+            Ok(Event::Failed(_, e)) => anyhow::bail!("request failed: {e}"),
+            Err(_) => anyhow::bail!("replica dropped the request"),
+        }
+    }
+}

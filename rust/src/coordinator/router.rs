@@ -1,0 +1,77 @@
+//! Multi-replica router: least-outstanding-requests dispatch.
+//!
+//! Mirrors the vLLM router's default policy: each replica worker owns one
+//! engine; the router picks the replica with the fewest in-flight
+//! requests (ties broken round-robin).
+
+use super::{Event, Replica, Request};
+use crate::config::ServeConfig;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+
+/// A fleet of replicas behind one submit() entry point.
+pub struct Router {
+    replicas: Vec<Replica>,
+    rr: AtomicU64,
+    next_id: AtomicU64,
+}
+
+impl Router {
+    /// Spawn `n` replicas of the same config.
+    pub fn spawn(cfg: ServeConfig, n: usize) -> Router {
+        assert!(n >= 1);
+        let replicas = (0..n).map(|_| Replica::spawn(cfg.clone())).collect();
+        Router { replicas, rr: AtomicU64::new(0), next_id: AtomicU64::new(1) }
+    }
+
+    /// Number of replicas.
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Allocate a request id.
+    pub fn next_request_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Route to the least-loaded replica.
+    pub fn submit(&self, req: Request) -> Receiver<Event> {
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) as usize;
+        let n = self.replicas.len();
+        let mut best = start % n;
+        let mut best_load = usize::MAX;
+        for i in 0..n {
+            let idx = (start + i) % n;
+            let load = self.replicas[idx].outstanding();
+            if load < best_load {
+                best_load = load;
+                best = idx;
+            }
+        }
+        self.replicas[best].submit(req)
+    }
+
+    /// Total in-flight requests across the fleet.
+    pub fn total_outstanding(&self) -> usize {
+        self.replicas.iter().map(|r| r.outstanding()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Router logic that doesn't need a live engine is covered here; full
+    // end-to-end routing runs in rust/tests/serving.rs.
+
+    #[test]
+    fn request_ids_monotone() {
+        // Construct a router without engines by using replica stubs is not
+        // possible (Replica::spawn builds a real engine); so only test the
+        // id allocator against a zero-replica-free constructor surrogate.
+        let ids = AtomicU64::new(1);
+        let a = ids.fetch_add(1, Ordering::Relaxed);
+        let b = ids.fetch_add(1, Ordering::Relaxed);
+        assert!(b > a);
+    }
+}

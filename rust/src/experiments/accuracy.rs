@@ -1,0 +1,355 @@
+//! Accuracy experiments: Tables 2/3/9/10/11, Figures 5/8.
+//!
+//! All run the induction model end-to-end through the serving engine; a
+//! method's score is a pure function of whether decode-time retrieval
+//! reaches the critical tokens (DESIGN.md §2). Context lengths are scaled
+//! from the paper's 128K by the factor printed in each report.
+
+use super::harness::*;
+use super::ExpCtx;
+use crate::attention::budget::BudgetPolicy;
+use crate::config::Method;
+use crate::index::{roargraph::{RoarGraph, RoarParams}, SearchParams, VectorIndex};
+use crate::model::Engine;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+use crate::workload::{geometry, needle, tasks, Sample};
+use anyhow::Result;
+
+fn ctx_len(ctx: &ExpCtx) -> usize {
+    if ctx.full {
+        8192
+    } else {
+        2048
+    }
+}
+
+fn n_samples(ctx: &ExpCtx) -> usize {
+    if ctx.full {
+        20
+    } else {
+        6
+    }
+}
+
+/// Table 2: ∞-Bench-style tasks × methods.
+pub fn table2(ctx: &ExpCtx) -> Result<()> {
+    let mut rep = Report::new(
+        "table2",
+        "∞-Bench-style accuracy (induction model; paper Table 2)",
+        ctx,
+    );
+    let len = ctx_len(ctx);
+    let ns = n_samples(ctx);
+    rep.para(&format!(
+        "Context {len} tokens (paper: 128K; substitution per DESIGN.md §2). \
+         Tasks are structural analogues: Retr.N/P/KV are exact reproductions \
+         of the retrieval structure; Code.D/Math.F/En.QA/En.MC are \
+         local-information analogues (methods barely separate on them in \
+         the paper too)."
+    ));
+    let engine = Engine::from_config(accuracy_config(ctx, Method::Full))?;
+    let mut rng = Rng::seed_from(ctx.seed);
+
+    // Task name -> samples.
+    let task_list: Vec<(&str, Vec<Sample>)> = vec![
+        ("Retr.N", (0..ns).map(|_| { let d = rng_depth(&mut rng); tasks::number(&mut rng, len, d, 4) }).collect()),
+        ("Retr.P", (0..ns).map(|_| { let d = rng_depth(&mut rng); tasks::passkey(&mut rng, len, d) }).collect()),
+        ("Retr.KV", (0..ns).map(|_| tasks::kv_retrieval(&mut rng, len, len / 16)).collect()),
+        ("Code.D", (0..ns).map(|_| tasks::realistic_analogue(&mut rng, len, 0.8)).collect()),
+        ("Math.F", (0..ns).map(|_| tasks::realistic_analogue(&mut rng, len, 0.8)).collect()),
+        ("En.QA", (0..ns).map(|_| tasks::realistic_analogue(&mut rng, len, 0.5)).collect()),
+        ("En.MC", (0..ns).map(|_| tasks::realistic_analogue(&mut rng, len, 0.8)).collect()),
+    ];
+
+    // Prefill once per sample; evaluate every method on the same bases.
+    let mut bases_per_task = Vec::new();
+    for (name, samples) in task_list {
+        bases_per_task.push((name, prefill_bases(&engine, samples)?));
+    }
+
+    let mut rows = Vec::new();
+    let mut summary = Value::obj();
+    for &method in TABLE2_METHODS {
+        let mut row = vec![method.label().to_string()];
+        let mut avg = 0.0f32;
+        for (_, bases) in &bases_per_task {
+            let (score, _) = eval_method(&engine, bases, method)?;
+            row.push(fmt_pct(score));
+            avg += score;
+        }
+        let avg = avg / bases_per_task.len() as f32;
+        row.push(fmt_pct(avg));
+        summary.set(method.label(), avg as f64);
+        rows.push(row);
+    }
+    let mut header = vec!["Method"];
+    header.extend(bases_per_task.iter().map(|(n, _)| *n));
+    header.push("Avg.");
+    rep.table(&header, &rows);
+    rep.para(
+        "Paper-shape checks: StreamingLLM collapses on Retr.* (static \
+         window misses the needle); SnapKV/InfLLM/Quest lose Retr.KV \
+         (static or block-granular); Flat/IVF/RetrievalAttention track \
+         FullAttention.",
+    );
+    rep.write_json(ctx, &summary)?;
+    rep.write(ctx)
+}
+
+fn rng_depth(rng: &mut Rng) -> f32 {
+    0.05 + 0.9 * rng.f32()
+}
+
+/// Table 3: RULER-style average accuracy vs context length.
+pub fn table3(ctx: &ExpCtx) -> Result<()> {
+    let mut rep =
+        Report::new("table3", "RULER-style accuracy vs context length (paper Table 3)", ctx);
+    let lengths: Vec<usize> =
+        if ctx.full { vec![1024, 2048, 4096, 8192] } else { vec![768, 1536, 3072] };
+    let ns = if ctx.full { 8 } else { 4 };
+    rep.para(&format!(
+        "Lengths {:?} (paper: 4K–128K; scale factor ≈ 1/16 per DESIGN.md §2). \
+         Score = mean over the RULER task family (S1–S3, M1, MQ, VT).",
+        lengths
+    ));
+    let engine = Engine::from_config(accuracy_config(ctx, Method::Full))?;
+    let methods = [
+        Method::Full,
+        Method::StreamingLlm,
+        Method::SnapKv,
+        Method::InfLlm,
+        Method::Flat,
+        Method::Ivf,
+        Method::RetrievalAttention,
+    ];
+
+    let mut per_method: Vec<Vec<f32>> = vec![Vec::new(); methods.len()];
+    for &len in &lengths {
+        let mut rng = Rng::seed_from(ctx.seed ^ len as u64);
+        let mut samples = Vec::new();
+        for i in 0..ns {
+            let d = rng_depth(&mut rng);
+            samples.push(match i % 6 {
+                0 => tasks::ruler_single(&mut rng, len, 1, d),
+                1 => tasks::ruler_single(&mut rng, len, 2, d),
+                2 => tasks::ruler_single(&mut rng, len, 3, d),
+                3 => tasks::ruler_multi(&mut rng, len, 4),
+                4 => tasks::ruler_variable_tracking(&mut rng, len, 2),
+                _ => tasks::kv_retrieval(&mut rng, len, len / 32),
+            });
+        }
+        let bases = prefill_bases(&engine, samples)?;
+        for (mi, &m) in methods.iter().enumerate() {
+            let (score, _) = eval_method(&engine, &bases, m)?;
+            per_method[mi].push(score);
+        }
+    }
+    let mut rows = Vec::new();
+    for (mi, &m) in methods.iter().enumerate() {
+        let mut row = vec![m.label().to_string()];
+        row.extend(per_method[mi].iter().map(|&s| fmt_pct(s)));
+        let avg: f32 = per_method[mi].iter().sum::<f32>() / lengths.len() as f32;
+        row.push(fmt_pct(avg));
+        rows.push(row);
+    }
+    let mut header: Vec<String> = vec!["Method".into()];
+    header.extend(lengths.iter().map(|l| format!("{l}")));
+    header.push("Avg.".into());
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    rep.table(&header_refs, &rows);
+    rep.write(ctx)
+}
+
+/// Fig 5 (and Fig 7's per-method grids): needle-in-a-haystack.
+pub fn fig5(ctx: &ExpCtx) -> Result<()> {
+    let mut rep = Report::new("fig5", "Needle-in-a-haystack grids (paper Fig 5/7)", ctx);
+    let lengths: Vec<usize> =
+        if ctx.full { vec![1024, 2048, 4096, 8192] } else { vec![768, 1536, 3072] };
+    let depths = if ctx.full { 7 } else { 5 };
+    let reps = if ctx.full { 3 } else { 1 };
+    let engine = Engine::from_config(accuracy_config(ctx, Method::Full))?;
+    let cells = needle::grid(ctx.seed, &lengths, depths, reps);
+
+    // Prefill each cell's samples once.
+    let mut bases = Vec::new();
+    for c in &cells {
+        bases.push(prefill_bases(&engine, c.samples.clone())?);
+    }
+    for method in [Method::RetrievalAttention, Method::StreamingLlm, Method::Flat] {
+        let mut scores = Vec::with_capacity(cells.len());
+        for b in &bases {
+            let (score, _) = eval_method(&engine, b, method)?;
+            scores.push(score / 100.0);
+        }
+        rep.para(&format!("**{}**", method.label()));
+        rep.code_block(&needle::render(&cells, &scores));
+    }
+    rep.para(
+        "Paper shape: RetrievalAttention passes at every depth/length; \
+         StreamingLLM passes only where the needle falls inside its static \
+         pattern (bottom rows = depth ~100%).",
+    );
+    rep.write(ctx)
+}
+
+/// Fig 8: 250K–1M needle, index level.
+///
+/// Running the engine at 1M tokens is memory-prohibitive here, but the
+/// pass/fail mechanism at those lengths is purely whether the index
+/// retrieves the needle key — measured directly on synthetic geometry
+/// with a planted needle.
+pub fn fig8(ctx: &ExpCtx) -> Result<()> {
+    let mut rep = Report::new("fig8", "Extreme-length needle, index level (paper Fig 8)", ctx);
+    let lengths: Vec<usize> = if ctx.full {
+        vec![250_000, 500_000, 750_000, 1_000_000]
+    } else {
+        vec![100_000, 250_000]
+    };
+    let depths = [0.1f32, 0.5, 0.9];
+    let mut rows = Vec::new();
+    for &n in &lengths {
+        let mut row = vec![format!("{}K", n / 1000)];
+        for &depth in &depths {
+            let g = geometry::generate(
+                &geometry::GeometryParams::default(),
+                n,
+                512,
+                ctx.seed ^ n as u64,
+            );
+            // Plant a needle key strongly matched by a fresh query.
+            let mut keys = g.keys;
+            let at = ((n as f32) * depth) as usize;
+            let mut rng = Rng::seed_from(ctx.seed ^ (n + at) as u64);
+            let q: Vec<f32> = (0..keys.cols()).map(|_| rng.normal()).collect();
+            let strong: Vec<f32> = q.iter().map(|&v| v * 3.0).collect();
+            keys.row_mut(at).copy_from_slice(&strong);
+            let keys = std::sync::Arc::new(keys);
+            let index = RoarGraph::build(
+                keys.clone(),
+                &g.queries,
+                RoarParams { kb: 32, m: 32, repair_sample: 256 },
+            );
+            let r = index.search(&q, 100, &SearchParams { ef: 128, nprobe: 0 });
+            let hit = r.ids.contains(&(at as u32));
+            row.push(if hit { "pass".into() } else { "FAIL".into() });
+        }
+        rows.push(row);
+    }
+    rep.table(&["Length", "depth 10%", "depth 50%", "depth 90%"], &rows);
+    rep.para("Paper shape: all cells pass up to 1M (Fig 8).");
+    rep.write(ctx)
+}
+
+/// Table 9: RULER per-task at the longest context, extra baselines.
+pub fn table9(ctx: &ExpCtx) -> Result<()> {
+    let mut rep =
+        Report::new("table9", "RULER per-task, extra baselines (paper Table 9)", ctx);
+    let len = ctx_len(ctx);
+    let ns = if ctx.full { 8 } else { 3 };
+    let engine = Engine::from_config(accuracy_config(ctx, Method::Full))?;
+    let mut rng = Rng::seed_from(ctx.seed ^ 9);
+
+    let task_list: Vec<(&str, Vec<Sample>)> = vec![
+        ("S1", (0..ns).map(|_| { let d = rng_depth(&mut rng); tasks::ruler_single(&mut rng, len, 1, d) }).collect()),
+        ("S2", (0..ns).map(|_| { let d = rng_depth(&mut rng); tasks::ruler_single(&mut rng, len, 2, d) }).collect()),
+        ("S3", (0..ns).map(|_| { let d = rng_depth(&mut rng); tasks::ruler_single(&mut rng, len, 3, d) }).collect()),
+        ("M1", (0..ns).map(|_| tasks::ruler_multi(&mut rng, len, 4)).collect()),
+        ("MQ", tasks::ruler_multi_query(&mut rng, len, ns)),
+        ("MV", (0..ns).map(|_| tasks::ruler_multi_value(&mut rng, len, 3)).collect()),
+        ("VT", (0..ns).map(|_| tasks::ruler_variable_tracking(&mut rng, len, 2)).collect()),
+        ("CW", (0..ns).map(|_| tasks::ruler_aggregation(&mut rng, len)).collect()),
+        ("KV", (0..ns).map(|_| tasks::kv_retrieval(&mut rng, len, len / 16)).collect()),
+    ];
+    let mut bases_per_task = Vec::new();
+    for (name, samples) in task_list {
+        bases_per_task.push((name, prefill_bases(&engine, samples)?));
+    }
+    let methods = [Method::Full, Method::InfiniGen, Method::Quest, Method::RetrievalAttention];
+    let mut rows = Vec::new();
+    for &m in &methods {
+        let mut row = vec![m.label().to_string()];
+        let mut avg = 0.0;
+        for (_, bases) in &bases_per_task {
+            let (score, _) = eval_method(&engine, bases, m)?;
+            row.push(fmt_pct(score));
+            avg += score;
+        }
+        row.push(fmt_pct(avg / bases_per_task.len() as f32));
+        rows.push(row);
+    }
+    let mut header = vec!["Method"];
+    header.extend(bases_per_task.iter().map(|(n, _)| *n));
+    header.push("Avg.");
+    rep.table(&header, &rows);
+    rep.para(
+        "Paper shape: Quest/InfiniGen drop hard on multi-needle and KV \
+         tasks; ours stays near full attention. CW is ~0 for everyone \
+         (aggregation is not retrieval-shaped; paper Table 9 shows ~1%).",
+    );
+    rep.write(ctx)
+}
+
+/// Table 10: uniform vs PyramidKV-style per-layer budget.
+pub fn table10(ctx: &ExpCtx) -> Result<()> {
+    let mut rep = Report::new("table10", "Per-layer retrieval budget (paper Table 10)", ctx);
+    let len = ctx_len(ctx);
+    let ns = n_samples(ctx);
+    let engine = Engine::from_config(accuracy_config(ctx, Method::Full))?;
+    let mut rng = Rng::seed_from(ctx.seed ^ 10);
+    let samples: Vec<Sample> =
+        (0..ns).map(|_| tasks::kv_retrieval(&mut rng, len, len / 16)).collect();
+    let bases = prefill_bases(&engine, samples)?;
+
+    let mut rows = Vec::new();
+    for (label, budget) in [
+        ("Uniform k=32", BudgetPolicy::Uniform { k: 32 }),
+        ("PyramidKV beta=3", BudgetPolicy::Pyramid { k: 32, beta: 3.0 }),
+    ] {
+        let mut cfg = accuracy_config(ctx, Method::RetrievalAttention);
+        cfg.retrieval.budget = budget;
+        let eng2 = Engine::from_config(cfg)?;
+        let (score, _) = eval_method(&eng2, &bases, Method::RetrievalAttention)?;
+        rows.push(vec![label.to_string(), fmt_pct(score)]);
+    }
+    let (full_score, _) = eval_method(&engine, &bases, Method::Full)?;
+    rows.insert(0, vec!["FullAttention".into(), fmt_pct(full_score)]);
+    rep.table(&["Budget policy", "Retr.KV"], &rows);
+    rep.para("Paper shape: pyramid allocation is within noise of uniform (Tab 10: 16.0 vs 14.5 on Retr.KV).");
+    rep.write(ctx)
+}
+
+/// Table 11: deeper-model proxy — accuracy on KV retrieval + decode latency.
+pub fn table11(ctx: &ExpCtx) -> Result<()> {
+    let mut rep = Report::new(
+        "table11",
+        "Deep-model proxy (paper Table 11, Llama-3-70B)",
+        ctx,
+    );
+    rep.para(
+        "Substitution: accuracy uses the induction model at 2x context; \
+         latency uses the deeper yi9-mini preset (6 layers) with synthetic \
+         128K-scaled geometry — the 70B original is unavailable (DESIGN.md §2).",
+    );
+    let len = 2 * ctx_len(ctx);
+    let ns = if ctx.full { 10 } else { 4 };
+    let engine = Engine::from_config(accuracy_config(ctx, Method::Full))?;
+    let mut rng = Rng::seed_from(ctx.seed ^ 11);
+    let samples: Vec<Sample> =
+        (0..ns).map(|_| tasks::kv_retrieval(&mut rng, len, len / 16)).collect();
+    let bases = prefill_bases(&engine, samples)?;
+    let methods =
+        [Method::Full, Method::StreamingLlm, Method::Quest, Method::Flat, Method::RetrievalAttention];
+    let lat = super::latency::method_latencies(ctx, "yi9-mini", if ctx.full { 32768 } else { 8192 }, &methods)?;
+    let mut rows = Vec::new();
+    for (i, &m) in methods.iter().enumerate() {
+        let (score, _) = eval_method(&engine, &bases, m)?;
+        rows.push(vec![m.label().to_string(), fmt_pct(score), fmt_s(lat[i])]);
+    }
+    rep.table(&["Method", "KV-retrieval acc", "Decode latency (s)"], &rows);
+    rep.para(
+        "Paper shape: ours ≈ Flat accuracy at a fraction of its latency; \
+         Quest far below; StreamingLLM at zero.",
+    );
+    rep.write(ctx)
+}

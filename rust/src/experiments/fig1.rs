@@ -1,0 +1,48 @@
+//! Fig 1: the accuracy-vs-latency headline scatter — a composite of the
+//! table2 (accuracy) and table4 (latency) outputs.
+
+use super::harness::Report;
+use super::ExpCtx;
+use crate::util::json;
+use anyhow::{Context, Result};
+
+pub fn fig1(ctx: &ExpCtx) -> Result<()> {
+    let mut rep = Report::new(
+        "fig1",
+        "Accuracy vs decode latency (paper Fig 1, composite)",
+        ctx,
+    );
+    let acc_path = ctx.out_dir.join("table2.json");
+    let lat_path = ctx.out_dir.join("table4.json");
+    if !acc_path.exists() || !lat_path.exists() {
+        rep.para(
+            "table2/table4 summaries not found — run `experiment table2` \
+             and `experiment table4` first (or `experiment all`, which \
+             orders them before fig1).",
+        );
+        // Run them now rather than failing: fig1 is a composite.
+        super::accuracy::table2(ctx)?;
+        super::latency::table4(ctx)?;
+    }
+    let acc = json::parse(&std::fs::read_to_string(&acc_path).context("table2.json")?)?;
+    let lat = json::parse(&std::fs::read_to_string(&lat_path).context("table4.json")?)?;
+
+    let mut rows = Vec::new();
+    if let (json::Value::Obj(am), json::Value::Obj(_)) = (&acc, &lat) {
+        for (method, a) in am {
+            let l = lat.get(method).and_then(json::Value::as_f64);
+            rows.push(vec![
+                method.clone(),
+                format!("{:.1}", a.as_f64().unwrap_or(0.0)),
+                l.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    rep.table(&["Method", "Avg accuracy (table2)", "Decode latency s (table4, longest)"], &rows);
+    rep.para(
+        "Paper shape (Fig 1): RetrievalAttention sits in the top-left \
+         corner — full-attention accuracy at near-static latency; Flat is \
+         accurate but slow; StreamingLLM fast but inaccurate.",
+    );
+    rep.write(ctx)
+}

@@ -1,0 +1,138 @@
+//! Shared experiment machinery: report writing, accuracy and latency
+//! runners.
+
+use super::ExpCtx;
+use crate::config::{Method, ServeConfig};
+use crate::model::{Engine, Session};
+use crate::util::json::Value;
+use crate::workload::Sample;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// A markdown + CSV report accumulator.
+pub struct Report {
+    id: String,
+    md: String,
+    csv: String,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, ctx: &ExpCtx) -> Report {
+        let mut md = String::new();
+        let _ = writeln!(md, "# {id} — {title}\n");
+        let _ = writeln!(
+            md,
+            "profile: {} | seed: {:#x} | host: {} threads\n",
+            if ctx.full { "full" } else { "quick (scaled)" },
+            ctx.seed,
+            crate::util::parallel::num_threads()
+        );
+        Report { id: id.to_string(), md, csv: String::new() }
+    }
+
+    pub fn para(&mut self, text: &str) {
+        let _ = writeln!(self.md, "{text}\n");
+    }
+
+    /// Emit a markdown table; also mirrors rows into the CSV buffer.
+    pub fn table(&mut self, header: &[&str], rows: &[Vec<String>]) {
+        let _ = writeln!(self.md, "| {} |", header.join(" | "));
+        let _ = writeln!(self.md, "|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for row in rows {
+            let _ = writeln!(self.md, "| {} |", row.join(" | "));
+        }
+        let _ = writeln!(self.md);
+        let _ = writeln!(self.csv, "{}", header.join(","));
+        for row in rows {
+            let _ = writeln!(self.csv, "{}", row.join(","));
+        }
+    }
+
+    pub fn code_block(&mut self, text: &str) {
+        let _ = writeln!(self.md, "```\n{text}\n```\n");
+    }
+
+    pub fn write(&self, ctx: &ExpCtx) -> Result<()> {
+        std::fs::create_dir_all(&ctx.out_dir)?;
+        std::fs::write(ctx.out_dir.join(format!("{}.md", self.id)), &self.md)?;
+        if !self.csv.is_empty() {
+            std::fs::write(ctx.out_dir.join(format!("{}.csv", self.id)), &self.csv)?;
+        }
+        println!("{}", self.md);
+        Ok(())
+    }
+
+    /// Also drop a machine-readable summary (used by fig1's composite).
+    pub fn write_json(&self, ctx: &ExpCtx, v: &Value) -> Result<()> {
+        std::fs::write(ctx.out_dir.join(format!("{}.json", self.id)), v.to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Engine config for the accuracy experiments (induction model; the
+/// static pattern is scaled with the context so host retrieval matters).
+pub fn accuracy_config(ctx: &ExpCtx, method: Method) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.model = "induction-mini".into();
+    cfg.method = method;
+    cfg.artifacts_dir = ctx.artifacts_dir.clone();
+    cfg.pattern = crate::kvcache::StaticPattern { sink: 32, window: 128 };
+    cfg.retrieval.top_k = 32;
+    cfg.retrieval.ef = 64;
+    cfg.seed = ctx.seed;
+    cfg
+}
+
+/// The method rows of Table 2 (paper order).
+pub const TABLE2_METHODS: &[Method] = &[
+    Method::Full,
+    Method::StreamingLlm,
+    Method::SnapKv,
+    Method::InfLlm,
+    Method::InfiniGen,
+    Method::Quest,
+    Method::Flat,
+    Method::Ivf,
+    Method::RetrievalAttention,
+];
+
+/// Evaluate one method on a set of prefilled bases: returns mean score
+/// (0–100, strict exact-match like the paper's Retr.* metrics) and mean
+/// scanned fraction.
+pub fn eval_method(
+    engine: &Engine,
+    bases: &[(Session, Sample)],
+    method: Method,
+) -> Result<(f32, f64)> {
+    let mut score = 0.0f32;
+    let mut scanned_frac = 0.0f64;
+    for (base, sample) in bases {
+        let mut sess = engine.session_for_method(base, method)?;
+        let (tokens, _) = engine.generate(&mut sess, sample.expect.len())?;
+        score += if sample.passed(&tokens) { 1.0 } else { 0.0 };
+        let n = sess.caches[0][0].len().max(1);
+        scanned_frac += sess.mean_scanned() / n as f64;
+    }
+    let n = bases.len().max(1) as f32;
+    Ok((100.0 * score / n, scanned_frac / bases.len().max(1) as f64))
+}
+
+/// Prefill a batch of samples once (method-independent).
+pub fn prefill_bases(engine: &Engine, samples: Vec<Sample>) -> Result<Vec<(Session, Sample)>> {
+    samples
+        .into_iter()
+        .map(|s| {
+            let sess = engine.prefill(&s.prompt)?;
+            Ok((sess, s))
+        })
+        .collect()
+}
+
+/// Format seconds with 3 significant decimals (paper style).
+pub fn fmt_s(s: f64) -> String {
+    format!("{s:.3}")
+}
+
+pub fn fmt_pct(x: f32) -> String {
+    format!("{x:.1}")
+}

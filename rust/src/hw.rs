@@ -1,0 +1,162 @@
+//! Hardware profiles and KV-cache memory arithmetic.
+//!
+//! Two roles:
+//!
+//! 1. **Memory accounting** (Table 1): bytes of KV cache per token for a
+//!    model geometry, OOM boundaries for the vLLM baseline on a device
+//!    budget (24GB RTX4090 / 40–80GB A100).
+//! 2. **Device-time modeling**: our "device" is the PJRT CPU client, so raw
+//!    device-side wall-clock is not an RTX4090's. Each profile carries a
+//!    memory bandwidth figure from which the device-bound attention time is
+//!    estimated (decode attention is bandwidth-bound: it reads the whole
+//!    device-resident KV once per token). Experiments report both measured
+//!    host-side time (real) and modeled device time (profile-scaled), and
+//!    EXPERIMENTS.md labels which is which.
+
+
+
+/// A device profile used for modeled latency/memory numbers.
+#[derive(Clone, Debug)]
+pub struct HwProfile {
+    pub name: &'static str,
+    /// Device memory budget in bytes.
+    pub device_mem_bytes: usize,
+    /// Effective device memory bandwidth (bytes/s) for KV reads.
+    pub device_bw: f64,
+    /// Host (CPU) effective bandwidth for index scans (bytes/s).
+    pub host_bw: f64,
+    /// Fixed per-decode-step device overhead (kernel launches etc.), sec.
+    pub device_overhead_s: f64,
+    /// Peak device compute (flops/s, fp16-class).
+    pub device_flops: f64,
+}
+
+/// NVIDIA RTX4090 (24GB) + desktop CPU — the paper's §4.1 testbed.
+pub const RTX4090: HwProfile = HwProfile {
+    name: "rtx4090",
+    device_mem_bytes: 24 * (1 << 30),
+    device_bw: 1.0e12,        // ~1 TB/s GDDR6X
+    host_bw: 40.0e9,          // ~40 GB/s dual-channel DDR4
+    device_overhead_s: 2.0e-4,
+    device_flops: 82.0e12,    // fp16 tensor-core peak
+};
+
+/// NVIDIA A100 80GB + EPYC — the paper's §A.4 testbed.
+pub const A100: HwProfile = HwProfile {
+    name: "a100",
+    device_mem_bytes: 80 * (1 << 30),
+    device_bw: 2.0e12,        // ~2 TB/s HBM2e
+    host_bw: 150.0e9,         // 8-channel EPYC
+    device_overhead_s: 2.0e-4,
+    device_flops: 312.0e12,
+};
+
+/// The machine the tests actually run on (no scaling).
+pub const LOCALHOST: HwProfile = HwProfile {
+    name: "localhost",
+    device_mem_bytes: usize::MAX,
+    device_bw: 20.0e9,
+    host_bw: 20.0e9,
+    device_overhead_s: 0.0,
+    device_flops: 50.0e9,
+};
+
+impl HwProfile {
+    pub fn by_name(name: &str) -> Option<&'static HwProfile> {
+        match name {
+            "rtx4090" => Some(&RTX4090),
+            "a100" => Some(&A100),
+            "localhost" => Some(&LOCALHOST),
+            _ => None,
+        }
+    }
+
+    /// Modeled device time to attend over `tokens` KV pairs of a model.
+    /// Decode attention is bandwidth-bound: read K and V once.
+    pub fn attn_time_s(&self, geom: &ModelGeometry, tokens: usize) -> f64 {
+        let bytes = geom.kv_bytes_per_token() as f64 * tokens as f64;
+        self.device_overhead_s + bytes / self.device_bw
+    }
+
+    /// Modeled host time for a linear scan over `vectors` keys of dim `d`.
+    pub fn scan_time_s(&self, vectors: usize, d: usize) -> f64 {
+        (vectors * d * 4) as f64 / self.host_bw
+    }
+}
+
+/// Attention geometry of a served model — enough to do all the paper's
+/// memory arithmetic (Table 1 / Table 6).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelGeometry {
+    pub layers: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Bytes per stored element (2 = fp16, the paper's setting).
+    pub elt_size: usize,
+}
+
+impl ModelGeometry {
+    /// Llama-3-8B: 32 layers, 32 Q heads, 8 KV heads, head dim 128 (Table 6).
+    pub const LLAMA3_8B: ModelGeometry =
+        ModelGeometry { layers: 32, q_heads: 32, kv_heads: 8, head_dim: 128, elt_size: 2 };
+    /// Yi-6B: 32 layers, 32 Q heads, 4 KV heads.
+    pub const YI_6B: ModelGeometry =
+        ModelGeometry { layers: 32, q_heads: 32, kv_heads: 4, head_dim: 128, elt_size: 2 };
+    /// Yi-9B: 48 layers, 32 Q heads, 4 KV heads.
+    pub const YI_9B: ModelGeometry =
+        ModelGeometry { layers: 48, q_heads: 32, kv_heads: 4, head_dim: 128, elt_size: 2 };
+
+    /// Bytes of KV cache per token: K + V across all layers and KV heads.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.layers * self.kv_heads * self.head_dim * self.elt_size
+    }
+
+    /// Total KV bytes for a context of `tokens`.
+    pub fn kv_bytes(&self, tokens: usize) -> usize {
+        self.kv_bytes_per_token() * tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama3_kv_matches_paper_table1() {
+        // Paper Table 1: Llama-3-8B KV cache = 15.6GB at 128K, 125GB at 1M.
+        let g = ModelGeometry::LLAMA3_8B;
+        let gb_128k = g.kv_bytes(128 * 1024) as f64 / (1u64 << 30) as f64;
+        assert!((gb_128k - 16.0).abs() < 0.7, "128K KV = {gb_128k:.1} GB, paper says 15.6");
+        let gb_1m = g.kv_bytes(1_000_000) as f64 / (1u64 << 30) as f64;
+        assert!((gb_1m - 122.0).abs() < 5.0, "1M KV = {gb_1m:.1} GB, paper says 125");
+    }
+
+    #[test]
+    fn vllm_oom_boundary_on_rtx4090() {
+        // Table 4: vLLM OOMs at >=4K?? No — with model weights (~16GB) plus
+        // KV, 24GB leaves ~8GB: 8GB / 128KB-per-token ≈ 65K tokens. The
+        // paper reports OOM at every tested length because weights + runtime
+        // overhead already consume the margin. We assert the KV for 128K
+        // alone exceeds the leftover budget.
+        let g = ModelGeometry::LLAMA3_8B;
+        let weights: usize = 16 * (1 << 30);
+        let leftover = RTX4090.device_mem_bytes - weights;
+        assert!(g.kv_bytes(128 * 1024) > leftover);
+    }
+
+    #[test]
+    fn yi9b_has_more_layers() {
+        assert!(ModelGeometry::YI_9B.kv_bytes_per_token() > ModelGeometry::YI_6B.kv_bytes_per_token());
+    }
+
+    #[test]
+    fn attn_time_grows_linearly() {
+        let g = ModelGeometry::LLAMA3_8B;
+        let t1 = RTX4090.attn_time_s(&g, 4096);
+        let t2 = RTX4090.attn_time_s(&g, 8192);
+        assert!(t2 > t1);
+        let ratio = (t2 - RTX4090.device_overhead_s) / (t1 - RTX4090.device_overhead_s);
+        assert!((ratio - 2.0).abs() < 1e-9);
+    }
+}

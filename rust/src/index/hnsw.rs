@@ -1,0 +1,364 @@
+//! HNSW proximity graph (Malkov & Yashunin) under inner-product similarity.
+//!
+//! Built purely from key/key closeness — exactly the construction the paper
+//! shows breaking down on Q→K searches (Fig 3a: "graph-based HNSW falls
+//! into a local optimum"), because edges reflect the key distribution while
+//! decode queries come from the OOD query distribution.
+
+use super::{KeyStore, SearchParams, SearchResult, VectorIndex, VisitedSet};
+use crate::tensor::dot;
+
+use crate::util::rng::Rng;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Candidate ordered by similarity (max-heap => best first).
+#[derive(Copy, Clone)]
+struct Cand {
+    sim: f32,
+    id: u32,
+}
+impl PartialEq for Cand {
+    fn eq(&self, o: &Self) -> bool {
+        self.sim == o.sim && self.id == o.id
+    }
+}
+impl Eq for Cand {}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Cand {
+    fn cmp(&self, o: &Self) -> Ordering {
+        self.sim.total_cmp(&o.sim).then(self.id.cmp(&o.id))
+    }
+}
+
+/// Reversed ordering (min-heap on similarity) for result frontiers.
+#[derive(Copy, Clone)]
+struct RevCand(Cand);
+impl PartialEq for RevCand {
+    fn eq(&self, o: &Self) -> bool {
+        self.0 == o.0
+    }
+}
+impl Eq for RevCand {}
+impl PartialOrd for RevCand {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for RevCand {
+    fn cmp(&self, o: &Self) -> Ordering {
+        o.0.cmp(&self.0)
+    }
+}
+
+/// Build-time parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct HnswParams {
+    /// Max out-degree on layers > 0 (layer 0 uses 2M).
+    pub m: usize,
+    /// Construction beam width.
+    pub ef_construction: usize,
+    pub seed: u64,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        HnswParams { m: 16, ef_construction: 100, seed: 0 }
+    }
+}
+
+struct Layer {
+    /// Adjacency: `neighbors[id]` is the out-edge list of `id`.
+    neighbors: Vec<Vec<u32>>,
+}
+
+/// Hierarchical navigable small-world graph.
+pub struct HnswIndex {
+    keys: KeyStore,
+    layers: Vec<Layer>,
+    /// Top-layer entry point.
+    entry: u32,
+    /// Node's maximum layer.
+    node_level: Vec<u8>,
+    m: usize,
+}
+
+impl HnswIndex {
+    pub fn build(keys: KeyStore, params: HnswParams) -> Self {
+        let n = keys.rows();
+        assert!(n > 0, "HNSW needs at least one key");
+        let mut rng = Rng::seed_from(params.seed);
+        let level_mult = 1.0 / (params.m as f64).ln();
+
+        let node_level: Vec<u8> = (0..n)
+            .map(|_| {
+                let u: f64 = rng.f64().max(1e-12);
+                ((-u.ln() * level_mult) as usize).min(15) as u8
+            })
+            .collect();
+        let max_level = *node_level.iter().max().unwrap() as usize;
+        let mut layers: Vec<Layer> =
+            (0..=max_level).map(|_| Layer { neighbors: vec![Vec::new(); n] }).collect();
+        let entry = node_level.iter().enumerate().max_by_key(|(_, &l)| l).unwrap().0 as u32;
+
+        let mut idx = HnswIndex { keys, layers: Vec::new(), entry, node_level, m: params.m };
+        // Incremental insertion. We temporarily move `layers` into the struct
+        // via an option dance to satisfy the borrow checker simply: operate on
+        // local `layers` and a helper search that borrows keys only.
+        let mut visited = VisitedSet::new(n);
+        let mut order: Vec<usize> = (0..n).collect();
+        // Insert the entry point first so every later node can reach it.
+        order.swap(0, entry as usize);
+        let mut inserted: Vec<u32> = Vec::with_capacity(n);
+
+        for &i in &order {
+            let q = idx.keys.row(i).to_vec();
+            let node_lvl = idx.node_level[i] as usize;
+            if inserted.is_empty() {
+                inserted.push(i as u32);
+                continue;
+            }
+            // Greedy descent from the global entry to node_lvl+1.
+            let mut ep = idx.entry;
+            for l in (node_lvl + 1..=max_level).rev() {
+                ep = greedy_closest(&idx.keys, &layers[l], &q, ep);
+            }
+            // Beam search + connect on layers node_lvl..=0.
+            for l in (0..=node_lvl.min(max_level)).rev() {
+                let ef = params.ef_construction;
+                let w = beam_search(&idx.keys, &layers[l], &q, &[ep], ef, &mut visited).0;
+                let m_l = if l == 0 { params.m * 2 } else { params.m };
+                let selected = select_neighbors(&idx.keys, &w, m_l);
+                for &nb in &selected {
+                    layers[l].neighbors[i].push(nb);
+                    layers[l].neighbors[nb as usize].push(i as u32);
+                    // Prune over-full neighbor lists.
+                    if layers[l].neighbors[nb as usize].len() > m_l {
+                        let cands: Vec<Cand> = layers[l].neighbors[nb as usize]
+                            .iter()
+                            .map(|&x| Cand {
+                                sim: dot(idx.keys.row(nb as usize), idx.keys.row(x as usize)),
+                                id: x,
+                            })
+                            .collect();
+                        layers[l].neighbors[nb as usize] =
+                            select_neighbors(&idx.keys, &cands, m_l);
+                    }
+                }
+                if let Some(best) = selected.first() {
+                    ep = *best;
+                }
+            }
+            inserted.push(i as u32);
+        }
+        idx.layers = layers;
+        idx
+    }
+
+    /// Beam search on the bottom layer with explicit ef; returns candidates
+    /// best-first plus the scan count.
+    fn search_layer0(&self, query: &[f32], ef: usize) -> (Vec<Cand>, usize) {
+        let mut visited = VisitedSet::new(self.keys.rows());
+        let mut scanned = 0usize;
+        // Descend upper layers greedily.
+        let mut ep = self.entry;
+        for l in (1..self.layers.len()).rev() {
+            ep = greedy_closest_counted(&self.keys, &self.layers[l], query, ep, &mut scanned);
+        }
+        let (mut w, s) = beam_search(&self.keys, &self.layers[0], query, &[ep], ef, &mut visited);
+        scanned += s;
+        w.sort_by(|a, b| b.cmp(a));
+        (w, scanned)
+    }
+}
+
+/// Greedy hill-climb to the most similar node on a layer.
+fn greedy_closest(keys: &crate::tensor::Matrix, layer: &Layer, q: &[f32], start: u32) -> u32 {
+    let mut scanned = 0;
+    greedy_closest_counted(keys, layer, q, start, &mut scanned)
+}
+
+fn greedy_closest_counted(
+    keys: &crate::tensor::Matrix,
+    layer: &Layer,
+    q: &[f32],
+    start: u32,
+    scanned: &mut usize,
+) -> u32 {
+    let mut cur = start;
+    let mut cur_sim = dot(q, keys.row(cur as usize));
+    *scanned += 1;
+    loop {
+        let mut improved = false;
+        for &nb in &layer.neighbors[cur as usize] {
+            let s = dot(q, keys.row(nb as usize));
+            *scanned += 1;
+            if s > cur_sim {
+                cur_sim = s;
+                cur = nb;
+                improved = true;
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+/// Standard HNSW beam search over one layer; returns up to `ef` candidates
+/// (unsorted) and the number of similarity computations.
+fn beam_search(
+    keys: &crate::tensor::Matrix,
+    layer: &Layer,
+    q: &[f32],
+    entries: &[u32],
+    ef: usize,
+    visited: &mut VisitedSet,
+) -> (Vec<Cand>, usize) {
+    visited.clear();
+    let mut scanned = 0usize;
+    let mut frontier: BinaryHeap<Cand> = BinaryHeap::new(); // best-first
+    let mut results: BinaryHeap<RevCand> = BinaryHeap::new(); // worst-first
+
+    for &e in entries {
+        if visited.insert(e as usize) {
+            let sim = dot(q, keys.row(e as usize));
+            scanned += 1;
+            frontier.push(Cand { sim, id: e });
+            results.push(RevCand(Cand { sim, id: e }));
+        }
+    }
+    while let Some(c) = frontier.pop() {
+        let worst = results.peek().map(|r| r.0.sim).unwrap_or(f32::NEG_INFINITY);
+        if c.sim < worst && results.len() >= ef {
+            break;
+        }
+        for &nb in &layer.neighbors[c.id as usize] {
+            if visited.insert(nb as usize) {
+                let sim = dot(q, keys.row(nb as usize));
+                scanned += 1;
+                let worst = results.peek().map(|r| r.0.sim).unwrap_or(f32::NEG_INFINITY);
+                if results.len() < ef || sim > worst {
+                    frontier.push(Cand { sim, id: nb });
+                    results.push(RevCand(Cand { sim, id: nb }));
+                    if results.len() > ef {
+                        results.pop();
+                    }
+                }
+            }
+        }
+    }
+    (results.into_iter().map(|r| r.0).collect(), scanned)
+}
+
+/// Simple neighbor selection: keep the `m` most similar candidates. (The
+/// full RNG-style diversity heuristic lives in `roargraph::prune`, where it
+/// matters most; plain top-m matches hnswlib's default for IP.)
+fn select_neighbors(_keys: &crate::tensor::Matrix, cands: &[Cand], m: usize) -> Vec<u32> {
+    let mut sorted: Vec<Cand> = cands.to_vec();
+    sorted.sort_by(|a, b| b.cmp(a));
+    sorted.dedup_by_key(|c| c.id);
+    sorted.into_iter().take(m).map(|c| c.id).collect()
+}
+
+impl VectorIndex for HnswIndex {
+    fn len(&self) -> usize {
+        self.keys.rows()
+    }
+
+    fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> SearchResult {
+        let ef = params.ef.max(k);
+        let (cands, scanned) = self.search_layer0(query, ef);
+        SearchResult {
+            ids: cands.iter().take(k).map(|c| c.id).collect(),
+            scores: cands.iter().take(k).map(|c| c.sim).collect(),
+            scanned,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "HNSW"
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.neighbors.iter().map(|n| n.len() * 4 + 24).sum::<usize>())
+            .sum::<usize>()
+            + self.node_level.len()
+            + std::mem::size_of::<Self>()
+    }
+}
+
+impl HnswIndex {
+    /// Max out-degree parameter (diagnostics).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::exact_topk;
+    use crate::tensor::Matrix;
+    
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn random_keys(n: usize, d: usize, seed: u64) -> KeyStore {
+        let mut rng = Rng::seed_from(seed);
+        Arc::new(Matrix::from_fn(n, d, |_, _| rng.f32() - 0.5))
+    }
+
+    #[test]
+    fn in_distribution_recall_high() {
+        let keys = random_keys(2000, 16, 11);
+        let idx = HnswIndex::build(keys.clone(), HnswParams::default());
+        // K->K queries (in-distribution): recall@10 should be high.
+        let mut total = 0.0;
+        let nq = 20;
+        for qi in 0..nq {
+            let q = keys.row(qi * 17).to_vec();
+            let truth = exact_topk(&keys, &q, 10);
+            let r = idx.search(&q, 10, &SearchParams { ef: 128, nprobe: 0 });
+            total += r.recall_against(&truth);
+        }
+        let recall = total / nq as f32;
+        assert!(recall > 0.85, "K->K recall too low: {recall}");
+    }
+
+    #[test]
+    fn scanned_less_than_n_for_small_ef() {
+        let keys = random_keys(4000, 16, 13);
+        let idx = HnswIndex::build(keys, HnswParams::default());
+        let q = vec![0.3f32; 16];
+        let r = idx.search(&q, 10, &SearchParams { ef: 32, nprobe: 0 });
+        assert!(r.scanned < 4000, "HNSW should scan a fraction: {}", r.scanned);
+        assert_eq!(r.ids.len(), 10);
+    }
+
+    #[test]
+    fn ef_monotone_recall() {
+        let keys = random_keys(1500, 8, 17);
+        let idx = HnswIndex::build(keys.clone(), HnswParams::default());
+        let q = keys.row(3).to_vec();
+        let truth = exact_topk(&keys, &q, 10);
+        let lo = idx.search(&q, 10, &SearchParams { ef: 10, nprobe: 0 }).recall_against(&truth);
+        let hi = idx.search(&q, 10, &SearchParams { ef: 400, nprobe: 0 }).recall_against(&truth);
+        assert!(hi >= lo);
+        assert!(hi > 0.85, "high-ef recall too low: {hi}");
+    }
+
+    #[test]
+    fn single_node_graph() {
+        let keys = Arc::new(Matrix::from_vec(1, 4, vec![1.0, 0.0, 0.0, 0.0]));
+        let idx = HnswIndex::build(keys, HnswParams::default());
+        let r = idx.search(&[1.0, 0.0, 0.0, 0.0], 5, &SearchParams::default());
+        assert_eq!(r.ids, vec![0]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Lloyd's k-means with k-means++ seeding, used by the IVF index and by
+//! InfLLM-style block representatives.
+//!
+//! Clustering uses Euclidean distance (the conventional choice for IVF
+//! coarse quantisers); *search* over the resulting lists still ranks by
+//! inner product. This mirrors Faiss' `IndexIVFFlat` with `METRIC_INNER_PRODUCT`.
+
+use crate::tensor::{l2_sq, Matrix};
+use crate::util::parallel;
+use crate::util::rng::Rng;
+
+/// Result of a k-means run.
+pub struct KMeans {
+    /// `k x d` centroid matrix.
+    pub centroids: Matrix,
+    /// Cluster assignment per input row.
+    pub assignment: Vec<u32>,
+}
+
+/// Run k-means++ then at most `iters` Lloyd iterations.
+///
+/// Deterministic for a fixed `seed`. Empty clusters are re-seeded from the
+/// point farthest from its centroid.
+pub fn kmeans(data: &Matrix, k: usize, iters: usize, seed: u64) -> KMeans {
+    let n = data.rows();
+    let d = data.cols();
+    assert!(k >= 1 && n >= 1, "kmeans needs k>=1, n>=1");
+    let k = k.min(n);
+    let mut rng = Rng::seed_from(seed);
+
+    // --- k-means++ seeding ---
+    let mut centroids = Matrix::zeros(0, d);
+    let first = rng.below(n);
+    centroids.push_row(data.row(first));
+    let mut dist2: Vec<f32> = (0..n).map(|i| l2_sq(data.row(i), data.row(first))).collect();
+    while centroids.rows() < k {
+        let total: f64 = dist2.iter().map(|&v| v as f64).sum();
+        let next = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.f64() * total;
+            let mut pick = n - 1;
+            for (i, &v) in dist2.iter().enumerate() {
+                target -= v as f64;
+                if target <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        centroids.push_row(data.row(next));
+        let c = centroids.rows() - 1;
+        for i in 0..n {
+            let d2 = l2_sq(data.row(i), centroids.row(c));
+            if d2 < dist2[i] {
+                dist2[i] = d2;
+            }
+        }
+    }
+
+    // --- Lloyd iterations ---
+    let mut assignment = vec![0u32; n];
+    for _ in 0..iters {
+        // Assign (parallel over point blocks).
+        let block = 2048;
+        let nblocks = n.div_ceil(block);
+        let assigned: Vec<Vec<u32>> = parallel::par_map_range(nblocks, |b| {
+            let lo = b * block;
+            let hi = (lo + block).min(n);
+            (lo..hi)
+                .map(|i| {
+                    let row = data.row(i);
+                    let mut best = 0u32;
+                    let mut best_d = f32::INFINITY;
+                    for c in 0..centroids.rows() {
+                        let d2 = l2_sq(row, centroids.row(c));
+                        if d2 < best_d {
+                            best_d = d2;
+                            best = c as u32;
+                        }
+                    }
+                    best
+                })
+                .collect()
+        });
+        let new_assign: Vec<u32> = assigned.into_iter().flatten().collect();
+        let changed = new_assign != assignment;
+        assignment = new_assign;
+
+        // Update.
+        let mut sums = Matrix::zeros(centroids.rows(), d);
+        let mut counts = vec![0u32; centroids.rows()];
+        for i in 0..n {
+            let c = assignment[i] as usize;
+            crate::tensor::axpy(1.0, data.row(i), sums.row_mut(c));
+            counts[c] += 1;
+        }
+        for c in 0..centroids.rows() {
+            if counts[c] == 0 {
+                // Re-seed empty cluster from a random point.
+                let j = rng.below(n);
+                centroids.row_mut(c).copy_from_slice(data.row(j));
+            } else {
+                let inv = 1.0 / counts[c] as f32;
+                let (cent, sum) = (centroids.row_mut(c), sums.row(c));
+                for (o, &s) in cent.iter_mut().zip(sum.iter()) {
+                    *o = s * inv;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    KMeans { centroids, assignment }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two well-separated blobs must be split into two clusters.
+    #[test]
+    fn separates_two_blobs() {
+        let mut data = Matrix::zeros(0, 2);
+        for i in 0..20 {
+            data.push_row(&[10.0 + (i % 5) as f32 * 0.01, 10.0]);
+            data.push_row(&[-10.0 - (i % 5) as f32 * 0.01, -10.0]);
+        }
+        let km = kmeans(&data, 2, 20, 42);
+        // All even rows share a cluster, all odd rows share the other.
+        let c0 = km.assignment[0];
+        let c1 = km.assignment[1];
+        assert_ne!(c0, c1);
+        for i in 0..40 {
+            assert_eq!(km.assignment[i], if i % 2 == 0 { c0 } else { c1 });
+        }
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let data = Matrix::from_vec(2, 2, vec![0.0, 0.0, 1.0, 1.0]);
+        let km = kmeans(&data, 10, 5, 1);
+        assert_eq!(km.centroids.rows(), 2);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let data = Matrix::from_fn(50, 3, |r, c| ((r * 7 + c * 13) % 17) as f32);
+        let a = kmeans(&data, 4, 10, 7);
+        let b = kmeans(&data, 4, 10, 7);
+        assert_eq!(a.assignment, b.assignment);
+    }
+}

@@ -1,0 +1,283 @@
+//! KV-cache management: paged storage plus the device/host tiering of §3.3.
+//!
+//! RetrievalAttention splits each head's KV cache into two disjoint sets:
+//!
+//! * the **device set `W`** — the static pattern (attention-sink prefix +
+//!   sliding local window, StreamingLLM-style) held in GPU memory and
+//!   attended with the AOT FlashAttention artifact;
+//! * the **host set `H`** — everything else, offloaded to CPU memory and
+//!   organised by an ANNS index, retrieved per decode query.
+//!
+//! Tokens generated during decode enter the sliding window; tokens the
+//! window slides past land in a small unindexed *overflow* buffer that is
+//! linearly scanned (generation is short relative to the context, so this
+//! buffer stays tiny; the paper's implementation behaves the same way —
+//! the index is built once, at prefill).
+
+pub mod paged;
+
+use crate::tensor::Matrix;
+use std::ops::Range;
+
+/// The static device-resident pattern: `sink` initial tokens plus a
+/// `window`-token sliding suffix (the paper uses 128 + 512 = 640).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StaticPattern {
+    pub sink: usize,
+    pub window: usize,
+}
+
+impl StaticPattern {
+    /// The paper's default: 128 initial + 512 local tokens.
+    pub const PAPER: StaticPattern = StaticPattern { sink: 128, window: 512 };
+
+    pub fn total(&self) -> usize {
+        self.sink + self.window
+    }
+
+    /// Device-resident index ranges at sequence length `len`:
+    /// `[0, sink)` and `[len - window, len)`, clipped and deduplicated when
+    /// the sequence is shorter than the pattern.
+    pub fn device_ranges(&self, len: usize) -> (Range<usize>, Range<usize>) {
+        if len <= self.total() {
+            return (0..len, len..len);
+        }
+        (0..self.sink, len - self.window..len)
+    }
+
+    /// True iff token `i` (at current length `len`) is device-resident.
+    pub fn on_device(&self, i: usize, len: usize) -> bool {
+        let (a, b) = self.device_ranges(len);
+        a.contains(&i) || b.contains(&i)
+    }
+}
+
+/// Per-(layer, kv-head) tiered KV storage.
+///
+/// Keys and values are stored once, contiguously, on the host (Appendix C:
+/// indexes in the same GQA group share one KV copy and address it by id).
+/// Tier membership is computed from positions, so "moving" a token between
+/// tiers is free — matching the paper's pointer-based design.
+#[derive(Clone)]
+pub struct TieredKvCache {
+    d: usize,
+    keys: Matrix,
+    values: Matrix,
+    pattern: StaticPattern,
+    /// Sequence length at the moment the index was (or would be) built.
+    prefill_len: usize,
+}
+
+impl TieredKvCache {
+    pub fn new(d: usize, pattern: StaticPattern) -> Self {
+        TieredKvCache {
+            d,
+            keys: Matrix::zeros(0, d),
+            values: Matrix::zeros(0, d),
+            pattern,
+            prefill_len: 0,
+        }
+    }
+
+    /// Append one (key, value) pair; returns its token position.
+    pub fn append(&mut self, key: &[f32], value: &[f32]) -> usize {
+        assert_eq!(key.len(), self.d);
+        assert_eq!(value.len(), self.d);
+        self.keys.push_row(key);
+        self.values.push_row(value);
+        self.keys.rows() - 1
+    }
+
+    /// Bulk-load the prefill KV and mark the prefill boundary.
+    pub fn load_prefill(&mut self, keys: Matrix, values: Matrix) {
+        assert_eq!(keys.cols(), self.d);
+        assert_eq!(keys.rows(), values.rows());
+        self.keys = keys;
+        self.values = values;
+        self.prefill_len = self.keys.rows();
+    }
+
+    /// Mark the current length as the prefill boundary (after appends).
+    pub fn seal_prefill(&mut self) {
+        self.prefill_len = self.keys.rows();
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn pattern(&self) -> StaticPattern {
+        self.pattern
+    }
+
+    pub fn prefill_len(&self) -> usize {
+        self.prefill_len
+    }
+
+    #[inline]
+    pub fn key(&self, i: usize) -> &[f32] {
+        self.keys.row(i)
+    }
+
+    #[inline]
+    pub fn value(&self, i: usize) -> &[f32] {
+        self.values.row(i)
+    }
+
+    pub fn keys(&self) -> &Matrix {
+        &self.keys
+    }
+
+    pub fn values(&self) -> &Matrix {
+        &self.values
+    }
+
+    /// Token ids currently on the device (`W` of Algorithm 1).
+    pub fn device_ids(&self) -> Vec<u32> {
+        let (a, b) = self.pattern.device_ranges(self.len());
+        a.chain(b).map(|i| i as u32).collect()
+    }
+
+    /// Host-side *indexed* ids: prefill tokens that are neither sink nor
+    /// were inside the window at prefill time. These are the vectors the
+    /// ANNS index is built over.
+    pub fn indexed_ids(&self) -> Vec<u32> {
+        if self.prefill_len <= self.pattern.total() {
+            return Vec::new();
+        }
+        (self.pattern.sink..self.prefill_len - self.pattern.window).map(|i| i as u32).collect()
+    }
+
+    /// Host-side *overflow* ids: tokens the sliding window has passed over
+    /// since prefill — on the host but not in the index; scanned linearly.
+    pub fn overflow_ids(&self) -> Vec<u32> {
+        let len = self.len();
+        if len <= self.pattern.total() {
+            return Vec::new();
+        }
+        let window_start = len - self.pattern.window;
+        let indexed_end = if self.prefill_len > self.pattern.total() {
+            self.prefill_len - self.pattern.window
+        } else {
+            self.pattern.sink.min(window_start)
+        };
+        (indexed_end.max(self.pattern.sink)..window_start).map(|i| i as u32).collect()
+    }
+
+    /// Copy the indexed host keys into a standalone matrix (for index
+    /// construction). Ids in the returned matrix are *dense*; map back with
+    /// `indexed_ids()[dense_id]`.
+    pub fn indexed_keys_matrix(&self) -> Matrix {
+        let ids = self.indexed_ids();
+        let mut m = Matrix::zeros(0, self.d);
+        for &i in &ids {
+            m.push_row(self.keys.row(i as usize));
+        }
+        m
+    }
+
+    /// Device-tier bytes (2 tensors × fp16 in the paper's accounting —
+    /// see [`crate::hw::kv_bytes_per_token`]; here the element size is a
+    /// parameter so experiments can model fp16 while we store f32).
+    pub fn device_bytes(&self, elt_size: usize) -> usize {
+        self.device_ids().len() * 2 * self.d * elt_size
+    }
+
+    /// Host-tier bytes.
+    pub fn host_bytes(&self, elt_size: usize) -> usize {
+        (self.len() - self.device_ids().len()) * 2 * self.d * elt_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(len: usize, d: usize, pattern: StaticPattern) -> TieredKvCache {
+        let mut c = TieredKvCache::new(d, pattern);
+        for i in 0..len {
+            let k: Vec<f32> = (0..d).map(|j| (i * d + j) as f32).collect();
+            let v: Vec<f32> = (0..d).map(|j| -((i * d + j) as f32)).collect();
+            c.append(&k, &v);
+        }
+        c.seal_prefill();
+        c
+    }
+
+    #[test]
+    fn short_sequence_all_on_device() {
+        let c = filled(100, 4, StaticPattern { sink: 128, window: 512 });
+        assert_eq!(c.device_ids().len(), 100);
+        assert!(c.indexed_ids().is_empty());
+        assert!(c.overflow_ids().is_empty());
+    }
+
+    #[test]
+    fn tiers_partition_tokens() {
+        let pattern = StaticPattern { sink: 8, window: 16 };
+        let mut c = filled(100, 4, pattern);
+        // Decode 10 more tokens.
+        for i in 0..10 {
+            let k = vec![i as f32; 4];
+            c.append(&k, &k);
+        }
+        let dev = c.device_ids();
+        let idxed = c.indexed_ids();
+        let over = c.overflow_ids();
+        let mut all: Vec<u32> = dev.iter().chain(&idxed).chain(&over).copied().collect();
+        all.sort_unstable();
+        let expect: Vec<u32> = (0..110).collect();
+        assert_eq!(all, expect, "tiers must partition all tokens exactly once");
+        // Window covers the newest tokens.
+        assert!(dev.contains(&109));
+        assert!(dev.contains(&0));
+        // Overflow = prefill tokens the window slid past (100-16=84 .. 110-16=94).
+        assert_eq!(over, (84..94).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn indexed_ids_stable_across_decode() {
+        let pattern = StaticPattern { sink: 4, window: 8 };
+        let mut c = filled(64, 2, pattern);
+        let before = c.indexed_ids();
+        for _ in 0..5 {
+            c.append(&[0.0, 0.0], &[0.0, 0.0]);
+        }
+        assert_eq!(before, c.indexed_ids(), "index set must not change during decode");
+    }
+
+    #[test]
+    fn device_ranges_clip() {
+        let p = StaticPattern { sink: 128, window: 512 };
+        let (a, b) = p.device_ranges(50);
+        assert_eq!(a, 0..50);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let c = filled(1000, 64, StaticPattern { sink: 8, window: 16 });
+        // 24 tokens on device, 976 on host; fp16 elements.
+        assert_eq!(c.device_bytes(2), 24 * 2 * 64 * 2);
+        assert_eq!(c.host_bytes(2), 976 * 2 * 64 * 2);
+    }
+
+    #[test]
+    fn indexed_keys_matrix_matches_ids() {
+        let c = filled(40, 3, StaticPattern { sink: 2, window: 4 });
+        let m = c.indexed_keys_matrix();
+        let ids = c.indexed_ids();
+        assert_eq!(m.rows(), ids.len());
+        for (dense, &orig) in ids.iter().enumerate() {
+            assert_eq!(m.row(dense), c.key(orig as usize));
+        }
+    }
+}

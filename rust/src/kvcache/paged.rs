@@ -1,0 +1,146 @@
+//! Paged device-memory pool (vLLM-style PagedAttention bookkeeping).
+//!
+//! Models the GPU-side KV allocator: fixed-size pages, per-sequence page
+//! tables, and a hard byte budget. This is the substrate behind the
+//! `vLLM` baseline rows of Tables 4/7/8 — including their OOM behaviour,
+//! which falls out of the same arithmetic the paper quotes (Table 1:
+//! ~125 GB per 1M tokens for Llama-3-8B).
+
+use std::collections::HashMap;
+
+/// Error raised when the device budget cannot fit an allocation — the
+/// "OOM" entries of Table 4.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OutOfDeviceMemory {
+    pub requested_pages: usize,
+    pub free_pages: usize,
+}
+
+impl std::fmt::Display for OutOfDeviceMemory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "device OOM: requested {} pages, {} free", self.requested_pages, self.free_pages)
+    }
+}
+
+impl std::error::Error for OutOfDeviceMemory {}
+
+/// Fixed-page device KV pool with per-sequence page tables.
+pub struct PagedPool {
+    /// Tokens per page.
+    page_tokens: usize,
+    /// Bytes of KV per token (all layers/heads combined).
+    bytes_per_token: usize,
+    total_pages: usize,
+    free: Vec<u32>,
+    tables: HashMap<u64, Vec<u32>>,
+    /// Tokens currently stored per sequence.
+    seq_len: HashMap<u64, usize>,
+}
+
+impl PagedPool {
+    /// `budget_bytes` of device memory, `bytes_per_token` of KV per token.
+    pub fn new(budget_bytes: usize, bytes_per_token: usize, page_tokens: usize) -> Self {
+        let page_bytes = bytes_per_token * page_tokens;
+        let total_pages = budget_bytes / page_bytes.max(1);
+        PagedPool {
+            page_tokens,
+            bytes_per_token,
+            total_pages,
+            free: (0..total_pages as u32).rev().collect(),
+            tables: HashMap::new(),
+            seq_len: HashMap::new(),
+        }
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        (self.total_pages - self.free.len()) * self.page_tokens * self.bytes_per_token
+    }
+
+    /// Extend sequence `seq` by `tokens`, allocating pages as needed.
+    pub fn extend(&mut self, seq: u64, tokens: usize) -> Result<(), OutOfDeviceMemory> {
+        let len = self.seq_len.get(&seq).copied().unwrap_or(0);
+        let have_pages = self.tables.get(&seq).map(|t| t.len()).unwrap_or(0);
+        let need_pages = (len + tokens).div_ceil(self.page_tokens);
+        let extra = need_pages.saturating_sub(have_pages);
+        if extra > self.free.len() {
+            return Err(OutOfDeviceMemory { requested_pages: extra, free_pages: self.free.len() });
+        }
+        let table = self.tables.entry(seq).or_default();
+        for _ in 0..extra {
+            table.push(self.free.pop().expect("checked above"));
+        }
+        *self.seq_len.entry(seq).or_insert(0) += tokens;
+        Ok(())
+    }
+
+    /// Free all pages of a finished sequence.
+    pub fn release(&mut self, seq: u64) {
+        if let Some(table) = self.tables.remove(&seq) {
+            self.free.extend(table);
+        }
+        self.seq_len.remove(&seq);
+    }
+
+    /// Physical page list of a sequence (diagnostics).
+    pub fn page_table(&self, seq: u64) -> Option<&[u32]> {
+        self.tables.get(&seq).map(|t| t.as_slice())
+    }
+
+    pub fn seq_tokens(&self, seq: u64) -> usize {
+        self.seq_len.get(&seq).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocates_and_frees() {
+        // 16 pages of 4 tokens, 1 byte/token.
+        let mut pool = PagedPool::new(64, 1, 4);
+        assert_eq!(pool.total_pages(), 16);
+        pool.extend(1, 10).unwrap(); // 3 pages
+        assert_eq!(pool.free_pages(), 13);
+        assert_eq!(pool.page_table(1).unwrap().len(), 3);
+        pool.extend(1, 2).unwrap(); // 12 tokens still 3 pages
+        assert_eq!(pool.free_pages(), 13);
+        pool.extend(1, 1).unwrap(); // 13 tokens -> 4 pages
+        assert_eq!(pool.free_pages(), 12);
+        pool.release(1);
+        assert_eq!(pool.free_pages(), 16);
+    }
+
+    #[test]
+    fn oom_when_budget_exceeded() {
+        let mut pool = PagedPool::new(8, 1, 4); // 2 pages
+        pool.extend(1, 8).unwrap();
+        let err = pool.extend(2, 1).unwrap_err();
+        assert_eq!(err.free_pages, 0);
+        // Paper Table 4: vLLM at 24GB / 128K context => OOM. Same arithmetic:
+        // Llama-3-8B KV is 131072 bytes/token and the fp16 weights already
+        // hold ~16GB of the 24GB card, leaving ~8GB for KV: 8GB / 128KB =
+        // 64K tokens < 128K.
+        let weights = 16usize * (1 << 30);
+        let mut gpu = PagedPool::new(24 * (1 << 30) - weights, 131_072, 16);
+        assert!(gpu.extend(7, 128 * 1024).is_err(), "128K context must OOM on 24GB");
+    }
+
+    #[test]
+    fn pages_not_shared_between_sequences() {
+        let mut pool = PagedPool::new(64, 1, 4);
+        pool.extend(1, 4).unwrap();
+        pool.extend(2, 4).unwrap();
+        let p1 = pool.page_table(1).unwrap().to_vec();
+        let p2 = pool.page_table(2).unwrap().to_vec();
+        assert!(p1.iter().all(|p| !p2.contains(p)));
+    }
+}

@@ -1,0 +1,45 @@
+//! # RetrievalAttention
+//!
+//! A reproduction of *RetrievalAttention: Accelerating Long-Context LLM
+//! Inference via Vector Retrieval* (Liu et al., 2024) as a three-layer
+//! Rust + JAX + Pallas serving stack.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`tensor`] — minimal dense f32 linear algebra used by the host-side
+//!   (CPU) attention and index code.
+//! * [`index`] — the ANNS substrate: exact KNN ([`index::flat`]), IVF
+//!   ([`index::ivf`]), HNSW ([`index::hnsw`]), and the paper's
+//!   attention-aware projected bipartite graph ([`index::roargraph`]).
+//! * [`kvcache`] — paged KV storage with device/host tiering and
+//!   static-pattern (sink + window) selection.
+//! * [`attention`] — full/sparse attention, the exact two-set
+//!   gamma-combine of Appendix B, and sparsity/OOD profiling.
+//! * [`baselines`] — StreamingLLM, SnapKV, InfLLM, Quest, InfiniGen and a
+//!   vLLM-like full-cache comparator.
+//! * [`model`] — synthetic GQA transformer presets plus a constructed
+//!   induction-head model used for end-to-end task accuracy.
+//! * [`runtime`] — PJRT artifact loading and execution (the "device").
+//! * [`coordinator`] — request scheduling, batching, sessions, routing.
+//! * [`server`] — tokio front-end (in-process + TCP json-lines).
+//! * [`workload`] — ∞-Bench/RULER/needle-style synthetic task generators.
+//! * [`experiments`] — one driver per paper table/figure.
+//! * [`hw`] — hardware profiles and KV-cache memory arithmetic.
+//! * [`metrics`] — latency histograms and per-phase breakdowns.
+
+pub mod attention;
+#[macro_use]
+pub mod util;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod hw;
+pub mod index;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod workload;

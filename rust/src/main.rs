@@ -1,0 +1,207 @@
+//! The `retrieval-attention` launcher.
+//!
+//! ```text
+//! retrieval-attention serve      [--config cfg.json] [--addr 127.0.0.1:8041]
+//!                                [--replicas N] [--model P] [--method M]
+//! retrieval-attention generate   [--config cfg.json] --prompt-task passkey
+//!                                [--len N] [--max-tokens T] [--method M]
+//! retrieval-attention experiment <id>|all|list [--full] [--out results/]
+//! retrieval-attention info       [--artifacts artifacts/]
+//! ```
+//!
+//! CLI parsing is hand-rolled (no clap in the vendored crate set).
+
+use anyhow::{Context, Result};
+use retrieval_attention::config::{Method, ServeConfig};
+use retrieval_attention::coordinator::{collect, router::Router, Request};
+use retrieval_attention::experiments::{self, ExpCtx};
+use retrieval_attention::server::Server;
+use retrieval_attention::util::rng::Rng;
+use retrieval_attention::workload::tasks;
+use std::sync::Arc;
+
+/// Tiny flag parser: `--key value` pairs plus positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                // Boolean flags: --full; valued flags: --out dir.
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn load_config(args: &Args) -> Result<ServeConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ServeConfig::from_file(path)?,
+        None => ServeConfig::default(),
+    };
+    if let Some(model) = args.get("model") {
+        cfg.model = model.to_string();
+    }
+    if let Some(m) = args.get("method") {
+        cfg.method = Method::parse(m).with_context(|| format!("unknown method `{m}`"))?;
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    if let Some(k) = args.get("top-k") {
+        cfg.retrieval.top_k = k.parse()?;
+    }
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        return Ok(());
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..]);
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "experiment" => cmd_experiment(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            anyhow::bail!("unknown command `{other}`")
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "retrieval-attention — long-context LLM serving via attention-aware vector retrieval\n\
+         \n\
+         commands:\n\
+         \x20 serve       start the json-lines TCP server\n\
+         \x20 generate    run one synthetic prompt through the engine\n\
+         \x20 experiment  regenerate a paper table/figure (or `all`, `list`)\n\
+         \x20 info        show artifact manifest / presets\n\
+         \n\
+         common flags: --config cfg.json --model PRESET --method METHOD\n\
+         \x20            --artifacts DIR --top-k K\n\
+         serve flags:  --addr HOST:PORT --replicas N\n\
+         generate:     --prompt-task passkey|kv|vt --len N --max-tokens T --depth D\n\
+         experiment:   --full --out DIR"
+    );
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let replicas: usize = args.get("replicas").unwrap_or("1").parse()?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:8041");
+    eprintln!(
+        "starting {} replica(s) of {} ({}) ...",
+        replicas,
+        cfg.model,
+        cfg.method.label()
+    );
+    let router = Arc::new(Router::spawn(cfg, replicas));
+    let server = Server::start(router, addr)?;
+    eprintln!("listening on {} (json-lines; see README quickstart)", server.addr);
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let len: usize = args.get("len").unwrap_or("2048").parse()?;
+    let max_tokens: usize = args.get("max-tokens").unwrap_or("4").parse()?;
+    let depth: f32 = args.get("depth").unwrap_or("0.5").parse()?;
+    let task = args.get("prompt-task").unwrap_or("passkey");
+    let mut rng = Rng::seed_from(cfg.seed ^ 0x9E);
+    let sample = match task {
+        "passkey" => tasks::passkey(&mut rng, len, depth),
+        "kv" => tasks::kv_retrieval(&mut rng, len, len / 16),
+        "vt" => tasks::ruler_variable_tracking(&mut rng, len, 2),
+        other => anyhow::bail!("unknown prompt task `{other}` (passkey|kv|vt)"),
+    };
+    eprintln!(
+        "model={} method={} task={task} len={len} expect={:?}",
+        cfg.model,
+        cfg.method.label(),
+        sample.expect
+    );
+    let replica = retrieval_attention::coordinator::Replica::spawn(cfg);
+    let events = replica.submit(Request { id: 1, prompt: sample.prompt.clone(), max_tokens });
+    let (tokens, metrics) = collect(&events)?;
+    println!("generated: {tokens:?}");
+    println!(
+        "grade: {:.0}% | prefill {:.2}s | ttft {:.3}s | tpot {:.4}s | search share {:.0}%",
+        sample.grade(&tokens) * 100.0,
+        metrics.prefill_s,
+        metrics.ttft_s,
+        metrics.tpot_s,
+        metrics.breakdown.search_share() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args.positional.first().map(|s| s.as_str()).unwrap_or("list");
+    if id == "list" {
+        println!("available experiments:");
+        for (name, _, desc) in experiments::REGISTRY {
+            println!("  {name:<9} {desc}");
+        }
+        return Ok(());
+    }
+    let out = args.get("out").unwrap_or("results");
+    let mut ctx = ExpCtx::new(out, args.has("full"));
+    if let Some(a) = args.get("artifacts") {
+        ctx.artifacts_dir = a.to_string();
+    }
+    experiments::run(id, &ctx)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let manifest =
+        retrieval_attention::runtime::manifest::Manifest::load(format!("{dir}/manifest.json"))?;
+    println!("artifacts: {dir}");
+    for (name, preset) in &manifest.presets {
+        let s = &preset.spec;
+        println!(
+            "  {name}: {} layers, {}q/{}kv heads, d_head {}, d_model {}, vocab {}, norm {}, {} artifacts",
+            s.layers, s.q_heads, s.kv_heads, s.head_dim, s.d_model, s.vocab, s.norm,
+            preset.artifacts.len()
+        );
+    }
+    Ok(())
+}

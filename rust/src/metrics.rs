@@ -1,0 +1,162 @@
+//! Latency metrics: histograms, counters, and the per-phase decode
+//! breakdown of Table 5 (vector search / attention / other).
+
+
+use std::time::{Duration, Instant};
+
+/// Streaming latency recorder with percentile queries. Stores raw samples
+/// (decode benchmarks record at most a few hundred thousand points).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyHistogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d.as_secs_f64());
+        self.sorted = false;
+    }
+
+    pub fn record_secs(&mut self, s: f64) {
+        self.samples.push(s);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Percentile in [0, 100] by nearest-rank.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.total_cmp(b));
+            self.sorted = true;
+        }
+        let rank = ((p / 100.0) * (self.samples.len() - 1) as f64).round() as usize;
+        self.samples[rank.min(self.samples.len() - 1)]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+}
+
+/// The decode-phase breakdown reported in Table 5.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseBreakdown {
+    /// Vector-index search time (s).
+    pub search: f64,
+    /// Attention compute time, host + device (s).
+    pub attention: f64,
+    /// Everything else (projections, FFN, sampling, bookkeeping) (s).
+    pub other: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn total(&self) -> f64 {
+        self.search + self.attention + self.other
+    }
+
+    /// Fraction of the step spent in vector search — the paper's headline
+    /// breakdown number (34.0% for RetrievalAttention vs 86.6% for Flat).
+    pub fn search_share(&self) -> f64 {
+        if self.total() == 0.0 {
+            0.0
+        } else {
+            self.search / self.total()
+        }
+    }
+
+    pub fn add(&mut self, o: &PhaseBreakdown) {
+        self.search += o.search;
+        self.attention += o.attention;
+        self.other += o.other;
+    }
+
+    pub fn scale(&self, f: f64) -> PhaseBreakdown {
+        PhaseBreakdown { search: self.search * f, attention: self.attention * f, other: self.other * f }
+    }
+}
+
+/// Scoped phase timer: accumulates elapsed time into a breakdown slot.
+pub struct PhaseTimer {
+    start: Instant,
+}
+
+impl PhaseTimer {
+    pub fn start() -> Self {
+        PhaseTimer { start: Instant::now() }
+    }
+
+    pub fn stop_into(self, slot: &mut f64) {
+        *slot += self.start.elapsed().as_secs_f64();
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=100 {
+            h.record_secs(i as f64);
+        }
+        // Nearest-rank on 1..=100: p50 -> index round(0.5*99)=50 -> 51.
+        assert_eq!(h.p50(), 51.0);
+        assert_eq!(h.p99(), 99.0);
+        assert_eq!(h.percentile(100.0), 100.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn breakdown_shares() {
+        let b = PhaseBreakdown { search: 0.34, attention: 0.5, other: 0.16 };
+        assert!((b.total() - 1.0).abs() < 1e-12);
+        assert!((b.search_share() - 0.34).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut slot = 0.0;
+        let t = PhaseTimer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        t.stop_into(&mut slot);
+        assert!(slot >= 0.004);
+    }
+}

@@ -1,0 +1,616 @@
+//! The serving engine: prefill, index construction, and the Algorithm-1
+//! decode step.
+//!
+//! One [`Engine`] per model replica; one [`Session`] per request. The
+//! decode step is the paper's Algorithm 1 verbatim:
+//!
+//! 1. device partial attention over the static set `W` via the AOT
+//!    `static_attn` artifact (Pallas flash_decode inside);
+//! 2. host partial attention over the retrieved set `Ω` (per-query-head
+//!    retrieval fanned out across threads, Appendix C) plus the small
+//!    unindexed overflow buffer;
+//! 3. exact γ-combine of the partials (Eq. 4/5);
+//! 4. FFN/projections via the per-op artifacts, greedy sampling.
+//!
+//! Prefill streams the prompt through the B=256 artifacts, computes exact
+//! causal attention on the host (the "GPU prefill" of §3.3 — full
+//! attention is required anyway to produce the next layer's input), and
+//! captures per-head query histories, which become RoarGraph's training
+//! set.
+
+use crate::attention::{attend_subset, combine, PartialAttention};
+use crate::baselines::{build_retriever, HostRetriever, RetrieverInputs};
+use crate::config::{Method, ServeConfig};
+use crate::kvcache::TieredKvCache;
+use crate::metrics::{PhaseBreakdown, PhaseTimer};
+use crate::model::weights::Weights;
+use crate::runtime::{literal_to_f32, Runtime};
+use crate::tensor::Matrix;
+use crate::util::parallel;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Chunk width of the prefill artifacts (matches aot.py `batches`).
+pub const PREFILL_CHUNK: usize = 256;
+
+/// A model replica: runtime + weights + method configuration.
+pub struct Engine {
+    pub rt: Runtime,
+    pub weights: Weights,
+    pub cfg: ServeConfig,
+    /// Device-resident weights (uploaded once, reused every call).
+    lits: WeightBuffers,
+}
+
+struct LayerBuffers {
+    g: xla::PjRtBuffer,
+    wq: xla::PjRtBuffer,
+    wk: xla::PjRtBuffer,
+    wv: xla::PjRtBuffer,
+    wo: xla::PjRtBuffer,
+    g2: xla::PjRtBuffer,
+    w1: xla::PjRtBuffer,
+    w3: xla::PjRtBuffer,
+    w2: xla::PjRtBuffer,
+}
+
+/// Weights resident on the device: uploaded once at engine construction
+/// and referenced by every artifact call (EXPERIMENTS.md §Perf: the
+/// literal path re-transferred ~30MB of weights per decode step).
+struct WeightBuffers {
+    table: xla::PjRtBuffer,
+    layers: Vec<LayerBuffers>,
+    gf: xla::PjRtBuffer,
+    wu: xla::PjRtBuffer,
+}
+
+/// Per-request decode state.
+pub struct Session {
+    /// KV caches per (layer, kv_head): `caches[layer][kv_head]`.
+    pub caches: Vec<Vec<TieredKvCache>>,
+    /// Prefill query history per (layer, q_head).
+    pub q_history: Vec<Vec<Matrix>>,
+    /// Host retrievers per (layer, q_head), built after prefill.
+    pub retrievers: Vec<Vec<Arc<dyn HostRetriever>>>,
+    /// Hidden state of the last processed token.
+    pub x_last: Vec<f32>,
+    /// Tokens processed so far.
+    pub len: usize,
+    /// Scan statistics (for Table 5 / Fig 6 accounting).
+    pub scanned_total: u64,
+    pub retrievals: u64,
+}
+
+/// One decode step's outputs.
+pub struct DecodeOutput {
+    pub token: u32,
+    pub breakdown: PhaseBreakdown,
+}
+
+impl Engine {
+    pub fn new(rt: Runtime, weights: Weights, cfg: ServeConfig) -> Result<Engine> {
+        weights
+            .validate(&rt.meta().spec)
+            .map_err(|e| anyhow::anyhow!("weights do not match manifest: {e}"))?;
+        let lits = WeightBuffers {
+            table: rt.upload_matrix(&weights.table)?,
+            layers: weights
+                .layers
+                .iter()
+                .map(|l| -> Result<LayerBuffers> {
+                    Ok(LayerBuffers {
+                        g: rt.upload_f32(&l.g, &[l.g.len()])?,
+                        wq: rt.upload_matrix(&l.wq)?,
+                        wk: rt.upload_matrix(&l.wk)?,
+                        wv: rt.upload_matrix(&l.wv)?,
+                        wo: rt.upload_matrix(&l.wo)?,
+                        g2: rt.upload_f32(&l.g2, &[l.g2.len()])?,
+                        w1: rt.upload_matrix(&l.w1)?,
+                        w3: rt.upload_matrix(&l.w3)?,
+                        w2: rt.upload_matrix(&l.w2)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            gf: rt.upload_f32(&weights.gf, &[weights.gf.len()])?,
+            wu: rt.upload_matrix(&weights.wu)?,
+        };
+        Ok(Engine { rt, weights, cfg, lits })
+    }
+
+    /// Load an engine from a config: runtime from `artifacts_dir`, weights
+    /// by preset convention (induction construction or seeded random).
+    pub fn from_config(cfg: ServeConfig) -> Result<Engine> {
+        let rt = Runtime::load(&cfg.artifacts_dir, &cfg.model)
+            .with_context(|| format!("loading preset {}", cfg.model))?;
+        let spec = rt.meta().spec.clone();
+        let weights = if crate::model::induction::is_induction(&spec) {
+            crate::model::induction::build(&spec)
+        } else {
+            Weights::random(&spec, cfg.seed)
+        };
+        Engine::new(rt, weights, cfg)
+    }
+
+    pub fn spec(&self) -> &crate::runtime::manifest::SpecMeta {
+        &self.rt.meta().spec
+    }
+
+    fn scale(&self) -> f32 {
+        1.0 / (self.spec().head_dim as f32).sqrt()
+    }
+
+    /// Run the prompt through the model (chunked prefill), build host
+    /// retrievers, and return a ready-to-decode session.
+    pub fn prefill(&self, tokens: &[u32]) -> Result<Session> {
+        let spec = self.spec().clone();
+        let pattern = self.cfg.pattern;
+        let n = tokens.len();
+        anyhow::ensure!(n > 0, "empty prompt");
+
+        let mut caches: Vec<Vec<TieredKvCache>> = (0..spec.layers)
+            .map(|_| (0..spec.kv_heads).map(|_| TieredKvCache::new(spec.head_dim, pattern)).collect())
+            .collect();
+        let mut q_history: Vec<Vec<Matrix>> = (0..spec.layers)
+            .map(|_| (0..spec.q_heads).map(|_| Matrix::zeros(0, spec.head_dim)).collect())
+            .collect();
+
+        let mut x_last = vec![0.0f32; spec.d_model];
+        let mut start = 0usize;
+        while start < n {
+            let take = (n - start).min(PREFILL_CHUNK);
+            // Pad ids and positions to the chunk width.
+            let mut ids = vec![0i32; PREFILL_CHUNK];
+            let mut pos = vec![0.0f32; PREFILL_CHUNK * spec.d_model];
+            for i in 0..take {
+                ids[i] = tokens[start + i] as i32;
+                let code = crate::model::position_code(&spec, start + i);
+                pos[i * spec.d_model..(i + 1) * spec.d_model].copy_from_slice(&code);
+            }
+            let ids_b = self.rt.upload_i32(&ids, &[PREFILL_CHUNK])?;
+            let pos_b = self.rt.upload_f32(&pos, &[PREFILL_CHUNK, spec.d_model])?;
+            let outs = self.rt.exec_b("embed_b256", &[&self.lits.table, &ids_b, &pos_b])?;
+            let mut x = Matrix::from_vec(
+                PREFILL_CHUNK,
+                spec.d_model,
+                literal_to_f32(&outs[0])?,
+            );
+
+            for layer in 0..spec.layers {
+                let ll = &self.lits.layers[layer];
+                let x_b = self.rt.upload_matrix(&x)?;
+                let outs =
+                    self.rt.exec_b("qkv_b256", &[&x_b, &ll.g, &ll.wq, &ll.wk, &ll.wv])?;
+                let q = literal_to_f32(&outs[0])?; // [B, H, dh]
+                let k = literal_to_f32(&outs[1])?; // [B, KV, dh]
+                let v = literal_to_f32(&outs[2])?;
+                let dh = spec.head_dim;
+                // Append K/V for the real tokens of this chunk.
+                for i in 0..take {
+                    for kvh in 0..spec.kv_heads {
+                        let off = (i * spec.kv_heads + kvh) * dh;
+                        caches[layer][kvh].append(&k[off..off + dh], &v[off..off + dh]);
+                    }
+                }
+                for (h, hist) in q_history[layer].iter_mut().enumerate() {
+                    for i in 0..take {
+                        let off = (i * spec.q_heads + h) * dh;
+                        hist.push_row(&q[off..off + dh]);
+                    }
+                }
+                // Exact causal attention for this chunk's queries over the
+                // cache so far (host side, parallel over (query, head)).
+                let attn = self.prefill_attention(
+                    &caches[layer],
+                    &q,
+                    start,
+                    take,
+                    spec.q_heads,
+                    spec.kv_heads,
+                    dh,
+                )?;
+                let x_b = self.rt.upload_matrix(&x)?;
+                let attn_b = self.rt.upload_matrix(&attn)?;
+                let outs = self.rt.exec_b(
+                    "post_b256",
+                    &[&x_b, &attn_b, &ll.wo, &ll.g2, &ll.w1, &ll.w3, &ll.w2],
+                )?;
+                x = Matrix::from_vec(PREFILL_CHUNK, spec.d_model, literal_to_f32(&outs[0])?);
+            }
+            if start + take == n {
+                x_last.copy_from_slice(x.row(take - 1));
+            }
+            start += take;
+        }
+
+        for layer in caches.iter_mut() {
+            for cache in layer.iter_mut() {
+                cache.seal_prefill();
+            }
+        }
+
+        let retrievers = self.build_retrievers(&caches, &q_history)?;
+        Ok(Session {
+            caches,
+            q_history,
+            retrievers,
+            x_last,
+            len: n,
+            scanned_total: 0,
+            retrievals: 0,
+        })
+    }
+
+    /// Exact causal attention for a prefill chunk (host side).
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_attention(
+        &self,
+        caches: &[TieredKvCache],
+        q: &[f32],
+        chunk_start: usize,
+        take: usize,
+        q_heads: usize,
+        kv_heads: usize,
+        dh: usize,
+    ) -> Result<Matrix> {
+        let scale = self.scale();
+        let group = q_heads / kv_heads;
+        // Parallel over (local query index, head) pairs.
+        let work: Vec<(usize, usize)> =
+            (0..take).flat_map(|i| (0..q_heads).map(move |h| (i, h))).collect();
+        let outs: Vec<Vec<f32>> = parallel::par_map(&work, |&(i, h)| {
+            let kvh = h / group;
+            let cache = &caches[kvh];
+            let qoff = (i * q_heads + h) * dh;
+            let qv = &q[qoff..qoff + dh];
+            let upto = (chunk_start + i + 1) as u32;
+            let ids: Vec<u32> = (0..upto).collect();
+            attend_subset(qv, cache.keys(), cache.values(), &ids, scale).o
+        });
+        let mut attn = Matrix::zeros(PREFILL_CHUNK, q_heads * dh);
+        for (w, o) in work.iter().zip(outs.iter()) {
+            let (i, h) = *w;
+            attn.row_mut(i)[h * dh..(h + 1) * dh].copy_from_slice(o);
+        }
+        Ok(attn)
+    }
+
+    /// Build host retrievers for every (layer, q_head).
+    fn build_retrievers(
+        &self,
+        caches: &[Vec<TieredKvCache>],
+        q_history: &[Vec<Matrix>],
+    ) -> Result<Vec<Vec<Arc<dyn HostRetriever>>>> {
+        self.build_retrievers_with(caches, q_history, self.cfg.method)
+    }
+
+    /// Build host retrievers for an explicit method.
+    fn build_retrievers_with(
+        &self,
+        caches: &[Vec<TieredKvCache>],
+        q_history: &[Vec<Matrix>],
+        method: Method,
+    ) -> Result<Vec<Vec<Arc<dyn HostRetriever>>>> {
+        let spec = self.spec();
+        let group = spec.group_size();
+        // Copy the bits the parallel closure needs so it does not capture
+        // `self` (Engine holds non-Sync PJRT handles).
+        let scale = 1.0 / (spec.head_dim as f32).sqrt();
+        let cfg = self.cfg.retrieval;
+        let seed = self.cfg.seed;
+        let mut retrievers = Vec::with_capacity(spec.layers);
+        for layer in 0..spec.layers {
+            // Share one dense host-key copy per kv head (Appendix C).
+            let shared: Vec<(Arc<Matrix>, Arc<Vec<u32>>)> = (0..spec.kv_heads)
+                .map(|kvh| {
+                    let cache = &caches[layer][kvh];
+                    (Arc::new(cache.indexed_keys_matrix()), Arc::new(cache.indexed_ids()))
+                })
+                .collect();
+            // Per-query-head retrievers build in parallel (index
+            // construction is the expensive part).
+            let heads: Vec<usize> = (0..spec.q_heads).collect();
+            // Cap the training-query set: a strided subsample of the
+            // prefill queries is statistically equivalent for index
+            // construction and bounds the exact-KNN phase (§3.2 computes
+            // it on the GPU; here it is host flops).
+            const MAX_TRAIN_Q: usize = 512;
+            let subsampled: Vec<Matrix> = q_history[layer]
+                .iter()
+                .map(|qh| {
+                    if qh.rows() <= MAX_TRAIN_Q {
+                        qh.clone()
+                    } else {
+                        let step = qh.rows() / MAX_TRAIN_Q;
+                        let rows: Vec<usize> =
+                            (0..MAX_TRAIN_Q).map(|i| i * step).collect();
+                        Matrix::from_fn(rows.len(), qh.cols(), |r, c| qh[(rows[r], c)])
+                    }
+                })
+                .collect();
+            let built: Vec<Arc<dyn HostRetriever>> = parallel::par_map(&heads, |&h| {
+                let kvh = h / group;
+                let (keys, ids) = &shared[kvh];
+                if keys.rows() == 0 {
+                    // Prompt fits entirely in the device static pattern:
+                    // nothing is offloaded, nothing to index.
+                    return Arc::from(build_retriever(Method::StreamingLlm, RetrieverInputs {
+                        host_keys: keys.clone(),
+                        host_ids: ids.clone(),
+                        prefill_queries: &subsampled[h],
+                        scale,
+                        cfg: &cfg,
+                        seed,
+                    })) as Arc<dyn HostRetriever>;
+                }
+                let inp = RetrieverInputs {
+                    host_keys: keys.clone(),
+                    host_ids: ids.clone(),
+                    prefill_queries: &subsampled[h],
+                    scale,
+                    cfg: &cfg,
+                    seed: seed ^ ((layer * 131 + h) as u64),
+                };
+                Arc::from(build_retriever(method, inp))
+            });
+            retrievers.push(built);
+        }
+        Ok(retrievers)
+    }
+
+    /// One decode step (Algorithm 1). Feeds `token`, returns the next.
+    pub fn decode_step(&self, sess: &mut Session, token: u32) -> Result<DecodeOutput> {
+        let spec = self.spec().clone();
+        let mut bd = PhaseBreakdown::default();
+        let scale = self.scale();
+        let group = spec.group_size();
+        let dh = spec.head_dim;
+
+        // Embed.
+        let t = PhaseTimer::start();
+        let pos = crate::model::position_code(&spec, sess.len);
+        let id_b = self.rt.upload_i32(&[token as i32], &[1])?;
+        let pos_b = self.rt.upload_f32(&pos, &[1, spec.d_model])?;
+        let outs = self.rt.exec_b("embed_b1", &[&self.lits.table, &id_b, &pos_b])?;
+        let mut x = literal_to_f32(&outs[0])?;
+        t.stop_into(&mut bd.other);
+
+        let retrieval_k = &self.cfg.retrieval;
+        // Previous layer's query vector (for InfiniGen-style speculation).
+        let mut prev_q: Option<Vec<f32>> = None;
+        for layer in 0..spec.layers {
+            let ll = &self.lits.layers[layer];
+            // QKV projection (device).
+            let t = PhaseTimer::start();
+            let x_b = self.rt.upload_f32(&x, &[1, spec.d_model])?;
+            let outs = self.rt.exec_b("qkv_b1", &[&x_b, &ll.g, &ll.wq, &ll.wk, &ll.wv])?;
+            let q = literal_to_f32(&outs[0])?; // [H, dh] (B=1 flattened)
+            let k = literal_to_f32(&outs[1])?;
+            let v = literal_to_f32(&outs[2])?;
+            for kvh in 0..spec.kv_heads {
+                let off = kvh * dh;
+                sess.caches[layer][kvh].append(&k[off..off + dh], &v[off..off + dh]);
+            }
+            t.stop_into(&mut bd.other);
+
+            // Device partial attention over W (static pattern).
+            let t = PhaseTimer::start();
+            let (o_dev, lse_dev) = self.device_partial(&sess.caches[layer], &q, &spec)?;
+            t.stop_into(&mut bd.attention);
+
+            // Host retrieval (the Table 5 "vector search" phase)...
+            let t = PhaseTimer::start();
+            let budget = retrieval_k.budget.k_for_layer(layer, spec.layers);
+            let heads: Vec<usize> = (0..spec.q_heads).collect();
+            let retrieved: Vec<crate::baselines::Retrieval> = parallel::par_map(&heads, |&h| {
+                let retr = &sess.retrievers[layer][h];
+                let spec_q = if retr.speculates_from_previous_layer() {
+                    prev_q.as_deref().unwrap_or(&q)
+                } else {
+                    &q
+                };
+                retr.retrieve(&spec_q[h * dh..(h + 1) * dh], budget)
+            });
+            for r in &retrieved {
+                sess.scanned_total += r.scanned as u64;
+                sess.retrievals += 1;
+            }
+            t.stop_into(&mut bd.search);
+
+            // ...then host partial attention + combine.
+            let t = PhaseTimer::start();
+            let mut attn = vec![0.0f32; spec.q_heads * dh];
+            let host_parts: Vec<PartialAttention> = parallel::par_map(&heads, |&h| {
+                let kvh = h / group;
+                let cache = &sess.caches[layer][kvh];
+                let qv = &q[h * dh..(h + 1) * dh];
+                let mut ids = retrieved[h].ids.clone();
+                // The overflow buffer (window slid past it, unindexed) is
+                // always attended exactly — it is tiny.
+                ids.extend(cache.overflow_ids());
+                attend_subset(qv, cache.keys(), cache.values(), &ids, scale)
+            });
+            for h in 0..spec.q_heads {
+                let dev = PartialAttention {
+                    o: o_dev[h * dh..(h + 1) * dh].to_vec(),
+                    lse: lse_dev[h],
+                };
+                let merged = combine(&[dev, host_parts[h].clone()]);
+                attn[h * dh..(h + 1) * dh].copy_from_slice(&merged.o);
+            }
+            t.stop_into(&mut bd.attention);
+
+            // Output projection + FFN (device).
+            let t = PhaseTimer::start();
+            let x_b = self.rt.upload_f32(&x, &[1, spec.d_model])?;
+            let attn_b = self.rt.upload_f32(&attn, &[1, spec.q_heads * dh])?;
+            let outs = self.rt.exec_b(
+                "post_b1",
+                &[&x_b, &attn_b, &ll.wo, &ll.g2, &ll.w1, &ll.w3, &ll.w2],
+            )?;
+            x = literal_to_f32(&outs[0])?;
+            t.stop_into(&mut bd.other);
+            prev_q = Some(q);
+        }
+
+        // LM head + greedy sampling.
+        let t = PhaseTimer::start();
+        let x_b = self.rt.upload_f32(&x, &[1, spec.d_model])?;
+        let outs = self.rt.exec_b("lm_head_b1", &[&x_b, &self.lits.gf, &self.lits.wu])?;
+        let logits = literal_to_f32(&outs[0])?;
+        let next = crate::tensor::argtopk(&logits, 1)[0] as u32;
+        sess.x_last = x;
+        sess.len += 1;
+        t.stop_into(&mut bd.other);
+
+        Ok(DecodeOutput { token: next, breakdown: bd })
+    }
+
+    /// Device-side partial attention over the static set via the
+    /// `static_attn` artifact (Pallas flash_decode).
+    fn device_partial(
+        &self,
+        caches: &[TieredKvCache],
+        q: &[f32],
+        spec: &crate::runtime::manifest::SpecMeta,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let s = spec.static_len;
+        let dh = spec.head_dim;
+        let dev_ids = caches[0].device_ids();
+        let valid = dev_ids.len().min(s);
+        let mut keys = vec![0.0f32; s * spec.kv_heads * dh];
+        let mut values = vec![0.0f32; s * spec.kv_heads * dh];
+        let mut mask = vec![-1.0e30f32; s];
+        for (slot, &id) in dev_ids.iter().take(valid).enumerate() {
+            mask[slot] = 0.0;
+            for kvh in 0..spec.kv_heads {
+                let off = (slot * spec.kv_heads + kvh) * dh;
+                keys[off..off + dh].copy_from_slice(caches[kvh].key(id as usize));
+                values[off..off + dh].copy_from_slice(caches[kvh].value(id as usize));
+            }
+        }
+        let q_b = self.rt.upload_f32(q, &[spec.q_heads, dh])?;
+        let k_b = self.rt.upload_f32(&keys, &[s, spec.kv_heads, dh])?;
+        let v_b = self.rt.upload_f32(&values, &[s, spec.kv_heads, dh])?;
+        let m_b = self.rt.upload_f32(&mask, &[s])?;
+        let outs = self.rt.exec_b("static_attn", &[&q_b, &k_b, &v_b, &m_b])?;
+        Ok((literal_to_f32(&outs[0])?, literal_to_f32(&outs[1])?))
+    }
+
+    /// First generated token: lm_head over the prefill's last hidden state.
+    pub fn first_token(&self, sess: &Session) -> Result<u32> {
+        let spec = self.spec();
+        let x_b = self.rt.upload_f32(&sess.x_last, &[1, spec.d_model])?;
+        let outs = self.rt.exec_b("lm_head_b1", &[&x_b, &self.lits.gf, &self.lits.wu])?;
+        let logits = literal_to_f32(&outs[0])?;
+        Ok(crate::tensor::argtopk(&logits, 1)[0] as u32)
+    }
+
+    /// Generate `max_tokens` greedily from a freshly prefilled session:
+    /// the first token comes from the prompt's last hidden state, each
+    /// subsequent one from a decode step. Returns the tokens and the
+    /// summed decode phase breakdown.
+    pub fn generate(
+        &self,
+        sess: &mut Session,
+        max_tokens: usize,
+    ) -> Result<(Vec<u32>, PhaseBreakdown)> {
+        let mut tokens = Vec::with_capacity(max_tokens);
+        let mut total = PhaseBreakdown::default();
+        let mut cur = self.first_token(sess)?;
+        tokens.push(cur);
+        while tokens.len() < max_tokens {
+            let out = self.decode_step(sess, cur)?;
+            total.add(&out.breakdown);
+            tokens.push(out.token);
+            cur = out.token;
+        }
+        Ok((tokens, total))
+    }
+}
+
+impl Session {
+    /// Mean scanned keys per retrieval (Fig 6 x-axis).
+    pub fn mean_scanned(&self) -> f64 {
+        if self.retrievals == 0 {
+            0.0
+        } else {
+            self.scanned_total as f64 / self.retrievals as f64
+        }
+    }
+
+    /// Clone the prefill state (caches, query history, hidden) *without*
+    /// retrievers — used to evaluate many methods against one prefill
+    /// (prefill is method-independent: it is always exact attention).
+    pub fn fork_state(&self) -> Session {
+        Session {
+            caches: self.caches.clone(),
+            q_history: self.q_history.clone(),
+            retrievers: Vec::new(),
+            x_last: self.x_last.clone(),
+            len: self.len,
+            scanned_total: 0,
+            retrievals: 0,
+        }
+    }
+}
+
+impl Engine {
+    /// Build a session for `method` from an existing prefill state —
+    /// re-runs only the retriever construction (index build), sharing the
+    /// expensive prefill across methods in the accuracy experiments.
+    pub fn session_for_method(&self, base: &Session, method: Method) -> Result<Session> {
+        let mut sess = base.fork_state();
+        let saved = self.cfg.method;
+        // build_retrievers reads cfg.method via a local copy; construct a
+        // temporary engine view by building with an explicit method.
+        sess.retrievers = self.build_retrievers_with(&sess.caches, &sess.q_history, method)?;
+        let _ = saved;
+        Ok(sess)
+    }
+
+    /// Construct a decode-ready session directly from synthetic per-head
+    /// geometry (no prefill): used by the latency experiments at context
+    /// lengths where running a prompt through the model is wasteful.
+    /// `heads[layer][kv_head]` provides keys/values; queries train the
+    /// index for every query head of the group.
+    pub fn synthetic_session(
+        &self,
+        heads: Vec<Vec<crate::workload::geometry::HeadGeometry>>,
+        method: Method,
+    ) -> Result<Session> {
+        let spec = self.spec().clone();
+        anyhow::ensure!(heads.len() == spec.layers, "need one geometry per layer");
+        let mut caches: Vec<Vec<TieredKvCache>> = Vec::with_capacity(spec.layers);
+        let mut q_history: Vec<Vec<Matrix>> = Vec::with_capacity(spec.layers);
+        let mut len = 0;
+        for layer_geoms in &heads {
+            anyhow::ensure!(layer_geoms.len() == spec.kv_heads, "need one geometry per kv head");
+            let mut layer_caches = Vec::with_capacity(spec.kv_heads);
+            let mut layer_hist = Vec::with_capacity(spec.q_heads);
+            for (kvh, g) in layer_geoms.iter().enumerate() {
+                let mut cache = TieredKvCache::new(spec.head_dim, self.cfg.pattern);
+                cache.load_prefill(g.keys.clone(), g.values.clone());
+                len = cache.len();
+                layer_caches.push(cache);
+                // Every query head of this group trains on the same query
+                // stream (per-head streams differ across kv heads only).
+                for _ in 0..spec.group_size() {
+                    layer_hist.push(g.queries.clone());
+                }
+                let _ = kvh;
+            }
+            caches.push(layer_caches);
+            q_history.push(layer_hist);
+        }
+        let retrievers = self.build_retrievers_with(&caches, &q_history, method)?;
+        Ok(Session {
+            caches,
+            q_history,
+            retrievers,
+            x_last: vec![0.0; self.spec().d_model],
+            len,
+            scanned_total: 0,
+            retrievals: 0,
+        })
+    }
+}

@@ -1,0 +1,89 @@
+//! Model layer: weight construction and the decode/prefill engine.
+//!
+//! Weights are *runtime inputs* to the AOT artifacts (the compute graph is
+//! weight-agnostic), so this module owns them entirely on the Rust side:
+//!
+//! * [`weights`] — weight containers + random initialisation for the
+//!   geometry-scaled presets (`llama3-mini`, `yi6-mini`, `yi9-mini`);
+//! * [`induction`] — the hand-constructed 2-layer induction-head model
+//!   (preset `induction-mini`) that provably solves associative recall,
+//!   turning retrieval recall into measurable task accuracy;
+//! * [`engine`] — the serving engine: chunked prefill, index construction,
+//!   and the Algorithm-1 decode step (device W-attention via the Pallas
+//!   artifact, host Ω-attention via the retrieval policy, γ-combine).
+
+pub mod engine;
+pub mod induction;
+pub mod weights;
+
+pub use engine::{DecodeOutput, Engine, Session};
+pub use weights::{LayerWeights, Weights};
+
+use crate::runtime::manifest::SpecMeta;
+
+/// Positional code for absolute position `pos`, matching the model preset.
+///
+/// * Induction preset: sinusoidal planes in the last `P` dims (the
+///   construction's layer-1 shift operator is a rotation on these planes).
+/// * Random presets: zeros (the geometry experiments don't need positions,
+///   and content-based attention keeps Q/K statistics stationary).
+pub fn position_code(spec: &SpecMeta, pos: usize) -> Vec<f32> {
+    let d = spec.d_model;
+    let mut code = vec![0.0f32; d];
+    if !induction::is_induction(spec) {
+        return code;
+    }
+    let planes = induction::POS_PLANES;
+    let base = d - 2 * planes; // position planes occupy the last 2*planes dims
+    let amp = 1.0 / (planes as f32).sqrt();
+    for m in 0..planes {
+        let theta = induction::plane_freq(m);
+        let angle = pos as f32 * theta;
+        code[base + 2 * m] = angle.cos() * amp;
+        code[base + 2 * m + 1] = angle.sin() * amp;
+    }
+    code
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn induction_spec() -> SpecMeta {
+        SpecMeta {
+            layers: 2,
+            d_model: 192,
+            q_heads: 1,
+            kv_heads: 1,
+            head_dim: 192,
+            vocab: 4096,
+            norm: false,
+            ffn_dim: 8,
+            static_len: 640,
+        }
+    }
+
+    #[test]
+    fn position_codes_unit_norm() {
+        let spec = induction_spec();
+        for pos in [0usize, 1, 100, 10_000] {
+            let c = position_code(&spec, pos);
+            let n = crate::tensor::norm(&c);
+            assert!((n - 1.0).abs() < 1e-5, "pos {pos} norm {n}");
+        }
+    }
+
+    #[test]
+    fn position_codes_peak_only_at_self() {
+        // The induction code uses *high* random frequencies: every shifted
+        // position must be well-separated from the peak (DESIGN.md:
+        // max off-peak rho ≈ 0.56), including the adjacent one.
+        let spec = induction_spec();
+        let a = position_code(&spec, 5000);
+        assert!((crate::tensor::dot(&a, &a) - 1.0).abs() < 1e-5);
+        for other in [4999usize, 5001, 5002, 6000, 9000, 100_000] {
+            let sim = crate::tensor::dot(&a, &position_code(&spec, other));
+            assert!(sim < 0.7, "pos {other} too similar: {sim}");
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Weight containers + random initialisation.
+//!
+//! Shapes mirror `python/compile/model.py` exactly (asserted against the
+//! manifest in `Weights::validate`). Random presets use scaled-gaussian
+//! init — they are never expected to produce meaningful text, only the
+//! *geometry* of real attention (distinct Q/K projections of a shared
+//! hidden state ⇒ the paper's OOD phenomenon).
+
+use crate::runtime::manifest::SpecMeta;
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// One transformer layer's weights.
+#[derive(Clone)]
+pub struct LayerWeights {
+    /// Pre-attention RMSNorm gain `[d]`.
+    pub g: Vec<f32>,
+    /// Query projection `[d, H*dh]`.
+    pub wq: Matrix,
+    /// Key projection `[d, KV*dh]`.
+    pub wk: Matrix,
+    /// Value projection `[d, KV*dh]`.
+    pub wv: Matrix,
+    /// Output projection `[H*dh, d]`.
+    pub wo: Matrix,
+    /// Pre-FFN RMSNorm gain `[d]`.
+    pub g2: Vec<f32>,
+    /// SwiGLU gate `[d, f]`.
+    pub w1: Matrix,
+    /// SwiGLU linear `[d, f]`.
+    pub w3: Matrix,
+    /// SwiGLU down `[f, d]`.
+    pub w2: Matrix,
+}
+
+/// Full model weights.
+#[derive(Clone)]
+pub struct Weights {
+    /// Embedding table `[vocab, d]`.
+    pub table: Matrix,
+    pub layers: Vec<LayerWeights>,
+    /// Final norm gain `[d]`.
+    pub gf: Vec<f32>,
+    /// Unembedding `[d, vocab]`.
+    pub wu: Matrix,
+}
+
+impl Weights {
+    /// Scaled-gaussian random weights for a geometry preset.
+    pub fn random(spec: &SpecMeta, seed: u64) -> Weights {
+        let mut rng = Rng::seed_from(seed);
+        let d = spec.d_model;
+        let (h, kv, dh, f) = (spec.q_heads, spec.kv_heads, spec.head_dim, spec.ffn_dim);
+        let mut mat = |rows: usize, cols: usize, scale: f32| {
+            let mut r = rng.fork(rows as u64 * 31 + cols as u64);
+            Matrix::from_fn(rows, cols, |_, _| r.normal() * scale)
+        };
+        let proj = 1.0 / (d as f32).sqrt();
+        let layers = (0..spec.layers)
+            .map(|_| LayerWeights {
+                g: vec![1.0; d],
+                wq: mat(d, h * dh, proj),
+                wk: mat(d, kv * dh, proj),
+                wv: mat(d, kv * dh, proj),
+                wo: mat(h * dh, d, 1.0 / ((h * dh) as f32).sqrt()),
+                g2: vec![1.0; d],
+                w1: mat(d, f, proj),
+                w3: mat(d, f, proj),
+                w2: mat(f, d, 1.0 / (f as f32).sqrt()),
+            })
+            .collect();
+        Weights {
+            table: mat(spec.vocab, d, 1.0),
+            layers,
+            gf: vec![1.0; d],
+            wu: mat(d, spec.vocab, proj),
+        }
+    }
+
+    /// All-zero weights with the right shapes (construction scaffold).
+    pub fn zeros(spec: &SpecMeta) -> Weights {
+        let d = spec.d_model;
+        let (h, kv, dh, f) = (spec.q_heads, spec.kv_heads, spec.head_dim, spec.ffn_dim);
+        let layers = (0..spec.layers)
+            .map(|_| LayerWeights {
+                g: vec![1.0; d],
+                wq: Matrix::zeros(d, h * dh),
+                wk: Matrix::zeros(d, kv * dh),
+                wv: Matrix::zeros(d, kv * dh),
+                wo: Matrix::zeros(h * dh, d),
+                g2: vec![1.0; d],
+                w1: Matrix::zeros(d, f),
+                w3: Matrix::zeros(d, f),
+                w2: Matrix::zeros(f, d),
+            })
+            .collect();
+        Weights {
+            table: Matrix::zeros(spec.vocab, d),
+            layers,
+            gf: vec![1.0; d],
+            wu: Matrix::zeros(d, spec.vocab),
+        }
+    }
+
+    /// Check every tensor against the manifest spec; returns a description of the
+    /// first mismatch.
+    pub fn validate(&self, spec: &SpecMeta) -> Result<(), String> {
+        let d = spec.d_model;
+        let (h, kv, dh, f) = (spec.q_heads, spec.kv_heads, spec.head_dim, spec.ffn_dim);
+        let check = |name: &str, m: &Matrix, rows: usize, cols: usize| {
+            if m.rows() != rows || m.cols() != cols {
+                Err(format!("{name}: got {}x{}, want {rows}x{cols}", m.rows(), m.cols()))
+            } else {
+                Ok(())
+            }
+        };
+        check("table", &self.table, spec.vocab, d)?;
+        check("wu", &self.wu, d, spec.vocab)?;
+        if self.layers.len() != spec.layers {
+            return Err(format!("layers: got {}, want {}", self.layers.len(), spec.layers));
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            check(&format!("l{i}.wq"), &l.wq, d, h * dh)?;
+            check(&format!("l{i}.wk"), &l.wk, d, kv * dh)?;
+            check(&format!("l{i}.wv"), &l.wv, d, kv * dh)?;
+            check(&format!("l{i}.wo"), &l.wo, h * dh, d)?;
+            check(&format!("l{i}.w1"), &l.w1, d, f)?;
+            check(&format!("l{i}.w3"), &l.w3, d, f)?;
+            check(&format!("l{i}.w2"), &l.w2, f, d)?;
+            if l.g.len() != d || l.g2.len() != d {
+                return Err(format!("l{i}: norm gain length"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        let mut n = self.table.as_slice().len() + self.wu.as_slice().len() + self.gf.len();
+        for l in &self.layers {
+            n += l.wq.as_slice().len()
+                + l.wk.as_slice().len()
+                + l.wv.as_slice().len()
+                + l.wo.as_slice().len()
+                + l.w1.as_slice().len()
+                + l.w3.as_slice().len()
+                + l.w2.as_slice().len()
+                + l.g.len()
+                + l.g2.len();
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SpecMeta {
+        SpecMeta {
+            layers: 2,
+            d_model: 32,
+            q_heads: 4,
+            kv_heads: 2,
+            head_dim: 8,
+            vocab: 64,
+            norm: true,
+            ffn_dim: 48,
+            static_len: 128,
+        }
+    }
+
+    #[test]
+    fn random_weights_validate() {
+        let s = spec();
+        let w = Weights::random(&s, 7);
+        assert!(w.validate(&s).is_ok());
+    }
+
+    #[test]
+    fn zeros_validate() {
+        let s = spec();
+        assert!(Weights::zeros(&s).validate(&s).is_ok());
+    }
+
+    #[test]
+    fn validate_catches_wrong_shape() {
+        let s = spec();
+        let mut w = Weights::random(&s, 7);
+        w.layers[1].wq = Matrix::zeros(3, 3);
+        assert!(w.validate(&s).unwrap_err().contains("l1.wq"));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let s = spec();
+        let a = Weights::random(&s, 9);
+        let b = Weights::random(&s, 9);
+        assert_eq!(a.layers[0].wq, b.layers[0].wq);
+        let c = Weights::random(&s, 10);
+        assert_ne!(a.layers[0].wq, c.layers[0].wq);
+    }
+
+    #[test]
+    fn param_count_positive() {
+        let s = spec();
+        let w = Weights::random(&s, 1);
+        assert!(w.param_count() > 10_000);
+    }
+}

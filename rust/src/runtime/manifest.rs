@@ -1,0 +1,184 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Shapes/dtypes per artifact plus the model geometry the
+//! weights must match.
+
+use crate::util::json::{self, Value};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One tensor's shape + dtype.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let shape = v
+            .get("shape")
+            .and_then(Value::as_arr)
+            .context("tensor spec missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("non-numeric dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { shape, dtype: v.req_str("dtype")?.to_string() })
+    }
+}
+
+/// One AOT-lowered entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub outs: Vec<TensorSpec>,
+}
+
+/// Model geometry as recorded by aot.py (mirrors python ModelSpec).
+#[derive(Clone, Debug)]
+pub struct SpecMeta {
+    pub layers: usize,
+    pub d_model: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub norm: bool,
+    pub ffn_dim: usize,
+    pub static_len: usize,
+}
+
+impl SpecMeta {
+    pub fn group_size(&self) -> usize {
+        self.q_heads / self.kv_heads
+    }
+}
+
+/// One preset: geometry + its artifacts.
+#[derive(Clone, Debug)]
+pub struct PresetMeta {
+    pub spec: SpecMeta,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub presets: BTreeMap<String, PresetMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = json::parse(text)?;
+        let mut presets = BTreeMap::new();
+        let obj = v.get("presets").context("manifest missing presets")?;
+        let Value::Obj(map) = obj else {
+            anyhow::bail!("presets is not an object");
+        };
+        for (name, p) in map {
+            let s = p.get("spec").context("preset missing spec")?;
+            let spec = SpecMeta {
+                layers: s.req_usize("layers")?,
+                d_model: s.req_usize("d_model")?,
+                q_heads: s.req_usize("q_heads")?,
+                kv_heads: s.req_usize("kv_heads")?,
+                head_dim: s.req_usize("head_dim")?,
+                vocab: s.req_usize("vocab")?,
+                norm: s.get("norm").and_then(Value::as_bool).unwrap_or(false),
+                ffn_dim: s.req_usize("ffn_dim")?,
+                static_len: s.req_usize("static_len")?,
+            };
+            let mut artifacts = BTreeMap::new();
+            let arts = p.get("artifacts").context("preset missing artifacts")?;
+            let Value::Obj(amap) = arts else {
+                anyhow::bail!("artifacts is not an object");
+            };
+            for (aname, a) in amap {
+                let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                    a.get(key)
+                        .and_then(Value::as_arr)
+                        .with_context(|| format!("artifact {aname} missing {key}"))?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect()
+                };
+                artifacts.insert(
+                    aname.clone(),
+                    ArtifactMeta {
+                        file: a.req_str("file")?.to_string(),
+                        args: parse_specs("args")?,
+                        outs: parse_specs("outs")?,
+                    },
+                );
+            }
+            presets.insert(name.clone(), PresetMeta { spec, artifacts });
+        }
+        Ok(Manifest { presets })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "presets": {
+        "tiny": {
+          "spec": {"layers": 2, "d_model": 8, "q_heads": 2, "kv_heads": 1,
+                   "head_dim": 4, "vocab": 16, "norm": true, "ffn_dim": 8,
+                   "static_len": 128},
+          "artifacts": {
+            "qkv_b1": {
+              "file": "tiny/qkv_b1.hlo.txt",
+              "args": [{"shape": [1, 8], "dtype": "float32"}],
+              "outs": [{"shape": [1, 2, 4], "dtype": "float32"}],
+              "sha256": "x"
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let p = &m.presets["tiny"];
+        assert_eq!(p.spec.layers, 2);
+        assert_eq!(p.spec.group_size(), 2);
+        assert!(p.spec.norm);
+        let a = &p.artifacts["qkv_b1"];
+        assert_eq!(a.args[0].shape, vec![1, 8]);
+        assert_eq!(a.outs[0].numel(), 8);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"presets": {"x": {}}}"#).is_err());
+        assert!(Manifest::parse(r#"{}"#).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // Integration: if `make artifacts` has run, the real manifest parses.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if std::path::Path::new(path).exists() {
+            let m = Manifest::load(path).unwrap();
+            assert!(m.presets.contains_key("induction-mini"));
+            let p = &m.presets["llama3-mini"];
+            assert_eq!(p.spec.head_dim, 64);
+            assert!(p.artifacts.contains_key("static_attn"));
+        }
+    }
+}

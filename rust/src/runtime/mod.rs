@@ -1,0 +1,187 @@
+//! The PJRT runtime: loads and executes the AOT artifacts.
+//!
+//! `make artifacts` (the only place Python runs) leaves
+//! `artifacts/manifest.json` plus one HLO-text file per entry point. This
+//! module is the bridge the Rust hot path calls into: it parses the
+//! manifest, compiles every artifact once at startup on the PJRT CPU
+//! client, and exposes typed execute helpers.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids cleanly (see aot.py / DESIGN.md).
+
+pub mod manifest;
+
+use crate::tensor::Matrix;
+use anyhow::{Context, Result};
+use manifest::{ArtifactMeta, Manifest, PresetMeta};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded model preset: compiled executables + metadata.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    preset: String,
+    meta: PresetMeta,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative device-execution count (perf diagnostics).
+    pub exec_count: std::sync::atomic::AtomicU64,
+}
+
+impl Runtime {
+    /// Load one preset from the artifacts directory, compiling every
+    /// artifact on the PJRT CPU client ("the device").
+    pub fn load(artifacts_dir: impl AsRef<Path>, preset: &str) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let meta = manifest
+            .presets
+            .get(preset)
+            .with_context(|| format!("preset `{preset}` not in manifest"))?
+            .clone();
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut execs = HashMap::new();
+        for (name, art) in &meta.artifacts {
+            let path: PathBuf = dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+            execs.insert(name.clone(), exe);
+        }
+        Ok(Runtime {
+            client,
+            preset: preset.to_string(),
+            meta,
+            execs,
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    pub fn preset(&self) -> &str {
+        &self.preset
+    }
+
+    pub fn meta(&self) -> &PresetMeta {
+        &self.meta
+    }
+
+    pub fn artifact_meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.meta.artifacts.get(name)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute an artifact. Inputs must match the manifest arg shapes
+    /// (count checked in debug builds); outputs are the flattened tuple.
+    pub fn exec(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .execs
+            .get(name)
+            .with_context(|| format!("unknown artifact `{}/{name}`", self.preset))?;
+        debug_assert_eq!(
+            inputs.len(),
+            self.meta.artifacts[name].args.len(),
+            "arg count mismatch for {name}"
+        );
+        self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {name} result: {e}"))
+    }
+
+    /// Execute an artifact with pre-uploaded device buffers. This is the
+    /// hot-path variant: weights are uploaded once at engine construction
+    /// (see EXPERIMENTS.md §Perf — the literal path re-transferred ~30MB
+    /// of weights per decode step).
+    pub fn exec_b(&self, name: &str, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .execs
+            .get(name)
+            .with_context(|| format!("unknown artifact `{}/{name}`", self.preset))?;
+        self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {name} result: {e}"))
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload f32 {:?}: {e}", dims))
+    }
+
+    /// Upload an i32 tensor to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload i32 {:?}: {e}", dims))
+    }
+
+    /// Upload a matrix to the device.
+    pub fn upload_matrix(&self, m: &crate::tensor::Matrix) -> Result<xla::PjRtBuffer> {
+        self.upload_f32(m.as_slice(), &[m.rows(), m.cols()])
+    }
+}
+
+/// Build an f32 literal from a row-major matrix.
+pub fn literal_from_matrix(m: &Matrix) -> Result<xla::Literal> {
+    literal_f32(m.as_slice(), &[m.rows() as i64, m.cols() as i64])
+}
+
+/// Build an f32 literal of arbitrary shape from a flat buffer.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {:?} != len {}", dims, data.len());
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape literal: {e}"))
+}
+
+/// Build an i32 literal (token ids).
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {:?} != len {}", dims, data.len());
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape literal: {e}"))
+}
+
+/// Read an f32 literal back into a flat vec.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to_vec: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = literal_from_matrix(&m).unwrap();
+        assert_eq!(literal_to_f32(&lit).unwrap(), m.as_slice());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_i32(&[1, 2, 3], &[2]).is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! Network front-end: a json-lines TCP server over the router.
+//!
+//! Wire protocol (one JSON object per line):
+//!
+//! ```text
+//! → {"prompt": [1,2,3], "max_tokens": 8}
+//! ← {"event": "token", "id": 1, "token": 42}          (streamed)
+//! ← {"event": "done", "id": 1, "tokens": [...], "ttft_s": ..., "tpot_s": ...}
+//! ← {"event": "error", "id": 1, "message": "..."}
+//! ```
+//!
+//! Implemented on std::net + threads (the vendored crate set has no async
+//! runtime); one handler thread per connection, which is plenty for the
+//! single-digit-replica deployments this repo targets.
+
+use crate::coordinator::{router::Router, Event, Request};
+use crate::util::json::{self, Value};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// A running server (drops = stops accepting; existing connections drain).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    pub fn start(router: Arc<Router>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).context("bind")?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop_c = stop.clone();
+        let handle = std::thread::spawn(move || {
+            loop {
+                if stop_c.load(std::sync::atomic::Ordering::Relaxed) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let router = router.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &router);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    Err(_) => return,
+                }
+            }
+        });
+        Ok(Server { addr: local, stop, handle: Some(handle) })
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
+    let peer = stream.try_clone()?;
+    let mut reader = BufReader::new(peer);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match parse_request(trimmed, router.next_request_id()) {
+            Ok(req) => {
+                let id = req.id;
+                let events = router.submit(req);
+                stream_events(&mut out, id, events)?;
+            }
+            Err(e) => {
+                let mut o = Value::obj();
+                o.set("event", "error").set("id", 0u64).set("message", e.to_string());
+                writeln!(out, "{}", o.to_string())?;
+            }
+        }
+    }
+}
+
+fn parse_request(line: &str, id: u64) -> Result<Request> {
+    let v = json::parse(line)?;
+    let prompt = v
+        .get("prompt")
+        .and_then(Value::as_arr)
+        .context("missing prompt array")?
+        .iter()
+        .map(|t| t.as_usize().map(|x| x as u32).context("non-numeric token"))
+        .collect::<Result<Vec<u32>>>()?;
+    let max_tokens = v.get("max_tokens").and_then(Value::as_usize).unwrap_or(16);
+    Ok(Request { id, prompt, max_tokens })
+}
+
+fn stream_events(
+    out: &mut TcpStream,
+    id: u64,
+    events: std::sync::mpsc::Receiver<Event>,
+) -> Result<()> {
+    let mut tokens: Vec<u32> = Vec::new();
+    loop {
+        match events.recv() {
+            Ok(Event::Token(_, t)) => {
+                tokens.push(t);
+                let mut o = Value::obj();
+                o.set("event", "token").set("id", id).set("token", t);
+                writeln!(out, "{}", o.to_string())?;
+            }
+            Ok(Event::Done(_, m)) => {
+                let mut o = Value::obj();
+                o.set("event", "done")
+                    .set("id", id)
+                    .set("tokens", tokens.clone())
+                    .set("prefill_s", m.prefill_s)
+                    .set("ttft_s", m.ttft_s)
+                    .set("tpot_s", m.tpot_s)
+                    .set("search_share", m.breakdown.search_share());
+                writeln!(out, "{}", o.to_string())?;
+                return Ok(());
+            }
+            Ok(Event::Failed(_, msg)) => {
+                let mut o = Value::obj();
+                o.set("event", "error").set("id", id).set("message", msg);
+                writeln!(out, "{}", o.to_string())?;
+                return Ok(());
+            }
+            Err(_) => {
+                let mut o = Value::obj();
+                o.set("event", "error").set("id", id).set("message", "replica dropped");
+                writeln!(out, "{}", o.to_string())?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Minimal blocking client for the json-lines protocol (used by examples
+/// and integration tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    /// Send one request and block until done; returns (tokens, done-object).
+    pub fn generate(&mut self, prompt: &[u32], max_tokens: usize) -> Result<(Vec<u32>, Value)> {
+        let mut o = Value::obj();
+        o.set("prompt", prompt.iter().map(|&t| t as usize).collect::<Vec<usize>>())
+            .set("max_tokens", max_tokens);
+        writeln!(self.writer, "{}", o.to_string())?;
+        let mut tokens = Vec::new();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("server closed connection");
+            }
+            let v = json::parse(line.trim())?;
+            match v.req_str("event")? {
+                "token" => tokens.push(v.req_f64("token")? as u32),
+                "done" => return Ok((tokens, v)),
+                "error" => anyhow::bail!("server error: {}", v.req_str("message")?),
+                other => anyhow::bail!("unknown event {other}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_roundtrip() {
+        let r = parse_request(r#"{"prompt": [1, 2, 3], "max_tokens": 4}"#, 7).unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_tokens, 4);
+    }
+
+    #[test]
+    fn parse_request_defaults_max_tokens() {
+        let r = parse_request(r#"{"prompt": [9]}"#, 1).unwrap();
+        assert_eq!(r.max_tokens, 16);
+    }
+
+    #[test]
+    fn parse_request_rejects_garbage() {
+        assert!(parse_request("{}", 1).is_err());
+        assert!(parse_request("not json", 1).is_err());
+    }
+}

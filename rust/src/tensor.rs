@@ -1,0 +1,342 @@
+//! Minimal dense f32 linear algebra for the host-side code paths.
+//!
+//! The coordinator's hot loops (index search, CPU-side sparse attention)
+//! operate on contiguous row-major matrices. We deliberately avoid a BLAS
+//! dependency: the kernels here are small, cache-friendly and fast enough
+//! for head-dim-64 workloads, and keeping them in-crate lets the perf pass
+//! tune them (see EXPERIMENTS.md §Perf).
+
+use std::ops::{Index, IndexMut};
+
+/// Row-major dense matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a flat row-major buffer. Panics if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length {} != {rows}x{cols}", data.len());
+        Matrix { rows, cols, data }
+    }
+
+    /// Build row-by-row from a closure.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Flat row-major view of the whole buffer.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Append a row (amortised O(cols)). Panics on width mismatch.
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "row width {} != {}", row.len(), self.cols);
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// `self @ other` — naive blocked matmul, good enough off the hot path.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let out_row = out.row_mut(i);
+            for (k, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = other.row(k);
+                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |r, c| self[(c, r)])
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// Dot product with 4-way unrolling; the single hottest scalar kernel in the
+/// crate (every index traversal and every CPU attention score goes through
+/// here). LLVM auto-vectorises the unrolled form to AVX on x86.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 8;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+        s4 += a[j + 4] * b[j + 4];
+        s5 += a[j + 5] * b[j + 5];
+        s6 += a[j + 6] * b[j + 6];
+        s7 += a[j + 7] * b[j + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..a.len() {
+        tail += a[i] * b[i];
+    }
+    (s0 + s1) + (s2 + s3) + (s4 + s5) + (s6 + s7) + tail
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// `out += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o += alpha * v;
+    }
+}
+
+/// In-place numerically-stable softmax. Returns the log-sum-exp.
+pub fn softmax_inplace(x: &mut [f32]) -> f32 {
+    if x.is_empty() {
+        return f32::NEG_INFINITY;
+    }
+    let m = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+    m + sum.ln()
+}
+
+/// Indices of the `k` largest values (ties broken by lower index), sorted by
+/// value descending. O(n log k) via a bounded binary min-heap.
+pub fn argtopk(x: &[f32], k: usize) -> Vec<usize> {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    /// Min-heap entry: reversed comparison on (value, reversed index).
+    struct Entry(f32, usize);
+    impl PartialEq for Entry {
+        fn eq(&self, o: &Self) -> bool {
+            self.cmp(o) == Ordering::Equal
+        }
+    }
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, o: &Self) -> Ordering {
+            // Reverse so BinaryHeap (a max-heap) behaves as a min-heap on value;
+            // for equal values the larger index is "smaller" so it is evicted
+            // first, keeping the earliest indices.
+            o.0.total_cmp(&self.0).then(self.1.cmp(&o.1))
+        }
+    }
+
+    let k = k.min(x.len());
+    if k == 0 {
+        return vec![];
+    }
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(k + 1);
+    for (i, &v) in x.iter().enumerate() {
+        if heap.len() < k {
+            heap.push(Entry(v, i));
+        } else if let Some(top) = heap.peek() {
+            if v > top.0 || (v == top.0 && i < top.1) {
+                heap.pop();
+                heap.push(Entry(v, i));
+            }
+        }
+    }
+    let mut out: Vec<(f32, usize)> = heap.into_iter().map(|e| (e.0, e.1)).collect();
+    out.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    out.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Mean of each column.
+pub fn col_mean(m: &Matrix) -> Vec<f32> {
+    let mut mean = vec![0.0f32; m.cols()];
+    for r in 0..m.rows() {
+        axpy(1.0, m.row(r), &mut mean);
+    }
+    let inv = 1.0 / m.rows().max(1) as f32;
+    for v in &mut mean {
+        *v *= inv;
+    }
+    mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Matrix::from_fn(2, 2, |r, c| if r == c { 1.0 } else { 0.0 });
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Matrix::from_vec(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..67).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..67).map(|i| (66 - i) as f32 * 0.25).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-2 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_lse() {
+        let mut x = vec![1.0f32, 2.0, 3.0];
+        let lse = softmax_inplace(&mut x);
+        let sum: f32 = x.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        // lse = log(e^1 + e^2 + e^3)
+        let expect = (1f64.exp() + 2f64.exp() + 3f64.exp()).ln() as f32;
+        assert!((lse - expect).abs() < 1e-5);
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut x = vec![1000.0f32, 1000.0, 1000.0];
+        softmax_inplace(&mut x);
+        for v in x {
+            assert!((v - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn argtopk_basic() {
+        let x = vec![0.1f32, 5.0, 3.0, 4.0, -1.0];
+        assert_eq!(argtopk(&x, 3), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn argtopk_k_larger_than_len() {
+        let x = vec![2.0f32, 1.0];
+        assert_eq!(argtopk(&x, 10), vec![0, 1]);
+    }
+
+    #[test]
+    fn argtopk_ties_prefer_lower_index() {
+        let x = vec![1.0f32, 1.0, 1.0, 1.0];
+        assert_eq!(argtopk(&x, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Matrix::from_fn(3, 5, |r, c| (r * 5 + c) as f32);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn push_row_grows() {
+        let mut m = Matrix::zeros(0, 3);
+        m.push_row(&[1.0, 2.0, 3.0]);
+        m.push_row(&[4.0, 5.0, 6.0]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn col_mean_known() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 3.0, 3.0, 5.0]);
+        assert_eq!(col_mean(&m), vec![2.0, 4.0]);
+    }
+}

@@ -1,0 +1,140 @@
+//! Minimal measurement harness for the `benches/` targets (criterion is
+//! not in the vendored crate set). Warmup + timed iterations, mean / p50 /
+//! min, and a black-box to defeat constant folding.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-exported black box.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} iters={:<5} mean={:>12?} p50={:>12?} min={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.min
+        )
+    }
+}
+
+/// Benchmark runner: measures `f` with warmup until either `target_time`
+/// elapses or `max_iters` iterations have run.
+pub struct Bencher {
+    pub warmup: usize,
+    pub target_time: Duration,
+    pub max_iters: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 3,
+            target_time: Duration::from_secs(2),
+            max_iters: 1000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for CI-ish runs.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: 1,
+            target_time: Duration::from_millis(300),
+            max_iters: 50,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &BenchStats {
+        for _ in 0..self.warmup {
+            bb(f());
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters
+            && (start.elapsed() < self.target_time || samples.len() < 5)
+        {
+            let t = Instant::now();
+            bb(f());
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean,
+            p50: samples[samples.len() / 2],
+            min: samples[0],
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Write results as a JSON array (consumed by EXPERIMENTS.md tooling).
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::Arr(
+            self.results
+                .iter()
+                .map(|s| {
+                    let mut o = Value::obj();
+                    o.set("name", s.name.as_str());
+                    o.set("iters", s.iters);
+                    o.set("mean_s", s.mean.as_secs_f64());
+                    o.set("p50_s", s.p50.as_secs_f64());
+                    o.set("min_s", s.min.as_secs_f64());
+                    o
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher { warmup: 1, target_time: Duration::from_millis(20), max_iters: 10, results: vec![] };
+        let s = b.bench("noop-ish", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.iters >= 5);
+        assert!(s.min <= s.mean);
+    }
+
+    #[test]
+    fn json_output_has_all_cases() {
+        let mut b = Bencher { warmup: 0, target_time: Duration::from_millis(5), max_iters: 5, results: vec![] };
+        b.bench("a", || 1);
+        b.bench("b", || 2);
+        let j = b.to_json();
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,22 @@
+//! In-crate replacements for the usual ecosystem crates.
+//!
+//! The build is fully offline against a vendored crate set that contains
+//! only `xla` and `anyhow`, so the substrate utilities every serving stack
+//! leans on are implemented here from scratch:
+//!
+//! * [`json`] — JSON value model, parser and serializer (config files,
+//!   experiment output, the TCP wire protocol).
+//! * [`rng`] — deterministic PRNG (SplitMix64 core) with uniform/normal
+//!   sampling for synthetic weights and workloads.
+//! * [`parallel`] — scoped fork-join parallel map over `std::thread`
+//!   (the multi-head CPU parallelism of Appendix C).
+//! * [`bench`] — a minimal criterion-style measurement harness used by the
+//!   `benches/` targets.
+//! * [`prop`] — a small property-testing driver (randomised input sweeps
+//!   with seed reporting on failure).
+
+pub mod bench;
+pub mod json;
+pub mod parallel;
+pub mod prop;
+pub mod rng;

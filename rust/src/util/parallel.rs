@@ -1,0 +1,124 @@
+//! Scoped fork-join parallelism over `std::thread`.
+//!
+//! Used for the paper's Appendix C "Multi-head Parallelism on the CPU
+//! side": per-head index searches are independent, so they fan out across
+//! physical cores. `std::thread::scope` gives us borrowed inputs without
+//! `'static` bounds; chunking keeps spawn overhead negligible for the
+//! work sizes involved (each head search is ~10⁵–10⁶ dot products).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (physical parallelism).
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Parallel map preserving input order. Spawns at most `num_threads()`
+/// workers; items are claimed dynamically (work stealing by atomic
+/// counter), so uneven item costs still balance.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let out_ptr = SendPtr(out.as_mut_ptr());
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let next = &next;
+            let f = &f;
+            let out_ptr = &out_ptr;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                // SAFETY: each index i is claimed exactly once (atomic
+                // counter) and out lives for the whole scope.
+                unsafe { *out_ptr.0.add(i) = Some(r) };
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker filled every slot")).collect()
+}
+
+/// Parallel map over an index range.
+pub fn par_map_range<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let idx: Vec<usize> = (0..n).collect();
+    par_map(&idx, |&i| f(i))
+}
+
+/// Run a closure for each item in parallel (no results collected).
+pub fn par_for_each<T, F>(items: &[T], f: F)
+where
+    T: Sync,
+    F: Fn(&T) + Sync,
+{
+    let _ = par_map(items, |t| f(t));
+}
+
+struct SendPtr<T>(*mut T);
+// SAFETY: the pointer is only dereferenced at disjoint indices.
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(&items, |&x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = par_map(&[] as &[usize], |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        // Items with wildly different costs must all complete.
+        let items: Vec<usize> = (0..64).collect();
+        let out = par_map(&items, |&x| {
+            let mut acc = 0u64;
+            for i in 0..(x * 1000) {
+                acc = acc.wrapping_add(i as u64);
+            }
+            acc
+        });
+        assert_eq!(out.len(), 64);
+    }
+
+    #[test]
+    fn range_variant() {
+        let out = par_map_range(10, |i| i * i);
+        assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49, 64, 81]);
+    }
+
+    #[test]
+    fn borrows_environment() {
+        let data = vec![1.0f32; 128];
+        let out = par_map_range(8, |i| data[i * 16]);
+        assert_eq!(out, vec![1.0; 8]);
+    }
+}

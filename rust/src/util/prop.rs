@@ -1,0 +1,56 @@
+//! Tiny property-testing driver: run a predicate over many seeded random
+//! cases; on failure, report the seed so the case replays deterministically.
+
+use super::rng::Rng;
+
+/// Run `cases` random trials of `prop`. Each trial gets its own forked RNG.
+/// Panics with the failing seed on the first violated property.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    check_seeded(name, 0xC0FFEE, cases, &mut prop);
+}
+
+/// Like [`check`] with an explicit base seed (to replay a failure).
+pub fn check_seeded(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    prop: &mut impl FnMut(&mut Rng) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("uniform in range", 50, |rng| {
+            let v = rng.f32();
+            prop_assert!((0.0..1.0).contains(&v), "out of range: {v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_reports_seed() {
+        check("always fails", 5, |_| Err("nope".into()));
+    }
+}

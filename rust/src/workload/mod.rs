@@ -1,0 +1,118 @@
+//! Synthetic long-context workloads.
+//!
+//! With no benchmark datasets available (repro band 0/5), every task is a
+//! generator that reproduces the *retrieval structure* of the paper's
+//! suites — the property that actually discriminates between sparse
+//! attention methods (DESIGN.md §2):
+//!
+//! * [`tasks`] — ∞-Bench-style and RULER-style task generators over the
+//!   induction model's token conventions (associative-recall prompts whose
+//!   ground-truth answer is a deterministic function of the prompt).
+//! * [`needle`] — the needle-in-a-haystack grid (Fig 5 / Fig 7 / Fig 8).
+//! * [`geometry`] — synthetic attention Q/K/V geometry for index-level
+//!   experiments (Fig 3/6, Tables 4/5/8) without running a model: hidden
+//!   states are shared, Q and K use *different* projections, which is the
+//!   mechanism behind the paper's OOD observation.
+//!
+//! Token conventions (vocab 4096): fillers in [0, 2048), cue/key tokens in
+//! [2048, 3072), value tokens in [3072, 4096). Keys and values are unique
+//! within a prompt, so the induction chain is unambiguous unless a task
+//! deliberately makes it ambiguous (MV).
+
+pub mod geometry;
+pub mod needle;
+pub mod tasks;
+
+use crate::util::rng::Rng;
+
+/// Vocabulary partition bounds (must stay below the presets' vocab=4096).
+pub const FILLER_BASE: u32 = 0;
+pub const FILLER_COUNT: u32 = 2048;
+pub const KEY_BASE: u32 = 2048;
+pub const KEY_COUNT: u32 = 1024;
+pub const VALUE_BASE: u32 = 3072;
+pub const VALUE_COUNT: u32 = 1023; // 4095 is SEP_TOKEN (reserved)
+
+/// One evaluation sample: a prompt, and the exact tokens a correct model
+/// must generate (greedy), in order.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub prompt: Vec<u32>,
+    pub expect: Vec<u32>,
+    /// Depth of the critical information in [0, 1] (needle grid rows).
+    pub depth: f32,
+}
+
+impl Sample {
+    /// Grade a generation: fraction of expected tokens produced correctly
+    /// (prefix match — one wrong token derails the chain, as in real
+    /// greedy decoding).
+    pub fn grade(&self, generated: &[u32]) -> f32 {
+        if self.expect.is_empty() {
+            return 1.0;
+        }
+        let mut ok = 0;
+        for (e, g) in self.expect.iter().zip(generated.iter()) {
+            if e == g {
+                ok += 1;
+            } else {
+                break;
+            }
+        }
+        ok as f32 / self.expect.len() as f32
+    }
+
+    pub fn passed(&self, generated: &[u32]) -> bool {
+        self.grade(generated) >= 1.0
+    }
+}
+
+/// Random filler token.
+pub fn filler(rng: &mut Rng) -> u32 {
+    FILLER_BASE + rng.below(FILLER_COUNT as usize) as u32
+}
+
+/// `n` distinct key tokens.
+pub fn distinct_keys(rng: &mut Rng, n: usize) -> Vec<u32> {
+    rng.sample_indices(KEY_COUNT as usize, n).into_iter().map(|i| KEY_BASE + i as u32).collect()
+}
+
+/// `n` distinct value tokens.
+pub fn distinct_values(rng: &mut Rng, n: usize) -> Vec<u32> {
+    rng.sample_indices(VALUE_COUNT as usize, n)
+        .into_iter()
+        .map(|i| VALUE_BASE + i as u32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_partition_disjoint() {
+        assert_eq!(FILLER_BASE + FILLER_COUNT, KEY_BASE);
+        assert_eq!(KEY_BASE + KEY_COUNT, VALUE_BASE);
+        assert!(VALUE_BASE + VALUE_COUNT < 4096, "SEP token must stay reserved");
+    }
+
+    #[test]
+    fn grade_prefix_semantics() {
+        let s = Sample { prompt: vec![], expect: vec![1, 2, 3, 4], depth: 0.0 };
+        assert_eq!(s.grade(&[1, 2, 3, 4]), 1.0);
+        assert_eq!(s.grade(&[1, 2, 9, 4]), 0.5);
+        assert_eq!(s.grade(&[9, 2, 3, 4]), 0.0);
+        assert!(s.passed(&[1, 2, 3, 4, 7]));
+    }
+
+    #[test]
+    fn distinct_helpers_are_distinct_and_in_range() {
+        let mut rng = Rng::seed_from(1);
+        let keys = distinct_keys(&mut rng, 100);
+        let set: std::collections::HashSet<_> = keys.iter().collect();
+        assert_eq!(set.len(), 100);
+        assert!(keys.iter().all(|&k| (KEY_BASE..KEY_BASE + KEY_COUNT).contains(&k)));
+        let vals = distinct_values(&mut rng, 50);
+        assert!(vals.iter().all(|&v| (VALUE_BASE..VALUE_BASE + VALUE_COUNT).contains(&v)));
+    }
+}

@@ -1,0 +1,103 @@
+//! Needle-in-a-haystack grids (Fig 5 / Fig 7 / Fig 8).
+
+use super::tasks::passkey;
+use super::Sample;
+use crate::util::rng::Rng;
+
+/// One grid cell: context length × depth, with `reps` samples.
+#[derive(Clone, Debug)]
+pub struct GridCell {
+    pub len: usize,
+    pub depth: f32,
+    pub samples: Vec<Sample>,
+}
+
+/// Build the needle grid: for each length and each of `depths` evenly
+/// spaced depths, `reps` independent pass-key samples.
+pub fn grid(seed: u64, lengths: &[usize], depths: usize, reps: usize) -> Vec<GridCell> {
+    let mut rng = Rng::seed_from(seed);
+    let mut cells = Vec::with_capacity(lengths.len() * depths);
+    for &len in lengths {
+        for di in 0..depths {
+            let depth = if depths == 1 { 0.5 } else { di as f32 / (depths - 1) as f32 };
+            let samples = (0..reps).map(|_| passkey(&mut rng.fork(di as u64), len, depth)).collect();
+            cells.push(GridCell { len, depth, samples });
+        }
+    }
+    cells
+}
+
+/// Render a pass/fail grid as the classic needle heat-map (rows = depth,
+/// cols = length), given a per-cell score in [0,1].
+pub fn render(cells: &[GridCell], scores: &[f32]) -> String {
+    assert_eq!(cells.len(), scores.len());
+    let mut lengths: Vec<usize> = cells.iter().map(|c| c.len).collect();
+    lengths.sort_unstable();
+    lengths.dedup();
+    let mut depths: Vec<i32> = cells.iter().map(|c| (c.depth * 1000.0) as i32).collect();
+    depths.sort_unstable();
+    depths.dedup();
+
+    let mut out = String::from("depth\\len |");
+    for l in &lengths {
+        out.push_str(&format!(" {:>6} |", short_len(*l)));
+    }
+    out.push('\n');
+    for &dm in &depths {
+        out.push_str(&format!("{:>9} |", format!("{:.0}%", dm as f32 / 10.0)));
+        for &l in &lengths {
+            let mut cell = String::from("      -");
+            for (c, s) in cells.iter().zip(scores.iter()) {
+                if c.len == l && (c.depth * 1000.0) as i32 == dm {
+                    cell = format!(" {:>6}", format!("{:.0}", s * 100.0));
+                }
+            }
+            out.push_str(&cell);
+            out.push_str(" |");
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn short_len(l: usize) -> String {
+    if l >= 1024 && l % 1024 == 0 {
+        format!("{}K", l / 1024)
+    } else {
+        format!("{l}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_dimensions() {
+        let cells = grid(1, &[256, 512], 5, 2);
+        assert_eq!(cells.len(), 10);
+        assert!(cells.iter().all(|c| c.samples.len() == 2));
+        assert_eq!(cells[0].depth, 0.0);
+        assert_eq!(cells[4].depth, 1.0);
+    }
+
+    #[test]
+    fn samples_have_correct_length() {
+        let cells = grid(2, &[300], 3, 1);
+        for c in &cells {
+            for s in &c.samples {
+                assert_eq!(s.prompt.len(), 300);
+            }
+        }
+    }
+
+    #[test]
+    fn render_contains_all_columns() {
+        let cells = grid(3, &[256, 1024], 2, 1);
+        let scores = vec![1.0; cells.len()];
+        let table = render(&cells, &scores);
+        assert!(table.contains("256"));
+        assert!(table.contains("1K"));
+        assert!(table.contains("100"));
+    }
+}

@@ -1,0 +1,68 @@
+//! CLI integration: the launcher binary's non-serving commands.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_retrieval-attention"))
+}
+
+#[test]
+fn experiment_list_names_every_paper_artifact() {
+    let out = bin().args(["experiment", "list"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for id in ["table1", "table2", "table4", "table5", "fig2", "fig3a", "fig6", "fig8"] {
+        assert!(text.contains(id), "experiment list missing {id}");
+    }
+}
+
+#[test]
+fn info_reports_presets() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let out = bin().args(["info"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("induction-mini"));
+    assert!(text.contains("llama3-mini"));
+    assert!(text.contains("d_head 64"), "geometry line missing: {text}");
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = bin().args(["frobnicate"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("commands:"), "usage not printed");
+}
+
+#[test]
+fn generate_round_trip() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let out = bin()
+        .args([
+            "generate",
+            "--prompt-task",
+            "passkey",
+            "--len",
+            "512",
+            "--method",
+            "RetrievalAttention",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("grade: 100%"), "generation failed: {text}");
+}
+
+#[test]
+fn generate_rejects_unknown_method() {
+    let out = bin().args(["generate", "--method", "MagicAttention"]).output().unwrap();
+    assert!(!out.status.success());
+}

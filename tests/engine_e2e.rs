@@ -1,0 +1,154 @@
+//! End-to-end integration: artifacts → PJRT runtime → engine prefill →
+//! Algorithm-1 decode, on the hand-constructed induction model.
+//!
+//! Requires `make artifacts` (skips cleanly when absent, e.g. in a bare
+//! checkout). These tests are the keystone of the reproduction: they prove
+//! the *task accuracy ⇔ retrieval quality* causal chain the paper's
+//! Tables 2/3 rest on.
+
+use retrieval_attention::config::{Method, ServeConfig};
+use retrieval_attention::model::Engine;
+use retrieval_attention::util::rng::Rng;
+use retrieval_attention::workload::tasks;
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn engine(method: Method) -> Engine {
+    let mut cfg = ServeConfig::default();
+    cfg.model = "induction-mini".into();
+    cfg.method = method;
+    // Scaled-down static pattern so host retrieval matters at test sizes.
+    cfg.pattern = retrieval_attention::kvcache::StaticPattern { sink: 32, window: 128 };
+    cfg.retrieval.top_k = 32;
+    cfg.retrieval.ef = 64;
+    Engine::from_config(cfg).expect("engine init")
+}
+
+#[test]
+fn full_attention_solves_passkey_everywhere() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let eng = engine(Method::Full);
+    let mut rng = Rng::seed_from(42);
+    for depth in [0.05f32, 0.5, 0.95] {
+        let s = tasks::passkey(&mut rng, 768, depth);
+        let mut sess = eng.prefill(&s.prompt).unwrap();
+        let (tokens, _) = eng.generate(&mut sess, s.expect.len()).unwrap();
+        assert!(
+            s.passed(&tokens),
+            "full attention failed at depth {depth}: got {tokens:?}, want {:?}",
+            s.expect
+        );
+    }
+}
+
+#[test]
+fn retrieval_attention_matches_full_on_kv_retrieval() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let eng = engine(Method::RetrievalAttention);
+    let mut rng = Rng::seed_from(7);
+    let mut pass = 0;
+    let n = 5;
+    for _ in 0..n {
+        let s = tasks::kv_retrieval(&mut rng, 1024, 64);
+        let mut sess = eng.prefill(&s.prompt).unwrap();
+        let (tokens, _) = eng.generate(&mut sess, s.expect.len()).unwrap();
+        if s.passed(&tokens) {
+            pass += 1;
+        }
+        // At this tiny corpus (≈860 indexed keys) the beam necessarily
+        // touches a large share; the paper's 1–3% fraction emerges at
+        // 128K+ keys and is asserted by the fig6 experiment / benches.
+        // Here we only require it to beat a full scan.
+        let frac = sess.mean_scanned() / 1024.0;
+        assert!(frac < 0.95, "scanned too much: {frac}");
+    }
+    assert!(pass >= n - 1, "RetrievalAttention solved only {pass}/{n}");
+}
+
+#[test]
+fn streaming_llm_fails_outside_window() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let eng = engine(Method::StreamingLlm);
+    let mut rng = Rng::seed_from(9);
+    // Needle deep in the discarded middle: StreamingLLM must miss it.
+    let s = tasks::passkey(&mut rng, 1024, 0.5);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    let (tokens, _) = eng.generate(&mut sess, 2).unwrap();
+    assert!(
+        s.grade(&tokens) <= 0.5,
+        "StreamingLLM should not complete the out-of-window chain (got {tokens:?})"
+    );
+
+    // ...but succeeds when the needle is inside the sliding window.
+    let s = tasks::passkey(&mut rng, 1024, 0.97);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    let (tokens, _) = eng.generate(&mut sess, 2).unwrap();
+    assert!(s.passed(&tokens), "StreamingLLM should solve in-window needles");
+}
+
+#[test]
+fn multi_hop_variable_tracking_with_retrieval() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let eng = engine(Method::RetrievalAttention);
+    let mut rng = Rng::seed_from(21);
+    let mut pass = 0;
+    for _ in 0..3 {
+        let s = tasks::ruler_variable_tracking(&mut rng, 768, 2);
+        let mut sess = eng.prefill(&s.prompt).unwrap();
+        let (tokens, _) = eng.generate(&mut sess, s.expect.len()).unwrap();
+        if s.passed(&tokens) {
+            pass += 1;
+        }
+    }
+    assert!(pass >= 2, "multi-hop tracking solved only {pass}/3");
+}
+
+#[test]
+fn decode_breakdown_has_all_phases() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let eng = engine(Method::RetrievalAttention);
+    let mut rng = Rng::seed_from(33);
+    let s = tasks::passkey(&mut rng, 900, 0.4);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    let out = eng.decode_step(&mut sess, *s.prompt.last().unwrap()).unwrap();
+    let bd = out.breakdown;
+    assert!(bd.search > 0.0, "no search time recorded");
+    assert!(bd.attention > 0.0, "no attention time recorded");
+    assert!(bd.other > 0.0, "no other time recorded");
+}
+
+#[test]
+fn session_tiers_account_every_token() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let eng = engine(Method::Flat);
+    let mut rng = Rng::seed_from(55);
+    let s = tasks::passkey(&mut rng, 700, 0.5);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    let _ = eng.generate(&mut sess, 4).unwrap();
+    let cache = &sess.caches[0][0];
+    assert_eq!(cache.len(), 700 + 3, "prompt + decode steps (first + last tokens are not fed back)");
+    let dev = cache.device_ids().len();
+    let idx = cache.indexed_ids().len();
+    let over = cache.overflow_ids().len();
+    assert_eq!(dev + idx + over, cache.len());
+}

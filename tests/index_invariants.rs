@@ -1,0 +1,191 @@
+//! Property-based invariants over the ANNS substrate and the attention
+//! engine (the in-crate `util::prop` driver replays failures by seed).
+
+use retrieval_attention::attention::{attend_subset, combine, full_attention};
+use retrieval_attention::index::{
+    exact_topk, flat::FlatIndex, hnsw::{HnswIndex, HnswParams}, ivf::IvfIndex,
+    roargraph::{RoarGraph, RoarParams}, SearchParams, VectorIndex,
+};
+use retrieval_attention::prop_assert;
+use retrieval_attention::tensor::Matrix;
+use retrieval_attention::util::prop::check;
+use retrieval_attention::util::rng::Rng;
+use std::sync::Arc;
+
+fn random_setup(rng: &mut Rng) -> (Arc<Matrix>, Matrix, Vec<f32>) {
+    let n = 64 + rng.below(448);
+    let d = [8usize, 16, 32, 64][rng.below(4)];
+    let keys = {
+        let mut r = rng.fork(1);
+        Arc::new(Matrix::from_fn(n, d, |_, _| r.normal()))
+    };
+    let queries = {
+        let mut r = rng.fork(2);
+        Matrix::from_fn(32, d, |_, c| r.normal() + if c == 0 { 2.0 } else { 0.0 })
+    };
+    let q = {
+        let mut r = rng.fork(3);
+        (0..d).map(|_| r.normal()).collect()
+    };
+    (keys, queries, q)
+}
+
+#[test]
+fn prop_flat_always_matches_exact_topk() {
+    check("flat == exact", 25, |rng| {
+        let (keys, _, q) = random_setup(rng);
+        let k = 1 + rng.below(20);
+        let idx = FlatIndex::new(keys.clone());
+        let got = idx.search(&q, k, &SearchParams::default());
+        let want = exact_topk(&keys, &q, k);
+        prop_assert!(got.ids == want, "flat diverged from exact: {:?} vs {:?}", got.ids, want);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_search_results_sorted_and_unique() {
+    check("sorted unique results", 15, |rng| {
+        let (keys, queries, q) = random_setup(rng);
+        let indexes: Vec<Box<dyn VectorIndex>> = vec![
+            Box::new(FlatIndex::new(keys.clone())),
+            Box::new(IvfIndex::build(keys.clone(), Some(16), 1)),
+            Box::new(HnswIndex::build(keys.clone(), HnswParams::default())),
+            Box::new(RoarGraph::build(keys.clone(), &queries, RoarParams::default())),
+        ];
+        for idx in &indexes {
+            let r = idx.search(&q, 10, &SearchParams::default());
+            for w in r.scores.windows(2) {
+                prop_assert!(w[0] >= w[1], "{}: scores not sorted", idx.name());
+            }
+            let mut ids = r.ids.clone();
+            ids.sort_unstable();
+            let before = ids.len();
+            ids.dedup();
+            prop_assert!(ids.len() == before, "{}: duplicate ids", idx.name());
+            prop_assert!(
+                r.ids.iter().all(|&i| (i as usize) < keys.rows()),
+                "{}: id out of range",
+                idx.name()
+            );
+            prop_assert!(r.scanned <= keys.rows() + 64, "{}: scanned > n", idx.name());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_returned_scores_are_true_inner_products() {
+    check("scores are q.k", 15, |rng| {
+        let (keys, queries, q) = random_setup(rng);
+        let idx = RoarGraph::build(keys.clone(), &queries, RoarParams::default());
+        let r = idx.search(&q, 5, &SearchParams::default());
+        for (&id, &s) in r.ids.iter().zip(r.scores.iter()) {
+            let expect = retrieval_attention::tensor::dot(&q, keys.row(id as usize));
+            prop_assert!((s - expect).abs() < 1e-4, "score mismatch: {s} vs {expect}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_combine_equals_joint_attention() {
+    // For ANY disjoint partition of tokens into m parts, combining the
+    // partials equals full attention — Appendix B.1 as a property.
+    check("combine exactness", 25, |rng| {
+        let n = 16 + rng.below(200);
+        let d = 4 + rng.below(28);
+        let mut r1 = rng.fork(1);
+        let keys = Matrix::from_fn(n, d, |_, _| r1.normal());
+        let values = Matrix::from_fn(n, d, |_, _| r1.normal());
+        let q: Vec<f32> = (0..d).map(|_| r1.normal()).collect();
+        let scale = 0.05 + rng.f32();
+
+        // Random partition into 2-4 parts.
+        let parts = 2 + rng.below(3);
+        let mut assignment: Vec<usize> = (0..n).map(|_| rng.below(parts)).collect();
+        assignment[0] = 0; // ensure part 0 non-empty
+        let partials: Vec<_> = (0..parts)
+            .map(|p| {
+                let ids: Vec<u32> = assignment
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &a)| a == p)
+                    .map(|(i, _)| i as u32)
+                    .collect();
+                attend_subset(&q, &keys, &values, &ids, scale)
+            })
+            .collect();
+        let merged = combine(&partials);
+        let want = full_attention(&q, &keys, &values, scale);
+        for (a, b) in merged.o.iter().zip(want.iter()) {
+            prop_assert!((a - b).abs() < 1e-4, "combine mismatch {a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ivf_recall_monotone_in_nprobe() {
+    check("ivf monotone", 10, |rng| {
+        let (keys, _, q) = random_setup(rng);
+        let idx = IvfIndex::build(keys.clone(), Some(16), 3);
+        let truth = exact_topk(&keys, &q, 10);
+        let mut last = -1.0f32;
+        for nprobe in [1usize, 2, 4, 8, 16] {
+            let r = idx.search(&q, 10, &SearchParams { ef: 0, nprobe });
+            let rec = r.recall_against(&truth);
+            prop_assert!(rec >= last - 1e-6, "recall not monotone at nprobe={nprobe}");
+            last = rec;
+        }
+        prop_assert!((last - 1.0).abs() < 1e-6, "full probe must be exact");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_roargraph_reaches_everything_with_huge_ef() {
+    check("roargraph connectivity", 8, |rng| {
+        let (keys, queries, _) = random_setup(rng);
+        let n = keys.rows();
+        let idx = RoarGraph::build(keys.clone(), &queries, RoarParams::default());
+        let mut r = rng.fork(9);
+        let q: Vec<f32> = (0..keys.cols()).map(|_| r.normal()).collect();
+        let res = idx.search(&q, n, &SearchParams { ef: n, nprobe: 0 });
+        prop_assert!(res.ids.len() == n, "unreachable nodes: {} < {n}", res.ids.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_static_pattern_partitions_tokens() {
+    use retrieval_attention::kvcache::{StaticPattern, TieredKvCache};
+    check("tier partition", 20, |rng| {
+        let sink = rng.below(64);
+        let window = 1 + rng.below(128);
+        let prefill = 1 + rng.below(1000);
+        let decode = rng.below(50);
+        let d = 4;
+        let mut cache = TieredKvCache::new(d, StaticPattern { sink, window });
+        let mut r = rng.fork(1);
+        for _ in 0..prefill {
+            let k: Vec<f32> = (0..d).map(|_| r.normal()).collect();
+            cache.append(&k, &k);
+        }
+        cache.seal_prefill();
+        for _ in 0..decode {
+            let k: Vec<f32> = (0..d).map(|_| r.normal()).collect();
+            cache.append(&k, &k);
+        }
+        let mut all: Vec<u32> = cache.device_ids();
+        all.extend(cache.indexed_ids());
+        all.extend(cache.overflow_ids());
+        all.sort_unstable();
+        let expect: Vec<u32> = (0..(prefill + decode) as u32).collect();
+        prop_assert!(
+            all == expect,
+            "tiers must partition exactly once (sink={sink} window={window} n={prefill}+{decode})"
+        );
+        Ok(())
+    });
+}
