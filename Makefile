@@ -1,0 +1,40 @@
+# Build / verification entry points.
+#
+#   make verify   — the tier-1 gate: release build + tests, then advisory
+#                   fmt + clippy (advisory until the whole tree is
+#                   rustfmt-clean; the `-` prefix keeps them non-fatal so
+#                   lint drift cannot mask a real build/test regression).
+#   make bench    — decode-latency bench incl. the online-drain flatness
+#                   profile (writes results/bench_decode.json).
+#   make artifacts — AOT-lower the JAX model to HLO text (needs python/jax;
+#                   without it the runtime serves via its native backend).
+
+CARGO ?= cargo
+
+.PHONY: verify build test fmt-check clippy bench artifacts clean
+
+verify: build test
+	-$(MAKE) fmt-check
+	-$(MAKE) clippy
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt-check:
+	$(CARGO) fmt --all -- --check
+
+clippy:
+	$(CARGO) clippy --workspace --all-targets
+
+bench:
+	$(CARGO) bench --bench decode_latency
+
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+clean:
+	$(CARGO) clean
+	rm -rf results

@@ -34,26 +34,27 @@ fn main() {
     let p2 = mk(&mut rng);
     b.bench("host/combine/d=64", || black_box(combine(&[p1.clone(), p2.clone()]).lse));
 
-    // Device artifacts (needs `make artifacts`).
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        let rt = Runtime::load("artifacts", "llama3-mini").expect("runtime");
+    // Device entry points: compiled Pallas artifacts when `make artifacts`
+    // has run, the runtime's native backend otherwise.
+    {
+        let rt = Runtime::load_auto("artifacts", "llama3-mini").expect("runtime");
+        let backend = if rt.is_native() { "native" } else { "pallas" };
+        eprintln!("device kernels backend: {}", rt.platform());
         let spec = rt.meta().spec.clone();
         let (s, kv, h, dh) = (spec.static_len, spec.kv_heads, spec.q_heads, spec.head_dim);
         let qs = literal_f32(&vec![0.1; h * dh], &[h as i64, dh as i64]).unwrap();
         let ks = literal_f32(&vec![0.2; s * kv * dh], &[s as i64, kv as i64, dh as i64]).unwrap();
         let vs = literal_f32(&vec![0.3; s * kv * dh], &[s as i64, kv as i64, dh as i64]).unwrap();
         let ms = literal_f32(&vec![0.0; s], &[s as i64]).unwrap();
-        b.bench("device/static_attn(pallas flash_decode, S=640)", || {
+        b.bench(&format!("device/static_attn({backend} flash_decode, S=640)"), || {
             black_box(rt.exec("static_attn", &[&qs, &ks, &vs, &ms]).unwrap().len())
         });
 
         let o1 = literal_f32(&vec![0.1; h * dh], &[h as i64, dh as i64]).unwrap();
         let l1 = literal_f32(&vec![1.0; h], &[h as i64]).unwrap();
-        b.bench("device/combine(pallas) [ablation vs host/combine]", || {
+        b.bench(&format!("device/combine({backend}) [ablation vs host/combine]"), || {
             black_box(rt.exec("combine", &[&o1, &l1, &o1, &l1]).unwrap().len())
         });
-    } else {
-        eprintln!("artifacts/ missing; skipping device kernels (run `make artifacts`)");
     }
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/bench_attention.json", b.to_json().to_string_pretty()).ok();

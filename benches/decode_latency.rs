@@ -1,18 +1,65 @@
 //! Bench: end-to-end per-token decode latency by method and context
-//! length — the measured backbone of Tables 4/7/8.
+//! length — the measured backbone of Tables 4/7/8 — plus the online-
+//! maintenance flatness check: per-token decode cost as the generated
+//! length grows past `sink + window`, with the overflow→index drain on
+//! vs off. With the drain on, cost stays ~flat (the overflow buffer is
+//! bounded by the watermark); with it off, the linear overflow scan grows
+//! with every generated token.
 //!
 //! `cargo bench --bench decode_latency [-- full]`
+//!
+//! Runs against PJRT artifacts when present, the native backend otherwise.
 
 use retrieval_attention::config::{Method, ServeConfig};
 use retrieval_attention::model::Engine;
 use retrieval_attention::util::bench::{black_box, Bencher};
+use retrieval_attention::util::json::Value;
 use retrieval_attention::workload::geometry::{generate, GeometryParams};
 
-fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("artifacts/ missing; run `make artifacts` first");
-        return;
+fn heads_for(
+    spec: &retrieval_attention::runtime::manifest::SpecMeta,
+    n: usize,
+) -> Vec<Vec<retrieval_attention::workload::geometry::HeadGeometry>> {
+    (0..spec.layers)
+        .map(|l| {
+            (0..spec.kv_heads)
+                .map(|k| {
+                    generate(
+                        &GeometryParams { head_dim: spec.head_dim, ..Default::default() },
+                        n,
+                        512,
+                        (l * 7 + k) as u64,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Decode `gen` tokens; return mean seconds/token over the first and last
+/// `window` steps plus the session drain counters.
+fn growth_profile(
+    engine: &Engine,
+    heads: Vec<Vec<retrieval_attention::workload::geometry::HeadGeometry>>,
+    method: Method,
+    gen: usize,
+    window: usize,
+) -> (f64, f64, u64, u64) {
+    let mut sess = engine.synthetic_session(heads, method).expect("session");
+    let mut per_token: Vec<f64> = Vec::with_capacity(gen);
+    let mut tok = 1u32;
+    for _ in 0..gen {
+        let t = std::time::Instant::now();
+        tok = black_box(engine.decode_step(&mut sess, tok % 97).unwrap().token);
+        per_token.push(t.elapsed().as_secs_f64());
     }
+    let w = window.min(per_token.len() / 2).max(1);
+    let early: f64 = per_token[..w].iter().sum::<f64>() / w as f64;
+    let late: f64 = per_token[per_token.len() - w..].iter().sum::<f64>() / w as f64;
+    (early, late, sess.drained_tokens, sess.drains)
+}
+
+fn main() {
     let full = std::env::args().any(|a| a == "full");
     let lengths: &[usize] = if full { &[8_192, 32_768, 131_072] } else { &[4_096, 16_384] };
     let methods =
@@ -24,22 +71,10 @@ fn main() {
     cfg.model = "llama3-mini".into();
     let engine = Engine::from_config(cfg).expect("engine");
     let spec = engine.spec().clone();
+    eprintln!("decode_latency: backend = {}", engine.rt.platform());
 
     for &n in lengths {
-        let heads: Vec<Vec<_>> = (0..spec.layers)
-            .map(|l| {
-                (0..spec.kv_heads)
-                    .map(|k| {
-                        generate(
-                            &GeometryParams { head_dim: spec.head_dim, ..Default::default() },
-                            n,
-                            512,
-                            (l * 7 + k) as u64,
-                        )
-                    })
-                    .collect()
-            })
-            .collect();
+        let heads = heads_for(&spec, n);
         for &m in &methods {
             let mut sess = engine.synthetic_session(heads.clone(), m).expect("session");
             engine.decode_step(&mut sess, 1).unwrap(); // warmup
@@ -50,6 +85,42 @@ fn main() {
             });
         }
     }
+
+    // --- Long-generation flatness: drain on vs off. ---
+    let n = if full { 16_384 } else { 2_048 };
+    let gen = if full { 1_024 } else { 384 };
+    let probe = 64usize;
+    let mut growth = Value::obj();
+    for (tag, watermark) in [("drain-on", 64usize), ("drain-off", 0usize)] {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "llama3-mini".into();
+        cfg.retrieval.maintenance.drain_watermark = watermark;
+        let engine = Engine::from_config(cfg).expect("engine");
+        let heads = heads_for(&spec, n);
+        let (early, late, drained, drains) =
+            growth_profile(&engine, heads, Method::RetrievalAttention, gen, probe);
+        let ratio = if early > 0.0 { late / early } else { 0.0 };
+        println!(
+            "growth/RetrievalAttention/{tag}: n={n} gen={gen} \
+             early={:.3}ms late={:.3}ms late/early={:.2} drains={drains} drained={drained}",
+            early * 1e3,
+            late * 1e3,
+            ratio,
+        );
+        let mut o = Value::obj();
+        o.set("n", n)
+            .set("generated", gen)
+            .set("early_s_per_tok", early)
+            .set("late_s_per_tok", late)
+            .set("late_over_early", ratio)
+            .set("drained_tokens", drained)
+            .set("drains", drains);
+        growth.set(tag, o);
+    }
+
     std::fs::create_dir_all("results").ok();
-    std::fs::write("results/bench_decode.json", b.to_json().to_string_pretty()).ok();
+    let mut out = Value::obj();
+    out.set("cases", b.to_json());
+    out.set("growth", growth);
+    std::fs::write("results/bench_decode.json", out.to_string_pretty()).ok();
 }

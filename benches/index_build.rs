@@ -38,7 +38,7 @@ fn main() {
                     RoarGraph::build(
                         keys.clone(),
                         &train,
-                        RoarParams { kb, m: 32, repair_sample: 256 },
+                        RoarParams { kb, m: 32, repair_sample: 256, ..RoarParams::default() },
                     )
                     .avg_degree(),
                 )

@@ -17,9 +17,11 @@
 //! | HNSW                | HNSW index search (ablation)                      |
 //! | RetrievalAttention  | attention-aware RoarGraph search                  |
 //!
-//! Retrievers are built once per (layer, query-head) at prefill and are
-//! immutable afterwards, so decode-time searches fan out across heads
-//! (Appendix C).
+//! Retrievers are built once per (layer, query-head) at prefill; methods
+//! with a live index additionally accept [`HostRetriever::insert_batch`]
+//! so the engine can drain decoded tokens into the searchable set.
+//! Decode-time searches still fan out across heads (Appendix C) — inserts
+//! synchronise through per-retriever read/write locks.
 
 pub mod infinigen;
 pub mod infllm;
@@ -32,10 +34,10 @@ use crate::index::{
     hnsw::{HnswIndex, HnswParams},
     ivf::IvfIndex,
     roargraph::{RoarGraph, RoarParams},
-    SearchParams, VectorIndex,
+    InsertContext, SearchParams, VectorIndex,
 };
 use crate::tensor::Matrix;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 /// Result of one host retrieval: *absolute* token ids + scan count.
 #[derive(Clone, Debug, Default)]
@@ -60,6 +62,46 @@ pub trait HostRetriever: Send + Sync {
     fn speculates_from_previous_layer(&self) -> bool {
         false
     }
+
+    /// Whether [`HostRetriever::insert_batch`] can succeed. The engine only
+    /// drains a cache's overflow buffer when every query head of the GQA
+    /// group accepts inserts.
+    fn supports_insert(&self) -> bool {
+        false
+    }
+
+    /// True when this retriever "accepts" inserts by dropping the tokens
+    /// (StreamingLLM semantics). Callers use this to (a) refuse
+    /// discard-drains for sessions whose method promises exact attention,
+    /// and (b) skip growing the shared key store for data nobody reads.
+    fn discards_inserts(&self) -> bool {
+        false
+    }
+
+    /// Whether [`HostRetriever::insert_batch`] actually reads `store`.
+    /// When every head of a group returns false the caller may pass a
+    /// stale store and skip the grow-and-copy entirely (AllRetriever only
+    /// tracks ids; EmptyRetriever reads nothing).
+    fn needs_store(&self) -> bool {
+        true
+    }
+
+    /// Fold newly decoded host tokens into the searchable set.
+    ///
+    /// `store` is the grown dense key matrix shared by the whole GQA group
+    /// (one copy per kv head, Appendix C): rows `[0, store.rows() -
+    /// ids.len())` are unchanged from the previous drain, the final
+    /// `ids.len()` rows are the new key vectors, and `ids` carries their
+    /// absolute token ids. Takes `&self` — retrievers that support inserts
+    /// use interior locking so decode-time searches keep fanning out
+    /// lock-free across heads.
+    ///
+    /// Returns `false` when unsupported (fixed-set baselines): the caller
+    /// keeps those tokens in the linearly-scanned overflow buffer.
+    fn insert_batch(&self, store: &Arc<Matrix>, ids: &[u32], ctx: &InsertContext<'_>) -> bool {
+        let _ = (store, ids, ctx);
+        false
+    }
 }
 
 /// Everything a retriever constructor may need.
@@ -79,51 +121,54 @@ pub struct RetrieverInputs<'a> {
 
 /// Build the retriever for a method.
 pub fn build_retriever(method: Method, inp: RetrieverInputs<'_>) -> Box<dyn HostRetriever> {
+    let index_retriever = |index: Box<dyn VectorIndex>, label: &'static str| {
+        Box::new(IndexRetriever {
+            index: RwLock::new(index),
+            ids: RwLock::new(inp.host_ids.as_ref().clone()),
+            params: SearchParams { ef: inp.cfg.ef, nprobe: inp.cfg.nprobe },
+            label,
+        })
+    };
     match method {
         Method::StreamingLlm => Box::new(EmptyRetriever),
         Method::Full | Method::VllmLike => Box::new(AllRetriever {
-            ids: inp.host_ids.clone(),
-            n: inp.host_keys.rows(),
+            ids: RwLock::new(inp.host_ids.as_ref().clone()),
         }),
         Method::SnapKv => Box::new(snapkv::SnapKvRetriever::build(&inp)),
         Method::InfLlm => Box::new(infllm::InfLlmRetriever::build(&inp)),
         Method::Quest => Box::new(quest::QuestRetriever::build(&inp)),
         Method::InfiniGen => Box::new(infinigen::InfiniGenRetriever::build(&inp)),
-        Method::Flat => Box::new(IndexRetriever {
-            index: Box::new(FlatIndex::new(inp.host_keys.clone())),
-            ids: inp.host_ids.clone(),
-            params: SearchParams { ef: inp.cfg.ef, nprobe: inp.cfg.nprobe },
-            label: "Flat",
-        }),
-        Method::Ivf => Box::new(IndexRetriever {
-            index: Box::new(IvfIndex::build(inp.host_keys.clone(), None, inp.seed)),
-            ids: inp.host_ids.clone(),
-            params: SearchParams { ef: inp.cfg.ef, nprobe: inp.cfg.nprobe },
-            label: "IVF",
-        }),
-        Method::Hnsw => Box::new(IndexRetriever {
-            index: Box::new(HnswIndex::build(
+        Method::Flat => index_retriever(Box::new(FlatIndex::new(inp.host_keys.clone())), "Flat"),
+        Method::Ivf => {
+            index_retriever(Box::new(IvfIndex::build(inp.host_keys.clone(), None, inp.seed)), "IVF")
+        }
+        Method::Hnsw => index_retriever(
+            Box::new(HnswIndex::build(
                 inp.host_keys.clone(),
                 HnswParams { m: inp.cfg.m, ef_construction: inp.cfg.ef.max(64), seed: inp.seed },
             )),
-            ids: inp.host_ids.clone(),
-            params: SearchParams { ef: inp.cfg.ef, nprobe: inp.cfg.nprobe },
-            label: "HNSW",
-        }),
-        Method::RetrievalAttention => Box::new(IndexRetriever {
-            index: Box::new(RoarGraph::build(
+            "HNSW",
+        ),
+        Method::RetrievalAttention => index_retriever(
+            Box::new(RoarGraph::build(
                 inp.host_keys.clone(),
                 inp.prefill_queries,
-                RoarParams { kb: inp.cfg.kb, m: inp.cfg.m, repair_sample: 256 },
+                RoarParams {
+                    kb: inp.cfg.kb,
+                    m: inp.cfg.m,
+                    repair_sample: 256,
+                    rebuild_threshold: inp.cfg.maintenance.rebuild_threshold.max(1),
+                },
             )),
-            ids: inp.host_ids.clone(),
-            params: SearchParams { ef: inp.cfg.ef, nprobe: inp.cfg.nprobe },
-            label: "RetrievalAttention",
-        }),
+            "RetrievalAttention",
+        ),
     }
 }
 
-/// StreamingLLM: no host tokens at all.
+/// StreamingLLM: no host tokens at all. Inserts are "accepted" by
+/// discarding — StreamingLLM's whole definition is that tokens outside
+/// sink+window are dropped, so a drained overflow token simply ceases to
+/// be attended.
 pub struct EmptyRetriever;
 
 impl HostRetriever for EmptyRetriever {
@@ -134,43 +179,80 @@ impl HostRetriever for EmptyRetriever {
     fn name(&self) -> &'static str {
         "StreamingLLM"
     }
+
+    fn supports_insert(&self) -> bool {
+        true
+    }
+
+    fn discards_inserts(&self) -> bool {
+        true
+    }
+
+    fn needs_store(&self) -> bool {
+        false
+    }
+
+    fn insert_batch(&self, _store: &Arc<Matrix>, _ids: &[u32], _ctx: &InsertContext<'_>) -> bool {
+        true
+    }
 }
 
-/// Full attention: every host token, no scan savings.
+/// Full attention: every host token, no scan savings. Online inserts keep
+/// the host set complete (and exact) for arbitrarily long generations.
 pub struct AllRetriever {
-    ids: Arc<Vec<u32>>,
-    n: usize,
+    ids: RwLock<Vec<u32>>,
 }
 
 impl HostRetriever for AllRetriever {
     fn retrieve(&self, _q: &[f32], _k: usize) -> Retrieval {
-        Retrieval { ids: self.ids.as_ref().clone(), scanned: self.n }
+        let ids = self.ids.read().unwrap().clone();
+        let n = ids.len();
+        Retrieval { ids, scanned: n }
     }
 
     fn name(&self) -> &'static str {
         "FullAttention"
     }
+
+    fn supports_insert(&self) -> bool {
+        true
+    }
+
+    fn needs_store(&self) -> bool {
+        false
+    }
+
+    fn insert_batch(&self, _store: &Arc<Matrix>, ids: &[u32], _ctx: &InsertContext<'_>) -> bool {
+        self.ids.write().unwrap().extend_from_slice(ids);
+        true
+    }
 }
 
-/// Any [`VectorIndex`] adapted to absolute ids.
+/// Any [`VectorIndex`] adapted to absolute ids. The index and the
+/// dense→absolute id map sit behind read/write locks so decode-time
+/// searches (read) and overflow drains (write) can share one retriever
+/// across the engine's head-parallel fan-out.
 pub struct IndexRetriever {
-    index: Box<dyn VectorIndex>,
-    ids: Arc<Vec<u32>>,
+    index: RwLock<Box<dyn VectorIndex>>,
+    ids: RwLock<Vec<u32>>,
     params: SearchParams,
     label: &'static str,
 }
 
 impl IndexRetriever {
-    pub fn index(&self) -> &dyn VectorIndex {
-        self.index.as_ref()
+    /// Run `f` against the underlying vector index (diagnostics).
+    pub fn with_index<R>(&self, f: impl FnOnce(&dyn VectorIndex) -> R) -> R {
+        f(self.index.read().unwrap().as_ref())
     }
 }
 
 impl HostRetriever for IndexRetriever {
     fn retrieve(&self, q: &[f32], k: usize) -> Retrieval {
-        let r = self.index.search(q, k, &self.params);
+        let index = self.index.read().unwrap();
+        let ids = self.ids.read().unwrap();
+        let r = index.search(q, k, &self.params);
         Retrieval {
-            ids: r.ids.iter().map(|&dense| self.ids[dense as usize]).collect(),
+            ids: r.ids.iter().map(|&dense| ids[dense as usize]).collect(),
             scanned: r.scanned,
         }
     }
@@ -180,7 +262,27 @@ impl HostRetriever for IndexRetriever {
     }
 
     fn memory_bytes(&self) -> usize {
-        self.index.memory_bytes()
+        self.index.read().unwrap().memory_bytes()
+    }
+
+    fn supports_insert(&self) -> bool {
+        self.index.read().unwrap().supports_insert()
+    }
+
+    fn insert_batch(&self, store: &Arc<Matrix>, ids: &[u32], ctx: &InsertContext<'_>) -> bool {
+        // Lock order (index, then ids) matches `retrieve`.
+        let mut index = self.index.write().unwrap();
+        let old = index.len();
+        if store.rows() != old + ids.len() {
+            // Contract violation (caller's store is out of sync): refuse
+            // rather than corrupt the dense↔absolute mapping.
+            return false;
+        }
+        if !index.insert_batch(store.clone(), old..store.rows(), ctx) {
+            return false;
+        }
+        self.ids.write().unwrap().extend_from_slice(ids);
+        true
     }
 }
 
@@ -211,8 +313,8 @@ mod tests {
 
     #[test]
     fn all_retriever_returns_everything() {
-        let (keys, ids, _) = test_inputs(50, 8, 1);
-        let r = AllRetriever { ids: ids.clone(), n: keys.rows() };
+        let (_keys, ids, _) = test_inputs(50, 8, 1);
+        let r = AllRetriever { ids: RwLock::new(ids.as_ref().clone()) };
         let out = r.retrieve(&[0.0; 8], 5);
         assert_eq!(out.ids.len(), 50);
         assert_eq!(out.scanned, 50);
@@ -248,13 +350,55 @@ mod tests {
     fn index_retriever_maps_dense_to_absolute() {
         let (keys, ids, _) = test_inputs(100, 8, 4);
         let r = IndexRetriever {
-            index: Box::new(FlatIndex::new(keys.clone())),
-            ids: ids.clone(),
+            index: RwLock::new(Box::new(FlatIndex::new(keys.clone()))),
+            ids: RwLock::new(ids.as_ref().clone()),
             params: SearchParams::default(),
             label: "Flat",
         };
         let q: Vec<f32> = keys.row(7).to_vec();
         let out = r.retrieve(&q, 1);
         assert_eq!(out.ids, vec![ids[7]]);
+    }
+
+    #[test]
+    fn index_retriever_insert_extends_mapping() {
+        let (keys, ids, _) = test_inputs(64, 8, 6);
+        let r = IndexRetriever {
+            index: RwLock::new(Box::new(FlatIndex::new(keys.clone()))),
+            ids: RwLock::new(ids.as_ref().clone()),
+            params: SearchParams::default(),
+            label: "Flat",
+        };
+        assert!(r.supports_insert());
+        // Grow the shared store by two rows with fresh absolute ids.
+        let mut grown = (*keys).clone();
+        grown.push_row(&[5.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        grown.push_row(&[0.0, 5.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let grown = Arc::new(grown);
+        let ctx = InsertContext::none();
+        assert!(r.insert_batch(&grown, &[900, 901], &ctx));
+        let out = r.retrieve(&[1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0], 1);
+        assert_eq!(out.ids, vec![900], "inserted token must map to its absolute id");
+        // Out-of-sync store is refused.
+        assert!(!r.insert_batch(&grown, &[902], &ctx), "stale store must be rejected");
+    }
+
+    #[test]
+    fn all_retriever_accepts_inserts() {
+        let (keys, ids, _) = test_inputs(10, 8, 7);
+        let r = AllRetriever { ids: RwLock::new(ids.as_ref().clone()) };
+        assert!(r.supports_insert());
+        assert!(r.insert_batch(&keys, &[500, 501], &InsertContext::none()));
+        let out = r.retrieve(&[0.0; 8], 1);
+        assert_eq!(out.ids.len(), 12);
+        assert!(out.ids.contains(&501));
+    }
+
+    #[test]
+    fn empty_retriever_discards_inserts() {
+        let (keys, _, _) = test_inputs(10, 8, 8);
+        assert!(EmptyRetriever.supports_insert());
+        assert!(EmptyRetriever.insert_batch(&keys, &[1, 2], &InsertContext::none()));
+        assert!(EmptyRetriever.retrieve(&[0.0; 8], 4).ids.is_empty());
     }
 }

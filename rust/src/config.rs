@@ -76,6 +76,36 @@ impl Method {
     }
 }
 
+/// Online index-maintenance knobs: how decoded KV vectors are folded back
+/// into the ANN substrate (the overflow→index drain).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MaintenanceConfig {
+    /// Overflow tokens per (layer, kv-head) that trigger a batched drain
+    /// into the index. `0` disables online *index* maintenance (the
+    /// overflow buffer then grows unbounded and is scanned linearly —
+    /// the paper's original build-once behaviour). StreamingLLM sessions
+    /// drop overflow tokens regardless: that is the method's semantics,
+    /// not a maintenance policy.
+    pub drain_watermark: usize,
+    /// Recent decode queries retained per query head; they become the
+    /// bipartite training side when RoarGraph wires inserted keys.
+    pub recent_queries: usize,
+    /// Online inserts tolerated before a full index re-projection.
+    pub rebuild_threshold: usize,
+}
+
+impl Default for MaintenanceConfig {
+    fn default() -> Self {
+        MaintenanceConfig { drain_watermark: 64, recent_queries: 32, rebuild_threshold: 4096 }
+    }
+}
+
+impl MaintenanceConfig {
+    pub fn enabled(&self) -> bool {
+        self.drain_watermark > 0
+    }
+}
+
 /// Retrieval/index knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct RetrievalConfig {
@@ -91,6 +121,8 @@ pub struct RetrievalConfig {
     pub m: usize,
     /// Per-layer budget policy (Appendix F).
     pub budget: BudgetPolicy,
+    /// Online index maintenance for decoded tokens.
+    pub maintenance: MaintenanceConfig,
 }
 
 impl Default for RetrievalConfig {
@@ -102,6 +134,7 @@ impl Default for RetrievalConfig {
             kb: 32,
             m: 32,
             budget: BudgetPolicy::Uniform { k: 100 },
+            maintenance: MaintenanceConfig::default(),
         }
     }
 }
@@ -169,6 +202,11 @@ impl ServeConfig {
             .set("nprobe", self.retrieval.nprobe)
             .set("kb", self.retrieval.kb)
             .set("m", self.retrieval.m);
+        let mut mnt = Value::obj();
+        mnt.set("drain_watermark", self.retrieval.maintenance.drain_watermark)
+            .set("recent_queries", self.retrieval.maintenance.recent_queries)
+            .set("rebuild_threshold", self.retrieval.maintenance.rebuild_threshold);
+        r.set("maintenance", mnt);
         match self.retrieval.budget {
             BudgetPolicy::Uniform { k } => {
                 let mut b = Value::obj();
@@ -224,6 +262,17 @@ impl ServeConfig {
             }
             if let Some(x) = r.get("m").and_then(Value::as_usize) {
                 c.retrieval.m = x;
+            }
+            if let Some(mnt) = r.get("maintenance") {
+                if let Some(x) = mnt.get("drain_watermark").and_then(Value::as_usize) {
+                    c.retrieval.maintenance.drain_watermark = x;
+                }
+                if let Some(x) = mnt.get("recent_queries").and_then(Value::as_usize) {
+                    c.retrieval.maintenance.recent_queries = x;
+                }
+                if let Some(x) = mnt.get("rebuild_threshold").and_then(Value::as_usize) {
+                    c.retrieval.maintenance.rebuild_threshold = x;
+                }
             }
             if let Some(b) = r.get("budget") {
                 let k = b.req_usize("k")?;
@@ -284,6 +333,25 @@ mod tests {
         assert_eq!(back.pattern, StaticPattern::PAPER);
         assert_eq!(back.retrieval.top_k, c.retrieval.top_k);
         assert_eq!(back.scheduler.max_batch, c.scheduler.max_batch);
+        assert_eq!(back.retrieval.maintenance, c.retrieval.maintenance);
+    }
+
+    #[test]
+    fn maintenance_roundtrips_and_defaults() {
+        let mut c = ServeConfig::default();
+        c.retrieval.maintenance =
+            MaintenanceConfig { drain_watermark: 7, recent_queries: 3, rebuild_threshold: 99 };
+        let back = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.retrieval.maintenance.drain_watermark, 7);
+        assert_eq!(back.retrieval.maintenance.recent_queries, 3);
+        assert_eq!(back.retrieval.maintenance.rebuild_threshold, 99);
+        assert!(back.retrieval.maintenance.enabled());
+        // Absent block falls back to defaults; watermark 0 disables.
+        let v = json::parse(r#"{"retrieval":{"top_k":5}}"#).unwrap();
+        let parsed = ServeConfig::from_json(&v).unwrap();
+        assert_eq!(parsed.retrieval.maintenance, MaintenanceConfig::default());
+        let off = MaintenanceConfig { drain_watermark: 0, ..Default::default() };
+        assert!(!off.enabled());
     }
 
     #[test]

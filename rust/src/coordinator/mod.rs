@@ -60,8 +60,13 @@ pub struct RequestMetrics {
     pub ttft_s: f64,
     /// Mean time per output token after the first (s).
     pub tpot_s: f64,
-    /// Summed decode phase breakdown.
+    /// Summed decode phase breakdown (includes index-maintenance time).
     pub breakdown: PhaseBreakdown,
+    /// Overflow tokens drained out of the linear-scan buffer (indexed, or
+    /// dropped under StreamingLLM semantics).
+    pub drained_tokens: u64,
+    /// Number of drain operations across the request's decode.
+    pub drains: u64,
 }
 
 struct Job {
@@ -251,6 +256,8 @@ fn worker_loop(
                 ttft_s: ttft,
                 tpot_s: if n_out > 1 { decode_total / (n_out - 1) as f64 } else { 0.0 },
                 breakdown: a.decode_bd,
+                drained_tokens: a.sess.drained_tokens,
+                drains: a.sess.drains,
             };
             // Decrement BEFORE the Done event so a client that reads Done
             // observes the freed capacity (load-balancing correctness).

@@ -228,7 +228,7 @@ pub fn fig8(ctx: &ExpCtx) -> Result<()> {
             let index = RoarGraph::build(
                 keys.clone(),
                 &g.queries,
-                RoarParams { kb: 32, m: 32, repair_sample: 256 },
+                RoarParams { kb: 32, m: 32, repair_sample: 256, ..RoarParams::default() },
             );
             let r = index.search(&q, 100, &SearchParams { ef: 128, nprobe: 0 });
             let hit = r.ids.contains(&(at as u32));

@@ -4,9 +4,10 @@
 //! both the accuracy ceiling (recall = 1.0 by construction) and the latency
 //! comparator that RetrievalAttention beats by 4.9× at 128K (Table 4).
 
-use super::{KeyStore, SearchParams, SearchResult, VectorIndex};
+use super::{InsertContext, KeyStore, SearchParams, SearchResult, VectorIndex};
 use crate::tensor::{argtopk, dot};
 use crate::util::parallel;
+use std::ops::Range;
 
 /// Brute-force maximum-inner-product index.
 pub struct FlatIndex {
@@ -56,6 +57,19 @@ impl VectorIndex for FlatIndex {
     fn memory_bytes(&self) -> usize {
         std::mem::size_of::<Self>()
     }
+
+    fn supports_insert(&self) -> bool {
+        true
+    }
+
+    /// Exact scan has no structure to maintain: adopt the grown store.
+    fn insert_batch(&mut self, keys: KeyStore, new: Range<usize>, _ctx: &InsertContext<'_>) -> bool {
+        debug_assert_eq!(keys.cols(), self.keys.cols());
+        debug_assert_eq!(new.end, keys.rows());
+        debug_assert_eq!(new.start, self.keys.rows());
+        self.keys = keys;
+        true
+    }
 }
 
 #[cfg(test)]
@@ -95,5 +109,19 @@ mod tests {
         let idx = FlatIndex::new(keys());
         let r = idx.search(&[1.0, 0.0, 0.0, 0.0], 0, &SearchParams::default());
         assert!(r.ids.is_empty());
+    }
+
+    #[test]
+    fn insert_extends_exact_scan() {
+        let base = keys();
+        let mut idx = FlatIndex::new(base.clone());
+        // Append a dominant vector along dim 2.
+        let mut grown = (*base).clone();
+        grown.push_row(&[0.0, 0.0, 9.0, 0.0]);
+        let n = grown.rows();
+        assert!(idx.insert_batch(Arc::new(grown), 8..n, &crate::index::InsertContext::none()));
+        assert_eq!(idx.len(), 9);
+        let r = idx.search(&[0.0, 0.0, 1.0, 0.0], 1, &SearchParams::default());
+        assert_eq!(r.ids, vec![8], "inserted vector must be searchable");
     }
 }

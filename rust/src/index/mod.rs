@@ -24,6 +24,7 @@ pub mod kmeans;
 pub mod roargraph;
 
 use crate::tensor::Matrix;
+use std::ops::Range;
 use std::sync::Arc;
 
 /// A search result: ids and scores sorted by score descending, plus the
@@ -64,12 +65,38 @@ impl Default for SearchParams {
     }
 }
 
+/// Context handed to online inserts.
+///
+/// The attention-aware index (RoarGraph) wires new keys using *queries*,
+/// not key/key closeness — for decoded tokens the natural training side is
+/// the recent decode queries, which come from exactly the distribution
+/// future decode queries will come from (the same argument §3.2 makes for
+/// prefill queries).
+#[derive(Clone, Copy, Default)]
+pub struct InsertContext<'a> {
+    /// Recent decode query vectors (one per row, oldest first). `None` or
+    /// empty ⇒ indexes fall back to key-space wiring.
+    pub recent_queries: Option<&'a Matrix>,
+}
+
+impl<'a> InsertContext<'a> {
+    pub fn none() -> InsertContext<'static> {
+        InsertContext { recent_queries: None }
+    }
+
+    fn queries(&self) -> Option<&'a Matrix> {
+        self.recent_queries.filter(|m| m.rows() > 0)
+    }
+}
+
 /// Common interface over all four index families.
 ///
-/// Indexes are immutable after construction (the decode phase never inserts:
-/// newly generated tokens land in the device-side sliding window, mirroring
-/// the paper's implementation) and `Send + Sync` so per-head searches can be
-/// fanned out on rayon (Appendix C, "Multi-head Parallelism").
+/// Indexes are **online**: construction happens once over the prefill keys,
+/// and decoded keys the sliding window has passed over are folded in through
+/// [`VectorIndex::insert_batch`] (RetroInfer-style "the KV cache is a live
+/// vector store"), keeping per-token decode cost bounded for arbitrarily
+/// long generations. Implementations are `Send + Sync` so per-head searches
+/// can be fanned out across threads (Appendix C, "Multi-head Parallelism").
 pub trait VectorIndex: Send + Sync {
     /// Number of indexed vectors.
     fn len(&self) -> usize;
@@ -87,11 +114,40 @@ pub trait VectorIndex: Send + Sync {
     /// Approximate heap bytes held by the index structure (excluding the
     /// shared key storage), for the memory accounting of Table 1.
     fn memory_bytes(&self) -> usize;
+
+    /// Whether this index family implements online inserts. Callers use
+    /// this to decide if an overflow buffer can be drained into the index.
+    fn supports_insert(&self) -> bool {
+        false
+    }
+
+    /// Fold freshly appended key vectors into the searchable set.
+    ///
+    /// `keys` **replaces** the shared key store: rows `[0, new.start)` must
+    /// be byte-identical to the previous store (dense ids are stable), rows
+    /// `new` are the appended vectors, and `new.end == keys.rows()`. All
+    /// indexes of one GQA group receive the same `Arc`, preserving the
+    /// single-key-copy-per-group memory layout (Appendix C).
+    ///
+    /// Returns `false` when the index family does not support online
+    /// maintenance (the default); callers then keep scanning the overflow
+    /// buffer linearly, i.e. the pre-insert behaviour.
+    fn insert_batch(&mut self, keys: KeyStore, new: Range<usize>, ctx: &InsertContext<'_>) -> bool {
+        let _ = (keys, new, ctx);
+        false
+    }
+
+    /// Single-vector convenience wrapper over [`VectorIndex::insert_batch`].
+    fn insert(&mut self, keys: KeyStore, id: usize, ctx: &InsertContext<'_>) -> bool {
+        self.insert_batch(keys, id..id + 1, ctx)
+    }
 }
 
-/// Shared, immutable key storage. One copy per GQA group is shared by all
-/// query-head indexes of the group (Appendix C, "Minimize the CPU Memory
-/// Usage"): each index stores only u32 ids into this store.
+/// Shared key storage. One copy per GQA group is shared by all query-head
+/// indexes of the group (Appendix C, "Minimize the CPU Memory Usage"):
+/// each index stores only u32 ids into this store. The matrix itself is
+/// immutable; online growth replaces the `Arc` wholesale (the old rows are
+/// a stable prefix of the new store — see [`VectorIndex::insert_batch`]).
 pub type KeyStore = Arc<Matrix>;
 
 /// Helper: exact top-k by brute force over a key store — the ground truth
@@ -133,6 +189,7 @@ impl VisitedSet {
             true
         }
     }
+
 }
 
 #[cfg(test)]

@@ -24,11 +24,29 @@
 //! Search is a plain best-first beam over the projected graph. Because the
 //! edges already encode the query→key mapping, a decode query reaches its
 //! true top-k scanning only 1–3% of keys (Fig 6).
+//!
+//! ## Online maintenance
+//!
+//! The base graph is frozen into CSR, but the index stays **online**
+//! (RetroInfer-style): keys decoded after prefill are folded in through
+//! [`VectorIndex::insert_batch`] with a *degree-bounded local repair*
+//! instead of a rebuild. New keys are wired attention-aware — the recent
+//! decode queries act as the bipartite training side (they are drawn from
+//! exactly the distribution future decode queries come from): each recent
+//! query's top-`kb` graph results and the batch keys it would retrieve are
+//! projected star/chain style, candidates ranked by (co-retrieval count,
+//! inner product) and cut to `m`. Reverse edges into frozen nodes live in a
+//! patch table so the CSR never reallocates; every inserted node keeps a
+//! protected edge from its primary anchor, preserving reachability under
+//! pruning. After `rebuild_threshold` pending inserts the whole graph is
+//! re-projected from the retained training queries, amortising the full
+//! build.
 
-use super::{KeyStore, SearchParams, SearchResult, VectorIndex, VisitedSet};
+use super::{InsertContext, KeyStore, SearchParams, SearchResult, VectorIndex, VisitedSet};
 use crate::tensor::{argtopk, dot, Matrix};
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
+use std::ops::Range;
 
 /// Build-time parameters.
 #[derive(Clone, Copy, Debug)]
@@ -39,23 +57,45 @@ pub struct RoarParams {
     pub m: usize,
     /// Sample size for connectivity repair candidate sets.
     pub repair_sample: usize,
+    /// Online inserts tolerated before a full re-projection; locally
+    /// repaired inserts amortise against this.
+    pub rebuild_threshold: usize,
 }
 
 impl Default for RoarParams {
     fn default() -> Self {
-        RoarParams { kb: 32, m: 32, repair_sample: 256 }
+        RoarParams { kb: 32, m: 32, repair_sample: 256, rebuild_threshold: 4096 }
     }
 }
+
+/// Training queries retained for rebuilds (prefill subsample + recent
+/// decode queries), capped so rebuild cost stays bounded.
+const TRAIN_CAP: usize = 1024;
 
 /// Attention-aware projected bipartite graph index.
 pub struct RoarGraph {
     keys: KeyStore,
-    /// Flattened CSR adjacency (degree-bounded).
+    /// Flattened CSR adjacency over the frozen base nodes `[0, base_n)`.
     offsets: Vec<u32>,
     edges: Vec<u32>,
     /// Entry points: keys closest (by IP) to the mean training query plus a
     /// few high-coverage nodes.
     entries: Vec<u32>,
+    params: RoarParams,
+    /// Number of nodes covered by the CSR; ids ≥ `base_n` were inserted
+    /// online and live in `extra`.
+    base_n: usize,
+    /// Extra out-edges of frozen nodes (reverse links to inserted nodes).
+    patch: HashMap<u32, Vec<u32>>,
+    /// Adjacency of inserted nodes, indexed by `id - base_n`.
+    extra: Vec<Vec<u32>>,
+    /// Per inserted node: the partner whose reverse edge is never pruned
+    /// (keeps the node reachable from the base graph).
+    primary_anchor: Vec<u32>,
+    /// Retained training queries for amortised rebuilds.
+    train: Matrix,
+    /// Inserts since the last (re)build.
+    pending: usize,
 }
 
 #[derive(Copy, Clone)]
@@ -140,7 +180,22 @@ impl RoarGraph {
         let entry_scores: Vec<f32> = (0..n).map(|i| dot(&mean_q, keys.row(i))).collect();
         let entries: Vec<u32> = argtopk(&entry_scores, 4.min(n)).into_iter().map(|i| i as u32).collect();
 
-        let mut graph = RoarGraph { keys, offsets: Vec::new(), edges: Vec::new(), entries };
+        // Retain a strided training subsample for amortised rebuilds.
+        let train = queries.subsample_strided(TRAIN_CAP);
+
+        let mut graph = RoarGraph {
+            keys,
+            offsets: Vec::new(),
+            edges: Vec::new(),
+            entries,
+            params,
+            base_n: n,
+            patch: HashMap::new(),
+            extra: Vec::new(),
+            primary_anchor: Vec::new(),
+            train,
+            pending: 0,
+        };
         let adjacency = graph.repair_connectivity(adjacency, params.repair_sample);
         graph.freeze(adjacency);
         graph
@@ -217,13 +272,84 @@ impl RoarGraph {
     }
 
     #[inline]
-    fn neighbors(&self, id: u32) -> &[u32] {
-        &self.edges[self.offsets[id as usize] as usize..self.offsets[id as usize + 1] as usize]
+    fn base_neighbors(&self, id: u32) -> &[u32] {
+        if (id as usize) < self.base_n {
+            &self.edges[self.offsets[id as usize] as usize..self.offsets[id as usize + 1] as usize]
+        } else {
+            &[]
+        }
     }
 
-    /// Average out-degree (diagnostics / tests).
+    /// Gather the full out-edge list of `id` (CSR base + patch/extra).
+    fn collect_neighbors(&self, id: u32, out: &mut Vec<u32>) {
+        out.clear();
+        out.extend_from_slice(self.base_neighbors(id));
+        if (id as usize) < self.base_n {
+            if let Some(p) = self.patch.get(&id) {
+                out.extend_from_slice(p);
+            }
+        } else {
+            out.extend_from_slice(&self.extra[id as usize - self.base_n]);
+        }
+    }
+
+    /// Average out-degree of the frozen base graph (diagnostics / tests).
     pub fn avg_degree(&self) -> f32 {
         self.edges.len() as f32 / (self.offsets.len() - 1).max(1) as f32
+    }
+
+    /// Nodes covered by the last full (re)build.
+    pub fn base_len(&self) -> usize {
+        self.base_n
+    }
+
+    /// Inserts since the last full (re)build.
+    pub fn pending_inserts(&self) -> usize {
+        self.pending
+    }
+
+    /// Add a reverse edge `from -> to`, respecting the degree bound; the
+    /// primary-anchor edge of an inserted node is never pruned away.
+    fn push_reverse_edge(&mut self, from: u32, to: u32) {
+        let cap = self.params.m.max(4);
+        // Disjoint field borrows: the target list is mutable while keys and
+        // anchors are read for pruning.
+        let RoarGraph { patch, extra, keys, primary_anchor, base_n, .. } = self;
+        let list = if (from as usize) < *base_n {
+            patch.entry(from).or_default()
+        } else {
+            &mut extra[from as usize - *base_n]
+        };
+        if list.contains(&to) {
+            return;
+        }
+        list.push(to);
+        if list.len() <= cap {
+            return;
+        }
+        // Prune to the `cap` highest-IP targets, keeping protected edges
+        // (from == primary anchor of an inserted target).
+        let mut scored: Vec<(bool, f32, u32)> = list
+            .iter()
+            .map(|&t| {
+                let protected = (t as usize) >= *base_n
+                    && primary_anchor[t as usize - *base_n] == from;
+                (protected, dot(keys.row(from as usize), keys.row(t as usize)), t)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.cmp(&a.0).then(b.1.total_cmp(&a.1)).then(a.2.cmp(&b.2)));
+        // Never drop a protected edge, even past the cap: orphaning an
+        // inserted node silently destroys its reachability invariant.
+        let keep = cap.max(scored.iter().filter(|s| s.0).count());
+        *list = scored.into_iter().take(keep).map(|(_, _, t)| t).collect();
+    }
+
+    /// Full re-projection over the current key store from the retained
+    /// training queries; clears the patch/extra overlays.
+    fn rebuild(&mut self) {
+        let keys = self.keys.clone();
+        let train = self.train.clone();
+        *self = RoarGraph::build(keys, &train, self.params);
     }
 }
 
@@ -240,6 +366,7 @@ impl VectorIndex for RoarGraph {
         let mut scanned = 0usize;
         let mut frontier: BinaryHeap<Cand> = BinaryHeap::new();
         let mut results: BinaryHeap<std::cmp::Reverse<Cand>> = BinaryHeap::new();
+        let mut nbuf: Vec<u32> = Vec::new();
 
         for &e in &self.entries {
             if visited.insert(e as usize) {
@@ -254,7 +381,8 @@ impl VectorIndex for RoarGraph {
             if results.len() >= ef && c.sim < worst {
                 break;
             }
-            for &nb in self.neighbors(c.id) {
+            self.collect_neighbors(c.id, &mut nbuf);
+            for &nb in &nbuf {
                 if visited.insert(nb as usize) {
                     let sim = dot(query, self.keys.row(nb as usize));
                     scanned += 1;
@@ -283,7 +411,169 @@ impl VectorIndex for RoarGraph {
     }
 
     fn memory_bytes(&self) -> usize {
-        self.offsets.len() * 4 + self.edges.len() * 4 + std::mem::size_of::<Self>()
+        self.offsets.len() * 4
+            + self.edges.len() * 4
+            + self.patch.values().map(|v| v.len() * 4 + 32).sum::<usize>()
+            + self.extra.iter().map(|v| v.len() * 4 + 24).sum::<usize>()
+            + self.train.as_slice().len() * 4
+            + std::mem::size_of::<Self>()
+    }
+
+    fn supports_insert(&self) -> bool {
+        true
+    }
+
+    /// Degree-bounded local repair with recent decode queries as the
+    /// bipartite training side (see module docs).
+    fn insert_batch(&mut self, keys: KeyStore, new: Range<usize>, ctx: &InsertContext<'_>) -> bool {
+        debug_assert_eq!(keys.cols(), self.keys.cols());
+        debug_assert_eq!(new.end, keys.rows());
+        debug_assert_eq!(new.start, self.keys.rows());
+        if new.is_empty() {
+            self.keys = keys;
+            return true;
+        }
+        self.keys = keys;
+        let total = self.keys.rows();
+        self.extra.resize(total - self.base_n, Vec::new());
+        self.primary_anchor.resize(total - self.base_n, u32::MAX);
+
+        let kb = self.params.kb.min(total).max(2);
+        let search_params = SearchParams { ef: kb.max(64), nprobe: 0 };
+
+        // --- Attention-aware candidate generation: each recent decode
+        // query retrieves its top-kb from the existing graph; batch keys
+        // that would make that list are projected star/chain-style into
+        // the same list, crediting co-retrieval counts.
+        let mut counts: HashMap<(u32, u32), u32> = HashMap::new();
+        let credit = |a: u32, b: u32, counts: &mut HashMap<(u32, u32), u32>| {
+            if a == b {
+                return;
+            }
+            let key = if a < b { (a, b) } else { (b, a) };
+            *counts.entry(key).or_insert(0) += 1;
+        };
+        if let Some(qs) = ctx.queries() {
+            for qi in 0..qs.rows() {
+                let q = qs.row(qi);
+                let res = self.search(q, kb, &search_params);
+                let min_score = res.scores.last().copied().unwrap_or(f32::NEG_INFINITY);
+                let mut combined: Vec<Cand> = res
+                    .ids
+                    .iter()
+                    .zip(res.scores.iter())
+                    .map(|(&id, &sim)| Cand { sim, id })
+                    .collect();
+                for j in new.clone() {
+                    let sim = dot(q, self.keys.row(j));
+                    if sim >= min_score || combined.len() < kb {
+                        combined.push(Cand { sim, id: j as u32 });
+                    }
+                }
+                combined.sort_by(|a, b| b.cmp(a));
+                combined.truncate(kb);
+                // Only project pairs touching the online region: the base
+                // CSR already encodes base↔base co-retrieval.
+                let onl = |id: u32| (id as usize) >= self.base_n;
+                if combined.len() < 2 {
+                    continue;
+                }
+                let anchor = combined[0].id;
+                for w in combined.windows(2) {
+                    if onl(w[0].id) || onl(w[1].id) {
+                        credit(w[0].id, w[1].id, &mut counts);
+                    }
+                }
+                for c in &combined[1..] {
+                    if onl(anchor) || onl(c.id) {
+                        credit(anchor, c.id, &mut counts);
+                    }
+                }
+            }
+        }
+
+        // Per-batch-node candidate lists from the projection.
+        let mut cand: HashMap<u32, Vec<(u32, u32)>> = HashMap::new(); // node -> (partner, count)
+        for (&(a, b), &cnt) in &counts {
+            for (x, y) in [(a, b), (b, a)] {
+                if (x as usize) >= new.start {
+                    cand.entry(x).or_default().push((y, cnt));
+                }
+            }
+        }
+
+        // --- Wire each batch node: projection candidates ranked by
+        // (co-retrieval count, IP), key-space beam search as fallback for
+        // nodes no recent query claimed.
+        for j in new.clone() {
+            let jid = j as u32;
+            let mut ranked: Vec<(u32, f32, u32)> = cand
+                .remove(&jid)
+                .unwrap_or_default()
+                .into_iter()
+                .map(|(p, cnt)| (cnt, dot(self.keys.row(j), self.keys.row(p as usize)), p))
+                .collect();
+            // Tie-break by id: candidate lists come out of a HashMap, so
+            // without it equal (count, IP) pairs would keep randomized
+            // iteration order and the wired graph would differ run-to-run.
+            ranked.sort_by(|a, b| {
+                b.0.cmp(&a.0).then(b.1.total_cmp(&a.1)).then(a.2.cmp(&b.2))
+            });
+            let mut selected: Vec<u32> = ranked
+                .into_iter()
+                .filter(|&(_, _, p)| p != jid)
+                .take(self.params.m)
+                .map(|(_, _, p)| p)
+                .collect();
+            // Reachability guarantee: every online node keeps one protected
+            // edge from an *already-reachable* partner (base node or an
+            // earlier-wired online node — reachable by induction). If the
+            // recent queries only paired it with later batch members — or
+            // claimed it not at all — fall back to a key-space beam over
+            // the wired graph (the beam starts at the entries, so anything
+            // it returns is reachable right now).
+            let mut anchor = selected.iter().copied().find(|&p| (p as usize) < j);
+            if anchor.is_none() {
+                let res =
+                    self.search(self.keys.row(j), self.params.m.min(8).max(2), &search_params);
+                if let Some(&found) = res.ids.iter().find(|&&id| id != jid) {
+                    if !selected.contains(&found) {
+                        selected.insert(0, found);
+                        selected.truncate(self.params.m.max(1));
+                    }
+                    anchor = Some(found);
+                }
+            }
+            if let Some(a) = anchor {
+                self.primary_anchor[j - self.base_n] = a;
+            }
+            // Merge (not overwrite): earlier batch members may already have
+            // pushed reverse edges into this node's list.
+            let slot = j - self.base_n;
+            for p in selected.clone() {
+                if !self.extra[slot].contains(&p) {
+                    self.extra[slot].push(p);
+                }
+            }
+            for &p in &selected {
+                self.push_reverse_edge(p, jid);
+            }
+        }
+
+        // --- Fold the recent queries into the retained training set and
+        // rebuild once enough inserts have accumulated.
+        if let Some(qs) = ctx.queries() {
+            let mut train = std::mem::replace(&mut self.train, Matrix::zeros(0, 0));
+            for qi in 0..qs.rows() {
+                train.push_row(qs.row(qi));
+            }
+            self.train = train.keep_last_rows(TRAIN_CAP);
+        }
+        self.pending += new.len();
+        if self.pending >= self.params.rebuild_threshold.max(1) {
+            self.rebuild();
+        }
+        true
     }
 }
 
@@ -291,7 +581,7 @@ impl VectorIndex for RoarGraph {
 mod tests {
     use super::*;
     use crate::index::exact_topk;
-    
+
     use crate::util::rng::Rng;
     use std::sync::Arc;
 
@@ -348,7 +638,7 @@ mod tests {
     #[test]
     fn degree_bounded() {
         let (keys, queries) = ood_setup(1000, 200, 8, 5);
-        let params = RoarParams { kb: 16, m: 8, repair_sample: 64 };
+        let params = RoarParams { kb: 16, m: 8, repair_sample: 64, ..RoarParams::default() };
         let idx = RoarGraph::build(keys, &queries, params);
         // m + repair edges; allow slack of a few repair links.
         assert!(idx.avg_degree() <= 12.0, "avg degree too high: {}", idx.avg_degree());
@@ -361,5 +651,59 @@ mod tests {
         let idx = RoarGraph::build(keys, &queries, RoarParams::default());
         let r = idx.search(&[0.5, 0.5, 0.0, 0.0], 3, &SearchParams::default());
         assert_eq!(r.ids, vec![0]);
+    }
+
+    #[test]
+    fn inserted_nodes_searchable_and_reachable() {
+        let (keys, queries) = ood_setup(600, 80, 8, 41);
+        let mut idx = RoarGraph::build(keys.clone(), &queries, RoarParams::default());
+        // Grow the store by 40 keys drawn from the same process.
+        let (more, recent_q) = ood_setup(40, 16, 8, 42);
+        let mut grown = (*keys).clone();
+        for r in 0..more.rows() {
+            grown.push_row(more.row(r));
+        }
+        let grown = Arc::new(grown);
+        let ctx = InsertContext { recent_queries: Some(&recent_q) };
+        assert!(idx.insert_batch(grown.clone(), 600..640, &ctx));
+        assert_eq!(idx.len(), 640);
+        assert_eq!(idx.base_len(), 600);
+        assert_eq!(idx.pending_inserts(), 40);
+        // Every node — frozen and inserted — reachable under a full beam.
+        let r = idx.search(&vec![0.0f32; 8], 640, &SearchParams { ef: 640, nprobe: 0 });
+        assert_eq!(r.ids.len(), 640, "inserted nodes unreachable");
+        // An inserted key queried directly must surface itself.
+        let r = idx.search(grown.row(615), 5, &SearchParams { ef: 64, nprobe: 0 });
+        assert!(r.ids.contains(&615), "inserted key not retrieved: {:?}", r.ids);
+    }
+
+    #[test]
+    fn insert_without_queries_falls_back_to_key_space() {
+        let (keys, queries) = ood_setup(300, 40, 8, 51);
+        let mut idx = RoarGraph::build(keys.clone(), &queries, RoarParams::default());
+        let mut grown = (*keys).clone();
+        grown.push_row(&[9.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert!(idx.insert_batch(Arc::new(grown), 300..301, &InsertContext::none()));
+        let r = idx.search(&[1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0], 3, &SearchParams::default());
+        assert!(r.ids.contains(&300), "fallback-wired key not retrieved");
+    }
+
+    #[test]
+    fn rebuild_threshold_triggers_reprojection() {
+        let (keys, queries) = ood_setup(200, 60, 8, 61);
+        let params = RoarParams { rebuild_threshold: 32, ..RoarParams::default() };
+        let mut idx = RoarGraph::build(keys.clone(), &queries, params);
+        let (more, recent_q) = ood_setup(64, 16, 8, 62);
+        let mut grown = (*keys).clone();
+        for r in 0..more.rows() {
+            grown.push_row(more.row(r));
+        }
+        let ctx = InsertContext { recent_queries: Some(&recent_q) };
+        assert!(idx.insert_batch(Arc::new(grown), 200..264, &ctx));
+        // 64 >= threshold 32: the graph must have re-projected over all keys.
+        assert_eq!(idx.base_len(), 264, "rebuild did not trigger");
+        assert_eq!(idx.pending_inserts(), 0);
+        let r = idx.search(&vec![0.0f32; 8], 264, &SearchParams { ef: 264, nprobe: 0 });
+        assert_eq!(r.ids.len(), 264, "rebuild lost nodes");
     }
 }

@@ -9,10 +9,13 @@
 //!   organised by an ANNS index, retrieved per decode query.
 //!
 //! Tokens generated during decode enter the sliding window; tokens the
-//! window slides past land in a small unindexed *overflow* buffer that is
-//! linearly scanned (generation is short relative to the context, so this
-//! buffer stays tiny; the paper's implementation behaves the same way —
-//! the index is built once, at prefill).
+//! window slides past land in a small *overflow* buffer that is attended
+//! exactly (linear scan) until the engine drains it into the ANN index on
+//! a configurable watermark ([`TieredKvCache::advance_indexed`] moves the
+//! indexed/overflow boundary). The paper builds its index once at prefill
+//! and lets the overflow grow; treating the KV cache as a *live* vector
+//! store instead (RetroInfer, arXiv:2505.02922) keeps per-token decode
+//! cost bounded for arbitrarily long generations.
 
 pub mod paged;
 
@@ -37,12 +40,14 @@ impl StaticPattern {
 
     /// Device-resident index ranges at sequence length `len`:
     /// `[0, sink)` and `[len - window, len)`, clipped and deduplicated when
-    /// the sequence is shorter than the pattern.
+    /// the sequence is shorter than the pattern. The subtraction saturates
+    /// so degenerate patterns (`window > len` with a short sink, `window ==
+    /// 0`) can never underflow `usize`.
     pub fn device_ranges(&self, len: usize) -> (Range<usize>, Range<usize>) {
         if len <= self.total() {
             return (0..len, len..len);
         }
-        (0..self.sink, len - self.window..len)
+        (0..self.sink.min(len), len.saturating_sub(self.window)..len)
     }
 
     /// True iff token `i` (at current length `len`) is device-resident.
@@ -66,6 +71,11 @@ pub struct TieredKvCache {
     pattern: StaticPattern,
     /// Sequence length at the moment the index was (or would be) built.
     prefill_len: usize,
+    /// One past the last host token covered by the ANN index. Starts at
+    /// the prefill boundary (`prefill_len - window`, floored at `sink`)
+    /// and advances when the engine drains the overflow buffer via
+    /// [`TieredKvCache::advance_indexed`].
+    indexed_end: usize,
 }
 
 impl TieredKvCache {
@@ -76,6 +86,7 @@ impl TieredKvCache {
             values: Matrix::zeros(0, d),
             pattern,
             prefill_len: 0,
+            indexed_end: 0,
         }
     }
 
@@ -94,12 +105,17 @@ impl TieredKvCache {
         assert_eq!(keys.rows(), values.rows());
         self.keys = keys;
         self.values = values;
-        self.prefill_len = self.keys.rows();
+        self.seal_prefill();
     }
 
     /// Mark the current length as the prefill boundary (after appends).
     pub fn seal_prefill(&mut self) {
         self.prefill_len = self.keys.rows();
+        self.indexed_end = if self.prefill_len > self.pattern.total() {
+            self.prefill_len - self.pattern.window
+        } else {
+            self.pattern.sink
+        };
     }
 
     pub fn len(&self) -> usize {
@@ -146,30 +162,55 @@ impl TieredKvCache {
         a.chain(b).map(|i| i as u32).collect()
     }
 
-    /// Host-side *indexed* ids: prefill tokens that are neither sink nor
-    /// were inside the window at prefill time. These are the vectors the
-    /// ANNS index is built over.
+    /// Host-side *indexed* ids: tokens the ANNS index currently covers —
+    /// the prefill host set plus every overflow token drained so far.
     pub fn indexed_ids(&self) -> Vec<u32> {
-        if self.prefill_len <= self.pattern.total() {
+        if self.indexed_end <= self.pattern.sink {
             return Vec::new();
         }
-        (self.pattern.sink..self.prefill_len - self.pattern.window).map(|i| i as u32).collect()
+        (self.pattern.sink..self.indexed_end).map(|i| i as u32).collect()
+    }
+
+    /// One past the last indexed host token (the drain boundary).
+    pub fn indexed_end(&self) -> usize {
+        self.indexed_end.max(self.pattern.sink)
     }
 
     /// Host-side *overflow* ids: tokens the sliding window has passed over
-    /// since prefill — on the host but not in the index; scanned linearly.
+    /// but the index does not cover yet — scanned linearly until drained.
     pub fn overflow_ids(&self) -> Vec<u32> {
         let len = self.len();
         if len <= self.pattern.total() {
             return Vec::new();
         }
         let window_start = len - self.pattern.window;
-        let indexed_end = if self.prefill_len > self.pattern.total() {
-            self.prefill_len - self.pattern.window
-        } else {
-            self.pattern.sink.min(window_start)
-        };
-        (indexed_end.max(self.pattern.sink)..window_start).map(|i| i as u32).collect()
+        let lo = self.indexed_end.max(self.pattern.sink).min(window_start);
+        (lo..window_start).map(|i| i as u32).collect()
+    }
+
+    /// Number of overflow tokens without materialising the id list (the
+    /// per-step watermark check runs on every decode token).
+    pub fn overflow_len(&self) -> usize {
+        let len = self.len();
+        if len <= self.pattern.total() {
+            return 0;
+        }
+        let window_start = len - self.pattern.window;
+        window_start - self.indexed_end.max(self.pattern.sink).min(window_start)
+    }
+
+    /// Record that host tokens below `upto` are now covered by the ANN
+    /// index (the engine calls this after a successful overflow drain).
+    /// Clamped to the current window start: device-resident tokens can
+    /// never be marked as indexed.
+    pub fn advance_indexed(&mut self, upto: usize) {
+        let len = self.len();
+        if len <= self.pattern.total() {
+            return;
+        }
+        let window_start = len - self.pattern.window;
+        let bounded = upto.min(window_start);
+        self.indexed_end = self.indexed_end.max(self.pattern.sink).max(bounded);
     }
 
     /// Copy the indexed host keys into a standalone matrix (for index
@@ -260,6 +301,95 @@ mod tests {
         let (a, b) = p.device_ranges(50);
         assert_eq!(a, 0..50);
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn device_ranges_short_context_regressions() {
+        // Regression: every len < sink + window must clip, not underflow.
+        let p = StaticPattern { sink: 128, window: 512 };
+        for len in [0usize, 1, 127, 128, 129, 511, 512, 513, 639, 640] {
+            let (a, b) = p.device_ranges(len);
+            assert_eq!(a, 0..len, "len={len}");
+            assert!(b.is_empty(), "len={len}");
+            for i in 0..len {
+                assert!(p.on_device(i, len), "token {i} must be on device at len={len}");
+            }
+        }
+        // One past the pattern: both ranges non-degenerate, disjoint.
+        let (a, b) = p.device_ranges(641);
+        assert_eq!(a, 0..128);
+        assert_eq!(b, 129..641);
+        // Degenerate patterns stay clipped too.
+        let zero_window = StaticPattern { sink: 4, window: 0 };
+        let (a, b) = zero_window.device_ranges(10);
+        assert_eq!(a, 0..4);
+        assert_eq!(b, 10..10);
+        let zero_sink = StaticPattern { sink: 0, window: 8 };
+        let (a, b) = zero_sink.device_ranges(9);
+        assert!(a.is_empty());
+        assert_eq!(b, 1..9);
+    }
+
+    #[test]
+    fn advance_indexed_drains_overflow() {
+        let pattern = StaticPattern { sink: 8, window: 16 };
+        let mut c = filled(100, 4, pattern);
+        for i in 0..40 {
+            let k = vec![i as f32; 4];
+            c.append(&k, &k);
+        }
+        // Overflow = prefill boundary (100-16=84) .. window start (140-16=124).
+        assert_eq!(c.overflow_ids(), (84..124).collect::<Vec<u32>>());
+        assert_eq!(c.overflow_len(), c.overflow_ids().len());
+        assert_eq!(c.indexed_end(), 84);
+        // Drain everything currently in overflow.
+        c.advance_indexed(124);
+        assert!(c.overflow_ids().is_empty(), "drained overflow must vanish");
+        assert_eq!(c.overflow_len(), 0);
+        assert_eq!(c.indexed_ids(), (8..124).collect::<Vec<u32>>());
+        // Tiers still partition every token exactly once.
+        let mut all: Vec<u32> = c.device_ids();
+        all.extend(c.indexed_ids());
+        all.extend(c.overflow_ids());
+        all.sort_unstable();
+        assert_eq!(all, (0..140).collect::<Vec<u32>>());
+        // Further decode re-accumulates overflow after the drain point.
+        for i in 0..10 {
+            let k = vec![i as f32; 4];
+            c.append(&k, &k);
+        }
+        assert_eq!(c.overflow_ids(), (124..134).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn advance_indexed_clamps_to_window() {
+        let pattern = StaticPattern { sink: 4, window: 8 };
+        let mut c = filled(64, 2, pattern);
+        // Requesting past the window start must clamp (device tokens can
+        // never be marked indexed), and short caches must be no-ops.
+        c.advance_indexed(1000);
+        assert_eq!(c.indexed_end(), 64 - 8);
+        assert!(c.overflow_ids().is_empty());
+        let mut short = filled(6, 2, pattern);
+        short.advance_indexed(1000);
+        assert!(short.indexed_ids().is_empty());
+        assert_eq!(short.device_ids().len(), 6);
+    }
+
+    #[test]
+    fn short_prefill_overflow_drains_too() {
+        // Prompt fits the device pattern; decode pushes past it. The
+        // overflow (never indexed at prefill) must be drainable.
+        let pattern = StaticPattern { sink: 4, window: 8 };
+        let mut c = filled(10, 2, pattern);
+        for _ in 0..20 {
+            c.append(&[0.0, 0.0], &[0.0, 0.0]);
+        }
+        // len=30 > 12: overflow = sink..window_start = 4..22.
+        assert_eq!(c.overflow_ids(), (4..22).collect::<Vec<u32>>());
+        c.advance_indexed(22);
+        assert!(c.overflow_ids().is_empty());
+        assert_eq!(c.indexed_ids(), (4..22).collect::<Vec<u32>>());
     }
 
     #[test]

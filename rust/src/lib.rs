@@ -8,18 +8,29 @@
 //!
 //! * [`tensor`] — minimal dense f32 linear algebra used by the host-side
 //!   (CPU) attention and index code.
-//! * [`index`] — the ANNS substrate: exact KNN ([`index::flat`]), IVF
-//!   ([`index::ivf`]), HNSW ([`index::hnsw`]), and the paper's
-//!   attention-aware projected bipartite graph ([`index::roargraph`]).
-//! * [`kvcache`] — paged KV storage with device/host tiering and
-//!   static-pattern (sink + window) selection.
+//! * [`index`] — the **online** ANNS substrate: exact KNN
+//!   ([`index::flat`]), IVF ([`index::ivf`]), HNSW ([`index::hnsw`]), and
+//!   the paper's attention-aware projected bipartite graph
+//!   ([`index::roargraph`]). Every family supports
+//!   [`index::VectorIndex::insert_batch`], so keys decoded after prefill
+//!   are folded in (RoarGraph wires them attention-aware from recent
+//!   decode queries, with a degree-bounded local repair and an amortised
+//!   rebuild threshold).
+//! * [`kvcache`] — paged KV storage with device/host tiering,
+//!   static-pattern (sink + window) selection, and the indexed/overflow
+//!   drain boundary for online maintenance.
 //! * [`attention`] — full/sparse attention, the exact two-set
 //!   gamma-combine of Appendix B, and sparsity/OOD profiling.
 //! * [`baselines`] — StreamingLLM, SnapKV, InfLLM, Quest, InfiniGen and a
 //!   vLLM-like full-cache comparator.
 //! * [`model`] — synthetic GQA transformer presets plus a constructed
-//!   induction-head model used for end-to-end task accuracy.
-//! * [`runtime`] — PJRT artifact loading and execution (the "device").
+//!   induction-head model used for end-to-end task accuracy. The engine
+//!   drains overflow buffers into the per-head indexes on a configurable
+//!   watermark, keeping per-token decode cost bounded for arbitrarily
+//!   long generations.
+//! * [`runtime`] — artifact loading and execution (the "device"): PJRT
+//!   when compiled artifacts exist, a native Rust executor of the same
+//!   entry points otherwise.
 //! * [`coordinator`] — request scheduling, batching, sessions, routing.
 //! * [`server`] — tokio front-end (in-process + TCP json-lines).
 //! * [`workload`] — ∞-Bench/RULER/needle-style synthetic task generators.

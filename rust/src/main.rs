@@ -163,12 +163,16 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let (tokens, metrics) = collect(&events)?;
     println!("generated: {tokens:?}");
     println!(
-        "grade: {:.0}% | prefill {:.2}s | ttft {:.3}s | tpot {:.4}s | search share {:.0}%",
+        "grade: {:.0}% | prefill {:.2}s | ttft {:.3}s | tpot {:.4}s | search share {:.0}% \
+         | index drains {} ({} tokens, {:.0}% of step time)",
         sample.grade(&tokens) * 100.0,
         metrics.prefill_s,
         metrics.ttft_s,
         metrics.tpot_s,
-        metrics.breakdown.search_share() * 100.0
+        metrics.breakdown.search_share() * 100.0,
+        metrics.drains,
+        metrics.drained_tokens,
+        metrics.breakdown.maintenance_share() * 100.0
     );
     Ok(())
 }
@@ -191,17 +195,30 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
+    use retrieval_attention::runtime::manifest::{Manifest, PresetMeta, SpecMeta};
     let dir = args.get("artifacts").unwrap_or("artifacts");
-    let manifest =
-        retrieval_attention::runtime::manifest::Manifest::load(format!("{dir}/manifest.json"))?;
-    println!("artifacts: {dir}");
-    for (name, preset) in &manifest.presets {
+    let print_preset = |name: &str, preset: &PresetMeta| {
         let s = &preset.spec;
         println!(
             "  {name}: {} layers, {}q/{}kv heads, d_head {}, d_model {}, vocab {}, norm {}, {} artifacts",
             s.layers, s.q_heads, s.kv_heads, s.head_dim, s.d_model, s.vocab, s.norm,
             preset.artifacts.len()
         );
+    };
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        // A present-but-unparseable manifest is an error the user needs to
+        // see, not a reason to silently fall back to built-in presets.
+        let manifest = Manifest::load(format!("{dir}/manifest.json"))?;
+        println!("artifacts: {dir}");
+        for (name, preset) in &manifest.presets {
+            print_preset(name, preset);
+        }
+    } else {
+        println!("artifacts: {dir} missing — native backend presets:");
+        for name in SpecMeta::builtin_names() {
+            let preset = PresetMeta::builtin(name).expect("builtin preset");
+            print_preset(name, &preset);
+        }
     }
     Ok(())
 }

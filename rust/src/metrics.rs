@@ -64,20 +64,23 @@ impl LatencyHistogram {
     }
 }
 
-/// The decode-phase breakdown reported in Table 5.
+/// The decode-phase breakdown reported in Table 5, plus the online
+/// index-maintenance phase (overflow drains into the ANN index).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PhaseBreakdown {
     /// Vector-index search time (s).
     pub search: f64,
     /// Attention compute time, host + device (s).
     pub attention: f64,
+    /// Online index maintenance: overflow drains + graph repair (s).
+    pub maintenance: f64,
     /// Everything else (projections, FFN, sampling, bookkeeping) (s).
     pub other: f64,
 }
 
 impl PhaseBreakdown {
     pub fn total(&self) -> f64 {
-        self.search + self.attention + self.other
+        self.search + self.attention + self.maintenance + self.other
     }
 
     /// Fraction of the step spent in vector search — the paper's headline
@@ -90,14 +93,29 @@ impl PhaseBreakdown {
         }
     }
 
+    /// Fraction of the step spent maintaining the online index.
+    pub fn maintenance_share(&self) -> f64 {
+        if self.total() == 0.0 {
+            0.0
+        } else {
+            self.maintenance / self.total()
+        }
+    }
+
     pub fn add(&mut self, o: &PhaseBreakdown) {
         self.search += o.search;
         self.attention += o.attention;
+        self.maintenance += o.maintenance;
         self.other += o.other;
     }
 
     pub fn scale(&self, f: f64) -> PhaseBreakdown {
-        PhaseBreakdown { search: self.search * f, attention: self.attention * f, other: self.other * f }
+        PhaseBreakdown {
+            search: self.search * f,
+            attention: self.attention * f,
+            maintenance: self.maintenance * f,
+            other: self.other * f,
+        }
     }
 }
 
@@ -146,9 +164,16 @@ mod tests {
 
     #[test]
     fn breakdown_shares() {
-        let b = PhaseBreakdown { search: 0.34, attention: 0.5, other: 0.16 };
+        let b = PhaseBreakdown { search: 0.34, attention: 0.4, maintenance: 0.1, other: 0.16 };
         assert!((b.total() - 1.0).abs() < 1e-12);
         assert!((b.search_share() - 0.34).abs() < 1e-12);
+        assert!((b.maintenance_share() - 0.1).abs() < 1e-12);
+        let doubled = b.scale(2.0);
+        assert!((doubled.maintenance - 0.2).abs() < 1e-12);
+        let mut acc = PhaseBreakdown::default();
+        acc.add(&b);
+        acc.add(&b);
+        assert!((acc.maintenance - 0.2).abs() < 1e-12);
     }
 
     #[test]

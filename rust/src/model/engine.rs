@@ -8,9 +8,14 @@
 //!    `static_attn` artifact (Pallas flash_decode inside);
 //! 2. host partial attention over the retrieved set `Ω` (per-query-head
 //!    retrieval fanned out across threads, Appendix C) plus the small
-//!    unindexed overflow buffer;
+//!    overflow buffer of not-yet-indexed tokens;
 //! 3. exact γ-combine of the partials (Eq. 4/5);
-//! 4. FFN/projections via the per-op artifacts, greedy sampling.
+//! 4. FFN/projections via the per-op artifacts, greedy sampling;
+//! 5. online index maintenance: overflow buffers past the configured
+//!    watermark are drained into the per-head ANN indexes (batched,
+//!    parallel across GQA groups), with the recent decode queries as
+//!    RoarGraph's attention-aware wiring context — decode cost stays
+//!    bounded for arbitrarily long generations.
 //!
 //! Prefill streams the prompt through the B=256 artifacts, computes exact
 //! causal attention on the host (the "GPU prefill" of §3.3 — full
@@ -21,6 +26,7 @@
 use crate::attention::{attend_subset, combine, PartialAttention};
 use crate::baselines::{build_retriever, HostRetriever, RetrieverInputs};
 use crate::config::{Method, ServeConfig};
+use crate::index::InsertContext;
 use crate::kvcache::TieredKvCache;
 use crate::metrics::{PhaseBreakdown, PhaseTimer};
 use crate::model::weights::Weights;
@@ -66,12 +72,23 @@ struct WeightBuffers {
 
 /// Per-request decode state.
 pub struct Session {
+    /// The retrieval method this session's retrievers were built for (may
+    /// differ from the engine's configured method via
+    /// [`Engine::session_for_method`] / [`Engine::synthetic_session`]).
+    pub method: Method,
     /// KV caches per (layer, kv_head): `caches[layer][kv_head]`.
     pub caches: Vec<Vec<TieredKvCache>>,
     /// Prefill query history per (layer, q_head).
     pub q_history: Vec<Vec<Matrix>>,
     /// Host retrievers per (layer, q_head), built after prefill.
     pub retrievers: Vec<Vec<Arc<dyn HostRetriever>>>,
+    /// Dense host key store per (layer, kv_head): the single key copy the
+    /// group's retrievers index into (Appendix C); grown by overflow
+    /// drains.
+    pub host_stores: Vec<Vec<Arc<Matrix>>>,
+    /// Recent decode queries per (layer, q_head) (bounded ring, oldest
+    /// first): the bipartite training side for attention-aware inserts.
+    pub recent_q: Vec<Vec<Matrix>>,
     /// Hidden state of the last processed token.
     pub x_last: Vec<f32>,
     /// Tokens processed so far.
@@ -79,12 +96,34 @@ pub struct Session {
     /// Scan statistics (for Table 5 / Fig 6 accounting).
     pub scanned_total: u64,
     pub retrievals: u64,
+    /// Overflow tokens drained out of the linear-scan buffer so far —
+    /// folded into the ANN index, or dropped outright under StreamingLLM
+    /// semantics.
+    pub drained_tokens: u64,
+    /// Number of drain operations performed.
+    pub drains: u64,
 }
 
 /// One decode step's outputs.
 pub struct DecodeOutput {
     pub token: u32,
     pub breakdown: PhaseBreakdown,
+}
+
+/// Retriever construction result: per-(layer, q_head) retrievers plus the
+/// per-(layer, kv_head) dense host key stores they index into.
+type RetrieverBuild = (Vec<Vec<Arc<dyn HostRetriever>>>, Vec<Vec<Arc<Matrix>>>);
+
+/// Append one query to a bounded ring (oldest rows evicted by periodic
+/// compaction, amortised O(1) per push).
+fn push_recent(ring: &mut Matrix, q: &[f32], cap: usize) {
+    if cap == 0 {
+        return;
+    }
+    ring.push_row(q);
+    if ring.rows() > cap * 2 {
+        *ring = ring.keep_last_rows(cap);
+    }
 }
 
 impl Engine {
@@ -117,10 +156,11 @@ impl Engine {
         Ok(Engine { rt, weights, cfg, lits })
     }
 
-    /// Load an engine from a config: runtime from `artifacts_dir`, weights
-    /// by preset convention (induction construction or seeded random).
+    /// Load an engine from a config: runtime from `artifacts_dir` (PJRT
+    /// when artifacts exist, the native backend otherwise), weights by
+    /// preset convention (induction construction or seeded random).
     pub fn from_config(cfg: ServeConfig) -> Result<Engine> {
-        let rt = Runtime::load(&cfg.artifacts_dir, &cfg.model)
+        let rt = Runtime::load_auto(&cfg.artifacts_dir, &cfg.model)
             .with_context(|| format!("loading preset {}", cfg.model))?;
         let spec = rt.meta().spec.clone();
         let weights = if crate::model::induction::is_induction(&spec) {
@@ -228,16 +268,30 @@ impl Engine {
             }
         }
 
-        let retrievers = self.build_retrievers(&caches, &q_history)?;
+        let (retrievers, host_stores) = self.build_retrievers(&caches, &q_history)?;
+        let recent_q = self.empty_recent_rings();
         Ok(Session {
+            method: self.cfg.method,
             caches,
             q_history,
             retrievers,
+            host_stores,
+            recent_q,
             x_last,
             len: n,
             scanned_total: 0,
             retrievals: 0,
+            drained_tokens: 0,
+            drains: 0,
         })
+    }
+
+    /// Fresh (empty) recent-query rings, one per (layer, q_head).
+    fn empty_recent_rings(&self) -> Vec<Vec<Matrix>> {
+        let spec = self.spec();
+        (0..spec.layers)
+            .map(|_| (0..spec.q_heads).map(|_| Matrix::zeros(0, spec.head_dim)).collect())
+            .collect()
     }
 
     /// Exact causal attention for a prefill chunk (host side).
@@ -279,17 +333,19 @@ impl Engine {
         &self,
         caches: &[Vec<TieredKvCache>],
         q_history: &[Vec<Matrix>],
-    ) -> Result<Vec<Vec<Arc<dyn HostRetriever>>>> {
+    ) -> Result<RetrieverBuild> {
         self.build_retrievers_with(caches, q_history, self.cfg.method)
     }
 
-    /// Build host retrievers for an explicit method.
+    /// Build host retrievers for an explicit method. Also returns the
+    /// per-(layer, kv_head) dense host key stores the retrievers index
+    /// into — the engine keeps them to grow the searchable set on drains.
     fn build_retrievers_with(
         &self,
         caches: &[Vec<TieredKvCache>],
         q_history: &[Vec<Matrix>],
         method: Method,
-    ) -> Result<Vec<Vec<Arc<dyn HostRetriever>>>> {
+    ) -> Result<RetrieverBuild> {
         let spec = self.spec();
         let group = spec.group_size();
         // Copy the bits the parallel closure needs so it does not capture
@@ -298,6 +354,7 @@ impl Engine {
         let cfg = self.cfg.retrieval;
         let seed = self.cfg.seed;
         let mut retrievers = Vec::with_capacity(spec.layers);
+        let mut host_stores: Vec<Vec<Arc<Matrix>>> = Vec::with_capacity(spec.layers);
         for layer in 0..spec.layers {
             // Share one dense host-key copy per kv head (Appendix C).
             let shared: Vec<(Arc<Matrix>, Arc<Vec<u32>>)> = (0..spec.kv_heads)
@@ -306,6 +363,7 @@ impl Engine {
                     (Arc::new(cache.indexed_keys_matrix()), Arc::new(cache.indexed_ids()))
                 })
                 .collect();
+            host_stores.push(shared.iter().map(|(k, _)| k.clone()).collect());
             // Per-query-head retrievers build in parallel (index
             // construction is the expensive part).
             let heads: Vec<usize> = (0..spec.q_heads).collect();
@@ -314,26 +372,30 @@ impl Engine {
             // construction and bounds the exact-KNN phase (§3.2 computes
             // it on the GPU; here it is host flops).
             const MAX_TRAIN_Q: usize = 512;
-            let subsampled: Vec<Matrix> = q_history[layer]
-                .iter()
-                .map(|qh| {
-                    if qh.rows() <= MAX_TRAIN_Q {
-                        qh.clone()
-                    } else {
-                        let step = qh.rows() / MAX_TRAIN_Q;
-                        let rows: Vec<usize> =
-                            (0..MAX_TRAIN_Q).map(|i| i * step).collect();
-                        Matrix::from_fn(rows.len(), qh.cols(), |r, c| qh[(rows[r], c)])
-                    }
-                })
-                .collect();
+            let subsampled: Vec<Matrix> =
+                q_history[layer].iter().map(|qh| qh.subsample_strided(MAX_TRAIN_Q)).collect();
             let built: Vec<Arc<dyn HostRetriever>> = parallel::par_map(&heads, |&h| {
                 let kvh = h / group;
                 let (keys, ids) = &shared[kvh];
                 if keys.rows() == 0 {
                     // Prompt fits entirely in the device static pattern:
-                    // nothing is offloaded, nothing to index.
-                    return Arc::from(build_retriever(Method::StreamingLlm, RetrieverInputs {
+                    // nothing is offloaded *yet*. Index methods fall back
+                    // to an empty Flat index (it tolerates zero rows and
+                    // accepts inserts), so overflow drains keep working
+                    // once the window starts sliding — otherwise a short
+                    // prompt with a long generation would accumulate an
+                    // unbounded linearly-scanned overflow. Full keeps its
+                    // exact all-host retriever; everything else degrades
+                    // to the StreamingLLM empty set as before.
+                    let fb = match method {
+                        Method::Flat
+                        | Method::Ivf
+                        | Method::Hnsw
+                        | Method::RetrievalAttention => Method::Flat,
+                        Method::Full | Method::VllmLike => method,
+                        _ => Method::StreamingLlm,
+                    };
+                    return Arc::from(build_retriever(fb, RetrieverInputs {
                         host_keys: keys.clone(),
                         host_ids: ids.clone(),
                         prefill_queries: &subsampled[h],
@@ -354,7 +416,7 @@ impl Engine {
             });
             retrievers.push(built);
         }
-        Ok(retrievers)
+        Ok((retrievers, host_stores))
     }
 
     /// One decode step (Algorithm 1). Feeds `token`, returns the next.
@@ -390,6 +452,12 @@ impl Engine {
                 let off = kvh * dh;
                 sess.caches[layer][kvh].append(&k[off..off + dh], &v[off..off + dh]);
             }
+            // Record decode queries: the attention-aware training side for
+            // online index inserts (RoarGraph wires drained keys with them).
+            let recent_cap = retrieval_k.maintenance.recent_queries;
+            for h in 0..spec.q_heads {
+                push_recent(&mut sess.recent_q[layer][h], &q[h * dh..(h + 1) * dh], recent_cap);
+            }
             t.stop_into(&mut bd.other);
 
             // Device partial attention over W (static pattern).
@@ -424,8 +492,10 @@ impl Engine {
                 let cache = &sess.caches[layer][kvh];
                 let qv = &q[h * dh..(h + 1) * dh];
                 let mut ids = retrieved[h].ids.clone();
-                // The overflow buffer (window slid past it, unindexed) is
-                // always attended exactly — it is tiny.
+                // The overflow buffer (window slid past it, not yet in the
+                // index) is attended exactly; the post-step maintenance
+                // drains it into the index on a watermark, so it stays
+                // bounded no matter how long the generation runs.
                 ids.extend(cache.overflow_ids());
                 attend_subset(qv, cache.keys(), cache.values(), &ids, scale)
             });
@@ -462,7 +532,145 @@ impl Engine {
         sess.len += 1;
         t.stop_into(&mut bd.other);
 
+        // Online index maintenance: drain overflow buffers that crossed the
+        // watermark into the ANN indexes (batched, fanned out per GQA group
+        // via util::parallel — off the token-critical path above).
+        let t = PhaseTimer::start();
+        self.maintain_indexes(sess);
+        t.stop_into(&mut bd.maintenance);
+
         Ok(DecodeOutput { token: next, breakdown: bd })
+    }
+
+    /// Drain every (layer, kv-head) overflow buffer that reached the
+    /// configured watermark into the group's retrievers. Each group's
+    /// drain: copy the overflow key rows onto the shared dense store (one
+    /// new `Arc` per group, preserving Appendix C's single-copy layout),
+    /// insert into every query head's index with the head's recent decode
+    /// queries as wiring context, then advance the cache's indexed
+    /// boundary so the brute-force overflow scan drops those tokens.
+    fn maintain_indexes(&self, sess: &mut Session) {
+        let mcfg = self.cfg.retrieval.maintenance;
+        // `drain_watermark == 0` disables *index* maintenance. StreamingLLM
+        // sessions still drop their overflow every step: that is the
+        // method's semantics (sink + window only), and it must not change
+        // with a performance knob.
+        if !mcfg.enabled() && sess.method != Method::StreamingLlm {
+            return;
+        }
+        let spec = self.spec();
+        let group = spec.group_size();
+        // Guard on the SESSION's method, not the engine's: a session built
+        // for a different method must not inherit StreamingLLM's
+        // token-discard drain semantics.
+        let method = sess.method;
+        let mut work: Vec<(usize, usize)> = Vec::new();
+        for layer in 0..spec.layers {
+            for kvh in 0..spec.kv_heads {
+                // Length-only check on the per-token path; the id list is
+                // materialised only for groups that actually drain.
+                let over_len = sess.caches[layer][kvh].overflow_len();
+                if over_len == 0 {
+                    continue;
+                }
+                // Every head of the group must accept inserts; a
+                // discarding retriever (StreamingLLM semantics, including
+                // the empty-host-set fallback a static baseline degrades
+                // to) may only swallow tokens when StreamingLLM is the
+                // session's method — other methods keep their exact
+                // overflow scan instead.
+                let ok = (0..group).all(|g| {
+                    let r = &sess.retrievers[layer][kvh * group + g];
+                    r.supports_insert()
+                        && (method == Method::StreamingLlm || !r.discards_inserts())
+                });
+                if !ok {
+                    continue;
+                }
+                // Discarding groups drop tokens the moment they leave the
+                // window: pure StreamingLLM semantics, independent of the
+                // maintenance watermark. Indexing groups batch up to the
+                // watermark to amortise insert cost.
+                let all_discard = (0..group)
+                    .all(|g| sess.retrievers[layer][kvh * group + g].discards_inserts());
+                if all_discard {
+                    // Method semantics (drop immediately), watermark-free.
+                    work.push((layer, kvh));
+                } else if mcfg.enabled() && over_len >= mcfg.drain_watermark {
+                    work.push((layer, kvh));
+                }
+            }
+        }
+        if work.is_empty() {
+            return;
+        }
+        let caches = &sess.caches;
+        let retrievers = &sess.retrievers;
+        let host_stores = &sess.host_stores;
+        let recent_q = &sess.recent_q;
+        // Per drained group: (layer, kvh, grown store if it was extended,
+        // new indexed boundary, tokens drained).
+        let results: Vec<Option<(usize, usize, Option<Arc<Matrix>>, usize, u64)>> =
+            parallel::par_map(&work, |&(layer, kvh)| {
+                let cache = &caches[layer][kvh];
+                let over = cache.overflow_ids();
+                let upto = over.last().map(|&x| x as usize + 1)?;
+                // A group of discarding retrievers (StreamingLLM) reads
+                // neither keys nor ids: drop the tokens without copying
+                // the store. (The cache still holds their K/V and counts
+                // them in the indexed tier, so a session forked to another
+                // method can re-index them later.)
+                if (0..group).all(|g| retrievers[layer][kvh * group + g].discards_inserts()) {
+                    return Some((layer, kvh, None, upto, over.len() as u64));
+                }
+                // Grow the group's dense store by the overflow key rows —
+                // but only when some head actually reads it (AllRetriever
+                // tracks ids alone, so Full/vLLM drains skip the copy).
+                let needs_store =
+                    (0..group).any(|g| retrievers[layer][kvh * group + g].needs_store());
+                let grown: Option<Arc<Matrix>> = if needs_store {
+                    let mut m = (*host_stores[layer][kvh]).clone();
+                    for &id in &over {
+                        m.push_row(cache.key(id as usize));
+                    }
+                    Some(Arc::new(m))
+                } else {
+                    None
+                };
+                let store_ref = grown.as_ref().unwrap_or(&host_stores[layer][kvh]);
+                for g in 0..group {
+                    let h = kvh * group + g;
+                    // The ring is compacted lazily (up to 2x cap between
+                    // compactions); enforce the configured budget exactly
+                    // at the point where each query costs a graph search.
+                    let recent = recent_q[layer][h].keep_last_rows(mcfg.recent_queries);
+                    let ctx = InsertContext { recent_queries: Some(&recent) };
+                    let ok = retrievers[layer][h].insert_batch(store_ref, &over, &ctx);
+                    if g == 0 && !ok {
+                        // First head refused (store out of sync): nothing
+                        // has been mutated yet, so skip the whole group and
+                        // retry on a later step.
+                        return None;
+                    }
+                    // Heads of one group share the store, the id stream and
+                    // the index family, so a later head cannot diverge from
+                    // head 0. If it somehow did, committing is still the
+                    // safe direction: that head merely misses the new keys,
+                    // whereas aborting here would double-attend them (the
+                    // succeeded heads' id maps already grew) and wedge the
+                    // group's store-sync check forever.
+                    debug_assert!(ok, "GQA group diverged during drain (layer {layer} head {h})");
+                }
+                Some((layer, kvh, grown, upto, over.len() as u64))
+            });
+        for (layer, kvh, grown, upto, count) in results.into_iter().flatten() {
+            if let Some(grown) = grown {
+                sess.host_stores[layer][kvh] = grown;
+            }
+            sess.caches[layer][kvh].advance_indexed(upto);
+            sess.drained_tokens += count;
+            sess.drains += 1;
+        }
     }
 
     /// Device-side partial attention over the static set via the
@@ -543,13 +751,18 @@ impl Session {
     /// (prefill is method-independent: it is always exact attention).
     pub fn fork_state(&self) -> Session {
         Session {
+            method: self.method,
             caches: self.caches.clone(),
             q_history: self.q_history.clone(),
             retrievers: Vec::new(),
+            host_stores: Vec::new(),
+            recent_q: self.recent_q.clone(),
             x_last: self.x_last.clone(),
             len: self.len,
             scanned_total: 0,
             retrievals: 0,
+            drained_tokens: 0,
+            drains: 0,
         }
     }
 }
@@ -560,11 +773,11 @@ impl Engine {
     /// expensive prefill across methods in the accuracy experiments.
     pub fn session_for_method(&self, base: &Session, method: Method) -> Result<Session> {
         let mut sess = base.fork_state();
-        let saved = self.cfg.method;
-        // build_retrievers reads cfg.method via a local copy; construct a
-        // temporary engine view by building with an explicit method.
-        sess.retrievers = self.build_retrievers_with(&sess.caches, &sess.q_history, method)?;
-        let _ = saved;
+        let (retrievers, host_stores) =
+            self.build_retrievers_with(&sess.caches, &sess.q_history, method)?;
+        sess.method = method;
+        sess.retrievers = retrievers;
+        sess.host_stores = host_stores;
         Ok(sess)
     }
 
@@ -602,15 +815,21 @@ impl Engine {
             caches.push(layer_caches);
             q_history.push(layer_hist);
         }
-        let retrievers = self.build_retrievers_with(&caches, &q_history, method)?;
+        let (retrievers, host_stores) = self.build_retrievers_with(&caches, &q_history, method)?;
+        let recent_q = self.empty_recent_rings();
         Ok(Session {
+            method,
             caches,
             q_history,
             retrievers,
+            host_stores,
+            recent_q,
             x_last: vec![0.0; self.spec().d_model],
             len,
             scanned_total: 0,
             retrievals: 0,
+            drained_tokens: 0,
+            drains: 0,
         })
     }
 }

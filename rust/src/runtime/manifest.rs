@@ -57,6 +57,64 @@ impl SpecMeta {
     pub fn group_size(&self) -> usize {
         self.q_heads / self.kv_heads
     }
+
+    /// Built-in geometry for a preset name, mirroring
+    /// `python/compile/model.py::PRESETS` exactly. This is what lets the
+    /// native runtime backend serve a preset without `make artifacts`.
+    pub fn builtin(name: &str) -> Option<SpecMeta> {
+        match name {
+            "induction-mini" => Some(SpecMeta {
+                layers: 2,
+                d_model: 192,
+                q_heads: 1,
+                kv_heads: 1,
+                head_dim: 192,
+                vocab: 4096,
+                norm: false,
+                ffn_dim: 8,
+                static_len: 640,
+            }),
+            "llama3-mini" => Some(SpecMeta {
+                layers: 4,
+                d_model: 512,
+                q_heads: 8,
+                kv_heads: 2,
+                head_dim: 64,
+                vocab: 8192,
+                norm: true,
+                ffn_dim: 1024,
+                static_len: 640,
+            }),
+            "yi6-mini" => Some(SpecMeta {
+                layers: 4,
+                d_model: 512,
+                q_heads: 8,
+                kv_heads: 1,
+                head_dim: 64,
+                vocab: 8192,
+                norm: true,
+                ffn_dim: 1024,
+                static_len: 640,
+            }),
+            "yi9-mini" => Some(SpecMeta {
+                layers: 6,
+                d_model: 512,
+                q_heads: 8,
+                kv_heads: 1,
+                head_dim: 64,
+                vocab: 8192,
+                norm: true,
+                ffn_dim: 1024,
+                static_len: 640,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Names accepted by [`SpecMeta::builtin`].
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["induction-mini", "llama3-mini", "yi6-mini", "yi9-mini"]
+    }
 }
 
 /// One preset: geometry + its artifacts.
@@ -64,6 +122,78 @@ impl SpecMeta {
 pub struct PresetMeta {
     pub spec: SpecMeta,
     pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl PresetMeta {
+    /// Synthesize the preset metadata the native runtime backend serves
+    /// when no AOT artifacts exist: the built-in geometry plus one
+    /// [`ArtifactMeta`] per entry point, with shapes mirroring
+    /// `python/compile/model.py::entry_points`.
+    pub fn builtin(name: &str) -> Option<PresetMeta> {
+        let spec = SpecMeta::builtin(name)?;
+        let f32s = |shape: &[usize]| TensorSpec { shape: shape.to_vec(), dtype: "float32".into() };
+        let i32s = |shape: &[usize]| TensorSpec { shape: shape.to_vec(), dtype: "int32".into() };
+        let (d, dh, h, kv, f, s, v) = (
+            spec.d_model,
+            spec.head_dim,
+            spec.q_heads,
+            spec.kv_heads,
+            spec.ffn_dim,
+            spec.static_len,
+            spec.vocab,
+        );
+        let mut artifacts = BTreeMap::new();
+        let mut add = |aname: String, args: Vec<TensorSpec>, outs: Vec<TensorSpec>| {
+            artifacts.insert(aname, ArtifactMeta { file: "<native>".into(), args, outs });
+        };
+        for b in [1usize, 256] {
+            add(
+                format!("embed_b{b}"),
+                vec![f32s(&[v, d]), i32s(&[b]), f32s(&[b, d])],
+                vec![f32s(&[b, d])],
+            );
+            add(
+                format!("qkv_b{b}"),
+                vec![
+                    f32s(&[b, d]),
+                    f32s(&[d]),
+                    f32s(&[d, h * dh]),
+                    f32s(&[d, kv * dh]),
+                    f32s(&[d, kv * dh]),
+                ],
+                vec![f32s(&[b, h, dh]), f32s(&[b, kv, dh]), f32s(&[b, kv, dh])],
+            );
+            add(
+                format!("post_b{b}"),
+                vec![
+                    f32s(&[b, d]),
+                    f32s(&[b, h * dh]),
+                    f32s(&[h * dh, d]),
+                    f32s(&[d]),
+                    f32s(&[d, f]),
+                    f32s(&[d, f]),
+                    f32s(&[f, d]),
+                ],
+                vec![f32s(&[b, d])],
+            );
+            add(
+                format!("lm_head_b{b}"),
+                vec![f32s(&[b, d]), f32s(&[d]), f32s(&[d, v])],
+                vec![f32s(&[b, v])],
+            );
+        }
+        add(
+            "static_attn".into(),
+            vec![f32s(&[h, dh]), f32s(&[s, kv, dh]), f32s(&[s, kv, dh]), f32s(&[s])],
+            vec![f32s(&[h, dh]), f32s(&[h])],
+        );
+        add(
+            "combine".into(),
+            vec![f32s(&[h, dh]), f32s(&[h]), f32s(&[h, dh]), f32s(&[h])],
+            vec![f32s(&[h, dh]), f32s(&[h])],
+        );
+        Some(PresetMeta { spec, artifacts })
+    }
 }
 
 /// The whole manifest.
@@ -161,6 +291,31 @@ mod tests {
         let a = &p.artifacts["qkv_b1"];
         assert_eq!(a.args[0].shape, vec![1, 8]);
         assert_eq!(a.outs[0].numel(), 8);
+    }
+
+    #[test]
+    fn builtin_presets_cover_python_geometry() {
+        for name in SpecMeta::builtin_names() {
+            let p = PresetMeta::builtin(name).unwrap();
+            assert_eq!(p.spec.q_heads % p.spec.kv_heads, 0);
+            // Every entry point the engine calls must exist with the right
+            // arg counts (the runtime's debug_assert relies on this).
+            for (aname, nargs) in [
+                ("embed_b1", 3),
+                ("embed_b256", 3),
+                ("qkv_b1", 5),
+                ("post_b256", 7),
+                ("lm_head_b1", 3),
+                ("static_attn", 4),
+                ("combine", 4),
+            ] {
+                let a = p.artifacts.get(aname).unwrap_or_else(|| panic!("{name}/{aname}"));
+                assert_eq!(a.args.len(), nargs, "{name}/{aname} arg count");
+            }
+        }
+        assert!(PresetMeta::builtin("no-such-preset").is_none());
+        let ind = SpecMeta::builtin("induction-mini").unwrap();
+        assert_eq!(ind.head_dim, ind.d_model);
     }
 
     #[test]

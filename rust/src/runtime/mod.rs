@@ -1,16 +1,21 @@
-//! The PJRT runtime: loads and executes the AOT artifacts.
+//! The runtime: loads and executes the AOT artifacts.
 //!
-//! `make artifacts` (the only place Python runs) leaves
-//! `artifacts/manifest.json` plus one HLO-text file per entry point. This
-//! module is the bridge the Rust hot path calls into: it parses the
-//! manifest, compiles every artifact once at startup on the PJRT CPU
-//! client, and exposes typed execute helpers.
+//! Two interchangeable backends sit behind one [`Runtime`] surface:
 //!
-//! HLO *text* is the interchange format (not serialized protos): jax ≥0.5
-//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
-//! the text parser reassigns ids cleanly (see aot.py / DESIGN.md).
+//! * **PJRT** — `make artifacts` (the only place Python runs) leaves
+//!   `artifacts/manifest.json` plus one HLO-text file per entry point;
+//!   every artifact is compiled once at startup on the PJRT CPU client.
+//!   HLO *text* is the interchange format (not serialized protos): jax
+//!   ≥0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects,
+//!   while the text parser reassigns ids cleanly (see aot.py / DESIGN.md).
+//! * **Native** — a direct Rust implementation of the same entry points
+//!   ([`native::NativeExecutor`]), selected automatically when artifacts
+//!   are absent or PJRT cannot compile (e.g. the vendored `xla` stub).
+//!   This keeps the engine, the serving stack, and the e2e tests fully
+//!   executable in a bare checkout.
 
 pub mod manifest;
+pub mod native;
 
 use crate::tensor::Matrix;
 use anyhow::{Context, Result};
@@ -18,12 +23,18 @@ use manifest::{ArtifactMeta, Manifest, PresetMeta};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-/// A loaded model preset: compiled executables + metadata.
+enum Backend {
+    Pjrt { execs: HashMap<String, xla::PjRtLoadedExecutable> },
+    Native(native::NativeExecutor),
+}
+
+/// A loaded model preset: compiled executables (or the native executor)
+/// plus metadata.
 pub struct Runtime {
     client: xla::PjRtClient,
+    backend: Backend,
     preset: String,
     meta: PresetMeta,
-    execs: HashMap<String, xla::PjRtLoadedExecutable>,
     /// Cumulative device-execution count (perf diagnostics).
     pub exec_count: std::sync::atomic::AtomicU64,
 }
@@ -41,7 +52,7 @@ impl Runtime {
             .with_context(|| format!("preset `{preset}` not in manifest"))?
             .clone();
 
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
         let mut execs = HashMap::new();
         for (name, art) in &meta.artifacts {
             let path: PathBuf = dir.join(&art.file);
@@ -55,11 +66,49 @@ impl Runtime {
         }
         Ok(Runtime {
             client,
+            backend: Backend::Pjrt { execs },
             preset: preset.to_string(),
             meta,
-            execs,
             exec_count: std::sync::atomic::AtomicU64::new(0),
         })
+    }
+
+    /// Build a native-backend runtime for a built-in preset: no artifacts
+    /// required, entry points execute as plain Rust.
+    pub fn load_native(preset: &str) -> Result<Runtime> {
+        let meta = PresetMeta::builtin(preset).with_context(|| {
+            format!(
+                "preset `{preset}` has no built-in geometry (known: {})",
+                manifest::SpecMeta::builtin_names().join(", ")
+            )
+        })?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("creating client: {e}"))?;
+        Ok(Runtime {
+            client,
+            backend: Backend::Native(native::NativeExecutor::new(meta.spec.clone())),
+            preset: preset.to_string(),
+            meta,
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Preferred entry point: PJRT when artifacts exist *and* compile,
+    /// otherwise the native backend (with a one-line notice, so CI logs
+    /// show which device actually ran).
+    pub fn load_auto(artifacts_dir: impl AsRef<Path>, preset: &str) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref();
+        if dir.join("manifest.json").exists() {
+            match Runtime::load(dir, preset) {
+                Ok(rt) => return Ok(rt),
+                Err(e) => {
+                    eprintln!(
+                        "runtime: PJRT load of `{preset}` failed ({e}); \
+                         falling back to the native backend"
+                    );
+                }
+            }
+        }
+        Runtime::load_native(preset)
     }
 
     pub fn preset(&self) -> &str {
@@ -74,31 +123,47 @@ impl Runtime {
         self.meta.artifacts.get(name)
     }
 
+    /// True when entry points run as native Rust rather than compiled HLO.
+    pub fn is_native(&self) -> bool {
+        matches!(self.backend, Backend::Native(_))
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Pjrt { .. } => self.client.platform_name(),
+            Backend::Native(_) => "native-cpu".to_string(),
+        }
     }
 
     /// Execute an artifact. Inputs must match the manifest arg shapes
     /// (count checked in debug builds); outputs are the flattened tuple.
     pub fn exec(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self
-            .execs
-            .get(name)
-            .with_context(|| format!("unknown artifact `{}/{name}`", self.preset))?;
         debug_assert_eq!(
             inputs.len(),
-            self.meta.artifacts[name].args.len(),
+            self.meta
+                .artifacts
+                .get(name)
+                .map(|a| a.args.len())
+                .unwrap_or(inputs.len()),
             "arg count mismatch for {name}"
         );
         self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let result = exe
-            .execute::<&xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e}"))?;
-        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
-        lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {name} result: {e}"))
+        match &self.backend {
+            Backend::Native(ex) => ex.execute(name, inputs),
+            Backend::Pjrt { execs } => {
+                let exe = execs
+                    .get(name)
+                    .with_context(|| format!("unknown artifact `{}/{name}`", self.preset))?;
+                let result = exe
+                    .execute::<&xla::Literal>(inputs)
+                    .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+                let lit = result[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow::anyhow!("fetching {name} result: {e}"))?;
+                // aot.py lowers with return_tuple=True: always a tuple.
+                lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {name} result: {e}"))
+            }
+        }
     }
 
     /// Execute an artifact with pre-uploaded device buffers. This is the
@@ -106,18 +171,25 @@ impl Runtime {
     /// (see EXPERIMENTS.md §Perf — the literal path re-transferred ~30MB
     /// of weights per decode step).
     pub fn exec_b(&self, name: &str, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        let exe = self
-            .execs
-            .get(name)
-            .with_context(|| format!("unknown artifact `{}/{name}`", self.preset))?;
         self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(inputs)
-            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e}"))?;
-        lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {name} result: {e}"))
+        match &self.backend {
+            Backend::Native(ex) => {
+                let lits: Vec<&xla::Literal> = inputs.iter().map(|b| b.literal()).collect();
+                ex.execute(name, &lits)
+            }
+            Backend::Pjrt { execs } => {
+                let exe = execs
+                    .get(name)
+                    .with_context(|| format!("unknown artifact `{}/{name}`", self.preset))?;
+                let result = exe
+                    .execute_b::<&xla::PjRtBuffer>(inputs)
+                    .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+                let lit = result[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow::anyhow!("fetching {name} result: {e}"))?;
+                lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {name} result: {e}"))
+            }
+        }
     }
 
     /// Upload an f32 tensor to the device.
@@ -183,5 +255,40 @@ mod tests {
     fn shape_mismatch_rejected() {
         assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
         assert!(literal_i32(&[1, 2, 3], &[2]).is_err());
+    }
+
+    #[test]
+    fn native_runtime_loads_builtin_presets() {
+        let rt = Runtime::load_native("induction-mini").unwrap();
+        assert!(rt.is_native());
+        assert_eq!(rt.platform(), "native-cpu");
+        assert_eq!(rt.meta().spec.d_model, 192);
+        assert!(Runtime::load_native("not-a-preset").is_err());
+    }
+
+    #[test]
+    fn load_auto_falls_back_without_artifacts() {
+        let dir = std::env::temp_dir().join(format!("ra-empty-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let rt = Runtime::load_auto(&dir, "llama3-mini").unwrap();
+        assert!(rt.is_native());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn native_exec_roundtrips_buffers() {
+        let rt = Runtime::load_native("induction-mini").unwrap();
+        let spec = rt.meta().spec.clone();
+        let (h, dh, s, kv) = (spec.q_heads, spec.head_dim, spec.static_len, spec.kv_heads);
+        let q = rt.upload_f32(&vec![0.1; h * dh], &[h, dh]).unwrap();
+        let k = rt.upload_f32(&vec![0.2; s * kv * dh], &[s, kv, dh]).unwrap();
+        let v = rt.upload_f32(&vec![0.3; s * kv * dh], &[s, kv, dh]).unwrap();
+        let m = rt.upload_f32(&vec![0.0; s], &[s]).unwrap();
+        let outs = rt.exec_b("static_attn", &[&q, &k, &v, &m]).unwrap();
+        assert_eq!(outs.len(), 2);
+        let o = literal_to_f32(&outs[0]).unwrap();
+        // Uniform values => attention output equals the value vector.
+        assert!(o.iter().all(|x| (x - 0.3).abs() < 1e-5));
+        assert!(rt.exec_count.load(std::sync::atomic::Ordering::Relaxed) >= 1);
     }
 }

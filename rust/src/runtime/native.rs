@@ -1,0 +1,371 @@
+//! Native CPU executor for the AOT entry points.
+//!
+//! The vendored `xla` crate is a host-data stub — it cannot execute HLO.
+//! This module is the fallback "device": a direct Rust implementation of
+//! every artifact in `python/compile/model.py::entry_points`, keyed by
+//! artifact name and reading argument tensors out of the stub literals.
+//! Numerics mirror the JAX graph op-for-op (RMSNorm epsilon, SiLU, the
+//! flash-decode online-softmax `(o, lse)` contract), which is exactly what
+//! `tests/cross_layer.rs` asserts against the host attention code.
+//!
+//! With a real `xla` crate and `make artifacts` the PJRT backend is used
+//! instead; the engine never knows which one is underneath.
+
+use crate::attention::{combine, PartialAttention};
+use crate::runtime::manifest::SpecMeta;
+use anyhow::{Context, Result};
+use xla::Literal;
+
+/// Executes entry points for one model preset.
+pub struct NativeExecutor {
+    spec: SpecMeta,
+}
+
+impl NativeExecutor {
+    pub fn new(spec: SpecMeta) -> NativeExecutor {
+        NativeExecutor { spec }
+    }
+
+    /// Run one artifact. Inputs follow the manifest arg order; the result
+    /// is the flattened output tuple, matching what the PJRT path returns
+    /// after `to_tuple()`.
+    pub fn execute(&self, name: &str, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        if let Some(b) = name.strip_prefix("embed_b") {
+            return self.embed(b.parse()?, inputs);
+        }
+        if let Some(b) = name.strip_prefix("qkv_b") {
+            return self.qkv(b.parse()?, inputs);
+        }
+        if let Some(b) = name.strip_prefix("post_b") {
+            return self.post(b.parse()?, inputs);
+        }
+        if let Some(b) = name.strip_prefix("lm_head_b") {
+            return self.lm_head(b.parse()?, inputs);
+        }
+        match name {
+            "static_attn" => self.static_attn(inputs),
+            "combine" => self.combine_op(inputs),
+            other => anyhow::bail!("native backend: unknown artifact `{other}`"),
+        }
+    }
+
+    /// `table[ids] + pos` — token embedding plus additive position code.
+    fn embed(&self, b: usize, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let d = self.spec.d_model;
+        let table = f32_arg(inputs, 0, "table")?;
+        let ids = i32_arg(inputs, 1, "ids")?;
+        let pos = f32_arg(inputs, 2, "pos")?;
+        anyhow::ensure!(ids.len() == b && pos.len() == b * d, "embed_b{b}: bad arg shapes");
+        anyhow::ensure!(table.len() == self.spec.vocab * d, "embed: bad table shape");
+        let mut out = vec![0.0f32; b * d];
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            anyhow::ensure!(id < self.spec.vocab, "embed: token id {id} out of vocab");
+            let row = &table[id * d..(id + 1) * d];
+            let o = &mut out[i * d..(i + 1) * d];
+            for j in 0..d {
+                o[j] = row[j] + pos[i * d + j];
+            }
+        }
+        Ok(vec![Literal::from_f32(out, &[b, d])])
+    }
+
+    /// Pre-norm QKV projection.
+    fn qkv(&self, b: usize, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let (d, h, kv, dh) =
+            (self.spec.d_model, self.spec.q_heads, self.spec.kv_heads, self.spec.head_dim);
+        let x = f32_arg(inputs, 0, "x")?;
+        let g = f32_arg(inputs, 1, "g")?;
+        let wq = f32_arg(inputs, 2, "wq")?;
+        let wk = f32_arg(inputs, 3, "wk")?;
+        let wv = f32_arg(inputs, 4, "wv")?;
+        anyhow::ensure!(x.len() == b * d && g.len() == d, "qkv_b{b}: bad arg shapes");
+        let xn = rmsnorm(x, g, b, d, self.spec.norm);
+        let q = matmul(&xn, b, d, wq, h * dh);
+        let k = matmul(&xn, b, d, wk, kv * dh);
+        let v = matmul(&xn, b, d, wv, kv * dh);
+        Ok(vec![
+            Literal::from_f32(q, &[b, h, dh]),
+            Literal::from_f32(k, &[b, kv, dh]),
+            Literal::from_f32(v, &[b, kv, dh]),
+        ])
+    }
+
+    /// Output projection + residual + SwiGLU FFN.
+    fn post(&self, b: usize, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let (d, h, dh, f) =
+            (self.spec.d_model, self.spec.q_heads, self.spec.head_dim, self.spec.ffn_dim);
+        let x = f32_arg(inputs, 0, "x")?;
+        let attn = f32_arg(inputs, 1, "attn")?;
+        let wo = f32_arg(inputs, 2, "wo")?;
+        let g2 = f32_arg(inputs, 3, "g2")?;
+        let w1 = f32_arg(inputs, 4, "w1")?;
+        let w3 = f32_arg(inputs, 5, "w3")?;
+        let w2 = f32_arg(inputs, 6, "w2")?;
+        anyhow::ensure!(
+            x.len() == b * d && attn.len() == b * h * dh,
+            "post_b{b}: bad arg shapes"
+        );
+        let mut hres = matmul(attn, b, h * dh, wo, d);
+        for (o, &xi) in hres.iter_mut().zip(x.iter()) {
+            *o += xi;
+        }
+        let hn = rmsnorm(&hres, g2, b, d, self.spec.norm);
+        let mut a1 = matmul(&hn, b, d, w1, f);
+        let a3 = matmul(&hn, b, d, w3, f);
+        for (u, &w) in a1.iter_mut().zip(a3.iter()) {
+            // SiLU(u) * w
+            *u = *u / (1.0 + (-*u).exp()) * w;
+        }
+        let ffn = matmul(&a1, b, f, w2, d);
+        for (o, &e) in hres.iter_mut().zip(ffn.iter()) {
+            *o += e;
+        }
+        Ok(vec![Literal::from_f32(hres, &[b, d])])
+    }
+
+    /// Final norm + unembedding.
+    fn lm_head(&self, b: usize, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let (d, v) = (self.spec.d_model, self.spec.vocab);
+        let x = f32_arg(inputs, 0, "x")?;
+        let gf = f32_arg(inputs, 1, "gf")?;
+        let wu = f32_arg(inputs, 2, "wu")?;
+        anyhow::ensure!(x.len() == b * d, "lm_head_b{b}: bad arg shapes");
+        let xn = rmsnorm(x, gf, b, d, self.spec.norm);
+        let logits = matmul(&xn, b, d, wu, v);
+        Ok(vec![Literal::from_f32(logits, &[b, v])])
+    }
+
+    /// Device-side partial attention over the static set `W`
+    /// (flash-decode contract: per query head, `(o, lse)` of the scaled
+    /// masked logits; GQA expands KV groups to query heads).
+    fn static_attn(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let (h, kv, dh, s) =
+            (self.spec.q_heads, self.spec.kv_heads, self.spec.head_dim, self.spec.static_len);
+        let group = self.spec.group_size();
+        let q = f32_arg(inputs, 0, "q")?;
+        let keys = f32_arg(inputs, 1, "keys")?;
+        let values = f32_arg(inputs, 2, "values")?;
+        let mask = f32_arg(inputs, 3, "mask")?;
+        anyhow::ensure!(
+            q.len() == h * dh && keys.len() == s * kv * dh && values.len() == keys.len(),
+            "static_attn: bad arg shapes"
+        );
+        anyhow::ensure!(mask.len() == s, "static_attn: bad mask shape");
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut o = vec![0.0f32; h * dh];
+        let mut lse = vec![0.0f32; h];
+        for head in 0..h {
+            let kvh = head / group;
+            let qh = &q[head * dh..(head + 1) * dh];
+            // Online softmax (single pass over slots, flash-decode style).
+            let mut m = f32::NEG_INFINITY;
+            let mut l = 0.0f32;
+            let mut acc = vec![0.0f32; dh];
+            for slot in 0..s {
+                let off = (slot * kv + kvh) * dh;
+                let z = crate::tensor::dot(qh, &keys[off..off + dh]) * scale + mask[slot];
+                if z > m {
+                    let corr = (m - z).exp();
+                    for a in acc.iter_mut() {
+                        *a *= corr;
+                    }
+                    l *= corr;
+                    m = z;
+                }
+                let p = (z - m).exp();
+                l += p;
+                crate::tensor::axpy(p, &values[off..off + dh], &mut acc);
+            }
+            let inv = 1.0 / l;
+            for (oo, a) in o[head * dh..(head + 1) * dh].iter_mut().zip(acc.iter()) {
+                *oo = a * inv;
+            }
+            lse[head] = m + l.ln();
+        }
+        Ok(vec![Literal::from_f32(o, &[h, dh]), Literal::from_f32(lse, &[h])])
+    }
+
+    /// Exact two-set merge (Eq. 4/5), per query head.
+    fn combine_op(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let (h, dh) = (self.spec.q_heads, self.spec.head_dim);
+        let o1 = f32_arg(inputs, 0, "o1")?;
+        let l1 = f32_arg(inputs, 1, "lse1")?;
+        let o2 = f32_arg(inputs, 2, "o2")?;
+        let l2 = f32_arg(inputs, 3, "lse2")?;
+        anyhow::ensure!(
+            o1.len() == h * dh && o2.len() == h * dh && l1.len() == h && l2.len() == h,
+            "combine: bad arg shapes"
+        );
+        let mut o = vec![0.0f32; h * dh];
+        let mut lse = vec![0.0f32; h];
+        for head in 0..h {
+            let p1 = PartialAttention {
+                o: o1[head * dh..(head + 1) * dh].to_vec(),
+                lse: l1[head],
+            };
+            let p2 = PartialAttention {
+                o: o2[head * dh..(head + 1) * dh].to_vec(),
+                lse: l2[head],
+            };
+            let merged = combine(&[p1, p2]);
+            o[head * dh..(head + 1) * dh].copy_from_slice(&merged.o);
+            lse[head] = merged.lse;
+        }
+        Ok(vec![Literal::from_f32(o, &[h, dh]), Literal::from_f32(lse, &[h])])
+    }
+}
+
+fn f32_arg<'a>(inputs: &[&'a Literal], i: usize, name: &str) -> Result<&'a [f32]> {
+    inputs
+        .get(i)
+        .with_context(|| format!("missing arg {i} ({name})"))?
+        .f32s()
+        .with_context(|| format!("arg {i} ({name}) is not f32"))
+}
+
+fn i32_arg<'a>(inputs: &[&'a Literal], i: usize, name: &str) -> Result<&'a [i32]> {
+    inputs
+        .get(i)
+        .with_context(|| format!("missing arg {i} ({name})"))?
+        .i32s()
+        .with_context(|| format!("arg {i} ({name}) is not i32"))
+}
+
+/// `x * rsqrt(mean(x^2) + 1e-6) * g` per row, or a copy when norm is off
+/// (matches `model.py::rmsnorm`).
+fn rmsnorm(x: &[f32], g: &[f32], b: usize, d: usize, enabled: bool) -> Vec<f32> {
+    let mut out = x.to_vec();
+    if !enabled {
+        return out;
+    }
+    for r in 0..b {
+        let row = &mut out[r * d..(r + 1) * d];
+        let mean_sq = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (mean_sq + 1e-6).sqrt();
+        for (v, &gi) in row.iter_mut().zip(g.iter()) {
+            *v *= inv * gi;
+        }
+    }
+    out
+}
+
+/// Row-major `[b, k] @ [k, n] -> [b, n]`, axpy-ordered for cache locality;
+/// zero activations (padded prefill rows, sparse induction streams) are
+/// skipped.
+fn matmul(x: &[f32], b: usize, k: usize, w: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), b * k);
+    debug_assert_eq!(w.len(), k * n);
+    let mut out = vec![0.0f32; b * n];
+    for r in 0..b {
+        let xr = &x[r * k..(r + 1) * k];
+        let or = &mut out[r * n..(r + 1) * n];
+        for (i, &xi) in xr.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            crate::tensor::axpy(xi, &w[i * n..(i + 1) * n], or);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::attend_subset;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    fn tiny_exec() -> NativeExecutor {
+        NativeExecutor::new(SpecMeta::builtin("induction-mini").unwrap())
+    }
+
+    #[test]
+    fn embed_adds_position_code() {
+        let ex = tiny_exec();
+        let d = 192;
+        let table: Vec<f32> = (0..4096 * d).map(|i| (i % 7) as f32 * 0.1).collect();
+        let ids = vec![3i32, 0];
+        let pos: Vec<f32> = (0..2 * d).map(|i| i as f32 * 1e-3).collect();
+        let t = Literal::from_f32(table.clone(), &[4096, d]);
+        let i = xla::Literal::vec1(&ids);
+        let p = Literal::from_f32(pos.clone(), &[2, d]);
+        let out = ex.execute("embed_b2", &[&t, &i, &p]).unwrap();
+        let o = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(o.len(), 2 * d);
+        assert!((o[0] - (table[3 * d] + pos[0])).abs() < 1e-6);
+        assert!((o[d] - (table[0] + pos[d])).abs() < 1e-6);
+    }
+
+    #[test]
+    fn static_attn_matches_host_attention() {
+        let ex = tiny_exec();
+        let spec = SpecMeta::builtin("induction-mini").unwrap();
+        let (s, dh) = (spec.static_len, spec.head_dim);
+        let mut rng = Rng::seed_from(3);
+        let q: Vec<f32> = (0..dh).map(|_| rng.normal()).collect();
+        let keys: Vec<f32> = (0..s * dh).map(|_| rng.normal()).collect();
+        let values: Vec<f32> = (0..s * dh).map(|_| rng.normal()).collect();
+        let valid = s - 37;
+        let mask: Vec<f32> = (0..s).map(|i| if i < valid { 0.0 } else { -1.0e30 }).collect();
+        let out = ex
+            .execute(
+                "static_attn",
+                &[
+                    &Literal::from_f32(q.clone(), &[1, dh]),
+                    &Literal::from_f32(keys.clone(), &[s, 1, dh]),
+                    &Literal::from_f32(values.clone(), &[s, 1, dh]),
+                    &Literal::from_f32(mask, &[s]),
+                ],
+            )
+            .unwrap();
+        let o_dev = out[0].to_vec::<f32>().unwrap();
+        let lse_dev = out[1].to_vec::<f32>().unwrap();
+
+        let k_m = Matrix::from_vec(s, dh, keys);
+        let v_m = Matrix::from_vec(s, dh, values);
+        let ids: Vec<u32> = (0..valid as u32).collect();
+        let part = attend_subset(&q, &k_m, &v_m, &ids, 1.0 / (dh as f32).sqrt());
+        for (a, b) in part.o.iter().zip(o_dev.iter()) {
+            assert!((a - b).abs() < 1e-3, "o mismatch {a} vs {b}");
+        }
+        assert!((part.lse - lse_dev[0]).abs() < 1e-3, "lse {} vs {}", part.lse, lse_dev[0]);
+    }
+
+    #[test]
+    fn qkv_projects_without_norm() {
+        let ex = tiny_exec();
+        let d = 192;
+        // x = e_0 row: q = wq row 0.
+        let mut x = vec![0.0f32; d];
+        x[0] = 2.0;
+        let g = vec![1.0f32; d];
+        let wq: Vec<f32> = (0..d * d).map(|i| (i % 5) as f32).collect();
+        let wk = vec![0.0f32; d * d];
+        let wv = vec![0.0f32; d * d];
+        let out = ex
+            .execute(
+                "qkv_b1",
+                &[
+                    &Literal::from_f32(x, &[1, d]),
+                    &Literal::from_f32(g, &[d]),
+                    &Literal::from_f32(wq.clone(), &[d, d]),
+                    &Literal::from_f32(wk, &[d, d]),
+                    &Literal::from_f32(wv, &[d, d]),
+                ],
+            )
+            .unwrap();
+        let q = out[0].to_vec::<f32>().unwrap();
+        for j in 0..d {
+            assert!((q[j] - 2.0 * wq[j]).abs() < 1e-5);
+        }
+        assert_eq!(out[1].to_vec::<f32>().unwrap(), vec![0.0; d]);
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let ex = tiny_exec();
+        assert!(ex.execute("frobnicate", &[]).is_err());
+    }
+}

@@ -131,7 +131,10 @@ fn stream_events(
                     .set("prefill_s", m.prefill_s)
                     .set("ttft_s", m.ttft_s)
                     .set("tpot_s", m.tpot_s)
-                    .set("search_share", m.breakdown.search_share());
+                    .set("search_share", m.breakdown.search_share())
+                    .set("maintenance_share", m.breakdown.maintenance_share())
+                    .set("drained_tokens", m.drained_tokens)
+                    .set("drains", m.drains);
                 writeln!(out, "{}", o.to_string())?;
                 return Ok(());
             }

@@ -104,6 +104,27 @@ impl Matrix {
     pub fn transpose(&self) -> Matrix {
         Matrix::from_fn(self.cols, self.rows, |r, c| self[(c, r)])
     }
+
+    /// Cap to at most `cap` rows by striding (statistically uniform
+    /// subsample, used for training-query sets). No-op clone when the
+    /// matrix already fits.
+    pub fn subsample_strided(&self, cap: usize) -> Matrix {
+        if self.rows <= cap {
+            return self.clone();
+        }
+        let step = self.rows / cap;
+        Matrix::from_fn(cap, self.cols, |r, c| self[(r * step, c)])
+    }
+
+    /// Cap to at most `cap` rows by keeping the most recent (last) rows,
+    /// used for recency-windowed query rings.
+    pub fn keep_last_rows(&self, cap: usize) -> Matrix {
+        if self.rows <= cap {
+            return self.clone();
+        }
+        let skip = self.rows - cap;
+        Matrix::from_fn(cap, self.cols, |r, c| self[(r + skip, c)])
+    }
 }
 
 impl Index<(usize, usize)> for Matrix {
@@ -323,6 +344,20 @@ mod tests {
     fn transpose_roundtrip() {
         let a = Matrix::from_fn(3, 5, |r, c| (r * 5 + c) as f32);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn row_capping_helpers() {
+        let m = Matrix::from_fn(10, 2, |r, _| r as f32);
+        let s = m.subsample_strided(5);
+        assert_eq!(s.rows(), 5);
+        assert_eq!(s[(1, 0)], 2.0, "stride-2 subsample");
+        let t = m.keep_last_rows(3);
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t[(0, 0)], 7.0, "keeps the tail");
+        // Fits already: plain clone.
+        assert_eq!(m.subsample_strided(100), m);
+        assert_eq!(m.keep_last_rows(10), m);
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! Host-data stub of the `xla-rs` PJRT surface.
+//!
+//! The real crate links `xla_extension` (the XLA C++ runtime) and executes
+//! AOT-lowered HLO on a PJRT device. This vendored stand-in keeps the exact
+//! API shape the runtime layer compiles against, but holds every tensor as
+//! host memory and refuses to *execute* HLO — `PjRtClient::compile` returns
+//! an error, which the runtime layer treats as "PJRT unavailable" and falls
+//! back to its native Rust executor (`runtime::native`). Buffers and
+//! literals are fully functional, so the native executor can read argument
+//! data straight out of [`PjRtBuffer`]s.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` far enough for `{e}` formatting.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types carried by [`Literal`]s and [`PjRtBuffer`]s.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Data
+    where
+        Self: Sized;
+    fn unwrap(data: &Data) -> Option<&[Self]>
+    where
+        Self: Sized;
+}
+
+/// Tensor payload.
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+    fn unwrap(data: &Data) -> Option<&[f32]> {
+        match data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::I32(data)
+    }
+    fn unwrap(data: &Data) -> Option<&[i32]> {
+        match data {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A host tensor (mirrors `xla::Literal`).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<usize>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len()], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Build with an explicit shape (stub extension used by the native
+    /// executor to construct outputs).
+    pub fn from_f32(data: Vec<f32>, dims: &[usize]) -> Literal {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Literal { data: Data::F32(data), dims: dims.to_vec() }
+    }
+
+    /// Tuple literal (stub extension).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { data: Data::Tuple(parts), dims: Vec::new() }
+    }
+
+    pub fn reshape(mut self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let len = self.element_count();
+        if n as usize != len {
+            return Err(Error(format!("reshape {dims:?} does not match {len} elements")));
+        }
+        self.dims = dims.iter().map(|&d| d as usize).collect();
+        Ok(self)
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(t) => t.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Borrow the payload as `f32` (stub extension; avoids a copy in the
+    /// native executor).
+    pub fn f32s(&self) -> Option<&[f32]> {
+        f32::unwrap(&self.data)
+    }
+
+    /// Borrow the payload as `i32` (stub extension).
+    pub fn i32s(&self) -> Option<&[i32]> {
+        i32::unwrap(&self.data)
+    }
+
+    /// Flatten a tuple literal into its parts. Non-tuples behave as 1-ary
+    /// tuples (the AOT pipeline always lowers with `return_tuple=True`).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(parts) => Ok(parts),
+            _ => Ok(vec![self]),
+        }
+    }
+}
+
+/// A "device" buffer: in the stub, host memory with a shape.
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// The underlying host literal (stub extension for the native executor).
+    pub fn literal(&self) -> &Literal {
+        &self.literal
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Parsed HLO module (the stub only retains the source text).
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("reading {}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _text: proto.text.clone() }
+    }
+}
+
+/// PJRT client. The stub can create buffers but cannot compile HLO.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(
+            "PJRT unavailable: vendored xla stub cannot execute HLO (native runtime backend \
+             will be used instead)"
+                .into(),
+        ))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(Error(format!("shape {dims:?} does not match {} elements", data.len())));
+        }
+        let mut lit = Literal::vec1(data);
+        lit.dims = dims.to_vec();
+        Ok(PjRtBuffer { literal: lit })
+    }
+}
+
+/// Compiled executable handle. Never constructible through the stub's
+/// `compile`, so `execute` is unreachable in practice; it still returns a
+/// well-formed error to keep call sites honest.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[&Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error("stub xla cannot execute HLO".into()))
+    }
+
+    pub fn execute_b<T>(&self, _inputs: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error("stub xla cannot execute HLO".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_rejects_bad_shape() {
+        assert!(Literal::vec1(&[1.0f32, 2.0]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn buffer_carries_host_data() {
+        let c = PjRtClient::cpu().unwrap();
+        let b = c.buffer_from_host_buffer(&[1i32, 2, 3], &[3], None).unwrap();
+        assert_eq!(b.literal().i32s().unwrap(), &[1, 2, 3]);
+        assert_eq!(b.to_literal_sync().unwrap().to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn tuple_flattening() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2.0f32])]);
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+        let single = Literal::vec1(&[5.0f32]);
+        assert_eq!(single.to_tuple().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn compile_is_unavailable() {
+        let c = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto { text: "HloModule x".into() });
+        assert!(c.compile(&comp).is_err());
+    }
+}

@@ -1,19 +1,17 @@
-//! End-to-end integration: artifacts → PJRT runtime → engine prefill →
-//! Algorithm-1 decode, on the hand-constructed induction model.
+//! End-to-end integration: runtime → engine prefill → Algorithm-1 decode,
+//! on the hand-constructed induction model.
 //!
-//! Requires `make artifacts` (skips cleanly when absent, e.g. in a bare
-//! checkout). These tests are the keystone of the reproduction: they prove
-//! the *task accuracy ⇔ retrieval quality* causal chain the paper's
-//! Tables 2/3 rest on.
+//! These tests are the keystone of the reproduction: they prove the *task
+//! accuracy ⇔ retrieval quality* causal chain the paper's Tables 2/3 rest
+//! on. They always run: when `make artifacts` has produced PJRT artifacts
+//! the compiled HLO executes, otherwise the runtime's native backend
+//! executes the same entry points in Rust — CI can no longer go green on
+//! code it never ran.
 
 use retrieval_attention::config::{Method, ServeConfig};
 use retrieval_attention::model::Engine;
 use retrieval_attention::util::rng::Rng;
 use retrieval_attention::workload::tasks;
-
-fn artifacts_ready() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
-}
 
 fn engine(method: Method) -> Engine {
     let mut cfg = ServeConfig::default();
@@ -28,10 +26,6 @@ fn engine(method: Method) -> Engine {
 
 #[test]
 fn full_attention_solves_passkey_everywhere() {
-    if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
     let eng = engine(Method::Full);
     let mut rng = Rng::seed_from(42);
     for depth in [0.05f32, 0.5, 0.95] {
@@ -48,10 +42,6 @@ fn full_attention_solves_passkey_everywhere() {
 
 #[test]
 fn retrieval_attention_matches_full_on_kv_retrieval() {
-    if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
     let eng = engine(Method::RetrievalAttention);
     let mut rng = Rng::seed_from(7);
     let mut pass = 0;
@@ -75,10 +65,6 @@ fn retrieval_attention_matches_full_on_kv_retrieval() {
 
 #[test]
 fn streaming_llm_fails_outside_window() {
-    if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
     let eng = engine(Method::StreamingLlm);
     let mut rng = Rng::seed_from(9);
     // Needle deep in the discarded middle: StreamingLLM must miss it.
@@ -99,10 +85,6 @@ fn streaming_llm_fails_outside_window() {
 
 #[test]
 fn multi_hop_variable_tracking_with_retrieval() {
-    if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
     let eng = engine(Method::RetrievalAttention);
     let mut rng = Rng::seed_from(21);
     let mut pass = 0;
@@ -119,10 +101,6 @@ fn multi_hop_variable_tracking_with_retrieval() {
 
 #[test]
 fn decode_breakdown_has_all_phases() {
-    if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
     let eng = engine(Method::RetrievalAttention);
     let mut rng = Rng::seed_from(33);
     let s = tasks::passkey(&mut rng, 900, 0.4);
@@ -136,10 +114,6 @@ fn decode_breakdown_has_all_phases() {
 
 #[test]
 fn session_tiers_account_every_token() {
-    if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
     let eng = engine(Method::Flat);
     let mut rng = Rng::seed_from(55);
     let s = tasks::passkey(&mut rng, 700, 0.5);
@@ -151,4 +125,75 @@ fn session_tiers_account_every_token() {
     let idx = cache.indexed_ids().len();
     let over = cache.overflow_ids().len();
     assert_eq!(dev + idx + over, cache.len());
+}
+
+#[test]
+fn online_drain_bounds_overflow_and_grows_index() {
+    // The tentpole behaviour: long generations must not accumulate an
+    // unbounded, linearly-scanned overflow buffer — the engine drains it
+    // into the ANN index on the watermark, and the answer chain still
+    // resolves afterwards.
+    let mut cfg = ServeConfig::default();
+    cfg.model = "induction-mini".into();
+    cfg.method = Method::RetrievalAttention;
+    cfg.pattern = retrieval_attention::kvcache::StaticPattern { sink: 32, window: 128 };
+    cfg.retrieval.top_k = 32;
+    cfg.retrieval.ef = 64;
+    cfg.retrieval.maintenance.drain_watermark = 16;
+    cfg.retrieval.maintenance.recent_queries = 16;
+    let eng = Engine::from_config(cfg).expect("engine init");
+
+    let mut rng = Rng::seed_from(77);
+    let s = tasks::passkey(&mut rng, 700, 0.3);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    let indexed_before = sess.caches[0][0].indexed_ids().len();
+    let (_tokens, bd) = eng.generate(&mut sess, 60).unwrap();
+
+    assert!(sess.drains > 0, "60 generated tokens must trigger watermark-16 drains");
+    assert!(sess.drained_tokens >= 32, "drained too little: {}", sess.drained_tokens);
+    assert!(bd.maintenance > 0.0, "maintenance phase must be timed");
+    for (layer, caches) in sess.caches.iter().enumerate() {
+        for (kvh, cache) in caches.iter().enumerate() {
+            let over = cache.overflow_ids().len();
+            assert!(
+                over < 16,
+                "layer {layer} kvh {kvh}: overflow {over} not bounded by the watermark"
+            );
+            // Tiers still partition every token exactly once.
+            let mut all: Vec<u32> = cache.device_ids();
+            all.extend(cache.indexed_ids());
+            all.extend(cache.overflow_ids());
+            all.sort_unstable();
+            assert_eq!(all, (0..cache.len() as u32).collect::<Vec<u32>>());
+        }
+    }
+    let indexed_after = sess.caches[0][0].indexed_ids().len();
+    assert!(
+        indexed_after > indexed_before,
+        "index must grow past the prefill set ({indexed_before} -> {indexed_after})"
+    );
+    // The host stores grew in lockstep with the indexed tier.
+    assert_eq!(sess.host_stores[0][0].rows(), indexed_after);
+
+    // Drained tokens must actually be *searchable* in the grown index, not
+    // just accounted for: probe the retriever with drained keys themselves
+    // (self-similarity dominates for the induction model's ±1 codes, so a
+    // correctly wired + mapped node must surface its own absolute id).
+    let cache = &sess.caches[0][0];
+    let drained_lo = indexed_before as u32 + 32; // first drained absolute id
+    let drained_hi = cache.indexed_end() as u32;
+    assert!(drained_hi > drained_lo, "no drained range to probe");
+    let mut hits = 0;
+    let probes: Vec<u32> = (drained_lo..drained_hi).step_by(11).take(5).collect();
+    for &id in &probes {
+        let r = sess.retrievers[0][0].retrieve(cache.key(id as usize), 32);
+        if r.ids.contains(&id) {
+            hits += 1;
+        }
+    }
+    assert!(
+        hits >= probes.len() - 1,
+        "drained keys not retrievable from the grown index: {hits}/{} probes hit",
+        probes.len()
+    );
 }

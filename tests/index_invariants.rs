@@ -4,7 +4,7 @@
 use retrieval_attention::attention::{attend_subset, combine, full_attention};
 use retrieval_attention::index::{
     exact_topk, flat::FlatIndex, hnsw::{HnswIndex, HnswParams}, ivf::IvfIndex,
-    roargraph::{RoarGraph, RoarParams}, SearchParams, VectorIndex,
+    roargraph::{RoarGraph, RoarParams}, InsertContext, SearchParams, VectorIndex,
 };
 use retrieval_attention::prop_assert;
 use retrieval_attention::tensor::Matrix;
@@ -153,6 +153,72 @@ fn prop_roargraph_reaches_everything_with_huge_ef() {
         let q: Vec<f32> = (0..keys.cols()).map(|_| r.normal()).collect();
         let res = idx.search(&q, n, &SearchParams { ef: n, nprobe: 0 });
         prop_assert!(res.ids.len() == n, "unreachable nodes: {} < {n}", res.ids.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_insert_then_search_within_epsilon_of_rebuild() {
+    // The online-maintenance contract: for every index family, building on
+    // a base set then folding in a batch via `insert_batch` must retrieve
+    // like a from-scratch build over the same vectors — recall@10 within
+    // ε = 0.05 (averaged over a query panel). A broken insert (unreachable
+    // or unmapped nodes) collapses recall and fails loudly.
+    check("insert ~ rebuild recall", 6, |rng| {
+        let n = 128 + rng.below(128);
+        let extra = 32 + rng.below(64);
+        let d = [8usize, 16, 32][rng.below(3)];
+        let total = n + extra;
+        let all = {
+            let mut r = rng.fork(1);
+            Arc::new(Matrix::from_fn(total, d, |_, _| r.normal()))
+        };
+        let base = Arc::new(Matrix::from_fn(n, d, |r, c| all[(r, c)]));
+        // Queries from a shifted (OOD-ish) distribution: training side for
+        // RoarGraph, wiring context for inserts, and the test panel.
+        let mut qr = rng.fork(2);
+        let qgen = |rows: usize, qr: &mut Rng| {
+            Matrix::from_fn(rows, d, |_, c| qr.normal() + if c == 0 { 1.5 } else { 0.0 })
+        };
+        let train = qgen(64, &mut qr);
+        let recent = qgen(16, &mut qr);
+        let panel = qgen(24, &mut qr);
+        let ctx = InsertContext { recent_queries: Some(&recent) };
+        // Generous search params: reachability/mapping bugs still collapse
+        // recall, while benign approximate-vs-approximate noise does not.
+        let params = SearchParams { ef: 256, nprobe: 16 };
+
+        let build = |which: usize, keys: Arc<Matrix>| -> Box<dyn VectorIndex> {
+            match which {
+                0 => Box::new(FlatIndex::new(keys)),
+                1 => Box::new(IvfIndex::build(keys, Some(16), 5)),
+                2 => Box::new(HnswIndex::build(keys, HnswParams::default())),
+                _ => Box::new(RoarGraph::build(keys, &train, RoarParams::default())),
+            }
+        };
+        for which in 0..4usize {
+            let mut inserted = build(which, base.clone());
+            prop_assert!(
+                inserted.insert_batch(all.clone(), n..total, &ctx),
+                "index {which}: insert_batch refused"
+            );
+            prop_assert!(inserted.len() == total, "index {which}: wrong len after insert");
+            let rebuilt = build(which, all.clone());
+            let (mut rec_ins, mut rec_reb) = (0.0f32, 0.0f32);
+            for qi in 0..panel.rows() {
+                let q = panel.row(qi);
+                let truth = exact_topk(&all, q, 10);
+                rec_ins += inserted.search(q, 10, &params).recall_against(&truth);
+                rec_reb += rebuilt.search(q, 10, &params).recall_against(&truth);
+            }
+            rec_ins /= panel.rows() as f32;
+            rec_reb /= panel.rows() as f32;
+            prop_assert!(
+                rec_ins >= rec_reb - 0.05,
+                "{}: insert recall {rec_ins} more than 0.05 below rebuild {rec_reb}",
+                inserted.name()
+            );
+        }
         Ok(())
     });
 }
