@@ -11,7 +11,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test fmt-check clippy bench artifacts clean
+.PHONY: verify build test test-concurrency fmt-check clippy bench artifacts clean
 
 verify: build test
 	-$(MAKE) fmt-check
@@ -22,6 +22,11 @@ build:
 
 test:
 	$(CARGO) test -q
+
+# Serialized concurrency/invariants suite for the maintenance worker and
+# the double-buffered index swap; `timeout` fails fast on a deadlock.
+test-concurrency:
+	timeout 600 $(CARGO) test -q --test maintenance_concurrency -- --test-threads=1
 
 fmt-check:
 	$(CARGO) fmt --all -- --check

@@ -1,17 +1,26 @@
 //! Bench: end-to-end per-token decode latency by method and context
 //! length — the measured backbone of Tables 4/7/8 — plus the online-
 //! maintenance flatness check: per-token decode cost as the generated
-//! length grows past `sink + window`, with the overflow→index drain on
-//! vs off. With the drain on, cost stays ~flat (the overflow buffer is
-//! bounded by the watermark); with it off, the linear overflow scan grows
-//! with every generated token.
+//! length grows past `sink + window`, with the overflow→index drain
+//! running on the background worker, inline (synchronous), or disabled.
+//! With maintenance on, cost stays ~flat (the overflow buffer is bounded
+//! by the watermark, and with the worker on, even the insert cost leaves
+//! the token path); with it off, the linear overflow scan grows with
+//! every generated token.
+//!
+//! Also profiles the drain's store-growth cost directly: segmented append
+//! (`KeyStore::append_rows`, O(batch) amortised) vs the monolithic
+//! deep-copy PR 1 used (O(context) per drain), at up to 128K-row
+//! geometry in `full` mode.
 //!
 //! `cargo bench --bench decode_latency [-- full]`
 //!
 //! Runs against PJRT artifacts when present, the native backend otherwise.
 
 use retrieval_attention::config::{Method, ServeConfig};
+use retrieval_attention::index::KeyStore;
 use retrieval_attention::model::Engine;
+use retrieval_attention::tensor::Matrix;
 use retrieval_attention::util::bench::{black_box, Bencher};
 use retrieval_attention::util::json::Value;
 use retrieval_attention::workload::geometry::{generate, GeometryParams};
@@ -86,15 +95,20 @@ fn main() {
         }
     }
 
-    // --- Long-generation flatness: drain on vs off. ---
+    // --- Long-generation flatness: worker on / sync drain / drain off. ---
     let n = if full { 16_384 } else { 2_048 };
     let gen = if full { 1_024 } else { 384 };
     let probe = 64usize;
     let mut growth = Value::obj();
-    for (tag, watermark) in [("drain-on", 64usize), ("drain-off", 0usize)] {
+    for (tag, watermark, async_worker) in [
+        ("worker-on", 32usize, true),
+        ("worker-off-sync", 32usize, false),
+        ("drain-off", 0usize, false),
+    ] {
         let mut cfg = ServeConfig::default();
         cfg.model = "llama3-mini".into();
         cfg.retrieval.maintenance.drain_watermark = watermark;
+        cfg.retrieval.maintenance.async_worker = async_worker;
         let engine = Engine::from_config(cfg).expect("engine");
         let heads = heads_for(&spec, n);
         let (early, late, drained, drains) =
@@ -118,9 +132,59 @@ fn main() {
         growth.set(tag, o);
     }
 
+    // --- Drain store-growth: segmented append vs monolithic deep copy. ---
+    // The segmented store appends one O(batch) chunk per drain (amortised
+    // tail merging); the PR-1 layout re-copied the whole dense prefix.
+    // 128K x 64 geometry in full mode makes that contrast ~three orders of
+    // magnitude per drain.
+    let drain_n = if full { 131_072 } else { 16_384 };
+    let batch = 32usize;
+    let drains = 64usize;
+    let dim = 64usize;
+    let prefix = Matrix::from_fn(drain_n, dim, |r, c| ((r * 31 + c) % 97) as f32 * 0.01);
+    let batch_rows = Matrix::from_fn(batch, dim, |r, c| ((r * 13 + c) % 89) as f32 * 0.02);
+
+    let t = std::time::Instant::now();
+    let mut seg = KeyStore::from_matrix(prefix.clone());
+    for _ in 0..drains {
+        seg = black_box(seg.append_rows(batch_rows.clone()));
+    }
+    let seg_s = t.elapsed().as_secs_f64() / drains as f64;
+
+    let t = std::time::Instant::now();
+    let mut mono = prefix;
+    for _ in 0..drains {
+        // The old drain: clone the whole dense store, push the batch.
+        let mut grown = mono.clone();
+        for r in 0..batch_rows.rows() {
+            grown.push_row(batch_rows.row(r));
+        }
+        mono = black_box(grown);
+    }
+    let mono_s = t.elapsed().as_secs_f64() / drains as f64;
+    assert_eq!(seg.rows(), mono.rows(), "profiles diverged");
+    let speedup = if seg_s > 0.0 { mono_s / seg_s } else { 0.0 };
+    println!(
+        "drain-store/n={drain_n}: segmented={:.3}us/drain monolithic-copy={:.3}us/drain \
+         speedup={speedup:.1}x segments={}",
+        seg_s * 1e6,
+        mono_s * 1e6,
+        seg.segment_count(),
+    );
+    let mut drain_profile = Value::obj();
+    drain_profile
+        .set("n", drain_n)
+        .set("batch", batch)
+        .set("drains", drains)
+        .set("segmented_s_per_drain", seg_s)
+        .set("monolithic_copy_s_per_drain", mono_s)
+        .set("speedup", speedup)
+        .set("segments", seg.segment_count());
+
     std::fs::create_dir_all("results").ok();
     let mut out = Value::obj();
     out.set("cases", b.to_json());
     out.set("growth", growth);
+    out.set("drain_store", drain_profile);
     std::fs::write("results/bench_decode.json", out.to_string_pretty()).ok();
 }

@@ -26,14 +26,15 @@ pub struct InfiniGenRetriever {
 
 impl InfiniGenRetriever {
     pub fn build(inp: &RetrieverInputs<'_>) -> Self {
-        let n = inp.host_keys.rows();
-        let d = inp.host_keys.cols();
+        let keys = inp.host_keys();
+        let n = keys.rows();
+        let d = keys.cols();
         let mut rng = Rng::seed_from(inp.seed ^ 0x1AF1_6E4);
         let scale = 1.0 / (R as f32).sqrt();
         let proj = Matrix::from_fn(d, R, |_, _| rng.normal() * scale);
         let mut sketches = Matrix::zeros(n, R);
         for i in 0..n {
-            let key = inp.host_keys.row(i);
+            let key = keys.row(i);
             let out = sketches.row_mut(i);
             for (j, o) in out.iter_mut().enumerate() {
                 let mut s = 0.0;
@@ -43,7 +44,7 @@ impl InfiniGenRetriever {
                 *o = s;
             }
         }
-        InfiniGenRetriever { ids: inp.host_ids.clone(), proj, sketches, d }
+        InfiniGenRetriever { ids: inp.host_ids(), proj, sketches, d }
     }
 }
 
@@ -88,18 +89,12 @@ mod tests {
     use super::*;
     use crate::baselines::tests::test_inputs;
     use crate::config::RetrievalConfig;
+    use crate::index::KeyStore;
 
-    fn build(n: usize, d: usize, seed: u64) -> (InfiniGenRetriever, Arc<Matrix>, Arc<Vec<u32>>) {
+    fn build(n: usize, d: usize, seed: u64) -> (InfiniGenRetriever, KeyStore, Vec<u32>) {
         let (keys, ids, queries) = test_inputs(n, d, seed);
         let cfg = RetrievalConfig::default();
-        let inp = RetrieverInputs {
-            host_keys: keys.clone(),
-            host_ids: ids.clone(),
-            prefill_queries: &queries,
-            scale: 0.25,
-            cfg: &cfg,
-            seed,
-        };
+        let inp = RetrieverInputs::from_parts(keys.clone(), ids.clone(), &queries, 0.25, &cfg, seed);
         (InfiniGenRetriever::build(&inp), keys, ids)
     }
 
@@ -114,18 +109,11 @@ mod tests {
         for (j, v) in keys.row_mut(217).iter_mut().enumerate() {
             *v = q[j] * 5.0;
         }
-        let keys = Arc::new(keys);
-        let ids = Arc::new((0..400u32).collect::<Vec<_>>());
+        let ids: Vec<u32> = (0..400u32).collect();
         let queries = Matrix::from_fn(4, 32, |_, _| 0.1);
         let cfg = RetrievalConfig::default();
-        let inp = RetrieverInputs {
-            host_keys: keys,
-            host_ids: ids,
-            prefill_queries: &queries,
-            scale: 0.2,
-            cfg: &cfg,
-            seed: 3,
-        };
+        let inp =
+            RetrieverInputs::from_parts(KeyStore::from_matrix(keys), ids, &queries, 0.2, &cfg, 3);
         let r = InfiniGenRetriever::build(&inp);
         let out = r.retrieve(&q, 20);
         assert!(out.ids.contains(&217), "planted key missed by speculation");
@@ -139,8 +127,10 @@ mod tests {
         let (r, keys, ids) = build(2000, 64, 4);
         let mut rng = Rng::seed_from(5);
         let q: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
-        let exact: Vec<u32> =
-            crate::index::exact_topk(&keys, &q, 50).iter().map(|&i| ids[i as usize]).collect();
+        let exact: Vec<u32> = crate::index::exact_topk_store(&keys, &q, 50)
+            .iter()
+            .map(|&i| ids[i as usize])
+            .collect();
         let out = r.retrieve(&q, 50);
         let hits = out.ids.iter().filter(|i| exact.contains(i)).count();
         // Random chance would be 50*50/2000 ≈ 1.25 hits; the sketch must

@@ -10,7 +10,8 @@
 //! (Retr.KV ≈ 0.5%).
 
 use super::{HostRetriever, Retrieval, RetrieverInputs};
-use crate::tensor::{argtopk, dot, Matrix};
+use crate::index::KeyStore;
+use crate::tensor::{argtopk, dot};
 use std::sync::Arc;
 
 /// Tokens per block (InfLLM's default granularity).
@@ -19,7 +20,7 @@ const BLOCK: usize = 128;
 const REPS: usize = 4;
 
 pub struct InfLlmRetriever {
-    keys: Arc<Matrix>,
+    keys: KeyStore,
     ids: Arc<Vec<u32>>,
     /// Representative dense-row indices per block.
     reps: Vec<[u32; REPS]>,
@@ -29,7 +30,8 @@ pub struct InfLlmRetriever {
 
 impl InfLlmRetriever {
     pub fn build(inp: &RetrieverInputs<'_>) -> Self {
-        let n = inp.host_keys.rows();
+        let keys = inp.host_keys();
+        let n = keys.rows();
         let nblocks = n.div_ceil(BLOCK);
         let mut reps = Vec::with_capacity(nblocks);
         let mut blocks = Vec::with_capacity(nblocks);
@@ -38,8 +40,7 @@ impl InfLlmRetriever {
             let hi = (lo + BLOCK).min(n);
             // Representative selection: top-REPS keys by norm within the
             // block (proxy for "receives most attention").
-            let norms: Vec<f32> =
-                (lo..hi).map(|i| crate::tensor::norm(inp.host_keys.row(i))).collect();
+            let norms: Vec<f32> = (lo..hi).map(|i| crate::tensor::norm(keys.row(i))).collect();
             let top = argtopk(&norms, REPS.min(hi - lo));
             let mut r = [0u32; REPS];
             for (slot, &t) in r.iter_mut().zip(top.iter().cycle().take(REPS)) {
@@ -48,7 +49,7 @@ impl InfLlmRetriever {
             reps.push(r);
             blocks.push((lo as u32, hi as u32));
         }
-        InfLlmRetriever { keys: inp.host_keys.clone(), ids: inp.host_ids.clone(), reps, blocks }
+        InfLlmRetriever { keys, ids: inp.host_ids(), reps, blocks }
     }
 
     pub fn block_count(&self) -> usize {
@@ -99,17 +100,10 @@ mod tests {
     use crate::baselines::tests::test_inputs;
     use crate::config::RetrievalConfig;
 
-    fn build(n: usize, seed: u64) -> (InfLlmRetriever, Arc<Matrix>, Arc<Vec<u32>>) {
+    fn build(n: usize, seed: u64) -> (InfLlmRetriever, KeyStore, Vec<u32>) {
         let (keys, ids, queries) = test_inputs(n, 16, seed);
         let cfg = RetrievalConfig::default();
-        let inp = RetrieverInputs {
-            host_keys: keys.clone(),
-            host_ids: ids.clone(),
-            prefill_queries: &queries,
-            scale: 0.25,
-            cfg: &cfg,
-            seed,
-        };
+        let inp = RetrieverInputs::from_parts(keys.clone(), ids.clone(), &queries, 0.25, &cfg, seed);
         (InfLlmRetriever::build(&inp), keys, ids)
     }
 

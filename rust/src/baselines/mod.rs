@@ -17,11 +17,18 @@
 //! | HNSW                | HNSW index search (ablation)                      |
 //! | RetrievalAttention  | attention-aware RoarGraph search                  |
 //!
-//! Retrievers are built once per (layer, query-head) at prefill; methods
-//! with a live index additionally accept [`HostRetriever::insert_batch`]
-//! so the engine can drain decoded tokens into the searchable set.
-//! Decode-time searches still fan out across heads (Appendix C) — inserts
-//! synchronise through per-retriever read/write locks.
+//! Retrievers are built once per (layer, query-head) at prefill. The
+//! GQA group's **shared state** ([`GroupShared`]) holds the single
+//! segmented key copy and the single dense→absolute id map of Appendix C
+//! — one per group, not one per query head.
+//!
+//! Index-backed retrievers are **double-buffered** ([`IndexRetriever`]):
+//! decode-time searches snapshot the front index with one `Arc` clone and
+//! run entirely lock-free from there, while the maintenance worker mutates
+//! a private back buffer and publishes it with a generation-counted swap
+//! (left/right buffering with an op-replay log, so neither buffer is ever
+//! rebuilt from scratch). A reader can therefore never observe a
+//! partially-applied insert or remove.
 
 pub mod infinigen;
 pub mod infllm;
@@ -34,10 +41,11 @@ use crate::index::{
     hnsw::{HnswIndex, HnswParams},
     ivf::IvfIndex,
     roargraph::{RoarGraph, RoarParams},
-    InsertContext, SearchParams, VectorIndex,
+    InsertContext, KeyStore, SearchParams, VectorIndex,
 };
 use crate::tensor::Matrix;
-use std::sync::{Arc, RwLock};
+use crate::util::swap::Published;
+use std::sync::{Arc, Mutex};
 
 /// Result of one host retrieval: *absolute* token ids + scan count.
 #[derive(Clone, Debug, Default)]
@@ -46,11 +54,109 @@ pub struct Retrieval {
     pub scanned: usize,
 }
 
+/// Per-GQA-group shared retrieval state (Appendix C, "Minimize the CPU
+/// Memory Usage"): ONE segmented dense key copy and ONE dense→absolute id
+/// map, shared by every query head of the group. Both are published with
+/// generation-counted swaps; the id map is always published *before* any
+/// index front that references its new rows, so a reader holding an index
+/// snapshot can map every dense id it can ever return.
+pub struct GroupShared {
+    /// Segmented dense key store (`Arc`'d chunks; drains append O(batch)).
+    pub store: Published<KeyStore>,
+    /// Dense row -> absolute token id, ascending.
+    pub ids: Published<Vec<u32>>,
+    /// Set once an extend breaks the ascending order — possible only when
+    /// a truncate-then-redrain session legally re-appends an absolute id.
+    /// Reverse lookups then fall back from binary search to a one-shot
+    /// hash map (where the later dense slot wins; the earlier one is
+    /// already tombstoned).
+    unsorted: std::sync::atomic::AtomicBool,
+}
+
+impl GroupShared {
+    pub fn new(store: KeyStore, ids: Vec<u32>) -> Arc<GroupShared> {
+        debug_assert_eq!(store.rows(), ids.len());
+        Arc::new(GroupShared {
+            store: Published::new(store),
+            ids: Published::new(ids),
+            unsorted: std::sync::atomic::AtomicBool::new(false),
+        })
+    }
+
+    /// Snapshot the current key store (cheap: chunk-table clone).
+    pub fn keys(&self) -> KeyStore {
+        (*self.store.load()).clone()
+    }
+
+    /// Snapshot the dense→absolute id map.
+    pub fn id_map(&self) -> Arc<Vec<u32>> {
+        self.ids.load()
+    }
+
+    /// Grow the group state for a drained batch: the id map is extended
+    /// and published first, then (when some head actually reads keys) the
+    /// store gains one segment. Returns the store the inserts must use.
+    pub fn extend(&self, rows: Matrix, new_ids: &[u32], grow_store: bool) -> KeyStore {
+        let mut ids = (*self.ids.load()).clone();
+        let boundary_ok = match (ids.last(), new_ids.first()) {
+            (Some(&last), Some(&first)) => first > last,
+            _ => true,
+        };
+        if !boundary_ok || new_ids.windows(2).any(|w| w[1] <= w[0]) {
+            self.unsorted.store(true, std::sync::atomic::Ordering::Release);
+        }
+        ids.extend_from_slice(new_ids);
+        self.ids.publish(Arc::new(ids));
+        if grow_store {
+            let grown = self.store.load().append_rows(rows);
+            self.store.publish(Arc::new(grown.clone()));
+            grown
+        } else {
+            self.keys()
+        }
+    }
+
+    /// Heap bytes of the shared id map (counted once per group).
+    pub fn map_bytes(&self) -> usize {
+        self.ids.load().len() * 4
+    }
+
+    /// Heap bytes of the shared key store — f32 payload plus chunk table —
+    /// counted once per group (Appendix C's single-copy layout).
+    pub fn store_bytes(&self) -> usize {
+        let store = self.store.load();
+        store.rows() * store.cols() * 4 + store.table_bytes()
+    }
+
+    /// Resolve absolute token ids to dense slots against the current map —
+    /// ONCE per *group*, so an eviction/truncation batch does not pay the
+    /// reverse lookup per query head. While the map is ascending (the
+    /// common case: it only ever appends increasing ids), each id resolves
+    /// by allocation-free binary search; after a truncate-then-redrain has
+    /// broken the order, a one-shot hash map takes over (the later dense
+    /// slot wins; the earlier one is already tombstoned). Unknown ids are
+    /// skipped.
+    pub fn dense_ids_for(&self, absolute_ids: &[u32]) -> Vec<u32> {
+        let ids = self.ids.load();
+        if !self.unsorted.load(std::sync::atomic::Ordering::Acquire) {
+            return absolute_ids
+                .iter()
+                .filter_map(|a| ids.binary_search(a).ok().map(|d| d as u32))
+                .collect();
+        }
+        let reverse: std::collections::HashMap<u32, u32> =
+            ids.iter().enumerate().map(|(d, &a)| (a, d as u32)).collect();
+        absolute_ids.iter().filter_map(|a| reverse.get(a).copied()).collect()
+    }
+}
+
 /// A per-(layer, query-head) host retrieval policy.
 pub trait HostRetriever: Send + Sync {
     fn retrieve(&self, q: &[f32], k: usize) -> Retrieval;
     fn name(&self) -> &'static str;
-    /// Index/metadata heap bytes (memory accounting).
+    /// Index/metadata heap bytes (memory accounting). The group-shared id
+    /// map and key store are *excluded* — they are counted once per group
+    /// via [`GroupShared::map_bytes`], not once per head.
     fn memory_bytes(&self) -> usize {
         0
     }
@@ -79,37 +185,73 @@ pub trait HostRetriever: Send + Sync {
     }
 
     /// Whether [`HostRetriever::insert_batch`] actually reads `store`.
-    /// When every head of a group returns false the caller may pass a
-    /// stale store and skip the grow-and-copy entirely (AllRetriever only
-    /// tracks ids; EmptyRetriever reads nothing).
+    /// When every head of a group returns false the caller may skip the
+    /// store grow entirely (AllRetriever only tracks ids; EmptyRetriever
+    /// reads nothing).
     fn needs_store(&self) -> bool {
         true
     }
 
     /// Fold newly decoded host tokens into the searchable set.
     ///
-    /// `store` is the grown dense key matrix shared by the whole GQA group
-    /// (one copy per kv head, Appendix C): rows `[0, store.rows() -
-    /// ids.len())` are unchanged from the previous drain, the final
-    /// `ids.len()` rows are the new key vectors, and `ids` carries their
-    /// absolute token ids. Takes `&self` — retrievers that support inserts
-    /// use interior locking so decode-time searches keep fanning out
-    /// lock-free across heads.
+    /// `store` is the grown segmented key store shared by the whole GQA
+    /// group: rows `[0, store.rows() - ids.len())` are unchanged from the
+    /// previous drain, the final `ids.len()` rows are the new key vectors,
+    /// and `ids` carries their absolute token ids. The caller must already
+    /// have published `ids` into the group's shared map (see
+    /// [`GroupShared::extend`]). Takes `&self` — index retrievers apply
+    /// the op to their private back buffer and publish it with an atomic
+    /// swap, so decode-time searches stay un-blocked.
     ///
     /// Returns `false` when unsupported (fixed-set baselines): the caller
     /// keeps those tokens in the linearly-scanned overflow buffer.
-    fn insert_batch(&self, store: &Arc<Matrix>, ids: &[u32], ctx: &InsertContext<'_>) -> bool {
+    fn insert_batch(&self, store: &KeyStore, ids: &[u32], ctx: &InsertContext<'_>) -> bool {
         let _ = (store, ids, ctx);
         false
+    }
+
+    /// Whether [`HostRetriever::remove_batch`] can succeed.
+    fn supports_remove(&self) -> bool {
+        false
+    }
+
+    /// Tombstone the given *absolute* token ids (eviction / truncation):
+    /// they must never be retrieved again. Dense ids stay stable — the
+    /// shared map is never rewritten. Returns `false` when unsupported.
+    fn remove_batch(&self, absolute_ids: &[u32]) -> bool {
+        let _ = absolute_ids;
+        false
+    }
+
+    /// Pre-mapped variant of [`HostRetriever::remove_batch`]: the caller
+    /// resolved dense slots against the group map once (via
+    /// [`GroupShared::dense_ids_for`]) for the whole GQA group.
+    fn remove_dense(&self, dense_ids: &[u32]) -> bool {
+        let _ = dense_ids;
+        false
+    }
+
+    /// Tombstoned-but-unreclaimed index slots (tombstone-ratio metric).
+    fn tombstones(&self) -> usize {
+        0
+    }
+
+    /// Live searchable vectors for index-backed retrievers; `None` for
+    /// policies without an index.
+    fn indexed_len(&self) -> Option<usize> {
+        None
+    }
+
+    /// Front-buffer generation: bumps on every double-buffered swap.
+    fn index_generation(&self) -> u64 {
+        0
     }
 }
 
 /// Everything a retriever constructor may need.
 pub struct RetrieverInputs<'a> {
-    /// Dense host key matrix (rows = indexed host tokens, in id order).
-    pub host_keys: Arc<Matrix>,
-    /// Absolute token id per dense row.
-    pub host_ids: Arc<Vec<u32>>,
+    /// The GQA group's shared key store + id map.
+    pub group: Arc<GroupShared>,
     /// This query head's prefill queries (training data for RoarGraph and
     /// scoring data for SnapKV).
     pub prefill_queries: &'a Matrix,
@@ -119,39 +261,62 @@ pub struct RetrieverInputs<'a> {
     pub seed: u64,
 }
 
+impl<'a> RetrieverInputs<'a> {
+    /// Convenience for tests/experiments: wrap a standalone key store +
+    /// id list into a fresh (unshared) group.
+    pub fn from_parts(
+        keys: KeyStore,
+        ids: Vec<u32>,
+        prefill_queries: &'a Matrix,
+        scale: f32,
+        cfg: &'a RetrievalConfig,
+        seed: u64,
+    ) -> RetrieverInputs<'a> {
+        RetrieverInputs { group: GroupShared::new(keys, ids), prefill_queries, scale, cfg, seed }
+    }
+
+    /// Snapshot of the group's dense key store.
+    pub fn host_keys(&self) -> KeyStore {
+        self.group.keys()
+    }
+
+    /// Snapshot of the group's dense→absolute id map.
+    pub fn host_ids(&self) -> Arc<Vec<u32>> {
+        self.group.id_map()
+    }
+}
+
 /// Build the retriever for a method.
 pub fn build_retriever(method: Method, inp: RetrieverInputs<'_>) -> Box<dyn HostRetriever> {
     let index_retriever = |index: Box<dyn VectorIndex>, label: &'static str| {
-        Box::new(IndexRetriever {
-            index: RwLock::new(index),
-            ids: RwLock::new(inp.host_ids.as_ref().clone()),
-            params: SearchParams { ef: inp.cfg.ef, nprobe: inp.cfg.nprobe },
+        Box::new(IndexRetriever::new(
+            index,
+            inp.group.clone(),
+            SearchParams { ef: inp.cfg.ef, nprobe: inp.cfg.nprobe },
             label,
-        })
+        ))
     };
     match method {
         Method::StreamingLlm => Box::new(EmptyRetriever),
-        Method::Full | Method::VllmLike => Box::new(AllRetriever {
-            ids: RwLock::new(inp.host_ids.as_ref().clone()),
-        }),
+        Method::Full | Method::VllmLike => Box::new(AllRetriever { group: inp.group.clone() }),
         Method::SnapKv => Box::new(snapkv::SnapKvRetriever::build(&inp)),
         Method::InfLlm => Box::new(infllm::InfLlmRetriever::build(&inp)),
         Method::Quest => Box::new(quest::QuestRetriever::build(&inp)),
         Method::InfiniGen => Box::new(infinigen::InfiniGenRetriever::build(&inp)),
-        Method::Flat => index_retriever(Box::new(FlatIndex::new(inp.host_keys.clone())), "Flat"),
+        Method::Flat => index_retriever(Box::new(FlatIndex::new(inp.host_keys())), "Flat"),
         Method::Ivf => {
-            index_retriever(Box::new(IvfIndex::build(inp.host_keys.clone(), None, inp.seed)), "IVF")
+            index_retriever(Box::new(IvfIndex::build(inp.host_keys(), None, inp.seed)), "IVF")
         }
         Method::Hnsw => index_retriever(
             Box::new(HnswIndex::build(
-                inp.host_keys.clone(),
+                inp.host_keys(),
                 HnswParams { m: inp.cfg.m, ef_construction: inp.cfg.ef.max(64), seed: inp.seed },
             )),
             "HNSW",
         ),
         Method::RetrievalAttention => index_retriever(
             Box::new(RoarGraph::build(
-                inp.host_keys.clone(),
+                inp.host_keys(),
                 inp.prefill_queries,
                 RoarParams {
                     kb: inp.cfg.kb,
@@ -168,7 +333,7 @@ pub fn build_retriever(method: Method, inp: RetrieverInputs<'_>) -> Box<dyn Host
 /// StreamingLLM: no host tokens at all. Inserts are "accepted" by
 /// discarding — StreamingLLM's whole definition is that tokens outside
 /// sink+window are dropped, so a drained overflow token simply ceases to
-/// be attended.
+/// be attended. Removal is trivially supported (nothing is indexed).
 pub struct EmptyRetriever;
 
 impl HostRetriever for EmptyRetriever {
@@ -192,22 +357,34 @@ impl HostRetriever for EmptyRetriever {
         false
     }
 
-    fn insert_batch(&self, _store: &Arc<Matrix>, _ids: &[u32], _ctx: &InsertContext<'_>) -> bool {
+    fn insert_batch(&self, _store: &KeyStore, _ids: &[u32], _ctx: &InsertContext<'_>) -> bool {
+        true
+    }
+
+    fn supports_remove(&self) -> bool {
+        true
+    }
+
+    fn remove_batch(&self, _absolute_ids: &[u32]) -> bool {
+        true
+    }
+
+    fn remove_dense(&self, _dense_ids: &[u32]) -> bool {
         true
     }
 }
 
-/// Full attention: every host token, no scan savings. Online inserts keep
-/// the host set complete (and exact) for arbitrarily long generations.
+/// Full attention: every host token, no scan savings. The host set is the
+/// group's shared id map — online drains keep it complete (and exact) for
+/// arbitrarily long generations without a per-head copy.
 pub struct AllRetriever {
-    ids: RwLock<Vec<u32>>,
+    group: Arc<GroupShared>,
 }
 
 impl HostRetriever for AllRetriever {
     fn retrieve(&self, _q: &[f32], _k: usize) -> Retrieval {
-        let ids = self.ids.read().unwrap().clone();
-        let n = ids.len();
-        Retrieval { ids, scanned: n }
+        let ids = self.group.id_map();
+        Retrieval { ids: (*ids).clone(), scanned: ids.len() }
     }
 
     fn name(&self) -> &'static str {
@@ -222,34 +399,138 @@ impl HostRetriever for AllRetriever {
         false
     }
 
-    fn insert_batch(&self, _store: &Arc<Matrix>, ids: &[u32], _ctx: &InsertContext<'_>) -> bool {
-        self.ids.write().unwrap().extend_from_slice(ids);
+    /// The group-level drain already published the grown id map; nothing
+    /// head-local to do.
+    fn insert_batch(&self, _store: &KeyStore, _ids: &[u32], _ctx: &InsertContext<'_>) -> bool {
         true
     }
 }
 
-/// Any [`VectorIndex`] adapted to absolute ids. The index and the
-/// dense→absolute id map sit behind read/write locks so decode-time
-/// searches (read) and overflow drains (write) can share one retriever
-/// across the engine's head-parallel fan-out.
+/// One index operation, as recorded in the double-buffer replay log.
+enum IndexOp {
+    Insert { store: KeyStore, count: usize, queries: Option<Matrix> },
+    Remove { dense: Vec<u32> },
+}
+
+fn apply_op(idx: &mut Box<dyn VectorIndex>, op: &IndexOp) -> bool {
+    match op {
+        IndexOp::Insert { store, count, queries } => {
+            let old = idx.len();
+            if store.rows() != old + count {
+                // Contract violation (caller's store is out of sync):
+                // refuse rather than corrupt the dense↔absolute mapping.
+                return false;
+            }
+            let ctx = InsertContext { recent_queries: queries.as_ref() };
+            idx.insert_batch(store.clone(), old..store.rows(), &ctx)
+        }
+        IndexOp::Remove { dense } => idx.remove_batch(dense),
+    }
+}
+
+/// The back buffer of the left/right scheme: the previously displaced
+/// front plus the ops applied to the current front but not yet replayed
+/// onto it.
+struct BackBuffer {
+    spare: Option<Arc<Box<dyn VectorIndex>>>,
+    pending: Vec<IndexOp>,
+}
+
+/// Any [`VectorIndex`] adapted to absolute ids, double-buffered for the
+/// off-thread maintenance worker.
+///
+/// * **Read path** (decode): one `Arc` clone of the front index + one of
+///   the group id map; the whole search then runs without any lock. The
+///   id map is always at least as new as the index front (publish order),
+///   so every dense id the search returns is mapped.
+/// * **Write path** (worker): ops go through [`IndexRetriever::apply`] —
+///   reclaim the spare buffer (the old front, once its readers drain),
+///   replay the op log, apply the new op, publish with a generation bump,
+///   and keep the displaced front as the next spare. Both buffers evolve
+///   through the identical op sequence, so neither is ever rebuilt.
 pub struct IndexRetriever {
-    index: RwLock<Box<dyn VectorIndex>>,
-    ids: RwLock<Vec<u32>>,
+    front: Published<Box<dyn VectorIndex>>,
+    back: Mutex<BackBuffer>,
+    group: Arc<GroupShared>,
     params: SearchParams,
     label: &'static str,
 }
 
 impl IndexRetriever {
-    /// Run `f` against the underlying vector index (diagnostics).
+    pub fn new(
+        index: Box<dyn VectorIndex>,
+        group: Arc<GroupShared>,
+        params: SearchParams,
+        label: &'static str,
+    ) -> IndexRetriever {
+        IndexRetriever {
+            front: Published::new(index),
+            back: Mutex::new(BackBuffer { spare: None, pending: Vec::new() }),
+            group,
+            params,
+            label,
+        }
+    }
+
+    /// Run `f` against the current front index (diagnostics).
     pub fn with_index<R>(&self, f: impl FnOnce(&dyn VectorIndex) -> R) -> R {
-        f(self.index.read().unwrap().as_ref())
+        let front = self.front.load();
+        f(front.as_ref().as_ref())
+    }
+
+    /// Left/right apply: see the type docs. Serialised by the back mutex;
+    /// readers are never blocked (they hold only `Arc` snapshots).
+    fn apply(&self, op: IndexOp) -> bool {
+        let mut back = self.back.lock().expect("back buffer poisoned");
+        let mut idx: Box<dyn VectorIndex> = match back.spare.take() {
+            Some(mut arc) => {
+                // Reclaim exclusive ownership once in-flight readers of
+                // the old front drop their snapshots. Searches are short,
+                // so a brief yield loop almost always wins; a straggler
+                // (e.g. a slow diagnostic holding the snapshot) triggers
+                // the clone fallback instead of pinning a core.
+                let mut spins = 0u32;
+                loop {
+                    match Arc::try_unwrap(arc) {
+                        Ok(b) => break b,
+                        Err(again) => {
+                            if spins >= 1_000 {
+                                break again.clone_index();
+                            }
+                            arc = again;
+                            spins += 1;
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            }
+            // First op ever: split one clone off the front.
+            None => self.front.load().clone_index(),
+        };
+        for prev in back.pending.drain(..) {
+            let ok = apply_op(&mut idx, &prev);
+            debug_assert!(ok, "op replay diverged on the spare buffer");
+        }
+        if !apply_op(&mut idx, &op) {
+            // Refused: the spare is now exactly caught up with the front.
+            back.spare = Some(Arc::new(idx));
+            return false;
+        }
+        let old = self.front.publish(Arc::new(idx));
+        back.spare = Some(old);
+        back.pending.push(op);
+        true
     }
 }
 
 impl HostRetriever for IndexRetriever {
     fn retrieve(&self, q: &[f32], k: usize) -> Retrieval {
-        let index = self.index.read().unwrap();
-        let ids = self.ids.read().unwrap();
+        // Snapshot order (index, then ids) is the reverse of publish order
+        // (ids, then index): the map can only be newer than the front, so
+        // every dense id is mapped.
+        let index = self.front.load();
+        let ids = self.group.id_map();
+        debug_assert!(ids.len() >= index.len(), "id map behind the index front");
         let r = index.search(q, k, &self.params);
         Retrieval {
             ids: r.ids.iter().map(|&dense| ids[dense as usize]).collect(),
@@ -262,27 +543,49 @@ impl HostRetriever for IndexRetriever {
     }
 
     fn memory_bytes(&self) -> usize {
-        self.index.read().unwrap().memory_bytes()
+        self.front.load().memory_bytes()
     }
 
     fn supports_insert(&self) -> bool {
-        self.index.read().unwrap().supports_insert()
+        self.front.load().supports_insert()
     }
 
-    fn insert_batch(&self, store: &Arc<Matrix>, ids: &[u32], ctx: &InsertContext<'_>) -> bool {
-        // Lock order (index, then ids) matches `retrieve`.
-        let mut index = self.index.write().unwrap();
-        let old = index.len();
-        if store.rows() != old + ids.len() {
-            // Contract violation (caller's store is out of sync): refuse
-            // rather than corrupt the dense↔absolute mapping.
+    fn insert_batch(&self, store: &KeyStore, ids: &[u32], ctx: &InsertContext<'_>) -> bool {
+        let queries = ctx.recent_queries.filter(|m| m.rows() > 0).cloned();
+        self.apply(IndexOp::Insert { store: store.clone(), count: ids.len(), queries })
+    }
+
+    fn supports_remove(&self) -> bool {
+        self.front.load().supports_remove()
+    }
+
+    fn remove_batch(&self, absolute_ids: &[u32]) -> bool {
+        if !self.supports_remove() {
             return false;
         }
-        if !index.insert_batch(store.clone(), old..store.rows(), ctx) {
+        self.remove_dense(&self.group.dense_ids_for(absolute_ids))
+    }
+
+    fn remove_dense(&self, dense_ids: &[u32]) -> bool {
+        if !self.supports_remove() {
             return false;
         }
-        self.ids.write().unwrap().extend_from_slice(ids);
-        true
+        if dense_ids.is_empty() {
+            return true;
+        }
+        self.apply(IndexOp::Remove { dense: dense_ids.to_vec() })
+    }
+
+    fn tombstones(&self) -> usize {
+        self.front.load().tombstones()
+    }
+
+    fn indexed_len(&self) -> Option<usize> {
+        Some(self.front.load().live_len())
+    }
+
+    fn index_generation(&self) -> u64 {
+        self.front.generation()
     }
 }
 
@@ -291,15 +594,11 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    pub(crate) fn test_inputs(
-        n: usize,
-        d: usize,
-        seed: u64,
-    ) -> (Arc<Matrix>, Arc<Vec<u32>>, Matrix) {
+    pub(crate) fn test_inputs(n: usize, d: usize, seed: u64) -> (KeyStore, Vec<u32>, Matrix) {
         let mut rng = Rng::seed_from(seed);
-        let keys = Arc::new(Matrix::from_fn(n, d, |_, _| rng.normal()));
+        let keys = KeyStore::from_matrix(Matrix::from_fn(n, d, |_, _| rng.normal()));
         // Absolute ids offset by the sink size (host tokens start past it).
-        let ids = Arc::new((0..n as u32).map(|i| i + 128).collect::<Vec<_>>());
+        let ids: Vec<u32> = (0..n as u32).map(|i| i + 128).collect();
         let queries = Matrix::from_fn(64, d, |_, c| rng.normal() + if c < d / 4 { 1.5 } else { 0.0 });
         (keys, ids, queries)
     }
@@ -313,8 +612,8 @@ mod tests {
 
     #[test]
     fn all_retriever_returns_everything() {
-        let (_keys, ids, _) = test_inputs(50, 8, 1);
-        let r = AllRetriever { ids: RwLock::new(ids.as_ref().clone()) };
+        let (keys, ids, _) = test_inputs(50, 8, 1);
+        let r = AllRetriever { group: GroupShared::new(keys, ids) };
         let out = r.retrieve(&[0.0; 8], 5);
         assert_eq!(out.ids.len(), 50);
         assert_eq!(out.scanned, 50);
@@ -325,14 +624,8 @@ mod tests {
         let (keys, ids, queries) = test_inputs(512, 16, 2);
         let cfg = RetrievalConfig::default();
         for method in Method::ALL {
-            let inp = RetrieverInputs {
-                host_keys: keys.clone(),
-                host_ids: ids.clone(),
-                prefill_queries: &queries,
-                scale: 0.25,
-                cfg: &cfg,
-                seed: 3,
-            };
+            let inp =
+                RetrieverInputs::from_parts(keys.clone(), ids.clone(), &queries, 0.25, &cfg, 3);
             let r = build_retriever(method, inp);
             let q: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).sin()).collect();
             let out = r.retrieve(&q, 20);
@@ -349,46 +642,88 @@ mod tests {
     #[test]
     fn index_retriever_maps_dense_to_absolute() {
         let (keys, ids, _) = test_inputs(100, 8, 4);
-        let r = IndexRetriever {
-            index: RwLock::new(Box::new(FlatIndex::new(keys.clone()))),
-            ids: RwLock::new(ids.as_ref().clone()),
-            params: SearchParams::default(),
-            label: "Flat",
-        };
+        let group = GroupShared::new(keys.clone(), ids.clone());
+        let r = IndexRetriever::new(
+            Box::new(FlatIndex::new(keys.clone())),
+            group,
+            SearchParams::default(),
+            "Flat",
+        );
         let q: Vec<f32> = keys.row(7).to_vec();
         let out = r.retrieve(&q, 1);
         assert_eq!(out.ids, vec![ids[7]]);
     }
 
     #[test]
-    fn index_retriever_insert_extends_mapping() {
+    fn index_retriever_insert_extends_mapping_and_generation() {
         let (keys, ids, _) = test_inputs(64, 8, 6);
-        let r = IndexRetriever {
-            index: RwLock::new(Box::new(FlatIndex::new(keys.clone()))),
-            ids: RwLock::new(ids.as_ref().clone()),
-            params: SearchParams::default(),
-            label: "Flat",
-        };
+        let group = GroupShared::new(keys.clone(), ids.clone());
+        let r = IndexRetriever::new(
+            Box::new(FlatIndex::new(keys.clone())),
+            group.clone(),
+            SearchParams::default(),
+            "Flat",
+        );
         assert!(r.supports_insert());
-        // Grow the shared store by two rows with fresh absolute ids.
-        let mut grown = (*keys).clone();
-        grown.push_row(&[5.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
-        grown.push_row(&[0.0, 5.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
-        let grown = Arc::new(grown);
+        assert_eq!(r.index_generation(), 0);
+        // Grow the shared store by two rows with fresh absolute ids — the
+        // group-level extend first, then the head-level insert.
+        let mut batch = Matrix::zeros(0, 8);
+        batch.push_row(&[5.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        batch.push_row(&[0.0, 5.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let grown = group.extend(batch, &[900, 901], true);
         let ctx = InsertContext::none();
         assert!(r.insert_batch(&grown, &[900, 901], &ctx));
+        assert_eq!(r.index_generation(), 1);
         let out = r.retrieve(&[1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0], 1);
         assert_eq!(out.ids, vec![900], "inserted token must map to its absolute id");
-        // Out-of-sync store is refused.
+        // Out-of-sync store is refused and does not bump the front.
         assert!(!r.insert_batch(&grown, &[902], &ctx), "stale store must be rejected");
+        assert_eq!(r.index_generation(), 1);
+        // The next in-sync op still works (the spare buffer recovered).
+        let grown2 = group.extend(
+            Matrix::from_vec(1, 8, vec![0.0, 0.0, 7.0, 0.0, 0.0, 0.0, 0.0, 0.0]),
+            &[903],
+            true,
+        );
+        assert!(r.insert_batch(&grown2, &[903], &ctx));
+        assert_eq!(r.index_generation(), 2);
+        let out = r.retrieve(&[0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0], 1);
+        assert_eq!(out.ids, vec![903]);
     }
 
     #[test]
-    fn all_retriever_accepts_inserts() {
+    fn index_retriever_remove_tombstones_absolute_ids() {
+        let (keys, ids, _) = test_inputs(64, 8, 9);
+        let group = GroupShared::new(keys.clone(), ids.clone());
+        let r = IndexRetriever::new(
+            Box::new(FlatIndex::new(keys.clone())),
+            group,
+            SearchParams::default(),
+            "Flat",
+        );
+        assert!(r.supports_remove());
+        // An exhaustive scan surfaces key 7's absolute id — until removal.
+        let q: Vec<f32> = keys.row(7).to_vec();
+        assert!(r.retrieve(&q, 64).ids.contains(&ids[7]));
+        assert!(r.remove_batch(&[ids[7]]));
+        assert_eq!(r.tombstones(), 1);
+        assert_eq!(r.indexed_len(), Some(63));
+        let out = r.retrieve(&q, 64);
+        assert!(!out.ids.contains(&ids[7]), "tombstoned absolute id returned");
+        // Unknown absolute ids are a no-op, not an error.
+        assert!(r.remove_batch(&[9999]));
+        assert_eq!(r.tombstones(), 1);
+    }
+
+    #[test]
+    fn all_retriever_sees_group_extend() {
         let (keys, ids, _) = test_inputs(10, 8, 7);
-        let r = AllRetriever { ids: RwLock::new(ids.as_ref().clone()) };
+        let group = GroupShared::new(keys, ids);
+        let r = AllRetriever { group: group.clone() };
         assert!(r.supports_insert());
-        assert!(r.insert_batch(&keys, &[500, 501], &InsertContext::none()));
+        assert!(!r.needs_store());
+        group.extend(Matrix::zeros(0, 8), &[500, 501], false);
         let out = r.retrieve(&[0.0; 8], 1);
         assert_eq!(out.ids.len(), 12);
         assert!(out.ids.contains(&501));
@@ -400,5 +735,7 @@ mod tests {
         assert!(EmptyRetriever.supports_insert());
         assert!(EmptyRetriever.insert_batch(&keys, &[1, 2], &InsertContext::none()));
         assert!(EmptyRetriever.retrieve(&[0.0; 8], 4).ids.is_empty());
+        assert!(EmptyRetriever.supports_remove());
+        assert!(EmptyRetriever.remove_batch(&[1]));
     }
 }

@@ -23,8 +23,9 @@ pub struct QuestRetriever {
 
 impl QuestRetriever {
     pub fn build(inp: &RetrieverInputs<'_>) -> Self {
-        let n = inp.host_keys.rows();
-        let d = inp.host_keys.cols();
+        let keys = inp.host_keys();
+        let n = keys.rows();
+        let d = keys.cols();
         let npages = n.div_ceil(PAGE);
         let mut mins = Matrix::zeros(npages, d);
         let mut maxs = Matrix::zeros(npages, d);
@@ -35,20 +36,20 @@ impl QuestRetriever {
             let min_row = mins.row_mut(p);
             min_row.fill(f32::INFINITY);
             for i in lo..hi {
-                for (m, &v) in min_row.iter_mut().zip(inp.host_keys.row(i)) {
+                for (m, &v) in min_row.iter_mut().zip(keys.row(i)) {
                     *m = m.min(v);
                 }
             }
             let max_row = maxs.row_mut(p);
             max_row.fill(f32::NEG_INFINITY);
             for i in lo..hi {
-                for (m, &v) in max_row.iter_mut().zip(inp.host_keys.row(i)) {
+                for (m, &v) in max_row.iter_mut().zip(keys.row(i)) {
                     *m = m.max(v);
                 }
             }
             pages.push((lo as u32, hi as u32));
         }
-        QuestRetriever { ids: inp.host_ids.clone(), mins, maxs, pages }
+        QuestRetriever { ids: inp.host_ids(), mins, maxs, pages }
     }
 
     /// The paper's criticality bound for one page.
@@ -100,18 +101,12 @@ mod tests {
     use super::*;
     use crate::baselines::tests::test_inputs;
     use crate::config::RetrievalConfig;
+    use crate::index::KeyStore;
 
-    fn build(n: usize, seed: u64) -> (QuestRetriever, Arc<Matrix>, Arc<Vec<u32>>) {
+    fn build(n: usize, seed: u64) -> (QuestRetriever, KeyStore, Vec<u32>) {
         let (keys, ids, queries) = test_inputs(n, 16, seed);
         let cfg = RetrievalConfig::default();
-        let inp = RetrieverInputs {
-            host_keys: keys.clone(),
-            host_ids: ids.clone(),
-            prefill_queries: &queries,
-            scale: 0.25,
-            cfg: &cfg,
-            seed,
-        };
+        let inp = RetrieverInputs::from_parts(keys.clone(), ids.clone(), &queries, 0.25, &cfg, seed);
         (QuestRetriever::build(&inp), keys, ids)
     }
 
@@ -136,21 +131,14 @@ mod tests {
         // planting a key whose inner product dominates every other page's
         // bound — then its page *must* be in the top pages.
         let (_, base_keys, _) = build(640, 9);
-        let mut keys = (*base_keys).clone();
+        let mut keys = base_keys.to_matrix();
         let strong: Vec<f32> = (0..16).map(|i| if i % 2 == 0 { 8.0 } else { -8.0 }).collect();
         keys.row_mut(345).copy_from_slice(&strong);
-        let keys = Arc::new(keys);
-        let ids = Arc::new((0..640u32).collect::<Vec<_>>());
+        let ids: Vec<u32> = (0..640u32).collect();
         let queries = Matrix::from_fn(4, 16, |_, _| 0.1);
         let cfg = RetrievalConfig::default();
-        let inp = RetrieverInputs {
-            host_keys: keys,
-            host_ids: ids.clone(),
-            prefill_queries: &queries,
-            scale: 0.25,
-            cfg: &cfg,
-            seed: 9,
-        };
+        let inp =
+            RetrieverInputs::from_parts(KeyStore::from_matrix(keys), ids, &queries, 0.25, &cfg, 9);
         let r = QuestRetriever::build(&inp);
         let out = r.retrieve(&strong, 64);
         assert!(out.ids.contains(&345), "dominant key's page not retrieved");

@@ -24,7 +24,9 @@ fn budget(n: usize) -> usize {
 
 impl SnapKvRetriever {
     pub fn build(inp: &RetrieverInputs<'_>) -> Self {
-        let n = inp.host_keys.rows();
+        let keys = inp.host_keys();
+        let host_ids = inp.host_ids();
+        let n = keys.rows();
         let nq = inp.prefill_queries.rows();
         let obs = nq.min(OBS_WINDOW);
         if n == 0 || obs == 0 {
@@ -34,16 +36,15 @@ impl SnapKvRetriever {
         let mut votes = vec![0.0f32; n];
         for qi in nq - obs..nq {
             let q = inp.prefill_queries.row(qi);
-            let mut scores: Vec<f32> = (0..n)
-                .map(|i| crate::tensor::dot(q, inp.host_keys.row(i)) * inp.scale)
-                .collect();
+            let mut scores: Vec<f32> =
+                (0..n).map(|i| crate::tensor::dot(q, keys.row(i)) * inp.scale).collect();
             crate::tensor::softmax_inplace(&mut scores);
             for (v, s) in votes.iter_mut().zip(scores.iter()) {
                 *v += s;
             }
         }
         let keep = argtopk(&votes, budget(n).min(n));
-        let mut ids: Vec<u32> = keep.into_iter().map(|dense| inp.host_ids[dense]).collect();
+        let mut ids: Vec<u32> = keep.into_iter().map(|dense| host_ids[dense]).collect();
         ids.sort_unstable();
         SnapKvRetriever { ids }
     }
@@ -73,54 +74,37 @@ mod tests {
     use super::*;
     use crate::baselines::tests::test_inputs;
     use crate::config::RetrievalConfig;
-    use std::sync::Arc;
+    use crate::index::KeyStore;
 
     #[test]
     fn keeps_tokens_hot_for_window_queries() {
         let (keys, ids, queries) = test_inputs(2000, 16, 11);
         let cfg = RetrievalConfig::default();
-        let inp = RetrieverInputs {
-            host_keys: keys.clone(),
-            host_ids: ids.clone(),
-            prefill_queries: &queries,
-            scale: 0.25,
-            cfg: &cfg,
-            seed: 0,
-        };
         // Plant a key every observation-window query votes for: it must
         // survive the budget cut.
-        let mut planted = (*keys).clone();
+        let mut planted = keys.to_matrix();
         let hot: Vec<f32> = crate::tensor::col_mean(&queries).iter().map(|v| v * 3.0).collect();
         planted.row_mut(777).copy_from_slice(&hot);
-        let keys2 = Arc::new(planted);
-        let inp2 = RetrieverInputs {
-            host_keys: keys2,
-            host_ids: ids.clone(),
-            prefill_queries: &queries,
-            scale: 0.25,
-            cfg: &cfg,
-            seed: 0,
-        };
+        let inp2 = RetrieverInputs::from_parts(
+            KeyStore::from_matrix(planted),
+            ids.clone(),
+            &queries,
+            0.25,
+            &cfg,
+            0,
+        );
         let r = SnapKvRetriever::build(&inp2);
         assert!(r.kept() > 0 && r.kept() <= budget(2000));
         let out = r.retrieve(queries.row(0), 100);
         assert!(out.ids.contains(&ids[777]), "hot token evicted");
         assert_eq!(out.scanned, 0);
-        let _ = inp;
     }
 
     #[test]
     fn static_across_queries() {
         let (keys, ids, queries) = test_inputs(500, 8, 12);
         let cfg = RetrievalConfig::default();
-        let inp = RetrieverInputs {
-            host_keys: keys,
-            host_ids: ids,
-            prefill_queries: &queries,
-            scale: 0.35,
-            cfg: &cfg,
-            seed: 0,
-        };
+        let inp = RetrieverInputs::from_parts(keys, ids, &queries, 0.35, &cfg, 0);
         let r = SnapKvRetriever::build(&inp);
         let a = r.retrieve(&[1.0; 8], 10);
         let b = r.retrieve(&[-1.0; 8], 10);

@@ -92,17 +92,51 @@ pub struct MaintenanceConfig {
     pub recent_queries: usize,
     /// Online inserts tolerated before a full index re-projection.
     pub rebuild_threshold: usize,
+    /// Run drains/evictions on the background maintenance worker (double-
+    /// buffered index swap, completions applied next step) instead of
+    /// inline at the end of the decode step.
+    pub async_worker: bool,
 }
 
 impl Default for MaintenanceConfig {
     fn default() -> Self {
-        MaintenanceConfig { drain_watermark: 64, recent_queries: 32, rebuild_threshold: 4096 }
+        // drain_watermark re-tuned for the segmented store + off-thread
+        // worker (see ROADMAP "maintenance knob tuning"): with the
+        // O(context) per-drain copy gone and inserts off the token path,
+        // the watermark's only remaining cost term is the exact scan over
+        // the overflow buffer — so it drops from 64 to 32 to halve that
+        // scan, and larger values no longer buy anything.
+        MaintenanceConfig {
+            drain_watermark: 32,
+            recent_queries: 32,
+            rebuild_threshold: 4096,
+            async_worker: true,
+        }
     }
 }
 
 impl MaintenanceConfig {
     pub fn enabled(&self) -> bool {
         self.drain_watermark > 0
+    }
+}
+
+/// Host-side eviction policy: StreamingLLM-style retirement of the oldest
+/// indexed tokens once a group's live indexed tier exceeds `max_indexed`
+/// (Ltri-LLM-style streaming workloads continuously retire tokens that
+/// would otherwise linger in the indexes forever). Retired tokens are
+/// dropped from attention immediately and tombstoned in every head's
+/// index by the maintenance worker.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EvictionConfig {
+    /// Live indexed tokens retained per (layer, kv-head). `0` disables
+    /// eviction (the paper's unbounded host set).
+    pub max_indexed: usize,
+}
+
+impl EvictionConfig {
+    pub fn enabled(&self) -> bool {
+        self.max_indexed > 0
     }
 }
 
@@ -123,6 +157,8 @@ pub struct RetrievalConfig {
     pub budget: BudgetPolicy,
     /// Online index maintenance for decoded tokens.
     pub maintenance: MaintenanceConfig,
+    /// Indexed-tier eviction (window retirement over host memory).
+    pub eviction: EvictionConfig,
 }
 
 impl Default for RetrievalConfig {
@@ -135,6 +171,7 @@ impl Default for RetrievalConfig {
             m: 32,
             budget: BudgetPolicy::Uniform { k: 100 },
             maintenance: MaintenanceConfig::default(),
+            eviction: EvictionConfig::default(),
         }
     }
 }
@@ -205,8 +242,12 @@ impl ServeConfig {
         let mut mnt = Value::obj();
         mnt.set("drain_watermark", self.retrieval.maintenance.drain_watermark)
             .set("recent_queries", self.retrieval.maintenance.recent_queries)
-            .set("rebuild_threshold", self.retrieval.maintenance.rebuild_threshold);
+            .set("rebuild_threshold", self.retrieval.maintenance.rebuild_threshold)
+            .set("async_worker", self.retrieval.maintenance.async_worker);
         r.set("maintenance", mnt);
+        let mut ev = Value::obj();
+        ev.set("max_indexed", self.retrieval.eviction.max_indexed);
+        r.set("eviction", ev);
         match self.retrieval.budget {
             BudgetPolicy::Uniform { k } => {
                 let mut b = Value::obj();
@@ -272,6 +313,14 @@ impl ServeConfig {
                 }
                 if let Some(x) = mnt.get("rebuild_threshold").and_then(Value::as_usize) {
                     c.retrieval.maintenance.rebuild_threshold = x;
+                }
+                if let Some(x) = mnt.get("async_worker").and_then(Value::as_bool) {
+                    c.retrieval.maintenance.async_worker = x;
+                }
+            }
+            if let Some(ev) = r.get("eviction") {
+                if let Some(x) = ev.get("max_indexed").and_then(Value::as_usize) {
+                    c.retrieval.eviction.max_indexed = x;
                 }
             }
             if let Some(b) = r.get("budget") {
@@ -339,17 +388,27 @@ mod tests {
     #[test]
     fn maintenance_roundtrips_and_defaults() {
         let mut c = ServeConfig::default();
-        c.retrieval.maintenance =
-            MaintenanceConfig { drain_watermark: 7, recent_queries: 3, rebuild_threshold: 99 };
+        c.retrieval.maintenance = MaintenanceConfig {
+            drain_watermark: 7,
+            recent_queries: 3,
+            rebuild_threshold: 99,
+            async_worker: false,
+        };
+        c.retrieval.eviction = EvictionConfig { max_indexed: 4096 };
         let back = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.retrieval.maintenance.drain_watermark, 7);
         assert_eq!(back.retrieval.maintenance.recent_queries, 3);
         assert_eq!(back.retrieval.maintenance.rebuild_threshold, 99);
+        assert!(!back.retrieval.maintenance.async_worker);
+        assert_eq!(back.retrieval.eviction, EvictionConfig { max_indexed: 4096 });
+        assert!(back.retrieval.eviction.enabled());
         assert!(back.retrieval.maintenance.enabled());
         // Absent block falls back to defaults; watermark 0 disables.
         let v = json::parse(r#"{"retrieval":{"top_k":5}}"#).unwrap();
         let parsed = ServeConfig::from_json(&v).unwrap();
         assert_eq!(parsed.retrieval.maintenance, MaintenanceConfig::default());
+        assert!(parsed.retrieval.maintenance.async_worker, "worker defaults on");
+        assert!(!parsed.retrieval.eviction.enabled(), "eviction defaults off");
         let off = MaintenanceConfig { drain_watermark: 0, ..Default::default() };
         assert!(!off.enabled());
     }

@@ -67,6 +67,16 @@ pub struct RequestMetrics {
     pub drained_tokens: u64,
     /// Number of drain operations across the request's decode.
     pub drains: u64,
+    /// Tokens retired by the indexed-tier eviction policy.
+    pub evicted_tokens: u64,
+    /// Completed maintenance jobs (double-buffered swaps).
+    pub maint_swaps: u64,
+    /// Mean worker wall-clock per job (the off-thread cost).
+    pub maint_swap_s_mean: f64,
+    /// Peak maintenance-queue depth observed during the request.
+    pub maint_queue_peak: usize,
+    /// Tombstoned fraction of the session's indexes at retirement.
+    pub tombstone_ratio: f64,
 }
 
 struct Job {
@@ -242,13 +252,17 @@ fn worker_loop(
         }
         // Retire finished sessions (reverse order keeps indices valid).
         for idx in finished.into_iter().rev() {
-            let a = active.swap_remove(idx);
+            let mut a = active.swap_remove(idx);
+            // Quiesce the background maintenance worker so the drain/evict
+            // counters below are exact, not racing in-flight jobs.
+            a.sess.shutdown_maintenance();
             let ttft = a
                 .first_token_at
                 .map(|t| t.duration_since(a.job.submitted).as_secs_f64())
                 .unwrap_or(0.0);
             let n_out = a.produced.len();
             let decode_total = a.decode_bd.total();
+            let maint = a.sess.maint.stats;
             let metrics = RequestMetrics {
                 prompt_tokens: a.job.req.prompt.len(),
                 output_tokens: n_out,
@@ -258,6 +272,11 @@ fn worker_loop(
                 breakdown: a.decode_bd,
                 drained_tokens: a.sess.drained_tokens,
                 drains: a.sess.drains,
+                evicted_tokens: maint.evicted_tokens,
+                maint_swaps: maint.swaps,
+                maint_swap_s_mean: maint.mean_swap_s(),
+                maint_queue_peak: maint.queue_peak,
+                tombstone_ratio: a.sess.tombstone_ratio(),
             };
             // Decrement BEFORE the Done event so a client that reads Done
             // observes the freed capacity (load-balancing correctness).

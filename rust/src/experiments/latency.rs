@@ -374,14 +374,14 @@ pub fn table8(ctx: &ExpCtx) -> Result<()> {
                 keys.cols(),
                 |r, c| g.queries[(64 + r, c)],
             );
-            let inp = RetrieverInputs {
-                host_keys: keys.clone(),
-                host_ids: ids.clone(),
-                prefill_queries: &train,
-                scale: 0.125,
-                cfg: &cfg,
-                seed: ctx.seed,
-            };
+            let inp = RetrieverInputs::from_parts(
+                keys.clone().into(),
+                (*ids).clone(),
+                &train,
+                0.125,
+                &cfg,
+                ctx.seed,
+            );
             let retr = build_retriever(method, inp);
             let t = Instant::now();
             let reps = 16;

@@ -1,25 +1,66 @@
 //! Exact KNN by linear scan ("Flat" in the paper's tables).
 //!
-//! Scans 100% of the key vectors; rayon-parallel over row blocks. This is
-//! both the accuracy ceiling (recall = 1.0 by construction) and the latency
-//! comparator that RetrievalAttention beats by 4.9× at 128K (Table 4).
+//! Scans 100% of the live key vectors; rayon-parallel over row blocks.
+//! This is both the accuracy ceiling (recall = 1.0 by construction) and
+//! the latency comparator that RetrievalAttention beats by 4.9× at 128K
+//! (Table 4). The scan walks the segmented store chunk by chunk (no
+//! per-row chunk lookup). Removal tombstones rows; past a 25% tombstone
+//! ratio the index compacts to an explicit live-id list so dead rows stop
+//! costing scan time.
 
 use super::{InsertContext, KeyStore, SearchParams, SearchResult, VectorIndex};
 use crate::tensor::{argtopk, dot};
 use crate::util::parallel;
 use std::ops::Range;
 
+/// Tombstone fraction (dead * COMPACT_DEN > rows * COMPACT_NUM triggers
+/// the live-list compaction).
+const COMPACT_NUM: usize = 1;
+const COMPACT_DEN: usize = 4;
+
 /// Brute-force maximum-inner-product index.
+#[derive(Clone)]
 pub struct FlatIndex {
     keys: KeyStore,
-    /// Rows per rayon task; tuned in the perf pass (large enough to amortise
-    /// task overhead, small enough to balance).
+    /// Tombstones, one per dense slot.
+    dead: Vec<bool>,
+    dead_count: usize,
+    /// Live dense ids, (re)materialised whenever the tombstones
+    /// accumulated since the last compaction cross the threshold. Between
+    /// compactions the list may contain a bounded number of stale dead
+    /// ids — the scan filters them (they are touched, not scored).
+    live: Option<Vec<u32>>,
+    /// `dead_count` at the last compaction (the threshold is measured
+    /// against the delta: dense ids are permanent, so an all-time ratio
+    /// would re-sweep the live list on every later removal).
+    dead_at_compact: usize,
+    /// Rows per parallel task; tuned in the perf pass (large enough to
+    /// amortise task overhead, small enough to balance).
     block: usize,
 }
 
 impl FlatIndex {
-    pub fn new(keys: KeyStore) -> Self {
-        FlatIndex { keys, block: 4096 }
+    pub fn new(keys: impl Into<KeyStore>) -> Self {
+        let keys = keys.into();
+        let n = keys.rows();
+        FlatIndex {
+            keys,
+            dead: vec![false; n],
+            dead_count: 0,
+            live: None,
+            dead_at_compact: 0,
+            block: 4096,
+        }
+    }
+
+    fn maybe_compact(&mut self) {
+        let since = self.dead_count - self.dead_at_compact;
+        if since * COMPACT_DEN > self.keys.rows() * COMPACT_NUM {
+            self.live = Some(
+                (0..self.keys.rows() as u32).filter(|&i| !self.dead[i as usize]).collect(),
+            );
+            self.dead_at_compact = self.dead_count;
+        }
     }
 }
 
@@ -28,25 +69,92 @@ impl VectorIndex for FlatIndex {
         self.keys.rows()
     }
 
+    fn tombstones(&self) -> usize {
+        self.dead_count
+    }
+
     fn search(&self, query: &[f32], k: usize, _params: &SearchParams) -> SearchResult {
+        if let Some(live) = &self.live {
+            // Compacted path: score the live list (which may hold a
+            // bounded number of post-compaction tombstones — filtered
+            // here, swept out at the next compaction).
+            let n = live.len();
+            let score_one = |i: usize| -> f32 {
+                let id = live[i] as usize;
+                if self.dead[id] {
+                    f32::NEG_INFINITY
+                } else {
+                    dot(query, self.keys.row(id))
+                }
+            };
+            let scores: Vec<f32> = if n >= 2 * self.block {
+                let nblocks = n.div_ceil(self.block);
+                let per_block: Vec<Vec<f32>> = parallel::par_map_range(nblocks, |b| {
+                    let lo = b * self.block;
+                    let hi = (lo + self.block).min(n);
+                    (lo..hi).map(score_one).collect()
+                });
+                per_block.into_iter().flatten().collect()
+            } else {
+                (0..n).map(score_one).collect()
+            };
+            let mut top = argtopk(&scores, k);
+            top.retain(|&i| !self.dead[live[i] as usize]);
+            let stale = self.dead_count - self.dead_at_compact;
+            return SearchResult {
+                scores: top.iter().map(|&i| scores[i]).collect(),
+                ids: top.into_iter().map(|i| live[i]).collect(),
+                scanned: n - stale.min(n),
+            };
+        }
         let n = self.keys.rows();
-        let scores: Vec<f32> = if n >= 2 * self.block {
-            // Parallel scoring for long contexts: one task per row block.
-            let nblocks = n.div_ceil(self.block);
-            let per_block: Vec<Vec<f32>> = parallel::par_map_range(nblocks, |b| {
-                let lo = b * self.block;
-                let hi = (lo + self.block).min(n);
-                (lo..hi).map(|i| dot(query, self.keys.row(i))).collect()
-            });
-            per_block.into_iter().flatten().collect()
-        } else {
-            (0..n).map(|i| dot(query, self.keys.row(i))).collect()
+        // Segment-local scan; dead rows score -inf and are filtered below.
+        // Tasks are fixed `block`-row ranges *within* segments (one giant
+        // prefill chunk must still fan out across cores), addressed
+        // segment-locally so the hot loop never pays a chunk lookup.
+        let segments = self.keys.segments();
+        // (segment, local start, local end, global index of local start).
+        let score_range = |s: usize, lo: usize, hi: usize, gbase: usize| -> Vec<f32> {
+            let seg = &segments[s];
+            (lo..hi)
+                .map(|r| {
+                    if self.dead[gbase + (r - lo)] {
+                        f32::NEG_INFINITY
+                    } else {
+                        dot(query, seg.row(r))
+                    }
+                })
+                .collect()
         };
-        let ids = argtopk(&scores, k);
+        let mut tasks: Vec<(usize, usize, usize, usize)> = Vec::new();
+        let mut base = 0;
+        for (s, seg) in segments.iter().enumerate() {
+            let rows = seg.rows();
+            let mut lo = 0;
+            while lo < rows {
+                let hi = (lo + self.block).min(rows);
+                tasks.push((s, lo, hi, base + lo));
+                lo = hi;
+            }
+            base += rows;
+        }
+        let scores: Vec<f32> = if n >= 2 * self.block {
+            let per_task: Vec<Vec<f32>> =
+                parallel::par_map(&tasks, |&(s, lo, hi, gbase)| score_range(s, lo, hi, gbase));
+            per_task.into_iter().flatten().collect()
+        } else {
+            let mut v = Vec::with_capacity(n);
+            for &(s, lo, hi, gbase) in &tasks {
+                v.extend(score_range(s, lo, hi, gbase));
+            }
+            v
+        };
+        let mut ids = argtopk(&scores, k);
+        ids.retain(|&i| !self.dead[i]);
         SearchResult {
             scores: ids.iter().map(|&i| scores[i]).collect(),
             ids: ids.into_iter().map(|i| i as u32).collect(),
-            scanned: n,
+            scanned: n - self.dead_count,
         }
     }
 
@@ -55,7 +163,11 @@ impl VectorIndex for FlatIndex {
     }
 
     fn memory_bytes(&self) -> usize {
-        std::mem::size_of::<Self>()
+        // The key store (payload AND chunk table) is charged once per GQA
+        // group by the owner, not per head.
+        self.dead.len()
+            + self.live.as_ref().map(|l| l.len() * 4).unwrap_or(0)
+            + std::mem::size_of::<Self>()
     }
 
     fn supports_insert(&self) -> bool {
@@ -64,11 +176,34 @@ impl VectorIndex for FlatIndex {
 
     /// Exact scan has no structure to maintain: adopt the grown store.
     fn insert_batch(&mut self, keys: KeyStore, new: Range<usize>, _ctx: &InsertContext<'_>) -> bool {
-        debug_assert_eq!(keys.cols(), self.keys.cols());
         debug_assert_eq!(new.end, keys.rows());
         debug_assert_eq!(new.start, self.keys.rows());
         self.keys = keys;
+        self.dead.resize(self.keys.rows(), false);
+        if let Some(live) = &mut self.live {
+            live.extend(new.map(|i| i as u32));
+        }
         true
+    }
+
+    fn supports_remove(&self) -> bool {
+        true
+    }
+
+    fn remove_batch(&mut self, ids: &[u32]) -> bool {
+        for &id in ids {
+            let i = id as usize;
+            if i < self.dead.len() && !self.dead[i] {
+                self.dead[i] = true;
+                self.dead_count += 1;
+            }
+        }
+        self.maybe_compact();
+        true
+    }
+
+    fn clone_index(&self) -> Box<dyn VectorIndex> {
+        Box::new(self.clone())
     }
 }
 
@@ -76,11 +211,16 @@ impl VectorIndex for FlatIndex {
 mod tests {
     use super::*;
     use crate::tensor::Matrix;
-    use std::sync::Arc;
 
     fn keys() -> KeyStore {
         // 8 unit-ish vectors in 4d.
-        Arc::new(Matrix::from_fn(8, 4, |r, c| if r % 4 == c { 1.0 + r as f32 * 0.1 } else { 0.0 }))
+        KeyStore::from_matrix(Matrix::from_fn(8, 4, |r, c| {
+            if r % 4 == c {
+                1.0 + r as f32 * 0.1
+            } else {
+                0.0
+            }
+        }))
     }
 
     #[test]
@@ -116,12 +256,47 @@ mod tests {
         let base = keys();
         let mut idx = FlatIndex::new(base.clone());
         // Append a dominant vector along dim 2.
-        let mut grown = (*base).clone();
-        grown.push_row(&[0.0, 0.0, 9.0, 0.0]);
+        let grown = base.append_rows(Matrix::from_vec(1, 4, vec![0.0, 0.0, 9.0, 0.0]));
         let n = grown.rows();
-        assert!(idx.insert_batch(Arc::new(grown), 8..n, &crate::index::InsertContext::none()));
+        assert!(idx.insert_batch(grown, 8..n, &crate::index::InsertContext::none()));
         assert_eq!(idx.len(), 9);
         let r = idx.search(&[0.0, 0.0, 1.0, 0.0], 1, &SearchParams::default());
         assert_eq!(r.ids, vec![8], "inserted vector must be searchable");
+    }
+
+    #[test]
+    fn removed_ids_never_returned() {
+        let mut idx = FlatIndex::new(keys());
+        assert!(idx.remove_batch(&[6]));
+        assert_eq!(idx.tombstones(), 1);
+        assert_eq!(idx.live_len(), 7);
+        let r = idx.search(&[0.0, 0.0, 1.0, 0.0], 8, &SearchParams::default());
+        assert!(!r.ids.contains(&6), "tombstoned id returned: {:?}", r.ids);
+        // Runner-up along dim 2 (row 2) now wins.
+        assert_eq!(r.ids[0], 2);
+        assert_eq!(r.scanned, 7);
+        // Removing again is a no-op.
+        assert!(idx.remove_batch(&[6]));
+        assert_eq!(idx.tombstones(), 1);
+    }
+
+    #[test]
+    fn compaction_then_insert_stays_exact() {
+        let mut idx = FlatIndex::new(keys());
+        // 3/8 dead crosses the 25% compaction threshold.
+        assert!(idx.remove_batch(&[0, 1, 2]));
+        assert_eq!(idx.tombstones(), 3);
+        let r = idx.search(&[1.0, 1.0, 1.0, 1.0], 8, &SearchParams::default());
+        assert_eq!(r.ids.len(), 5);
+        assert_eq!(r.scanned, 5, "compacted scan must skip dead rows");
+        for id in &r.ids {
+            assert!(*id >= 3);
+        }
+        // Inserts after compaction land in the live list.
+        let grown = idx.keys.append_rows(Matrix::from_vec(1, 4, vec![9.0, 0.0, 0.0, 0.0]));
+        let n = grown.rows();
+        assert!(idx.insert_batch(grown, 8..n, &crate::index::InsertContext::none()));
+        let r = idx.search(&[1.0, 0.0, 0.0, 0.0], 1, &SearchParams::default());
+        assert_eq!(r.ids, vec![8]);
     }
 }

@@ -72,6 +72,7 @@ impl Default for HnswParams {
     }
 }
 
+#[derive(Clone)]
 struct Layer {
     /// Adjacency: `neighbors[id]` is the out-edge list of `id`.
     neighbors: Vec<Vec<u32>>,
@@ -82,7 +83,12 @@ struct Layer {
 /// online-maintenance path: decoded keys folded in through
 /// [`VectorIndex::insert_batch`] go through the exact same wiring as
 /// build-time keys, so insert-then-search matches a from-scratch rebuild up
-/// to the level draws.
+/// to the level draws. Removal tombstones the node and re-links its
+/// neighborhood: every live node that lost an edge inherits the dead
+/// node's live out-edges as candidates, re-selected under the same degree
+/// bound as construction — the hole is bridged instead of fragmenting the
+/// graph.
+#[derive(Clone)]
 pub struct HnswIndex {
     keys: KeyStore,
     layers: Vec<Layer>,
@@ -90,6 +96,9 @@ pub struct HnswIndex {
     entry: u32,
     /// Node's maximum layer.
     node_level: Vec<u8>,
+    /// Tombstones, one per dense slot.
+    dead: Vec<bool>,
+    dead_count: usize,
     m: usize,
     ef_construction: usize,
     /// Level-draw stream; persisted so online inserts stay deterministic.
@@ -98,7 +107,8 @@ pub struct HnswIndex {
 }
 
 impl HnswIndex {
-    pub fn build(keys: KeyStore, params: HnswParams) -> Self {
+    pub fn build(keys: impl Into<KeyStore>, params: HnswParams) -> Self {
+        let keys = keys.into();
         let n = keys.rows();
         assert!(n > 0, "HNSW needs at least one key");
         let mut idx = HnswIndex {
@@ -106,6 +116,8 @@ impl HnswIndex {
             layers: vec![Layer { neighbors: Vec::new() }],
             entry: 0,
             node_level: Vec::with_capacity(n),
+            dead: vec![false; n],
+            dead_count: 0,
             m: params.m,
             ef_construction: params.ef_construction,
             rng: Rng::seed_from(params.seed),
@@ -155,7 +167,7 @@ impl HnswIndex {
         for l in (0..=lvl.min(entry_lvl)).rev() {
             let w = beam_search(&self.keys, &self.layers[l], &q, &[ep], self.ef_construction, visited).0;
             let m_l = if l == 0 { self.m * 2 } else { self.m };
-            let selected = select_neighbors(&self.keys, &w, m_l);
+            let selected = select_neighbors(&w, m_l);
             for &nb in &selected {
                 self.layers[l].neighbors[i].push(nb);
                 self.layers[l].neighbors[nb as usize].push(i as u32);
@@ -168,8 +180,7 @@ impl HnswIndex {
                             id: x,
                         })
                         .collect();
-                    self.layers[l].neighbors[nb as usize] =
-                        select_neighbors(&self.keys, &cands, m_l);
+                    self.layers[l].neighbors[nb as usize] = select_neighbors(&cands, m_l);
                 }
             }
             if let Some(best) = selected.first() {
@@ -183,7 +194,9 @@ impl HnswIndex {
     }
 
     /// Beam search on the bottom layer with explicit ef; returns candidates
-    /// best-first plus the scan count.
+    /// best-first plus the scan count. Dead nodes are traversed (their
+    /// edges were re-linked away, but a stale path may still touch them)
+    /// yet filtered out by the caller.
     fn search_layer0(&self, query: &[f32], ef: usize) -> (Vec<Cand>, usize) {
         let mut visited = VisitedSet::new(self.keys.rows());
         let mut scanned = 0usize;
@@ -197,16 +210,99 @@ impl HnswIndex {
         w.sort_by(|a, b| b.cmp(a));
         (w, scanned)
     }
+
+    /// Re-link the graph around freshly tombstoned nodes: on every layer,
+    /// each live node that lost a neighbor merges that neighbor's live
+    /// out-edges into its candidate set and re-selects under the layer's
+    /// degree bound; the dead nodes' own adjacency is then cleared.
+    ///
+    /// Only nodes *adjacent to the fresh batch* are re-selected — edges
+    /// are wired symmetrically at insert time, so a dead node's own list
+    /// names (almost) every node pointing at it; the rare asymmetric
+    /// stale edge left by pruning merely makes a search score one cleared
+    /// dead node (a filtered dead end), it cannot corrupt results. This
+    /// keeps a small eviction batch O(batch × degree²), not O(n).
+    fn relink_around_dead(&mut self, fresh: &[u32]) {
+        for l in 0..self.layers.len() {
+            let m_l = if l == 0 { self.m * 2 } else { self.m };
+            let layer_len = self.layers[l].neighbors.len();
+            // Live nodes that appear in a freshly-dead node's adjacency.
+            let mut affected: Vec<u32> = Vec::new();
+            for &r in fresh {
+                if (r as usize) < layer_len {
+                    for &u in &self.layers[l].neighbors[r as usize] {
+                        if !self.dead[u as usize] {
+                            affected.push(u);
+                        }
+                    }
+                }
+            }
+            affected.sort_unstable();
+            affected.dedup();
+            let mut updates: Vec<(usize, Vec<u32>)> = Vec::new();
+            for &au in &affected {
+                let u = au as usize;
+                let adj = &self.layers[l].neighbors[u];
+                if !adj.iter().any(|&v| self.dead[v as usize]) {
+                    continue;
+                }
+                // Candidates: surviving neighbors + the lost neighbors'
+                // live out-edges (bridging the hole).
+                let mut cands: Vec<Cand> = Vec::new();
+                for &v in adj {
+                    if self.dead[v as usize] {
+                        for &w in &self.layers[l].neighbors[v as usize] {
+                            if !self.dead[w as usize] && w as usize != u {
+                                cands.push(Cand {
+                                    sim: dot(self.keys.row(u), self.keys.row(w as usize)),
+                                    id: w,
+                                });
+                            }
+                        }
+                    } else {
+                        cands.push(Cand {
+                            sim: dot(self.keys.row(u), self.keys.row(v as usize)),
+                            id: v,
+                        });
+                    }
+                }
+                updates.push((u, select_neighbors(&cands, m_l)));
+            }
+            for (u, list) in updates {
+                self.layers[l].neighbors[u] = list;
+            }
+            for &r in fresh {
+                if (r as usize) < layer_len {
+                    self.layers[l].neighbors[r as usize].clear();
+                }
+            }
+        }
+        // Entry repair: the beam must start from a live node.
+        if self.dead.get(self.entry as usize).copied().unwrap_or(false) {
+            let mut best: Option<usize> = None;
+            for i in 0..self.node_level.len() {
+                if self.dead[i] {
+                    continue;
+                }
+                if best.map(|b| self.node_level[i] > self.node_level[b]).unwrap_or(true) {
+                    best = Some(i);
+                }
+            }
+            if let Some(b) = best {
+                self.entry = b as u32;
+            }
+        }
+    }
 }
 
 /// Greedy hill-climb to the most similar node on a layer.
-fn greedy_closest(keys: &crate::tensor::Matrix, layer: &Layer, q: &[f32], start: u32) -> u32 {
+fn greedy_closest(keys: &KeyStore, layer: &Layer, q: &[f32], start: u32) -> u32 {
     let mut scanned = 0;
     greedy_closest_counted(keys, layer, q, start, &mut scanned)
 }
 
 fn greedy_closest_counted(
-    keys: &crate::tensor::Matrix,
+    keys: &KeyStore,
     layer: &Layer,
     q: &[f32],
     start: u32,
@@ -235,7 +331,7 @@ fn greedy_closest_counted(
 /// Standard HNSW beam search over one layer; returns up to `ef` candidates
 /// (unsorted) and the number of similarity computations.
 fn beam_search(
-    keys: &crate::tensor::Matrix,
+    keys: &KeyStore,
     layer: &Layer,
     q: &[f32],
     entries: &[u32],
@@ -281,7 +377,7 @@ fn beam_search(
 /// Simple neighbor selection: keep the `m` most similar candidates. (The
 /// full RNG-style diversity heuristic lives in `roargraph::prune`, where it
 /// matters most; plain top-m matches hnswlib's default for IP.)
-fn select_neighbors(_keys: &crate::tensor::Matrix, cands: &[Cand], m: usize) -> Vec<u32> {
+fn select_neighbors(cands: &[Cand], m: usize) -> Vec<u32> {
     let mut sorted: Vec<Cand> = cands.to_vec();
     sorted.sort_by(|a, b| b.cmp(a));
     sorted.dedup_by_key(|c| c.id);
@@ -293,12 +389,20 @@ impl VectorIndex for HnswIndex {
         self.keys.rows()
     }
 
+    fn tombstones(&self) -> usize {
+        self.dead_count
+    }
+
     fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> SearchResult {
+        if self.dead_count >= self.keys.rows() {
+            return SearchResult::default();
+        }
         let ef = params.ef.max(k);
         let (cands, scanned) = self.search_layer0(query, ef);
+        let live: Vec<&Cand> = cands.iter().filter(|c| !self.dead[c.id as usize]).collect();
         SearchResult {
-            ids: cands.iter().take(k).map(|c| c.id).collect(),
-            scores: cands.iter().take(k).map(|c| c.sim).collect(),
+            ids: live.iter().take(k).map(|c| c.id).collect(),
+            scores: live.iter().take(k).map(|c| c.sim).collect(),
             scanned,
         }
     }
@@ -308,11 +412,13 @@ impl VectorIndex for HnswIndex {
     }
 
     fn memory_bytes(&self) -> usize {
+        // Key store bytes are charged once per GQA group by the owner.
         self.layers
             .iter()
             .map(|l| l.neighbors.iter().map(|n| n.len() * 4 + 24).sum::<usize>())
             .sum::<usize>()
             + self.node_level.len()
+            + self.dead.len()
             + std::mem::size_of::<Self>()
     }
 
@@ -323,15 +429,39 @@ impl VectorIndex for HnswIndex {
     /// Online insert = the build-time wiring, one node at a time, over the
     /// grown key store.
     fn insert_batch(&mut self, keys: KeyStore, new: Range<usize>, _ctx: &InsertContext<'_>) -> bool {
-        debug_assert_eq!(keys.cols(), self.keys.cols());
         debug_assert_eq!(new.end, keys.rows());
         debug_assert_eq!(new.start, self.keys.rows());
         self.keys = keys;
+        self.dead.resize(self.keys.rows(), false);
         let mut visited = VisitedSet::new(self.keys.rows());
         for i in new {
             self.insert_node(i, &mut visited);
         }
         true
+    }
+
+    fn supports_remove(&self) -> bool {
+        true
+    }
+
+    fn remove_batch(&mut self, ids: &[u32]) -> bool {
+        let mut fresh: Vec<u32> = Vec::new();
+        for &id in ids {
+            let i = id as usize;
+            if i < self.dead.len() && !self.dead[i] {
+                self.dead[i] = true;
+                self.dead_count += 1;
+                fresh.push(id);
+            }
+        }
+        if !fresh.is_empty() {
+            self.relink_around_dead(&fresh);
+        }
+        true
+    }
+
+    fn clone_index(&self) -> Box<dyn VectorIndex> {
+        Box::new(self.clone())
     }
 }
 
@@ -345,15 +475,14 @@ impl HnswIndex {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::index::exact_topk;
+    use crate::index::{exact_topk_store, InsertContext};
     use crate::tensor::Matrix;
-    
+
     use crate::util::rng::Rng;
-    use std::sync::Arc;
 
     fn random_keys(n: usize, d: usize, seed: u64) -> KeyStore {
         let mut rng = Rng::seed_from(seed);
-        Arc::new(Matrix::from_fn(n, d, |_, _| rng.f32() - 0.5))
+        KeyStore::from_matrix(Matrix::from_fn(n, d, |_, _| rng.f32() - 0.5))
     }
 
     #[test]
@@ -365,7 +494,7 @@ mod tests {
         let nq = 20;
         for qi in 0..nq {
             let q = keys.row(qi * 17).to_vec();
-            let truth = exact_topk(&keys, &q, 10);
+            let truth = exact_topk_store(&keys, &q, 10);
             let r = idx.search(&q, 10, &SearchParams { ef: 128, nprobe: 0 });
             total += r.recall_against(&truth);
         }
@@ -388,7 +517,7 @@ mod tests {
         let keys = random_keys(1500, 8, 17);
         let idx = HnswIndex::build(keys.clone(), HnswParams::default());
         let q = keys.row(3).to_vec();
-        let truth = exact_topk(&keys, &q, 10);
+        let truth = exact_topk_store(&keys, &q, 10);
         let lo = idx.search(&q, 10, &SearchParams { ef: 10, nprobe: 0 }).recall_against(&truth);
         let hi = idx.search(&q, 10, &SearchParams { ef: 400, nprobe: 0 }).recall_against(&truth);
         assert!(hi >= lo);
@@ -397,7 +526,7 @@ mod tests {
 
     #[test]
     fn single_node_graph() {
-        let keys = Arc::new(Matrix::from_vec(1, 4, vec![1.0, 0.0, 0.0, 0.0]));
+        let keys = KeyStore::from_matrix(Matrix::from_vec(1, 4, vec![1.0, 0.0, 0.0, 0.0]));
         let idx = HnswIndex::build(keys, HnswParams::default());
         let r = idx.search(&[1.0, 0.0, 0.0, 0.0], 5, &SearchParams::default());
         assert_eq!(r.ids, vec![0]);
@@ -405,12 +534,13 @@ mod tests {
 
     #[test]
     fn insert_grows_from_single_node() {
-        let keys = Arc::new(Matrix::from_vec(1, 4, vec![1.0, 0.0, 0.0, 0.0]));
+        let keys = KeyStore::from_matrix(Matrix::from_vec(1, 4, vec![1.0, 0.0, 0.0, 0.0]));
         let mut idx = HnswIndex::build(keys.clone(), HnswParams::default());
-        let mut grown = (*keys).clone();
-        grown.push_row(&[0.0, 1.0, 0.0, 0.0]);
-        grown.push_row(&[0.0, 0.0, 1.0, 0.0]);
-        assert!(idx.insert_batch(Arc::new(grown), 1..3, &crate::index::InsertContext::none()));
+        let mut batch = Matrix::zeros(0, 4);
+        batch.push_row(&[0.0, 1.0, 0.0, 0.0]);
+        batch.push_row(&[0.0, 0.0, 1.0, 0.0]);
+        let grown = keys.append_rows(batch);
+        assert!(idx.insert_batch(grown, 1..3, &InsertContext::none()));
         let r = idx.search(&[0.0, 0.0, 1.0, 0.0], 1, &SearchParams::default());
         assert_eq!(r.ids, vec![2]);
         let all = idx.search(&[0.5, 0.5, 0.5, 0.0], 3, &SearchParams { ef: 16, nprobe: 0 });
@@ -422,16 +552,16 @@ mod tests {
         // Build on the first half, insert the second half, and require
         // recall@10 close to a from-scratch build over everything.
         let all = random_keys(2000, 16, 29);
-        let half = Arc::new(Matrix::from_fn(1000, 16, |r, c| all[(r, c)]));
+        let half = KeyStore::from_matrix(Matrix::from_fn(1000, 16, |r, c| all.row(r)[c]));
         let mut idx = HnswIndex::build(half, HnswParams::default());
-        assert!(idx.insert_batch(all.clone(), 1000..2000, &crate::index::InsertContext::none()));
+        assert!(idx.insert_batch(all.clone(), 1000..2000, &InsertContext::none()));
         let rebuilt = HnswIndex::build(all.clone(), HnswParams::default());
         let params = SearchParams { ef: 128, nprobe: 0 };
         let (mut rec_ins, mut rec_reb) = (0.0f32, 0.0f32);
         let nq = 20;
         for qi in 0..nq {
             let q = all.row(qi * 83 + 7).to_vec();
-            let truth = exact_topk(&all, &q, 10);
+            let truth = exact_topk_store(&all, &q, 10);
             rec_ins += idx.search(&q, 10, &params).recall_against(&truth);
             rec_reb += rebuilt.search(&q, 10, &params).recall_against(&truth);
         }
@@ -441,5 +571,50 @@ mod tests {
             rec_ins >= rec_reb - 0.05,
             "insert path lost recall: insert {rec_ins} vs rebuild {rec_reb}"
         );
+    }
+
+    #[test]
+    fn removed_nodes_unreachable_and_relink_preserves_coverage() {
+        let keys = random_keys(1200, 16, 31);
+        let mut idx = HnswIndex::build(keys.clone(), HnswParams::default());
+        let removed: Vec<u32> = (0..1200).step_by(5).map(|i| i as u32).collect();
+        assert!(idx.remove_batch(&removed));
+        assert_eq!(idx.tombstones(), removed.len());
+        assert_eq!(idx.live_len(), 1200 - removed.len());
+        // No tombstoned id is ever returned, even under an exhaustive beam.
+        let r = idx.search(&vec![0.1f32; 16], 1200, &SearchParams { ef: 1200, nprobe: 0 });
+        for id in &r.ids {
+            assert!(id % 5 != 0, "tombstoned id {id} returned");
+        }
+        // Re-link must keep (nearly) every live node reachable.
+        assert!(
+            r.ids.len() >= (idx.live_len() * 99) / 100,
+            "re-link lost reachability: {} of {}",
+            r.ids.len(),
+            idx.live_len()
+        );
+    }
+
+    #[test]
+    fn remove_entry_point_still_searches() {
+        let keys = random_keys(300, 8, 37);
+        let mut idx = HnswIndex::build(keys.clone(), HnswParams::default());
+        let entry = idx.entry;
+        assert!(idx.remove_batch(&[entry]));
+        assert!(!idx.dead[idx.entry as usize], "entry must be repaired to a live node");
+        let r = idx.search(&vec![0.2f32; 8], 10, &SearchParams { ef: 64, nprobe: 0 });
+        assert_eq!(r.ids.len(), 10);
+        assert!(!r.ids.contains(&entry));
+    }
+
+    #[test]
+    fn remove_everything_returns_empty() {
+        let keys = random_keys(50, 8, 41);
+        let mut idx = HnswIndex::build(keys, HnswParams::default());
+        let all: Vec<u32> = (0..50).collect();
+        assert!(idx.remove_batch(&all));
+        let r = idx.search(&[0.0; 8], 10, &SearchParams::default());
+        assert!(r.ids.is_empty());
+        assert_eq!(idx.live_len(), 0);
     }
 }

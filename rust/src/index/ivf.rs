@@ -4,32 +4,54 @@
 //! the Q→K distribution gap the query lands "between" key clusters, so many
 //! lists must be probed for high recall — the 30–50% scan fraction of
 //! Fig 3a and the 0.373 s/token row of Table 4.
+//!
+//! Removal tombstones entries; past a 25% tombstone ratio the inverted
+//! lists are compacted (dead ids dropped), exactly how Faiss reclaims a
+//! `remove_ids`-heavy IVF without retraining the quantiser.
 
 use super::{InsertContext, KeyStore, SearchParams, SearchResult, VectorIndex};
 use crate::tensor::{argtopk, dot, l2_sq};
 use std::ops::Range;
 
 /// Inverted-file index over a shared key store.
+#[derive(Clone)]
 pub struct IvfIndex {
     keys: KeyStore,
     /// `nlist x d` centroids.
     centroids: crate::tensor::Matrix,
     /// Inverted lists: ids per centroid.
     lists: Vec<Vec<u32>>,
+    /// Tombstones, one per dense slot.
+    dead: Vec<bool>,
+    dead_count: usize,
+    /// `dead_count` at the last list compaction: dense ids are permanent,
+    /// so the compaction ratio is measured against tombstones accumulated
+    /// since then (an all-time ratio would re-sweep every list on every
+    /// later removal once crossed).
+    dead_at_compact: usize,
 }
 
 impl IvfIndex {
     /// Build with `nlist` clusters (defaults to `4*sqrt(n)` when `None`,
     /// the common Faiss heuristic).
-    pub fn build(keys: KeyStore, nlist: Option<usize>, seed: u64) -> Self {
+    pub fn build(keys: impl Into<KeyStore>, nlist: Option<usize>, seed: u64) -> Self {
+        let keys = keys.into();
         let n = keys.rows();
         let nlist = nlist.unwrap_or_else(|| (4.0 * (n as f64).sqrt()) as usize).clamp(1, n.max(1));
-        let km = super::kmeans::kmeans(&keys, nlist, 10, seed);
+        // The quantiser trains on a dense view (one-time build cost).
+        let km = super::kmeans::kmeans(&keys.to_matrix(), nlist, 10, seed);
         let mut lists = vec![Vec::new(); km.centroids.rows()];
         for (i, &c) in km.assignment.iter().enumerate() {
             lists[c as usize].push(i as u32);
         }
-        IvfIndex { keys, centroids: km.centroids, lists }
+        IvfIndex {
+            keys,
+            centroids: km.centroids,
+            lists,
+            dead: vec![false; n],
+            dead_count: 0,
+            dead_at_compact: 0,
+        }
     }
 
     pub fn nlist(&self) -> usize {
@@ -40,6 +62,10 @@ impl IvfIndex {
 impl VectorIndex for IvfIndex {
     fn len(&self) -> usize {
         self.keys.rows()
+    }
+
+    fn tombstones(&self) -> usize {
+        self.dead_count
     }
 
     fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> SearchResult {
@@ -55,6 +81,9 @@ impl VectorIndex for IvfIndex {
         let mut scanned = self.centroids.rows(); // centroid comparisons count as scans
         for c in probe {
             for &id in &self.lists[c] {
+                if self.dead[id as usize] {
+                    continue;
+                }
                 scores.push(dot(query, self.keys.row(id as usize)));
                 ids.push(id);
             }
@@ -73,8 +102,10 @@ impl VectorIndex for IvfIndex {
     }
 
     fn memory_bytes(&self) -> usize {
+        // Key store bytes are charged once per GQA group by the owner.
         self.centroids.as_slice().len() * 4
             + self.lists.iter().map(|l| l.len() * 4).sum::<usize>()
+            + self.dead.len()
             + std::mem::size_of::<Self>()
     }
 
@@ -103,22 +134,52 @@ impl VectorIndex for IvfIndex {
             self.lists[best].push(i as u32);
         }
         self.keys = keys;
+        self.dead.resize(self.keys.rows(), false);
         true
+    }
+
+    fn supports_remove(&self) -> bool {
+        true
+    }
+
+    fn remove_batch(&mut self, ids: &[u32]) -> bool {
+        for &id in ids {
+            let i = id as usize;
+            if i < self.dead.len() && !self.dead[i] {
+                self.dead[i] = true;
+                self.dead_count += 1;
+            }
+        }
+        // Compaction threshold: drop dead entries from the inverted lists
+        // once the tombstones accumulated since the last compaction exceed
+        // a quarter of the corpus, so probes stop paying for them. The
+        // tombstone bitset stays (dense ids are permanent).
+        if (self.dead_count - self.dead_at_compact) * 4 > self.keys.rows() {
+            let dead = &self.dead;
+            for l in &mut self.lists {
+                l.retain(|&id| !dead[id as usize]);
+            }
+            self.dead_at_compact = self.dead_count;
+        }
+        true
+    }
+
+    fn clone_index(&self) -> Box<dyn VectorIndex> {
+        Box::new(self.clone())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::index::exact_topk;
+    use crate::index::{exact_topk, exact_topk_store};
     use crate::tensor::Matrix;
-    
+
     use crate::util::rng::Rng;
-    use std::sync::Arc;
 
     fn random_keys(n: usize, d: usize, seed: u64) -> KeyStore {
         let mut rng = Rng::seed_from(seed);
-        Arc::new(Matrix::from_fn(n, d, |_, _| rng.f32() - 0.5))
+        KeyStore::from_matrix(Matrix::from_fn(n, d, |_, _| rng.f32() - 0.5))
     }
 
     #[test]
@@ -127,7 +188,7 @@ mod tests {
         let idx = IvfIndex::build(keys.clone(), Some(16), 3);
         let q: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
         let r = idx.search(&q, 10, &SearchParams { ef: 0, nprobe: 16 });
-        let truth = exact_topk(&keys, &q, 10);
+        let truth = exact_topk_store(&keys, &q, 10);
         assert_eq!(r.ids, truth);
     }
 
@@ -136,7 +197,7 @@ mod tests {
         let keys = random_keys(512, 8, 5);
         let idx = IvfIndex::build(keys.clone(), Some(32), 5);
         let q: Vec<f32> = (0..8).map(|i| (8 - i) as f32 * 0.05).collect();
-        let truth = exact_topk(&keys, &q, 10);
+        let truth = exact_topk_store(&keys, &q, 10);
         let mut last = 0.0;
         for nprobe in [1, 4, 16, 32] {
             let r = idx.search(&q, 10, &SearchParams { ef: 0, nprobe });
@@ -151,18 +212,14 @@ mod tests {
     fn insert_then_full_probe_is_exact() {
         let keys = random_keys(256, 8, 9);
         let mut idx = IvfIndex::build(keys.clone(), Some(16), 9);
-        let mut grown = (*keys).clone();
         let mut rng = Rng::seed_from(99);
-        for _ in 0..64 {
-            let row: Vec<f32> = (0..8).map(|_| rng.f32() - 0.5).collect();
-            grown.push_row(&row);
-        }
-        let grown = Arc::new(grown);
+        let batch = Matrix::from_fn(64, 8, |_, _| rng.f32() - 0.5);
+        let grown = keys.append_rows(batch);
         assert!(idx.insert_batch(grown.clone(), 256..320, &crate::index::InsertContext::none()));
         assert_eq!(idx.len(), 320);
         let q: Vec<f32> = (0..8).map(|i| (i as f32 - 3.0) * 0.2).collect();
         let r = idx.search(&q, 10, &SearchParams { ef: 0, nprobe: 16 });
-        let truth = exact_topk(&grown, &q, 10);
+        let truth = exact_topk(&grown.to_matrix(), &q, 10);
         assert_eq!(r.ids, truth, "full probe after insert must stay exact");
     }
 
@@ -174,5 +231,30 @@ mod tests {
         let s1 = idx.search(&q, 5, &SearchParams { ef: 0, nprobe: 1 }).scanned;
         let s8 = idx.search(&q, 5, &SearchParams { ef: 0, nprobe: 8 }).scanned;
         assert!(s8 > s1);
+    }
+
+    #[test]
+    fn remove_then_full_probe_matches_exact_over_live() {
+        let keys = random_keys(300, 8, 13);
+        let mut idx = IvfIndex::build(keys.clone(), Some(16), 13);
+        let removed: Vec<u32> = (0..300).step_by(3).map(|i| i as u32).collect();
+        assert!(idx.remove_batch(&removed));
+        assert_eq!(idx.tombstones(), removed.len());
+        // 100/300 dead crosses the compaction threshold: lists shrink.
+        let listed: usize = idx.lists.iter().map(|l| l.len()).sum();
+        assert_eq!(listed, 200, "compaction must drop dead entries");
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.7).sin()).collect();
+        let r = idx.search(&q, 10, &SearchParams { ef: 0, nprobe: 16 });
+        for id in &r.ids {
+            assert!(id % 3 != 0, "tombstoned id {id} returned");
+        }
+        // Exact over the live subset.
+        let mut scores: Vec<(f32, u32)> = (0..300u32)
+            .filter(|i| i % 3 != 0)
+            .map(|i| (crate::tensor::dot(&q, keys.row(i as usize)), i))
+            .collect();
+        scores.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        let truth: Vec<u32> = scores.into_iter().take(10).map(|(_, i)| i).collect();
+        assert_eq!(r.ids, truth, "full probe over live set must stay exact");
     }
 }

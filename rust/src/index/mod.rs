@@ -25,7 +25,6 @@ pub mod roargraph;
 
 use crate::tensor::Matrix;
 use std::ops::Range;
-use std::sync::Arc;
 
 /// A search result: ids and scores sorted by score descending, plus the
 /// number of key vectors whose distance was actually computed ("scanned" in
@@ -95,14 +94,30 @@ impl<'a> InsertContext<'a> {
 /// and decoded keys the sliding window has passed over are folded in through
 /// [`VectorIndex::insert_batch`] (RetroInfer-style "the KV cache is a live
 /// vector store"), keeping per-token decode cost bounded for arbitrarily
-/// long generations. Implementations are `Send + Sync` so per-head searches
-/// can be fanned out across threads (Appendix C, "Multi-head Parallelism").
+/// long generations. Deletion runs through [`VectorIndex::remove_batch`]:
+/// ids are tombstoned (dense ids stay stable — the shared id map is never
+/// rewritten), search never returns a tombstoned id, and each family
+/// reclaims structure its own way (flat/IVF compact their scan lists past
+/// a tombstone-ratio threshold; the graphs re-link around the hole with
+/// the degree-bounded repair machinery). Implementations are
+/// `Send + Sync` so per-head searches can be fanned out across threads
+/// (Appendix C, "Multi-head Parallelism").
 pub trait VectorIndex: Send + Sync {
-    /// Number of indexed vectors.
+    /// Number of dense id slots (including tombstoned ones).
     fn len(&self) -> usize;
 
     fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Tombstoned-but-unreclaimed slots.
+    fn tombstones(&self) -> usize {
+        0
+    }
+
+    /// Vectors currently searchable.
+    fn live_len(&self) -> usize {
+        self.len() - self.tombstones()
     }
 
     /// Top-`k` maximum-inner-product search.
@@ -141,19 +156,51 @@ pub trait VectorIndex: Send + Sync {
     fn insert(&mut self, keys: KeyStore, id: usize, ctx: &InsertContext<'_>) -> bool {
         self.insert_batch(keys, id..id + 1, ctx)
     }
+
+    /// Whether this family implements the deletion path.
+    fn supports_remove(&self) -> bool {
+        false
+    }
+
+    /// Tombstone the given dense ids: they must never be returned by a
+    /// subsequent search, and `tombstones()` must account for them until
+    /// the family compacts. Unknown/already-dead ids are ignored. Returns
+    /// `false` when the family does not implement removal (the default).
+    fn remove_batch(&mut self, ids: &[u32]) -> bool {
+        let _ = ids;
+        false
+    }
+
+    /// Deep copy, used by the double-buffered maintenance swap: the worker
+    /// mutates a private back buffer and publishes it atomically while
+    /// decode keeps searching the front.
+    fn clone_index(&self) -> Box<dyn VectorIndex>;
 }
 
-/// Shared key storage. One copy per GQA group is shared by all query-head
-/// indexes of the group (Appendix C, "Minimize the CPU Memory Usage"):
-/// each index stores only u32 ids into this store. The matrix itself is
-/// immutable; online growth replaces the `Arc` wholesale (the old rows are
-/// a stable prefix of the new store — see [`VectorIndex::insert_batch`]).
-pub type KeyStore = Arc<Matrix>;
+/// Shared key storage: the per-GQA-group dense key copy (Appendix C,
+/// "Minimize the CPU Memory Usage") as a **segmented store** — `Arc`'d
+/// chunks shared structurally across drains, so online growth appends an
+/// O(batch) chunk instead of recopying the O(context) prefix (see
+/// [`crate::kvcache::SegmentedStore`]). Rows `[0, old.rows())` of a grown
+/// store are bit-identical to the old one, keeping dense ids stable.
+pub type KeyStore = crate::kvcache::SegmentedStore;
 
-/// Helper: exact top-k by brute force over a key store — the ground truth
-/// used both by experiments and by RoarGraph construction.
+/// Helper: exact top-k by brute force over a dense matrix — the ground
+/// truth used by experiments and tests.
 pub fn exact_topk(keys: &Matrix, query: &[f32], k: usize) -> Vec<u32> {
     let scores: Vec<f32> = (0..keys.rows()).map(|i| crate::tensor::dot(query, keys.row(i))).collect();
+    crate::tensor::argtopk(&scores, k).into_iter().map(|i| i as u32).collect()
+}
+
+/// Exact top-k over a segmented key store (RoarGraph's bipartite phase
+/// scans segment-local rows to avoid the per-row chunk lookup).
+pub fn exact_topk_store(keys: &KeyStore, query: &[f32], k: usize) -> Vec<u32> {
+    let mut scores: Vec<f32> = Vec::with_capacity(keys.rows());
+    for seg in keys.segments() {
+        for r in 0..seg.rows() {
+            scores.push(crate::tensor::dot(query, seg.row(r)));
+        }
+    }
     crate::tensor::argtopk(&scores, k).into_iter().map(|i| i as u32).collect()
 }
 

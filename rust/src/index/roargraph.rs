@@ -41,6 +41,17 @@
 //! pruning. After `rebuild_threshold` pending inserts the whole graph is
 //! re-projected from the retained training queries, amortising the full
 //! build.
+//!
+//! ## Deletion
+//!
+//! [`VectorIndex::remove_batch`] tombstones nodes FreshDiskANN-style: a
+//! dead node is still *traversed* (its edges keep the graph connected so
+//! the frozen CSR never needs in-edge surgery) but never *returned*, and
+//! the dead node's live neighborhood is additionally bridged with
+//! degree-bounded patch edges (the PR-1 [`RoarGraph::push_reverse_edge`]
+//! machinery) so search quality does not decay around holes. Past a 25%
+//! tombstone ratio the graph re-projects itself (the amortised rebuild),
+//! keeping traversal cost proportional to the live set.
 
 use super::{InsertContext, KeyStore, SearchParams, SearchResult, VectorIndex, VisitedSet};
 use crate::tensor::{argtopk, dot, Matrix};
@@ -73,6 +84,7 @@ impl Default for RoarParams {
 const TRAIN_CAP: usize = 1024;
 
 /// Attention-aware projected bipartite graph index.
+#[derive(Clone)]
 pub struct RoarGraph {
     keys: KeyStore,
     /// Flattened CSR adjacency over the frozen base nodes `[0, base_n)`.
@@ -96,6 +108,15 @@ pub struct RoarGraph {
     train: Matrix,
     /// Inserts since the last (re)build.
     pending: usize,
+    /// Tombstones, one per dense slot: dead nodes are traversed (they keep
+    /// the frozen CSR connected) but never returned.
+    dead: Vec<bool>,
+    dead_count: usize,
+    /// `dead_count` at the last re-projection: dense ids are permanent, so
+    /// the rebuild ratio must be measured against tombstones accumulated
+    /// *since* then — otherwise one crossing of the threshold would make
+    /// every later removal trigger a full rebuild forever.
+    dead_at_rebuild: usize,
 }
 
 #[derive(Copy, Clone)]
@@ -125,7 +146,8 @@ impl RoarGraph {
     ///
     /// `queries` are *training* queries: in the serving stack these are the
     /// per-head query vectors captured during the prefill phase (§3.2).
-    pub fn build(keys: KeyStore, queries: &Matrix, params: RoarParams) -> Self {
+    pub fn build(keys: impl Into<KeyStore>, queries: &Matrix, params: RoarParams) -> Self {
+        let keys: KeyStore = keys.into();
         let n = keys.rows();
         assert!(n > 0, "RoarGraph needs at least one key");
         assert!(queries.rows() > 0, "RoarGraph needs training queries (prefill Q vectors)");
@@ -134,7 +156,7 @@ impl RoarGraph {
 
         // --- Phase 1: exact KNN from each training query to the keys. ---
         let knn: Vec<Vec<u32>> = crate::util::parallel::par_map_range(queries.rows(), |qi| {
-            super::exact_topk(&keys, queries.row(qi), kb)
+            super::exact_topk_store(&keys, queries.row(qi), kb)
         });
 
         // --- Phase 2: project bipartite edges onto key-key edges. ---
@@ -195,6 +217,9 @@ impl RoarGraph {
             primary_anchor: Vec::new(),
             train,
             pending: 0,
+            dead: vec![false; n],
+            dead_count: 0,
+            dead_at_rebuild: 0,
         };
         let adjacency = graph.repair_connectivity(adjacency, params.repair_sample);
         graph.freeze(adjacency);
@@ -345,11 +370,35 @@ impl RoarGraph {
     }
 
     /// Full re-projection over the current key store from the retained
-    /// training queries; clears the patch/extra overlays.
+    /// training queries; clears the patch/extra overlays. Tombstones
+    /// survive the rebuild (dense ids are permanent): dead nodes get wired
+    /// as transit nodes again and stay filtered from results.
     fn rebuild(&mut self) {
         let keys = self.keys.clone();
         let train = self.train.clone();
+        let dead = std::mem::take(&mut self.dead);
+        let dead_count = self.dead_count;
         *self = RoarGraph::build(keys, &train, self.params);
+        self.dead = dead;
+        self.dead.resize(self.keys.rows(), false);
+        self.dead_count = dead_count;
+        self.dead_at_rebuild = dead_count;
+        self.fix_entries();
+    }
+
+    /// Keep the entry set live: searches must start from nodes that can be
+    /// returned, otherwise an all-dead entry set strands the beam.
+    fn fix_entries(&mut self) {
+        if self.dead_count == 0 {
+            return;
+        }
+        let dead = &self.dead;
+        self.entries.retain(|&e| !dead[e as usize]);
+        if self.entries.is_empty() {
+            if let Some(first_live) = (0..self.keys.rows()).find(|&i| !self.dead[i]) {
+                self.entries.push(first_live as u32);
+            }
+        }
     }
 }
 
@@ -358,7 +407,14 @@ impl VectorIndex for RoarGraph {
         self.keys.rows()
     }
 
+    fn tombstones(&self) -> usize {
+        self.dead_count
+    }
+
     fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> SearchResult {
+        if self.dead_count >= self.keys.rows() {
+            return SearchResult::default();
+        }
         let ef = params.ef.max(k);
         let n = self.keys.rows();
         let mut visited = VisitedSet::new(n);
@@ -373,7 +429,9 @@ impl VectorIndex for RoarGraph {
                 let sim = dot(query, self.keys.row(e as usize));
                 scanned += 1;
                 frontier.push(Cand { sim, id: e });
-                results.push(std::cmp::Reverse(Cand { sim, id: e }));
+                if !self.dead[e as usize] {
+                    results.push(std::cmp::Reverse(Cand { sim, id: e }));
+                }
             }
         }
         while let Some(c) = frontier.pop() {
@@ -388,10 +446,14 @@ impl VectorIndex for RoarGraph {
                     scanned += 1;
                     let worst = results.peek().map(|r| r.0.sim).unwrap_or(f32::NEG_INFINITY);
                     if results.len() < ef || sim > worst {
+                        // Tombstoned nodes are traversed (they keep the
+                        // frozen CSR connected) but never returned.
                         frontier.push(Cand { sim, id: nb });
-                        results.push(std::cmp::Reverse(Cand { sim, id: nb }));
-                        if results.len() > ef {
-                            results.pop();
+                        if !self.dead[nb as usize] {
+                            results.push(std::cmp::Reverse(Cand { sim, id: nb }));
+                            if results.len() > ef {
+                                results.pop();
+                            }
                         }
                     }
                 }
@@ -437,6 +499,7 @@ impl VectorIndex for RoarGraph {
         let total = self.keys.rows();
         self.extra.resize(total - self.base_n, Vec::new());
         self.primary_anchor.resize(total - self.base_n, u32::MAX);
+        self.dead.resize(total, false);
 
         let kb = self.params.kb.min(total).max(2);
         let search_params = SearchParams { ef: kb.max(64), nprobe: 0 };
@@ -575,22 +638,81 @@ impl VectorIndex for RoarGraph {
         }
         true
     }
+
+    fn supports_remove(&self) -> bool {
+        true
+    }
+
+    /// Tombstone + degree-bounded local bridge (see module docs): each
+    /// dead node's live neighborhood is stitched together with patch
+    /// edges, results filter the dead, and a 25% tombstone ratio triggers
+    /// the amortised re-projection.
+    fn remove_batch(&mut self, ids: &[u32]) -> bool {
+        let mut fresh: Vec<u32> = Vec::new();
+        for &id in ids {
+            let i = id as usize;
+            if i < self.dead.len() && !self.dead[i] {
+                self.dead[i] = true;
+                self.dead_count += 1;
+                fresh.push(id);
+            }
+        }
+        if fresh.is_empty() {
+            return true;
+        }
+        // Bridge each hole: chain the dead node's best live neighbors so a
+        // walk that used to route through it still has a short detour. The
+        // reverse-edge helper enforces the degree bound and the protected
+        // primary anchors of online-inserted nodes.
+        let mut nbuf: Vec<u32> = Vec::new();
+        for &r in &fresh {
+            self.collect_neighbors(r, &mut nbuf);
+            let mut live: Vec<u32> =
+                nbuf.iter().copied().filter(|&w| !self.dead[w as usize]).collect();
+            live.sort_unstable();
+            live.dedup();
+            // Best-first by similarity to the removed node: the bridge
+            // chain should stitch together the neighbors most likely to
+            // co-occur in a walk that used to route through it.
+            let mut scored: Vec<(f32, u32)> = live
+                .into_iter()
+                .map(|w| (dot(self.keys.row(r as usize), self.keys.row(w as usize)), w))
+                .collect();
+            scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            scored.truncate(self.params.m.max(2));
+            for w in 0..scored.len().saturating_sub(1) {
+                self.push_reverse_edge(scored[w].1, scored[w + 1].1);
+                self.push_reverse_edge(scored[w + 1].1, scored[w].1);
+            }
+        }
+        self.fix_entries();
+        // Ratio of tombstones accumulated *since the last re-projection*:
+        // dense ids never free up, so the all-time ratio would cross the
+        // threshold once and then rebuild on every removal forever.
+        if (self.dead_count - self.dead_at_rebuild) * 4 > self.keys.rows() {
+            self.rebuild();
+        }
+        true
+    }
+
+    fn clone_index(&self) -> Box<dyn VectorIndex> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::index::exact_topk;
+    use crate::index::exact_topk_store;
 
     use crate::util::rng::Rng;
-    use std::sync::Arc;
 
     /// Simulated attention geometry: keys ~ N(0, I); queries live in a
     /// shifted, scaled subspace (OOD), like Q/K produced by different
     /// projection matrices.
     fn ood_setup(n: usize, nq: usize, d: usize, seed: u64) -> (KeyStore, Matrix) {
         let mut rng = Rng::seed_from(seed);
-        let keys = Arc::new(Matrix::from_fn(n, d, |_, _| rng.f32() - 0.5));
+        let keys = KeyStore::from_matrix(Matrix::from_fn(n, d, |_, _| rng.f32() - 0.5));
         // Queries: strong offset + anisotropic scale => OOD w.r.t. keys.
         let queries = Matrix::from_fn(nq, d, |_, c| {
             let base: f32 = rng.f32() - 0.5;
@@ -610,7 +732,7 @@ mod tests {
         let ntest = 100;
         for t in 0..ntest {
             let q: Vec<f32> = (0..16).map(|c| queries[(300 + t, c)]).collect();
-            let truth = exact_topk(&keys, &q, 10);
+            let truth = exact_topk_store(&keys, &q, 10);
             let r = idx.search(&q, 10, &SearchParams { ef: 64, nprobe: 0 });
             recall += r.recall_against(&truth);
             scanned += r.scanned;
@@ -646,7 +768,7 @@ mod tests {
 
     #[test]
     fn single_key() {
-        let keys = Arc::new(Matrix::from_vec(1, 4, vec![1.0, 0.0, 0.0, 0.0]));
+        let keys = KeyStore::from_matrix(Matrix::from_vec(1, 4, vec![1.0, 0.0, 0.0, 0.0]));
         let queries = Matrix::from_vec(2, 4, vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
         let idx = RoarGraph::build(keys, &queries, RoarParams::default());
         let r = idx.search(&[0.5, 0.5, 0.0, 0.0], 3, &SearchParams::default());
@@ -659,11 +781,7 @@ mod tests {
         let mut idx = RoarGraph::build(keys.clone(), &queries, RoarParams::default());
         // Grow the store by 40 keys drawn from the same process.
         let (more, recent_q) = ood_setup(40, 16, 8, 42);
-        let mut grown = (*keys).clone();
-        for r in 0..more.rows() {
-            grown.push_row(more.row(r));
-        }
-        let grown = Arc::new(grown);
+        let grown = keys.append_rows(more.to_matrix());
         let ctx = InsertContext { recent_queries: Some(&recent_q) };
         assert!(idx.insert_batch(grown.clone(), 600..640, &ctx));
         assert_eq!(idx.len(), 640);
@@ -681,9 +799,9 @@ mod tests {
     fn insert_without_queries_falls_back_to_key_space() {
         let (keys, queries) = ood_setup(300, 40, 8, 51);
         let mut idx = RoarGraph::build(keys.clone(), &queries, RoarParams::default());
-        let mut grown = (*keys).clone();
-        grown.push_row(&[9.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
-        assert!(idx.insert_batch(Arc::new(grown), 300..301, &InsertContext::none()));
+        let grown = keys
+            .append_rows(Matrix::from_vec(1, 8, vec![9.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]));
+        assert!(idx.insert_batch(grown, 300..301, &InsertContext::none()));
         let r = idx.search(&[1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0], 3, &SearchParams::default());
         assert!(r.ids.contains(&300), "fallback-wired key not retrieved");
     }
@@ -694,16 +812,49 @@ mod tests {
         let params = RoarParams { rebuild_threshold: 32, ..RoarParams::default() };
         let mut idx = RoarGraph::build(keys.clone(), &queries, params);
         let (more, recent_q) = ood_setup(64, 16, 8, 62);
-        let mut grown = (*keys).clone();
-        for r in 0..more.rows() {
-            grown.push_row(more.row(r));
-        }
+        let grown = keys.append_rows(more.to_matrix());
         let ctx = InsertContext { recent_queries: Some(&recent_q) };
-        assert!(idx.insert_batch(Arc::new(grown), 200..264, &ctx));
+        assert!(idx.insert_batch(grown, 200..264, &ctx));
         // 64 >= threshold 32: the graph must have re-projected over all keys.
         assert_eq!(idx.base_len(), 264, "rebuild did not trigger");
         assert_eq!(idx.pending_inserts(), 0);
         let r = idx.search(&vec![0.0f32; 8], 264, &SearchParams { ef: 264, nprobe: 0 });
         assert_eq!(r.ids.len(), 264, "rebuild lost nodes");
+    }
+
+    #[test]
+    fn removed_nodes_filtered_but_traversed() {
+        let (keys, queries) = ood_setup(500, 60, 8, 71);
+        let mut idx = RoarGraph::build(keys.clone(), &queries, RoarParams::default());
+        // Below the 25% rebuild ratio: pure tombstone + bridge path.
+        let removed: Vec<u32> = (0..100).map(|i| (i * 5) as u32).collect();
+        assert!(idx.remove_batch(&removed));
+        assert_eq!(idx.tombstones(), 100);
+        assert_eq!(idx.live_len(), 400);
+        let r = idx.search(&vec![0.0f32; 8], 500, &SearchParams { ef: 500, nprobe: 0 });
+        assert_eq!(r.ids.len(), 400, "every live node must stay reachable");
+        for id in &r.ids {
+            assert!(id % 5 != 0 || *id >= 500, "tombstoned id {id} returned");
+        }
+        // A removed key queried directly surfaces a neighbor, not itself.
+        let probe = idx.search(keys.row(250), 5, &SearchParams { ef: 64, nprobe: 0 });
+        assert!(!probe.ids.contains(&250));
+    }
+
+    #[test]
+    fn heavy_removal_triggers_reprojection_and_stays_filtered() {
+        let (keys, queries) = ood_setup(300, 50, 8, 73);
+        let mut idx = RoarGraph::build(keys.clone(), &queries, RoarParams::default());
+        let removed: Vec<u32> = (0..150).map(|i| i as u32).collect();
+        assert!(idx.remove_batch(&removed));
+        // 50% dead crosses the ratio: the graph re-projected; tombstones
+        // must survive the rebuild.
+        assert_eq!(idx.tombstones(), 150);
+        assert_eq!(idx.pending_inserts(), 0);
+        let r = idx.search(&vec![0.0f32; 8], 300, &SearchParams { ef: 300, nprobe: 0 });
+        assert_eq!(r.ids.len(), 150);
+        for id in &r.ids {
+            assert!(*id >= 150, "tombstoned id {id} returned after rebuild");
+        }
     }
 }

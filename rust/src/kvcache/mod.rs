@@ -18,6 +18,9 @@
 //! cost bounded for arbitrarily long generations.
 
 pub mod paged;
+pub mod segment;
+
+pub use segment::SegmentedStore;
 
 use crate::tensor::Matrix;
 use std::ops::Range;
@@ -76,6 +79,11 @@ pub struct TieredKvCache {
     /// and advances when the engine drains the overflow buffer via
     /// [`TieredKvCache::advance_indexed`].
     indexed_end: usize,
+    /// One past the last *retired* host token: tokens in
+    /// `[sink, retired_end)` were evicted from the indexed tier
+    /// (StreamingLLM-style window retirement over host memory) and are no
+    /// longer attended. `0` ⇒ nothing retired.
+    retired_end: usize,
 }
 
 impl TieredKvCache {
@@ -87,6 +95,7 @@ impl TieredKvCache {
             pattern,
             prefill_len: 0,
             indexed_end: 0,
+            retired_end: 0,
         }
     }
 
@@ -162,18 +171,89 @@ impl TieredKvCache {
         a.chain(b).map(|i| i as u32).collect()
     }
 
+    /// First live indexed token: past the sink and past anything retired.
+    fn live_indexed_start(&self) -> usize {
+        self.retired_end.max(self.pattern.sink)
+    }
+
     /// Host-side *indexed* ids: tokens the ANNS index currently covers —
-    /// the prefill host set plus every overflow token drained so far.
+    /// the prefill host set plus every overflow token drained so far,
+    /// minus anything the eviction policy has retired.
     pub fn indexed_ids(&self) -> Vec<u32> {
-        if self.indexed_end <= self.pattern.sink {
+        let lo = self.live_indexed_start();
+        if self.indexed_end <= lo {
             return Vec::new();
         }
-        (self.pattern.sink..self.indexed_end).map(|i| i as u32).collect()
+        (lo..self.indexed_end).map(|i| i as u32).collect()
+    }
+
+    /// Number of live indexed tokens without materialising the id list.
+    pub fn indexed_len(&self) -> usize {
+        self.indexed_end.saturating_sub(self.live_indexed_start())
     }
 
     /// One past the last indexed host token (the drain boundary).
     pub fn indexed_end(&self) -> usize {
         self.indexed_end.max(self.pattern.sink)
+    }
+
+    /// Retired (evicted) host ids: `[sink, retired_end)`. These tokens'
+    /// K/V still occupy host memory (dense ids must stay stable) but they
+    /// are tombstoned in the indexes and never attended.
+    pub fn retired_ids(&self) -> Vec<u32> {
+        let lo = self.pattern.sink.min(self.retired_end);
+        (lo..self.retired_end).map(|i| i as u32).collect()
+    }
+
+    /// True iff token `i` has been retired by the eviction policy.
+    #[inline]
+    pub fn is_retired(&self, i: usize) -> bool {
+        i >= self.pattern.sink && i < self.retired_end
+    }
+
+    /// Retire the `n` oldest live indexed tokens (StreamingLLM-style
+    /// window retirement over the indexed tier); returns their ids so the
+    /// caller can tombstone them in the group's indexes. Clamped to the
+    /// indexed boundary — overflow/device tokens can never be retired.
+    pub fn retire_oldest_indexed(&mut self, n: usize) -> Vec<u32> {
+        let lo = self.live_indexed_start();
+        let hi = (lo + n).min(self.indexed_end);
+        if hi <= lo {
+            return Vec::new();
+        }
+        self.retired_end = hi;
+        (lo..hi).map(|i| i as u32).collect()
+    }
+
+    /// Start of the sliding device window at the current length (== one
+    /// past the last possible overflow token).
+    pub fn window_start(&self) -> usize {
+        let len = self.len();
+        if len <= self.pattern.total() {
+            len
+        } else {
+            len - self.pattern.window
+        }
+    }
+
+    /// Drop every token at position >= `new_len` (session truncation).
+    /// Index/retired boundaries are clamped so the tier partition stays
+    /// exact; the caller is responsible for tombstoning the dropped ids in
+    /// (or rebuilding) the ANN indexes.
+    pub fn truncate(&mut self, new_len: usize) {
+        if new_len >= self.len() {
+            return;
+        }
+        self.keys.truncate_rows(new_len);
+        self.values.truncate_rows(new_len);
+        self.prefill_len = self.prefill_len.min(new_len);
+        let window_floor = if new_len > self.pattern.total() {
+            new_len - self.pattern.window
+        } else {
+            self.pattern.sink.min(new_len)
+        };
+        self.indexed_end = self.indexed_end.min(window_floor);
+        self.retired_end = self.retired_end.min(self.indexed_end);
     }
 
     /// Host-side *overflow* ids: tokens the sliding window has passed over
@@ -398,6 +478,59 @@ mod tests {
         // 24 tokens on device, 976 on host; fp16 elements.
         assert_eq!(c.device_bytes(2), 24 * 2 * 64 * 2);
         assert_eq!(c.host_bytes(2), 976 * 2 * 64 * 2);
+    }
+
+    #[test]
+    fn retire_oldest_bounds_indexed_tier() {
+        let pattern = StaticPattern { sink: 8, window: 16 };
+        let mut c = filled(100, 4, pattern);
+        // Indexed tier: 8..84 (window start) = 76 live tokens.
+        assert_eq!(c.indexed_len(), 76);
+        let retired = c.retire_oldest_indexed(20);
+        assert_eq!(retired, (8..28).collect::<Vec<u32>>());
+        assert_eq!(c.indexed_len(), 56);
+        assert_eq!(c.indexed_ids(), (28..84).collect::<Vec<u32>>());
+        assert_eq!(c.retired_ids(), (8..28).collect::<Vec<u32>>());
+        assert!(c.is_retired(10) && !c.is_retired(7) && !c.is_retired(30));
+        // Four tiers still partition every token exactly once.
+        let mut all: Vec<u32> = c.device_ids();
+        all.extend(c.indexed_ids());
+        all.extend(c.overflow_ids());
+        all.extend(c.retired_ids());
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<u32>>());
+        // Retiring past the indexed boundary clamps.
+        let more = c.retire_oldest_indexed(1000);
+        assert_eq!(more, (28..84).collect::<Vec<u32>>());
+        assert_eq!(c.indexed_len(), 0);
+    }
+
+    #[test]
+    fn truncate_clamps_every_boundary() {
+        let pattern = StaticPattern { sink: 8, window: 16 };
+        let mut c = filled(100, 4, pattern);
+        for i in 0..40 {
+            let k = vec![i as f32; 4];
+            c.append(&k, &k);
+        }
+        c.advance_indexed(124);
+        c.retire_oldest_indexed(10);
+        c.truncate(60);
+        assert_eq!(c.len(), 60);
+        // Window start at len 60 is 44; indexed must clamp below it.
+        assert_eq!(c.window_start(), 44);
+        assert!(c.indexed_end() <= 44);
+        let mut all: Vec<u32> = c.device_ids();
+        all.extend(c.indexed_ids());
+        all.extend(c.overflow_ids());
+        all.extend(c.retired_ids());
+        all.sort_unstable();
+        assert_eq!(all, (0..60).collect::<Vec<u32>>(), "tiers must still partition");
+        // Truncating below the pattern leaves everything on-device.
+        c.truncate(20);
+        assert_eq!(c.device_ids().len(), 20);
+        assert!(c.indexed_ids().is_empty());
+        assert!(c.retired_ids().is_empty());
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Segmented immutable key storage: the dense host key store as a
+//! `Vec<Arc<Matrix>>` of chunks.
+//!
+//! PR 1's online drain deep-copied the whole dense store to append a
+//! watermark-sized batch — an O(context) memcpy per drain that grows with
+//! the generation. A segmented store fixes the asymptotics: appending
+//! returns a *new* store that shares every existing chunk by `Arc` and
+//! adds one chunk holding only the new rows, so the immutable prefix is
+//! never recopied (RetroInfer-style append-only segments).
+//!
+//! To keep per-row lookups logarithmic in the *segment count* rather than
+//! linear in the drain count, appends run an LSM-style tail merge: the two
+//! youngest segments are merged while the older one is no larger than the
+//! younger. Segment sizes therefore decrease geometrically from the tail,
+//! the segment count stays O(log n), and each row is copied O(log n)
+//! times over the whole generation (amortised O(log n) per appended row —
+//! versus O(context) per *drain* for the monolithic store).
+
+use crate::tensor::Matrix;
+use std::sync::Arc;
+
+/// Immutable, cheaply-clonable segmented row store. Logical rows are the
+/// concatenation of all segments in order; row ids are stable across
+/// appends (rows `[0, old.rows())` of an appended store are bit-identical
+/// to the old store).
+#[derive(Clone, Debug)]
+pub struct SegmentedStore {
+    segments: Vec<Arc<Matrix>>,
+    /// `starts[i]` = global index of segment i's first row.
+    starts: Vec<usize>,
+    rows: usize,
+    cols: usize,
+}
+
+impl SegmentedStore {
+    /// Empty store of the given width.
+    pub fn new(cols: usize) -> Self {
+        SegmentedStore { segments: Vec::new(), starts: Vec::new(), rows: 0, cols }
+    }
+
+    /// Single-segment store adopting `m` without copying its buffer.
+    pub fn from_arc(m: Arc<Matrix>) -> Self {
+        let (rows, cols) = (m.rows(), m.cols());
+        let mut s = SegmentedStore::new(cols);
+        if rows > 0 {
+            s.segments.push(m);
+            s.starts.push(0);
+            s.rows = rows;
+        }
+        s
+    }
+
+    pub fn from_matrix(m: Matrix) -> Self {
+        SegmentedStore::from_arc(Arc::new(m))
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Number of chunks (diagnostics; O(log rows) by the tail-merge rule).
+    pub fn segment_count(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// The underlying chunks, oldest first (for segment-local scans).
+    pub fn segments(&self) -> &[Arc<Matrix>] {
+        &self.segments
+    }
+
+    /// Borrow logical row `i`. Rows never straddle a segment boundary.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows, "row {i} out of bounds ({} rows)", self.rows);
+        // partition_point returns the first start > i; its predecessor is
+        // the segment containing i.
+        let seg = self.starts.partition_point(|&s| s <= i) - 1;
+        self.segments[seg].row(i - self.starts[seg])
+    }
+
+    /// A new store sharing every current chunk and appending `new_rows` as
+    /// a fresh tail chunk, then tail-merging to keep the chunk count
+    /// logarithmic. The receiver is untouched (persistent structure).
+    pub fn append_rows(&self, new_rows: Matrix) -> SegmentedStore {
+        if new_rows.rows() == 0 {
+            return self.clone();
+        }
+        let cols = if self.rows == 0 { new_rows.cols() } else { self.cols };
+        assert_eq!(new_rows.cols(), cols, "appended rows have wrong width");
+        let mut out = self.clone();
+        out.cols = cols;
+        out.rows += new_rows.rows();
+        out.starts.push(self.rows);
+        out.segments.push(Arc::new(new_rows));
+        // LSM tail merge: fold the youngest chunk into its elder while the
+        // elder is no larger — geometric sizes, O(log n) chunks.
+        while out.segments.len() >= 2 {
+            let last = out.segments[out.segments.len() - 1].rows();
+            let prev = out.segments[out.segments.len() - 2].rows();
+            if prev > last {
+                break;
+            }
+            let b = out.segments.pop().expect("tail segment");
+            let a = out.segments.pop().expect("tail segment");
+            out.starts.pop();
+            let mut merged = Matrix::zeros(0, cols);
+            for r in 0..a.rows() {
+                merged.push_row(a.row(r));
+            }
+            for r in 0..b.rows() {
+                merged.push_row(b.row(r));
+            }
+            out.segments.push(Arc::new(merged));
+        }
+        out
+    }
+
+    /// Materialise into one contiguous matrix (index builds that need a
+    /// dense view, and the bench's segmented-vs-copy comparison).
+    pub fn to_matrix(&self) -> Matrix {
+        let mut m = Matrix::zeros(0, self.cols);
+        for seg in &self.segments {
+            for r in 0..seg.rows() {
+                m.push_row(seg.row(r));
+            }
+        }
+        m
+    }
+
+    /// Heap bytes of the chunk table (the f32 payload is shared and counted
+    /// once per GQA group by the owner).
+    pub fn table_bytes(&self) -> usize {
+        self.segments.len() * std::mem::size_of::<Arc<Matrix>>()
+            + self.starts.len() * std::mem::size_of::<usize>()
+    }
+}
+
+impl From<Matrix> for SegmentedStore {
+    fn from(m: Matrix) -> Self {
+        SegmentedStore::from_matrix(m)
+    }
+}
+
+impl From<Arc<Matrix>> for SegmentedStore {
+    fn from(m: Arc<Matrix>) -> Self {
+        SegmentedStore::from_arc(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, tag: f32) -> Matrix {
+        Matrix::from_fn(rows, cols, |r, c| tag + (r * cols + c) as f32)
+    }
+
+    #[test]
+    fn rows_match_materialised_view() {
+        let mut s = SegmentedStore::from_matrix(mat(100, 4, 0.0));
+        for batch in 0..10 {
+            s = s.append_rows(mat(7, 4, 1000.0 * (batch + 1) as f32));
+        }
+        assert_eq!(s.rows(), 170);
+        let dense = s.to_matrix();
+        for i in 0..s.rows() {
+            assert_eq!(s.row(i), dense.row(i), "row {i} diverged");
+        }
+    }
+
+    #[test]
+    fn append_shares_the_prefix_chunk() {
+        let base = SegmentedStore::from_matrix(mat(512, 8, 0.0));
+        let grown = base.append_rows(mat(16, 8, 9.0));
+        // The big prefill chunk must be the same allocation, not a copy.
+        assert!(Arc::ptr_eq(&base.segments()[0], &grown.segments()[0]));
+        // Old store is untouched (persistent).
+        assert_eq!(base.rows(), 512);
+        assert_eq!(grown.rows(), 528);
+        assert_eq!(grown.row(520)[0], 9.0 + 64.0);
+    }
+
+    #[test]
+    fn tail_merge_keeps_chunk_count_logarithmic() {
+        let mut s = SegmentedStore::from_matrix(mat(1024, 2, 0.0));
+        for i in 0..256 {
+            s = s.append_rows(mat(4, 2, i as f32));
+        }
+        assert_eq!(s.rows(), 1024 + 256 * 4);
+        // 2048 logical rows: the merge rule bounds chunks by ~log2(n).
+        assert!(s.segment_count() <= 12, "too many chunks: {}", s.segment_count());
+        let dense = s.to_matrix();
+        for i in (0..s.rows()).step_by(97) {
+            assert_eq!(s.row(i), dense.row(i));
+        }
+    }
+
+    #[test]
+    fn empty_and_from_arc() {
+        let e = SegmentedStore::new(3);
+        assert!(e.is_empty());
+        assert_eq!(e.segment_count(), 0);
+        let g = e.append_rows(mat(5, 3, 1.0));
+        assert_eq!(g.rows(), 5);
+        assert_eq!(g.row(0), mat(5, 3, 1.0).row(0));
+        let a = Arc::new(mat(4, 3, 2.0));
+        let s = SegmentedStore::from_arc(a.clone());
+        assert!(Arc::ptr_eq(&s.segments()[0], &a));
+        // Zero-row matrices produce no segment.
+        let z = SegmentedStore::from_matrix(Matrix::zeros(0, 6));
+        assert!(z.is_empty());
+        assert_eq!(z.cols(), 6);
+    }
+}

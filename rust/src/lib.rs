@@ -12,13 +12,18 @@
 //!   ([`index::flat`]), IVF ([`index::ivf`]), HNSW ([`index::hnsw`]), and
 //!   the paper's attention-aware projected bipartite graph
 //!   ([`index::roargraph`]). Every family supports
-//!   [`index::VectorIndex::insert_batch`], so keys decoded after prefill
-//!   are folded in (RoarGraph wires them attention-aware from recent
-//!   decode queries, with a degree-bounded local repair and an amortised
-//!   rebuild threshold).
+//!   [`index::VectorIndex::insert_batch`] (RoarGraph wires decoded keys
+//!   attention-aware from recent decode queries, with a degree-bounded
+//!   local repair and an amortised rebuild threshold) **and**
+//!   [`index::VectorIndex::remove_batch`] (tombstones + flat/IVF
+//!   compaction, graph re-link) — the KV cache is a live vector store
+//!   with a full insert/delete lifecycle.
 //! * [`kvcache`] — paged KV storage with device/host tiering,
-//!   static-pattern (sink + window) selection, and the indexed/overflow
-//!   drain boundary for online maintenance.
+//!   static-pattern (sink + window) selection, the indexed/overflow drain
+//!   boundary for online maintenance, the retired tier of the eviction
+//!   policy, and the segmented dense key store
+//!   ([`kvcache::SegmentedStore`]) whose appends never recopy the
+//!   immutable prefix.
 //! * [`attention`] — full/sparse attention, the exact two-set
 //!   gamma-combine of Appendix B, and sparsity/OOD profiling.
 //! * [`baselines`] — StreamingLLM, SnapKV, InfLLM, Quest, InfiniGen and a

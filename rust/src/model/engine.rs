@@ -11,11 +11,16 @@
 //!    overflow buffer of not-yet-indexed tokens;
 //! 3. exact γ-combine of the partials (Eq. 4/5);
 //! 4. FFN/projections via the per-op artifacts, greedy sampling;
-//! 5. online index maintenance: overflow buffers past the configured
-//!    watermark are drained into the per-head ANN indexes (batched,
-//!    parallel across GQA groups), with the recent decode queries as
-//!    RoarGraph's attention-aware wiring context — decode cost stays
-//!    bounded for arbitrarily long generations.
+//! 5. online index maintenance: completed background work is applied,
+//!    then overflow buffers past the configured watermark are snapshotted
+//!    and handed to the per-session maintenance worker (recent decode
+//!    queries ride along as RoarGraph's attention-aware wiring context).
+//!    The worker grows the segmented group store (O(batch), the prefix is
+//!    never recopied) and publishes each head's index with a
+//!    double-buffered generation-counted swap — decode keeps reading the
+//!    front the whole time, and cost stays bounded for arbitrarily long
+//!    generations. The same queue tombstones evicted tokens when the
+//!    `retrieval.eviction` window retirement is enabled.
 //!
 //! Prefill streams the prompt through the B=256 artifacts, computes exact
 //! causal attention on the host (the "GPU prefill" of §3.3 — full
@@ -24,11 +29,14 @@
 //! set.
 
 use crate::attention::{attend_subset, combine, PartialAttention};
-use crate::baselines::{build_retriever, HostRetriever, RetrieverInputs};
+use crate::baselines::{build_retriever, GroupShared, HostRetriever, RetrieverInputs};
 use crate::config::{Method, ServeConfig};
-use crate::index::InsertContext;
+use crate::index::KeyStore;
 use crate::kvcache::TieredKvCache;
 use crate::metrics::{PhaseBreakdown, PhaseTimer};
+use crate::model::maintain::{
+    run_drain, run_evict, Done, DoneKind, DrainJob, EvictJob, Job, MaintenanceState,
+};
 use crate::model::weights::Weights;
 use crate::runtime::{literal_to_f32, Runtime};
 use crate::tensor::Matrix;
@@ -82,10 +90,12 @@ pub struct Session {
     pub q_history: Vec<Vec<Matrix>>,
     /// Host retrievers per (layer, q_head), built after prefill.
     pub retrievers: Vec<Vec<Arc<dyn HostRetriever>>>,
-    /// Dense host key store per (layer, kv_head): the single key copy the
-    /// group's retrievers index into (Appendix C); grown by overflow
-    /// drains.
-    pub host_stores: Vec<Vec<Arc<Matrix>>>,
+    /// Shared per-(layer, kv_head) group state: ONE segmented dense key
+    /// store and ONE dense→absolute id map per GQA group (Appendix C) —
+    /// grown by the maintenance worker on overflow drains.
+    pub groups: Vec<Vec<Arc<GroupShared>>>,
+    /// Background maintenance: worker handle, in-flight drain set, stats.
+    pub maint: MaintenanceState,
     /// Recent decode queries per (layer, q_head) (bounded ring, oldest
     /// first): the bipartite training side for attention-aware inserts.
     pub recent_q: Vec<Vec<Matrix>>,
@@ -111,8 +121,8 @@ pub struct DecodeOutput {
 }
 
 /// Retriever construction result: per-(layer, q_head) retrievers plus the
-/// per-(layer, kv_head) dense host key stores they index into.
-type RetrieverBuild = (Vec<Vec<Arc<dyn HostRetriever>>>, Vec<Vec<Arc<Matrix>>>);
+/// per-(layer, kv_head) shared group state they index into.
+type RetrieverBuild = (Vec<Vec<Arc<dyn HostRetriever>>>, Vec<Vec<Arc<GroupShared>>>);
 
 /// Append one query to a bounded ring (oldest rows evicted by periodic
 /// compaction, amortised O(1) per push).
@@ -268,14 +278,15 @@ impl Engine {
             }
         }
 
-        let (retrievers, host_stores) = self.build_retrievers(&caches, &q_history)?;
+        let (retrievers, groups) = self.build_retrievers(&caches, &q_history)?;
         let recent_q = self.empty_recent_rings();
         Ok(Session {
             method: self.cfg.method,
             caches,
             q_history,
             retrievers,
-            host_stores,
+            groups,
+            maint: MaintenanceState::new(),
             recent_q,
             x_last,
             len: n,
@@ -354,16 +365,22 @@ impl Engine {
         let cfg = self.cfg.retrieval;
         let seed = self.cfg.seed;
         let mut retrievers = Vec::with_capacity(spec.layers);
-        let mut host_stores: Vec<Vec<Arc<Matrix>>> = Vec::with_capacity(spec.layers);
+        let mut groups: Vec<Vec<Arc<GroupShared>>> = Vec::with_capacity(spec.layers);
         for layer in 0..spec.layers {
-            // Share one dense host-key copy per kv head (Appendix C).
-            let shared: Vec<(Arc<Matrix>, Arc<Vec<u32>>)> = (0..spec.kv_heads)
+            // ONE shared group state per kv head (Appendix C): the
+            // segmented dense key copy plus the dense→absolute id map —
+            // shared by every query head of the group instead of one
+            // `Vec<u32>` per head.
+            let shared: Vec<Arc<GroupShared>> = (0..spec.kv_heads)
                 .map(|kvh| {
                     let cache = &caches[layer][kvh];
-                    (Arc::new(cache.indexed_keys_matrix()), Arc::new(cache.indexed_ids()))
+                    GroupShared::new(
+                        KeyStore::from_matrix(cache.indexed_keys_matrix()),
+                        cache.indexed_ids(),
+                    )
                 })
                 .collect();
-            host_stores.push(shared.iter().map(|(k, _)| k.clone()).collect());
+            groups.push(shared.clone());
             // Per-query-head retrievers build in parallel (index
             // construction is the expensive part).
             let heads: Vec<usize> = (0..spec.q_heads).collect();
@@ -376,8 +393,8 @@ impl Engine {
                 q_history[layer].iter().map(|qh| qh.subsample_strided(MAX_TRAIN_Q)).collect();
             let built: Vec<Arc<dyn HostRetriever>> = parallel::par_map(&heads, |&h| {
                 let kvh = h / group;
-                let (keys, ids) = &shared[kvh];
-                if keys.rows() == 0 {
+                let g = &shared[kvh];
+                if g.keys().rows() == 0 {
                     // Prompt fits entirely in the device static pattern:
                     // nothing is offloaded *yet*. Index methods fall back
                     // to an empty Flat index (it tolerates zero rows and
@@ -396,8 +413,7 @@ impl Engine {
                         _ => Method::StreamingLlm,
                     };
                     return Arc::from(build_retriever(fb, RetrieverInputs {
-                        host_keys: keys.clone(),
-                        host_ids: ids.clone(),
+                        group: g.clone(),
                         prefill_queries: &subsampled[h],
                         scale,
                         cfg: &cfg,
@@ -405,8 +421,7 @@ impl Engine {
                     })) as Arc<dyn HostRetriever>;
                 }
                 let inp = RetrieverInputs {
-                    host_keys: keys.clone(),
-                    host_ids: ids.clone(),
+                    group: g.clone(),
                     prefill_queries: &subsampled[h],
                     scale,
                     cfg: &cfg,
@@ -416,7 +431,7 @@ impl Engine {
             });
             retrievers.push(built);
         }
-        Ok((retrievers, host_stores))
+        Ok((retrievers, groups))
     }
 
     /// One decode step (Algorithm 1). Feeds `token`, returns the next.
@@ -493,10 +508,19 @@ impl Engine {
                 let qv = &q[h * dh..(h + 1) * dh];
                 let mut ids = retrieved[h].ids.clone();
                 // The overflow buffer (window slid past it, not yet in the
-                // index) is attended exactly; the post-step maintenance
+                // index) is attended exactly; the maintenance worker
                 // drains it into the index on a watermark, so it stays
                 // bounded no matter how long the generation runs.
                 ids.extend(cache.overflow_ids());
+                // Dedup: the worker's index swap can land mid-window, so a
+                // freshly drained token may surface both from retrieval
+                // and from the not-yet-advanced overflow scan — attending
+                // it twice would double its softmax weight. Retired
+                // (evicted) tokens are dropped here synchronously; their
+                // index tombstone is async reclamation.
+                ids.sort_unstable();
+                ids.dedup();
+                ids.retain(|&id| !cache.is_retired(id as usize));
                 attend_subset(qv, cache.keys(), cache.values(), &ids, scale)
             });
             for h in 0..spec.q_heads {
@@ -542,135 +566,175 @@ impl Engine {
         Ok(DecodeOutput { token: next, breakdown: bd })
     }
 
-    /// Drain every (layer, kv-head) overflow buffer that reached the
-    /// configured watermark into the group's retrievers. Each group's
-    /// drain: copy the overflow key rows onto the shared dense store (one
-    /// new `Arc` per group, preserving Appendix C's single-copy layout),
-    /// insert into every query head's index with the head's recent decode
-    /// queries as wiring context, then advance the cache's indexed
-    /// boundary so the brute-force overflow scan drops those tokens.
+    /// Online maintenance: apply completed background work, then enqueue
+    /// (or, with `async_worker` off, run inline) one job per (layer,
+    /// kv-head) group that needs it:
+    ///
+    /// * **Drain** — overflow past the watermark is snapshotted (key rows
+    ///   + absolute ids + per-head recent queries) and handed to the
+    ///   worker, which grows the group's shared segmented store/id map
+    ///   and double-buffer-swaps every head's index. The cache's indexed
+    ///   boundary advances only when the completion is applied, so the
+    ///   overflow scan keeps covering the batch until the index provably
+    ///   does (the decode-path dedup prevents double attention in the
+    ///   swap-to-completion window).
+    /// * **Evict** — once a group's live indexed tier exceeds
+    ///   `eviction.max_indexed`, the oldest tokens are retired from
+    ///   attention synchronously and tombstoned in the indexes
+    ///   asynchronously (StreamingLLM-style window retirement over host
+    ///   memory).
     fn maintain_indexes(&self, sess: &mut Session) {
         let mcfg = self.cfg.retrieval.maintenance;
-        // `drain_watermark == 0` disables *index* maintenance. StreamingLLM
-        // sessions still drop their overflow every step: that is the
-        // method's semantics (sink + window only), and it must not change
-        // with a performance knob.
-        if !mcfg.enabled() && sess.method != Method::StreamingLlm {
-            return;
-        }
+        let ecfg = self.cfg.retrieval.eviction;
         let spec = self.spec();
         let group = spec.group_size();
         // Guard on the SESSION's method, not the engine's: a session built
         // for a different method must not inherit StreamingLLM's
         // token-discard drain semantics.
         let method = sess.method;
-        let mut work: Vec<(usize, usize)> = Vec::new();
+        let streaming = method == Method::StreamingLlm;
+
+        sess.apply_completions();
+
+        // `drain_watermark == 0` disables *index* maintenance. StreamingLLM
+        // sessions still drop their overflow every step: that is the
+        // method's semantics (sink + window only), and it must not change
+        // with a performance knob.
+        if (!mcfg.enabled() && !streaming && !ecfg.enabled()) || sess.retrievers.is_empty() {
+            return;
+        }
+
         for layer in 0..spec.layers {
             for kvh in 0..spec.kv_heads {
+                if sess.maint.inflight.contains(&(layer, kvh)) {
+                    continue;
+                }
                 // Length-only check on the per-token path; the id list is
                 // materialised only for groups that actually drain.
                 let over_len = sess.caches[layer][kvh].overflow_len();
-                if over_len == 0 {
-                    continue;
+                if over_len > 0 {
+                    // Every head of the group must accept inserts; a
+                    // discarding retriever (StreamingLLM semantics,
+                    // including the empty-host-set fallback a static
+                    // baseline degrades to) may only swallow tokens when
+                    // StreamingLLM is the session's method — other methods
+                    // keep their exact overflow scan instead.
+                    let ok = (0..group).all(|g| {
+                        let r = &sess.retrievers[layer][kvh * group + g];
+                        r.supports_insert() && (streaming || !r.discards_inserts())
+                    });
+                    let all_discard = ok
+                        && (0..group)
+                            .all(|g| sess.retrievers[layer][kvh * group + g].discards_inserts());
+                    if ok && all_discard {
+                        // Discarding groups drop tokens the moment they
+                        // leave the window: pure StreamingLLM semantics,
+                        // watermark-free and synchronous (no index work).
+                        sess.caches[layer][kvh].advance_indexed(usize::MAX);
+                        sess.drained_tokens += over_len as u64;
+                        sess.drains += 1;
+                    } else if ok && mcfg.enabled() && over_len >= mcfg.drain_watermark {
+                        if let Some(job) = self.snapshot_drain(sess, layer, kvh, group) {
+                            if mcfg.async_worker {
+                                sess.maint.inflight.insert((layer, kvh));
+                                sess.maint.submit(Job::Drain(job));
+                            } else {
+                                let done = run_drain(&job);
+                                sess.apply_done(&done);
+                            }
+                        }
+                    }
                 }
-                // Every head of the group must accept inserts; a
-                // discarding retriever (StreamingLLM semantics, including
-                // the empty-host-set fallback a static baseline degrades
-                // to) may only swallow tokens when StreamingLLM is the
-                // session's method — other methods keep their exact
-                // overflow scan instead.
-                let ok = (0..group).all(|g| {
-                    let r = &sess.retrievers[layer][kvh * group + g];
-                    r.supports_insert()
-                        && (method == Method::StreamingLlm || !r.discards_inserts())
-                });
-                if !ok {
-                    continue;
-                }
-                // Discarding groups drop tokens the moment they leave the
-                // window: pure StreamingLLM semantics, independent of the
-                // maintenance watermark. Indexing groups batch up to the
-                // watermark to amortise insert cost.
-                let all_discard = (0..group)
-                    .all(|g| sess.retrievers[layer][kvh * group + g].discards_inserts());
-                if all_discard {
-                    // Method semantics (drop immediately), watermark-free.
-                    work.push((layer, kvh));
-                } else if mcfg.enabled() && over_len >= mcfg.drain_watermark {
-                    work.push((layer, kvh));
+                // StreamingLLM-style window retirement over the indexed
+                // tier: retire the oldest tokens from attention now,
+                // tombstone them in the indexes on the worker.
+                if ecfg.enabled() {
+                    let live = sess.caches[layer][kvh].indexed_len();
+                    let removable = live > ecfg.max_indexed
+                        && (0..group)
+                            .all(|g| sess.retrievers[layer][kvh * group + g].supports_remove());
+                    if removable {
+                        let n = live - ecfg.max_indexed;
+                        let ids = sess.caches[layer][kvh].retire_oldest_indexed(n);
+                        if !ids.is_empty() {
+                            sess.maint.stats.evicted_tokens += ids.len() as u64;
+                            let heads: Vec<Arc<dyn HostRetriever>> = (0..group)
+                                .map(|g| sess.retrievers[layer][kvh * group + g].clone())
+                                .collect();
+                            let job = EvictJob {
+                                layer,
+                                kvh,
+                                ids,
+                                heads,
+                                group: sess.groups[layer][kvh].clone(),
+                            };
+                            if mcfg.async_worker {
+                                sess.maint.submit(Job::Evict(job));
+                            } else {
+                                let done = run_evict(&job);
+                                sess.apply_done(&done);
+                            }
+                        }
+                    }
                 }
             }
         }
-        if work.is_empty() {
-            return;
-        }
-        let caches = &sess.caches;
-        let retrievers = &sess.retrievers;
-        let host_stores = &sess.host_stores;
-        let recent_q = &sess.recent_q;
-        // Per drained group: (layer, kvh, grown store if it was extended,
-        // new indexed boundary, tokens drained).
-        let results: Vec<Option<(usize, usize, Option<Arc<Matrix>>, usize, u64)>> =
-            parallel::par_map(&work, |&(layer, kvh)| {
-                let cache = &caches[layer][kvh];
-                let over = cache.overflow_ids();
-                let upto = over.last().map(|&x| x as usize + 1)?;
-                // A group of discarding retrievers (StreamingLLM) reads
-                // neither keys nor ids: drop the tokens without copying
-                // the store. (The cache still holds their K/V and counts
-                // them in the indexed tier, so a session forked to another
-                // method can re-index them later.)
-                if (0..group).all(|g| retrievers[layer][kvh * group + g].discards_inserts()) {
-                    return Some((layer, kvh, None, upto, over.len() as u64));
-                }
-                // Grow the group's dense store by the overflow key rows —
-                // but only when some head actually reads it (AllRetriever
-                // tracks ids alone, so Full/vLLM drains skip the copy).
-                let needs_store =
-                    (0..group).any(|g| retrievers[layer][kvh * group + g].needs_store());
-                let grown: Option<Arc<Matrix>> = if needs_store {
-                    let mut m = (*host_stores[layer][kvh]).clone();
-                    for &id in &over {
-                        m.push_row(cache.key(id as usize));
-                    }
-                    Some(Arc::new(m))
-                } else {
+    }
+
+    /// Snapshot one group's overflow batch into an owned [`DrainJob`]
+    /// (key rows, absolute ids, per-head recent-query context). Copies
+    /// only the batch — the immutable prefix of the group store is shared
+    /// segment-wise, never recopied.
+    fn snapshot_drain(
+        &self,
+        sess: &Session,
+        layer: usize,
+        kvh: usize,
+        group: usize,
+    ) -> Option<DrainJob> {
+        let mcfg = self.cfg.retrieval.maintenance;
+        let cache = &sess.caches[layer][kvh];
+        let over = cache.overflow_ids();
+        let upto = over.last().map(|&x| x as usize + 1)?;
+        let heads: Vec<Arc<dyn HostRetriever>> =
+            (0..group).map(|g| sess.retrievers[layer][kvh * group + g].clone()).collect();
+        // Grow the group's dense store by the overflow key rows — but only
+        // when some head actually reads it (AllRetriever tracks ids alone,
+        // so Full/vLLM drains skip the copy).
+        let grow_store = heads.iter().any(|r| r.needs_store());
+        let rows = if grow_store {
+            let mut m = Matrix::zeros(0, cache.dim());
+            for &id in &over {
+                m.push_row(cache.key(id as usize));
+            }
+            m
+        } else {
+            Matrix::zeros(0, cache.dim())
+        };
+        // The ring is compacted lazily (up to 2x cap between compactions);
+        // enforce the configured budget exactly at the point where each
+        // query costs a graph search.
+        let queries: Vec<Option<Matrix>> = (0..group)
+            .map(|g| {
+                let ring = &sess.recent_q[layer][kvh * group + g];
+                if mcfg.recent_queries == 0 || ring.rows() == 0 {
                     None
-                };
-                let store_ref = grown.as_ref().unwrap_or(&host_stores[layer][kvh]);
-                for g in 0..group {
-                    let h = kvh * group + g;
-                    // The ring is compacted lazily (up to 2x cap between
-                    // compactions); enforce the configured budget exactly
-                    // at the point where each query costs a graph search.
-                    let recent = recent_q[layer][h].keep_last_rows(mcfg.recent_queries);
-                    let ctx = InsertContext { recent_queries: Some(&recent) };
-                    let ok = retrievers[layer][h].insert_batch(store_ref, &over, &ctx);
-                    if g == 0 && !ok {
-                        // First head refused (store out of sync): nothing
-                        // has been mutated yet, so skip the whole group and
-                        // retry on a later step.
-                        return None;
-                    }
-                    // Heads of one group share the store, the id stream and
-                    // the index family, so a later head cannot diverge from
-                    // head 0. If it somehow did, committing is still the
-                    // safe direction: that head merely misses the new keys,
-                    // whereas aborting here would double-attend them (the
-                    // succeeded heads' id maps already grew) and wedge the
-                    // group's store-sync check forever.
-                    debug_assert!(ok, "GQA group diverged during drain (layer {layer} head {h})");
+                } else {
+                    Some(ring.keep_last_rows(mcfg.recent_queries))
                 }
-                Some((layer, kvh, grown, upto, over.len() as u64))
-            });
-        for (layer, kvh, grown, upto, count) in results.into_iter().flatten() {
-            if let Some(grown) = grown {
-                sess.host_stores[layer][kvh] = grown;
-            }
-            sess.caches[layer][kvh].advance_indexed(upto);
-            sess.drained_tokens += count;
-            sess.drains += 1;
-        }
+            })
+            .collect();
+        Some(DrainJob {
+            layer,
+            kvh,
+            rows,
+            ids: over,
+            upto,
+            grow_store,
+            heads,
+            queries,
+            group: sess.groups[layer][kvh].clone(),
+        })
     }
 
     /// Device-side partial attention over the static set via the
@@ -716,7 +780,9 @@ impl Engine {
     /// Generate `max_tokens` greedily from a freshly prefilled session:
     /// the first token comes from the prompt's last hidden state, each
     /// subsequent one from a decode step. Returns the tokens and the
-    /// summed decode phase breakdown.
+    /// summed decode phase breakdown. Pending background maintenance is
+    /// flushed before returning, so the session's boundaries and counters
+    /// are quiescent for the caller.
     pub fn generate(
         &self,
         sess: &mut Session,
@@ -732,6 +798,13 @@ impl Engine {
             tokens.push(out.token);
             cur = out.token;
         }
+        // Quiesce: apply in-flight completions, run one more maintenance
+        // pass for groups whose drain was skipped while in flight, and
+        // apply that too — post-generate overflow is strictly below the
+        // watermark regardless of worker scheduling.
+        sess.flush_maintenance();
+        self.maintain_indexes(sess);
+        sess.flush_maintenance();
         Ok((tokens, total))
     }
 }
@@ -755,7 +828,8 @@ impl Session {
             caches: self.caches.clone(),
             q_history: self.q_history.clone(),
             retrievers: Vec::new(),
-            host_stores: Vec::new(),
+            groups: Vec::new(),
+            maint: MaintenanceState::new(),
             recent_q: self.recent_q.clone(),
             x_last: self.x_last.clone(),
             len: self.len,
@@ -765,6 +839,100 @@ impl Session {
             drains: 0,
         }
     }
+
+    /// Snapshot of a group's shared dense key store.
+    pub fn host_store(&self, layer: usize, kvh: usize) -> crate::index::KeyStore {
+        self.groups[layer][kvh].keys()
+    }
+
+    /// Apply one maintenance completion: drains advance the cache's
+    /// indexed boundary (dropping those tokens from the overflow scan)
+    /// and bump the drain counters; evictions only feed the stats (the
+    /// retire boundary moved synchronously at enqueue time).
+    pub fn apply_done(&mut self, d: &Done) {
+        self.maint.stats.swaps += 1;
+        self.maint.stats.swap_s_total += d.swap_s;
+        match d.kind {
+            DoneKind::Drained { upto, count } => {
+                // Only a drain completion may clear the group's in-flight
+                // marker: evictions never set it, and clearing it early
+                // would let a second overlapping drain re-snapshot the
+                // same overflow while the first is still executing.
+                self.maint.inflight.remove(&(d.layer, d.kvh));
+                if d.ok {
+                    self.caches[d.layer][d.kvh].advance_indexed(upto);
+                    self.drained_tokens += count;
+                    self.drains += 1;
+                }
+            }
+            DoneKind::Evicted { .. } => {}
+        }
+    }
+
+    /// Non-blocking: apply whatever the worker has finished so far.
+    pub fn apply_completions(&mut self) {
+        let dones = self.maint.poll();
+        for d in dones {
+            self.apply_done(&d);
+        }
+    }
+
+    /// Block until the worker queue is empty and apply every completion.
+    pub fn flush_maintenance(&mut self) {
+        let dones = self.maint.flush();
+        for d in dones {
+            self.apply_done(&d);
+        }
+    }
+
+    /// Flush, stop the worker thread, and apply the final completions.
+    /// The concurrency suite uses this to assert exact reconciliation:
+    /// after shutdown, drain counters equal the advanced boundaries and
+    /// every head's index length matches its cache's indexed tier.
+    pub fn shutdown_maintenance(&mut self) {
+        let dones = self.maint.shutdown();
+        for d in dones {
+            self.apply_done(&d);
+        }
+    }
+
+    /// Tombstoned fraction across every head's index (0.0 when nothing
+    /// is indexed — baselines without an index report no tombstones).
+    pub fn tombstone_ratio(&self) -> f64 {
+        let (mut dead, mut total) = (0usize, 0usize);
+        for layer in &self.retrievers {
+            for r in layer {
+                if let Some(live) = r.indexed_len() {
+                    dead += r.tombstones();
+                    total += live + r.tombstones();
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            dead as f64 / total as f64
+        }
+    }
+
+    /// Heap bytes of the host retrieval state: per-head index structures
+    /// plus the group-shared id maps and key stores (f32 payload + chunk
+    /// table) counted ONCE per GQA group — the Appendix C accounting the
+    /// memory regression test locks in.
+    pub fn index_memory_bytes(&self) -> usize {
+        let mut total = 0usize;
+        for layer in &self.retrievers {
+            for r in layer {
+                total += r.memory_bytes();
+            }
+        }
+        for layer in &self.groups {
+            for g in layer {
+                total += g.map_bytes() + g.store_bytes();
+            }
+        }
+        total
+    }
 }
 
 impl Engine {
@@ -773,12 +941,83 @@ impl Engine {
     /// expensive prefill across methods in the accuracy experiments.
     pub fn session_for_method(&self, base: &Session, method: Method) -> Result<Session> {
         let mut sess = base.fork_state();
-        let (retrievers, host_stores) =
+        let (retrievers, groups) =
             self.build_retrievers_with(&sess.caches, &sess.q_history, method)?;
         sess.method = method;
         sess.retrievers = retrievers;
-        sess.host_stores = host_stores;
+        sess.groups = groups;
         Ok(sess)
+    }
+
+    /// Fork a live session into an independent continuation: the KV state
+    /// is cloned and fresh retrievers/indexes are built over its indexed
+    /// tier (shared mutable index state across sessions would let one
+    /// fork's drains corrupt the other's dense-id mapping). Pending
+    /// maintenance on the base is flushed first so the fork can't lose
+    /// in-flight drains.
+    pub fn fork_session(&self, base: &mut Session) -> Result<Session> {
+        base.flush_maintenance();
+        let mut sess = base.fork_state();
+        let (retrievers, groups) =
+            self.build_retrievers_with(&sess.caches, &sess.q_history, base.method)?;
+        sess.retrievers = retrievers;
+        sess.groups = groups;
+        Ok(sess)
+    }
+
+    /// Truncate a session to its first `new_len` tokens (chat rollback /
+    /// regenerate-from-here). The dropped ids are tombstoned in every
+    /// head's index through the deletion path when the method supports
+    /// removal; otherwise the retrievers are rebuilt from the truncated
+    /// caches. The caller resumes decoding by feeding the token that
+    /// should now follow position `new_len - 1`.
+    pub fn truncate_session(&self, sess: &mut Session, new_len: usize) -> Result<()> {
+        anyhow::ensure!(new_len > 0, "cannot truncate to zero tokens");
+        anyhow::ensure!(new_len <= sess.len, "truncate beyond current length");
+        sess.flush_maintenance();
+        let spec = self.spec();
+        let group = spec.group_size();
+        let removable = sess
+            .retrievers
+            .iter()
+            .all(|layer| layer.iter().all(|r| r.supports_remove()));
+        for layer in 0..spec.layers {
+            for kvh in 0..spec.kv_heads {
+                let old_len = sess.caches[layer][kvh].len();
+                sess.caches[layer][kvh].truncate(new_len);
+                // Tombstone everything from the *post-truncate* indexed
+                // boundary up: that covers the dropped suffix AND any
+                // surviving tokens the shorter sequence pulls back inside
+                // the device window — leaving those in the index would
+                // double-attend them (device + retrieval).
+                let lo = sess.caches[layer][kvh].indexed_end();
+                if removable && lo < old_len {
+                    let dropped: Vec<u32> = (lo as u32..old_len as u32).collect();
+                    // One absolute→dense resolution per group (not per head).
+                    let dense = sess.groups[layer][kvh].dense_ids_for(&dropped);
+                    for g in 0..group {
+                        let r = &sess.retrievers[layer][kvh * group + g];
+                        let ok = r.remove_dense(&dense);
+                        debug_assert!(ok, "removal-capable retriever refused truncation");
+                    }
+                }
+            }
+        }
+        if !removable {
+            let (retrievers, groups) =
+                self.build_retrievers_with(&sess.caches, &sess.q_history, sess.method)?;
+            sess.retrievers = retrievers;
+            sess.groups = groups;
+        }
+        for layer in 0..spec.layers {
+            for h in 0..spec.q_heads {
+                sess.q_history[layer][h].truncate_rows(new_len);
+                // The recent-query ring may reflect dropped positions.
+                sess.recent_q[layer][h] = Matrix::zeros(0, spec.head_dim);
+            }
+        }
+        sess.len = new_len;
+        Ok(())
     }
 
     /// Construct a decode-ready session directly from synthetic per-head
@@ -815,14 +1054,15 @@ impl Engine {
             caches.push(layer_caches);
             q_history.push(layer_hist);
         }
-        let (retrievers, host_stores) = self.build_retrievers_with(&caches, &q_history, method)?;
+        let (retrievers, groups) = self.build_retrievers_with(&caches, &q_history, method)?;
         let recent_q = self.empty_recent_rings();
         Ok(Session {
             method,
             caches,
             q_history,
             retrievers,
-            host_stores,
+            groups,
+            maint: MaintenanceState::new(),
             recent_q,
             x_last: vec![0.0; self.spec().d_model],
             len,

@@ -1,0 +1,408 @@
+//! The background index-maintenance worker.
+//!
+//! PR 1 ran the overflow→index drain as an end-of-step parallel fan-out —
+//! off the attention path but still inside the token step, so a slow
+//! graph insert stretched that token's latency. This module moves the
+//! whole drain **off-thread**: the engine snapshots the overflow batch
+//! (key rows + absolute ids + per-head recent queries), enqueues a
+//! [`DrainJob`], and keeps decoding. The worker grows the group's shared
+//! segmented store and id map, inserts into every query head's *back*
+//! index buffer, and publishes each with a generation-counted swap
+//! (`baselines::IndexRetriever`); decode reads the front the whole time.
+//! Completions flow back over a channel and the engine applies them at
+//! the start of the next maintenance phase (advancing the cache's
+//! indexed boundary so the brute-force overflow scan drops those tokens).
+//!
+//! Eviction ([`EvictJob`]) rides the same queue: retired token ids are
+//! tombstoned in every head's index. The engine retires the ids from the
+//! attention set *synchronously* (a boundary bump) so correctness never
+//! waits on the worker — the index tombstone is just reclamation.
+//!
+//! One worker thread per session keeps the design deadlock-free by
+//! construction: the decode thread never blocks on the worker (completions
+//! are polled), and the worker only blocks reclaiming a back buffer whose
+//! readers are short-lived searches. Jobs for one group are serialized by
+//! the engine's in-flight set, so the store-sync contract of
+//! `insert_batch` can never be violated mid-queue.
+
+use crate::baselines::{GroupShared, HostRetriever};
+use crate::index::InsertContext;
+use crate::tensor::Matrix;
+use crate::util::parallel;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One group's overflow batch, snapshotted by the engine.
+pub struct DrainJob {
+    pub layer: usize,
+    pub kvh: usize,
+    /// Overflow key rows (empty when no head reads the store).
+    pub rows: Matrix,
+    /// Absolute token ids of the batch (ascending).
+    pub ids: Vec<u32>,
+    /// New indexed boundary to report back (one past the last drained id).
+    pub upto: usize,
+    /// Whether any head actually reads the grown store.
+    pub grow_store: bool,
+    /// Every query head of the group (insert fan-out).
+    pub heads: Vec<Arc<dyn HostRetriever>>,
+    /// Per-head recent decode queries (RoarGraph's attention-aware wiring
+    /// context), already capped to the configured budget.
+    pub queries: Vec<Option<Matrix>>,
+    pub group: Arc<GroupShared>,
+}
+
+/// Tombstone a batch of retired absolute ids in every head of a group.
+pub struct EvictJob {
+    pub layer: usize,
+    pub kvh: usize,
+    pub ids: Vec<u32>,
+    pub heads: Vec<Arc<dyn HostRetriever>>,
+    /// The group state: absolute→dense resolution runs ONCE here for the
+    /// whole group, not once per query head.
+    pub group: Arc<GroupShared>,
+}
+
+pub enum Job {
+    Drain(DrainJob),
+    Evict(EvictJob),
+    /// Replies once every job enqueued before it has executed (flush).
+    Barrier(Sender<()>),
+}
+
+#[derive(Clone, Copy, Debug)]
+pub enum DoneKind {
+    Drained { upto: usize, count: u64 },
+    Evicted { count: u64 },
+}
+
+/// A completed job, reported back to the session.
+#[derive(Clone, Copy, Debug)]
+pub struct Done {
+    pub layer: usize,
+    pub kvh: usize,
+    pub kind: DoneKind,
+    /// Wall-clock from job start to the last head's buffer swap.
+    pub swap_s: f64,
+    pub ok: bool,
+}
+
+/// Execute one drain (shared by the worker thread and the synchronous
+/// `async_worker = false` path).
+pub fn run_drain(j: &DrainJob) -> Done {
+    let t = Instant::now();
+    let count = j.ids.len() as u64;
+    // Pre-validate BEFORE publishing anything: the first indexed head's
+    // dense slot count (live + tombstoned) must match the group map, or
+    // the insert contract would be violated. Refusing here mutates
+    // nothing, so the engine simply retries on a later step — the PR-1
+    // "first head refused ⇒ nothing mutated yet, skip the group" drain
+    // invariant, preserved across the move off-thread. (Unreachable with
+    // per-group job serialization; this is graceful degradation, so no
+    // assert — a panic here would kill the worker on the one path that is
+    // explicitly documented as retryable.)
+    let map_len = j.group.id_map().len();
+    let first_in_sync = j
+        .heads
+        .first()
+        .map(|h| h.indexed_len().map(|live| live + h.tombstones() == map_len).unwrap_or(true))
+        .unwrap_or(true);
+    if !first_in_sync {
+        return Done {
+            layer: j.layer,
+            kvh: j.kvh,
+            kind: DoneKind::Drained { upto: j.upto, count },
+            swap_s: t.elapsed().as_secs_f64(),
+            ok: false,
+        };
+    }
+    // Publish the id map first, then the grown store, then the per-head
+    // index fronts: a decode reader that observes a swapped index always
+    // finds every dense id mapped (snapshot order is the reverse).
+    let store = j.group.extend(j.rows.clone(), &j.ids, j.grow_store);
+    let heads: Vec<usize> = (0..j.heads.len()).collect();
+    let oks: Vec<bool> = parallel::par_map(&heads, |&h| {
+        let ctx = InsertContext { recent_queries: j.queries[h].as_ref() };
+        j.heads[h].insert_batch(&store, &j.ids, &ctx)
+    });
+    // Heads of one group share the store, the id stream and the index
+    // family, so a later head cannot diverge from head 0. If one somehow
+    // did, committing is still the safe direction (PR-1 semantics): that
+    // head merely misses the new keys, whereas refusing after the publish
+    // above would wedge the group's store-sync check forever.
+    let ok = oks.first().copied().unwrap_or(true);
+    debug_assert!(
+        oks.iter().all(|&o| o),
+        "GQA group diverged during drain (layer {} kvh {})",
+        j.layer,
+        j.kvh
+    );
+    Done {
+        layer: j.layer,
+        kvh: j.kvh,
+        kind: DoneKind::Drained { upto: j.upto, count },
+        swap_s: t.elapsed().as_secs_f64(),
+        ok,
+    }
+}
+
+/// Execute one eviction (tombstone fan-out across the group's heads).
+pub fn run_evict(j: &EvictJob) -> Done {
+    let t = Instant::now();
+    let count = j.ids.len() as u64;
+    // One reverse-map pass per group; heads get pre-resolved dense slots.
+    let dense = j.group.dense_ids_for(&j.ids);
+    let heads: Vec<usize> = (0..j.heads.len()).collect();
+    let oks: Vec<bool> = parallel::par_map(&heads, |&h| j.heads[h].remove_dense(&dense));
+    let ok = oks.iter().all(|&o| o);
+    Done {
+        layer: j.layer,
+        kvh: j.kvh,
+        kind: DoneKind::Evicted { count },
+        swap_s: t.elapsed().as_secs_f64(),
+        ok,
+    }
+}
+
+fn run_job(job: &Job) -> Option<Done> {
+    match job {
+        Job::Drain(j) => Some(run_drain(j)),
+        Job::Evict(j) => Some(run_evict(j)),
+        Job::Barrier(tx) => {
+            let _ = tx.send(());
+            None
+        }
+    }
+}
+
+/// Handle to one session's maintenance thread.
+struct WorkerHandle {
+    tx: Option<Sender<Job>>,
+    done_rx: Receiver<Done>,
+    depth: Arc<AtomicUsize>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    fn spawn() -> WorkerHandle {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (done_tx, done_rx) = mpsc::channel::<Done>();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let depth_w = depth.clone();
+        let handle = std::thread::Builder::new()
+            .name("kv-maintenance".into())
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    let done = run_job(&job);
+                    depth_w.fetch_sub(1, Ordering::SeqCst);
+                    if let Some(done) = done {
+                        if done_tx.send(done).is_err() {
+                            return;
+                        }
+                    }
+                }
+            })
+            .expect("spawn maintenance worker");
+        WorkerHandle { tx: Some(tx), done_rx, depth, handle: Some(handle) }
+    }
+
+    fn submit(&self, job: Job) {
+        if let Some(tx) = &self.tx {
+            self.depth.fetch_add(1, Ordering::SeqCst);
+            if tx.send(job).is_err() {
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
+    /// Non-blocking: completions reported so far.
+    fn poll(&self) -> Vec<Done> {
+        let mut out = Vec::new();
+        while let Ok(d) = self.done_rx.try_recv() {
+            out.push(d);
+        }
+        out
+    }
+
+    /// Block until every previously-enqueued job has executed, then
+    /// collect all completions (FIFO ordering makes the barrier exact).
+    fn flush(&self) -> Vec<Done> {
+        let (btx, brx) = mpsc::channel();
+        self.submit(Job::Barrier(btx));
+        let _ = brx.recv();
+        self.poll()
+    }
+
+    /// Flush, stop the thread, and return any final completions.
+    fn shutdown(&mut self) -> Vec<Done> {
+        let mut out = if self.tx.is_some() { self.flush() } else { Vec::new() };
+        self.tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        while let Ok(d) = self.done_rx.try_recv() {
+            out.push(d);
+        }
+        out
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        self.tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Aggregate maintenance counters (exported through `RequestMetrics` and
+/// the server's `done` event).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MaintStats {
+    /// Completed jobs (drains + evictions).
+    pub swaps: u64,
+    /// Summed wall-clock of job execution (buffer build + swap), i.e. the
+    /// off-thread time that PR 1 used to spend on the token path.
+    pub swap_s_total: f64,
+    /// Peak worker queue depth observed at submit time.
+    pub queue_peak: usize,
+    /// Tokens retired by the eviction policy.
+    pub evicted_tokens: u64,
+}
+
+impl MaintStats {
+    pub fn mean_swap_s(&self) -> f64 {
+        if self.swaps == 0 {
+            0.0
+        } else {
+            self.swap_s_total / self.swaps as f64
+        }
+    }
+}
+
+/// Per-session maintenance state: the (lazily spawned) worker, the set of
+/// groups with an in-flight drain, and the aggregate stats.
+pub struct MaintenanceState {
+    worker: Option<WorkerHandle>,
+    pub inflight: HashSet<(usize, usize)>,
+    pub stats: MaintStats,
+}
+
+impl Default for MaintenanceState {
+    fn default() -> Self {
+        MaintenanceState::new()
+    }
+}
+
+impl MaintenanceState {
+    pub fn new() -> MaintenanceState {
+        MaintenanceState { worker: None, inflight: HashSet::new(), stats: MaintStats::default() }
+    }
+
+    /// Enqueue a job, spawning the worker on first use.
+    pub fn submit(&mut self, job: Job) {
+        if self.worker.is_none() {
+            self.worker = Some(WorkerHandle::spawn());
+        }
+        let w = self.worker.as_ref().expect("worker just spawned");
+        w.submit(job);
+        let depth = w.queue_depth();
+        if depth > self.stats.queue_peak {
+            self.stats.queue_peak = depth;
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.worker.as_ref().map(|w| w.queue_depth()).unwrap_or(0)
+    }
+
+    pub fn poll(&mut self) -> Vec<Done> {
+        self.worker.as_ref().map(|w| w.poll()).unwrap_or_default()
+    }
+
+    pub fn flush(&mut self) -> Vec<Done> {
+        self.worker.as_ref().map(|w| w.flush()).unwrap_or_default()
+    }
+
+    /// Flush + join the worker. A later `submit` spawns a fresh one.
+    pub fn shutdown(&mut self) -> Vec<Done> {
+        let out = self.worker.as_mut().map(|w| w.shutdown()).unwrap_or_default();
+        self.worker = None;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{build_retriever, RetrieverInputs};
+    use crate::config::{Method, RetrievalConfig};
+    use crate::index::KeyStore;
+    use crate::util::rng::Rng;
+
+    fn group_setup(n: usize, d: usize, seed: u64) -> (Arc<GroupShared>, Matrix) {
+        let mut rng = Rng::seed_from(seed);
+        let keys = KeyStore::from_matrix(Matrix::from_fn(n, d, |_, _| rng.normal()));
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let queries = Matrix::from_fn(32, d, |_, _| rng.normal());
+        (GroupShared::new(keys, ids), queries)
+    }
+
+    #[test]
+    fn worker_executes_drain_and_reports_done() {
+        let (group, queries) = group_setup(64, 8, 1);
+        let cfg = RetrievalConfig::default();
+        let inp = RetrieverInputs {
+            group: group.clone(),
+            prefill_queries: &queries,
+            scale: 0.35,
+            cfg: &cfg,
+            seed: 1,
+        };
+        let head: Arc<dyn HostRetriever> = Arc::from(build_retriever(Method::Flat, inp));
+        let mut state = MaintenanceState::new();
+        let mut rng = Rng::seed_from(2);
+        let rows = Matrix::from_fn(8, 8, |_, _| rng.normal());
+        let ids: Vec<u32> = (64..72).collect();
+        state.submit(Job::Drain(DrainJob {
+            layer: 0,
+            kvh: 0,
+            rows,
+            ids,
+            upto: 72,
+            grow_store: true,
+            heads: vec![head.clone()],
+            queries: vec![None],
+            group: group.clone(),
+        }));
+        let dones = state.flush();
+        assert_eq!(dones.len(), 1);
+        assert!(dones[0].ok);
+        assert!(matches!(dones[0].kind, DoneKind::Drained { upto: 72, count: 8 }));
+        assert!(dones[0].swap_s >= 0.0);
+        assert_eq!(head.index_generation(), 1);
+        assert_eq!(group.id_map().len(), 72);
+        assert_eq!(group.keys().rows(), 72);
+        // Evict through the same queue.
+        state.submit(Job::Evict(EvictJob {
+            layer: 0,
+            kvh: 0,
+            ids: vec![0, 1, 2],
+            heads: vec![head.clone()],
+            group: group.clone(),
+        }));
+        let dones = state.shutdown();
+        assert_eq!(dones.len(), 1);
+        assert!(matches!(dones[0].kind, DoneKind::Evicted { count: 3 }));
+        assert_eq!(head.tombstones(), 3);
+        assert_eq!(state.queue_depth(), 0);
+    }
+}

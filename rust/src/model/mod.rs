@@ -10,10 +10,14 @@
 //!   turning retrieval recall into measurable task accuracy;
 //! * [`engine`] — the serving engine: chunked prefill, index construction,
 //!   and the Algorithm-1 decode step (device W-attention via the Pallas
-//!   artifact, host Ω-attention via the retrieval policy, γ-combine).
+//!   artifact, host Ω-attention via the retrieval policy, γ-combine);
+//! * [`maintain`] — the background maintenance worker: overflow drains and
+//!   eviction tombstones run off the token path, publishing each head's
+//!   index with a double-buffered generation-counted swap.
 
 pub mod engine;
 pub mod induction;
+pub mod maintain;
 pub mod weights;
 
 pub use engine::{DecodeOutput, Engine, Session};

@@ -134,7 +134,12 @@ fn stream_events(
                     .set("search_share", m.breakdown.search_share())
                     .set("maintenance_share", m.breakdown.maintenance_share())
                     .set("drained_tokens", m.drained_tokens)
-                    .set("drains", m.drains);
+                    .set("drains", m.drains)
+                    .set("evicted_tokens", m.evicted_tokens)
+                    .set("maint_swaps", m.maint_swaps)
+                    .set("maint_swap_s_mean", m.maint_swap_s_mean)
+                    .set("maint_queue_peak", m.maint_queue_peak)
+                    .set("tombstone_ratio", m.tombstone_ratio);
                 writeln!(out, "{}", o.to_string())?;
                 return Ok(());
             }

@@ -116,6 +116,14 @@ impl Matrix {
         Matrix::from_fn(cap, self.cols, |r, c| self[(r * step, c)])
     }
 
+    /// Drop every row at index >= `n` in place (session truncation).
+    pub fn truncate_rows(&mut self, n: usize) {
+        if n < self.rows {
+            self.data.truncate(n * self.cols);
+            self.rows = n;
+        }
+    }
+
     /// Cap to at most `cap` rows by keeping the most recent (last) rows,
     /// used for recency-windowed query rings.
     pub fn keep_last_rows(&self, cap: usize) -> Matrix {

@@ -14,9 +14,12 @@
 //!   `benches/` targets.
 //! * [`prop`] — a small property-testing driver (randomised input sweeps
 //!   with seed reporting on failure).
+//! * [`swap`] — generation-counted `Arc` publication for the
+//!   double-buffered index swap of the online-maintenance worker.
 
 pub mod bench;
 pub mod json;
 pub mod parallel;
 pub mod prop;
 pub mod rng;
+pub mod swap;

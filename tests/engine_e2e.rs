@@ -172,8 +172,11 @@ fn online_drain_bounds_overflow_and_grows_index() {
         indexed_after > indexed_before,
         "index must grow past the prefill set ({indexed_before} -> {indexed_after})"
     );
-    // The host stores grew in lockstep with the indexed tier.
-    assert_eq!(sess.host_stores[0][0].rows(), indexed_after);
+    // The group's shared segmented store grew in lockstep with the
+    // indexed tier — and only by appending chunks, never by recopying the
+    // prefill prefix.
+    assert_eq!(sess.host_store(0, 0).rows(), indexed_after);
+    assert!(sess.host_store(0, 0).segment_count() >= 2, "drains must append segments");
 
     // Drained tokens must actually be *searchable* in the grown index, not
     // just accounted for: probe the retriever with drained keys themselves
@@ -196,4 +199,131 @@ fn online_drain_bounds_overflow_and_grows_index() {
         "drained keys not retrievable from the grown index: {hits}/{} probes hit",
         probes.len()
     );
+}
+
+#[test]
+fn streaming_eviction_bounds_index_and_unreaches_retired() {
+    // Window retirement over the indexed tier: generation past the
+    // configured budget must keep every index bounded, and retired tokens
+    // must be unreachable both from attention (tier accounting) and from
+    // retrieval (tombstoned in the index).
+    let mut cfg = ServeConfig::default();
+    cfg.model = "induction-mini".into();
+    cfg.method = Method::RetrievalAttention;
+    cfg.pattern = retrieval_attention::kvcache::StaticPattern { sink: 32, window: 128 };
+    cfg.retrieval.top_k = 32;
+    cfg.retrieval.ef = 64;
+    cfg.retrieval.maintenance.drain_watermark = 16;
+    cfg.retrieval.maintenance.recent_queries = 16;
+    cfg.retrieval.eviction.max_indexed = 256;
+    let eng = Engine::from_config(cfg).expect("engine init");
+
+    let mut rng = Rng::seed_from(123);
+    let s = tasks::passkey(&mut rng, 700, 0.3);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    // Prefill indexes 700 - 128 - 32 = 540 tokens: already past the cap.
+    assert!(sess.caches[0][0].indexed_len() > 256);
+    let _ = eng.generate(&mut sess, 40).unwrap();
+    sess.shutdown_maintenance();
+
+    assert!(sess.maint.stats.evicted_tokens > 0, "eviction never fired");
+    for (layer, caches) in sess.caches.iter().enumerate() {
+        for (kvh, cache) in caches.iter().enumerate() {
+            // The live indexed tier is bounded by the eviction budget plus
+            // at most one drain batch (a batch that lands after the last
+            // eviction check is retired on the *next* maintenance pass).
+            assert!(
+                cache.indexed_len() <= 256 + 16,
+                "layer {layer} kvh {kvh}: indexed tier {} not bounded",
+                cache.indexed_len()
+            );
+            assert!(!cache.retired_ids().is_empty(), "nothing retired at layer {layer}");
+            // Four tiers partition every token exactly once.
+            let mut all: Vec<u32> = cache.device_ids();
+            all.extend(cache.indexed_ids());
+            all.extend(cache.overflow_ids());
+            all.extend(cache.retired_ids());
+            all.sort_unstable();
+            assert_eq!(all, (0..cache.len() as u32).collect::<Vec<u32>>());
+            // Index size reconciles: live == cache's indexed tier; the
+            // tombstones account for every retired-and-drained slot.
+            let r = &sess.retrievers[layer][kvh];
+            assert_eq!(r.indexed_len(), Some(cache.indexed_len()));
+        }
+    }
+    // Retired tokens are unreachable through retrieval: probing with a
+    // retired token's own key must not return its id (the induction
+    // model's codes make self-retrieval dominant when present).
+    let cache = &sess.caches[0][0];
+    let retired = cache.retired_ids();
+    assert!(retired.len() >= 100);
+    for &id in retired.iter().step_by(37).take(8) {
+        let out = sess.retrievers[0][0].retrieve(cache.key(id as usize), 32);
+        assert!(!out.ids.contains(&id), "retired token {id} still retrievable");
+        for got in &out.ids {
+            assert!(!cache.is_retired(*got as usize), "retrieval returned retired id {got}");
+        }
+    }
+    assert!(sess.tombstone_ratio() > 0.0, "tombstone ratio must reflect eviction");
+}
+
+#[test]
+fn gqa_group_shares_one_id_map_memory_accounting() {
+    // Regression (ROADMAP PR-1 follow-up): the dense→absolute id map is
+    // shared per GQA group — llama3-mini has 8 query heads over 2 kv
+    // heads, so the map must be charged per kv head (Appendix C), not
+    // once per query head.
+    let mut cfg = ServeConfig::default();
+    cfg.model = "llama3-mini".into();
+    cfg.method = Method::Flat;
+    let eng = Engine::from_config(cfg).expect("engine init");
+    let spec = eng.spec().clone();
+    assert!(spec.q_heads > spec.kv_heads, "GQA geometry required for this regression");
+
+    let heads: Vec<Vec<retrieval_attention::workload::geometry::HeadGeometry>> = (0..spec.layers)
+        .map(|l| {
+            (0..spec.kv_heads)
+                .map(|k| {
+                    retrieval_attention::workload::geometry::generate(
+                        &retrieval_attention::workload::geometry::GeometryParams {
+                            head_dim: spec.head_dim,
+                            ..Default::default()
+                        },
+                        1024,
+                        128,
+                        (l * 13 + k) as u64,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let sess = eng.synthetic_session(heads, Method::Flat).expect("session");
+
+    // One group state per (layer, kv_head) — not per query head.
+    let group_count: usize = sess.groups.iter().map(|l| l.len()).sum();
+    assert_eq!(group_count, spec.layers * spec.kv_heads);
+    // Every group's map covers its cache's indexed tier exactly once.
+    let map_bytes: usize = sess.groups.iter().flatten().map(|g| g.map_bytes()).sum();
+    let expected_map_bytes: usize = sess
+        .caches
+        .iter()
+        .flatten()
+        .map(|c| c.indexed_len() * std::mem::size_of::<u32>())
+        .sum();
+    assert_eq!(map_bytes, expected_map_bytes, "map must be charged once per kv head");
+    // The shared key-store payload (the dominant host-RAM term) is also
+    // charged once per kv head: groups × rows × dim × 4 bytes exactly.
+    let store_bytes: usize = sess.groups.iter().flatten().map(|g| g.store_bytes()).sum();
+    let payload: usize = sess
+        .caches
+        .iter()
+        .flatten()
+        .map(|c| c.indexed_len() * spec.head_dim * 4)
+        .sum();
+    assert!(store_bytes >= payload && store_bytes < payload + 4096, "store accounting drifted");
+    // The total accounting is heads' index structures + per-GROUP shared
+    // state; with the old per-query-head maps this would have been
+    // group_size x larger on the map and store terms.
+    let head_bytes: usize = sess.retrievers.iter().flatten().map(|r| r.memory_bytes()).sum();
+    assert_eq!(sess.index_memory_bytes(), head_bytes + map_bytes + store_bytes);
 }

@@ -4,7 +4,7 @@
 use retrieval_attention::attention::{attend_subset, combine, full_attention};
 use retrieval_attention::index::{
     exact_topk, flat::FlatIndex, hnsw::{HnswIndex, HnswParams}, ivf::IvfIndex,
-    roargraph::{RoarGraph, RoarParams}, InsertContext, SearchParams, VectorIndex,
+    roargraph::{RoarGraph, RoarParams}, InsertContext, KeyStore, SearchParams, VectorIndex,
 };
 use retrieval_attention::prop_assert;
 use retrieval_attention::tensor::Matrix;
@@ -173,7 +173,10 @@ fn prop_insert_then_search_within_epsilon_of_rebuild() {
             let mut r = rng.fork(1);
             Arc::new(Matrix::from_fn(total, d, |_, _| r.normal()))
         };
-        let base = Arc::new(Matrix::from_fn(n, d, |r, c| all[(r, c)]));
+        let base = KeyStore::from_matrix(Matrix::from_fn(n, d, |r, c| all[(r, c)]));
+        // The grown store shares the base prefix segment-wise (the
+        // online-drain layout) while the rebuild sees one dense chunk.
+        let grown = base.append_rows(Matrix::from_fn(extra, d, |r, c| all[(n + r, c)]));
         // Queries from a shifted (OOD-ish) distribution: training side for
         // RoarGraph, wiring context for inserts, and the test panel.
         let mut qr = rng.fork(2);
@@ -188,7 +191,7 @@ fn prop_insert_then_search_within_epsilon_of_rebuild() {
         // recall, while benign approximate-vs-approximate noise does not.
         let params = SearchParams { ef: 256, nprobe: 16 };
 
-        let build = |which: usize, keys: Arc<Matrix>| -> Box<dyn VectorIndex> {
+        let build = |which: usize, keys: KeyStore| -> Box<dyn VectorIndex> {
             match which {
                 0 => Box::new(FlatIndex::new(keys)),
                 1 => Box::new(IvfIndex::build(keys, Some(16), 5)),
@@ -199,11 +202,11 @@ fn prop_insert_then_search_within_epsilon_of_rebuild() {
         for which in 0..4usize {
             let mut inserted = build(which, base.clone());
             prop_assert!(
-                inserted.insert_batch(all.clone(), n..total, &ctx),
+                inserted.insert_batch(grown.clone(), n..total, &ctx),
                 "index {which}: insert_batch refused"
             );
             prop_assert!(inserted.len() == total, "index {which}: wrong len after insert");
-            let rebuilt = build(which, all.clone());
+            let rebuilt = build(which, KeyStore::from_arc(all.clone()));
             let (mut rec_ins, mut rec_reb) = (0.0f32, 0.0f32);
             for qi in 0..panel.rows() {
                 let q = panel.row(qi);
@@ -217,6 +220,123 @@ fn prop_insert_then_search_within_epsilon_of_rebuild() {
                 rec_ins >= rec_reb - 0.05,
                 "{}: insert recall {rec_ins} more than 0.05 below rebuild {rec_reb}",
                 inserted.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_remove_insert_roundtrip_within_epsilon_and_no_tombstones_returned() {
+    // The deletion contract, for every index family: evicting a subset and
+    // then folding in a fresh batch must (a) never return a tombstoned id
+    // from any search, and (b) retrieve over the live set within ε of a
+    // from-scratch rebuild on exactly the live vectors.
+    check("evict+reinsert ~ rebuild", 5, |rng| {
+        let n = 128 + rng.below(96);
+        let extra = 24 + rng.below(24);
+        let d = [8usize, 16][rng.below(2)];
+        let total = n + extra;
+        let all = {
+            let mut r = rng.fork(1);
+            Arc::new(Matrix::from_fn(total, d, |_, _| r.normal()))
+        };
+        let base = KeyStore::from_matrix(Matrix::from_fn(n, d, |r, c| all[(r, c)]));
+        let grown = base.append_rows(Matrix::from_fn(extra, d, |r, c| all[(n + r, c)]));
+        // Evict ~1/6 of the base (below the rebuild ratio, so the pure
+        // tombstone + re-link path is what gets exercised).
+        let mut rr = rng.fork(3);
+        let removed: Vec<u32> =
+            rr.sample_indices(n, n / 6).into_iter().map(|i| i as u32).collect();
+        let is_removed = |id: u32| removed.contains(&id);
+        let live: Vec<u32> = (0..total as u32).filter(|&i| !is_removed(i)).collect();
+
+        let mut qr = rng.fork(2);
+        let qgen = |rows: usize, qr: &mut Rng| {
+            Matrix::from_fn(rows, d, |_, c| qr.normal() + if c == 0 { 1.5 } else { 0.0 })
+        };
+        let train = qgen(64, &mut qr);
+        let recent = qgen(16, &mut qr);
+        let panel = qgen(16, &mut qr);
+        let ctx = InsertContext { recent_queries: Some(&recent) };
+        let params = SearchParams { ef: 256, nprobe: 16 };
+
+        // Exact top-10 over the live set only.
+        let live_truth = |q: &[f32]| -> Vec<u32> {
+            let mut scored: Vec<(f32, u32)> = live
+                .iter()
+                .map(|&i| (retrieval_attention::tensor::dot(q, all.row(i as usize)), i))
+                .collect();
+            scored.sort_by(|a, b| b.0.total_cmp(&a.0));
+            scored.into_iter().take(10).map(|(_, i)| i).collect()
+        };
+
+        let build = |which: usize, keys: KeyStore, train: &Matrix| -> Box<dyn VectorIndex> {
+            match which {
+                0 => Box::new(FlatIndex::new(keys)),
+                1 => Box::new(IvfIndex::build(keys, Some(16), 5)),
+                2 => Box::new(HnswIndex::build(keys, HnswParams::default())),
+                _ => Box::new(RoarGraph::build(keys, train, RoarParams::default())),
+            }
+        };
+        // Fresh rebuild over exactly the live vectors (compacted dense
+        // ids; map back through `live` for comparison).
+        let live_matrix =
+            Matrix::from_fn(live.len(), d, |r, c| all[(live[r] as usize, c)]);
+        for which in 0..4usize {
+            let mut idx = build(which, base.clone(), &train);
+            prop_assert!(idx.supports_remove(), "index {which} must support removal");
+            prop_assert!(idx.remove_batch(&removed), "index {which}: remove refused");
+            prop_assert!(
+                idx.tombstones() == removed.len(),
+                "index {which}: tombstone count {} != {}",
+                idx.tombstones(),
+                removed.len()
+            );
+            prop_assert!(
+                idx.insert_batch(grown.clone(), n..total, &ctx),
+                "index {which}: reinsert refused"
+            );
+            prop_assert!(
+                idx.live_len() == total - removed.len(),
+                "index {which}: live length wrong after evict+reinsert"
+            );
+            let rebuilt = build(which, KeyStore::from_matrix(live_matrix.clone()), &train);
+            let (mut rec_rt, mut rec_reb) = (0.0f32, 0.0f32);
+            for qi in 0..panel.rows() {
+                let q = panel.row(qi);
+                let truth = live_truth(q);
+                let got = idx.search(q, 10, &params);
+                // (a) no tombstoned id is ever returned — by any family,
+                // under a generous beam.
+                for id in &got.ids {
+                    prop_assert!(!is_removed(*id), "{}: tombstoned id {id} returned", idx.name());
+                }
+                rec_rt += got.recall_against(&truth);
+                let reb = rebuilt.search(q, 10, &params);
+                let mapped: Vec<u32> = reb.ids.iter().map(|&c| live[c as usize]).collect();
+                let hit = mapped.iter().filter(|id| truth.contains(id)).count();
+                rec_reb += hit as f32 / truth.len().max(1) as f32;
+            }
+            rec_rt /= panel.rows() as f32;
+            rec_reb /= panel.rows() as f32;
+            // (b) ε-of-rebuild: the tombstone + re-link path must not
+            // collapse recall relative to a compacted fresh build.
+            prop_assert!(
+                rec_rt >= rec_reb - 0.1,
+                "{}: evict+reinsert recall {rec_rt} more than 0.1 below rebuild {rec_reb}",
+                idx.name()
+            );
+            // Exhaustive sweep: even asking for everything never surfaces
+            // a tombstone.
+            let sweep = idx.search(&vec![0.0f32; d], total, &SearchParams { ef: total, nprobe: 64 });
+            for id in &sweep.ids {
+                prop_assert!(!is_removed(*id), "{}: sweep returned tombstoned {id}", idx.name());
+            }
+            prop_assert!(
+                sweep.ids.len() <= total - removed.len(),
+                "{}: sweep returned more than the live set",
+                idx.name()
             );
         }
         Ok(())

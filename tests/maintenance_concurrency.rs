@@ -1,0 +1,276 @@
+//! Concurrency + reconciliation suite for the off-thread maintenance
+//! subsystem (seeded multi-thread stress in lieu of loom; run serialized
+//! in CI: `cargo test -q --test maintenance_concurrency -- --test-threads=1`
+//! under a timeout so a deadlocked worker fails fast).
+//!
+//! Invariants under test:
+//! * decode-side readers never observe a partially-swapped index: every
+//!   search runs against a complete front snapshot, every returned id is
+//!   mapped by the (at-least-as-new) group id map, and the generation
+//!   counter is monotone;
+//! * after worker shutdown, drain counts reconcile *exactly* with the
+//!   inserted ids: each head's live index size equals its cache's indexed
+//!   tier, and the session-level drained-token counter equals the summed
+//!   boundary advance.
+
+use retrieval_attention::baselines::{build_retriever, GroupShared, HostRetriever, RetrieverInputs};
+use retrieval_attention::config::{Method, RetrievalConfig, ServeConfig};
+use retrieval_attention::index::KeyStore;
+use retrieval_attention::model::Engine;
+use retrieval_attention::tensor::Matrix;
+use retrieval_attention::util::rng::Rng;
+use retrieval_attention::util::swap::Published;
+use retrieval_attention::workload::tasks;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Absolute ids are offset so a mapping bug (returning dense ids raw)
+/// cannot masquerade as a valid result.
+const ID_OFFSET: u32 = 10_000;
+
+fn build_head(
+    method: Method,
+    n: usize,
+    d: usize,
+    seed: u64,
+) -> (Arc<GroupShared>, Arc<dyn HostRetriever>) {
+    let mut rng = Rng::seed_from(seed);
+    let keys = KeyStore::from_matrix(Matrix::from_fn(n, d, |_, _| rng.normal()));
+    let ids: Vec<u32> = (0..n as u32).map(|i| i + ID_OFFSET).collect();
+    let group = GroupShared::new(keys, ids);
+    let queries = Matrix::from_fn(48, d, |_, c| rng.normal() + if c == 0 { 1.5 } else { 0.0 });
+    let cfg = RetrievalConfig::default();
+    let inp = RetrieverInputs {
+        group: group.clone(),
+        prefill_queries: &queries,
+        scale: 0.3,
+        cfg: &cfg,
+        seed,
+    };
+    let head: Arc<dyn HostRetriever> = Arc::from(build_retriever(method, inp));
+    (group, head)
+}
+
+/// Readers hammer `retrieve` while a writer drains insert batches and
+/// interleaves removals; every observation must be internally consistent.
+fn stress_method(method: Method, seed: u64) {
+    const D: usize = 8;
+    const BASE: usize = 96;
+    const BATCHES: usize = 30;
+    const BATCH: usize = 8;
+    let (group, head) = build_head(method, BASE, D, seed);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for t in 0..3u64 {
+        let head = head.clone();
+        let group = group.clone();
+        let stop = stop.clone();
+        readers.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from(seed ^ (t + 1) * 0x9E37);
+            let mut last_gen = 0u64;
+            let mut observed = 0usize;
+            while !stop.load(Ordering::Acquire) {
+                let gen = head.index_generation();
+                assert!(gen >= last_gen, "generation went backwards: {last_gen} -> {gen}");
+                last_gen = gen;
+                let q: Vec<f32> = (0..D).map(|_| rng.normal()).collect();
+                // A torn swap would surface here as an out-of-range dense
+                // id (panic on map indexing inside retrieve) or an
+                // unmapped absolute id below.
+                let out = head.retrieve(&q, 10);
+                let map = group.id_map();
+                for &id in &out.ids {
+                    assert!(id >= ID_OFFSET, "dense id leaked unmapped: {id}");
+                    assert!(
+                        map.binary_search(&id).is_ok(),
+                        "returned id {id} not in the published map"
+                    );
+                }
+                observed += 1;
+            }
+            observed
+        }));
+    }
+
+    // Writer: drain batches through the group-extend + head-insert path
+    // (the exact op order the worker uses), removing a sprinkle of older
+    // ids along the way. The final batch carries a planted dominant key so
+    // the post-stress probe is deterministic for every family.
+    let mut rng = Rng::seed_from(seed ^ 0xDEAD);
+    let mut total = BASE;
+    let mut removed = 0usize;
+    for b in 0..BATCHES {
+        let planted = b == BATCHES - 1;
+        let rows = Matrix::from_fn(BATCH, D, |r, _| {
+            if planted && r == BATCH - 1 {
+                3.0
+            } else {
+                rng.normal()
+            }
+        });
+        let ids: Vec<u32> = (total as u32..(total + BATCH) as u32).map(|i| i + ID_OFFSET).collect();
+        let store = group.extend(rows, &ids, true);
+        let ctx = retrieval_attention::index::InsertContext::none();
+        assert!(head.insert_batch(&store, &ids, &ctx), "{method:?} insert refused at batch {b}");
+        total += BATCH;
+        if b % 5 == 4 && head.supports_remove() {
+            // Remove one id from the oldest live region.
+            let victim = ID_OFFSET + (removed as u32);
+            assert!(head.remove_batch(&[victim]));
+            removed += 1;
+        }
+    }
+    stop.store(true, Ordering::Release);
+    for r in readers {
+        let observed = r.join().expect("reader panicked");
+        assert!(observed > 0, "reader made no observations");
+    }
+
+    // Reconciliation: dense slots == base + all inserted ids; tombstones
+    // == removals; the map covers every slot.
+    assert_eq!(group.id_map().len(), total);
+    assert_eq!(group.keys().rows(), total);
+    if head.supports_remove() {
+        assert_eq!(head.tombstones(), removed);
+        assert_eq!(head.indexed_len(), Some(total - removed));
+    } else {
+        assert_eq!(head.indexed_len(), Some(total));
+    }
+    // One generation bump per applied op (inserts + removes), never more.
+    let ops = BATCHES as u64 + if head.supports_remove() { removed as u64 } else { 0 };
+    assert_eq!(head.index_generation(), ops, "{method:?}: swap count mismatch");
+    // The planted dominant key (last row of the final batch) is searchable
+    // under its absolute id: its self-inner-product (3.0² × d) towers over
+    // every random key, so any correctly-wired family must surface it.
+    let probe_dense = total - 1;
+    let q = group.keys().row(probe_dense).to_vec();
+    let out = head.retrieve(&q, 16);
+    assert!(
+        out.ids.contains(&(probe_dense as u32 + ID_OFFSET)),
+        "{method:?}: inserted key unreachable after stress"
+    );
+}
+
+#[test]
+fn flat_swap_never_partial_under_stress() {
+    stress_method(Method::Flat, 0xF1A7);
+}
+
+#[test]
+fn ivf_swap_never_partial_under_stress() {
+    stress_method(Method::Ivf, 0x1BF5);
+}
+
+#[test]
+fn hnsw_swap_never_partial_under_stress() {
+    stress_method(Method::Hnsw, 0x45CA);
+}
+
+#[test]
+fn roargraph_swap_never_partial_under_stress() {
+    stress_method(Method::RetrievalAttention, 0x0A27);
+}
+
+#[test]
+fn published_generation_pairs_with_snapshot_under_contention() {
+    // Writer publishes vectors stamped with their generation; readers must
+    // never see a vector whose stamp disagrees with itself (torn state) or
+    // a (generation, snapshot) pair where the snapshot is older than the
+    // generation claims.
+    let p = Arc::new(Published::new(vec![0u64; 32]));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for _ in 0..4 {
+        let p = p.clone();
+        let stop = stop.clone();
+        readers.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                let (gen, snap) = p.load_with_generation();
+                let stamp = snap[0];
+                assert!(snap.iter().all(|&v| v == stamp), "torn snapshot");
+                assert!(stamp == gen, "snapshot stamp {stamp} != generation {gen}");
+            }
+        }));
+    }
+    for g in 1..=2000u64 {
+        p.publish(Arc::new(vec![g; 32]));
+    }
+    stop.store(true, Ordering::Release);
+    for r in readers {
+        r.join().expect("reader panicked");
+    }
+}
+
+fn concurrency_engine(watermark: usize) -> Engine {
+    let mut cfg = ServeConfig::default();
+    cfg.model = "induction-mini".into();
+    cfg.method = Method::RetrievalAttention;
+    cfg.pattern = retrieval_attention::kvcache::StaticPattern { sink: 32, window: 128 };
+    cfg.retrieval.top_k = 32;
+    cfg.retrieval.ef = 64;
+    cfg.retrieval.maintenance.drain_watermark = watermark;
+    cfg.retrieval.maintenance.recent_queries = 16;
+    cfg.retrieval.maintenance.async_worker = true;
+    Engine::from_config(cfg).expect("engine init")
+}
+
+#[test]
+fn engine_worker_drains_reconcile_exactly_after_shutdown() {
+    let eng = concurrency_engine(8);
+    let mut rng = Rng::seed_from(99);
+    let s = tasks::passkey(&mut rng, 500, 0.4);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    let before: Vec<Vec<usize>> = sess
+        .caches
+        .iter()
+        .map(|layer| layer.iter().map(|c| c.indexed_end()).collect())
+        .collect();
+    let _ = eng.generate(&mut sess, 48).unwrap();
+    sess.shutdown_maintenance();
+    assert!(sess.maint.inflight.is_empty(), "jobs still marked in flight after shutdown");
+    assert!(sess.drains > 0, "48 tokens past watermark 8 must drain");
+
+    // Drain counters reconcile exactly with the advanced boundaries.
+    let mut advanced = 0u64;
+    for (layer, caches) in sess.caches.iter().enumerate() {
+        for (kvh, cache) in caches.iter().enumerate() {
+            advanced += (cache.indexed_end() - before[layer][kvh]) as u64;
+            // Every head's live index matches its cache's indexed tier.
+            let group = eng.spec().group_size();
+            for g in 0..group {
+                let r = &sess.retrievers[layer][kvh * group + g];
+                assert_eq!(
+                    r.indexed_len(),
+                    Some(cache.indexed_len()),
+                    "layer {layer} kvh {kvh} head {g}: index diverged from cache"
+                );
+                assert!(r.index_generation() > 0, "worker never swapped this head");
+            }
+            // The group map mirrors the indexed tier one-to-one.
+            assert_eq!(sess.groups[layer][kvh].id_map().len(), cache.indexed_len());
+        }
+    }
+    assert_eq!(advanced, sess.drained_tokens, "drain counter != boundary advance");
+    assert_eq!(sess.maint.stats.swaps, sess.drains, "one swap completion per drain");
+    assert!(sess.maint.stats.swap_s_total >= 0.0);
+}
+
+#[test]
+fn worker_shutdown_is_prompt_and_idempotent() {
+    // A deadlocked worker would hang here (the CI job wraps this whole
+    // binary in a `timeout` as the last line of defense).
+    let eng = concurrency_engine(4);
+    let mut rng = Rng::seed_from(7);
+    let s = tasks::passkey(&mut rng, 400, 0.5);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    let _ = eng.generate(&mut sess, 12).unwrap();
+    sess.shutdown_maintenance();
+    let drained = sess.drained_tokens;
+    // Idempotent: a second shutdown must not wedge or double-count, and a
+    // later decode step transparently respawns a fresh worker.
+    sess.shutdown_maintenance();
+    assert_eq!(sess.drained_tokens, drained);
+    let out = eng.decode_step(&mut sess, 1).unwrap();
+    let _ = out.token;
+}

@@ -107,6 +107,57 @@ fn vllm_like_admission_rejects_oom() {
 }
 
 #[test]
+fn truncate_and_fork_sessions() {
+    // Session lifecycle over the deletion path: a fork decodes
+    // independently, and truncation tombstones the dropped ids in every
+    // head's index (chat rollback) while the session stays decodable.
+    use retrieval_attention::model::Engine;
+    let mut c = cfg(Method::RetrievalAttention);
+    c.retrieval.maintenance.drain_watermark = 16;
+    let eng = Engine::from_config(c).expect("engine init");
+    let mut rng = Rng::seed_from(11);
+    let s = tasks::passkey(&mut rng, 700, 0.2);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+
+    // Fork before decoding: both sessions must solve independently.
+    let mut fork = eng.fork_session(&mut sess).unwrap();
+    let (t1, _) = eng.generate(&mut sess, 2).unwrap();
+    assert!(s.passed(&t1), "original failed: {t1:?}");
+    let (t2, _) = eng.generate(&mut fork, 2).unwrap();
+    assert!(s.passed(&t2), "fork failed: {t2:?}");
+    // The fork's drains are its own: counters diverge independently.
+    fork.shutdown_maintenance();
+
+    // Truncate the original mid-conversation. Capture a to-be-dropped
+    // key first so we can probe the index afterwards.
+    let probe_key: Vec<f32> = sess.caches[0][0].key(500).to_vec();
+    eng.truncate_session(&mut sess, 400).unwrap();
+    assert_eq!(sess.len, 400);
+    for caches in &sess.caches {
+        for c in caches {
+            assert_eq!(c.len(), 400, "cache not truncated");
+            assert!(c.indexed_end() <= 400);
+        }
+    }
+    // Dropped ids are tombstoned: nothing at or past the cut is ever
+    // retrieved again, even when probed with a dropped token's own key.
+    let out = sess.retrievers[0][0].retrieve(&probe_key, 64);
+    assert!(
+        out.ids.iter().all(|&id| (id as usize) < 400),
+        "dropped id retrievable after truncate: {:?}",
+        out.ids
+    );
+    assert!(sess.tombstone_ratio() > 0.0, "truncation must tombstone");
+    // The truncated session keeps decoding without panicking.
+    let out = eng.decode_step(&mut sess, 7).unwrap();
+    assert!((out.token as usize) < eng.spec().vocab);
+    assert_eq!(sess.len, 401);
+    // Truncating to an invalid length is refused.
+    assert!(eng.truncate_session(&mut sess, 0).is_err());
+    assert!(eng.truncate_session(&mut sess, 10_000).is_err());
+}
+
+#[test]
 fn bad_request_fails_gracefully() {
     let replica = Replica::spawn(cfg(Method::RetrievalAttention));
     // Empty prompt must fail, not crash the worker.
