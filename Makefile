@@ -24,9 +24,10 @@ test:
 	$(CARGO) test -q
 
 # Serialized concurrency/invariants suite for the maintenance worker and
-# the double-buffered index swap; `timeout` fails fast on a deadlock.
+# the double-buffered index swap, including the reclaim soak (async
+# worker on/off); `timeout` fails fast on a deadlock.
 test-concurrency:
-	timeout 600 $(CARGO) test -q --test maintenance_concurrency -- --test-threads=1
+	timeout 900 $(CARGO) test -q --test maintenance_concurrency -- --test-threads=1
 
 fmt-check:
 	$(CARGO) fmt --all -- --check

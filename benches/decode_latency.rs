@@ -11,7 +11,9 @@
 //! Also profiles the drain's store-growth cost directly: segmented append
 //! (`KeyStore::append_rows`, O(batch) amortised) vs the monolithic
 //! deep-copy PR 1 used (O(context) per drain), at up to 128K-row
-//! geometry in `full` mode.
+//! geometry in `full` mode — and the reclaim-on/off host-memory growth
+//! contrast for the streaming-eviction regime (generation-based dense-id
+//! remap epochs vs tombstones-only).
 //!
 //! `cargo bench --bench decode_latency [-- full]`
 //!
@@ -132,6 +134,54 @@ fn main() {
         growth.set(tag, o);
     }
 
+    // --- Reclamation: host-memory growth with eviction on, reclaim on/off.
+    // Same streaming regime either way (StreamingLLM-style retirement over
+    // the indexed tier); the only difference is whether tombstoned rows
+    // are physically reclaimed by generation-based remap epochs. With
+    // reclaim off, store/map/index bytes only ever grow; with it on they
+    // stay bounded near the live tier.
+    let n_r = if full { 8_192 } else { 2_048 };
+    let gen_r = if full { 768 } else { 320 };
+    let mut reclaim = Value::obj();
+    for (tag, ratio) in [("reclaim-on", 0.25f32), ("reclaim-off", 0.0f32)] {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "llama3-mini".into();
+        cfg.retrieval.maintenance.drain_watermark = 32;
+        cfg.retrieval.eviction.max_indexed = 512;
+        cfg.retrieval.eviction.reclaim_ratio = ratio;
+        let engine = Engine::from_config(cfg).expect("engine");
+        let heads = heads_for(&spec, n_r);
+        let mut sess =
+            engine.synthetic_session(heads, Method::RetrievalAttention).expect("session");
+        let bytes_start = sess.index_memory_bytes();
+        let t = std::time::Instant::now();
+        let mut tok = 1u32;
+        for _ in 0..gen_r {
+            tok = black_box(engine.decode_step(&mut sess, tok % 97).unwrap().token);
+        }
+        let decode_s = t.elapsed().as_secs_f64() / gen_r as f64;
+        sess.shutdown_maintenance();
+        let bytes_end = sess.index_memory_bytes();
+        let store_rows = sess.host_store(0, 0).rows();
+        let stats = sess.maint.stats;
+        println!(
+            "reclaim/{tag}: n={n_r} gen={gen_r} bytes_start={bytes_start} bytes_end={bytes_end} \
+             store_rows={store_rows} evicted={} reclaims={} reclaimed_rows={} s_per_tok={:.5}",
+            stats.evicted_tokens, stats.reclaims, stats.reclaimed_rows, decode_s,
+        );
+        let mut o = Value::obj();
+        o.set("n", n_r)
+            .set("generated", gen_r)
+            .set("bytes_start", bytes_start)
+            .set("bytes_end", bytes_end)
+            .set("store_rows", store_rows)
+            .set("evicted_tokens", stats.evicted_tokens)
+            .set("reclaims", stats.reclaims)
+            .set("reclaimed_rows", stats.reclaimed_rows)
+            .set("s_per_tok", decode_s);
+        reclaim.set(tag, o);
+    }
+
     // --- Drain store-growth: segmented append vs monolithic deep copy. ---
     // The segmented store appends one O(batch) chunk per drain (amortised
     // tail merging); the PR-1 layout re-copied the whole dense prefix.
@@ -185,6 +235,7 @@ fn main() {
     let mut out = Value::obj();
     out.set("cases", b.to_json());
     out.set("growth", growth);
+    out.set("reclaim", reclaim);
     out.set("drain_store", drain_profile);
     std::fs::write("results/bench_decode.json", out.to_string_pretty()).ok();
 }

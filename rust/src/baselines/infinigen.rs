@@ -7,7 +7,7 @@
 //! sketch loses rank — the paper observes a noticeable accuracy drop from
 //! speculation misses (Table 2: InfiniGen −4.6 vs full attention).
 
-use super::{HostRetriever, Retrieval, RetrieverInputs};
+use super::{HostRetriever, IdMap, Retrieval, RetrieverInputs};
 use crate::tensor::{argtopk, dot, Matrix};
 use crate::util::rng::Rng;
 use std::sync::Arc;
@@ -16,7 +16,7 @@ use std::sync::Arc;
 const R: usize = 16;
 
 pub struct InfiniGenRetriever {
-    ids: Arc<Vec<u32>>,
+    ids: Arc<IdMap>,
     /// Random projection `[d, R]` (shared by keys and queries).
     proj: Matrix,
     /// Projected keys `[n, R]`.
@@ -68,7 +68,7 @@ impl HostRetriever for InfiniGenRetriever {
         let top = argtopk(&scores, k.min(n));
         // Scan cost: n sketch reads of R dims ≈ n*R/d full-key equivalents.
         let scanned = (n * R).div_ceil(self.d);
-        Retrieval { ids: top.into_iter().map(|i| self.ids[i]).collect(), scanned }
+        Retrieval { ids: top.into_iter().map(|i| self.ids.ids[i]).collect(), scanned }
     }
 
     fn name(&self) -> &'static str {

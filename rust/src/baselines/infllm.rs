@@ -9,7 +9,7 @@
 //! granularity + lossy representatives miss needle-sized critical tokens
 //! (Retr.KV ≈ 0.5%).
 
-use super::{HostRetriever, Retrieval, RetrieverInputs};
+use super::{HostRetriever, IdMap, Retrieval, RetrieverInputs};
 use crate::index::KeyStore;
 use crate::tensor::{argtopk, dot};
 use std::sync::Arc;
@@ -21,7 +21,7 @@ const REPS: usize = 4;
 
 pub struct InfLlmRetriever {
     keys: KeyStore,
-    ids: Arc<Vec<u32>>,
+    ids: Arc<IdMap>,
     /// Representative dense-row indices per block.
     reps: Vec<[u32; REPS]>,
     /// Dense row range per block.
@@ -78,7 +78,7 @@ impl HostRetriever for InfLlmRetriever {
         for b in top {
             let (lo, hi) = self.blocks[b];
             for dense in lo..hi {
-                ids.push(self.ids[dense as usize]);
+                ids.push(self.ids.ids[dense as usize]);
             }
         }
         // Scanned = representative comparisons (the retrieval cost driver).

@@ -41,7 +41,7 @@ use crate::index::{
     hnsw::{HnswIndex, HnswParams},
     ivf::IvfIndex,
     roargraph::{RoarGraph, RoarParams},
-    InsertContext, KeyStore, SearchParams, VectorIndex,
+    InsertContext, KeyStore, RemapPlan, SearchParams, VectorIndex,
 };
 use crate::tensor::Matrix;
 use crate::util::swap::Published;
@@ -54,17 +54,53 @@ pub struct Retrieval {
     pub scanned: usize,
 }
 
+/// A generation-stamped dense→absolute id map. Dense ids are only
+/// meaningful within one **store generation**: a reclamation epoch
+/// renumbers them, bumps the generation, and stamps every index front it
+/// republishes — so a reader always pairs an index snapshot with the map
+/// of the *same* generation (see [`GroupShared::map_for_generation`]).
+/// Within a generation the map only ever grows by appends, so any map at
+/// least as new as an index front maps every dense id the front returns.
+pub struct IdMap {
+    /// Generation this map belongs to (bumps on every reclamation remap).
+    pub store_gen: u64,
+    /// Dense row -> absolute token id, ascending.
+    pub ids: Vec<u32>,
+}
+
+impl std::ops::Deref for IdMap {
+    type Target = [u32];
+
+    fn deref(&self) -> &[u32] {
+        &self.ids
+    }
+}
+
+/// The published map state: the current generation's map plus — only for
+/// the duration of a reclamation epoch — the previous generation's, so
+/// decode readers still holding a pre-remap index front keep a correct
+/// pairing instead of spinning while the worker republishes every head.
+struct MapPair {
+    cur: Arc<IdMap>,
+    prev: Option<Arc<IdMap>>,
+}
+
 /// Per-GQA-group shared retrieval state (Appendix C, "Minimize the CPU
 /// Memory Usage"): ONE segmented dense key copy and ONE dense→absolute id
 /// map, shared by every query head of the group. Both are published with
-/// generation-counted swaps; the id map is always published *before* any
-/// index front that references its new rows, so a reader holding an index
-/// snapshot can map every dense id it can ever return.
+/// generation-counted swaps; within a store generation the id map is
+/// always published *before* any index front that references its new
+/// rows, and across generations the reclamation epoch publishes
+/// map → store → per-head fronts (retaining the previous map until every
+/// front is republished), so a reader holding an index snapshot can
+/// always map every dense id it can ever return.
 pub struct GroupShared {
-    /// Segmented dense key store (`Arc`'d chunks; drains append O(batch)).
+    /// Segmented dense key store (`Arc`'d chunks; drains append O(batch),
+    /// reclamation epochs swap in a compacted store that actually shrinks).
     pub store: Published<KeyStore>,
-    /// Dense row -> absolute token id, ascending.
-    pub ids: Published<Vec<u32>>,
+    /// Generation-stamped dense→absolute maps (current + epoch-transient
+    /// previous).
+    maps: Published<MapPair>,
     /// Set once an extend breaks the ascending order — possible only when
     /// a truncate-then-redrain session legally re-appends an absolute id.
     /// Reverse lookups then fall back from binary search to a one-shot
@@ -78,7 +114,10 @@ impl GroupShared {
         debug_assert_eq!(store.rows(), ids.len());
         Arc::new(GroupShared {
             store: Published::new(store),
-            ids: Published::new(ids),
+            maps: Published::new(MapPair {
+                cur: Arc::new(IdMap { store_gen: 0, ids }),
+                prev: None,
+            }),
             unsorted: std::sync::atomic::AtomicBool::new(false),
         })
     }
@@ -88,16 +127,37 @@ impl GroupShared {
         (*self.store.load()).clone()
     }
 
-    /// Snapshot the dense→absolute id map.
-    pub fn id_map(&self) -> Arc<Vec<u32>> {
-        self.ids.load()
+    /// Snapshot the current generation's dense→absolute id map.
+    pub fn id_map(&self) -> Arc<IdMap> {
+        self.maps.load().cur.clone()
+    }
+
+    /// The map belonging to store generation `gen`: the current one, or —
+    /// mid-reclamation — the retained previous one. `None` means the
+    /// caller's index snapshot predates the retained window (a newer
+    /// front is already published; reload and retry).
+    pub fn map_for_generation(&self, gen: u64) -> Option<Arc<IdMap>> {
+        let maps = self.maps.load();
+        if maps.cur.store_gen == gen {
+            return Some(maps.cur.clone());
+        }
+        match &maps.prev {
+            Some(p) if p.store_gen == gen => Some(p.clone()),
+            _ => None,
+        }
+    }
+
+    /// Current store generation (bumps once per reclamation epoch).
+    pub fn store_generation(&self) -> u64 {
+        self.maps.load().cur.store_gen
     }
 
     /// Grow the group state for a drained batch: the id map is extended
     /// and published first, then (when some head actually reads keys) the
     /// store gains one segment. Returns the store the inserts must use.
     pub fn extend(&self, rows: Matrix, new_ids: &[u32], grow_store: bool) -> KeyStore {
-        let mut ids = (*self.ids.load()).clone();
+        let maps = self.maps.load();
+        let mut ids = maps.cur.ids.clone();
         let boundary_ok = match (ids.last(), new_ids.first()) {
             (Some(&last), Some(&first)) => first > last,
             _ => true,
@@ -106,7 +166,10 @@ impl GroupShared {
             self.unsorted.store(true, std::sync::atomic::Ordering::Release);
         }
         ids.extend_from_slice(new_ids);
-        self.ids.publish(Arc::new(ids));
+        self.maps.publish(Arc::new(MapPair {
+            cur: Arc::new(IdMap { store_gen: maps.cur.store_gen, ids }),
+            prev: maps.prev.clone(),
+        }));
         if grow_store {
             let grown = self.store.load().append_rows(rows);
             self.store.publish(Arc::new(grown.clone()));
@@ -116,9 +179,38 @@ impl GroupShared {
         }
     }
 
-    /// Heap bytes of the shared id map (counted once per group).
+    /// Open a reclamation epoch: publish the compacted map under the new
+    /// generation (retaining the pre-remap map as `prev` for readers
+    /// whose index fronts have not been republished yet), then the
+    /// compacted store. The caller (the maintenance worker's
+    /// `Job::Compact`) then remaps every head's index front and finally
+    /// calls [`GroupShared::finish_remap`] to release the old map.
+    pub fn publish_remap(&self, new_ids: Vec<u32>, new_store: KeyStore, gen: u64) {
+        debug_assert_eq!(new_store.rows(), new_ids.len());
+        let maps = self.maps.load();
+        debug_assert!(gen > maps.cur.store_gen, "remap must bump the generation");
+        self.maps.publish(Arc::new(MapPair {
+            cur: Arc::new(IdMap { store_gen: gen, ids: new_ids }),
+            prev: Some(maps.cur.clone()),
+        }));
+        self.store.publish(Arc::new(new_store));
+    }
+
+    /// Close the reclamation epoch: every head's front now carries the
+    /// new generation, so the retained previous map can be dropped (this
+    /// is the moment the old map's memory is actually released).
+    pub fn finish_remap(&self) {
+        let maps = self.maps.load();
+        if maps.prev.is_some() {
+            self.maps.publish(Arc::new(MapPair { cur: maps.cur.clone(), prev: None }));
+        }
+    }
+
+    /// Heap bytes of the shared id map(s) (counted once per group; the
+    /// epoch-transient previous map is charged while retained).
     pub fn map_bytes(&self) -> usize {
-        self.ids.load().len() * 4
+        let maps = self.maps.load();
+        (maps.cur.ids.len() + maps.prev.as_ref().map(|p| p.ids.len()).unwrap_or(0)) * 4
     }
 
     /// Heap bytes of the shared key store — f32 payload plus chunk table —
@@ -131,13 +223,14 @@ impl GroupShared {
     /// Resolve absolute token ids to dense slots against the current map —
     /// ONCE per *group*, so an eviction/truncation batch does not pay the
     /// reverse lookup per query head. While the map is ascending (the
-    /// common case: it only ever appends increasing ids), each id resolves
-    /// by allocation-free binary search; after a truncate-then-redrain has
+    /// common case: it only ever appends increasing ids, and reclamation
+    /// keeps an ascending subsequence ascending), each id resolves by
+    /// allocation-free binary search; after a truncate-then-redrain has
     /// broken the order, a one-shot hash map takes over (the later dense
     /// slot wins; the earlier one is already tombstoned). Unknown ids are
     /// skipped.
     pub fn dense_ids_for(&self, absolute_ids: &[u32]) -> Vec<u32> {
-        let ids = self.ids.load();
+        let ids = self.id_map();
         if !self.unsorted.load(std::sync::atomic::Ordering::Acquire) {
             return absolute_ids
                 .iter()
@@ -236,6 +329,40 @@ pub trait HostRetriever: Send + Sync {
         0
     }
 
+    /// Whether this head can participate in a reclamation epoch (the
+    /// generation-based dense-id remap that physically frees tombstoned
+    /// rows). Only index-backed retrievers over remap-capable families
+    /// return true.
+    fn supports_reclaim(&self) -> bool {
+        false
+    }
+
+    /// Dense ids currently tombstoned in this head's front, ascending.
+    /// The reclamation planner builds the group's old→new renumbering
+    /// from the FIRST head's set (heads of one group receive the
+    /// identical remove stream).
+    fn dense_dead_ids(&self) -> Vec<u32> {
+        Vec::new()
+    }
+
+    /// `(live, tombstoned)` from ONE front snapshot. The engine's reclaim
+    /// trigger polls this on the decode path, so it must not cost two
+    /// separate front loads (`indexed_len` + `tombstones` each take the
+    /// published-slot read lock). `None` for index-less policies.
+    fn reclaim_counts(&self) -> Option<(usize, usize)> {
+        None
+    }
+
+    /// Apply a reclamation epoch's remap to this head's index. Goes
+    /// through the same double-buffered op path as inserts/removes: the
+    /// republished front carries the plan's store generation, so decode
+    /// readers pair it with the matching id map. Returns `false` when
+    /// unsupported.
+    fn apply_remap(&self, plan: &Arc<RemapPlan>) -> bool {
+        let _ = plan;
+        false
+    }
+
     /// Live searchable vectors for index-backed retrievers; `None` for
     /// policies without an index.
     fn indexed_len(&self) -> Option<usize> {
@@ -280,8 +407,10 @@ impl<'a> RetrieverInputs<'a> {
         self.group.keys()
     }
 
-    /// Snapshot of the group's dense→absolute id map.
-    pub fn host_ids(&self) -> Arc<Vec<u32>> {
+    /// Snapshot of the group's dense→absolute id map at build time (the
+    /// fixed-set baselines keep this shared `Arc`; index-backed
+    /// retrievers track the live generation-stamped map instead).
+    pub fn host_ids(&self) -> Arc<IdMap> {
         self.group.id_map()
     }
 }
@@ -383,8 +512,8 @@ pub struct AllRetriever {
 
 impl HostRetriever for AllRetriever {
     fn retrieve(&self, _q: &[f32], _k: usize) -> Retrieval {
-        let ids = self.group.id_map();
-        Retrieval { ids: (*ids).clone(), scanned: ids.len() }
+        let map = self.group.id_map();
+        Retrieval { ids: map.ids.clone(), scanned: map.len() }
     }
 
     fn name(&self) -> &'static str {
@@ -410,21 +539,41 @@ impl HostRetriever for AllRetriever {
 enum IndexOp {
     Insert { store: KeyStore, count: usize, queries: Option<Matrix> },
     Remove { dense: Vec<u32> },
+    /// Reclamation epoch: dense-id renumber + compacted-store adoption
+    /// under a bumped store generation.
+    Remap { plan: Arc<RemapPlan> },
 }
 
-fn apply_op(idx: &mut Box<dyn VectorIndex>, op: &IndexOp) -> bool {
+/// The published front: the searchable index plus the store generation it
+/// was built against. Dense ids are only meaningful within a generation,
+/// so the stamp rides the same atomic publish as the index — a reader can
+/// never pair a front with the wrong generation's id map.
+struct FrontIndex {
+    index: Box<dyn VectorIndex>,
+    store_gen: u64,
+}
+
+fn apply_op(front: &mut FrontIndex, op: &IndexOp) -> bool {
     match op {
         IndexOp::Insert { store, count, queries } => {
-            let old = idx.len();
+            let old = front.index.len();
             if store.rows() != old + count {
                 // Contract violation (caller's store is out of sync):
                 // refuse rather than corrupt the dense↔absolute mapping.
                 return false;
             }
             let ctx = InsertContext { recent_queries: queries.as_ref() };
-            idx.insert_batch(store.clone(), old..store.rows(), &ctx)
+            front.index.insert_batch(store.clone(), old..store.rows(), &ctx)
         }
-        IndexOp::Remove { dense } => idx.remove_batch(dense),
+        IndexOp::Remove { dense } => front.index.remove_batch(dense),
+        IndexOp::Remap { plan } => {
+            if front.index.remap_dense(plan) {
+                front.store_gen = plan.store_gen;
+                true
+            } else {
+                false
+            }
+        }
     }
 }
 
@@ -432,7 +581,7 @@ fn apply_op(idx: &mut Box<dyn VectorIndex>, op: &IndexOp) -> bool {
 /// front plus the ops applied to the current front but not yet replayed
 /// onto it.
 struct BackBuffer {
-    spare: Option<Arc<Box<dyn VectorIndex>>>,
+    spare: Option<Arc<FrontIndex>>,
     pending: Vec<IndexOp>,
 }
 
@@ -449,7 +598,7 @@ struct BackBuffer {
 ///   and keep the displaced front as the next spare. Both buffers evolve
 ///   through the identical op sequence, so neither is ever rebuilt.
 pub struct IndexRetriever {
-    front: Published<Box<dyn VectorIndex>>,
+    front: Published<FrontIndex>,
     back: Mutex<BackBuffer>,
     group: Arc<GroupShared>,
     params: SearchParams,
@@ -463,8 +612,9 @@ impl IndexRetriever {
         params: SearchParams,
         label: &'static str,
     ) -> IndexRetriever {
+        let store_gen = group.store_generation();
         IndexRetriever {
-            front: Published::new(index),
+            front: Published::new(FrontIndex { index, store_gen }),
             back: Mutex::new(BackBuffer { spare: None, pending: Vec::new() }),
             group,
             params,
@@ -475,14 +625,14 @@ impl IndexRetriever {
     /// Run `f` against the current front index (diagnostics).
     pub fn with_index<R>(&self, f: impl FnOnce(&dyn VectorIndex) -> R) -> R {
         let front = self.front.load();
-        f(front.as_ref().as_ref())
+        f(front.index.as_ref())
     }
 
     /// Left/right apply: see the type docs. Serialised by the back mutex;
     /// readers are never blocked (they hold only `Arc` snapshots).
     fn apply(&self, op: IndexOp) -> bool {
         let mut back = self.back.lock().expect("back buffer poisoned");
-        let mut idx: Box<dyn VectorIndex> = match back.spare.take() {
+        let mut front: FrontIndex = match back.spare.take() {
             Some(mut arc) => {
                 // Reclaim exclusive ownership once in-flight readers of
                 // the old front drop their snapshots. Searches are short,
@@ -495,7 +645,10 @@ impl IndexRetriever {
                         Ok(b) => break b,
                         Err(again) => {
                             if spins >= 1_000 {
-                                break again.clone_index();
+                                break FrontIndex {
+                                    index: again.index.clone_index(),
+                                    store_gen: again.store_gen,
+                                };
                             }
                             arc = again;
                             spins += 1;
@@ -505,18 +658,21 @@ impl IndexRetriever {
                 }
             }
             // First op ever: split one clone off the front.
-            None => self.front.load().clone_index(),
+            None => {
+                let f = self.front.load();
+                FrontIndex { index: f.index.clone_index(), store_gen: f.store_gen }
+            }
         };
         for prev in back.pending.drain(..) {
-            let ok = apply_op(&mut idx, &prev);
+            let ok = apply_op(&mut front, &prev);
             debug_assert!(ok, "op replay diverged on the spare buffer");
         }
-        if !apply_op(&mut idx, &op) {
+        if !apply_op(&mut front, &op) {
             // Refused: the spare is now exactly caught up with the front.
-            back.spare = Some(Arc::new(idx));
+            back.spare = Some(Arc::new(front));
             return false;
         }
-        let old = self.front.publish(Arc::new(idx));
+        let old = self.front.publish(Arc::new(front));
         back.spare = Some(old);
         back.pending.push(op);
         true
@@ -525,16 +681,31 @@ impl IndexRetriever {
 
 impl HostRetriever for IndexRetriever {
     fn retrieve(&self, q: &[f32], k: usize) -> Retrieval {
-        // Snapshot order (index, then ids) is the reverse of publish order
-        // (ids, then index): the map can only be newer than the front, so
-        // every dense id is mapped.
-        let index = self.front.load();
-        let ids = self.group.id_map();
-        debug_assert!(ids.len() >= index.len(), "id map behind the index front");
-        let r = index.search(q, k, &self.params);
-        Retrieval {
-            ids: r.ids.iter().map(|&dense| ids[dense as usize]).collect(),
-            scanned: r.scanned,
+        // Pair the front with the id map of the SAME store generation.
+        // Within a generation, snapshot order (index, then ids) is the
+        // reverse of publish order (ids, then index): the map can only be
+        // newer than the front, so every dense id is mapped. Across a
+        // reclamation epoch the previous generation's map is retained
+        // until every front is republished, so a same-generation map
+        // exists for any front we can load; the retry only fires in the
+        // instant a *second* epoch has already retired our generation —
+        // by then the republished front is visible, so it terminates.
+        let mut spins = 0u32;
+        loop {
+            let front = self.front.load();
+            let Some(ids) = self.group.map_for_generation(front.store_gen) else {
+                spins += 1;
+                if spins >= 64 {
+                    std::thread::yield_now();
+                }
+                continue;
+            };
+            debug_assert!(ids.len() >= front.index.len(), "id map behind the index front");
+            let r = front.index.search(q, k, &self.params);
+            return Retrieval {
+                ids: r.ids.iter().map(|&dense| ids.ids[dense as usize]).collect(),
+                scanned: r.scanned,
+            };
         }
     }
 
@@ -543,11 +714,11 @@ impl HostRetriever for IndexRetriever {
     }
 
     fn memory_bytes(&self) -> usize {
-        self.front.load().memory_bytes()
+        self.front.load().index.memory_bytes()
     }
 
     fn supports_insert(&self) -> bool {
-        self.front.load().supports_insert()
+        self.front.load().index.supports_insert()
     }
 
     fn insert_batch(&self, store: &KeyStore, ids: &[u32], ctx: &InsertContext<'_>) -> bool {
@@ -556,7 +727,7 @@ impl HostRetriever for IndexRetriever {
     }
 
     fn supports_remove(&self) -> bool {
-        self.front.load().supports_remove()
+        self.front.load().index.supports_remove()
     }
 
     fn remove_batch(&self, absolute_ids: &[u32]) -> bool {
@@ -577,11 +748,31 @@ impl HostRetriever for IndexRetriever {
     }
 
     fn tombstones(&self) -> usize {
-        self.front.load().tombstones()
+        self.front.load().index.tombstones()
+    }
+
+    fn supports_reclaim(&self) -> bool {
+        self.front.load().index.supports_remap()
+    }
+
+    fn dense_dead_ids(&self) -> Vec<u32> {
+        self.front.load().index.dead_ids()
+    }
+
+    fn reclaim_counts(&self) -> Option<(usize, usize)> {
+        let front = self.front.load();
+        Some((front.index.live_len(), front.index.tombstones()))
+    }
+
+    fn apply_remap(&self, plan: &Arc<RemapPlan>) -> bool {
+        if !self.supports_reclaim() {
+            return false;
+        }
+        self.apply(IndexOp::Remap { plan: plan.clone() })
     }
 
     fn indexed_len(&self) -> Option<usize> {
-        Some(self.front.load().live_len())
+        Some(self.front.load().index.live_len())
     }
 
     fn index_generation(&self) -> u64 {
@@ -714,6 +905,63 @@ mod tests {
         // Unknown absolute ids are a no-op, not an error.
         assert!(r.remove_batch(&[9999]));
         assert_eq!(r.tombstones(), 1);
+    }
+
+    #[test]
+    fn index_retriever_reclamation_epoch_remaps_and_shrinks() {
+        let (keys, ids, _) = test_inputs(64, 8, 12);
+        let group = GroupShared::new(keys.clone(), ids.clone());
+        let r = IndexRetriever::new(
+            Box::new(FlatIndex::new(keys.clone())),
+            group.clone(),
+            SearchParams::default(),
+            "Flat",
+        );
+        assert!(r.supports_reclaim());
+        // Tombstone the first 16 dense slots via their absolute ids.
+        assert!(r.remove_batch(&ids[..16]));
+        assert_eq!(r.tombstones(), 16);
+        assert_eq!(r.dense_dead_ids(), (0..16).collect::<Vec<u32>>());
+        // Build the epoch's plan through the production planner (what
+        // `Job::Compact` uses) and run the full publish order:
+        // map -> store -> front -> prev drop.
+        let dead = r.dense_dead_ids();
+        let old_map = group.id_map();
+        let gen = old_map.store_gen + 1;
+        let (plan, keep) =
+            RemapPlan::from_dead(&dead, &group.keys(), gen).expect("plan must build");
+        let new_ids: Vec<u32> = keep.iter().map(|&o| old_map.ids[o as usize]).collect();
+        let new_store = plan.store.clone();
+        let plan = Arc::new(plan);
+        group.publish_remap(new_ids, new_store, gen);
+        // Mid-epoch: the retained previous map keeps the old front usable.
+        assert!(group.map_for_generation(0).is_some(), "prev map must be retained");
+        let out = r.retrieve(&keys.row(20).to_vec(), 48);
+        assert!(out.ids.contains(&ids[20]));
+        assert!(r.apply_remap(&plan));
+        group.finish_remap();
+        assert_eq!(group.store_generation(), 1);
+        assert!(group.map_for_generation(0).is_none(), "prev map must be released");
+        assert_eq!(group.id_map().len(), 48);
+        assert_eq!(group.keys().rows(), 48);
+        assert_eq!(r.tombstones(), 0);
+        assert_eq!(r.indexed_len(), Some(48));
+        // Survivors keep their absolute ids; the reclaimed prefix is gone.
+        let out = r.retrieve(&keys.row(20).to_vec(), 48);
+        assert!(out.ids.contains(&ids[20]), "survivor lost: {:?}", out.ids);
+        for victim in &ids[..16] {
+            assert!(!out.ids.contains(victim), "reclaimed id {victim} returned");
+        }
+        assert!(group.dense_ids_for(&ids[..16]).is_empty());
+        // Drains continue against the compacted space.
+        let grown = group.extend(
+            Matrix::from_vec(1, 8, vec![7.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]),
+            &[999],
+            true,
+        );
+        assert!(r.insert_batch(&grown, &[999], &InsertContext::none()));
+        let out = r.retrieve(&[1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0], 1);
+        assert_eq!(out.ids, vec![999]);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! `Σ_d max(q_d·min_d, q_d·max_d)` — an upper bound on any inner product
 //! within the page. The top pages by bound are attended in full.
 
-use super::{HostRetriever, Retrieval, RetrieverInputs};
+use super::{HostRetriever, IdMap, Retrieval, RetrieverInputs};
 use crate::tensor::{argtopk, Matrix};
 use std::sync::Arc;
 
@@ -14,7 +14,7 @@ use std::sync::Arc;
 const PAGE: usize = 16;
 
 pub struct QuestRetriever {
-    ids: Arc<Vec<u32>>,
+    ids: Arc<IdMap>,
     /// Per page: (min vector, max vector), dense row range.
     mins: Matrix,
     maxs: Matrix,
@@ -80,7 +80,7 @@ impl HostRetriever for QuestRetriever {
         for p in top {
             let (lo, hi) = self.pages[p];
             for dense in lo..hi {
-                ids.push(self.ids[dense as usize]);
+                ids.push(self.ids.ids[dense as usize]);
             }
         }
         // Scanned = page metadata comparisons (2 vectors per page).

@@ -44,7 +44,7 @@ impl SnapKvRetriever {
             }
         }
         let keep = argtopk(&votes, budget(n).min(n));
-        let mut ids: Vec<u32> = keep.into_iter().map(|dense| host_ids[dense]).collect();
+        let mut ids: Vec<u32> = keep.into_iter().map(|dense| host_ids.ids[dense]).collect();
         ids.sort_unstable();
         SnapKvRetriever { ids }
     }

@@ -126,17 +126,48 @@ impl MaintenanceConfig {
 /// (Ltri-LLM-style streaming workloads continuously retire tokens that
 /// would otherwise linger in the indexes forever). Retired tokens are
 /// dropped from attention immediately and tombstoned in every head's
-/// index by the maintenance worker.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+/// index by the maintenance worker. Tombstoned rows are *physically*
+/// reclaimed by the generation-based remap governed by `reclaim_ratio`.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct EvictionConfig {
     /// Live indexed tokens retained per (layer, kv-head). `0` disables
     /// eviction (the paper's unbounded host set).
     pub max_indexed: usize,
+    /// Reclamation-epoch trigger: once the tombstones accumulated in a
+    /// GQA group's indexes exceed `reclaim_ratio` × the *live* row count,
+    /// the maintenance worker runs a `Job::Compact` — it rebuilds the
+    /// group's segmented key store and dense→absolute id map with the
+    /// dead rows dropped, renumbers the surviving dense ids contiguously,
+    /// and remaps every head's index under a bumped **store generation**
+    /// (flat/IVF rewrite their id lists exactly; HNSW relabels its graph
+    /// in place; RoarGraph relabels its CSR and re-runs connectivity
+    /// repair, trading a little recall noise for zero rebuild cost).
+    /// This is what turns tombstoning into memory that actually shrinks:
+    /// host bytes stay ≤ (1 + ratio) × live instead of growing without
+    /// bound over a streaming session. `0.0` disables reclamation
+    /// (tombstoned K/V rows then occupy host memory until an
+    /// index-family-internal rebuild happens to drop them). Default 0.5:
+    /// one epoch per ~50% garbage, balancing remap cost (O(live) per
+    /// epoch, off the token path) against peak memory overhead.
+    pub reclaim_ratio: f32,
+}
+
+impl Default for EvictionConfig {
+    fn default() -> Self {
+        EvictionConfig { max_indexed: 0, reclaim_ratio: 0.5 }
+    }
 }
 
 impl EvictionConfig {
     pub fn enabled(&self) -> bool {
         self.max_indexed > 0
+    }
+
+    /// Whether reclamation epochs (physical tombstone reclamation) run.
+    /// Independent of `enabled()`: truncation-heavy sessions accumulate
+    /// tombstones without any eviction window configured.
+    pub fn reclaim_enabled(&self) -> bool {
+        self.reclaim_ratio > 0.0
     }
 }
 
@@ -246,7 +277,8 @@ impl ServeConfig {
             .set("async_worker", self.retrieval.maintenance.async_worker);
         r.set("maintenance", mnt);
         let mut ev = Value::obj();
-        ev.set("max_indexed", self.retrieval.eviction.max_indexed);
+        ev.set("max_indexed", self.retrieval.eviction.max_indexed)
+            .set("reclaim_ratio", self.retrieval.eviction.reclaim_ratio as f64);
         r.set("eviction", ev);
         match self.retrieval.budget {
             BudgetPolicy::Uniform { k } => {
@@ -322,6 +354,9 @@ impl ServeConfig {
                 if let Some(x) = ev.get("max_indexed").and_then(Value::as_usize) {
                     c.retrieval.eviction.max_indexed = x;
                 }
+                if let Some(x) = ev.get("reclaim_ratio").and_then(Value::as_f64) {
+                    c.retrieval.eviction.reclaim_ratio = x as f32;
+                }
             }
             if let Some(b) = r.get("budget") {
                 let k = b.req_usize("k")?;
@@ -394,13 +429,16 @@ mod tests {
             rebuild_threshold: 99,
             async_worker: false,
         };
-        c.retrieval.eviction = EvictionConfig { max_indexed: 4096 };
+        c.retrieval.eviction = EvictionConfig { max_indexed: 4096, reclaim_ratio: 0.25 };
         let back = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.retrieval.maintenance.drain_watermark, 7);
         assert_eq!(back.retrieval.maintenance.recent_queries, 3);
         assert_eq!(back.retrieval.maintenance.rebuild_threshold, 99);
         assert!(!back.retrieval.maintenance.async_worker);
-        assert_eq!(back.retrieval.eviction, EvictionConfig { max_indexed: 4096 });
+        assert_eq!(
+            back.retrieval.eviction,
+            EvictionConfig { max_indexed: 4096, reclaim_ratio: 0.25 }
+        );
         assert!(back.retrieval.eviction.enabled());
         assert!(back.retrieval.maintenance.enabled());
         // Absent block falls back to defaults; watermark 0 disables.
@@ -409,6 +447,10 @@ mod tests {
         assert_eq!(parsed.retrieval.maintenance, MaintenanceConfig::default());
         assert!(parsed.retrieval.maintenance.async_worker, "worker defaults on");
         assert!(!parsed.retrieval.eviction.enabled(), "eviction defaults off");
+        assert!(parsed.retrieval.eviction.reclaim_enabled(), "reclaim defaults on");
+        assert!((parsed.retrieval.eviction.reclaim_ratio - 0.5).abs() < 1e-6);
+        let no_reclaim = EvictionConfig { reclaim_ratio: 0.0, ..Default::default() };
+        assert!(!no_reclaim.reclaim_enabled());
         let off = MaintenanceConfig { drain_watermark: 0, ..Default::default() };
         assert!(!off.enabled());
     }

@@ -69,6 +69,10 @@ pub struct RequestMetrics {
     pub drains: u64,
     /// Tokens retired by the indexed-tier eviction policy.
     pub evicted_tokens: u64,
+    /// Reclamation epochs completed (generation-based dense-id remaps).
+    pub reclaims: u64,
+    /// Dense rows physically reclaimed (host memory actually freed).
+    pub reclaimed_rows: u64,
     /// Completed maintenance jobs (double-buffered swaps).
     pub maint_swaps: u64,
     /// Mean worker wall-clock per job (the off-thread cost).
@@ -273,6 +277,8 @@ fn worker_loop(
                 drained_tokens: a.sess.drained_tokens,
                 drains: a.sess.drains,
                 evicted_tokens: maint.evicted_tokens,
+                reclaims: maint.reclaims,
+                reclaimed_rows: maint.reclaimed_rows,
                 maint_swaps: maint.swaps,
                 maint_swap_s_mean: maint.mean_swap_s(),
                 maint_queue_peak: maint.queue_peak,

@@ -8,7 +8,7 @@
 //! ratio the index compacts to an explicit live-id list so dead rows stop
 //! costing scan time.
 
-use super::{InsertContext, KeyStore, SearchParams, SearchResult, VectorIndex};
+use super::{InsertContext, KeyStore, RemapPlan, SearchParams, SearchResult, VectorIndex};
 use crate::tensor::{argtopk, dot};
 use crate::util::parallel;
 use std::ops::Range;
@@ -54,8 +54,13 @@ impl FlatIndex {
     }
 
     fn maybe_compact(&mut self) {
+        // Ratio against the LIVE row count, not total dense slots: dense
+        // ids are permanent between reclamation epochs, so a total-rows
+        // denominator would make compaction fire ever more rarely as dead
+        // rows pile up over a long streaming session.
         let since = self.dead_count - self.dead_at_compact;
-        if since * COMPACT_DEN > self.keys.rows() * COMPACT_NUM {
+        let live = self.keys.rows() - self.dead_count;
+        if since * COMPACT_DEN > live * COMPACT_NUM {
             self.live = Some(
                 (0..self.keys.rows() as u32).filter(|&i| !self.dead[i as usize]).collect(),
             );
@@ -202,6 +207,29 @@ impl VectorIndex for FlatIndex {
         true
     }
 
+    fn supports_remap(&self) -> bool {
+        true
+    }
+
+    fn dead_ids(&self) -> Vec<u32> {
+        super::collect_dead(&self.dead)
+    }
+
+    /// Exact scan has no structure beyond the store: adopt the compacted
+    /// store and renumber the tombstone bitset.
+    fn remap_dense(&mut self, plan: &RemapPlan) -> bool {
+        if plan.old_to_new.len() != self.keys.rows() || plan.store.rows() != plan.new_len {
+            return false;
+        }
+        let (dead, dead_count) = super::remap_dead(&self.dead, plan);
+        self.keys = plan.store.clone();
+        self.dead = dead;
+        self.dead_count = dead_count;
+        self.dead_at_compact = dead_count;
+        self.live = None;
+        true
+    }
+
     fn clone_index(&self) -> Box<dyn VectorIndex> {
         Box::new(self.clone())
     }
@@ -278,6 +306,41 @@ mod tests {
         // Removing again is a no-op.
         assert!(idx.remove_batch(&[6]));
         assert_eq!(idx.tombstones(), 1);
+    }
+
+    #[test]
+    fn remap_drops_dead_and_renumbers() {
+        let base = keys();
+        let mut idx = FlatIndex::new(base.clone());
+        assert!(idx.remove_batch(&[0, 3, 5]));
+        assert_eq!(idx.dead_ids(), vec![0, 3, 5]);
+        let (plan, keep) =
+            RemapPlan::from_dead(&idx.dead_ids(), &base, 1).expect("plan must build");
+        assert_eq!(keep, vec![1, 2, 4, 6, 7]);
+        assert!(idx.supports_remap());
+        assert!(idx.remap_dense(&plan));
+        assert_eq!(idx.len(), 5);
+        assert_eq!(idx.tombstones(), 0);
+        assert!(idx.dead_ids().is_empty());
+        // Old id 6 (the dominant dim-2 vector) is now dense id 3.
+        let r = idx.search(&[0.0, 0.0, 1.0, 0.0], 1, &SearchParams::default());
+        assert_eq!(r.ids, vec![3]);
+        assert_eq!(r.scanned, 5);
+        // Inserts keep working against the compacted store.
+        let grown = plan.store.append_rows(Matrix::from_vec(1, 4, vec![9.0, 0.0, 0.0, 0.0]));
+        let n = grown.rows();
+        assert!(idx.insert_batch(grown, 5..n, &crate::index::InsertContext::none()));
+        let r = idx.search(&[1.0, 0.0, 0.0, 0.0], 1, &SearchParams::default());
+        assert_eq!(r.ids, vec![5]);
+        // A mismatched plan is refused, not applied.
+        let bogus = RemapPlan {
+            store: KeyStore::new(4),
+            old_to_new: vec![0, 1],
+            new_len: 0,
+            store_gen: 2,
+        };
+        assert!(!idx.remap_dense(&bogus));
+        assert_eq!(idx.len(), 6);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! into a local optimum"), because edges reflect the key distribution while
 //! decode queries come from the OOD query distribution.
 
-use super::{InsertContext, KeyStore, SearchParams, SearchResult, VectorIndex, VisitedSet};
+use super::{InsertContext, KeyStore, RemapPlan, SearchParams, SearchResult, VectorIndex, VisitedSet};
 use crate::tensor::dot;
 
 use crate::util::rng::Rng;
@@ -460,6 +460,68 @@ impl VectorIndex for HnswIndex {
         true
     }
 
+    fn supports_remap(&self) -> bool {
+        true
+    }
+
+    fn dead_ids(&self) -> Vec<u32> {
+        super::collect_dead(&self.dead)
+    }
+
+    /// Relabel the graph in place: every adjacency list, the node levels,
+    /// and the entry point are renumbered through the plan; edges into
+    /// reclaimed nodes vanish (removal already re-linked each dead node's
+    /// neighborhood, so only rare pruning-stale edges are lost). The
+    /// surviving graph structure is bit-identical modulo the renumbering,
+    /// so search results over live rows are preserved exactly.
+    fn remap_dense(&mut self, plan: &RemapPlan) -> bool {
+        if plan.old_to_new.len() != self.keys.rows()
+            || plan.store.rows() != plan.new_len
+            || plan.new_len == 0
+        {
+            return false;
+        }
+        let (dead, dead_count) = super::remap_dead(&self.dead, plan);
+        for layer in &mut self.layers {
+            let mut neighbors: Vec<Vec<u32>> = vec![Vec::new(); plan.new_len];
+            for (old, adj) in layer.neighbors.iter().enumerate() {
+                let Some(new) = plan.map(old as u32) else { continue };
+                let list = &mut neighbors[new as usize];
+                list.reserve(adj.len());
+                for &nb in adj {
+                    if let Some(nn) = plan.map(nb) {
+                        list.push(nn);
+                    }
+                }
+            }
+            layer.neighbors = neighbors;
+        }
+        let mut node_level = vec![0u8; plan.new_len];
+        for (old, &lvl) in self.node_level.iter().enumerate() {
+            if let Some(new) = plan.map(old as u32) {
+                node_level[new as usize] = lvl;
+            }
+        }
+        // Entry repair mirrors `relink_around_dead`: the entry is live
+        // after removal, so it normally just renumbers; if the planner
+        // dropped it anyway, fall back to the highest live survivor.
+        let entry = plan.map(self.entry).unwrap_or_else(|| {
+            let mut best = 0usize;
+            for i in 0..plan.new_len {
+                if !dead[i] && (dead[best] || node_level[i] > node_level[best]) {
+                    best = i;
+                }
+            }
+            best as u32
+        });
+        self.keys = plan.store.clone();
+        self.node_level = node_level;
+        self.entry = entry;
+        self.dead = dead;
+        self.dead_count = dead_count;
+        true
+    }
+
     fn clone_index(&self) -> Box<dyn VectorIndex> {
         Box::new(self.clone())
     }
@@ -593,6 +655,46 @@ mod tests {
             r.ids.len(),
             idx.live_len()
         );
+    }
+
+    #[test]
+    fn remap_relabels_graph_and_preserves_results() {
+        let keys = random_keys(800, 16, 43);
+        let mut idx = HnswIndex::build(keys.clone(), HnswParams::default());
+        let removed: Vec<u32> = (0..800).step_by(4).map(|i| i as u32).collect();
+        assert!(idx.remove_batch(&removed));
+        // Pre-remap results in old dense ids, for a panel of queries.
+        let params = SearchParams { ef: 128, nprobe: 0 };
+        let panel: Vec<Vec<f32>> = (0..10).map(|qi| keys.row(qi * 67 + 1).to_vec()).collect();
+        let pre: Vec<Vec<u32>> = panel.iter().map(|q| idx.search(q, 10, &params).ids).collect();
+        let (plan, keep) = RemapPlan::from_dead(&removed, &keys, 1).expect("plan must build");
+        assert_eq!(keep.len(), 600);
+        assert!(idx.supports_remap());
+        assert!(idx.remap_dense(&plan));
+        assert_eq!(idx.len(), keep.len());
+        assert_eq!(idx.tombstones(), 0);
+        // Pure relabeling: the surviving graph is identical modulo rare
+        // pruning-stale edges into dead transit nodes (which occupied
+        // beam slots pre-remap and vanish post-remap), so searches must
+        // return (near-)exactly the renumbered pre-remap results.
+        for (q, old_ids) in panel.iter().zip(pre.iter()) {
+            let post = idx.search(q, 10, &params).ids;
+            let expect: Vec<u32> = old_ids.iter().map(|&o| plan.map(o).unwrap()).collect();
+            for &id in &post {
+                assert!((id as usize) < keep.len(), "post-remap id {id} out of range");
+            }
+            let hits = post.iter().filter(|id| expect.contains(id)).count();
+            assert!(
+                hits * 10 >= expect.len() * 9,
+                "remap changed search results: {hits}/{} overlap",
+                expect.len()
+            );
+        }
+        // Inserts keep working in the compacted space.
+        let grown = plan.store.append_rows(Matrix::from_fn(4, 16, |r, c| (r + c) as f32 * 0.1));
+        let total = grown.rows();
+        assert!(idx.insert_batch(grown, keep.len()..total, &InsertContext::none()));
+        assert_eq!(idx.len(), total);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! lists are compacted (dead ids dropped), exactly how Faiss reclaims a
 //! `remove_ids`-heavy IVF without retraining the quantiser.
 
-use super::{InsertContext, KeyStore, SearchParams, SearchResult, VectorIndex};
+use super::{InsertContext, KeyStore, RemapPlan, SearchParams, SearchResult, VectorIndex};
 use crate::tensor::{argtopk, dot, l2_sq};
 use std::ops::Range;
 
@@ -152,15 +152,50 @@ impl VectorIndex for IvfIndex {
         }
         // Compaction threshold: drop dead entries from the inverted lists
         // once the tombstones accumulated since the last compaction exceed
-        // a quarter of the corpus, so probes stop paying for them. The
-        // tombstone bitset stays (dense ids are permanent).
-        if (self.dead_count - self.dead_at_compact) * 4 > self.keys.rows() {
+        // a quarter of the LIVE corpus, so probes stop paying for them —
+        // a total-slots denominator would fire ever more rarely as dead
+        // rows accumulate over a streaming session. The tombstone bitset
+        // stays (dense ids are permanent between reclamation epochs).
+        if (self.dead_count - self.dead_at_compact) * 4 > self.keys.rows() - self.dead_count {
             let dead = &self.dead;
             for l in &mut self.lists {
                 l.retain(|&id| !dead[id as usize]);
             }
             self.dead_at_compact = self.dead_count;
         }
+        true
+    }
+
+    fn supports_remap(&self) -> bool {
+        true
+    }
+
+    fn dead_ids(&self) -> Vec<u32> {
+        super::collect_dead(&self.dead)
+    }
+
+    /// Rewrite every inverted list through the renumbering (dropping
+    /// reclaimed entries) and adopt the compacted store; the coarse
+    /// quantiser is untouched — exactly how Faiss survives `remove_ids`
+    /// without retraining.
+    fn remap_dense(&mut self, plan: &RemapPlan) -> bool {
+        if plan.old_to_new.len() != self.keys.rows() || plan.store.rows() != plan.new_len {
+            return false;
+        }
+        let (dead, dead_count) = super::remap_dead(&self.dead, plan);
+        for l in &mut self.lists {
+            let mut out = Vec::with_capacity(l.len());
+            for &id in l.iter() {
+                if let Some(new) = plan.map(id) {
+                    out.push(new);
+                }
+            }
+            *l = out;
+        }
+        self.keys = plan.store.clone();
+        self.dead = dead;
+        self.dead_count = dead_count;
+        self.dead_at_compact = dead_count;
         true
     }
 
@@ -231,6 +266,28 @@ mod tests {
         let s1 = idx.search(&q, 5, &SearchParams { ef: 0, nprobe: 1 }).scanned;
         let s8 = idx.search(&q, 5, &SearchParams { ef: 0, nprobe: 8 }).scanned;
         assert!(s8 > s1);
+    }
+
+    #[test]
+    fn remap_then_full_probe_matches_exact_over_survivors() {
+        let keys = random_keys(256, 8, 17);
+        let mut idx = IvfIndex::build(keys.clone(), Some(16), 17);
+        let removed: Vec<u32> = (0..256).step_by(4).map(|i| i as u32).collect();
+        assert!(idx.remove_batch(&removed));
+        assert_eq!(idx.dead_ids(), removed);
+        let (plan, keep) = RemapPlan::from_dead(&removed, &keys, 1).expect("plan must build");
+        assert_eq!(keep, (0..256u32).filter(|i| i % 4 != 0).collect::<Vec<u32>>());
+        assert!(idx.supports_remap());
+        assert!(idx.remap_dense(&plan));
+        assert_eq!(idx.len(), keep.len());
+        assert_eq!(idx.tombstones(), 0);
+        let listed: usize = idx.lists.iter().map(|l| l.len()).sum();
+        assert_eq!(listed, keep.len(), "lists must hold exactly the survivors");
+        // Full probe over the compacted space equals exact KNN over it.
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.4).cos()).collect();
+        let r = idx.search(&q, 10, &SearchParams { ef: 0, nprobe: 16 });
+        let truth = exact_topk_store(&plan.store, &q, 10);
+        assert_eq!(r.ids, truth, "remapped full probe must stay exact");
     }
 
     #[test]

@@ -88,6 +88,103 @@ impl<'a> InsertContext<'a> {
     }
 }
 
+/// A reclamation epoch's dense-id remap, shared by every index family of
+/// one GQA group. Tombstoned dense slots are physically dropped: surviving
+/// rows are renumbered contiguously (order-preserving), the key store is
+/// replaced by its compacted form, and the whole thing is published under
+/// a bumped **store generation** — dense ids are only meaningful within a
+/// generation, so readers must pair an index front with the id map of the
+/// same generation (see `baselines::GroupShared`).
+pub struct RemapPlan {
+    /// Compacted key store: exactly the surviving rows, in the old order.
+    pub store: KeyStore,
+    /// Old dense id → new dense id; [`RemapPlan::DROPPED`] marks slots
+    /// being reclaimed. Length == the pre-remap dense slot count.
+    pub old_to_new: Vec<u32>,
+    /// Dense slots in the compacted space (== `store.rows()`).
+    pub new_len: usize,
+    /// The store generation after this remap (stamped on index fronts).
+    pub store_gen: u64,
+}
+
+impl RemapPlan {
+    /// Sentinel in `old_to_new` for reclaimed slots.
+    pub const DROPPED: u32 = u32::MAX;
+
+    /// Build the plan that drops `dead` (ascending dense ids) from
+    /// `store`: survivors renumber contiguously in the old order. This is
+    /// THE planner — `Job::Compact` and every remap test go through it.
+    /// Returns the plan plus the surviving old ids (`keep`, which the
+    /// caller maps to surviving absolute ids), or `None` when there is
+    /// nothing to drop or nothing would survive (the graph families need
+    /// at least one node).
+    pub fn from_dead(dead: &[u32], store: &KeyStore, gen: u64) -> Option<(RemapPlan, Vec<u32>)> {
+        debug_assert!(dead.windows(2).all(|w| w[0] < w[1]), "dead ids must be ascending");
+        let old_len = store.rows();
+        if dead.is_empty() {
+            return None;
+        }
+        let mut old_to_new = vec![RemapPlan::DROPPED; old_len];
+        let mut keep: Vec<u32> = Vec::with_capacity(old_len.saturating_sub(dead.len()));
+        let mut di = 0usize;
+        for old in 0..old_len as u32 {
+            if di < dead.len() && dead[di] == old {
+                di += 1;
+                continue;
+            }
+            old_to_new[old as usize] = keep.len() as u32;
+            keep.push(old);
+        }
+        if keep.is_empty() {
+            return None;
+        }
+        let plan = RemapPlan {
+            store: store.compact_select(&keep),
+            old_to_new,
+            new_len: keep.len(),
+            store_gen: gen,
+        };
+        Some((plan, keep))
+    }
+
+    /// New dense id of `old`, or `None` when the slot is reclaimed.
+    #[inline]
+    pub fn map(&self, old: u32) -> Option<u32> {
+        match self.old_to_new.get(old as usize) {
+            Some(&n) if n != RemapPlan::DROPPED => Some(n),
+            _ => None,
+        }
+    }
+}
+
+/// Shared by the families' `remap_dense` impls: renumber a tombstone
+/// bitset into the compacted space. Heads of one GQA group receive the
+/// identical remove stream, so the planner (built from head 0's dead set)
+/// normally drops every tombstone — but a diverged head's extra tombstone
+/// survives the remap as a tombstone instead of being resurrected.
+pub(crate) fn remap_dead(dead: &[bool], plan: &RemapPlan) -> (Vec<bool>, usize) {
+    let mut out = vec![false; plan.new_len];
+    let mut count = 0usize;
+    for (old, &was_dead) in dead.iter().enumerate() {
+        if !was_dead {
+            continue;
+        }
+        if let Some(new) = plan.map(old as u32) {
+            out[new as usize] = true;
+            count += 1;
+        }
+    }
+    (out, count)
+}
+
+/// Shared by the families' `dead_ids` impls: ascending tombstoned slots.
+pub(crate) fn collect_dead(dead: &[bool]) -> Vec<u32> {
+    dead.iter()
+        .enumerate()
+        .filter_map(|(i, &d)| if d { Some(i as u32) } else { None })
+        .collect()
+}
+
 /// Common interface over all four index families.
 ///
 /// Indexes are **online**: construction happens once over the prefill keys,
@@ -168,6 +265,32 @@ pub trait VectorIndex: Send + Sync {
     /// `false` when the family does not implement removal (the default).
     fn remove_batch(&mut self, ids: &[u32]) -> bool {
         let _ = ids;
+        false
+    }
+
+    /// Whether this family implements the reclamation remap
+    /// ([`VectorIndex::remap_dense`]).
+    fn supports_remap(&self) -> bool {
+        false
+    }
+
+    /// Dense ids currently tombstoned, ascending. Families that support
+    /// removal must report them — the reclamation planner builds the
+    /// old→new renumbering from the first head's set.
+    fn dead_ids(&self) -> Vec<u32> {
+        Vec::new()
+    }
+
+    /// Apply a reclamation epoch's dense-id remap: adopt `plan.store` as
+    /// the key store and renumber every internal dense reference through
+    /// `plan.old_to_new`, dropping reclaimed slots. After a successful
+    /// remap `len() == plan.new_len` and (absent head divergence)
+    /// `tombstones() == 0`; searches over surviving rows must return the
+    /// renumbered ids of (approximately, for the graphs) the same rows as
+    /// before. Returns `false` when unsupported or when the plan does not
+    /// match this index's dense space (the default).
+    fn remap_dense(&mut self, plan: &RemapPlan) -> bool {
+        let _ = plan;
         false
     }
 

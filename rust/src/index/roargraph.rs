@@ -53,7 +53,7 @@
 //! tombstone ratio the graph re-projects itself (the amortised rebuild),
 //! keeping traversal cost proportional to the live set.
 
-use super::{InsertContext, KeyStore, SearchParams, SearchResult, VectorIndex, VisitedSet};
+use super::{InsertContext, KeyStore, RemapPlan, SearchParams, SearchResult, VectorIndex, VisitedSet};
 use crate::tensor::{argtopk, dot, Matrix};
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
@@ -687,11 +687,74 @@ impl VectorIndex for RoarGraph {
         }
         self.fix_entries();
         // Ratio of tombstones accumulated *since the last re-projection*:
-        // dense ids never free up, so the all-time ratio would cross the
-        // threshold once and then rebuild on every removal forever.
-        if (self.dead_count - self.dead_at_rebuild) * 4 > self.keys.rows() {
+        // dense ids never free up between reclamation epochs, so the
+        // all-time ratio would cross the threshold once and then rebuild
+        // on every removal forever. The denominator is the LIVE count —
+        // measured against total slots the trigger would fire ever more
+        // rarely as a streaming session ages.
+        if (self.dead_count - self.dead_at_rebuild) * 4 > self.keys.rows() - self.dead_count {
             self.rebuild();
         }
+        true
+    }
+
+    fn supports_remap(&self) -> bool {
+        true
+    }
+
+    fn dead_ids(&self) -> Vec<u32> {
+        super::collect_dead(&self.dead)
+    }
+
+    /// Relabel the whole graph (CSR base + patch/extra overlays) into the
+    /// compacted id space and re-freeze it as the new base. Dead transit
+    /// nodes vanish, but removal already bridged every hole with patch
+    /// edges, and the standard connectivity repair re-attaches anything
+    /// the bridges missed — so live-row search quality is preserved up to
+    /// recall tolerance without paying a full re-projection.
+    fn remap_dense(&mut self, plan: &RemapPlan) -> bool {
+        let old_n = self.keys.rows();
+        if plan.old_to_new.len() != old_n || plan.store.rows() != plan.new_len || plan.new_len == 0
+        {
+            return false;
+        }
+        let (dead, dead_count) = super::remap_dead(&self.dead, plan);
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); plan.new_len];
+        let mut nbuf: Vec<u32> = Vec::new();
+        for old in 0..old_n as u32 {
+            let Some(new) = plan.map(old) else { continue };
+            self.collect_neighbors(old, &mut nbuf);
+            let list = &mut adj[new as usize];
+            list.reserve(nbuf.len());
+            for &nb in &nbuf {
+                if let Some(nn) = plan.map(nb) {
+                    if nn != new {
+                        list.push(nn);
+                    }
+                }
+            }
+            list.sort_unstable();
+            list.dedup();
+        }
+        // Entries are live after `fix_entries`, so they normally just
+        // renumber; refill from the first live survivor if not.
+        let mut entries: Vec<u32> = self.entries.iter().filter_map(|&e| plan.map(e)).collect();
+        if entries.is_empty() {
+            let first_live = (0..plan.new_len).find(|&i| !dead[i]).unwrap_or(0);
+            entries.push(first_live as u32);
+        }
+        self.keys = plan.store.clone();
+        self.entries = entries;
+        self.dead = dead;
+        self.dead_count = dead_count;
+        self.dead_at_rebuild = dead_count;
+        self.base_n = plan.new_len;
+        self.patch.clear();
+        self.extra.clear();
+        self.primary_anchor.clear();
+        self.pending = 0;
+        let adj = self.repair_connectivity(adj, self.params.repair_sample);
+        self.freeze(adj);
         true
     }
 
@@ -839,6 +902,42 @@ mod tests {
         // A removed key queried directly surfaces a neighbor, not itself.
         let probe = idx.search(keys.row(250), 5, &SearchParams { ef: 64, nprobe: 0 });
         assert!(!probe.ids.contains(&250));
+    }
+
+    #[test]
+    fn remap_compacts_ids_and_keeps_live_set_searchable() {
+        let (keys, queries) = ood_setup(500, 60, 8, 79);
+        let mut idx = RoarGraph::build(keys.clone(), &queries, RoarParams::default());
+        // Below the rebuild ratio: tombstone + bridge path only.
+        let removed: Vec<u32> = (0..100).map(|i| (i * 5) as u32).collect();
+        assert!(idx.remove_batch(&removed));
+        assert_eq!(idx.dead_ids(), removed);
+        let (plan, keep) = RemapPlan::from_dead(&removed, &keys, 1).expect("plan must build");
+        assert_eq!(keep.len(), 400);
+        assert!(idx.supports_remap());
+        assert!(idx.remap_dense(&plan));
+        assert_eq!(idx.len(), 400);
+        assert_eq!(idx.base_len(), 400);
+        assert_eq!(idx.tombstones(), 0);
+        assert_eq!(idx.pending_inserts(), 0);
+        // Every survivor reachable under a full beam, in the new id space.
+        let r = idx.search(&vec![0.0f32; 8], 400, &SearchParams { ef: 400, nprobe: 0 });
+        assert_eq!(r.ids.len(), 400, "remap lost reachability");
+        for id in &r.ids {
+            assert!((*id as usize) < 400, "stale dense id {id} after remap");
+        }
+        // A surviving key queried directly still surfaces itself.
+        let probe_old = 251u32; // 251 % 5 != 0 -> survives
+        let probe_new = plan.map(probe_old).unwrap();
+        let r = idx.search(keys.row(probe_old as usize), 5, &SearchParams { ef: 64, nprobe: 0 });
+        assert!(r.ids.contains(&probe_new), "survivor lost after remap: {:?}", r.ids);
+        // Online inserts keep working against the compacted store.
+        let grown = plan
+            .store
+            .append_rows(Matrix::from_vec(1, 8, vec![9.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]));
+        assert!(idx.insert_batch(grown, 400..401, &InsertContext::none()));
+        let r = idx.search(&[1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0], 3, &SearchParams::default());
+        assert!(r.ids.contains(&400), "post-remap insert not retrieved");
     }
 
     #[test]

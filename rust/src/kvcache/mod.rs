@@ -192,9 +192,11 @@ impl TieredKvCache {
         self.indexed_end.saturating_sub(self.live_indexed_start())
     }
 
-    /// One past the last indexed host token (the drain boundary).
+    /// One past the last indexed host token (the drain boundary). Clamped
+    /// to the cache length: a cache shorter than the static pattern must
+    /// not report a boundary of `sink` tokens it does not have.
     pub fn indexed_end(&self) -> usize {
-        self.indexed_end.max(self.pattern.sink)
+        self.indexed_end.max(self.pattern.sink).min(self.len())
     }
 
     /// Retired (evicted) host ids: `[sink, retired_end)`. These tokens'
@@ -531,6 +533,23 @@ mod tests {
         assert_eq!(c.device_ids().len(), 20);
         assert!(c.indexed_ids().is_empty());
         assert!(c.retired_ids().is_empty());
+    }
+
+    #[test]
+    fn indexed_end_clamps_to_short_cache() {
+        // Regression: a cache shorter than the static pattern used to
+        // report a drain boundary of `sink` (tokens it does not have).
+        let pattern = StaticPattern { sink: 128, window: 512 };
+        let c = filled(50, 4, pattern);
+        assert_eq!(c.indexed_end(), 50);
+        assert!(c.indexed_ids().is_empty());
+        let empty = TieredKvCache::new(4, pattern);
+        assert_eq!(empty.indexed_end(), 0);
+        // At or above the sink, the boundary saturates at the sink as before.
+        let c = filled(200, 4, pattern);
+        assert_eq!(c.indexed_end(), 128);
+        let c = filled(1000, 4, pattern);
+        assert_eq!(c.indexed_end(), 1000 - 512);
     }
 
     #[test]

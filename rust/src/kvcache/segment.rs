@@ -123,6 +123,61 @@ impl SegmentedStore {
         out
     }
 
+    /// Append a non-empty chunk as-is (no tail merge; used by compaction,
+    /// which controls its own chunk granularity).
+    fn push_segment(&mut self, seg: Arc<Matrix>) {
+        if seg.rows() == 0 {
+            return;
+        }
+        self.starts.push(self.rows);
+        self.rows += seg.rows();
+        self.segments.push(seg);
+    }
+
+    /// A new store holding exactly the rows named in `keep` (strictly
+    /// ascending), renumbered contiguously in order — the storage half of
+    /// a reclamation epoch: tombstoned rows are physically dropped, so
+    /// host memory actually shrinks. Segments that survive intact are
+    /// shared by `Arc` without copying (the common FIFO-retirement case
+    /// is a prefix drop, where every suffix segment survives); rows of
+    /// partially-surviving segments are gathered into fresh chunks. The
+    /// receiver is untouched (persistent structure).
+    pub fn compact_select(&self, keep: &[u32]) -> SegmentedStore {
+        debug_assert!(keep.windows(2).all(|w| w[0] < w[1]), "keep must be ascending");
+        debug_assert!(keep.last().map(|&k| (k as usize) < self.rows).unwrap_or(true));
+        let mut out = SegmentedStore::new(self.cols);
+        let mut i = 0usize; // cursor into keep
+        let mut pending = Matrix::zeros(0, self.cols);
+        for (seg_idx, seg) in self.segments.iter().enumerate() {
+            let start = self.starts[seg_idx];
+            let end = start + seg.rows();
+            let lo = i;
+            while i < keep.len() && (keep[i] as usize) < end {
+                i += 1;
+            }
+            if i == lo {
+                continue;
+            }
+            if i - lo == seg.rows() {
+                // Every row survives: flush gathered rows, share the chunk.
+                if pending.rows() > 0 {
+                    let flushed = std::mem::replace(&mut pending, Matrix::zeros(0, self.cols));
+                    out.push_segment(Arc::new(flushed));
+                }
+                out.push_segment(seg.clone());
+            } else {
+                for &k in &keep[lo..i] {
+                    pending.push_row(seg.row(k as usize - start));
+                }
+            }
+        }
+        if pending.rows() > 0 {
+            out.push_segment(Arc::new(pending));
+        }
+        debug_assert_eq!(out.rows(), keep.len());
+        out
+    }
+
     /// Materialise into one contiguous matrix (index builds that need a
     /// dense view, and the bench's segmented-vs-copy comparison).
     pub fn to_matrix(&self) -> Matrix {
@@ -200,6 +255,68 @@ mod tests {
         let dense = s.to_matrix();
         for i in (0..s.rows()).step_by(97) {
             assert_eq!(s.row(i), dense.row(i));
+        }
+    }
+
+    #[test]
+    fn compact_select_gathers_live_rows() {
+        let mut s = SegmentedStore::from_matrix(mat(64, 3, 0.0));
+        for b in 0..6 {
+            s = s.append_rows(mat(8, 3, 100.0 * (b + 1) as f32));
+        }
+        let n = s.rows();
+        // Keep every row not divisible by 3.
+        let keep: Vec<u32> = (0..n as u32).filter(|k| k % 3 != 0).collect();
+        let c = s.compact_select(&keep);
+        assert_eq!(c.rows(), keep.len());
+        assert_eq!(c.cols(), 3);
+        for (new, &old) in keep.iter().enumerate() {
+            assert_eq!(c.row(new), s.row(old as usize), "row {old} -> {new} diverged");
+        }
+        // Degenerate selections.
+        let none = s.compact_select(&[]);
+        assert!(none.is_empty());
+        assert_eq!(none.cols(), 3);
+        let all: Vec<u32> = (0..n as u32).collect();
+        let full = s.compact_select(&all);
+        assert_eq!(full.rows(), n);
+        assert_eq!(full.row(n - 1), s.row(n - 1));
+    }
+
+    #[test]
+    fn compact_select_prefix_drop_shares_suffix_segments() {
+        // FIFO retirement drops a dense-id prefix: every segment wholly
+        // past the cut must be shared by Arc, not copied.
+        let mut s = SegmentedStore::from_matrix(mat(32, 2, 0.0));
+        s = s.append_rows(mat(64, 2, 500.0)); // tail-merges into one chunk of 96
+        s = s.append_rows(mat(16, 2, 900.0));
+        s = s.append_rows(mat(4, 2, 990.0));
+        assert!(s.segment_count() >= 3, "setup needs several segments");
+        // Drop the first segment entirely (keep a pure suffix).
+        let first_len = s.segments()[0].rows();
+        let keep: Vec<u32> = (first_len as u32..s.rows() as u32).collect();
+        let c = s.compact_select(&keep);
+        assert_eq!(c.rows(), s.rows() - first_len);
+        // Every surviving segment is the same allocation.
+        assert_eq!(c.segment_count(), s.segment_count() - 1);
+        for (i, seg) in c.segments().iter().enumerate() {
+            assert!(Arc::ptr_eq(seg, &s.segments()[i + 1]), "segment {i} copied");
+        }
+        for (new, &old) in keep.iter().enumerate() {
+            assert_eq!(c.row(new), s.row(old as usize));
+        }
+        // A cut inside the first segment gathers its survivors but still
+        // shares the untouched suffix chunks.
+        let keep2: Vec<u32> = (4u32..s.rows() as u32).collect();
+        let c2 = s.compact_select(&keep2);
+        assert_eq!(c2.rows(), s.rows() - 4);
+        let last = s.segment_count() - 1;
+        assert!(
+            Arc::ptr_eq(&c2.segments()[c2.segment_count() - 1], &s.segments()[last]),
+            "suffix chunk copied"
+        );
+        for (new, &old) in keep2.iter().enumerate() {
+            assert_eq!(c2.row(new), s.row(old as usize));
         }
     }
 

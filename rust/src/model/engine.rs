@@ -35,7 +35,8 @@ use crate::index::KeyStore;
 use crate::kvcache::TieredKvCache;
 use crate::metrics::{PhaseBreakdown, PhaseTimer};
 use crate::model::maintain::{
-    run_drain, run_evict, Done, DoneKind, DrainJob, EvictJob, Job, MaintenanceState,
+    run_compact, run_drain, run_evict, CompactJob, Done, DoneKind, DrainJob, EvictJob, Job,
+    MaintenanceState,
 };
 use crate::model::weights::Weights;
 use crate::runtime::{literal_to_f32, Runtime};
@@ -112,6 +113,10 @@ pub struct Session {
     pub drained_tokens: u64,
     /// Number of drain operations performed.
     pub drains: u64,
+    /// True once any removal (eviction or truncation) has tombstoned index
+    /// slots — until then the reclaim trigger skips its per-group front
+    /// polling entirely (sessions that never remove pay nothing).
+    pub had_removals: bool,
 }
 
 /// One decode step's outputs.
@@ -294,6 +299,7 @@ impl Engine {
             retrievals: 0,
             drained_tokens: 0,
             drains: 0,
+            had_removals: false,
         })
     }
 
@@ -583,6 +589,12 @@ impl Engine {
     ///   attention synchronously and tombstoned in the indexes
     ///   asynchronously (StreamingLLM-style window retirement over host
     ///   memory).
+    /// * **Compact** — once a group's index tombstones exceed
+    ///   `eviction.reclaim_ratio` × live rows, a reclamation epoch
+    ///   physically drops the dead rows: compacted store + id map under a
+    ///   bumped store generation, dense ids remapped in all four index
+    ///   families. This is what turns bounded *attention* into bounded
+    ///   *memory* for indefinitely long streaming sessions.
     fn maintain_indexes(&self, sess: &mut Session) {
         let mcfg = self.cfg.retrieval.maintenance;
         let ecfg = self.cfg.retrieval.eviction;
@@ -599,8 +611,16 @@ impl Engine {
         // `drain_watermark == 0` disables *index* maintenance. StreamingLLM
         // sessions still drop their overflow every step: that is the
         // method's semantics (sink + window only), and it must not change
-        // with a performance knob.
-        if (!mcfg.enabled() && !streaming && !ecfg.enabled()) || sess.retrievers.is_empty() {
+        // with a performance knob. Reclamation keeps the loop alive only
+        // for sessions that actually tombstoned something (`had_removals`
+        // covers the truncation-without-eviction case) — reclaim_enabled
+        // alone must not defeat the early return, since it defaults on.
+        if (!mcfg.enabled()
+            && !streaming
+            && !ecfg.enabled()
+            && !(ecfg.reclaim_enabled() && sess.had_removals))
+            || sess.retrievers.is_empty()
+        {
             return;
         }
 
@@ -657,6 +677,7 @@ impl Engine {
                         let n = live - ecfg.max_indexed;
                         let ids = sess.caches[layer][kvh].retire_oldest_indexed(n);
                         if !ids.is_empty() {
+                            sess.had_removals = true;
                             sess.maint.stats.evicted_tokens += ids.len() as u64;
                             let heads: Vec<Arc<dyn HostRetriever>> = (0..group)
                                 .map(|g| sess.retrievers[layer][kvh * group + g].clone())
@@ -674,6 +695,49 @@ impl Engine {
                                 let done = run_evict(&job);
                                 sess.apply_done(&done);
                             }
+                        }
+                    }
+                }
+                // Reclamation epoch (the tentpole): once the tombstones
+                // accumulated in this group's indexes exceed
+                // `reclaim_ratio` × the live row count, run a
+                // `Job::Compact` — compacted store + id map under a
+                // bumped store generation, dense ids remapped in every
+                // head's index. Gated on the in-flight set: a drain
+                // snapshot taken before the remap would carry pre-remap
+                // dense contracts, so the two never overlap for a group
+                // (the worker queue serializes everything else). The
+                // `had_removals` flag keeps the per-token cost at zero for
+                // sessions that never evicted or truncated; otherwise the
+                // poll is ONE front load per group.
+                if ecfg.reclaim_enabled()
+                    && sess.had_removals
+                    && !sess.maint.inflight.contains(&(layer, kvh))
+                {
+                    let (live, dead) = sess.retrievers[layer][kvh * group]
+                        .reclaim_counts()
+                        .unwrap_or((0, 0));
+                    let claimable = live > 0
+                        && dead > 0
+                        && (dead as f64) >= (ecfg.reclaim_ratio as f64) * (live as f64)
+                        && (0..group)
+                            .all(|g| sess.retrievers[layer][kvh * group + g].supports_reclaim());
+                    if claimable {
+                        let heads: Vec<Arc<dyn HostRetriever>> = (0..group)
+                            .map(|g| sess.retrievers[layer][kvh * group + g].clone())
+                            .collect();
+                        let job = CompactJob {
+                            layer,
+                            kvh,
+                            heads,
+                            group: sess.groups[layer][kvh].clone(),
+                        };
+                        if mcfg.async_worker {
+                            sess.maint.inflight.insert((layer, kvh));
+                            sess.maint.submit(Job::Compact(job));
+                        } else {
+                            let done = run_compact(&job);
+                            sess.apply_done(&done);
                         }
                     }
                 }
@@ -837,6 +901,7 @@ impl Session {
             retrievals: 0,
             drained_tokens: 0,
             drains: 0,
+            had_removals: false,
         }
     }
 
@@ -866,6 +931,15 @@ impl Session {
                 }
             }
             DoneKind::Evicted { .. } => {}
+            DoneKind::Compacted { dropped } => {
+                // Compactions hold the in-flight marker exactly like
+                // drains (they must not overlap a drain snapshot).
+                self.maint.inflight.remove(&(d.layer, d.kvh));
+                if d.ok {
+                    self.maint.stats.reclaims += 1;
+                    self.maint.stats.reclaimed_rows += dropped;
+                }
+            }
         }
     }
 
@@ -981,6 +1055,11 @@ impl Engine {
             .retrievers
             .iter()
             .all(|layer| layer.iter().all(|r| r.supports_remove()));
+        if removable && new_len < sess.len {
+            // The tombstones below make this session eligible for
+            // reclamation epochs (see `Session::had_removals`).
+            sess.had_removals = true;
+        }
         for layer in 0..spec.layers {
             for kvh in 0..spec.kv_heads {
                 let old_len = sess.caches[layer][kvh].len();
@@ -1070,6 +1149,7 @@ impl Engine {
             retrievals: 0,
             drained_tokens: 0,
             drains: 0,
+            had_removals: false,
         })
     }
 }

@@ -18,6 +18,13 @@
 //! attention set *synchronously* (a boundary bump) so correctness never
 //! waits on the worker — the index tombstone is just reclamation.
 //!
+//! Reclamation epochs ([`CompactJob`]) ride it too: once a group's
+//! tombstones exceed `retrieval.eviction.reclaim_ratio` × live rows, the
+//! worker builds a compacted store + id map, bumps the group's **store
+//! generation**, and remaps dense ids in every head's index
+//! ([`crate::index::RemapPlan`]) — the step that makes eviction free
+//! memory *physically*, not just logically.
+//!
 //! One worker thread per session keeps the design deadlock-free by
 //! construction: the decode thread never blocks on the worker (completions
 //! are polled), and the worker only blocks reclaiming a back buffer whose
@@ -26,7 +33,7 @@
 //! `insert_batch` can never be violated mid-queue.
 
 use crate::baselines::{GroupShared, HostRetriever};
-use crate::index::InsertContext;
+use crate::index::{InsertContext, RemapPlan};
 use crate::tensor::Matrix;
 use crate::util::parallel;
 use std::collections::HashSet;
@@ -66,9 +73,24 @@ pub struct EvictJob {
     pub group: Arc<GroupShared>,
 }
 
+/// One group's reclamation epoch (the tentpole `Job::Compact`): build a
+/// compacted store + id map from the group's tombstone set, bump the
+/// store generation, and remap every head's index. The plan is built at
+/// *execution* time (not snapshot time) so evictions already in the queue
+/// are folded in, and the engine's in-flight set serializes it against
+/// drain snapshots for the same group.
+pub struct CompactJob {
+    pub layer: usize,
+    pub kvh: usize,
+    /// Every query head of the group (remap fan-out).
+    pub heads: Vec<Arc<dyn HostRetriever>>,
+    pub group: Arc<GroupShared>,
+}
+
 pub enum Job {
     Drain(DrainJob),
     Evict(EvictJob),
+    Compact(CompactJob),
     /// Replies once every job enqueued before it has executed (flush).
     Barrier(Sender<()>),
 }
@@ -77,6 +99,8 @@ pub enum Job {
 pub enum DoneKind {
     Drained { upto: usize, count: u64 },
     Evicted { count: u64 },
+    /// Rows physically reclaimed by a `Job::Compact` epoch.
+    Compacted { dropped: u64 },
 }
 
 /// A completed job, reported back to the session.
@@ -167,10 +191,85 @@ pub fn run_evict(j: &EvictJob) -> Done {
     }
 }
 
+/// Execute one reclamation epoch. Publish order is the PR-2 snapshot
+/// order extended across a generation bump: the new map is published
+/// first (with the previous generation's map retained), then the
+/// compacted store, then every head's index front (each stamped with the
+/// new generation), and only then is the old map released — a decode
+/// reader holding ANY front can always pair it with a same-generation map
+/// and therefore never observes an unmapped or misnumbered dense id.
+pub fn run_compact(j: &CompactJob) -> Done {
+    let t = Instant::now();
+    let fail = |t: Instant| Done {
+        layer: j.layer,
+        kvh: j.kvh,
+        kind: DoneKind::Compacted { dropped: 0 },
+        swap_s: t.elapsed().as_secs_f64(),
+        ok: false,
+    };
+    if j.heads.is_empty() || !j.heads.iter().all(|h| h.supports_reclaim()) {
+        return fail(t);
+    }
+    // Plan from head 0's tombstone set: every head of a group receives
+    // the identical remove stream, so head 0 is representative (per-head
+    // deadness is still carried through each family's remap, so a
+    // diverged head degrades to extra tombstones, never resurrections).
+    let dead = j.heads[0].dense_dead_ids();
+    let old_map = j.group.id_map();
+    let old_store = j.group.keys();
+    let old_len = old_map.len();
+    if dead.is_empty() || old_store.rows() != old_len {
+        return fail(t);
+    }
+    // Pre-validate EVERY head BEFORE publishing anything (the run_drain
+    // discipline): a head whose dense slot count disagrees with the group
+    // map (the drain-divergence degradation path) would refuse its remap
+    // *after* the map had already moved to the new generation, stranding
+    // that head on a generation the next epoch would garbage-collect.
+    // Refusing here mutates nothing; the engine retries on a later step.
+    let all_in_sync = j
+        .heads
+        .iter()
+        .all(|h| h.reclaim_counts().map(|(live, dead)| live + dead == old_len).unwrap_or(false));
+    if !all_in_sync {
+        return fail(t);
+    }
+    let gen = old_map.store_gen + 1;
+    // `None` ⇒ nothing to drop or nothing would survive (graph families
+    // need ≥ 1 node); skip the epoch — the next eviction/drain changes
+    // the live set and re-triggers.
+    let Some((plan, keep)) = RemapPlan::from_dead(&dead, &old_store, gen) else {
+        return fail(t);
+    };
+    let dropped = (old_len - keep.len()) as u64;
+    let new_ids: Vec<u32> = keep.iter().map(|&o| old_map.ids[o as usize]).collect();
+    let new_store = plan.store.clone();
+    let plan = Arc::new(plan);
+    j.group.publish_remap(new_ids, new_store, gen);
+    let heads: Vec<usize> = (0..j.heads.len()).collect();
+    let oks: Vec<bool> = parallel::par_map(&heads, |&h| j.heads[h].apply_remap(&plan));
+    let ok = oks.iter().all(|&o| o);
+    debug_assert!(ok, "GQA group diverged during compact (layer {} kvh {})", j.layer, j.kvh);
+    if ok {
+        // Release the previous generation's map only when every front
+        // carries the new one; a (unreachable) diverged head keeps its
+        // pre-remap pairing alive instead of stranding its readers.
+        j.group.finish_remap();
+    }
+    Done {
+        layer: j.layer,
+        kvh: j.kvh,
+        kind: DoneKind::Compacted { dropped },
+        swap_s: t.elapsed().as_secs_f64(),
+        ok,
+    }
+}
+
 fn run_job(job: &Job) -> Option<Done> {
     match job {
         Job::Drain(j) => Some(run_drain(j)),
         Job::Evict(j) => Some(run_evict(j)),
+        Job::Compact(j) => Some(run_compact(j)),
         Job::Barrier(tx) => {
             let _ = tx.send(());
             None
@@ -196,8 +295,11 @@ impl WorkerHandle {
             .name("kv-maintenance".into())
             .spawn(move || {
                 while let Ok(job) = rx.recv() {
+                    let counted = !matches!(job, Job::Barrier(_));
                     let done = run_job(&job);
-                    depth_w.fetch_sub(1, Ordering::SeqCst);
+                    if counted {
+                        depth_w.fetch_sub(1, Ordering::SeqCst);
+                    }
                     if let Some(done) = done {
                         if done_tx.send(done).is_err() {
                             return;
@@ -211,8 +313,14 @@ impl WorkerHandle {
 
     fn submit(&self, job: Job) {
         if let Some(tx) = &self.tx {
-            self.depth.fetch_add(1, Ordering::SeqCst);
-            if tx.send(job).is_err() {
+            // Barriers are flush markers, not work: excluding them from
+            // depth accounting keeps `queue_peak` from reporting a phantom
+            // job on every flush()/shutdown().
+            let counted = !matches!(job, Job::Barrier(_));
+            if counted {
+                self.depth.fetch_add(1, Ordering::SeqCst);
+            }
+            if tx.send(job).is_err() && counted {
                 self.depth.fetch_sub(1, Ordering::SeqCst);
             }
         }
@@ -267,15 +375,20 @@ impl Drop for WorkerHandle {
 /// the server's `done` event).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MaintStats {
-    /// Completed jobs (drains + evictions).
+    /// Completed jobs (drains + evictions + compactions).
     pub swaps: u64,
     /// Summed wall-clock of job execution (buffer build + swap), i.e. the
     /// off-thread time that PR 1 used to spend on the token path.
     pub swap_s_total: f64,
-    /// Peak worker queue depth observed at submit time.
+    /// Peak worker queue depth observed at submit time (barrier flush
+    /// markers excluded — they are not work).
     pub queue_peak: usize,
     /// Tokens retired by the eviction policy.
     pub evicted_tokens: u64,
+    /// Reclamation epochs completed (store + index dense-id remaps).
+    pub reclaims: u64,
+    /// Dense rows physically reclaimed across all epochs.
+    pub reclaimed_rows: u64,
 }
 
 impl MaintStats {
@@ -404,5 +517,87 @@ mod tests {
         assert!(matches!(dones[0].kind, DoneKind::Evicted { count: 3 }));
         assert_eq!(head.tombstones(), 3);
         assert_eq!(state.queue_depth(), 0);
+    }
+
+    #[test]
+    fn compact_job_reclaims_through_the_worker() {
+        let (group, queries) = group_setup(48, 8, 5);
+        let cfg = RetrievalConfig::default();
+        let inp = RetrieverInputs {
+            group: group.clone(),
+            prefill_queries: &queries,
+            scale: 0.35,
+            cfg: &cfg,
+            seed: 5,
+        };
+        let head: Arc<dyn HostRetriever> = Arc::from(build_retriever(Method::Flat, inp));
+        let mut state = MaintenanceState::new();
+        state.submit(Job::Evict(EvictJob {
+            layer: 0,
+            kvh: 0,
+            ids: (0..12).collect(),
+            heads: vec![head.clone()],
+            group: group.clone(),
+        }));
+        state.submit(Job::Compact(CompactJob {
+            layer: 0,
+            kvh: 0,
+            heads: vec![head.clone()],
+            group: group.clone(),
+        }));
+        let dones = state.shutdown();
+        assert_eq!(dones.len(), 2);
+        assert!(dones.iter().all(|d| d.ok));
+        assert!(matches!(dones[1].kind, DoneKind::Compacted { dropped: 12 }));
+        // The queue-ordered evictions were folded into the epoch's plan.
+        assert_eq!(group.id_map().len(), 36);
+        assert_eq!(group.keys().rows(), 36);
+        assert_eq!(group.store_generation(), 1);
+        assert_eq!(head.tombstones(), 0);
+        assert_eq!(head.indexed_len(), Some(36));
+        // An epoch with no tombstones is refused without mutating state.
+        let mut state = MaintenanceState::new();
+        state.submit(Job::Compact(CompactJob {
+            layer: 0,
+            kvh: 0,
+            heads: vec![head.clone()],
+            group: group.clone(),
+        }));
+        let dones = state.shutdown();
+        assert_eq!(dones.len(), 1);
+        assert!(!dones[0].ok);
+        assert_eq!(group.store_generation(), 1);
+    }
+
+    #[test]
+    fn barriers_excluded_from_queue_depth_accounting() {
+        // Regression: flush()/shutdown() used to bump the depth counter
+        // for their barrier marker, inflating `queue_peak` by one phantom
+        // job on every quiesce.
+        let (group, _queries) = group_setup(8, 4, 9);
+        let mut state = MaintenanceState::new();
+        assert!(state.flush().is_empty());
+        assert_eq!(state.stats.queue_peak, 0);
+        // A flush on a live-but-idle worker must record no depth either.
+        state.submit(Job::Evict(EvictJob {
+            layer: 0,
+            kvh: 0,
+            ids: vec![0],
+            heads: Vec::new(),
+            group: group.clone(),
+        }));
+        // The worker may or may not have drained the job before the peak
+        // was sampled; either way a real job is the only thing that can
+        // ever raise it.
+        let peak = state.stats.queue_peak;
+        assert!(peak <= 1);
+        let dones = state.flush();
+        assert_eq!(dones.len(), 1);
+        assert_eq!(state.stats.queue_peak, peak, "flush barrier inflated the peak");
+        let _ = state.flush();
+        let _ = state.flush();
+        assert_eq!(state.stats.queue_peak, peak, "repeated flushes inflated the peak");
+        let _ = state.shutdown();
+        assert_eq!(state.stats.queue_peak, peak, "shutdown barrier inflated the peak");
     }
 }

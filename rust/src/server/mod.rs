@@ -136,6 +136,8 @@ fn stream_events(
                     .set("drained_tokens", m.drained_tokens)
                     .set("drains", m.drains)
                     .set("evicted_tokens", m.evicted_tokens)
+                    .set("reclaims", m.reclaims)
+                    .set("reclaimed_rows", m.reclaimed_rows)
                     .set("maint_swaps", m.maint_swaps)
                     .set("maint_swap_s_mean", m.maint_swap_s_mean)
                     .set("maint_queue_peak", m.maint_queue_peak)

@@ -216,6 +216,10 @@ fn streaming_eviction_bounds_index_and_unreaches_retired() {
     cfg.retrieval.maintenance.drain_watermark = 16;
     cfg.retrieval.maintenance.recent_queries = 16;
     cfg.retrieval.eviction.max_indexed = 256;
+    // Reclamation off: this test pins the tombstone-only path (retired
+    // rows stay as index tombstones); the reclaim tests below cover the
+    // physical-reclamation epochs.
+    cfg.retrieval.eviction.reclaim_ratio = 0.0;
     let eng = Engine::from_config(cfg).expect("engine init");
 
     let mut rng = Rng::seed_from(123);
@@ -265,6 +269,162 @@ fn streaming_eviction_bounds_index_and_unreaches_retired() {
         }
     }
     assert!(sess.tombstone_ratio() > 0.0, "tombstone ratio must reflect eviction");
+}
+
+#[test]
+fn reclamation_epoch_shrinks_memory_and_preserves_retrieval() {
+    // The tentpole acceptance: after retiring a large fraction of the
+    // indexed tier, a reclamation epoch must make the group store + id
+    // map + index bytes actually SHRINK (not just tombstone), while live
+    // tokens stay retrievable and retired ones stay gone.
+    let mut cfg = ServeConfig::default();
+    cfg.model = "induction-mini".into();
+    cfg.method = Method::RetrievalAttention;
+    cfg.pattern = retrieval_attention::kvcache::StaticPattern { sink: 32, window: 128 };
+    cfg.retrieval.top_k = 32;
+    cfg.retrieval.ef = 64;
+    cfg.retrieval.maintenance.drain_watermark = 16;
+    cfg.retrieval.maintenance.recent_queries = 16;
+    cfg.retrieval.eviction.max_indexed = 256;
+    cfg.retrieval.eviction.reclaim_ratio = 0.25;
+    let eng = Engine::from_config(cfg).expect("engine init");
+
+    let mut rng = Rng::seed_from(321);
+    let s = tasks::passkey(&mut rng, 700, 0.3);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    // Prefill indexes 700 - 128 - 32 = 540 rows per group.
+    let rows_before = sess.host_store(0, 0).rows();
+    assert_eq!(rows_before, 540);
+    let bytes_before = sess.index_memory_bytes();
+    let group_bytes = |sess: &retrieval_attention::model::Session| -> usize {
+        sess.groups.iter().flatten().map(|g| g.store_bytes() + g.map_bytes()).sum()
+    };
+    let store_before = group_bytes(&sess);
+    let _ = eng.generate(&mut sess, 40).unwrap();
+    sess.shutdown_maintenance();
+
+    // Eviction retired ≥ 25% of each group's tier (induction-mini has
+    // 2 layers × 1 kv head = 2 groups) and at least one epoch ran.
+    let groups_total = sess.groups.iter().map(|l| l.len()).sum::<usize>();
+    assert!(
+        sess.maint.stats.evicted_tokens >= (groups_total as u64) * 135,
+        "setup must retire ≥25% per group"
+    );
+    assert!(sess.maint.stats.reclaims > 0, "no reclamation epoch ran");
+    assert!(sess.maint.stats.reclaimed_rows > 0);
+    for (layer, caches) in sess.caches.iter().enumerate() {
+        for (kvh, cache) in caches.iter().enumerate() {
+            let group = &sess.groups[layer][kvh];
+            let rows = sess.host_store(layer, kvh).rows();
+            assert_eq!(group.id_map().len(), rows, "map/store length diverged");
+            assert!(group.store_generation() > 0, "generation never bumped");
+            // The store physically shrank: live rows plus the (bounded)
+            // tombstones accumulated since the last epoch.
+            let live = cache.indexed_len();
+            assert!(
+                rows <= live + live / 2 + 64,
+                "layer {layer} kvh {kvh}: store rows {rows} not reclaimed (live {live})"
+            );
+            // Head index sizes reconcile with the compacted space.
+            let r = &sess.retrievers[layer][kvh];
+            assert_eq!(r.indexed_len(), Some(live));
+        }
+    }
+    // Total index memory strictly shrinks, and the group store + id map
+    // bytes (the part an epoch physically frees) shrink by at least half
+    // the retired fraction.
+    let bytes_after = sess.index_memory_bytes();
+    assert!(
+        bytes_after < bytes_before,
+        "index memory did not shrink: {bytes_before} -> {bytes_after}"
+    );
+    let store_after = group_bytes(&sess);
+    let retired_frac =
+        sess.maint.stats.evicted_tokens as f64 / (540.0 * groups_total as f64);
+    assert!(
+        (store_after as f64) < (store_before as f64) * (1.0 - 0.5 * retired_frac.min(1.0)),
+        "store did not shrink: {store_before} -> {store_after} (retired {retired_frac:.2})"
+    );
+    // Live indexed keys are still retrievable under their absolute ids...
+    let cache = &sess.caches[0][0];
+    let live_ids = cache.indexed_ids();
+    assert!(!live_ids.is_empty());
+    let mut hits = 0;
+    let probes: Vec<u32> = live_ids.iter().copied().step_by(37).take(6).collect();
+    for &id in &probes {
+        let out = sess.retrievers[0][0].retrieve(cache.key(id as usize), 32);
+        if out.ids.contains(&id) {
+            hits += 1;
+        }
+        for got in &out.ids {
+            assert!(!cache.is_retired(*got as usize), "retrieved retired id {got}");
+        }
+    }
+    assert!(hits >= probes.len() - 1, "live keys lost by the remap: {hits}/{}", probes.len());
+    // ...and reclaimed ids resolve to nothing in the compacted map.
+    let retired = cache.retired_ids();
+    assert!(retired.len() >= 135);
+    let reclaimed_probe: Vec<u32> = retired.iter().copied().take(64).collect();
+    assert!(sess.groups[0][0].dense_ids_for(&reclaimed_probe).is_empty());
+    // The session keeps decoding after the epoch.
+    let out = eng.decode_step(&mut sess, 3).unwrap();
+    assert!((out.token as usize) < eng.spec().vocab);
+}
+
+#[test]
+fn truncate_and_fork_across_reclaim_generation() {
+    // Truncate/fork correctness across a store-generation bump: both
+    // paths resolve absolute ids against the *current* generation's map,
+    // so they must keep working after dense ids were renumbered.
+    let mut cfg = ServeConfig::default();
+    cfg.model = "induction-mini".into();
+    cfg.method = Method::RetrievalAttention;
+    cfg.pattern = retrieval_attention::kvcache::StaticPattern { sink: 32, window: 128 };
+    cfg.retrieval.top_k = 32;
+    cfg.retrieval.ef = 64;
+    cfg.retrieval.maintenance.drain_watermark = 16;
+    cfg.retrieval.eviction.max_indexed = 128;
+    cfg.retrieval.eviction.reclaim_ratio = 0.25;
+    let eng = Engine::from_config(cfg).expect("engine init");
+    let mut rng = Rng::seed_from(55);
+    let s = tasks::passkey(&mut rng, 600, 0.5);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    let _ = eng.generate(&mut sess, 30).unwrap();
+    sess.flush_maintenance();
+    assert!(sess.maint.stats.reclaims > 0, "setup: no generation bump happened");
+    let gen = sess.groups[0][0].store_generation();
+    assert!(gen > 0);
+
+    // Fork after the bump: the fork rebuilds fresh groups (generation 0)
+    // over the surviving tiers and decodes independently.
+    let mut fork = eng.fork_session(&mut sess).unwrap();
+    assert_eq!(fork.groups[0][0].store_generation(), 0);
+    assert_eq!(fork.len, sess.len);
+    let out = eng.decode_step(&mut fork, 5).unwrap();
+    assert!((out.token as usize) < eng.spec().vocab);
+    fork.shutdown_maintenance();
+
+    // Truncate the original across the bump: dropped ids resolve against
+    // the current map; nothing at or past the cut stays retrievable.
+    let probe_key: Vec<f32> = sess.caches[0][0].key(560).to_vec();
+    eng.truncate_session(&mut sess, 400).unwrap();
+    assert_eq!(sess.len, 400);
+    for caches in &sess.caches {
+        for c in caches {
+            assert_eq!(c.len(), 400);
+            assert!(c.indexed_end() <= 400);
+        }
+    }
+    let out = sess.retrievers[0][0].retrieve(&probe_key, 64);
+    assert!(
+        out.ids.iter().all(|&id| (id as usize) < 400),
+        "dropped id retrievable after post-reclaim truncate: {:?}",
+        out.ids
+    );
+    // The truncated session keeps decoding (and may reclaim again).
+    let out = eng.decode_step(&mut sess, 7).unwrap();
+    assert!((out.token as usize) < eng.spec().vocab);
+    sess.shutdown_maintenance();
 }
 
 #[test]

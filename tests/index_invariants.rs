@@ -4,7 +4,8 @@
 use retrieval_attention::attention::{attend_subset, combine, full_attention};
 use retrieval_attention::index::{
     exact_topk, flat::FlatIndex, hnsw::{HnswIndex, HnswParams}, ivf::IvfIndex,
-    roargraph::{RoarGraph, RoarParams}, InsertContext, KeyStore, SearchParams, VectorIndex,
+    roargraph::{RoarGraph, RoarParams}, InsertContext, KeyStore, RemapPlan, SearchParams,
+    VectorIndex,
 };
 use retrieval_attention::prop_assert;
 use retrieval_attention::tensor::Matrix;
@@ -338,6 +339,122 @@ fn prop_remove_insert_roundtrip_within_epsilon_and_no_tombstones_returned() {
                 "{}: sweep returned more than the live set",
                 idx.name()
             );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_remap_roundtrip_preserves_live_results_all_families() {
+    // The reclamation contract, for every index family: tombstone a
+    // subset, remap through a compaction plan (dense ids renumbered, the
+    // store physically shrunk), and require that (a) the dense space
+    // compacted exactly (len == live, zero tombstones), (b) no stale or
+    // out-of-range id is ever returned, and (c) search results over the
+    // surviving rows are the renumbered pre-remap results — exactly for
+    // the list-based families (flat/IVF), within recall tolerance for
+    // the graphs (whose dead transit shortcuts vanish) — and (d) inserts
+    // keep working in the compacted space.
+    check("remap round-trip", 5, |rng| {
+        let n = 128 + rng.below(128);
+        let d = [8usize, 16][rng.below(2)];
+        let all = {
+            let mut r = rng.fork(1);
+            Arc::new(Matrix::from_fn(n, d, |_, _| r.normal()))
+        };
+        let base = KeyStore::from_arc(all.clone());
+        let mut rr = rng.fork(3);
+        let mut removed: Vec<u32> =
+            rr.sample_indices(n, n / 5).into_iter().map(|i| i as u32).collect();
+        removed.sort_unstable();
+        removed.dedup();
+        // The production planner (what `Job::Compact` uses).
+        let Some((plan, keep)) = RemapPlan::from_dead(&removed, &base, 1) else {
+            return Err("planner refused a non-empty drop set".into());
+        };
+        prop_assert!(
+            keep == (0..n as u32).filter(|i| !removed.contains(i)).collect::<Vec<u32>>(),
+            "planner keep-set diverged"
+        );
+
+        let mut qr = rng.fork(2);
+        let qgen = |rows: usize, qr: &mut Rng| {
+            Matrix::from_fn(rows, d, |_, c| qr.normal() + if c == 0 { 1.5 } else { 0.0 })
+        };
+        let train = qgen(64, &mut qr);
+        let panel = qgen(12, &mut qr);
+        let params = SearchParams { ef: 256, nprobe: 16 };
+
+        let build = |which: usize, keys: KeyStore| -> Box<dyn VectorIndex> {
+            match which {
+                0 => Box::new(FlatIndex::new(keys)),
+                1 => Box::new(IvfIndex::build(keys, Some(16), 5)),
+                2 => Box::new(HnswIndex::build(keys, HnswParams::default())),
+                _ => Box::new(RoarGraph::build(keys, &train, RoarParams::default())),
+            }
+        };
+        for which in 0..4usize {
+            let mut idx = build(which, base.clone());
+            prop_assert!(idx.supports_remap(), "index {which} must support remap");
+            prop_assert!(idx.remove_batch(&removed), "index {which}: remove refused");
+            prop_assert!(
+                idx.dead_ids() == removed,
+                "index {which}: dead_ids diverged from the remove set"
+            );
+            let pre: Vec<Vec<u32>> =
+                (0..panel.rows()).map(|qi| idx.search(panel.row(qi), 10, &params).ids).collect();
+            prop_assert!(idx.remap_dense(&plan), "index {which}: remap refused");
+            prop_assert!(idx.len() == keep.len(), "index {which}: len != live after remap");
+            prop_assert!(idx.tombstones() == 0, "index {which}: tombstones survived remap");
+            prop_assert!(idx.dead_ids().is_empty(), "index {which}: dead ids survived remap");
+            for (qi, old_ids) in pre.iter().enumerate() {
+                let post = idx.search(panel.row(qi), 10, &params).ids;
+                for &id in &post {
+                    prop_assert!(
+                        (id as usize) < keep.len(),
+                        "{}: post-remap id {id} out of range",
+                        idx.name()
+                    );
+                }
+                // Pre-remap results are live by construction; renumber them.
+                let expect: Vec<u32> = old_ids
+                    .iter()
+                    .map(|&o| {
+                        prop_assert!(
+                            plan.old_to_new[o as usize] != RemapPlan::DROPPED,
+                            "pre-remap search returned a tombstone"
+                        );
+                        Ok(plan.old_to_new[o as usize])
+                    })
+                    .collect::<Result<_, _>>()?;
+                match which {
+                    // Exact structures: identical results, renumbered.
+                    0 | 1 => prop_assert!(
+                        post == expect,
+                        "{}: remap changed exact results: {post:?} vs {expect:?}",
+                        idx.name()
+                    ),
+                    // Graphs: near-identical (dead transit nodes vanished).
+                    _ => {
+                        let hits = post.iter().filter(|id| expect.contains(id)).count();
+                        prop_assert!(
+                            hits * 10 >= expect.len() * 8,
+                            "{}: remap lost results: {hits}/{} overlap",
+                            idx.name(),
+                            expect.len()
+                        );
+                    }
+                }
+            }
+            // (d) the insert path still works against the compacted store.
+            let extra = Matrix::from_fn(8, d, |r, c| (r as f32 - c as f32) * 0.3);
+            let grown = plan.store.append_rows(extra);
+            let total = grown.rows();
+            prop_assert!(
+                idx.insert_batch(grown, keep.len()..total, &InsertContext::none()),
+                "index {which}: post-remap insert refused"
+            );
+            prop_assert!(idx.len() == total, "index {which}: wrong len after post-remap insert");
         }
         Ok(())
     });

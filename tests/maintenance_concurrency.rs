@@ -256,6 +256,119 @@ fn engine_worker_drains_reconcile_exactly_after_shutdown() {
     assert!(sess.maint.stats.swap_s_total >= 0.0);
 }
 
+/// Long-horizon streaming soak: drive ≥10× `max_indexed` tokens through
+/// the drain → retire → reclaim loop and assert host/store bytes stay
+/// BOUNDED after each epoch — the tentpole property (bounded attention
+/// became bounded memory). Runs with the worker on and off so the
+/// serialized CI job covers both the concurrent and the inline epoch.
+fn reclaim_soak(async_worker: bool, seed: u64) {
+    const MAX_INDEXED: usize = 48;
+    const WATERMARK: usize = 8;
+    let mut cfg = ServeConfig::default();
+    cfg.model = "induction-mini".into();
+    cfg.method = Method::RetrievalAttention;
+    cfg.pattern = retrieval_attention::kvcache::StaticPattern { sink: 32, window: 128 };
+    cfg.retrieval.top_k = 32;
+    cfg.retrieval.ef = 64;
+    cfg.retrieval.maintenance.drain_watermark = WATERMARK;
+    cfg.retrieval.maintenance.recent_queries = 8;
+    cfg.retrieval.maintenance.async_worker = async_worker;
+    cfg.retrieval.eviction.max_indexed = MAX_INDEXED;
+    cfg.retrieval.eviction.reclaim_ratio = 0.25;
+    let eng = Engine::from_config(cfg).expect("engine init");
+    let mut rng = Rng::seed_from(seed);
+    let s = tasks::passkey(&mut rng, 300, 0.5);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+
+    // Bound on physical rows per group: the live tier (max_indexed plus
+    // a few drain batches of async lag), the tombstones tolerated below
+    // the 0.25 trigger, and fresh tombstones awaiting the next pass. The
+    // exact steady state is ~1.3× max_indexed; the bound is generous to
+    // absorb worker-scheduling lag while staying far below the ~620 rows
+    // an unbounded session would accumulate.
+    let live_bound = MAX_INDEXED + 4 * WATERMARK;
+    let rows_bound = 2 * live_bound;
+    let spec = eng.spec().clone();
+    let dh = spec.head_dim;
+
+    let mut tok = 1u32;
+    let mut last_gen = vec![vec![0u64; spec.kv_heads]; spec.layers];
+    for epoch in 0..12 {
+        for _ in 0..40 {
+            tok = eng.decode_step(&mut sess, tok % 97).unwrap().token;
+        }
+        sess.flush_maintenance();
+        for layer in 0..spec.layers {
+            for kvh in 0..spec.kv_heads {
+                let rows = sess.host_store(layer, kvh).rows();
+                let group = &sess.groups[layer][kvh];
+                assert_eq!(group.id_map().len(), rows, "map/store diverged");
+                // Store generations are monotone (epochs only bump).
+                let gen = group.store_generation();
+                assert!(gen >= last_gen[layer][kvh], "generation went backwards");
+                last_gen[layer][kvh] = gen;
+                // Epoch 0 may still be digesting the prefill backlog (the
+                // initial 140-row tier retires through the queue); from
+                // epoch 1 on the bounds must hold at every check.
+                if epoch == 0 {
+                    continue;
+                }
+                assert!(
+                    rows <= rows_bound,
+                    "epoch {epoch} layer {layer} kvh {kvh}: store rows {rows} unbounded \
+                     (bound {rows_bound})"
+                );
+                assert!(
+                    group.store_bytes() <= rows_bound * dh * 4 + 4096,
+                    "store bytes unbounded"
+                );
+                assert!(
+                    sess.caches[layer][kvh].indexed_len() <= live_bound,
+                    "live tier not bounded by the eviction budget"
+                );
+            }
+        }
+    }
+    sess.shutdown_maintenance();
+    // 480 decoded tokens through a 48-token budget: many retirements and
+    // several reclamation epochs must have happened.
+    assert!(sess.maint.stats.evicted_tokens > 0, "eviction never fired");
+    assert!(sess.maint.stats.reclaims >= 2, "reclaim epochs: {}", sess.maint.stats.reclaims);
+    assert!(sess.maint.stats.reclaimed_rows as usize >= MAX_INDEXED);
+    assert!(last_gen[0][0] >= 1, "no generation bump on layer 0");
+
+    // Post-soak correctness: live indexed keys retrieve their own ids;
+    // nothing retired is ever surfaced.
+    let cache = &sess.caches[0][0];
+    let live_ids = cache.indexed_ids();
+    assert!(!live_ids.is_empty(), "soak left an empty indexed tier");
+    let mut hits = 0;
+    let probes: Vec<u32> = live_ids.iter().copied().step_by(7).take(5).collect();
+    for &id in &probes {
+        let out = sess.retrievers[0][0].retrieve(cache.key(id as usize), 32);
+        if out.ids.contains(&id) {
+            hits += 1;
+        }
+        for got in &out.ids {
+            assert!(!cache.is_retired(*got as usize), "retired id {got} retrieved");
+        }
+    }
+    assert!(hits >= probes.len() - 1, "live keys unretrievable: {hits}/{}", probes.len());
+    // The session keeps decoding after shutdown (a fresh worker respawns).
+    let out = eng.decode_step(&mut sess, 2).unwrap();
+    let _ = out.token;
+}
+
+#[test]
+fn reclaim_soak_bounds_memory_with_async_worker() {
+    reclaim_soak(true, 0x50AC);
+}
+
+#[test]
+fn reclaim_soak_bounds_memory_inline() {
+    reclaim_soak(false, 0x50AD);
+}
+
 #[test]
 fn worker_shutdown_is_prompt_and_idempotent() {
     // A deadlocked worker would hang here (the CI job wraps this whole
