@@ -11,7 +11,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test test-concurrency fmt-check clippy bench artifacts clean
+.PHONY: verify build test test-concurrency test-scalar fmt-check clippy clippy-kernel bench bench-smoke artifacts clean
 
 verify: build test
 	-$(MAKE) fmt-check
@@ -29,14 +29,30 @@ test:
 test-concurrency:
 	timeout 900 $(CARGO) test -q --test maintenance_concurrency -- --test-threads=1
 
+# Full suite with SIMD force-disabled: the scalar fallback must keep every
+# platform green (the kernel dispatch acceptance gate).
+test-scalar:
+	RA_KERNEL=scalar $(CARGO) test -q
+
 fmt-check:
 	$(CARGO) fmt --all -- --check
 
 clippy:
 	$(CARGO) clippy --workspace --all-targets
 
+# Clippy is ENFORCED (not advisory) for rust/src/kernel: the module is
+# annotated #[deny(clippy::all)] in lib.rs, so any kernel lint fails this
+# target while the rest of the tree stays advisory via `clippy` above.
+clippy-kernel:
+	$(CARGO) clippy --lib
+
 bench:
 	$(CARGO) bench --bench decode_latency
+
+# Tiny-geometry bench run: asserts BENCH_decode.json is produced and the
+# runtime kernel dispatch selected a real backend (CI gate).
+bench-smoke:
+	$(CARGO) bench --bench decode_latency -- smoke
 
 artifacts:
 	cd python && python -m compile.aot --out ../artifacts

@@ -20,11 +20,16 @@
 //! Runs against PJRT artifacts when present, the native backend otherwise.
 
 use retrieval_attention::config::{Method, ServeConfig};
-use retrieval_attention::index::KeyStore;
+use retrieval_attention::index::{
+    exact_topk, flat::FlatIndex, roargraph::{RoarGraph, RoarParams}, search_rerank, KeyStore,
+    SearchParams, VectorIndex,
+};
+use retrieval_attention::kernel::{self, QuantMode};
 use retrieval_attention::model::Engine;
 use retrieval_attention::tensor::Matrix;
 use retrieval_attention::util::bench::{black_box, Bencher};
-use retrieval_attention::util::json::Value;
+use retrieval_attention::util::json::{self, Value};
+use retrieval_attention::util::rng::Rng;
 use retrieval_attention::workload::geometry::{generate, GeometryParams};
 
 fn heads_for(
@@ -70,7 +75,145 @@ fn growth_profile(
     (early, late, sess.drained_tokens, sess.drains)
 }
 
+/// The search-phase profile of the tentpole: quantized scan tier
+/// (off/fp16/int8) × exact re-rank (on/off) per index family, with
+/// recall@k against exact f32 ground truth. This is the measured point
+/// the `BENCH_decode.json` perf trajectory records.
+fn search_phase(b: &mut Bencher, flat_rows: &[usize], graph_rows: &[usize]) -> Value {
+    let d = 64usize;
+    let k = 100usize;
+    let nq = 16usize;
+    let mut cases: Vec<Value> = Vec::new();
+    // (family tag, rows list); RoarGraph exercises the graph-gather path,
+    // Flat the contiguous-scan path (the clearest bandwidth story).
+    let families: [(&str, &[usize]); 2] = [("flat", flat_rows), ("roargraph", graph_rows)];
+    for (family, lengths) in families {
+        for &n in lengths {
+            let mut rng = Rng::seed_from(0xC0FFEE ^ n as u64);
+            let keys = Matrix::from_fn(n, d, |_, _| rng.normal());
+            // OOD-ish queries, as the paper's decode distribution.
+            let queries: Vec<Vec<f32>> = (0..nq)
+                .map(|_| {
+                    (0..d)
+                        .map(|c| rng.normal() + if c < d / 4 { 1.0 } else { 0.0 })
+                        .collect()
+                })
+                .collect();
+            let train =
+                Matrix::from_fn(256, d, |_, c| rng.normal() + if c < d / 4 { 1.0 } else { 0.0 });
+            let truth: Vec<Vec<u32>> = queries.iter().map(|q| exact_topk(&keys, q, k)).collect();
+            let mut baseline_p50 = 0.0f64;
+            for mode in [QuantMode::Off, QuantMode::Fp16, QuantMode::Int8] {
+                let store = KeyStore::from_matrix(keys.clone()).with_quant(mode);
+                let idx: Box<dyn VectorIndex> = match family {
+                    "flat" => Box::new(FlatIndex::new(store)),
+                    _ => Box::new(RoarGraph::build(store, &train, RoarParams::default())),
+                };
+                let params = SearchParams { ef: 192, nprobe: 16 };
+                for rerank in [0usize, 2] {
+                    if rerank > 0 && mode == QuantMode::Off {
+                        continue; // rerank is a no-op on the exact tier
+                    }
+                    let name = format!(
+                        "search/{family}/n={n}/quant={}/rerank={rerank}",
+                        mode.label()
+                    );
+                    let mut qi = 0usize;
+                    let stats = b.bench(&name, || {
+                        let q = &queries[qi % nq];
+                        qi += 1;
+                        black_box(search_rerank(idx.as_ref(), q, k, rerank, &params).ids.len())
+                    });
+                    let p50 = stats.p50.as_secs_f64();
+                    let mean = stats.mean.as_secs_f64();
+                    if mode == QuantMode::Off {
+                        baseline_p50 = p50;
+                    }
+                    let mut recall = 0.0f32;
+                    for (q, t) in queries.iter().zip(truth.iter()) {
+                        recall += search_rerank(idx.as_ref(), q, k, rerank, &params)
+                            .recall_against(t);
+                    }
+                    recall /= nq as f32;
+                    let mut o = Value::obj();
+                    o.set("family", family)
+                        .set("n", n)
+                        .set("quant", mode.label())
+                        .set("rerank", rerank)
+                        .set("p50_s", p50)
+                        .set("mean_s", mean)
+                        .set("recall_at_k", recall as f64)
+                        .set(
+                            "speedup_vs_f32",
+                            if p50 > 0.0 { baseline_p50 / p50 } else { 0.0 },
+                        );
+                    println!(
+                        "  -> {name}: p50={:.3}ms recall@{k}={recall:.3} speedup_vs_f32={:.2}x",
+                        p50 * 1e3,
+                        if p50 > 0.0 { baseline_p50 / p50 } else { 0.0 },
+                    );
+                    cases.push(o);
+                }
+            }
+        }
+    }
+    Value::Arr(cases)
+}
+
+/// Write the repo-root perf-trajectory summary (phase medians + recall).
+fn write_bench_summary(profile: &str, search: Value, decode_cases: Option<Value>) {
+    let mut out = Value::obj();
+    out.set("profile", profile)
+        .set("kernel", kernel::active().label())
+        .set("search_phase", search);
+    if let Some(cases) = decode_cases {
+        out.set("decode_cases", cases);
+    }
+    std::fs::write("BENCH_decode.json", out.to_string_pretty()).ok();
+}
+
+/// `bench-smoke`: tiny-geometry run asserting the JSON summary is
+/// produced and the kernel dispatch actually selected a backend.
+fn smoke() {
+    println!("bench-smoke: kernel dispatch = {}", kernel::active().label());
+    #[cfg(target_arch = "x86_64")]
+    {
+        let forced = std::env::var("RA_KERNEL")
+            .map(|v| v.eq_ignore_ascii_case("scalar"))
+            .unwrap_or(false);
+        if !forced && is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            assert_eq!(
+                kernel::active(),
+                kernel::Dispatch::Avx2,
+                "AVX2+FMA present but dispatch fell back to {:?}",
+                kernel::active()
+            );
+        }
+    }
+    let mut b = Bencher::quick();
+    b.max_iters = 8;
+    let search = search_phase(&mut b, &[2_048], &[1_024]);
+    write_bench_summary("smoke", search, None);
+    let text = std::fs::read_to_string("BENCH_decode.json").expect("BENCH_decode.json missing");
+    let v = json::parse(&text).expect("BENCH_decode.json must parse");
+    let cases = v.get("search_phase").and_then(Value::as_arr).expect("search_phase array");
+    assert!(!cases.is_empty(), "no search-phase cases recorded");
+    for c in cases {
+        let recall = c.get("recall_at_k").and_then(Value::as_f64).expect("recall field");
+        assert!(recall > 0.5, "implausible recall in smoke case: {recall}");
+    }
+    println!(
+        "bench-smoke: OK ({} search-phase cases, kernel = {})",
+        cases.len(),
+        v.get("kernel").and_then(Value::as_str).unwrap_or("?")
+    );
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "smoke") {
+        smoke();
+        return;
+    }
     let full = std::env::args().any(|a| a == "full");
     let lengths: &[usize] = if full { &[8_192, 32_768, 131_072] } else { &[4_096, 16_384] };
     let methods =
@@ -96,6 +239,13 @@ fn main() {
             });
         }
     }
+
+    // --- Search-phase profile: quant off/fp16/int8 × rerank on/off. ---
+    // 64K rows always (the recorded trajectory point); 128K rows and the
+    // 64K graph build in full mode.
+    let (flat_rows, graph_rows): (&[usize], &[usize]) =
+        if full { (&[65_536, 131_072], &[65_536]) } else { (&[65_536], &[16_384]) };
+    let search = search_phase(&mut b, flat_rows, graph_rows);
 
     // --- Long-generation flatness: worker on / sync drain / drain off. ---
     let n = if full { 16_384 } else { 2_048 };
@@ -238,4 +388,6 @@ fn main() {
     out.set("reclaim", reclaim);
     out.set("drain_store", drain_profile);
     std::fs::write("results/bench_decode.json", out.to_string_pretty()).ok();
+    // Repo-root perf-trajectory summary (phase medians + recall).
+    write_bench_summary(if full { "full" } else { "quick" }, search, Some(b.to_json()));
 }

@@ -12,7 +12,8 @@ pub mod budget;
 pub mod ood;
 pub mod sparsity;
 
-use crate::tensor::{axpy, dot, Matrix};
+use crate::kernel;
+use crate::tensor::{axpy, Matrix};
 
 /// A partial attention output over some token subset: the within-subset
 /// softmax-weighted value sum plus the subset's log-sum-exp of the scaled
@@ -44,21 +45,24 @@ pub fn attend_subset(
     if ids.is_empty() {
         return PartialAttention::empty(d);
     }
-    // Online softmax (single pass over ids, FlashAttention-style).
+    // Batched logits first (one kernel dispatch for the whole id-set
+    // gather — the keys read is the bandwidth hot spot; this is always
+    // against the full-precision keys), then a two-pass softmax over the
+    // in-cache logit vector: same exact result as the online form, no
+    // per-id rescale of the accumulator.
+    let mut z: Vec<f32> = Vec::with_capacity(ids.len());
+    kernel::dot_gather(q, keys.as_slice(), keys.cols(), ids, &mut z);
     let mut m = f32::NEG_INFINITY;
+    for v in z.iter_mut() {
+        *v *= scale;
+        if *v > m {
+            m = *v;
+        }
+    }
     let mut l = 0.0f32;
     let mut acc = vec![0.0f32; d];
-    for &id in ids {
-        let z = dot(q, keys.row(id as usize)) * scale;
-        if z > m {
-            let corr = (m - z).exp();
-            for a in acc.iter_mut() {
-                *a *= corr;
-            }
-            l *= corr;
-            m = z;
-        }
-        let p = (z - m).exp();
+    for (&id, &zv) in ids.iter().zip(z.iter()) {
+        let p = (zv - m).exp();
         l += p;
         axpy(p, values.row(id as usize), &mut acc);
     }
@@ -96,9 +100,38 @@ pub fn combine(parts: &[PartialAttention]) -> PartialAttention {
     PartialAttention { o, lse }
 }
 
-/// Raw scaled attention logits of `q` against every key (profiling paths).
+/// Borrow-based [`combine`] for the decode hot path: merges `(o, lse)`
+/// pairs straight into `out` (which must already have the head dimension)
+/// without cloning any partial. Empty partials pass `(&[], NEG_INFINITY)`.
+/// Returns the merged log-sum-exp.
+pub fn combine_into(parts: &[(&[f32], f32)], out: &mut [f32]) -> f32 {
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    let m = parts.iter().map(|p| p.1).fold(f32::NEG_INFINITY, f32::max);
+    if m == f32::NEG_INFINITY {
+        return f32::NEG_INFINITY;
+    }
+    let sum: f32 = parts.iter().map(|p| (p.1 - m).exp()).sum();
+    let lse = m + sum.ln();
+    for &(o, lse_p) in parts {
+        let gamma = (lse_p - lse).exp();
+        if gamma > 0.0 && !o.is_empty() {
+            axpy(gamma, o, out);
+        }
+    }
+    lse
+}
+
+/// Raw scaled attention logits of `q` against every key (profiling paths):
+/// one batched kernel call over the contiguous key matrix.
 pub fn logits(q: &[f32], keys: &Matrix, scale: f32) -> Vec<f32> {
-    (0..keys.rows()).map(|i| dot(q, keys.row(i)) * scale).collect()
+    let mut z = Vec::with_capacity(keys.rows());
+    kernel::dot_rows(q, keys.as_slice(), keys.cols(), &mut z);
+    for v in z.iter_mut() {
+        *v *= scale;
+    }
+    z
 }
 
 /// Softmax scores of `q` against every key.
@@ -174,6 +207,36 @@ mod tests {
             assert!((a - b).abs() < 1e-6);
         }
         assert!((merged.lse - p.lse).abs() < 1e-5);
+    }
+
+    #[test]
+    fn combine_into_matches_combine() {
+        let (q, k, v) = setup(80, 8, 5);
+        let scale = 0.3;
+        let a: Vec<u32> = (0..25).collect();
+        let b: Vec<u32> = (25..80).collect();
+        let p1 = attend_subset(&q, &k, &v, &a, scale);
+        let p2 = attend_subset(&q, &k, &v, &b, scale);
+        let merged = combine(&[p1.clone(), p2.clone()]);
+        let mut out = vec![0.0f32; 8];
+        let lse = combine_into(&[(p1.o.as_slice(), p1.lse), (p2.o.as_slice(), p2.lse)], &mut out);
+        assert!((lse - merged.lse).abs() < 1e-6);
+        for (x, y) in out.iter().zip(merged.o.iter()) {
+            assert!((x - y).abs() < 1e-6, "combine_into diverged: {x} vs {y}");
+        }
+        // Empty partials are the identity under the borrow form too.
+        let empty: &[f32] = &[];
+        let mut out2 = vec![7.0f32; 8];
+        let lse2 =
+            combine_into(&[(p1.o.as_slice(), p1.lse), (empty, f32::NEG_INFINITY)], &mut out2);
+        assert!((lse2 - p1.lse).abs() < 1e-5);
+        for (x, y) in out2.iter().zip(p1.o.iter()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+        // All-empty: -inf lse, zeroed output.
+        let mut out3 = vec![3.0f32; 4];
+        assert_eq!(combine_into(&[(empty, f32::NEG_INFINITY)], &mut out3), f32::NEG_INFINITY);
+        assert_eq!(out3, vec![0.0; 4]);
     }
 
     #[test]

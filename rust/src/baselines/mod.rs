@@ -41,7 +41,7 @@ use crate::index::{
     hnsw::{HnswIndex, HnswParams},
     ivf::IvfIndex,
     roargraph::{RoarGraph, RoarParams},
-    InsertContext, KeyStore, RemapPlan, SearchParams, VectorIndex,
+    search_rerank, InsertContext, KeyStore, RemapPlan, SearchParams, VectorIndex,
 };
 use crate::tensor::Matrix;
 use crate::util::swap::Published;
@@ -213,11 +213,12 @@ impl GroupShared {
         (maps.cur.ids.len() + maps.prev.as_ref().map(|p| p.ids.len()).unwrap_or(0)) * 4
     }
 
-    /// Heap bytes of the shared key store — f32 payload plus chunk table —
-    /// counted once per group (Appendix C's single-copy layout).
+    /// Heap bytes of the shared key store — f32 payload, chunk table, and
+    /// any quantized scan-tier mirrors — counted once per group
+    /// (Appendix C's single-copy layout).
     pub fn store_bytes(&self) -> usize {
         let store = self.store.load();
-        store.rows() * store.cols() * 4 + store.table_bytes()
+        store.rows() * store.cols() * 4 + store.table_bytes() + store.quant_bytes()
     }
 
     /// Resolve absolute token ids to dense slots against the current map —
@@ -390,7 +391,10 @@ pub struct RetrieverInputs<'a> {
 
 impl<'a> RetrieverInputs<'a> {
     /// Convenience for tests/experiments: wrap a standalone key store +
-    /// id list into a fresh (unshared) group.
+    /// id list into a fresh (unshared) group. The configured quantized
+    /// scan tier is applied here exactly as the engine applies it at
+    /// prefill-build time — a `retrieval.quant` setting must never be
+    /// silently ignored by one construction path.
     pub fn from_parts(
         keys: KeyStore,
         ids: Vec<u32>,
@@ -399,7 +403,13 @@ impl<'a> RetrieverInputs<'a> {
         cfg: &'a RetrievalConfig,
         seed: u64,
     ) -> RetrieverInputs<'a> {
-        RetrieverInputs { group: GroupShared::new(keys, ids), prefill_queries, scale, cfg, seed }
+        RetrieverInputs {
+            group: GroupShared::new(keys.with_quant(cfg.quant.mode), ids),
+            prefill_queries,
+            scale,
+            cfg,
+            seed,
+        }
     }
 
     /// Snapshot of the group's dense key store.
@@ -418,12 +428,15 @@ impl<'a> RetrieverInputs<'a> {
 /// Build the retriever for a method.
 pub fn build_retriever(method: Method, inp: RetrieverInputs<'_>) -> Box<dyn HostRetriever> {
     let index_retriever = |index: Box<dyn VectorIndex>, label: &'static str| {
-        Box::new(IndexRetriever::new(
-            index,
-            inp.group.clone(),
-            SearchParams { ef: inp.cfg.ef, nprobe: inp.cfg.nprobe },
-            label,
-        ))
+        Box::new(
+            IndexRetriever::new(
+                index,
+                inp.group.clone(),
+                SearchParams { ef: inp.cfg.ef, nprobe: inp.cfg.nprobe },
+                label,
+            )
+            .with_rerank(inp.cfg.quant.rerank),
+        )
     };
     match method {
         Method::StreamingLlm => Box::new(EmptyRetriever),
@@ -602,6 +615,10 @@ pub struct IndexRetriever {
     back: Mutex<BackBuffer>,
     group: Arc<GroupShared>,
     params: SearchParams,
+    /// Exact re-rank pool multiplier (`retrieval.quant.rerank`): searches
+    /// over a quantized scan tier fetch `rerank × k` candidates and keep
+    /// the exact top-k after f32 re-scoring. No-op on f32 stores.
+    rerank: usize,
     label: &'static str,
 }
 
@@ -618,8 +635,15 @@ impl IndexRetriever {
             back: Mutex::new(BackBuffer { spare: None, pending: Vec::new() }),
             group,
             params,
+            rerank: crate::config::QuantConfig::default().rerank,
             label,
         }
+    }
+
+    /// Override the exact re-rank pool multiplier (builder style).
+    pub fn with_rerank(mut self, rerank: usize) -> IndexRetriever {
+        self.rerank = rerank;
+        self
     }
 
     /// Run `f` against the current front index (diagnostics).
@@ -701,7 +725,10 @@ impl HostRetriever for IndexRetriever {
                 continue;
             };
             debug_assert!(ids.len() >= front.index.len(), "id map behind the index front");
-            let r = front.index.search(q, k, &self.params);
+            // Quantized fronts re-rank the top `rerank × k` pool against
+            // their own (same-generation) f32 keys; exact fronts search
+            // plainly. Either way the dense ids map below.
+            let r = search_rerank(front.index.as_ref(), q, k, self.rerank, &self.params);
             return Retrieval {
                 ids: r.ids.iter().map(|&dense| ids.ids[dense as usize]).collect(),
                 scanned: r.scanned,

@@ -7,6 +7,7 @@
 //! through the in-crate [`crate::util::json`] module.
 
 use crate::attention::budget::BudgetPolicy;
+use crate::kernel::QuantMode;
 use crate::kvcache::StaticPattern;
 use crate::util::json::{self, Value};
 use std::path::Path;
@@ -171,6 +172,39 @@ impl EvictionConfig {
     }
 }
 
+/// Quantized scan-tier knobs (`retrieval.quant`).
+///
+/// With a mode enabled, the segmented key store keeps a compressed mirror
+/// per chunk (`fp16` = bit-truncated f32/bfloat16, 2 B/dim; `int8` =
+/// symmetric per-row scale, 1 B/dim + 4 B/row) and **all four index
+/// families rank candidates against it** — the bandwidth-bound scan moves
+/// 2–4× fewer key bytes. Exactness is preserved where it matters: the
+/// host attention read (`attend_subset`) always uses the f32 keys, and
+/// the top `rerank × k` candidates of each search are re-scored exactly
+/// against the f32 rows before the final top-k is returned, so
+/// quantization error is confined to candidate ordering beyond the
+/// re-rank pool. Mirrors are built at prefill-build and maintenance-
+/// worker (drain/compact) time — never on the decode token path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantConfig {
+    /// Scan-tier format: `off` (exact f32 scan), `fp16`, or `int8`.
+    pub mode: QuantMode,
+    /// Exact re-rank pool multiplier: the top `rerank × k` quantized
+    /// candidates are re-scored against f32 keys (paper-style exactness
+    /// confinement). `0` or `1` disables the re-rank pass. Ignored when
+    /// `mode = off`.
+    pub rerank: usize,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        // Off by default: the exact-f32 behaviour of every earlier PR.
+        // `rerank = 2` is the recommended pool (2×k) the moment a mode is
+        // switched on.
+        QuantConfig { mode: QuantMode::Off, rerank: 2 }
+    }
+}
+
 /// Retrieval/index knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct RetrievalConfig {
@@ -190,6 +224,8 @@ pub struct RetrievalConfig {
     pub maintenance: MaintenanceConfig,
     /// Indexed-tier eviction (window retirement over host memory).
     pub eviction: EvictionConfig,
+    /// Quantized scan tier + exact re-rank pool.
+    pub quant: QuantConfig,
 }
 
 impl Default for RetrievalConfig {
@@ -203,6 +239,7 @@ impl Default for RetrievalConfig {
             budget: BudgetPolicy::Uniform { k: 100 },
             maintenance: MaintenanceConfig::default(),
             eviction: EvictionConfig::default(),
+            quant: QuantConfig::default(),
         }
     }
 }
@@ -280,6 +317,10 @@ impl ServeConfig {
         ev.set("max_indexed", self.retrieval.eviction.max_indexed)
             .set("reclaim_ratio", self.retrieval.eviction.reclaim_ratio as f64);
         r.set("eviction", ev);
+        let mut qz = Value::obj();
+        qz.set("mode", self.retrieval.quant.mode.label())
+            .set("rerank", self.retrieval.quant.rerank);
+        r.set("quant", qz);
         match self.retrieval.budget {
             BudgetPolicy::Uniform { k } => {
                 let mut b = Value::obj();
@@ -356,6 +397,15 @@ impl ServeConfig {
                 }
                 if let Some(x) = ev.get("reclaim_ratio").and_then(Value::as_f64) {
                     c.retrieval.eviction.reclaim_ratio = x as f32;
+                }
+            }
+            if let Some(qz) = r.get("quant") {
+                if let Some(m) = qz.get("mode").and_then(Value::as_str) {
+                    c.retrieval.quant.mode = QuantMode::parse(m)
+                        .ok_or_else(|| anyhow::anyhow!("unknown quant mode `{m}`"))?;
+                }
+                if let Some(x) = qz.get("rerank").and_then(Value::as_usize) {
+                    c.retrieval.quant.rerank = x;
                 }
             }
             if let Some(b) = r.get("budget") {
@@ -453,6 +503,27 @@ mod tests {
         assert!(!no_reclaim.reclaim_enabled());
         let off = MaintenanceConfig { drain_watermark: 0, ..Default::default() };
         assert!(!off.enabled());
+    }
+
+    #[test]
+    fn quant_roundtrips_and_defaults_off() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.retrieval.quant, QuantConfig::default());
+        assert_eq!(c.retrieval.quant.mode, QuantMode::Off);
+        c.retrieval.quant = QuantConfig { mode: QuantMode::Int8, rerank: 4 };
+        let back = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.retrieval.quant, QuantConfig { mode: QuantMode::Int8, rerank: 4 });
+        // Absent block falls back to defaults (off, rerank 2).
+        let v = json::parse(r#"{"retrieval":{"top_k":5}}"#).unwrap();
+        let parsed = ServeConfig::from_json(&v).unwrap();
+        assert_eq!(parsed.retrieval.quant, QuantConfig::default());
+        // fp16 parses; unknown modes are rejected loudly.
+        let v = json::parse(r#"{"retrieval":{"quant":{"mode":"fp16"}}}"#).unwrap();
+        let parsed = ServeConfig::from_json(&v).unwrap();
+        assert_eq!(parsed.retrieval.quant.mode, QuantMode::Fp16);
+        assert_eq!(parsed.retrieval.quant.rerank, 2, "rerank keeps its default");
+        let v = json::parse(r#"{"retrieval":{"quant":{"mode":"int4"}}}"#).unwrap();
+        assert!(ServeConfig::from_json(&v).is_err());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! costing scan time.
 
 use super::{InsertContext, KeyStore, RemapPlan, SearchParams, SearchResult, VectorIndex};
-use crate::tensor::{argtopk, dot};
+use crate::tensor::argtopk;
 use crate::util::parallel;
 use std::ops::Range;
 
@@ -80,28 +80,30 @@ impl VectorIndex for FlatIndex {
 
     fn search(&self, query: &[f32], k: usize, _params: &SearchParams) -> SearchResult {
         if let Some(live) = &self.live {
-            // Compacted path: score the live list (which may hold a
-            // bounded number of post-compaction tombstones — filtered
-            // here, swept out at the next compaction).
+            // Compacted path: batch-score the live list through the store's
+            // scan tier (quantized mirror when built), then overwrite any
+            // post-compaction tombstone with -inf (filtered here, swept
+            // out at the next compaction).
             let n = live.len();
-            let score_one = |i: usize| -> f32 {
-                let id = live[i] as usize;
-                if self.dead[id] {
-                    f32::NEG_INFINITY
-                } else {
-                    dot(query, self.keys.row(id))
+            let score_block = |lo: usize, hi: usize| -> Vec<f32> {
+                let mut v = Vec::with_capacity(hi - lo);
+                self.keys.score_ids(query, &live[lo..hi], &mut v);
+                for (j, &id) in live[lo..hi].iter().enumerate() {
+                    if self.dead[id as usize] {
+                        v[j] = f32::NEG_INFINITY;
+                    }
                 }
+                v
             };
             let scores: Vec<f32> = if n >= 2 * self.block {
                 let nblocks = n.div_ceil(self.block);
                 let per_block: Vec<Vec<f32>> = parallel::par_map_range(nblocks, |b| {
                     let lo = b * self.block;
-                    let hi = (lo + self.block).min(n);
-                    (lo..hi).map(score_one).collect()
+                    score_block(lo, (lo + self.block).min(n))
                 });
                 per_block.into_iter().flatten().collect()
             } else {
-                (0..n).map(score_one).collect()
+                score_block(0, n)
             };
             let mut top = argtopk(&scores, k);
             top.retain(|&i| !self.dead[live[i] as usize]);
@@ -113,24 +115,24 @@ impl VectorIndex for FlatIndex {
             };
         }
         let n = self.keys.rows();
-        // Segment-local scan; dead rows score -inf and are filtered below.
-        // Tasks are fixed `block`-row ranges *within* segments (one giant
-        // prefill chunk must still fan out across cores), addressed
-        // segment-locally so the hot loop never pays a chunk lookup.
-        let segments = self.keys.segments();
+        // Segment-local batched scan through the store's scan tier
+        // (quantized mirror when built); dead rows are overwritten with
+        // -inf and filtered below. Tasks are fixed `block`-row ranges
+        // *within* segments (one giant prefill chunk must still fan out
+        // across cores), addressed segment-locally so the hot loop never
+        // pays a chunk lookup.
         // (segment, local start, local end, global index of local start).
         let score_range = |s: usize, lo: usize, hi: usize, gbase: usize| -> Vec<f32> {
-            let seg = &segments[s];
-            (lo..hi)
-                .map(|r| {
-                    if self.dead[gbase + (r - lo)] {
-                        f32::NEG_INFINITY
-                    } else {
-                        dot(query, seg.row(r))
-                    }
-                })
-                .collect()
+            let mut v = Vec::with_capacity(hi - lo);
+            self.keys.score_segment_range(query, s, lo, hi, &mut v);
+            for (j, x) in v.iter_mut().enumerate() {
+                if self.dead[gbase + j] {
+                    *x = f32::NEG_INFINITY;
+                }
+            }
+            v
         };
+        let segments = self.keys.segments();
         let mut tasks: Vec<(usize, usize, usize, usize)> = Vec::new();
         let mut base = 0;
         for (s, seg) in segments.iter().enumerate() {
@@ -209,6 +211,18 @@ impl VectorIndex for FlatIndex {
 
     fn supports_remap(&self) -> bool {
         true
+    }
+
+    fn scan_quantized(&self) -> bool {
+        self.keys.is_quantized()
+    }
+
+    fn score_exact(&self, query: &[f32], id: u32) -> f32 {
+        self.keys.score_exact(query, id as usize)
+    }
+
+    fn score_exact_batch(&self, query: &[f32], ids: &[u32], out: &mut Vec<f32>) {
+        self.keys.score_ids_exact(query, ids, out);
     }
 
     fn dead_ids(&self) -> Vec<u32> {

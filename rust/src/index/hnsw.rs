@@ -309,13 +309,18 @@ fn greedy_closest_counted(
     scanned: &mut usize,
 ) -> u32 {
     let mut cur = start;
-    let mut cur_sim = dot(q, keys.row(cur as usize));
+    let mut cur_sim = keys.score(q, cur as usize);
     *scanned += 1;
+    let mut sims: Vec<f32> = Vec::new();
     loop {
+        // Batch-score the whole neighbor list: one kernel dispatch per
+        // hop instead of one per edge.
+        let nbs = &layer.neighbors[cur as usize];
+        sims.clear();
+        keys.score_ids(q, nbs, &mut sims);
+        *scanned += nbs.len();
         let mut improved = false;
-        for &nb in &layer.neighbors[cur as usize] {
-            let s = dot(q, keys.row(nb as usize));
-            *scanned += 1;
+        for (&nb, &s) in nbs.iter().zip(sims.iter()) {
             if s > cur_sim {
                 cur_sim = s;
                 cur = nb;
@@ -329,7 +334,10 @@ fn greedy_closest_counted(
 }
 
 /// Standard HNSW beam search over one layer; returns up to `ef` candidates
-/// (unsorted) and the number of similarity computations.
+/// (unsorted) and the number of similarity computations. Neighbor lists
+/// are scored as a batch against the store's scan tier (quantized mirror
+/// when built): every unvisited neighbor was scored one-at-a-time before
+/// too, so batching changes latency, never results.
 fn beam_search(
     keys: &KeyStore,
     layer: &Layer,
@@ -342,10 +350,12 @@ fn beam_search(
     let mut scanned = 0usize;
     let mut frontier: BinaryHeap<Cand> = BinaryHeap::new(); // best-first
     let mut results: BinaryHeap<RevCand> = BinaryHeap::new(); // worst-first
+    let mut batch: Vec<u32> = Vec::new();
+    let mut sims: Vec<f32> = Vec::new();
 
     for &e in entries {
         if visited.insert(e as usize) {
-            let sim = dot(q, keys.row(e as usize));
+            let sim = keys.score(q, e as usize);
             scanned += 1;
             frontier.push(Cand { sim, id: e });
             results.push(RevCand(Cand { sim, id: e }));
@@ -356,17 +366,22 @@ fn beam_search(
         if c.sim < worst && results.len() >= ef {
             break;
         }
+        batch.clear();
         for &nb in &layer.neighbors[c.id as usize] {
             if visited.insert(nb as usize) {
-                let sim = dot(q, keys.row(nb as usize));
-                scanned += 1;
-                let worst = results.peek().map(|r| r.0.sim).unwrap_or(f32::NEG_INFINITY);
-                if results.len() < ef || sim > worst {
-                    frontier.push(Cand { sim, id: nb });
-                    results.push(RevCand(Cand { sim, id: nb }));
-                    if results.len() > ef {
-                        results.pop();
-                    }
+                batch.push(nb);
+            }
+        }
+        sims.clear();
+        keys.score_ids(q, &batch, &mut sims);
+        scanned += batch.len();
+        for (&nb, &sim) in batch.iter().zip(sims.iter()) {
+            let worst = results.peek().map(|r| r.0.sim).unwrap_or(f32::NEG_INFINITY);
+            if results.len() < ef || sim > worst {
+                frontier.push(Cand { sim, id: nb });
+                results.push(RevCand(Cand { sim, id: nb }));
+                if results.len() > ef {
+                    results.pop();
                 }
             }
         }
@@ -462,6 +477,18 @@ impl VectorIndex for HnswIndex {
 
     fn supports_remap(&self) -> bool {
         true
+    }
+
+    fn scan_quantized(&self) -> bool {
+        self.keys.is_quantized()
+    }
+
+    fn score_exact(&self, query: &[f32], id: u32) -> f32 {
+        self.keys.score_exact(query, id as usize)
+    }
+
+    fn score_exact_batch(&self, query: &[f32], ids: &[u32], out: &mut Vec<f32>) {
+        self.keys.score_ids_exact(query, ids, out);
     }
 
     fn dead_ids(&self) -> Vec<u32> {

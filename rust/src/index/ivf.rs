@@ -10,7 +10,8 @@
 //! `remove_ids`-heavy IVF without retraining the quantiser.
 
 use super::{InsertContext, KeyStore, RemapPlan, SearchParams, SearchResult, VectorIndex};
-use crate::tensor::{argtopk, dot, l2_sq};
+use crate::kernel;
+use crate::tensor::argtopk;
 use std::ops::Range;
 
 /// Inverted-file index over a shared key store.
@@ -70,23 +71,25 @@ impl VectorIndex for IvfIndex {
 
     fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> SearchResult {
         let nprobe = params.nprobe.clamp(1, self.lists.len());
-        // Rank lists by centroid distance to the query (L2, as for build).
-        let cdist: Vec<f32> = (0..self.centroids.rows())
-            .map(|c| -l2_sq(query, self.centroids.row(c)))
-            .collect();
+        // Rank lists by centroid distance to the query (L2, as for build):
+        // one batched kernel call over the contiguous centroid matrix.
+        let mut cdist: Vec<f32> = Vec::with_capacity(self.centroids.rows());
+        kernel::l2_rows(query, self.centroids.as_slice(), self.centroids.cols(), &mut cdist);
+        for v in cdist.iter_mut() {
+            *v = -*v;
+        }
         let probe = argtopk(&cdist, nprobe);
 
+        // Gather each probed posting list's live ids, then batch-score
+        // them against the store's scan tier (quantized mirror when
+        // built) — one kernel dispatch per list instead of one per id.
         let mut ids: Vec<u32> = Vec::new();
         let mut scores: Vec<f32> = Vec::new();
         let mut scanned = self.centroids.rows(); // centroid comparisons count as scans
         for c in probe {
-            for &id in &self.lists[c] {
-                if self.dead[id as usize] {
-                    continue;
-                }
-                scores.push(dot(query, self.keys.row(id as usize)));
-                ids.push(id);
-            }
+            let before = ids.len();
+            ids.extend(self.lists[c].iter().copied().filter(|&id| !self.dead[id as usize]));
+            self.keys.score_ids(query, &ids[before..], &mut scores);
             scanned += self.lists[c].len();
         }
         let top = argtopk(&scores, k);
@@ -120,12 +123,16 @@ impl VectorIndex for IvfIndex {
     fn insert_batch(&mut self, keys: KeyStore, new: Range<usize>, _ctx: &InsertContext<'_>) -> bool {
         debug_assert_eq!(new.end, keys.rows());
         debug_assert_eq!(new.start, self.keys.rows());
+        let mut cbuf: Vec<f32> = Vec::with_capacity(self.centroids.rows());
         for i in new {
             let row = keys.row(i);
+            // Batched centroid assignment (same L2 rule as the kmeans
+            // build), exact f32 as always for structure decisions.
+            cbuf.clear();
+            kernel::l2_rows(row, self.centroids.as_slice(), self.centroids.cols(), &mut cbuf);
             let mut best = 0usize;
             let mut best_d = f32::INFINITY;
-            for c in 0..self.centroids.rows() {
-                let d2 = l2_sq(row, self.centroids.row(c));
+            for (c, &d2) in cbuf.iter().enumerate() {
                 if d2 < best_d {
                     best_d = d2;
                     best = c;
@@ -168,6 +175,18 @@ impl VectorIndex for IvfIndex {
 
     fn supports_remap(&self) -> bool {
         true
+    }
+
+    fn scan_quantized(&self) -> bool {
+        self.keys.is_quantized()
+    }
+
+    fn score_exact(&self, query: &[f32], id: u32) -> f32 {
+        self.keys.score_exact(query, id as usize)
+    }
+
+    fn score_exact_batch(&self, query: &[f32], ids: &[u32], out: &mut Vec<f32>) {
+        self.keys.score_ids_exact(query, ids, out);
     }
 
     fn dead_ids(&self) -> Vec<u32> {

@@ -68,13 +68,21 @@ pub fn kmeans(data: &Matrix, k: usize, iters: usize, seed: u64) -> KMeans {
         let assigned: Vec<Vec<u32>> = parallel::par_map_range(nblocks, |b| {
             let lo = b * block;
             let hi = (lo + block).min(n);
+            // One batched kernel call per point over the contiguous
+            // centroid matrix (the IVF-build hot loop).
+            let mut cbuf: Vec<f32> = Vec::with_capacity(centroids.rows());
             (lo..hi)
                 .map(|i| {
-                    let row = data.row(i);
+                    cbuf.clear();
+                    crate::kernel::l2_rows(
+                        data.row(i),
+                        centroids.as_slice(),
+                        centroids.cols(),
+                        &mut cbuf,
+                    );
                     let mut best = 0u32;
                     let mut best_d = f32::INFINITY;
-                    for c in 0..centroids.rows() {
-                        let d2 = l2_sq(row, centroids.row(c));
+                    for (c, &d2) in cbuf.iter().enumerate() {
                         if d2 < best_d {
                             best_d = d2;
                             best = c as u32;

@@ -294,10 +294,75 @@ pub trait VectorIndex: Send + Sync {
         false
     }
 
+    /// Whether searches rank candidates against a quantized scan tier
+    /// (see [`crate::kernel::QuantMode`]): candidate *ordering* is then
+    /// approximate, and an exact re-rank of the top pool is worthwhile
+    /// ([`search_rerank`]).
+    fn scan_quantized(&self) -> bool {
+        false
+    }
+
+    /// Exact f32 inner product of `query` with dense row `id`, read from
+    /// the index's **own** key store — the same generation as the dense
+    /// ids its searches return, so this is always safe to call on a
+    /// search result even mid-reclamation. Backs the
+    /// `retrieval.quant.rerank` exact re-scoring pass.
+    ///
+    /// The default PANICS rather than returning a sentinel: a family that
+    /// reports `scan_quantized()` without overriding this would otherwise
+    /// silently collapse every re-ranked result.
+    fn score_exact(&self, query: &[f32], id: u32) -> f32 {
+        let _ = (query, id);
+        unimplemented!("{}: scan_quantized() requires a score_exact override", self.name())
+    }
+
+    /// Batched [`VectorIndex::score_exact`] over a candidate pool,
+    /// appended to `out`. Families backed by the segmented store override
+    /// this with the run-batched exact gather so the rerank pool pays one
+    /// chunk lookup per run, not per id.
+    fn score_exact_batch(&self, query: &[f32], ids: &[u32], out: &mut Vec<f32>) {
+        out.reserve(ids.len());
+        for &id in ids {
+            out.push(self.score_exact(query, id));
+        }
+    }
+
     /// Deep copy, used by the double-buffered maintenance swap: the worker
     /// mutates a private back buffer and publishes it atomically while
     /// decode keeps searching the front.
     fn clone_index(&self) -> Box<dyn VectorIndex>;
+}
+
+/// Search with an exact re-rank pass over a widened candidate pool: when
+/// the index ranks against a quantized scan tier, fetch `rerank × k`
+/// candidates, re-score them against the f32 keys, and keep the exact
+/// top-k. Quantization error is thereby confined to the ordering *beyond*
+/// the pool boundary — exactly where ANN search already tolerates
+/// approximation. `rerank <= 1`, `k == 0`, or an unquantized index
+/// degrades to a plain search.
+pub fn search_rerank(
+    index: &dyn VectorIndex,
+    query: &[f32],
+    k: usize,
+    rerank: usize,
+    params: &SearchParams,
+) -> SearchResult {
+    if rerank <= 1 || k == 0 || !index.scan_quantized() {
+        return index.search(query, k, params);
+    }
+    let pool = k.saturating_mul(rerank);
+    let mut r = index.search(query, pool, params);
+    let mut exact: Vec<f32> = Vec::with_capacity(r.ids.len());
+    index.score_exact_batch(query, &r.ids, &mut exact);
+    let mut rescored: Vec<(f32, u32)> =
+        exact.into_iter().zip(r.ids.iter().copied()).collect();
+    // The exact re-scores touch the f32 rows: count them as scanned.
+    r.scanned += rescored.len();
+    rescored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    rescored.truncate(k);
+    r.ids = rescored.iter().map(|&(_, id)| id).collect();
+    r.scores = rescored.into_iter().map(|(s, _)| s).collect();
+    r
 }
 
 /// Shared key storage: the per-GQA-group dense key copy (Appendix C,
@@ -309,20 +374,21 @@ pub trait VectorIndex: Send + Sync {
 pub type KeyStore = crate::kvcache::SegmentedStore;
 
 /// Helper: exact top-k by brute force over a dense matrix — the ground
-/// truth used by experiments and tests.
+/// truth used by experiments and tests. Always f32, one batched kernel
+/// call for the whole scan.
 pub fn exact_topk(keys: &Matrix, query: &[f32], k: usize) -> Vec<u32> {
-    let scores: Vec<f32> = (0..keys.rows()).map(|i| crate::tensor::dot(query, keys.row(i))).collect();
+    let mut scores: Vec<f32> = Vec::with_capacity(keys.rows());
+    crate::kernel::dot_rows(query, keys.as_slice(), keys.cols(), &mut scores);
     crate::tensor::argtopk(&scores, k).into_iter().map(|i| i as u32).collect()
 }
 
 /// Exact top-k over a segmented key store (RoarGraph's bipartite phase
-/// scans segment-local rows to avoid the per-row chunk lookup).
+/// scans segment-contiguous f32 rows — one batched kernel call per chunk,
+/// never the quantized mirror: this is ground truth).
 pub fn exact_topk_store(keys: &KeyStore, query: &[f32], k: usize) -> Vec<u32> {
     let mut scores: Vec<f32> = Vec::with_capacity(keys.rows());
     for seg in keys.segments() {
-        for r in 0..seg.rows() {
-            scores.push(crate::tensor::dot(query, seg.row(r)));
-        }
+        crate::kernel::dot_rows(query, seg.as_slice(), seg.cols(), &mut scores);
     }
     crate::tensor::argtopk(&scores, k).into_iter().map(|i| i as u32).collect()
 }

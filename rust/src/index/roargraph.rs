@@ -423,10 +423,12 @@ impl VectorIndex for RoarGraph {
         let mut frontier: BinaryHeap<Cand> = BinaryHeap::new();
         let mut results: BinaryHeap<std::cmp::Reverse<Cand>> = BinaryHeap::new();
         let mut nbuf: Vec<u32> = Vec::new();
+        let mut batch: Vec<u32> = Vec::new();
+        let mut sims: Vec<f32> = Vec::new();
 
         for &e in &self.entries {
             if visited.insert(e as usize) {
-                let sim = dot(query, self.keys.row(e as usize));
+                let sim = self.keys.score(query, e as usize);
                 scanned += 1;
                 frontier.push(Cand { sim, id: e });
                 if !self.dead[e as usize] {
@@ -439,21 +441,30 @@ impl VectorIndex for RoarGraph {
             if results.len() >= ef && c.sim < worst {
                 break;
             }
+            // Batch-score the unvisited out-edges of `c` against the
+            // store's scan tier (quantized mirror when built): one kernel
+            // dispatch per hop, prefetch ahead of the gather, instead of
+            // one cold `dot` per edge.
             self.collect_neighbors(c.id, &mut nbuf);
+            batch.clear();
             for &nb in &nbuf {
                 if visited.insert(nb as usize) {
-                    let sim = dot(query, self.keys.row(nb as usize));
-                    scanned += 1;
-                    let worst = results.peek().map(|r| r.0.sim).unwrap_or(f32::NEG_INFINITY);
-                    if results.len() < ef || sim > worst {
-                        // Tombstoned nodes are traversed (they keep the
-                        // frozen CSR connected) but never returned.
-                        frontier.push(Cand { sim, id: nb });
-                        if !self.dead[nb as usize] {
-                            results.push(std::cmp::Reverse(Cand { sim, id: nb }));
-                            if results.len() > ef {
-                                results.pop();
-                            }
+                    batch.push(nb);
+                }
+            }
+            sims.clear();
+            self.keys.score_ids(query, &batch, &mut sims);
+            scanned += batch.len();
+            for (&nb, &sim) in batch.iter().zip(sims.iter()) {
+                let worst = results.peek().map(|r| r.0.sim).unwrap_or(f32::NEG_INFINITY);
+                if results.len() < ef || sim > worst {
+                    // Tombstoned nodes are traversed (they keep the
+                    // frozen CSR connected) but never returned.
+                    frontier.push(Cand { sim, id: nb });
+                    if !self.dead[nb as usize] {
+                        results.push(std::cmp::Reverse(Cand { sim, id: nb }));
+                        if results.len() > ef {
+                            results.pop();
                         }
                     }
                 }
@@ -700,6 +711,18 @@ impl VectorIndex for RoarGraph {
 
     fn supports_remap(&self) -> bool {
         true
+    }
+
+    fn scan_quantized(&self) -> bool {
+        self.keys.is_quantized()
+    }
+
+    fn score_exact(&self, query: &[f32], id: u32) -> f32 {
+        self.keys.score_exact(query, id as usize)
+    }
+
+    fn score_exact_batch(&self, query: &[f32], ids: &[u32], out: &mut Vec<f32>) {
+        self.keys.score_ids_exact(query, ids, out);
     }
 
     fn dead_ids(&self) -> Vec<u32> {

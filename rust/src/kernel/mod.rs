@@ -1,0 +1,360 @@
+//! The scoring-kernel subsystem: batched, runtime-dispatched SIMD scoring
+//! of query vectors against key bytes.
+//!
+//! At 128K-row geometry the decode-time cost of this crate is dominated by
+//! CPU-side vector scoring (the paper's Table 5 "vector search" phase),
+//! and that scoring is **memory-bandwidth-bound**, not compute-bound:
+//! every graph hop and every id-set gather streams cold key rows through
+//! the cache hierarchy once. This module is therefore organised around two
+//! ideas:
+//!
+//! 1. **Batching.** The one-`dot`-per-candidate loops of the index
+//!    families amortise nothing: the query reloads per call and the
+//!    hardware prefetcher never sees the gather ahead of time.
+//!    [`dot_rows`] / [`dot_gather`] / [`l2_rows`] score 8–10⁵ candidate
+//!    rows per call — graph neighbor lists, IVF posting lists, flat scans
+//!    and the `attend_subset` id gather all go through them.
+//! 2. **Fewer key bytes.** The quantized scan tier ([`quant::QuantChunk`])
+//!    stores a bf16 (bit-truncated f32, 2 B/dim) or symmetric-int8
+//!    (1 B/dim + one f32 scale per row) mirror of sealed store chunks, so
+//!    a bandwidth-bound scan moves 2–4× fewer bytes. Exactness is
+//!    confined to where it matters: the final attention read and the
+//!    `rerank` re-scoring pass stay f32.
+//!
+//! ## Dispatch
+//!
+//! CPU features are detected **at runtime** once ([`active`]): AVX2+FMA on
+//! x86_64, NEON on aarch64, the portable scalar path everywhere else. The
+//! env toggle `RA_KERNEL=scalar` force-disables SIMD (CI runs the whole
+//! test suite under it). The f32 `dot`/`l2_sq` paths are **bit-for-bit
+//! identical** across all three backends: the SIMD lanes reproduce the
+//! scalar 8-accumulator unrolling exactly (multiply + add, no FMA
+//! contraction, fixed [`scalar::tree8`] reduction order), so switching
+//! kernels can never change a search result, only its latency. The
+//! quantized paths are approximate by construction and use FMA freely.
+//!
+//! | op            | scalar | AVX2+FMA | NEON |
+//! |---------------|--------|----------|------|
+//! | `dot`/`l2_sq` | 8-acc unrolled | 8-lane mul+add (bit-exact) | 2×4-lane mul+add (bit-exact) |
+//! | `dot_rows` / `dot_gather` | per-row | batched + prefetch | batched |
+//! | `dot_f16` (bf16) | decode + mul | cvt+shift + FMA | scalar loop (autovec) |
+//! | `dot_i8`      | decode + mul | sign-extend cvt + FMA | scalar loop (autovec) |
+
+pub mod quant;
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+pub use quant::{QuantChunk, QuantMode};
+
+use std::sync::OnceLock;
+
+/// Which kernel backend is live for this process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Portable Rust (also the `RA_KERNEL=scalar` forced fallback).
+    Scalar,
+    /// AVX2 + FMA (x86_64, runtime-detected).
+    Avx2,
+    /// NEON (aarch64 baseline).
+    Neon,
+}
+
+impl Dispatch {
+    pub fn label(self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Avx2 => "avx2+fma",
+            Dispatch::Neon => "neon",
+        }
+    }
+}
+
+static ACTIVE: OnceLock<Dispatch> = OnceLock::new();
+
+fn detect() -> Dispatch {
+    // Force-disable toggle: the whole suite must stay green with SIMD off.
+    if std::env::var("RA_KERNEL").map(|v| v.eq_ignore_ascii_case("scalar")).unwrap_or(false) {
+        return Dispatch::Scalar;
+    }
+    detect_arch()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> Dispatch {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        Dispatch::Avx2
+    } else {
+        Dispatch::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> Dispatch {
+    // NEON is a baseline feature of aarch64.
+    Dispatch::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> Dispatch {
+    Dispatch::Scalar
+}
+
+/// The backend selected for this process (detected once, then cached).
+#[inline]
+pub fn active() -> Dispatch {
+    *ACTIVE.get_or_init(detect)
+}
+
+/// Best-effort software prefetch of the cache line at `p` (no-op off
+/// x86_64). Safe to call with any pointer: PREFETCH never faults and the
+/// address is only hinted, never dereferenced — build it with
+/// `wrapping_add` so no out-of-allocation pointer arithmetic is performed.
+#[inline]
+pub fn prefetch<T>(p: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(p as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
+}
+
+/// Inner product `a · b`. Bit-identical across every backend.
+///
+/// The length check is a real assert (not debug-only): the SIMD backends
+/// trust it, so a mismatch from safe code must panic, never read out of
+/// bounds.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot operand lengths differ");
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { x86::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Dispatch::Neon => neon::dot(a, b),
+        _ => scalar::dot(a, b),
+    }
+}
+
+/// Squared Euclidean distance. Bit-identical across every backend.
+/// Length equality is enforced (see [`dot`]).
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "l2_sq operand lengths differ");
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { x86::l2_sq(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Dispatch::Neon => neon::l2_sq(a, b),
+        _ => scalar::l2_sq(a, b),
+    }
+}
+
+/// Scores of `q` against every row of a contiguous row-major buffer
+/// (`rows.len() / cols` rows), appended to `out`. One dispatch for the
+/// whole batch; the streaming access pattern keeps the prefetcher ahead.
+#[inline]
+pub fn dot_rows(q: &[f32], rows: &[f32], cols: usize, out: &mut Vec<f32>) {
+    if cols == 0 {
+        return;
+    }
+    assert_eq!(q.len(), cols, "query length != row width");
+    debug_assert_eq!(rows.len() % cols, 0, "rows buffer is not row-aligned");
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { x86::dot_rows(q, rows, cols, out) },
+        #[cfg(target_arch = "aarch64")]
+        Dispatch::Neon => neon::dot_rows(q, rows, cols, out),
+        _ => scalar::dot_rows(q, rows, cols, out),
+    }
+}
+
+/// Gather-scores of `q` against the rows named by `ids` in a contiguous
+/// row-major buffer, appended to `out`. The x86 path issues software
+/// prefetches a few ids ahead of the gather.
+#[inline]
+pub fn dot_gather(q: &[f32], rows: &[f32], cols: usize, ids: &[u32], out: &mut Vec<f32>) {
+    if cols == 0 || ids.is_empty() {
+        return;
+    }
+    assert_eq!(q.len(), cols, "query length != row width");
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { x86::dot_gather(q, rows, cols, ids, out) },
+        #[cfg(target_arch = "aarch64")]
+        Dispatch::Neon => neon::dot_gather(q, rows, cols, ids, out),
+        _ => scalar::dot_gather(q, rows, cols, ids, out),
+    }
+}
+
+/// Squared distances of `q` to every row of a contiguous row-major buffer,
+/// appended to `out` (IVF/k-means centroid assignment).
+#[inline]
+pub fn l2_rows(q: &[f32], rows: &[f32], cols: usize, out: &mut Vec<f32>) {
+    if cols == 0 {
+        return;
+    }
+    assert_eq!(q.len(), cols, "query length != row width");
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2 => unsafe { x86::l2_rows(q, rows, cols, out) },
+        #[cfg(target_arch = "aarch64")]
+        Dispatch::Neon => neon::l2_rows(q, rows, cols, out),
+        _ => scalar::l2_rows(q, rows, cols, out),
+    }
+}
+
+/// Inner product of `q` with one bf16 (bit-truncated f32) row. (On NEON
+/// the scalar loop autovectorises; only x86 has an intrinsic path.)
+#[inline]
+pub fn dot_f16(q: &[f32], row: &[u16]) -> f32 {
+    assert_eq!(q.len(), row.len(), "dot_f16 operand lengths differ");
+    #[cfg(target_arch = "x86_64")]
+    if active() == Dispatch::Avx2 {
+        return unsafe { x86::dot_f16(q, row) };
+    }
+    scalar::dot_f16(q, row)
+}
+
+/// Unscaled inner product of `q` with one int8 row (the caller multiplies
+/// by the row's symmetric scale).
+#[inline]
+pub fn dot_i8(q: &[f32], row: &[i8]) -> f32 {
+    assert_eq!(q.len(), row.len(), "dot_i8 operand lengths differ");
+    #[cfg(target_arch = "x86_64")]
+    if active() == Dispatch::Avx2 {
+        return unsafe { x86::dot_i8(q, row) };
+    }
+    scalar::dot_i8(q, row)
+}
+
+/// Scores of `q` against every contiguous bf16 row, appended to `out`.
+#[inline]
+pub fn dot_rows_f16(q: &[f32], rows: &[u16], cols: usize, out: &mut Vec<f32>) {
+    if cols == 0 {
+        return;
+    }
+    assert_eq!(q.len(), cols, "query length != row width");
+    #[cfg(target_arch = "x86_64")]
+    if active() == Dispatch::Avx2 {
+        return unsafe { x86::dot_rows_f16(q, rows, cols, out) };
+    }
+    scalar::dot_rows_f16(q, rows, cols, out)
+}
+
+/// Scores of `q` against every contiguous int8 row with its per-row scale
+/// applied, appended to `out`.
+#[inline]
+pub fn dot_rows_i8(q: &[f32], rows: &[i8], scales: &[f32], cols: usize, out: &mut Vec<f32>) {
+    if cols == 0 {
+        return;
+    }
+    assert_eq!(q.len(), cols, "query length != row width");
+    #[cfg(target_arch = "x86_64")]
+    if active() == Dispatch::Avx2 {
+        return unsafe { x86::dot_rows_i8(q, rows, scales, cols, out) };
+    }
+    scalar::dot_rows_i8(q, rows, scales, cols, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = crate::util::rng::Rng::seed_from(seed);
+        let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn dispatched_dot_matches_scalar_bitwise() {
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 67, 257] {
+            let (a, b) = vecs(n, n as u64 + 1);
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                scalar::dot(&a, &b).to_bits(),
+                "dot diverged at n={n} under {:?}",
+                active()
+            );
+            assert_eq!(
+                l2_sq(&a, &b).to_bits(),
+                scalar::l2_sq(&a, &b).to_bits(),
+                "l2_sq diverged at n={n} under {:?}",
+                active()
+            );
+        }
+    }
+
+    #[test]
+    fn batch_forms_match_row_form() {
+        let cols = 48;
+        let rows_n = 37;
+        let (q, _) = vecs(cols, 3);
+        let (rows, _) = vecs(cols * rows_n, 4);
+        let mut batched = Vec::new();
+        dot_rows(&q, &rows, cols, &mut batched);
+        assert_eq!(batched.len(), rows_n);
+        for (r, &s) in batched.iter().enumerate() {
+            let want = dot(&q, &rows[r * cols..(r + 1) * cols]);
+            assert_eq!(s.to_bits(), want.to_bits(), "dot_rows row {r}");
+        }
+        let ids: Vec<u32> = (0..rows_n as u32).rev().collect();
+        let mut gathered = Vec::new();
+        dot_gather(&q, &rows, cols, &ids, &mut gathered);
+        for (j, &id) in ids.iter().enumerate() {
+            let want = batched[id as usize];
+            assert_eq!(gathered[j].to_bits(), want.to_bits(), "dot_gather id {id}");
+        }
+        let mut l2b = Vec::new();
+        l2_rows(&q, &rows, cols, &mut l2b);
+        for (r, &s) in l2b.iter().enumerate() {
+            let want = l2_sq(&q, &rows[r * cols..(r + 1) * cols]);
+            assert_eq!(s.to_bits(), want.to_bits(), "l2_rows row {r}");
+        }
+    }
+
+    #[test]
+    fn quantized_dots_approximate_f32() {
+        let cols = 64;
+        let (q, row) = vecs(cols, 9);
+        let exact = dot(&q, &row);
+        // bf16 truncation: ~3 decimal digits of the key survive.
+        let h: Vec<u16> = row.iter().map(|v| (v.to_bits() >> 16) as u16).collect();
+        let approx = dot_f16(&q, &h);
+        assert!(
+            (approx - exact).abs() < 0.2 * exact.abs().max(1.0),
+            "f16 dot too far: {approx} vs {exact}"
+        );
+        // int8 symmetric: ~0.5% per-coordinate error.
+        let max = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let scale = max / 127.0;
+        let qrow: Vec<i8> =
+            row.iter().map(|v| (v / scale).round().clamp(-127.0, 127.0) as i8).collect();
+        let approx = scale * dot_i8(&q, &qrow);
+        assert!(
+            (approx - exact).abs() < 0.2 * exact.abs().max(1.0),
+            "i8 dot too far: {approx} vs {exact}"
+        );
+        // Batched forms agree with the row forms.
+        let mut out = Vec::new();
+        dot_rows_f16(&q, &h, cols, &mut out);
+        assert_eq!(out[0].to_bits(), dot_f16(&q, &h).to_bits());
+        out.clear();
+        dot_rows_i8(&q, &qrow, &[scale], cols, &mut out);
+        assert!((out[0] - scale * dot_i8(&q, &qrow)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn active_is_stable_and_labeled() {
+        let a = active();
+        assert_eq!(a, active(), "dispatch must be cached");
+        assert!(!a.label().is_empty());
+    }
+}

@@ -1,0 +1,109 @@
+//! NEON kernels (aarch64 — NEON is a baseline feature, so no runtime
+//! detection is needed beyond the architecture itself).
+//!
+//! The f32 paths mirror the scalar 8-accumulator unrolling as two 4-lane
+//! vectors (multiply + add, no fused contraction) and reduce through the
+//! shared [`super::scalar::tree8`] tree, so they are bit-for-bit identical
+//! to the scalar and AVX2 backends. The quantized (bf16/int8) paths
+//! delegate to the scalar loops, which LLVM auto-vectorises for NEON —
+//! the bandwidth win of the smaller payload is format-, not
+//! intrinsic-, driven.
+
+use core::arch::aarch64::*;
+
+/// Inner product, bit-identical to [`super::scalar::dot`].
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    unsafe {
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        for i in 0..chunks {
+            let pa = ap.add(i * 8);
+            let pb = bp.add(i * 8);
+            // mul + add (not vfmaq): lanes reproduce scalar accumulators.
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(pa), vld1q_f32(pb)));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(pa.add(4)), vld1q_f32(pb.add(4))));
+        }
+        let lanes = [
+            vgetq_lane_f32::<0>(acc0),
+            vgetq_lane_f32::<1>(acc0),
+            vgetq_lane_f32::<2>(acc0),
+            vgetq_lane_f32::<3>(acc0),
+            vgetq_lane_f32::<0>(acc1),
+            vgetq_lane_f32::<1>(acc1),
+            vgetq_lane_f32::<2>(acc1),
+            vgetq_lane_f32::<3>(acc1),
+        ];
+        let mut tail = 0.0f32;
+        for (x, y) in a[chunks * 8..].iter().zip(&b[chunks * 8..]) {
+            tail += x * y;
+        }
+        super::scalar::tree8(&lanes) + tail
+    }
+}
+
+/// Squared Euclidean distance, bit-identical to [`super::scalar::l2_sq`].
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    unsafe {
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        for i in 0..chunks {
+            let pa = ap.add(i * 8);
+            let pb = bp.add(i * 8);
+            let d0 = vsubq_f32(vld1q_f32(pa), vld1q_f32(pb));
+            let d1 = vsubq_f32(vld1q_f32(pa.add(4)), vld1q_f32(pb.add(4)));
+            acc0 = vaddq_f32(acc0, vmulq_f32(d0, d0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(d1, d1));
+        }
+        let lanes = [
+            vgetq_lane_f32::<0>(acc0),
+            vgetq_lane_f32::<1>(acc0),
+            vgetq_lane_f32::<2>(acc0),
+            vgetq_lane_f32::<3>(acc0),
+            vgetq_lane_f32::<0>(acc1),
+            vgetq_lane_f32::<1>(acc1),
+            vgetq_lane_f32::<2>(acc1),
+            vgetq_lane_f32::<3>(acc1),
+        ];
+        let mut tail = 0.0f32;
+        for (x, y) in a[chunks * 8..].iter().zip(&b[chunks * 8..]) {
+            let d = x - y;
+            tail += d * d;
+        }
+        super::scalar::tree8(&lanes) + tail
+    }
+}
+
+/// Batched contiguous row scores.
+pub fn dot_rows(q: &[f32], rows: &[f32], cols: usize, out: &mut Vec<f32>) {
+    out.reserve(rows.len() / cols);
+    for row in rows.chunks_exact(cols) {
+        out.push(dot(q, row));
+    }
+}
+
+/// Batched gather scores.
+pub fn dot_gather(q: &[f32], rows: &[f32], cols: usize, ids: &[u32], out: &mut Vec<f32>) {
+    out.reserve(ids.len());
+    for &id in ids {
+        let off = id as usize * cols;
+        out.push(dot(q, &rows[off..off + cols]));
+    }
+}
+
+/// Batched contiguous row squared distances.
+pub fn l2_rows(q: &[f32], rows: &[f32], cols: usize, out: &mut Vec<f32>) {
+    out.reserve(rows.len() / cols);
+    for row in rows.chunks_exact(cols) {
+        out.push(l2_sq(q, row));
+    }
+}

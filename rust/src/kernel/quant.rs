@@ -1,0 +1,243 @@
+//! The quantized scan tier: compressed per-chunk mirrors of the segmented
+//! key store (RetroInfer-style "the KV cache is a vector storage engine").
+//!
+//! A scan-tier mirror exists to be *streamed*, not to be exact: index
+//! traversals (graph hops, IVF posting lists, flat scans) rank candidates
+//! against it, moving 2–4× fewer bytes per candidate, while the final
+//! attention read and the `retrieval.quant.rerank` exact re-scoring pass
+//! stay f32 — quantization error is confined to candidate *ordering*,
+//! exactly where ANN search already tolerates approximation.
+//!
+//! Two formats:
+//!
+//! * [`QuantMode::Fp16`] — bit-truncated f32 (the top 16 bits: sign,
+//!   exponent, 7 mantissa bits — i.e. bfloat16). 2 B/dim, ~0.4% relative
+//!   error, no per-row metadata.
+//! * [`QuantMode::Int8`] — symmetric per-row int8: `v ≈ scale · q` with
+//!   `scale = max|row| / 127`. 1 B/dim + 4 B/row, the paper-adjacent
+//!   "compress the scan tier" point on the bandwidth/accuracy curve.
+//!
+//! Mirrors are built chunk-at-a-time where chunks are born — store
+//! append/merge/compact, which run at prefill-build and maintenance-worker
+//! time — so quantization cost never lands on the token path.
+
+use crate::tensor::Matrix;
+
+/// Scan-tier quantization mode (`retrieval.quant.mode`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QuantMode {
+    /// No mirror: scans read the f32 rows (the exact baseline).
+    #[default]
+    Off,
+    /// Bit-truncated f32 (bfloat16), 2 B/dim.
+    Fp16,
+    /// Symmetric per-row int8, 1 B/dim + one f32 scale per row.
+    Int8,
+}
+
+impl QuantMode {
+    pub const ALL: [QuantMode; 3] = [QuantMode::Off, QuantMode::Fp16, QuantMode::Int8];
+
+    pub fn enabled(self) -> bool {
+        self != QuantMode::Off
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            QuantMode::Off => "off",
+            QuantMode::Fp16 => "fp16",
+            QuantMode::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QuantMode> {
+        QuantMode::ALL.iter().copied().find(|m| m.label().eq_ignore_ascii_case(s))
+    }
+}
+
+/// A quantized mirror of one store chunk. Immutable once built (mirrors
+/// ride the same `Arc`-sharing discipline as the chunks they shadow).
+#[derive(Clone, Debug)]
+pub enum QuantChunk {
+    /// Row-major bf16 payload.
+    F16 { cols: usize, data: Vec<u16> },
+    /// Row-major int8 payload + one symmetric scale per row.
+    I8 { cols: usize, data: Vec<i8>, scales: Vec<f32> },
+}
+
+impl QuantChunk {
+    /// Quantize a chunk; `None` for [`QuantMode::Off`].
+    pub fn build(mode: QuantMode, m: &Matrix) -> Option<QuantChunk> {
+        match mode {
+            QuantMode::Off => None,
+            QuantMode::Fp16 => {
+                let data = m.as_slice().iter().map(|v| (v.to_bits() >> 16) as u16).collect();
+                Some(QuantChunk::F16 { cols: m.cols(), data })
+            }
+            QuantMode::Int8 => {
+                let cols = m.cols();
+                let mut data: Vec<i8> = Vec::with_capacity(m.rows() * cols);
+                let mut scales: Vec<f32> = Vec::with_capacity(m.rows());
+                for r in 0..m.rows() {
+                    let row = m.row(r);
+                    let max = row.iter().fold(0.0f32, |acc, v| acc.max(v.abs()));
+                    let scale = if max > 0.0 { max / 127.0 } else { 1.0 };
+                    let inv = 1.0 / scale;
+                    scales.push(scale);
+                    data.extend(
+                        row.iter().map(|v| (v * inv).round().clamp(-127.0, 127.0) as i8),
+                    );
+                }
+                Some(QuantChunk::I8 { cols, data, scales })
+            }
+        }
+    }
+
+    pub fn mode(&self) -> QuantMode {
+        match self {
+            QuantChunk::F16 { .. } => QuantMode::Fp16,
+            QuantChunk::I8 { .. } => QuantMode::Int8,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            QuantChunk::F16 { cols, .. } | QuantChunk::I8 { cols, .. } => *cols,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            QuantChunk::F16 { cols, data } => data.len() / (*cols).max(1),
+            QuantChunk::I8 { scales, .. } => scales.len(),
+        }
+    }
+
+    /// Approximate score of `q` against chunk-local row `local`.
+    #[inline]
+    pub fn score(&self, q: &[f32], local: usize) -> f32 {
+        match self {
+            QuantChunk::F16 { cols, data } => {
+                super::dot_f16(q, &data[local * cols..(local + 1) * cols])
+            }
+            QuantChunk::I8 { cols, data, scales } => {
+                scales[local] * super::dot_i8(q, &data[local * cols..(local + 1) * cols])
+            }
+        }
+    }
+
+    /// Batched contiguous scan of chunk-local rows `[lo, hi)`, appended to
+    /// `out` (the flat-scan fast path: one dispatch, streaming reads).
+    pub fn score_range(&self, q: &[f32], lo: usize, hi: usize, out: &mut Vec<f32>) {
+        debug_assert!(lo <= hi && hi <= self.rows());
+        match self {
+            QuantChunk::F16 { cols, data } => {
+                super::dot_rows_f16(q, &data[lo * cols..hi * cols], *cols, out)
+            }
+            QuantChunk::I8 { cols, data, scales } => {
+                super::dot_rows_i8(q, &data[lo * cols..hi * cols], &scales[lo..hi], *cols, out)
+            }
+        }
+    }
+
+    /// Batched gather-scan by chunk-local row ids, appended to `out`. The
+    /// payload is matched once (not per id) and the gather prefetches a
+    /// few ids ahead, mirroring the f32 `dot_gather` discipline — the
+    /// quantized rows are the bandwidth product, so they get at least the
+    /// same amortization.
+    pub fn score_ids(&self, q: &[f32], locals: &[u32], out: &mut Vec<f32>) {
+        const AHEAD: usize = 4;
+        out.reserve(locals.len());
+        match self {
+            QuantChunk::F16 { cols, data } => {
+                for (i, &l) in locals.iter().enumerate() {
+                    if let Some(&nxt) = locals.get(i + AHEAD) {
+                        super::prefetch(data.as_ptr().wrapping_add(nxt as usize * cols));
+                    }
+                    let l = l as usize;
+                    out.push(super::dot_f16(q, &data[l * cols..(l + 1) * cols]));
+                }
+            }
+            QuantChunk::I8 { cols, data, scales } => {
+                for (i, &l) in locals.iter().enumerate() {
+                    if let Some(&nxt) = locals.get(i + AHEAD) {
+                        super::prefetch(data.as_ptr().wrapping_add(nxt as usize * cols));
+                    }
+                    let l = l as usize;
+                    out.push(scales[l] * super::dot_i8(q, &data[l * cols..(l + 1) * cols]));
+                }
+            }
+        }
+    }
+
+    /// Heap bytes of the mirror payload (memory accounting).
+    pub fn bytes(&self) -> usize {
+        match self {
+            QuantChunk::F16 { data, .. } => data.len() * 2,
+            QuantChunk::I8 { data, scales, .. } => data.len() + scales.len() * 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mat(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from(seed);
+        Matrix::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn off_builds_nothing() {
+        assert!(QuantChunk::build(QuantMode::Off, &mat(4, 8, 1)).is_none());
+    }
+
+    #[test]
+    fn parse_labels_roundtrip() {
+        for m in QuantMode::ALL {
+            assert_eq!(QuantMode::parse(m.label()), Some(m));
+        }
+        assert_eq!(QuantMode::parse("nope"), None);
+        assert!(!QuantMode::Off.enabled());
+        assert!(QuantMode::Int8.enabled());
+    }
+
+    #[test]
+    fn scores_track_exact_within_tolerance() {
+        let m = mat(32, 64, 7);
+        let q: Vec<f32> = (0..64).map(|i| ((i * 13 % 29) as f32 - 14.0) * 0.1).collect();
+        for mode in [QuantMode::Fp16, QuantMode::Int8] {
+            let ch = QuantChunk::build(mode, &m).expect("mirror");
+            assert_eq!(ch.rows(), 32);
+            assert_eq!(ch.cols(), 64);
+            assert_eq!(ch.mode(), mode);
+            assert!(ch.bytes() < m.as_slice().len() * 4, "mirror must be smaller than f32");
+            let mut ranged = Vec::new();
+            ch.score_range(&q, 0, 32, &mut ranged);
+            for r in 0..32 {
+                let exact = crate::kernel::dot(&q, m.row(r));
+                let approx = ch.score(&q, r);
+                assert!(
+                    (approx - exact).abs() < 0.2 * exact.abs().max(1.0),
+                    "{mode:?} row {r}: {approx} vs {exact}"
+                );
+                assert_eq!(ranged[r].to_bits(), approx.to_bits(), "range/row mismatch");
+            }
+            let locals: Vec<u32> = (0..32u32).step_by(5).collect();
+            let mut gathered = Vec::new();
+            ch.score_ids(&q, &locals, &mut gathered);
+            for (j, &l) in locals.iter().enumerate() {
+                assert_eq!(gathered[j].to_bits(), ch.score(&q, l as usize).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn int8_handles_zero_rows() {
+        let m = Matrix::zeros(3, 8);
+        let ch = QuantChunk::build(QuantMode::Int8, &m).expect("mirror");
+        assert_eq!(ch.score(&[1.0; 8], 1), 0.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Portable scalar kernels — the reference semantics of the subsystem.
+//!
+//! The f32 paths use an 8-accumulator unrolling whose lane structure is
+//! reproduced exactly by the AVX2 and NEON backends (multiply + add, no
+//! FMA contraction, [`tree8`] reduction order), so every backend returns
+//! bit-identical f32 scores. LLVM auto-vectorises this form on its own,
+//! which is why the scalar fallback is merely slower, not pathological.
+
+/// Fixed-association horizontal reduction of the 8 unrolled accumulators.
+/// Every backend funnels through this exact expression tree — it is what
+/// makes the scalar and SIMD paths bit-for-bit identical.
+#[inline]
+pub fn tree8(s: &[f32; 8]) -> f32 {
+    (((s[0] + s[1]) + (s[2] + s[3])) + (s[4] + s[5])) + (s[6] + s[7])
+}
+
+/// Inner product, 8-way unrolled: accumulator `l` sums elements
+/// `l, l+8, l+16, ...` — exactly SIMD lane `l`.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let mut s = [0.0f32; 8];
+    for (ca, cb) in a.chunks_exact(8).zip(b.chunks_exact(8)) {
+        for ((acc, x), y) in s.iter_mut().zip(ca).zip(cb) {
+            *acc += x * y;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in a[chunks * 8..].iter().zip(&b[chunks * 8..]) {
+        tail += x * y;
+    }
+    tree8(&s) + tail
+}
+
+/// Squared Euclidean distance with the same lane structure as [`dot`].
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let mut s = [0.0f32; 8];
+    for (ca, cb) in a.chunks_exact(8).zip(b.chunks_exact(8)) {
+        for ((acc, x), y) in s.iter_mut().zip(ca).zip(cb) {
+            let d = x - y;
+            *acc += d * d;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in a[chunks * 8..].iter().zip(&b[chunks * 8..]) {
+        let d = x - y;
+        tail += d * d;
+    }
+    tree8(&s) + tail
+}
+
+pub fn dot_rows(q: &[f32], rows: &[f32], cols: usize, out: &mut Vec<f32>) {
+    out.reserve(rows.len() / cols);
+    for row in rows.chunks_exact(cols) {
+        out.push(dot(q, row));
+    }
+}
+
+pub fn dot_gather(q: &[f32], rows: &[f32], cols: usize, ids: &[u32], out: &mut Vec<f32>) {
+    out.reserve(ids.len());
+    for &id in ids {
+        let off = id as usize * cols;
+        out.push(dot(q, &rows[off..off + cols]));
+    }
+}
+
+pub fn l2_rows(q: &[f32], rows: &[f32], cols: usize, out: &mut Vec<f32>) {
+    out.reserve(rows.len() / cols);
+    for row in rows.chunks_exact(cols) {
+        out.push(l2_sq(q, row));
+    }
+}
+
+/// Decode one bf16 (bit-truncated f32) value.
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Inner product against one bf16 row.
+#[inline]
+pub fn dot_f16(q: &[f32], row: &[u16]) -> f32 {
+    debug_assert_eq!(q.len(), row.len());
+    let mut s = 0.0f32;
+    for (x, &h) in q.iter().zip(row.iter()) {
+        s += x * f16_to_f32(h);
+    }
+    s
+}
+
+/// Unscaled inner product against one int8 row.
+#[inline]
+pub fn dot_i8(q: &[f32], row: &[i8]) -> f32 {
+    debug_assert_eq!(q.len(), row.len());
+    let mut s = 0.0f32;
+    for (x, &v) in q.iter().zip(row.iter()) {
+        s += x * v as f32;
+    }
+    s
+}
+
+pub fn dot_rows_f16(q: &[f32], rows: &[u16], cols: usize, out: &mut Vec<f32>) {
+    out.reserve(rows.len() / cols);
+    for row in rows.chunks_exact(cols) {
+        out.push(dot_f16(q, row));
+    }
+}
+
+pub fn dot_rows_i8(q: &[f32], rows: &[i8], scales: &[f32], cols: usize, out: &mut Vec<f32>) {
+    out.reserve(rows.len() / cols);
+    for (row, &scale) in rows.chunks_exact(cols).zip(scales.iter()) {
+        out.push(scale * dot_i8(q, row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive_within_tolerance() {
+        let a: Vec<f32> = (0..67).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..67).map(|i| (66 - i) as f32 * 0.25).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-2 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn l2_matches_naive_within_tolerance() {
+        let a: Vec<f32> = (0..53).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..53).map(|i| (i as f32 * 0.11).cos()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!((l2_sq(&a, &b) - naive).abs() < 1e-4 * naive.max(1.0));
+    }
+
+    #[test]
+    fn f16_roundtrip_is_truncation() {
+        for v in [0.0f32, 1.0, -3.25, 1e-8, 1e8] {
+            let h = (v.to_bits() >> 16) as u16;
+            let back = f16_to_f32(h);
+            // Truncation keeps sign + exponent + 7 mantissa bits.
+            assert!((back - v).abs() <= v.abs() / 128.0 + f32::MIN_POSITIVE);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! AVX2 + FMA kernels (x86_64).
+//!
+//! Every function here carries `#[target_feature(enable = "avx2,fma")]`
+//! and is reached only through the dispatch wrappers in the parent module
+//! after runtime feature detection. The f32 paths deliberately use
+//! multiply + add (no FMA contraction) with the shared
+//! [`super::scalar::tree8`] reduction so they are bit-for-bit identical
+//! to the scalar fallback; the quantized paths are approximate by
+//! construction and use FMA for throughput.
+
+use core::arch::x86_64::*;
+
+/// How many gather ids ahead the software prefetch runs. Row payloads are
+/// 1–4 cache lines at head-dim 64; four ids of headroom hides most of the
+/// DRAM latency without thrashing the fill buffers.
+const PREFETCH_AHEAD: usize = 4;
+
+/// Horizontal reduction matching [`super::scalar::tree8`] bit-for-bit.
+#[inline]
+unsafe fn sum8(v: __m256) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+    super::scalar::tree8(&lanes)
+}
+
+/// Inner product, bit-identical to [`super::scalar::dot`].
+///
+/// # Safety
+/// Requires AVX2 + FMA (runtime-detected by the caller).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = _mm256_setzero_ps();
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    for i in 0..chunks {
+        let va = _mm256_loadu_ps(ap.add(i * 8));
+        let vb = _mm256_loadu_ps(bp.add(i * 8));
+        // mul + add (not FMA): lane l reproduces scalar accumulator s[l].
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in a[chunks * 8..].iter().zip(&b[chunks * 8..]) {
+        tail += x * y;
+    }
+    sum8(acc) + tail
+}
+
+/// Squared Euclidean distance, bit-identical to [`super::scalar::l2_sq`].
+///
+/// # Safety
+/// Requires AVX2 + FMA (runtime-detected by the caller).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = _mm256_setzero_ps();
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    for i in 0..chunks {
+        let d = _mm256_sub_ps(_mm256_loadu_ps(ap.add(i * 8)), _mm256_loadu_ps(bp.add(i * 8)));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in a[chunks * 8..].iter().zip(&b[chunks * 8..]) {
+        let d = x - y;
+        tail += d * d;
+    }
+    sum8(acc) + tail
+}
+
+/// Batched contiguous row scores.
+///
+/// # Safety
+/// Requires AVX2 + FMA (runtime-detected by the caller).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_rows(q: &[f32], rows: &[f32], cols: usize, out: &mut Vec<f32>) {
+    out.reserve(rows.len() / cols);
+    for row in rows.chunks_exact(cols) {
+        out.push(dot(q, row));
+    }
+}
+
+/// Batched gather scores with software prefetch ahead of the gather.
+///
+/// # Safety
+/// Requires AVX2 + FMA (runtime-detected by the caller).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_gather(q: &[f32], rows: &[f32], cols: usize, ids: &[u32], out: &mut Vec<f32>) {
+    out.reserve(ids.len());
+    let base = rows.as_ptr();
+    for (i, &id) in ids.iter().enumerate() {
+        if let Some(&nxt) = ids.get(i + PREFETCH_AHEAD) {
+            // wrapping_add: prefetch never faults, but computing an
+            // out-of-allocation pointer with `add` would still be UB if a
+            // caller ever passed a bogus id (the scoring slice below
+            // bounds-checks it properly).
+            _mm_prefetch::<_MM_HINT_T0>(base.wrapping_add(nxt as usize * cols) as *const i8);
+        }
+        let off = id as usize * cols;
+        out.push(dot(q, &rows[off..off + cols]));
+    }
+}
+
+/// Batched contiguous row squared distances.
+///
+/// # Safety
+/// Requires AVX2 + FMA (runtime-detected by the caller).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn l2_rows(q: &[f32], rows: &[f32], cols: usize, out: &mut Vec<f32>) {
+    out.reserve(rows.len() / cols);
+    for row in rows.chunks_exact(cols) {
+        out.push(l2_sq(q, row));
+    }
+}
+
+/// bf16 row inner product: widen 8×u16 → 8×u32, shift into the f32
+/// exponent position, FMA against the query.
+///
+/// # Safety
+/// Requires AVX2 + FMA (runtime-detected by the caller).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_f16(q: &[f32], row: &[u16]) -> f32 {
+    debug_assert_eq!(q.len(), row.len());
+    let n = q.len();
+    let chunks = n / 8;
+    let mut acc = _mm256_setzero_ps();
+    let (qp, rp) = (q.as_ptr(), row.as_ptr());
+    for i in 0..chunks {
+        let h = _mm_loadu_si128(rp.add(i * 8) as *const __m128i);
+        let k = _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h)));
+        acc = _mm256_fmadd_ps(k, _mm256_loadu_ps(qp.add(i * 8)), acc);
+    }
+    let mut s = sum8(acc);
+    for (x, &h) in q[chunks * 8..].iter().zip(&row[chunks * 8..]) {
+        s += x * super::scalar::f16_to_f32(h);
+    }
+    s
+}
+
+/// int8 row inner product (unscaled): sign-extend 8×i8 → 8×i32, convert,
+/// FMA against the query.
+///
+/// # Safety
+/// Requires AVX2 + FMA (runtime-detected by the caller).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_i8(q: &[f32], row: &[i8]) -> f32 {
+    debug_assert_eq!(q.len(), row.len());
+    let n = q.len();
+    let chunks = n / 8;
+    let mut acc = _mm256_setzero_ps();
+    let (qp, rp) = (q.as_ptr(), row.as_ptr());
+    for i in 0..chunks {
+        let b = _mm_loadl_epi64(rp.add(i * 8) as *const __m128i);
+        let k = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(b));
+        acc = _mm256_fmadd_ps(k, _mm256_loadu_ps(qp.add(i * 8)), acc);
+    }
+    let mut s = sum8(acc);
+    for (x, &v) in q[chunks * 8..].iter().zip(&row[chunks * 8..]) {
+        s += x * v as f32;
+    }
+    s
+}
+
+/// Batched contiguous bf16 row scores.
+///
+/// # Safety
+/// Requires AVX2 + FMA (runtime-detected by the caller).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_rows_f16(q: &[f32], rows: &[u16], cols: usize, out: &mut Vec<f32>) {
+    out.reserve(rows.len() / cols);
+    for row in rows.chunks_exact(cols) {
+        out.push(dot_f16(q, row));
+    }
+}
+
+/// Batched contiguous int8 row scores with per-row scales applied.
+///
+/// # Safety
+/// Requires AVX2 + FMA (runtime-detected by the caller).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_rows_i8(q: &[f32], rows: &[i8], scales: &[f32], cols: usize, out: &mut Vec<f32>) {
+    out.reserve(rows.len() / cols);
+    for (row, &scale) in rows.chunks_exact(cols).zip(scales.iter()) {
+        out.push(scale * dot_i8(q, row));
+    }
+}

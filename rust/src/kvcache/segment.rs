@@ -16,6 +16,7 @@
 //! times over the whole generation (amortised O(log n) per appended row —
 //! versus O(context) per *drain* for the monolithic store).
 
+use crate::kernel::{self, QuantChunk, QuantMode};
 use crate::tensor::Matrix;
 use std::sync::Arc;
 
@@ -23,6 +24,22 @@ use std::sync::Arc;
 /// concatenation of all segments in order; row ids are stable across
 /// appends (rows `[0, old.rows())` of an appended store are bit-identical
 /// to the old store).
+///
+/// ## Quantized scan tier
+///
+/// With a [`QuantMode`] enabled (see [`SegmentedStore::with_quant`]), the
+/// store keeps a compressed **mirror** per chunk (bf16 or symmetric int8,
+/// [`crate::kernel::QuantChunk`]). The scoring entry points
+/// ([`SegmentedStore::score`], [`SegmentedStore::score_ids`],
+/// [`SegmentedStore::score_segment_range`]) read the mirror when one
+/// exists — 2–4× fewer key bytes per candidate on the bandwidth-bound
+/// scan paths — while [`SegmentedStore::score_exact`] and
+/// [`SegmentedStore::row`] always read the f32 payload. Mirrors are built
+/// wherever chunks are born (append, tail merge, compaction gather),
+/// which are exactly the prefill-build and maintenance-worker paths — so
+/// quantization cost never lands on the decode token path — and are
+/// shared by `Arc` alongside the chunks they shadow (a compaction that
+/// keeps a chunk intact keeps its mirror without re-quantizing).
 #[derive(Clone, Debug)]
 pub struct SegmentedStore {
     segments: Vec<Arc<Matrix>>,
@@ -30,12 +47,23 @@ pub struct SegmentedStore {
     starts: Vec<usize>,
     rows: usize,
     cols: usize,
+    /// Scan-tier quantization mode (Off ⇒ `mirrors` holds only `None`).
+    quant: QuantMode,
+    /// Per-chunk quantized mirrors, parallel to `segments`.
+    mirrors: Vec<Option<Arc<QuantChunk>>>,
 }
 
 impl SegmentedStore {
     /// Empty store of the given width.
     pub fn new(cols: usize) -> Self {
-        SegmentedStore { segments: Vec::new(), starts: Vec::new(), rows: 0, cols }
+        SegmentedStore {
+            segments: Vec::new(),
+            starts: Vec::new(),
+            rows: 0,
+            cols,
+            quant: QuantMode::Off,
+            mirrors: Vec::new(),
+        }
     }
 
     /// Single-segment store adopting `m` without copying its buffer.
@@ -46,8 +74,44 @@ impl SegmentedStore {
             s.segments.push(m);
             s.starts.push(0);
             s.rows = rows;
+            s.mirrors.push(None);
         }
         s
+    }
+
+    /// Adopt a scan-tier quantization mode, (re)building the mirror of
+    /// every chunk that lacks one. Build-time only (prefill retriever
+    /// construction); later appends/compactions maintain mirrors
+    /// incrementally.
+    pub fn with_quant(mut self, mode: QuantMode) -> Self {
+        self.quant = mode;
+        self.mirrors = self
+            .segments
+            .iter()
+            .map(|seg| QuantChunk::build(mode, seg).map(Arc::new))
+            .collect();
+        self
+    }
+
+    /// The scan-tier quantization mode.
+    pub fn quant_mode(&self) -> QuantMode {
+        self.quant
+    }
+
+    /// Whether scans read a quantized mirror (candidate ordering is then
+    /// approximate; exact rerank/attention reads stay f32).
+    pub fn is_quantized(&self) -> bool {
+        self.quant.enabled()
+    }
+
+    /// Number of chunks that currently carry a mirror.
+    pub fn mirrored_segments(&self) -> usize {
+        self.mirrors.iter().flatten().count()
+    }
+
+    /// Heap bytes of the quantized mirrors (memory accounting).
+    pub fn quant_bytes(&self) -> usize {
+        self.mirrors.iter().flatten().map(|c| c.bytes()).sum()
     }
 
     pub fn from_matrix(m: Matrix) -> Self {
@@ -76,14 +140,117 @@ impl SegmentedStore {
         &self.segments
     }
 
-    /// Borrow logical row `i`. Rows never straddle a segment boundary.
+    /// Index of the segment containing global row `i`: `partition_point`
+    /// returns the first start > i; its predecessor is the segment.
+    #[inline]
+    fn seg_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.rows, "row {i} out of bounds ({} rows)", self.rows);
+        self.starts.partition_point(|&s| s <= i) - 1
+    }
+
+    /// Borrow logical row `i` (always the exact f32 payload). Rows never
+    /// straddle a segment boundary.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        debug_assert!(i < self.rows, "row {i} out of bounds ({} rows)", self.rows);
-        // partition_point returns the first start > i; its predecessor is
-        // the segment containing i.
-        let seg = self.starts.partition_point(|&s| s <= i) - 1;
+        let seg = self.seg_of(i);
         self.segments[seg].row(i - self.starts[seg])
+    }
+
+    /// Scan-tier score of `q` against row `i`: the quantized mirror when
+    /// one is built, the exact f32 row otherwise.
+    #[inline]
+    pub fn score(&self, q: &[f32], i: usize) -> f32 {
+        let seg = self.seg_of(i);
+        let local = i - self.starts[seg];
+        match self.mirrors[seg].as_deref() {
+            Some(ch) => ch.score(q, local),
+            None => kernel::dot(q, self.segments[seg].row(local)),
+        }
+    }
+
+    /// Exact f32 inner product of `q` with row `i` (the rerank tier).
+    #[inline]
+    pub fn score_exact(&self, q: &[f32], i: usize) -> f32 {
+        kernel::dot(q, self.row(i))
+    }
+
+    /// Batched scan-tier gather: scores of `q` against `ids`, appended to
+    /// `out`. One kernel dispatch per *segment run*: the single-chunk
+    /// layout (a fresh prefill) takes one dispatch for the whole batch,
+    /// and a multi-chunk store (the steady state once drains have run —
+    /// O(log n) chunks by the tail-merge rule) batches each run of ids
+    /// that lands in the same chunk, so the per-id chunk lookup pays once
+    /// per run and the x86 path still prefetches ahead of the gather.
+    pub fn score_ids(&self, q: &[f32], ids: &[u32], out: &mut Vec<f32>) {
+        if ids.is_empty() {
+            return;
+        }
+        if self.segments.len() == 1 {
+            match self.mirrors[0].as_deref() {
+                Some(ch) => ch.score_ids(q, ids, out),
+                None => kernel::dot_gather(q, self.segments[0].as_slice(), self.cols, ids, out),
+            }
+            return;
+        }
+        out.reserve(ids.len());
+        self.gather_runs(ids, |seg, locals| match self.mirrors[seg].as_deref() {
+            Some(ch) => ch.score_ids(q, locals, out),
+            None => kernel::dot_gather(q, self.segments[seg].as_slice(), self.cols, locals, out),
+        });
+    }
+
+    /// Batched **exact** f32 gather (the rerank tier): same segment-run
+    /// batching as [`SegmentedStore::score_ids`] but always reading the
+    /// f32 payload, mirror or not.
+    pub fn score_ids_exact(&self, q: &[f32], ids: &[u32], out: &mut Vec<f32>) {
+        if ids.is_empty() {
+            return;
+        }
+        if self.segments.len() == 1 {
+            kernel::dot_gather(q, self.segments[0].as_slice(), self.cols, ids, out);
+            return;
+        }
+        out.reserve(ids.len());
+        self.gather_runs(ids, |seg, locals| {
+            kernel::dot_gather(q, self.segments[seg].as_slice(), self.cols, locals, out)
+        });
+    }
+
+    /// Partition `ids` into maximal runs that land in the same chunk and
+    /// visit each run with chunk-local ids: the chunk lookup pays once per
+    /// run instead of once per id (runs are long — beam/posting-list ids
+    /// cluster, and the tail-merge rule bounds chunks at O(log n)).
+    fn gather_runs(&self, ids: &[u32], mut visit: impl FnMut(usize, &[u32])) {
+        let mut locals: Vec<u32> = Vec::new();
+        let mut i = 0usize;
+        while i < ids.len() {
+            let seg = self.seg_of(ids[i] as usize);
+            let start = self.starts[seg];
+            let end = start + self.segments[seg].rows();
+            locals.clear();
+            while i < ids.len() {
+                let id = ids[i] as usize;
+                if id < start || id >= end {
+                    break;
+                }
+                locals.push((id - start) as u32);
+                i += 1;
+            }
+            visit(seg, &locals);
+        }
+    }
+
+    /// Batched scan-tier contiguous scan of segment `s`, segment-local
+    /// rows `[lo, hi)`, appended to `out` (the flat-scan hot path).
+    pub fn score_segment_range(&self, q: &[f32], s: usize, lo: usize, hi: usize, out: &mut Vec<f32>) {
+        debug_assert!(hi <= self.segments[s].rows());
+        match self.mirrors[s].as_deref() {
+            Some(ch) => ch.score_range(q, lo, hi, out),
+            None => {
+                let seg = &self.segments[s];
+                kernel::dot_rows(q, &seg.as_slice()[lo * self.cols..hi * self.cols], self.cols, out);
+            }
+        }
     }
 
     /// A new store sharing every current chunk and appending `new_rows` as
@@ -99,9 +266,15 @@ impl SegmentedStore {
         out.cols = cols;
         out.rows += new_rows.rows();
         out.starts.push(self.rows);
+        // The fresh chunk is sealed the moment it is appended (this store
+        // is persistent), so its mirror is built right here — append runs
+        // at drain time on the maintenance worker, off the token path.
+        out.mirrors.push(QuantChunk::build(out.quant, &new_rows).map(Arc::new));
         out.segments.push(Arc::new(new_rows));
         // LSM tail merge: fold the youngest chunk into its elder while the
-        // elder is no larger — geometric sizes, O(log n) chunks.
+        // elder is no larger — geometric sizes, O(log n) chunks. The
+        // merged chunk is re-quantized in the same pass (same amortised
+        // O(log n) copies-per-row bound as the merge itself).
         while out.segments.len() >= 2 {
             let last = out.segments[out.segments.len() - 1].rows();
             let prev = out.segments[out.segments.len() - 2].rows();
@@ -110,6 +283,8 @@ impl SegmentedStore {
             }
             let b = out.segments.pop().expect("tail segment");
             let a = out.segments.pop().expect("tail segment");
+            out.mirrors.pop();
+            out.mirrors.pop();
             out.starts.pop();
             let mut merged = Matrix::zeros(0, cols);
             for r in 0..a.rows() {
@@ -118,20 +293,23 @@ impl SegmentedStore {
             for r in 0..b.rows() {
                 merged.push_row(b.row(r));
             }
+            out.mirrors.push(QuantChunk::build(out.quant, &merged).map(Arc::new));
             out.segments.push(Arc::new(merged));
         }
         out
     }
 
-    /// Append a non-empty chunk as-is (no tail merge; used by compaction,
-    /// which controls its own chunk granularity).
-    fn push_segment(&mut self, seg: Arc<Matrix>) {
+    /// Append a non-empty chunk as-is with its mirror (no tail merge; used
+    /// by compaction, which controls its own chunk granularity — intact
+    /// chunks pass their existing mirror through by `Arc`).
+    fn push_segment(&mut self, seg: Arc<Matrix>, mirror: Option<Arc<QuantChunk>>) {
         if seg.rows() == 0 {
             return;
         }
         self.starts.push(self.rows);
         self.rows += seg.rows();
         self.segments.push(seg);
+        self.mirrors.push(mirror);
     }
 
     /// A new store holding exactly the rows named in `keep` (strictly
@@ -146,8 +324,19 @@ impl SegmentedStore {
         debug_assert!(keep.windows(2).all(|w| w[0] < w[1]), "keep must be ascending");
         debug_assert!(keep.last().map(|&k| (k as usize) < self.rows).unwrap_or(true));
         let mut out = SegmentedStore::new(self.cols);
+        out.quant = self.quant;
         let mut i = 0usize; // cursor into keep
         let mut pending = Matrix::zeros(0, self.cols);
+        let flush =
+            |out: &mut SegmentedStore, pending: &mut Matrix| {
+                if pending.rows() > 0 {
+                    let flushed = std::mem::replace(pending, Matrix::zeros(0, self.cols));
+                    // Gathered survivor rows form a fresh chunk: quantize
+                    // it here (compaction runs on the maintenance worker).
+                    let mirror = QuantChunk::build(self.quant, &flushed).map(Arc::new);
+                    out.push_segment(Arc::new(flushed), mirror);
+                }
+            };
         for (seg_idx, seg) in self.segments.iter().enumerate() {
             let start = self.starts[seg_idx];
             let end = start + seg.rows();
@@ -159,21 +348,17 @@ impl SegmentedStore {
                 continue;
             }
             if i - lo == seg.rows() {
-                // Every row survives: flush gathered rows, share the chunk.
-                if pending.rows() > 0 {
-                    let flushed = std::mem::replace(&mut pending, Matrix::zeros(0, self.cols));
-                    out.push_segment(Arc::new(flushed));
-                }
-                out.push_segment(seg.clone());
+                // Every row survives: flush gathered rows, share the chunk
+                // AND its mirror (no re-quantization for intact chunks).
+                flush(&mut out, &mut pending);
+                out.push_segment(seg.clone(), self.mirrors[seg_idx].clone());
             } else {
                 for &k in &keep[lo..i] {
                     pending.push_row(seg.row(k as usize - start));
                 }
             }
         }
-        if pending.rows() > 0 {
-            out.push_segment(Arc::new(pending));
-        }
+        flush(&mut out, &mut pending);
         debug_assert_eq!(out.rows(), keep.len());
         out
     }
@@ -317,6 +502,53 @@ mod tests {
         );
         for (new, &old) in keep2.iter().enumerate() {
             assert_eq!(c2.row(new), s.row(old as usize));
+        }
+    }
+
+    #[test]
+    fn quant_mirrors_follow_appends_and_compaction() {
+        let mut s = SegmentedStore::from_matrix(mat(64, 8, 0.0)).with_quant(QuantMode::Fp16);
+        assert!(s.is_quantized());
+        assert_eq!(s.quant_mode(), QuantMode::Fp16);
+        assert_eq!(s.mirrored_segments(), s.segment_count());
+        // Seven 8-row appends leave a [64, 32, 16, 8] tail-merge shape
+        // (an eighth would fold everything into one chunk).
+        for b in 0..7 {
+            s = s.append_rows(mat(8, 8, 100.0 * (b + 1) as f32));
+            assert_eq!(s.mirrored_segments(), s.segment_count(), "append lost a mirror");
+        }
+        assert!(s.segment_count() >= 3, "setup needs several segments");
+        assert!(s.quant_bytes() > 0);
+        assert!(s.quant_bytes() < s.rows() * s.cols() * 4, "mirror must be smaller than f32");
+        // Batched scoring agrees with the per-row scan-tier score bitwise.
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 - 3.5) * 0.1).collect();
+        let ids: Vec<u32> = (0..s.rows() as u32).step_by(7).collect();
+        let mut batched = Vec::new();
+        s.score_ids(&q, &ids, &mut batched);
+        for (j, &id) in ids.iter().enumerate() {
+            assert_eq!(batched[j].to_bits(), s.score(&q, id as usize).to_bits());
+        }
+        let mut ranged = Vec::new();
+        s.score_segment_range(&q, 0, 0, s.segments()[0].rows(), &mut ranged);
+        for (j, v) in ranged.iter().enumerate() {
+            assert_eq!(v.to_bits(), s.score(&q, j).to_bits());
+        }
+        // Compaction keeps the tier: intact chunks share their mirror by
+        // Arc, gathered survivor chunks are re-quantized.
+        let keep: Vec<u32> = (4..s.rows() as u32).collect();
+        let c = s.compact_select(&keep);
+        assert!(c.is_quantized());
+        assert_eq!(c.mirrored_segments(), c.segment_count(), "compaction lost a mirror");
+        // The untouched suffix chunk's mirror is the same allocation.
+        let last = s.segment_count() - 1;
+        assert!(Arc::ptr_eq(&c.segments()[c.segment_count() - 1], &s.segments()[last]));
+        assert!(c.quant_bytes() > 0, "compacted store must keep a quantized tier");
+        // An unquantized store scores the f32 rows exactly.
+        let plain = SegmentedStore::from_matrix(mat(16, 8, 0.0));
+        assert!(!plain.is_quantized());
+        assert_eq!(plain.mirrored_segments(), 0);
+        for i in 0..plain.rows() {
+            assert_eq!(plain.score(&q, i).to_bits(), plain.score_exact(&q, i).to_bits());
         }
     }
 

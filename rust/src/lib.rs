@@ -8,6 +8,11 @@
 //!
 //! * [`tensor`] — minimal dense f32 linear algebra used by the host-side
 //!   (CPU) attention and index code.
+//! * [`kernel`] — the scoring-kernel subsystem: batched, runtime-
+//!   dispatched SIMD scoring (AVX2+FMA / NEON / bit-identical scalar
+//!   fallback, `RA_KERNEL=scalar` force-toggle) plus the quantized scan
+//!   tier (bf16 / symmetric int8 chunk mirrors) every hot scoring loop in
+//!   the crate goes through.
 //! * [`index`] — the **online** ANNS substrate: exact KNN
 //!   ([`index::flat`]), IVF ([`index::ivf`]), HNSW ([`index::hnsw`]), and
 //!   the paper's attention-aware projected bipartite graph
@@ -52,6 +57,10 @@ pub mod coordinator;
 pub mod experiments;
 pub mod hw;
 pub mod index;
+// Clippy is *enforced* (deny, not advisory) for the kernel subsystem: the
+// `make clippy-kernel` CI gate relies on this attribute.
+#[deny(clippy::all)]
+pub mod kernel;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;

@@ -28,7 +28,7 @@
 //! captures per-head query histories, which become RoarGraph's training
 //! set.
 
-use crate::attention::{attend_subset, combine, PartialAttention};
+use crate::attention::{attend_subset, combine_into, PartialAttention};
 use crate::baselines::{build_retriever, GroupShared, HostRetriever, RetrieverInputs};
 use crate::config::{Method, ServeConfig};
 use crate::index::KeyStore;
@@ -100,6 +100,10 @@ pub struct Session {
     /// Recent decode queries per (layer, q_head) (bounded ring, oldest
     /// first): the bipartite training side for attention-aware inserts.
     pub recent_q: Vec<Vec<Matrix>>,
+    /// Per-query-head host-id scratch, reused across layers and tokens:
+    /// the retrieved ∪ overflow id set is assembled here each step
+    /// instead of cloning `retrieved[h].ids` every head × layer × token.
+    host_ids: Vec<Vec<u32>>,
     /// Hidden state of the last processed token.
     pub x_last: Vec<f32>,
     /// Tokens processed so far.
@@ -293,6 +297,7 @@ impl Engine {
             groups,
             maint: MaintenanceState::new(),
             recent_q,
+            host_ids: Vec::new(),
             x_last,
             len: n,
             scanned_total: 0,
@@ -380,8 +385,14 @@ impl Engine {
             let shared: Vec<Arc<GroupShared>> = (0..spec.kv_heads)
                 .map(|kvh| {
                     let cache = &caches[layer][kvh];
+                    // The quantized scan tier (retrieval.quant.mode) is
+                    // adopted here, at build time: every chunk the store
+                    // ever grows — drains, tail merges, compactions —
+                    // inherits the mode and gets its mirror built on the
+                    // maintenance paths, never on the token path.
                     GroupShared::new(
-                        KeyStore::from_matrix(cache.indexed_keys_matrix()),
+                        KeyStore::from_matrix(cache.indexed_keys_matrix())
+                            .with_quant(cfg.quant.mode),
                         cache.indexed_ids(),
                     )
                 })
@@ -447,6 +458,11 @@ impl Engine {
         let scale = self.scale();
         let group = spec.group_size();
         let dh = spec.head_dim;
+        // Per-head id scratch, reused across layers and tokens (sized
+        // lazily so deserialized/forked sessions pick it up too).
+        if sess.host_ids.len() < spec.q_heads {
+            sess.host_ids.resize_with(spec.q_heads, Vec::new);
+        }
 
         // Embed.
         let t = PhaseTimer::start();
@@ -505,37 +521,56 @@ impl Engine {
             }
             t.stop_into(&mut bd.search);
 
-            // ...then host partial attention + combine.
+            // ...then host partial attention + combine. The per-head id
+            // sets are assembled once into session scratch (no
+            // `retrieved[h].ids` clone per head × layer × token), the
+            // overflow id list is materialised once per GQA group, and
+            // the combine below borrows every partial instead of cloning.
             let t = PhaseTimer::start();
+            let overflow: Vec<Vec<u32>> =
+                (0..spec.kv_heads).map(|kvh| sess.caches[layer][kvh].overflow_ids()).collect();
+            let layer_caches = &sess.caches[layer];
+            parallel::par_zip_mut(
+                &mut sess.host_ids[..spec.q_heads],
+                &retrieved,
+                |h, ids, r| {
+                    let cache = &layer_caches[h / group];
+                    ids.clear();
+                    ids.extend_from_slice(&r.ids);
+                    // The overflow buffer (window slid past it, not yet in
+                    // the index) is attended exactly; the maintenance
+                    // worker drains it into the index on a watermark, so
+                    // it stays bounded no matter how long the generation
+                    // runs.
+                    ids.extend_from_slice(&overflow[h / group]);
+                    // Dedup: the worker's index swap can land mid-window,
+                    // so a freshly drained token may surface both from
+                    // retrieval and from the not-yet-advanced overflow
+                    // scan — attending it twice would double its softmax
+                    // weight. Retired (evicted) tokens are dropped here
+                    // synchronously; their index tombstone is async
+                    // reclamation.
+                    ids.sort_unstable();
+                    ids.dedup();
+                    ids.retain(|&id| !cache.is_retired(id as usize));
+                },
+            );
             let mut attn = vec![0.0f32; spec.q_heads * dh];
+            let host_ids = &sess.host_ids;
             let host_parts: Vec<PartialAttention> = parallel::par_map(&heads, |&h| {
-                let kvh = h / group;
-                let cache = &sess.caches[layer][kvh];
+                let cache = &layer_caches[h / group];
                 let qv = &q[h * dh..(h + 1) * dh];
-                let mut ids = retrieved[h].ids.clone();
-                // The overflow buffer (window slid past it, not yet in the
-                // index) is attended exactly; the maintenance worker
-                // drains it into the index on a watermark, so it stays
-                // bounded no matter how long the generation runs.
-                ids.extend(cache.overflow_ids());
-                // Dedup: the worker's index swap can land mid-window, so a
-                // freshly drained token may surface both from retrieval
-                // and from the not-yet-advanced overflow scan — attending
-                // it twice would double its softmax weight. Retired
-                // (evicted) tokens are dropped here synchronously; their
-                // index tombstone is async reclamation.
-                ids.sort_unstable();
-                ids.dedup();
-                ids.retain(|&id| !cache.is_retired(id as usize));
-                attend_subset(qv, cache.keys(), cache.values(), &ids, scale)
+                attend_subset(qv, cache.keys(), cache.values(), &host_ids[h], scale)
             });
             for h in 0..spec.q_heads {
-                let dev = PartialAttention {
-                    o: o_dev[h * dh..(h + 1) * dh].to_vec(),
-                    lse: lse_dev[h],
-                };
-                let merged = combine(&[dev, host_parts[h].clone()]);
-                attn[h * dh..(h + 1) * dh].copy_from_slice(&merged.o);
+                // Exact γ-combine (Eq. 4/5) over borrowed partials.
+                combine_into(
+                    &[
+                        (&o_dev[h * dh..(h + 1) * dh], lse_dev[h]),
+                        (host_parts[h].o.as_slice(), host_parts[h].lse),
+                    ],
+                    &mut attn[h * dh..(h + 1) * dh],
+                );
             }
             t.stop_into(&mut bd.attention);
 
@@ -895,6 +930,7 @@ impl Session {
             groups: Vec::new(),
             maint: MaintenanceState::new(),
             recent_q: self.recent_q.clone(),
+            host_ids: Vec::new(),
             x_last: self.x_last.clone(),
             len: self.len,
             scanned_total: 0,
@@ -1143,6 +1179,7 @@ impl Engine {
             groups,
             maint: MaintenanceState::new(),
             recent_q,
+            host_ids: Vec::new(),
             x_last: vec![0.0; self.spec().d_model],
             len,
             scanned_total: 0,

@@ -25,6 +25,13 @@
 //! ([`crate::index::RemapPlan`]) — the step that makes eviction free
 //! memory *physically*, not just logically.
 //!
+//! The quantized scan tier rides these jobs for free: the group store
+//! carries its `retrieval.quant` mode, so the `extend` inside a drain
+//! (append + LSM tail merge) and the `compact_select` inside a
+//! reclamation epoch build/reshare the per-chunk mirrors right where the
+//! chunks are born — quantization cost lands on this worker thread, never
+//! on the decode token path.
+//!
 //! One worker thread per session keeps the design deadlock-free by
 //! construction: the decode thread never blocks on the worker (completions
 //! are polled), and the worker only blocks reclaiming a back buffer whose

@@ -150,43 +150,24 @@ impl IndexMut<(usize, usize)> for Matrix {
     }
 }
 
-/// Dot product with 4-way unrolling; the single hottest scalar kernel in the
-/// crate (every index traversal and every CPU attention score goes through
-/// here). LLVM auto-vectorises the unrolled form to AVX on x86.
+/// Dot product; the single hottest kernel in the crate (every index
+/// traversal and every CPU attention score goes through here). Routed
+/// through the runtime-dispatched kernel subsystem: AVX2+FMA / NEON when
+/// the CPU has them, a bit-identical 8-way-unrolled scalar otherwise
+/// (`RA_KERNEL=scalar` forces the fallback). Batch consumers should call
+/// [`crate::kernel::dot_rows`] / [`crate::kernel::dot_gather`] instead of
+/// looping this.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let chunks = a.len() / 8;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for i in 0..chunks {
-        let j = i * 8;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-        s4 += a[j + 4] * b[j + 4];
-        s5 += a[j + 5] * b[j + 5];
-        s6 += a[j + 6] * b[j + 6];
-        s7 += a[j + 7] * b[j + 7];
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * 8..a.len() {
-        tail += a[i] * b[i];
-    }
-    (s0 + s1) + (s2 + s3) + (s4 + s5) + (s6 + s7) + tail
+    crate::kernel::dot(a, b)
 }
 
-/// Squared Euclidean distance.
+/// Squared Euclidean distance (backs IVF/k-means centroid assignment).
+/// Same dispatch and 8-way lane structure as [`dot`]; batch consumers
+/// should call [`crate::kernel::l2_rows`].
 #[inline]
 pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0f32;
-    for (&x, &y) in a.iter().zip(b.iter()) {
-        let d = x - y;
-        s += d * d;
-    }
-    s
+    crate::kernel::l2_sq(a, b)
 }
 
 /// Euclidean norm.

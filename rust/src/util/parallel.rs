@@ -73,6 +73,48 @@ where
     let _ = par_map(items, |t| f(t));
 }
 
+/// Parallel in-place zip: `f(i, &mut items[i], &ctx[i])` for each index up
+/// to the shorter length. Lets hot loops fill caller-owned scratch buffers
+/// concurrently (the decode path's per-head id assembly) instead of
+/// choosing between reuse and parallelism.
+pub fn par_zip_mut<T, U, F>(items: &mut [T], ctx: &[U], f: F)
+where
+    T: Send,
+    U: Sync,
+    F: Fn(usize, &mut T, &U) + Sync,
+{
+    let n = items.len().min(ctx.len());
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 {
+        for (i, (t, u)) in items.iter_mut().zip(ctx).enumerate() {
+            f(i, t, u);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let items_ptr = SendPtr(items.as_mut_ptr());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let next = &next;
+            let f = &f;
+            let items_ptr = &items_ptr;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: each index i is claimed exactly once (atomic
+                // counter) and items outlives the scope.
+                let t = unsafe { &mut *items_ptr.0.add(i) };
+                f(i, t, &ctx[i]);
+            });
+        }
+    });
+}
+
 struct SendPtr<T>(*mut T);
 // SAFETY: the pointer is only dereferenced at disjoint indices.
 unsafe impl<T> Sync for SendPtr<T> {}
@@ -113,6 +155,25 @@ mod tests {
     fn range_variant() {
         let out = par_map_range(10, |i| i * i);
         assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49, 64, 81]);
+    }
+
+    #[test]
+    fn zip_mut_fills_every_slot_in_order() {
+        let mut bufs: Vec<Vec<u32>> = vec![Vec::new(); 37];
+        let ctx: Vec<u32> = (0..37).collect();
+        par_zip_mut(&mut bufs, &ctx, |i, buf, &c| {
+            buf.clear();
+            buf.push(i as u32);
+            buf.push(c * 2);
+        });
+        for (i, buf) in bufs.iter().enumerate() {
+            assert_eq!(buf, &vec![i as u32, i as u32 * 2], "slot {i}");
+        }
+        // Shorter ctx bounds the zip; empty inputs are a no-op.
+        let mut two: Vec<u32> = vec![0, 0];
+        par_zip_mut(&mut two, &[7u32], |_, t, &c| *t = c);
+        assert_eq!(two, vec![7, 0]);
+        par_zip_mut(&mut [] as &mut [u32], &ctx, |_, _, _| unreachable!());
     }
 
     #[test]

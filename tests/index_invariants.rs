@@ -4,9 +4,10 @@
 use retrieval_attention::attention::{attend_subset, combine, full_attention};
 use retrieval_attention::index::{
     exact_topk, flat::FlatIndex, hnsw::{HnswIndex, HnswParams}, ivf::IvfIndex,
-    roargraph::{RoarGraph, RoarParams}, InsertContext, KeyStore, RemapPlan, SearchParams,
-    VectorIndex,
+    roargraph::{RoarGraph, RoarParams}, search_rerank, InsertContext, KeyStore, RemapPlan,
+    SearchParams, VectorIndex,
 };
+use retrieval_attention::kernel::{self, QuantMode};
 use retrieval_attention::prop_assert;
 use retrieval_attention::tensor::Matrix;
 use retrieval_attention::util::prop::check;
@@ -456,6 +457,202 @@ fn prop_remap_roundtrip_preserves_live_results_all_families() {
             );
             prop_assert!(idx.len() == total, "index {which}: wrong len after post-remap insert");
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernel_simd_and_scalar_agree_bitwise_on_f32() {
+    // The dispatch contract: whichever backend `kernel::active()` picked
+    // (AVX2+FMA, NEON, or scalar — force the latter with
+    // `RA_KERNEL=scalar`), every f32 score is bit-for-bit the scalar
+    // reference. Switching kernels may change latency, never results.
+    check("simd == scalar bits", 25, |rng| {
+        let n = 1 + rng.below(400);
+        let mut r = rng.fork(1);
+        let a: Vec<f32> = (0..n).map(|_| r.normal() * 2.0).collect();
+        let b: Vec<f32> = (0..n).map(|_| r.normal() * 2.0).collect();
+        let (d, d_ref) = (kernel::dot(&a, &b), kernel::scalar::dot(&a, &b));
+        prop_assert!(
+            d.to_bits() == d_ref.to_bits(),
+            "dot bits diverged under {:?}: {d} vs {d_ref}",
+            kernel::active()
+        );
+        let (l, l_ref) = (kernel::l2_sq(&a, &b), kernel::scalar::l2_sq(&a, &b));
+        prop_assert!(
+            l.to_bits() == l_ref.to_bits(),
+            "l2_sq bits diverged under {:?}: {l} vs {l_ref}",
+            kernel::active()
+        );
+        // The batch entry points are elementwise-identical to the row
+        // forms (so batching in the index hot loops is latency-only too).
+        let cols = 1 + rng.below(96);
+        let rows_n = 1 + rng.below(20);
+        let mut r2 = rng.fork(2);
+        let q: Vec<f32> = (0..cols).map(|_| r2.normal()).collect();
+        let rows: Vec<f32> = (0..cols * rows_n).map(|_| r2.normal()).collect();
+        let mut batched = Vec::new();
+        kernel::dot_rows(&q, &rows, cols, &mut batched);
+        prop_assert!(batched.len() == rows_n, "dot_rows row count");
+        let mut l2b = Vec::new();
+        kernel::l2_rows(&q, &rows, cols, &mut l2b);
+        for i in 0..rows_n {
+            let row = &rows[i * cols..(i + 1) * cols];
+            prop_assert!(
+                batched[i].to_bits() == kernel::scalar::dot(&q, row).to_bits(),
+                "dot_rows row {i} diverged"
+            );
+            prop_assert!(
+                l2b[i].to_bits() == kernel::scalar::l2_sq(&q, row).to_bits(),
+                "l2_rows row {i} diverged"
+            );
+        }
+        let ids: Vec<u32> = (0..rows_n as u32).rev().collect();
+        let mut gathered = Vec::new();
+        kernel::dot_gather(&q, &rows, cols, &ids, &mut gathered);
+        for (j, &id) in ids.iter().enumerate() {
+            prop_assert!(
+                gathered[j].to_bits() == batched[id as usize].to_bits(),
+                "dot_gather id {id} diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantized_recall_within_bound_all_families() {
+    // The quantized-scan-tier contract: for every index family, ranking
+    // candidates against the int8/fp16 mirror (with the default exact
+    // re-rank pool of 2×k) keeps recall@k at ≥ 0.95 of what the same
+    // family achieves scoring f32 — quantization error must be confined
+    // to candidate ordering beyond the re-rank pool.
+    check("quant recall ≥ 0.95 × f32", 4, |rng| {
+        let n = 256 + rng.below(256);
+        let d = [16usize, 32, 64][rng.below(3)];
+        let keys = {
+            let mut r = rng.fork(1);
+            Matrix::from_fn(n, d, |_, _| r.normal())
+        };
+        let mut qr = rng.fork(2);
+        let qgen = |rows: usize, qr: &mut Rng| {
+            Matrix::from_fn(rows, d, |_, c| qr.normal() + if c == 0 { 1.5 } else { 0.0 })
+        };
+        let train = qgen(64, &mut qr);
+        let panel = qgen(12, &mut qr);
+        let params = SearchParams { ef: 256, nprobe: 16 };
+        let k = 10;
+        let build = |which: usize, keys: KeyStore| -> Box<dyn VectorIndex> {
+            match which {
+                0 => Box::new(FlatIndex::new(keys)),
+                1 => Box::new(IvfIndex::build(keys, Some(16), 5)),
+                2 => Box::new(HnswIndex::build(keys, HnswParams::default())),
+                _ => Box::new(RoarGraph::build(keys, &train, RoarParams::default())),
+            }
+        };
+        let f32_store = KeyStore::from_matrix(keys.clone());
+        for mode in [QuantMode::Fp16, QuantMode::Int8] {
+            let qstore = KeyStore::from_matrix(keys.clone()).with_quant(mode);
+            prop_assert!(qstore.is_quantized(), "{mode:?}: store must carry the tier");
+            for which in 0..4usize {
+                let exact_idx = build(which, f32_store.clone());
+                let qidx = build(which, qstore.clone());
+                prop_assert!(
+                    qidx.scan_quantized() && !exact_idx.scan_quantized(),
+                    "index {which}: scan_quantized must reflect the store"
+                );
+                let (mut rec_f, mut rec_q) = (0.0f32, 0.0f32);
+                for qi in 0..panel.rows() {
+                    let q = panel.row(qi);
+                    let truth = exact_topk(&keys, q, k);
+                    rec_f += exact_idx.search(q, k, &params).recall_against(&truth);
+                    let got = search_rerank(qidx.as_ref(), q, k, 2, &params);
+                    // Re-ranked scores are exact f32 inner products.
+                    for (&id, &s) in got.ids.iter().zip(got.scores.iter()) {
+                        let expect =
+                            retrieval_attention::tensor::dot(q, keys.row(id as usize));
+                        prop_assert!(
+                            (s - expect).abs() < 1e-4,
+                            "{}: rerank score not exact: {s} vs {expect}",
+                            qidx.name()
+                        );
+                    }
+                    rec_q += got.recall_against(&truth);
+                }
+                rec_f /= panel.rows() as f32;
+                rec_q /= panel.rows() as f32;
+                prop_assert!(
+                    rec_q >= 0.95 * rec_f - 1e-6,
+                    "{} under {mode:?}: quantized recall {rec_q} below 0.95 × f32 recall {rec_f}",
+                    qidx.name()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantized_mirrors_survive_reclamation_remap() {
+    // The storage-engine contract for the quantized tier: a reclamation
+    // epoch (tombstone → RemapPlan → remap_dense) must carry the mirrors
+    // through — the compacted store stays quantized, searches still rank
+    // against it, and the exact re-rank still returns true f32 scores.
+    check("quant mirrors survive remap", 5, |rng| {
+        let n = 128 + rng.below(128);
+        let d = [8usize, 16, 32][rng.below(3)];
+        let keys = {
+            let mut r = rng.fork(1);
+            Matrix::from_fn(n, d, |_, _| r.normal())
+        };
+        // Several segments (the smaller append does not tail-merge into
+        // the larger prefix), so the remap exercises both shared-intact
+        // and gathered chunks.
+        let split = (3 * n) / 4;
+        let mut store = KeyStore::from_matrix(Matrix::from_fn(split, d, |r, c| keys[(r, c)]))
+            .with_quant(QuantMode::Int8);
+        store = store.append_rows(Matrix::from_fn(n - split, d, |r, c| keys[(split + r, c)]));
+        prop_assert!(store.segment_count() >= 2, "setup needs several segments");
+        prop_assert!(
+            store.mirrored_segments() == store.segment_count(),
+            "append must keep every chunk mirrored"
+        );
+        let mut rr = rng.fork(3);
+        let mut removed: Vec<u32> =
+            rr.sample_indices(n, n / 5).into_iter().map(|i| i as u32).collect();
+        removed.sort_unstable();
+        removed.dedup();
+        let mut idx = FlatIndex::new(store.clone());
+        prop_assert!(idx.remove_batch(&removed), "remove refused");
+        let Some((plan, keep)) = RemapPlan::from_dead(&removed, &store, 1) else {
+            return Err("planner refused".into());
+        };
+        prop_assert!(plan.store.is_quantized(), "compacted store lost the quantized tier");
+        prop_assert!(
+            plan.store.mirrored_segments() == plan.store.segment_count(),
+            "compaction must keep every chunk mirrored"
+        );
+        prop_assert!(idx.remap_dense(&plan), "remap refused");
+        prop_assert!(idx.scan_quantized(), "index lost the quantized tier across remap");
+        // Post-remap searches (with exact re-rank) agree with exact top-k
+        // over the surviving rows.
+        let mut qr = rng.fork(2);
+        let q: Vec<f32> = (0..d).map(|_| qr.normal()).collect();
+        let survivors = Matrix::from_fn(keep.len(), d, |r, c| keys[(keep[r] as usize, c)]);
+        let truth = exact_topk(&survivors, &q, 10);
+        let got = search_rerank(&idx, &q, 10, 2, &SearchParams::default());
+        let hits = got.ids.iter().filter(|id| truth.contains(id)).count();
+        prop_assert!(
+            hits * 10 >= truth.len() * 9,
+            "post-remap quantized search lost recall: {hits}/{}",
+            truth.len()
+        );
+        // And the tier keeps following the store through further appends.
+        let grown = plan.store.append_rows(Matrix::from_fn(8, d, |r, c| (r + c) as f32 * 0.1));
+        prop_assert!(
+            grown.mirrored_segments() == grown.segment_count(),
+            "post-remap append lost a mirror"
+        );
         Ok(())
     });
 }
