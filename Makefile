@@ -11,7 +11,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test test-concurrency test-scalar fmt-check clippy clippy-kernel bench bench-smoke artifacts clean
+.PHONY: verify build test test-concurrency test-session-soak test-scalar fmt-check clippy clippy-kernel bench bench-smoke artifacts clean
 
 verify: build test
 	-$(MAKE) fmt-check
@@ -28,6 +28,12 @@ test:
 # worker on/off); `timeout` fails fast on a deadlock.
 test-concurrency:
 	timeout 900 $(CARGO) test -q --test maintenance_concurrency -- --test-threads=1
+
+# Serialized spill/resume soak: park/resume churn over many sessions with
+# every finished turn forced to disk (session-persistence acceptance
+# gate); `timeout` fails fast on a wedged restore or registry.
+test-session-soak:
+	timeout 900 $(CARGO) test -q --test session_soak -- --test-threads=1
 
 # Full suite with SIMD force-disabled: the scalar fallback must keep every
 # platform green (the kernel dispatch acceptance gate).

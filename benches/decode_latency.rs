@@ -160,14 +160,74 @@ fn search_phase(b: &mut Bencher, flat_rows: &[usize], graph_rows: &[usize]) -> V
     Value::Arr(cases)
 }
 
+/// Session snapshot/restore profile: latency + bytes-on-disk of a full
+/// session image vs the cost the restore avoids. The comparator measured
+/// here is the session (re)build — retriever/index construction over the
+/// same geometry, which is the floor of what a prefill-from-scratch pays
+/// (a true re-prefill adds the model forward on top, so the reported
+/// speedup is a LOWER bound on what the session cache saves per turn).
+fn session_snapshot_profile(engine: &Engine, lengths: &[usize]) -> Value {
+    let spec = engine.spec().clone();
+    let mut cases: Vec<Value> = Vec::new();
+    std::fs::create_dir_all("results").ok();
+    let path = std::path::Path::new("results/session_snapshot.ras");
+    for &n in lengths {
+        let heads = heads_for(&spec, n);
+        let t = std::time::Instant::now();
+        let mut sess =
+            engine.synthetic_session(heads, Method::RetrievalAttention).expect("session");
+        let build_s = t.elapsed().as_secs_f64();
+
+        let t = std::time::Instant::now();
+        let file = std::fs::File::create(path).expect("spill file");
+        let mut w = std::io::BufWriter::new(file);
+        let bytes = engine.snapshot_session(&mut sess, &mut w).expect("snapshot");
+        std::io::Write::flush(&mut w).expect("flush");
+        drop(w);
+        let snapshot_s = t.elapsed().as_secs_f64();
+
+        let t = std::time::Instant::now();
+        let file = std::fs::File::open(path).expect("reopen spill file");
+        let mut r = std::io::BufReader::new(file);
+        let restored = engine.restore_session(&mut r).expect("restore");
+        let restore_s = t.elapsed().as_secs_f64();
+        std::fs::remove_file(path).ok();
+        assert_eq!(restored.len, sess.len, "restore diverged");
+        assert_eq!(restored.maint.stats.swaps, 0, "restore did index work");
+
+        let speedup = if restore_s > 0.0 { build_s / restore_s } else { 0.0 };
+        println!(
+            "session-snapshot/n={n}: build={build_s:.3}s snapshot={snapshot_s:.3}s \
+             restore={restore_s:.3}s bytes={bytes} restore-vs-rebuild={speedup:.1}x"
+        );
+        let mut o = Value::obj();
+        o.set("n", n)
+            .set("build_s", build_s)
+            .set("snapshot_s", snapshot_s)
+            .set("restore_s", restore_s)
+            .set("bytes_on_disk", bytes)
+            .set("restore_speedup_vs_rebuild", speedup);
+        cases.push(o);
+    }
+    Value::Arr(cases)
+}
+
 /// Write the repo-root perf-trajectory summary (phase medians + recall).
-fn write_bench_summary(profile: &str, search: Value, decode_cases: Option<Value>) {
+fn write_bench_summary(
+    profile: &str,
+    search: Value,
+    decode_cases: Option<Value>,
+    session_snapshot: Option<Value>,
+) {
     let mut out = Value::obj();
     out.set("profile", profile)
         .set("kernel", kernel::active().label())
         .set("search_phase", search);
     if let Some(cases) = decode_cases {
         out.set("decode_cases", cases);
+    }
+    if let Some(snap) = session_snapshot {
+        out.set("session_snapshot", snap);
     }
     std::fs::write("BENCH_decode.json", out.to_string_pretty()).ok();
 }
@@ -193,7 +253,12 @@ fn smoke() {
     let mut b = Bencher::quick();
     b.max_iters = 8;
     let search = search_phase(&mut b, &[2_048], &[1_024]);
-    write_bench_summary("smoke", search, None);
+    // Tiny-geometry snapshot/restore round trip: the persistence gate.
+    let mut cfg = ServeConfig::default();
+    cfg.model = "llama3-mini".into();
+    let engine = Engine::from_config(cfg).expect("engine");
+    let snap = session_snapshot_profile(&engine, &[1_024]);
+    write_bench_summary("smoke", search, None, Some(snap));
     let text = std::fs::read_to_string("BENCH_decode.json").expect("BENCH_decode.json missing");
     let v = json::parse(&text).expect("BENCH_decode.json must parse");
     let cases = v.get("search_phase").and_then(Value::as_arr).expect("search_phase array");
@@ -201,6 +266,11 @@ fn smoke() {
     for c in cases {
         let recall = c.get("recall_at_k").and_then(Value::as_f64).expect("recall field");
         assert!(recall > 0.5, "implausible recall in smoke case: {recall}");
+    }
+    let snaps = v.get("session_snapshot").and_then(Value::as_arr).expect("session_snapshot");
+    for c in snaps {
+        let bytes = c.get("bytes_on_disk").and_then(Value::as_f64).expect("bytes field");
+        assert!(bytes > 0.0, "empty session snapshot in smoke profile");
     }
     println!(
         "bench-smoke: OK ({} search-phase cases, kernel = {})",
@@ -246,6 +316,11 @@ fn main() {
     let (flat_rows, graph_rows): (&[usize], &[usize]) =
         if full { (&[65_536, 131_072], &[65_536]) } else { (&[65_536], &[16_384]) };
     let search = search_phase(&mut b, flat_rows, graph_rows);
+
+    // --- Session snapshot/restore: latency + bytes-on-disk vs the
+    // session-rebuild cost a `continue` turn avoids (64K/128K in full). ---
+    let snap_lengths: &[usize] = if full { &[65_536, 131_072] } else { &[16_384] };
+    let session_snapshot = session_snapshot_profile(&engine, snap_lengths);
 
     // --- Long-generation flatness: worker on / sync drain / drain off. ---
     let n = if full { 16_384 } else { 2_048 };
@@ -389,5 +464,10 @@ fn main() {
     out.set("drain_store", drain_profile);
     std::fs::write("results/bench_decode.json", out.to_string_pretty()).ok();
     // Repo-root perf-trajectory summary (phase medians + recall).
-    write_bench_summary(if full { "full" } else { "quick" }, search, Some(b.to_json()));
+    write_bench_summary(
+        if full { "full" } else { "quick" },
+        search,
+        Some(b.to_json()),
+        Some(session_snapshot),
+    );
 }

@@ -57,6 +57,7 @@ fn main() -> anyhow::Result<()> {
                     id: router.next_request_id(),
                     prompt: s.prompt.clone(),
                     max_tokens: s.expect.len(),
+                    session: None,
                 })
             })
             .collect();

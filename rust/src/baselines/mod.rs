@@ -122,6 +122,45 @@ impl GroupShared {
         })
     }
 
+    /// Rebuild a group from snapshotted parts under an explicit store
+    /// generation (session persistence): the restored index fronts carry
+    /// the generation they were saved with, so the map must come back
+    /// stamped identically or every post-restore search would spin in
+    /// [`GroupShared::map_for_generation`]. The `unsorted` reverse-lookup
+    /// flag is recomputed from the ids rather than persisted.
+    pub fn restore(store: KeyStore, ids: Vec<u32>, store_gen: u64) -> Arc<GroupShared> {
+        // `>=`, not `==`: store-less groups (Full/StreamingLLM heads never
+        // read keys) legitimately grow the map past the store on drains.
+        debug_assert!(ids.len() >= store.rows());
+        let unsorted = ids.windows(2).any(|w| w[1] <= w[0]);
+        Arc::new(GroupShared {
+            store: Published::new(store),
+            maps: Published::new(MapPair {
+                cur: Arc::new(IdMap { store_gen, ids }),
+                prev: None,
+            }),
+            unsorted: std::sync::atomic::AtomicBool::new(unsorted),
+        })
+    }
+
+    /// Copy-on-write fork: a new group sharing the current store's chunks
+    /// by `Arc` and the current id map wholesale (maps are immutable once
+    /// published). The fork and the original then diverge through their
+    /// own `Published` slots — neither's drains/reclaims can touch the
+    /// other. The epoch-transient `prev` map is never carried over: the
+    /// caller forks only quiesced sessions (maintenance flushed), so no
+    /// reader of the fork can hold a pre-remap front.
+    pub fn fork(&self) -> Arc<GroupShared> {
+        let maps = self.maps.load();
+        Arc::new(GroupShared {
+            store: Published::new(self.keys()),
+            maps: Published::new(MapPair { cur: maps.cur.clone(), prev: None }),
+            unsorted: std::sync::atomic::AtomicBool::new(
+                self.unsorted.load(std::sync::atomic::Ordering::Acquire),
+            ),
+        })
+    }
+
     /// Snapshot the current key store (cheap: chunk-table clone).
     pub fn keys(&self) -> KeyStore {
         (*self.store.load()).clone()
@@ -374,6 +413,78 @@ pub trait HostRetriever: Send + Sync {
     fn index_generation(&self) -> u64 {
         0
     }
+
+    /// Whether this head can serialize itself into a session snapshot.
+    /// When any head of a session returns false the snapshot records the
+    /// KV + group state only and the restore path rebuilds the retrievers
+    /// (the fixed-set baselines' builds are cheap; the four index families
+    /// all persist structurally and never rebuild).
+    fn supports_save(&self) -> bool {
+        false
+    }
+
+    /// Serialize this head's retrieval state (tag + structure, excluding
+    /// the group-shared store/map, which the snapshot writes once per GQA
+    /// group). Inverse: [`restore_retriever`].
+    fn save_state(&self, w: &mut crate::store::codec::SnapWriter<'_>) -> anyhow::Result<()> {
+        let _ = w;
+        anyhow::bail!("{}: retriever persistence unsupported", self.name())
+    }
+
+    /// Copy-on-write fork of this head against an already-forked group
+    /// (see [`GroupShared::fork`]). Index-backed heads share their
+    /// published front `Arc` — zero copy at fork time; the first
+    /// maintenance op on either side clones before mutating. `None` means
+    /// the policy cannot fork cheaply and the caller falls back to a full
+    /// retriever rebuild.
+    fn fork_with_group(&self, group: Arc<GroupShared>) -> Option<Box<dyn HostRetriever>> {
+        let _ = group;
+        None
+    }
+}
+
+/// Snapshot head tags (on-disk format constants — append-only).
+const RETRIEVER_INDEX: u8 = 1;
+const RETRIEVER_EMPTY: u8 = 2;
+const RETRIEVER_ALL: u8 = 3;
+
+/// Restore one head from a snapshot stream: the inverse of
+/// [`HostRetriever::save_state`], dispatched on the head tag. `group` is
+/// the (layer, kv-head) group the head belongs to, already restored.
+pub fn restore_retriever(
+    r: &mut crate::store::codec::SnapReader<'_>,
+    group: Arc<GroupShared>,
+) -> anyhow::Result<Box<dyn HostRetriever>> {
+    match r.u8()? {
+        RETRIEVER_EMPTY => Ok(Box::new(EmptyRetriever)),
+        RETRIEVER_ALL => Ok(Box::new(AllRetriever { group })),
+        RETRIEVER_INDEX => {
+            let family = r.u8()?;
+            let store_gen = r.u64()?;
+            let rerank = r.usize()?;
+            let ef = r.usize()?;
+            let nprobe = r.usize()?;
+            let label = match family {
+                crate::index::FAMILY_FLAT => "Flat",
+                crate::index::FAMILY_IVF => "IVF",
+                crate::index::FAMILY_HNSW => "HNSW",
+                crate::index::FAMILY_ROAR => "RetrievalAttention",
+                other => anyhow::bail!("unknown index family tag {other} in head snapshot"),
+            };
+            let index = crate::index::load_index(family, group.keys(), r)?;
+            Ok(Box::new(
+                IndexRetriever {
+                    front: Published::new(FrontIndex { index, store_gen }),
+                    back: Mutex::new(BackBuffer { spare: None, pending: Vec::new() }),
+                    group,
+                    params: SearchParams { ef, nprobe },
+                    rerank,
+                    label,
+                }
+            ))
+        }
+        other => anyhow::bail!("unknown retriever tag {other} in snapshot"),
+    }
 }
 
 /// Everything a retriever constructor may need.
@@ -514,6 +625,18 @@ impl HostRetriever for EmptyRetriever {
     fn remove_dense(&self, _dense_ids: &[u32]) -> bool {
         true
     }
+
+    fn supports_save(&self) -> bool {
+        true
+    }
+
+    fn save_state(&self, w: &mut crate::store::codec::SnapWriter<'_>) -> anyhow::Result<()> {
+        w.u8(RETRIEVER_EMPTY)
+    }
+
+    fn fork_with_group(&self, _group: Arc<GroupShared>) -> Option<Box<dyn HostRetriever>> {
+        Some(Box::new(EmptyRetriever))
+    }
 }
 
 /// Full attention: every host token, no scan savings. The host set is the
@@ -545,6 +668,20 @@ impl HostRetriever for AllRetriever {
     /// head-local to do.
     fn insert_batch(&self, _store: &KeyStore, _ids: &[u32], _ctx: &InsertContext<'_>) -> bool {
         true
+    }
+
+    fn supports_save(&self) -> bool {
+        true
+    }
+
+    /// The host set IS the group map, which the snapshot writes once per
+    /// group — only the tag is head-local.
+    fn save_state(&self, w: &mut crate::store::codec::SnapWriter<'_>) -> anyhow::Result<()> {
+        w.u8(RETRIEVER_ALL)
+    }
+
+    fn fork_with_group(&self, group: Arc<GroupShared>) -> Option<Box<dyn HostRetriever>> {
+        Some(Box::new(AllRetriever { group }))
     }
 }
 
@@ -804,6 +941,42 @@ impl HostRetriever for IndexRetriever {
 
     fn index_generation(&self) -> u64 {
         self.front.generation()
+    }
+
+    fn supports_save(&self) -> bool {
+        self.front.load().index.supports_save()
+    }
+
+    /// Persist the head: tag, family, the generation stamp the restored
+    /// front must carry, the search knobs, then the family's structure.
+    /// The caller quiesced maintenance first, so the front is the only
+    /// truth (the spare buffer replays to it deterministically).
+    fn save_state(&self, w: &mut crate::store::codec::SnapWriter<'_>) -> anyhow::Result<()> {
+        let front = self.front.load();
+        w.u8(RETRIEVER_INDEX)?;
+        w.u8(front.index.family_tag())?;
+        w.u64(front.store_gen)?;
+        w.usize(self.rerank)?;
+        w.usize(self.params.ef)?;
+        w.usize(self.params.nprobe)?;
+        front.index.save_state(w)
+    }
+
+    /// Copy-on-write fork: the fork's front IS the base's published front
+    /// `Arc` — nothing is copied at fork time. Both sides keep applying
+    /// maintenance through their own back buffers, whose first op clones
+    /// the index before mutating (the `Arc` is never mutated in place:
+    /// `apply` only writes to exclusively-owned buffers), so the shared
+    /// frozen state diverges lazily on first write.
+    fn fork_with_group(&self, group: Arc<GroupShared>) -> Option<Box<dyn HostRetriever>> {
+        Some(Box::new(IndexRetriever {
+            front: Published::from_arc(self.front.load()),
+            back: Mutex::new(BackBuffer { spare: None, pending: Vec::new() }),
+            group,
+            params: self.params,
+            rerank: self.rerank,
+            label: self.label,
+        }))
     }
 }
 

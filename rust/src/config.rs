@@ -244,6 +244,46 @@ impl Default for RetrievalConfig {
     }
 }
 
+/// Multi-turn session cache knobs (`serving.session_cache`): how many
+/// finished sessions a replica keeps decode-ready, and where the rest go.
+///
+/// A request carrying a `session_id` skips prefill on every turn after
+/// the first: the replica retains the finished session up to
+/// `max_resident_bytes` of RAM, LRU-parks colder sessions to `spill_dir`
+/// through the versioned snapshot format (no re-prefill and no index
+/// rebuild on resume — see [`crate::store`]), and rejects with
+/// backpressure once parked bytes would exceed `max_disk_bytes`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SessionCacheConfig {
+    /// RAM budget for resident (decode-ready) finished sessions. `0`
+    /// forces every finished session straight to disk — the configuration
+    /// the persistence e2e tests pin down.
+    pub max_resident_bytes: usize,
+    /// Directory for parked-session snapshots. Empty ⇒ a per-process
+    /// directory under the system temp dir.
+    pub spill_dir: String,
+    /// Disk budget for parked snapshots; exhaustion rejects the insert
+    /// with backpressure instead of silently dropping session state.
+    pub max_disk_bytes: usize,
+}
+
+impl Default for SessionCacheConfig {
+    fn default() -> Self {
+        SessionCacheConfig {
+            max_resident_bytes: 512 << 20,
+            spill_dir: String::new(),
+            max_disk_bytes: 8 << 30,
+        }
+    }
+}
+
+/// Serving-layer (coordinator/replica) knobs beyond raw scheduling.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct ServingConfig {
+    /// The multi-turn session registry's storage budget.
+    pub session_cache: SessionCacheConfig,
+}
+
 /// Scheduler/batcher limits.
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerConfig {
@@ -270,6 +310,7 @@ pub struct ServeConfig {
     pub pattern: StaticPattern,
     pub retrieval: RetrievalConfig,
     pub scheduler: SchedulerConfig,
+    pub serving: ServingConfig,
     /// Hardware profile name for modeled numbers ("localhost" = raw).
     pub hw: String,
     /// Directory holding AOT artifacts.
@@ -286,6 +327,7 @@ impl Default for ServeConfig {
             pattern: StaticPattern::PAPER,
             retrieval: RetrievalConfig::default(),
             scheduler: SchedulerConfig::default(),
+            serving: ServingConfig::default(),
             hw: "localhost".into(),
             artifacts_dir: "artifacts".into(),
             seed: 0,
@@ -339,6 +381,13 @@ impl ServeConfig {
             .set("max_batch", self.scheduler.max_batch)
             .set("max_queue", self.scheduler.max_queue);
         o.set("scheduler", s);
+        let mut sc = Value::obj();
+        sc.set("max_resident_bytes", self.serving.session_cache.max_resident_bytes)
+            .set("spill_dir", self.serving.session_cache.spill_dir.as_str())
+            .set("max_disk_bytes", self.serving.session_cache.max_disk_bytes);
+        let mut sv = Value::obj();
+        sv.set("session_cache", sc);
+        o.set("serving", sv);
         o.set("hw", self.hw.as_str());
         o.set("artifacts_dir", self.artifacts_dir.as_str());
         o.set("seed", self.seed);
@@ -429,6 +478,19 @@ impl ServeConfig {
             }
             if let Some(x) = s.get("max_queue").and_then(Value::as_usize) {
                 c.scheduler.max_queue = x;
+            }
+        }
+        if let Some(sv) = v.get("serving") {
+            if let Some(sc) = sv.get("session_cache") {
+                if let Some(x) = sc.get("max_resident_bytes").and_then(Value::as_usize) {
+                    c.serving.session_cache.max_resident_bytes = x;
+                }
+                if let Some(x) = sc.get("spill_dir").and_then(Value::as_str) {
+                    c.serving.session_cache.spill_dir = x.to_string();
+                }
+                if let Some(x) = sc.get("max_disk_bytes").and_then(Value::as_usize) {
+                    c.serving.session_cache.max_disk_bytes = x;
+                }
             }
         }
         if let Some(h) = v.get("hw").and_then(Value::as_str) {
@@ -524,6 +586,27 @@ mod tests {
         assert_eq!(parsed.retrieval.quant.rerank, 2, "rerank keeps its default");
         let v = json::parse(r#"{"retrieval":{"quant":{"mode":"int4"}}}"#).unwrap();
         assert!(ServeConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn session_cache_roundtrips_and_defaults() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.serving, ServingConfig::default());
+        c.serving.session_cache = SessionCacheConfig {
+            max_resident_bytes: 0,
+            spill_dir: "/tmp/ra-spill".into(),
+            max_disk_bytes: 1 << 20,
+        };
+        let back = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.serving.session_cache.max_resident_bytes, 0);
+        assert_eq!(back.serving.session_cache.spill_dir, "/tmp/ra-spill");
+        assert_eq!(back.serving.session_cache.max_disk_bytes, 1 << 20);
+        // Absent block falls back to defaults.
+        let v = json::parse(r#"{"retrieval":{"top_k":5}}"#).unwrap();
+        let parsed = ServeConfig::from_json(&v).unwrap();
+        assert_eq!(parsed.serving.session_cache, SessionCacheConfig::default());
+        assert!(parsed.serving.session_cache.max_resident_bytes > 0);
+        assert!(parsed.serving.session_cache.spill_dir.is_empty());
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub mod router;
 use crate::config::ServeConfig;
 use crate::metrics::PhaseBreakdown;
 use crate::model::{Engine, Session};
+use crate::store::SessionCache;
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -28,12 +29,51 @@ use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::Instant;
 
+/// What a request wants done with its session (the multi-turn lifecycle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionMode {
+    /// First turn: prefill, then retain the session under `session_id`.
+    Open,
+    /// Later turn: resume the retained session (resident or parked on
+    /// disk) and extend it by decoding the new prompt tokens — **no
+    /// prefill and no index rebuild**.
+    Continue,
+    /// Drop the session from RAM and disk.
+    Close,
+}
+
+impl SessionMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SessionMode::Open => "open",
+            SessionMode::Continue => "continue",
+            SessionMode::Close => "close",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SessionMode> {
+        [SessionMode::Open, SessionMode::Continue, SessionMode::Close]
+            .into_iter()
+            .find(|m| m.label().eq_ignore_ascii_case(s))
+    }
+}
+
+/// Session directive riding a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SessionSpec {
+    pub session_id: u64,
+    pub mode: SessionMode,
+}
+
 /// A generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_tokens: usize,
+    /// Multi-turn session directive; `None` = one-shot (the session is
+    /// dropped when the request finishes, the pre-registry behaviour).
+    pub session: Option<SessionSpec>,
 }
 
 /// Streaming events for one request.
@@ -81,6 +121,17 @@ pub struct RequestMetrics {
     pub maint_queue_peak: usize,
     /// Tombstoned fraction of the session's indexes at retirement.
     pub tombstone_ratio: f64,
+    /// True when this turn resumed its session from a disk snapshot
+    /// (parked → resumed); false for resident hits and fresh prefills.
+    pub resumed_from_disk: bool,
+    /// Wall-clock of the snapshot restore for this turn (0 otherwise).
+    pub resume_s: f64,
+    /// On-disk snapshot bytes this turn was restored from (0 otherwise).
+    pub snapshot_bytes: u64,
+    /// Cumulative sessions this replica has parked to disk.
+    pub session_parks: u64,
+    /// Cumulative sessions this replica has resumed from disk.
+    pub session_resumes: u64,
 }
 
 struct Job {
@@ -97,6 +148,22 @@ struct Active {
     prefill_s: f64,
     first_token_at: Option<Instant>,
     decode_bd: PhaseBreakdown,
+    /// Session-resume provenance for the done event.
+    resumed_from_disk: bool,
+    resume_s: f64,
+    snapshot_bytes: u64,
+    /// A failed step poisons the session: it is never retained.
+    failed: bool,
+}
+
+/// Admission outcome: the decode-ready session plus, for continuations,
+/// the first generated token (the decode of the last prompt token).
+struct Admitted {
+    sess: Session,
+    first: Option<(u32, PhaseBreakdown)>,
+    resumed_from_disk: bool,
+    resume_s: f64,
+    snapshot_bytes: u64,
 }
 
 /// Handle to one replica worker (engine thread).
@@ -135,13 +202,21 @@ impl Replica {
         Replica { tx, outstanding, handle: Some(handle) }
     }
 
-    /// Submit a request; events stream on the returned receiver.
+    /// Submit a request; events stream on the returned receiver. If the
+    /// worker is already gone the receiver carries an explicit
+    /// [`Event::Failed`] — not a bare disconnect that `collect` would
+    /// report as "replica dropped the request" without ever seeing a
+    /// failure event.
     pub fn submit(&self, req: Request) -> Receiver<Event> {
         let (reply, events) = mpsc::channel();
         self.outstanding.fetch_add(1, Ordering::Relaxed);
         let job = Job { req, reply, submitted: Instant::now() };
-        if self.tx.send(job).is_err() {
+        if let Err(send_err) = self.tx.send(job) {
             self.outstanding.fetch_sub(1, Ordering::Relaxed);
+            let job = send_err.0;
+            let _ = job
+                .reply
+                .send(Event::Failed(job.req.id, "replica worker is gone".into()));
         }
         events
     }
@@ -162,7 +237,8 @@ impl Drop for Replica {
     }
 }
 
-/// The replica scheduling loop: FCFS prefill + continuous decode batching.
+/// The replica scheduling loop: FCFS prefill + continuous decode batching
+/// + the per-replica session registry (open/continue/close).
 fn worker_loop(
     engine: &Engine,
     cfg: &ServeConfig,
@@ -171,6 +247,11 @@ fn worker_loop(
 ) {
     let mut waiting: VecDeque<Job> = VecDeque::new();
     let mut active: Vec<Active> = Vec::new();
+    // The session registry: finished sessions stay resident up to the RAM
+    // budget, LRU-park to disk through the snapshot format, and resume on
+    // the next turn. Owned by this thread — sessions never cross replicas
+    // (the router pins session ids).
+    let mut sessions = SessionCache::new(cfg.serving.session_cache.clone());
 
     loop {
         // Pull new jobs. Block only when fully idle.
@@ -203,22 +284,82 @@ fn worker_loop(
             }
         }
 
-        // Admit prefills while there is decode capacity.
+        // Admit work while there is decode capacity. Close verbs are
+        // registry operations, not decodes: handled inline.
         while active.len() < cfg.scheduler.max_batch {
             let Some(job) = waiting.pop_front() else { break };
+            // A session verb whose PREVIOUS turn is still decoding must
+            // wait for it to retire (the registry only holds finished
+            // turns): defer it rather than mis-report "unknown session"
+            // to a client that pipelined its turns. Admission is FCFS, so
+            // stop admitting behind it; the decode rounds below always
+            // make progress, so the deferral cannot deadlock.
+            if let Some(spec) = job.req.session {
+                let busy = active.iter().any(|a| {
+                    a.job.req.session.map(|s| s.session_id == spec.session_id).unwrap_or(false)
+                });
+                if busy {
+                    waiting.push_front(job);
+                    break;
+                }
+            }
+            if matches!(job.req.session, Some(SessionSpec { mode: SessionMode::Close, .. })) {
+                let spec = job.req.session.expect("checked above");
+                let known = sessions.close(spec.session_id);
+                outstanding.fetch_sub(1, Ordering::Relaxed);
+                if known {
+                    let metrics = RequestMetrics {
+                        session_parks: sessions.stats.parks,
+                        session_resumes: sessions.stats.resumes,
+                        ..RequestMetrics::default()
+                    };
+                    let _ = job.reply.send(Event::Done(job.req.id, metrics));
+                } else {
+                    let _ = job.reply.send(Event::Failed(
+                        job.req.id,
+                        format!("unknown session {}", spec.session_id),
+                    ));
+                }
+                continue;
+            }
             let t = Instant::now();
-            match admit(engine, &job) {
-                Ok(sess) => {
-                    let prefill_s = t.elapsed().as_secs_f64();
-                    active.push(Active {
+            match admit(engine, &mut sessions, &job) {
+                Ok(adm) => {
+                    // Continuations skip prefill entirely: their admission
+                    // cost is the resume (reported as resume_s) plus the
+                    // decode-extend steps (already summed into the decode
+                    // breakdown below) — reporting the wall time here too
+                    // would double-count it as a phantom prefill.
+                    let prefill_s =
+                        if adm.first.is_some() { 0.0 } else { t.elapsed().as_secs_f64() };
+                    let mut a = Active {
                         job,
-                        sess,
+                        sess: adm.sess,
                         produced: Vec::new(),
                         cur: 0,
                         prefill_s,
                         first_token_at: None,
                         decode_bd: PhaseBreakdown::default(),
-                    });
+                        resumed_from_disk: adm.resumed_from_disk,
+                        resume_s: adm.resume_s,
+                        snapshot_bytes: adm.snapshot_bytes,
+                        failed: false,
+                    };
+                    // A continuation already decoded its first token (the
+                    // last prompt token's decode step). With max_tokens=0
+                    // the token is discarded un-emitted — the KV grew
+                    // (that is what the turn asked for) but the client
+                    // gets zero tokens, same as a fresh max_tokens=0.
+                    if let Some((tok, bd)) = adm.first {
+                        a.decode_bd.add(&bd);
+                        if a.job.req.max_tokens > 0 {
+                            a.produced.push(tok);
+                            a.cur = tok;
+                            a.first_token_at = Some(Instant::now());
+                            let _ = a.job.reply.send(Event::Token(a.job.req.id, tok));
+                        }
+                    }
+                    active.push(a);
                 }
                 Err(e) => {
                     outstanding.fetch_sub(1, Ordering::Relaxed);
@@ -230,6 +371,12 @@ fn worker_loop(
         // One decode round: every active session advances one token.
         let mut finished: Vec<usize> = Vec::new();
         for (idx, a) in active.iter_mut().enumerate() {
+            if a.produced.len() >= a.job.req.max_tokens {
+                // Already satisfied (continuation whose first token filled
+                // the budget, or max_tokens == 0): retire without stepping.
+                finished.push(idx);
+                continue;
+            }
             let step = if a.produced.is_empty() {
                 engine.first_token(&a.sess).map(|t| (t, PhaseBreakdown::default()))
             } else {
@@ -250,6 +397,7 @@ fn worker_loop(
                 }
                 Err(e) => {
                     let _ = a.job.reply.send(Event::Failed(a.job.req.id, e.to_string()));
+                    a.failed = true;
                     finished.push(idx);
                 }
             }
@@ -258,7 +406,8 @@ fn worker_loop(
         for idx in finished.into_iter().rev() {
             let mut a = active.swap_remove(idx);
             // Quiesce the background maintenance worker so the drain/evict
-            // counters below are exact, not racing in-flight jobs.
+            // counters below are exact, not racing in-flight jobs (and so
+            // a retained session snapshots replay-free).
             a.sess.shutdown_maintenance();
             let ttft = a
                 .first_token_at
@@ -267,7 +416,7 @@ fn worker_loop(
             let n_out = a.produced.len();
             let decode_total = a.decode_bd.total();
             let maint = a.sess.maint.stats;
-            let metrics = RequestMetrics {
+            let mut metrics = RequestMetrics {
                 prompt_tokens: a.job.req.prompt.len(),
                 output_tokens: n_out,
                 prefill_s: a.prefill_s,
@@ -283,41 +432,119 @@ fn worker_loop(
                 maint_swap_s_mean: maint.mean_swap_s(),
                 maint_queue_peak: maint.queue_peak,
                 tombstone_ratio: a.sess.tombstone_ratio(),
+                resumed_from_disk: a.resumed_from_disk,
+                resume_s: a.resume_s,
+                snapshot_bytes: a.snapshot_bytes,
+                session_parks: sessions.stats.parks,
+                session_resumes: sessions.stats.resumes,
             };
             // Decrement BEFORE the Done event so a client that reads Done
             // observes the freed capacity (load-balancing correctness).
             outstanding.fetch_sub(1, Ordering::Relaxed);
-            let _ = a.job.reply.send(Event::Done(a.job.req.id, metrics));
+            // Session-tracked turns retain their session for the next one
+            // (a failed step poisons it — never retain half-decoded
+            // state). Retention may LRU-park colder sessions to disk; if
+            // the disk budget is exhausted the registry refuses, and that
+            // backpressure surfaces as this request's failure.
+            let retain = if a.failed { None } else { a.job.req.session };
+            match retain {
+                Some(spec) => match sessions.insert(engine, spec.session_id, a.sess) {
+                    Ok(()) => {
+                        metrics.session_parks = sessions.stats.parks;
+                        metrics.session_resumes = sessions.stats.resumes;
+                        let _ = a.job.reply.send(Event::Done(a.job.req.id, metrics));
+                    }
+                    Err(e) => {
+                        let _ = a.job.reply.send(Event::Failed(a.job.req.id, e.to_string()));
+                    }
+                },
+                None => {
+                    let _ = a.job.reply.send(Event::Done(a.job.req.id, metrics));
+                }
+            }
         }
     }
 }
 
-/// Admission: enforce device-memory limits for the vLLM-like baseline
-/// (full KV on device ⇒ OOM past the budget), then prefill.
-fn admit(engine: &Engine, job: &Job) -> Result<Session> {
-    if engine.cfg.method == crate::config::Method::VllmLike {
-        if let Some(hw) = crate::hw::HwProfile::by_name(&engine.cfg.hw) {
-            let spec = engine.spec();
-            let geom = crate::hw::ModelGeometry {
-                layers: spec.layers,
-                q_heads: spec.q_heads,
-                kv_heads: spec.kv_heads,
-                head_dim: spec.head_dim,
-                elt_size: 2,
-            };
-            // Full-model weights claim their share of device memory first.
-            let weight_bytes = engine.weights.param_count() * 2;
-            let budget = hw.device_mem_bytes.saturating_sub(weight_bytes);
-            let need = geom.kv_bytes(job.req.prompt.len() + job.req.max_tokens);
-            anyhow::ensure!(
-                need <= budget,
-                "device OOM: KV needs {:.1} GiB, {:.1} GiB free",
-                need as f64 / (1u64 << 30) as f64,
-                budget as f64 / (1u64 << 30) as f64
-            );
+/// Admission. Fresh requests (and `open` turns) enforce the vLLM-like
+/// device-memory limit then prefill; `continue` turns resume the retained
+/// session — resident or parked — and extend it by decoding the new
+/// prompt tokens, skipping prefill entirely.
+fn admit(engine: &Engine, sessions: &mut SessionCache, job: &Job) -> Result<Admitted> {
+    if let Some(SessionSpec { session_id, mode: SessionMode::Continue }) = job.req.session {
+        anyhow::ensure!(!job.req.prompt.is_empty(), "empty prompt");
+        let resumed = sessions
+            .take(engine, session_id)?
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session_id}"))?;
+        let mut sess = resumed.sess;
+        // The vLLM-like device budget covers the CUMULATIVE session
+        // length: a session grown turn by turn must OOM exactly where a
+        // fresh request of the same total length would. On rejection the
+        // session goes back into the registry — the turn failed, the
+        // session did not.
+        if let Err(e) =
+            vllm_device_check(engine, sess.len + job.req.prompt.len() + job.req.max_tokens)
+        {
+            let _ = sessions.insert(engine, session_id, sess);
+            return Err(e);
         }
+        // Decode-extend: each new prompt token is one decode step over the
+        // resumed KV + indexes; the last step's output is the turn's first
+        // generated token. Zero prefill, zero index rebuild.
+        let mut bd = PhaseBreakdown::default();
+        let mut first = 0u32;
+        for &tok in &job.req.prompt {
+            let out = engine.decode_step(&mut sess, tok)?;
+            bd.add(&out.breakdown);
+            first = out.token;
+        }
+        return Ok(Admitted {
+            sess,
+            first: Some((first, bd)),
+            resumed_from_disk: resumed.from_disk,
+            resume_s: resumed.resume_s,
+            snapshot_bytes: resumed.snapshot_bytes,
+        });
     }
-    engine.prefill(&job.req.prompt)
+    vllm_device_check(engine, job.req.prompt.len() + job.req.max_tokens)?;
+    let sess = engine.prefill(&job.req.prompt)?;
+    Ok(Admitted {
+        sess,
+        first: None,
+        resumed_from_disk: false,
+        resume_s: 0.0,
+        snapshot_bytes: 0,
+    })
+}
+
+/// The vLLM-like baseline's admission limit: full KV on device ⇒ reject
+/// once the modeled KV for `total_tokens` exceeds the hardware profile's
+/// free device memory. A no-op for every other method.
+fn vllm_device_check(engine: &Engine, total_tokens: usize) -> Result<()> {
+    if engine.cfg.method != crate::config::Method::VllmLike {
+        return Ok(());
+    }
+    if let Some(hw) = crate::hw::HwProfile::by_name(&engine.cfg.hw) {
+        let spec = engine.spec();
+        let geom = crate::hw::ModelGeometry {
+            layers: spec.layers,
+            q_heads: spec.q_heads,
+            kv_heads: spec.kv_heads,
+            head_dim: spec.head_dim,
+            elt_size: 2,
+        };
+        // Full-model weights claim their share of device memory first.
+        let weight_bytes = engine.weights.param_count() * 2;
+        let budget = hw.device_mem_bytes.saturating_sub(weight_bytes);
+        let need = geom.kv_bytes(total_tokens);
+        anyhow::ensure!(
+            need <= budget,
+            "device OOM: KV needs {:.1} GiB, {:.1} GiB free",
+            need as f64 / (1u64 << 30) as f64,
+            budget as f64 / (1u64 << 30) as f64
+        );
+    }
+    Ok(())
 }
 
 /// Collect a full generation from an event stream (blocking helper).

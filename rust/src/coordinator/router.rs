@@ -34,8 +34,17 @@ impl Router {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Route to the least-loaded replica.
+    /// Route to the least-loaded replica — except session-tracked
+    /// requests, which pin to `session_id % replicas`: a session's
+    /// retained KV/indexes (and its disk snapshots) live on exactly one
+    /// replica worker, so every turn of a session must land there.
+    /// (Cross-replica session migration is a named ROADMAP follow-up on
+    /// top of the snapshot format.)
     pub fn submit(&self, req: Request) -> Receiver<Event> {
+        if let Some(spec) = req.session {
+            let idx = (spec.session_id % self.replicas.len() as u64) as usize;
+            return self.replicas[idx].submit(req);
+        }
         let start = self.rr.fetch_add(1, Ordering::Relaxed) as usize;
         let n = self.replicas.len();
         let mut best = start % n;

@@ -53,6 +53,27 @@ impl FlatIndex {
         }
     }
 
+    /// Restore from a snapshot stream over the group's restored key store
+    /// (the inverse of [`VectorIndex::save_state`]).
+    pub(crate) fn load_state(
+        keys: KeyStore,
+        r: &mut crate::store::codec::SnapReader<'_>,
+    ) -> anyhow::Result<FlatIndex> {
+        let block = r.usize()?;
+        let dead_bytes = r.bytes()?;
+        let (dead, dead_count) = super::dead_from_bytes(&dead_bytes, keys.rows())
+            .ok_or_else(|| anyhow::anyhow!("flat snapshot: tombstone set != store rows"))?;
+        let dead_at_compact = r.usize()?;
+        let live = if r.bool()? { Some(r.u32s()?) } else { None };
+        if let Some(live) = &live {
+            anyhow::ensure!(
+                live.iter().all(|&i| (i as usize) < keys.rows()),
+                "flat snapshot: live id out of bounds"
+            );
+        }
+        Ok(FlatIndex { keys, dead, dead_count, live, dead_at_compact, block: block.max(1) })
+    }
+
     fn maybe_compact(&mut self) {
         // Ratio against the LIVE row count, not total dense slots: dense
         // ids are permanent between reclamation epochs, so a total-rows
@@ -242,6 +263,27 @@ impl VectorIndex for FlatIndex {
         self.dead_at_compact = dead_count;
         self.live = None;
         true
+    }
+
+    fn supports_save(&self) -> bool {
+        true
+    }
+
+    fn family_tag(&self) -> u8 {
+        super::FAMILY_FLAT
+    }
+
+    /// Everything except the shared key store: the tombstone bitset, the
+    /// compaction watermark, and the (optional) compacted live list.
+    fn save_state(&self, w: &mut crate::store::codec::SnapWriter<'_>) -> anyhow::Result<()> {
+        w.usize(self.block)?;
+        w.bytes(&super::dead_to_bytes(&self.dead))?;
+        w.usize(self.dead_at_compact)?;
+        w.bool(self.live.is_some())?;
+        if let Some(live) = &self.live {
+            w.u32s(live)?;
+        }
+        Ok(())
     }
 
     fn clone_index(&self) -> Box<dyn VectorIndex> {

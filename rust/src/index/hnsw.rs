@@ -130,6 +130,78 @@ impl HnswIndex {
         idx
     }
 
+    /// Restore from a snapshot stream over the group's restored key store
+    /// (the inverse of [`VectorIndex::save_state`]): the layered adjacency,
+    /// node levels, entry point, tombstones and the level-draw RNG stream
+    /// come back verbatim, so searches are bit-identical and post-restore
+    /// inserts draw the same levels the source session would have.
+    pub(crate) fn load_state(
+        keys: KeyStore,
+        r: &mut crate::store::codec::SnapReader<'_>,
+    ) -> anyhow::Result<HnswIndex> {
+        let m = r.usize()?;
+        let ef_construction = r.usize()?;
+        let rng_state = r.u64()?;
+        let entry = r.u32()?;
+        let node_level = r.bytes()?;
+        let dead_bytes = r.bytes()?;
+        let (dead, dead_count) = super::dead_from_bytes(&dead_bytes, keys.rows())
+            .ok_or_else(|| anyhow::anyhow!("hnsw snapshot: tombstone set != store rows"))?;
+        let n_layers = r.usize()?;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let n_nodes = r.usize()?;
+            let mut neighbors = Vec::with_capacity(n_nodes);
+            for _ in 0..n_nodes {
+                neighbors.push(r.u32s()?);
+            }
+            layers.push(Layer { neighbors });
+        }
+        anyhow::ensure!(!layers.is_empty(), "hnsw snapshot: no layers");
+        anyhow::ensure!(m >= 2, "hnsw snapshot: degenerate degree bound {m}");
+        // Bounds validation (the codec's per-field sanity contract): a
+        // corrupted snapshot must fail the restore, not panic the replica
+        // worker on its first post-resume search.
+        let n = keys.rows();
+        anyhow::ensure!(n > 0, "hnsw snapshot: empty store");
+        anyhow::ensure!(
+            node_level.len() == n,
+            "hnsw snapshot: node levels ({}) != store rows ({n})",
+            node_level.len()
+        );
+        anyhow::ensure!((entry as usize) < n, "hnsw snapshot: entry {entry} out of bounds");
+        anyhow::ensure!(
+            node_level.iter().all(|&l| (l as usize) < layers.len()),
+            "hnsw snapshot: node level exceeds layer count"
+        );
+        for layer in &layers {
+            // Every layer spans the full node range (inserts resize all
+            // layers in lockstep); a narrower layer would panic the
+            // greedy descent on its first search.
+            anyhow::ensure!(
+                layer.neighbors.len() == n,
+                "hnsw snapshot: layer width ({}) != store rows ({n})",
+                layer.neighbors.len()
+            );
+            anyhow::ensure!(
+                layer.neighbors.iter().flatten().all(|&v| (v as usize) < n),
+                "hnsw snapshot: neighbor id out of bounds"
+            );
+        }
+        Ok(HnswIndex {
+            keys,
+            layers,
+            entry,
+            node_level,
+            dead,
+            dead_count,
+            m,
+            ef_construction,
+            rng: Rng::from_state(rng_state),
+            level_mult: 1.0 / (m as f64).ln(),
+        })
+    }
+
     /// Geometric level draw (standard HNSW).
     fn draw_level(&mut self) -> usize {
         let u: f64 = self.rng.f64().max(1e-12);
@@ -547,6 +619,31 @@ impl VectorIndex for HnswIndex {
         self.dead = dead;
         self.dead_count = dead_count;
         true
+    }
+
+    fn supports_save(&self) -> bool {
+        true
+    }
+
+    fn family_tag(&self) -> u8 {
+        super::FAMILY_HNSW
+    }
+
+    fn save_state(&self, w: &mut crate::store::codec::SnapWriter<'_>) -> anyhow::Result<()> {
+        w.usize(self.m)?;
+        w.usize(self.ef_construction)?;
+        w.u64(self.rng.state())?;
+        w.u32(self.entry)?;
+        w.bytes(&self.node_level)?;
+        w.bytes(&super::dead_to_bytes(&self.dead))?;
+        w.usize(self.layers.len())?;
+        for layer in &self.layers {
+            w.usize(layer.neighbors.len())?;
+            for adj in &layer.neighbors {
+                w.u32s(adj)?;
+            }
+        }
+        Ok(())
     }
 
     fn clone_index(&self) -> Box<dyn VectorIndex> {

@@ -58,6 +58,37 @@ impl IvfIndex {
     pub fn nlist(&self) -> usize {
         self.lists.len()
     }
+
+    /// Restore from a snapshot stream over the group's restored key store
+    /// (the inverse of [`VectorIndex::save_state`]): the trained coarse
+    /// quantiser and inverted lists come back verbatim, so searches are
+    /// bit-identical — no k-means retraining on restore.
+    pub(crate) fn load_state(
+        keys: KeyStore,
+        r: &mut crate::store::codec::SnapReader<'_>,
+    ) -> anyhow::Result<IvfIndex> {
+        let centroids = r.matrix()?;
+        let nlist = r.usize()?;
+        let mut lists = Vec::with_capacity(nlist);
+        for _ in 0..nlist {
+            lists.push(r.u32s()?);
+        }
+        let dead_bytes = r.bytes()?;
+        let (dead, dead_count) = super::dead_from_bytes(&dead_bytes, keys.rows())
+            .ok_or_else(|| anyhow::anyhow!("ivf snapshot: tombstone set != store rows"))?;
+        let dead_at_compact = r.usize()?;
+        anyhow::ensure!(
+            centroids.cols() == keys.cols(),
+            "ivf snapshot: centroid width ({}) != key width ({})",
+            centroids.cols(),
+            keys.cols()
+        );
+        anyhow::ensure!(
+            lists.iter().flatten().all(|&i| (i as usize) < keys.rows()),
+            "ivf snapshot: posting-list id out of bounds"
+        );
+        Ok(IvfIndex { keys, centroids, lists, dead, dead_count, dead_at_compact })
+    }
 }
 
 impl VectorIndex for IvfIndex {
@@ -216,6 +247,25 @@ impl VectorIndex for IvfIndex {
         self.dead_count = dead_count;
         self.dead_at_compact = dead_count;
         true
+    }
+
+    fn supports_save(&self) -> bool {
+        true
+    }
+
+    fn family_tag(&self) -> u8 {
+        super::FAMILY_IVF
+    }
+
+    fn save_state(&self, w: &mut crate::store::codec::SnapWriter<'_>) -> anyhow::Result<()> {
+        w.matrix(&self.centroids)?;
+        w.usize(self.lists.len())?;
+        for l in &self.lists {
+            w.u32s(l)?;
+        }
+        w.bytes(&super::dead_to_bytes(&self.dead))?;
+        w.usize(self.dead_at_compact)?;
+        Ok(())
     }
 
     fn clone_index(&self) -> Box<dyn VectorIndex> {

@@ -327,10 +327,87 @@ pub trait VectorIndex: Send + Sync {
         }
     }
 
+    /// Whether this family can serialize itself into a session snapshot
+    /// ([`crate::store`]). All four in-crate families can; the default is
+    /// conservative for future families.
+    fn supports_save(&self) -> bool {
+        false
+    }
+
+    /// Stable one-byte family tag used by the snapshot format to dispatch
+    /// [`load_index`]. Tags are part of the on-disk format: never reuse or
+    /// renumber them (see the version policy in `store`).
+    fn family_tag(&self) -> u8 {
+        u8::MAX
+    }
+
+    /// Serialize the family's structure — everything EXCEPT the shared key
+    /// store, which the snapshot writes once per GQA group — so that
+    /// [`load_index`] over the same store rebuilds an index whose searches
+    /// are bit-identical to this one's. Default: unsupported.
+    fn save_state(&self, w: &mut crate::store::codec::SnapWriter<'_>) -> anyhow::Result<()> {
+        let _ = w;
+        anyhow::bail!("{}: snapshot persistence unsupported", self.name())
+    }
+
     /// Deep copy, used by the double-buffered maintenance swap: the worker
     /// mutates a private back buffer and publishes it atomically while
     /// decode keeps searching the front.
     fn clone_index(&self) -> Box<dyn VectorIndex>;
+}
+
+/// Snapshot family tags (on-disk format constants — append-only).
+pub const FAMILY_FLAT: u8 = 0;
+pub const FAMILY_IVF: u8 = 1;
+pub const FAMILY_HNSW: u8 = 2;
+pub const FAMILY_ROAR: u8 = 3;
+
+/// Restore an index family from a snapshot stream: the inverse of
+/// [`VectorIndex::save_state`], dispatched on the family tag. `keys` is
+/// the group's restored key store (written once per GQA group, shared by
+/// every head's index via its `Arc`'d chunks).
+pub fn load_index(
+    tag: u8,
+    keys: KeyStore,
+    r: &mut crate::store::codec::SnapReader<'_>,
+) -> anyhow::Result<Box<dyn VectorIndex>> {
+    Ok(match tag {
+        FAMILY_FLAT => Box::new(flat::FlatIndex::load_state(keys, r)?),
+        FAMILY_IVF => Box::new(ivf::IvfIndex::load_state(keys, r)?),
+        FAMILY_HNSW => Box::new(hnsw::HnswIndex::load_state(keys, r)?),
+        FAMILY_ROAR => Box::new(roargraph::RoarGraph::load_state(keys, r)?),
+        other => anyhow::bail!("unknown index family tag {other} in snapshot"),
+    })
+}
+
+/// Shared by the families' save/load impls: tombstone bitset packed 8
+/// flags per byte (a 128K-row head's set is 16 KB per head per snapshot,
+/// not 128 KB of bool padding).
+pub(crate) fn dead_to_bytes(dead: &[bool]) -> Vec<u8> {
+    let mut out = vec![0u8; dead.len().div_ceil(8)];
+    for (i, &d) in dead.iter().enumerate() {
+        if d {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+/// Inverse of [`dead_to_bytes`]: unpack exactly `n` flags; returns the
+/// bitset plus its popcount, or `None` when the byte length does not
+/// match `n` (a corrupted snapshot).
+pub(crate) fn dead_from_bytes(bytes: &[u8], n: usize) -> Option<(Vec<bool>, usize)> {
+    if bytes.len() != n.div_ceil(8) {
+        return None;
+    }
+    let mut dead = Vec::with_capacity(n);
+    let mut count = 0usize;
+    for i in 0..n {
+        let d = bytes[i / 8] & (1 << (i % 8)) != 0;
+        count += d as usize;
+        dead.push(d);
+    }
+    Some((dead, count))
 }
 
 /// Search with an exact re-rank pass over a widened candidate pool: when

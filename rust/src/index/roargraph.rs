@@ -226,6 +226,106 @@ impl RoarGraph {
         graph
     }
 
+    /// Restore from a snapshot stream over the group's restored key store
+    /// (the inverse of [`VectorIndex::save_state`]): the frozen CSR, the
+    /// patch/extra overlays, the protected anchors, the retained training
+    /// queries and the rebuild counters come back verbatim — no bipartite
+    /// KNN phase and no re-projection on restore, and searches over the
+    /// restored graph are bit-identical to the source session's.
+    pub(crate) fn load_state(
+        keys: KeyStore,
+        r: &mut crate::store::codec::SnapReader<'_>,
+    ) -> anyhow::Result<RoarGraph> {
+        let params = RoarParams {
+            kb: r.usize()?,
+            m: r.usize()?,
+            repair_sample: r.usize()?,
+            rebuild_threshold: r.usize()?,
+        };
+        let base_n = r.usize()?;
+        let offsets = r.u32s()?;
+        let edges = r.u32s()?;
+        let entries = r.u32s()?;
+        anyhow::ensure!(
+            offsets.len() == base_n + 1,
+            "roargraph snapshot: CSR offsets ({}) != base nodes ({base_n}) + 1",
+            offsets.len()
+        );
+        let n_patch = r.usize()?;
+        let mut patch = HashMap::with_capacity(n_patch);
+        for _ in 0..n_patch {
+            let from = r.u32()?;
+            patch.insert(from, r.u32s()?);
+        }
+        let n_extra = r.usize()?;
+        let mut extra = Vec::with_capacity(n_extra);
+        for _ in 0..n_extra {
+            extra.push(r.u32s()?);
+        }
+        let primary_anchor = r.u32s()?;
+        let train = r.matrix()?;
+        let pending = r.usize()?;
+        let dead_bytes = r.bytes()?;
+        let (dead, dead_count) = super::dead_from_bytes(&dead_bytes, keys.rows())
+            .ok_or_else(|| anyhow::anyhow!("roargraph snapshot: tombstone set != store rows"))?;
+        let dead_at_rebuild = r.usize()?;
+        anyhow::ensure!(
+            base_n + extra.len() == keys.rows(),
+            "roargraph snapshot: base ({base_n}) + online ({}) != store rows ({})",
+            extra.len(),
+            keys.rows()
+        );
+        // Bounds validation (the codec's per-field sanity contract): a
+        // corrupted snapshot must fail the restore, not panic the replica
+        // worker mid-traversal.
+        let n = keys.rows();
+        // A fully-tombstoned graph legally has no live entry point
+        // (`fix_entries` found nothing to retain); otherwise the beam
+        // must have somewhere to start.
+        anyhow::ensure!(
+            !entries.is_empty() || dead_count == n,
+            "roargraph snapshot: no entry points"
+        );
+        anyhow::ensure!(
+            offsets.windows(2).all(|w| w[0] <= w[1])
+                && offsets.last().map(|&e| e as usize == edges.len()).unwrap_or(false),
+            "roargraph snapshot: CSR offsets are not a prefix sum of the edge list"
+        );
+        let in_bounds = |ids: &[u32]| ids.iter().all(|&v| (v as usize) < n);
+        anyhow::ensure!(in_bounds(&edges), "roargraph snapshot: edge target out of bounds");
+        anyhow::ensure!(in_bounds(&entries), "roargraph snapshot: entry out of bounds");
+        anyhow::ensure!(
+            patch.keys().all(|&k| (k as usize) < base_n)
+                && patch.values().all(|v| in_bounds(v)),
+            "roargraph snapshot: patch edge out of bounds"
+        );
+        anyhow::ensure!(
+            extra.iter().all(|v| in_bounds(v)),
+            "roargraph snapshot: online adjacency out of bounds"
+        );
+        anyhow::ensure!(
+            primary_anchor.len() == extra.len()
+                && primary_anchor.iter().all(|&a| a == u32::MAX || (a as usize) < n),
+            "roargraph snapshot: anchor table invalid"
+        );
+        Ok(RoarGraph {
+            keys,
+            offsets,
+            edges,
+            entries,
+            params,
+            base_n,
+            patch,
+            extra,
+            primary_anchor,
+            train,
+            pending,
+            dead,
+            dead_count,
+            dead_at_rebuild,
+        })
+    }
+
     /// Make every node reachable from the entry set: BFS, then connect each
     /// unreachable node to its best (highest-IP) reachable node out of a
     /// deterministic sample, and symmetrically back.
@@ -779,6 +879,45 @@ impl VectorIndex for RoarGraph {
         let adj = self.repair_connectivity(adj, self.params.repair_sample);
         self.freeze(adj);
         true
+    }
+
+    fn supports_save(&self) -> bool {
+        true
+    }
+
+    fn family_tag(&self) -> u8 {
+        super::FAMILY_ROAR
+    }
+
+    /// The patch overlay is a `HashMap`, so it is written in ascending key
+    /// order — snapshots of identical graphs are byte-identical, which the
+    /// persistence tests rely on to diff round trips cheaply.
+    fn save_state(&self, w: &mut crate::store::codec::SnapWriter<'_>) -> anyhow::Result<()> {
+        w.usize(self.params.kb)?;
+        w.usize(self.params.m)?;
+        w.usize(self.params.repair_sample)?;
+        w.usize(self.params.rebuild_threshold)?;
+        w.usize(self.base_n)?;
+        w.u32s(&self.offsets)?;
+        w.u32s(&self.edges)?;
+        w.u32s(&self.entries)?;
+        let mut patch_keys: Vec<u32> = self.patch.keys().copied().collect();
+        patch_keys.sort_unstable();
+        w.usize(patch_keys.len())?;
+        for k in patch_keys {
+            w.u32(k)?;
+            w.u32s(&self.patch[&k])?;
+        }
+        w.usize(self.extra.len())?;
+        for adj in &self.extra {
+            w.u32s(adj)?;
+        }
+        w.u32s(&self.primary_anchor)?;
+        w.matrix(&self.train)?;
+        w.usize(self.pending)?;
+        w.bytes(&super::dead_to_bytes(&self.dead))?;
+        w.usize(self.dead_at_rebuild)?;
+        Ok(())
     }
 
     fn clone_index(&self) -> Box<dyn VectorIndex> {

@@ -37,8 +37,8 @@
 //! |---------------|--------|----------|------|
 //! | `dot`/`l2_sq` | 8-acc unrolled | 8-lane mul+add (bit-exact) | 2×4-lane mul+add (bit-exact) |
 //! | `dot_rows` / `dot_gather` | per-row | batched + prefetch | batched |
-//! | `dot_f16` (bf16) | decode + mul | cvt+shift + FMA | scalar loop (autovec) |
-//! | `dot_i8`      | decode + mul | sign-extend cvt + FMA | scalar loop (autovec) |
+//! | `dot_f16` (bf16) | decode + mul | cvt+shift + FMA | widen+shift, mul+add |
+//! | `dot_i8`      | decode + mul | sign-extend cvt + FMA | sign-extend cvt, mul+add |
 
 pub mod quant;
 pub mod scalar;
@@ -209,14 +209,17 @@ pub fn l2_rows(q: &[f32], rows: &[f32], cols: usize, out: &mut Vec<f32>) {
     }
 }
 
-/// Inner product of `q` with one bf16 (bit-truncated f32) row. (On NEON
-/// the scalar loop autovectorises; only x86 has an intrinsic path.)
+/// Inner product of `q` with one bf16 (bit-truncated f32) row.
 #[inline]
 pub fn dot_f16(q: &[f32], row: &[u16]) -> f32 {
     assert_eq!(q.len(), row.len(), "dot_f16 operand lengths differ");
     #[cfg(target_arch = "x86_64")]
     if active() == Dispatch::Avx2 {
         return unsafe { x86::dot_f16(q, row) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if active() == Dispatch::Neon {
+        return neon::dot_f16(q, row);
     }
     scalar::dot_f16(q, row)
 }
@@ -229,6 +232,10 @@ pub fn dot_i8(q: &[f32], row: &[i8]) -> f32 {
     #[cfg(target_arch = "x86_64")]
     if active() == Dispatch::Avx2 {
         return unsafe { x86::dot_i8(q, row) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if active() == Dispatch::Neon {
+        return neon::dot_i8(q, row);
     }
     scalar::dot_i8(q, row)
 }
@@ -244,6 +251,10 @@ pub fn dot_rows_f16(q: &[f32], rows: &[u16], cols: usize, out: &mut Vec<f32>) {
     if active() == Dispatch::Avx2 {
         return unsafe { x86::dot_rows_f16(q, rows, cols, out) };
     }
+    #[cfg(target_arch = "aarch64")]
+    if active() == Dispatch::Neon {
+        return neon::dot_rows_f16(q, rows, cols, out);
+    }
     scalar::dot_rows_f16(q, rows, cols, out)
 }
 
@@ -258,6 +269,10 @@ pub fn dot_rows_i8(q: &[f32], rows: &[i8], scales: &[f32], cols: usize, out: &mu
     #[cfg(target_arch = "x86_64")]
     if active() == Dispatch::Avx2 {
         return unsafe { x86::dot_rows_i8(q, rows, scales, cols, out) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if active() == Dispatch::Neon {
+        return neon::dot_rows_i8(q, rows, scales, cols, out);
     }
     scalar::dot_rows_i8(q, rows, scales, cols, out)
 }

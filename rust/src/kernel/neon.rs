@@ -4,10 +4,14 @@
 //! The f32 paths mirror the scalar 8-accumulator unrolling as two 4-lane
 //! vectors (multiply + add, no fused contraction) and reduce through the
 //! shared [`super::scalar::tree8`] tree, so they are bit-for-bit identical
-//! to the scalar and AVX2 backends. The quantized (bf16/int8) paths
-//! delegate to the scalar loops, which LLVM auto-vectorises for NEON —
-//! the bandwidth win of the smaller payload is format-, not
-//! intrinsic-, driven.
+//! to the scalar and AVX2 backends. The quantized (bf16/int8) paths are
+//! intrinsic too (the PR-4 "NEON-intrinsic f16/i8" follow-up): bf16 rows
+//! widen u16→u32, shift into f32 bit position and reinterpret; int8 rows
+//! sign-extend i8→i16→i32 and convert — both then run the same 2×4-lane
+//! multiply+add as the f32 kernels. Quantized scores are approximate by
+//! construction, so (as on AVX2) they need not match the scalar loop
+//! bitwise — only the batch forms must match the row forms bitwise, which
+//! holds because the batch forms call the row forms per row.
 
 use core::arch::aarch64::*;
 
@@ -105,5 +109,95 @@ pub fn l2_rows(q: &[f32], rows: &[f32], cols: usize, out: &mut Vec<f32>) {
     out.reserve(rows.len() / cols);
     for row in rows.chunks_exact(cols) {
         out.push(l2_sq(q, row));
+    }
+}
+
+/// bf16 (bit-truncated f32) row inner product: widen 8×u16 → 2×4×u32,
+/// shift into the high half and reinterpret as f32, then the standard
+/// 2×4-lane multiply+add.
+#[inline]
+pub fn dot_f16(q: &[f32], row: &[u16]) -> f32 {
+    debug_assert_eq!(q.len(), row.len());
+    let n = q.len();
+    let chunks = n / 8;
+    unsafe {
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let (qp, rp) = (q.as_ptr(), row.as_ptr());
+        for i in 0..chunks {
+            let h = vld1q_u16(rp.add(i * 8));
+            let lo = vreinterpretq_f32_u32(vshlq_n_u32::<16>(vmovl_u16(vget_low_u16(h))));
+            let hi = vreinterpretq_f32_u32(vshlq_n_u32::<16>(vmovl_u16(vget_high_u16(h))));
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(qp.add(i * 8)), lo));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(qp.add(i * 8 + 4)), hi));
+        }
+        let lanes = [
+            vgetq_lane_f32::<0>(acc0),
+            vgetq_lane_f32::<1>(acc0),
+            vgetq_lane_f32::<2>(acc0),
+            vgetq_lane_f32::<3>(acc0),
+            vgetq_lane_f32::<0>(acc1),
+            vgetq_lane_f32::<1>(acc1),
+            vgetq_lane_f32::<2>(acc1),
+            vgetq_lane_f32::<3>(acc1),
+        ];
+        let mut tail = 0.0f32;
+        for (x, &h) in q[chunks * 8..].iter().zip(&row[chunks * 8..]) {
+            tail += x * super::scalar::f16_to_f32(h);
+        }
+        super::scalar::tree8(&lanes) + tail
+    }
+}
+
+/// int8 row inner product (unscaled): sign-extend 8×i8 → i16 → 2×4×i32,
+/// convert to f32, then the standard 2×4-lane multiply+add.
+#[inline]
+pub fn dot_i8(q: &[f32], row: &[i8]) -> f32 {
+    debug_assert_eq!(q.len(), row.len());
+    let n = q.len();
+    let chunks = n / 8;
+    unsafe {
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let (qp, rp) = (q.as_ptr(), row.as_ptr());
+        for i in 0..chunks {
+            let w = vmovl_s8(vld1_s8(rp.add(i * 8)));
+            let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w)));
+            let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w)));
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(qp.add(i * 8)), lo));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(qp.add(i * 8 + 4)), hi));
+        }
+        let lanes = [
+            vgetq_lane_f32::<0>(acc0),
+            vgetq_lane_f32::<1>(acc0),
+            vgetq_lane_f32::<2>(acc0),
+            vgetq_lane_f32::<3>(acc0),
+            vgetq_lane_f32::<0>(acc1),
+            vgetq_lane_f32::<1>(acc1),
+            vgetq_lane_f32::<2>(acc1),
+            vgetq_lane_f32::<3>(acc1),
+        ];
+        let mut tail = 0.0f32;
+        for (x, &v) in q[chunks * 8..].iter().zip(&row[chunks * 8..]) {
+            tail += x * v as f32;
+        }
+        super::scalar::tree8(&lanes) + tail
+    }
+}
+
+/// Batched contiguous bf16 row scores (bitwise equal to [`dot_f16`] per
+/// row — the batch/row consistency the quant property tests pin down).
+pub fn dot_rows_f16(q: &[f32], rows: &[u16], cols: usize, out: &mut Vec<f32>) {
+    out.reserve(rows.len() / cols);
+    for row in rows.chunks_exact(cols) {
+        out.push(dot_f16(q, row));
+    }
+}
+
+/// Batched contiguous int8 row scores with per-row scales applied.
+pub fn dot_rows_i8(q: &[f32], rows: &[i8], scales: &[f32], cols: usize, out: &mut Vec<f32>) {
+    out.reserve(rows.len() / cols);
+    for (row, &scale) in rows.chunks_exact(cols).zip(scales.iter()) {
+        out.push(scale * dot_i8(q, row));
     }
 }

@@ -295,6 +295,37 @@ impl TieredKvCache {
         self.indexed_end = self.indexed_end.max(self.pattern.sink).max(bounded);
     }
 
+    /// Raw tier boundaries `(prefill_len, indexed_end, retired_end)` for
+    /// session persistence — unclamped, exactly as stored, so a snapshot
+    /// round-trips the tier partition bit-for-bit (the public accessors
+    /// clamp for presentation).
+    pub fn persist_bounds(&self) -> (usize, usize, usize) {
+        (self.prefill_len, self.indexed_end, self.retired_end)
+    }
+
+    /// Rebuild a cache from snapshotted parts (the inverse of reading
+    /// [`TieredKvCache::keys`]/[`TieredKvCache::values`] plus
+    /// [`TieredKvCache::persist_bounds`]).
+    pub fn from_parts(
+        pattern: StaticPattern,
+        keys: Matrix,
+        values: Matrix,
+        bounds: (usize, usize, usize),
+    ) -> TieredKvCache {
+        assert_eq!(keys.rows(), values.rows(), "kv snapshot rows mismatch");
+        assert_eq!(keys.cols(), values.cols(), "kv snapshot dims mismatch");
+        let d = keys.cols();
+        TieredKvCache {
+            d,
+            keys,
+            values,
+            pattern,
+            prefill_len: bounds.0,
+            indexed_end: bounds.1,
+            retired_end: bounds.2,
+        }
+    }
+
     /// Copy the indexed host keys into a standalone matrix (for index
     /// construction). Ids in the returned matrix are *dense*; map back with
     /// `indexed_ids()[dense_id]`.

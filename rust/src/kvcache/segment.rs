@@ -118,6 +118,28 @@ impl SegmentedStore {
         SegmentedStore::from_arc(Arc::new(m))
     }
 
+    /// Rebuild a store from an explicit chunk sequence, preserving segment
+    /// boundaries exactly (no tail merge) — the persistence subsystem's
+    /// restore path: a snapshot round-trips the *structure*, not just the
+    /// logical rows, so per-segment scans and mirrors come back identical.
+    /// Mirrors are rebuilt deterministically from `quant`
+    /// ([`QuantChunk::build`] is a pure function of the chunk payload), so
+    /// they are bit-identical to the ones the snapshot's source held.
+    /// Empty chunks are skipped; every chunk must share `cols`.
+    pub fn from_chunks(cols: usize, chunks: Vec<Matrix>, quant: QuantMode) -> Self {
+        let mut s = SegmentedStore::new(cols);
+        s.quant = quant;
+        for chunk in chunks {
+            if chunk.rows() == 0 {
+                continue;
+            }
+            assert_eq!(chunk.cols(), cols, "snapshot chunk has wrong width");
+            let mirror = QuantChunk::build(quant, &chunk).map(Arc::new);
+            s.push_segment(Arc::new(chunk), mirror);
+        }
+        s
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -549,6 +571,26 @@ mod tests {
         assert_eq!(plain.mirrored_segments(), 0);
         for i in 0..plain.rows() {
             assert_eq!(plain.score(&q, i).to_bits(), plain.score_exact(&q, i).to_bits());
+        }
+    }
+
+    #[test]
+    fn from_chunks_preserves_structure_and_mirrors() {
+        let mut s = SegmentedStore::from_matrix(mat(64, 8, 0.0)).with_quant(QuantMode::Int8);
+        for b in 0..7 {
+            s = s.append_rows(mat(8, 8, 100.0 * (b + 1) as f32));
+        }
+        let chunks: Vec<Matrix> =
+            s.segments().iter().map(|seg| seg.as_ref().clone()).collect();
+        let back = SegmentedStore::from_chunks(s.cols(), chunks, s.quant_mode());
+        assert_eq!(back.rows(), s.rows());
+        assert_eq!(back.segment_count(), s.segment_count());
+        assert_eq!(back.mirrored_segments(), s.mirrored_segments());
+        assert_eq!(back.quant_bytes(), s.quant_bytes());
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 - 3.5) * 0.1).collect();
+        for i in (0..s.rows()).step_by(5) {
+            assert_eq!(back.row(i), s.row(i));
+            assert_eq!(back.score(&q, i).to_bits(), s.score(&q, i).to_bits());
         }
     }
 

@@ -41,7 +41,12 @@
 //! * [`runtime`] — artifact loading and execution (the "device"): PJRT
 //!   when compiled artifacts exist, a native Rust executor of the same
 //!   entry points otherwise.
-//! * [`coordinator`] — request scheduling, batching, sessions, routing.
+//! * [`store`] — session persistence: versioned binary snapshots of a
+//!   session's full host state (KV + group maps + all four index families,
+//!   structurally — restore never re-prefills and never rebuilds an
+//!   index) and the disk-spilling multi-turn session cache built on them.
+//! * [`coordinator`] — request scheduling, batching, sessions, routing,
+//!   and the per-replica session registry (open/continue/close).
 //! * [`server`] — tokio front-end (in-process + TCP json-lines).
 //! * [`workload`] — ∞-Bench/RULER/needle-style synthetic task generators.
 //! * [`experiments`] — one driver per paper table/figure.
@@ -66,5 +71,6 @@ pub mod metrics;
 pub mod model;
 pub mod runtime;
 pub mod server;
+pub mod store;
 pub mod tensor;
 pub mod workload;

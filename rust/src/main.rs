@@ -159,7 +159,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         sample.expect
     );
     let replica = retrieval_attention::coordinator::Replica::spawn(cfg);
-    let events = replica.submit(Request { id: 1, prompt: sample.prompt.clone(), max_tokens });
+    let events = replica.submit(Request { id: 1, prompt: sample.prompt.clone(), max_tokens, session: None });
     let (tokens, metrics) = collect(&events)?;
     println!("generated: {tokens:?}");
     println!(

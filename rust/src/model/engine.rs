@@ -32,7 +32,7 @@ use crate::attention::{attend_subset, combine_into, PartialAttention};
 use crate::baselines::{build_retriever, GroupShared, HostRetriever, RetrieverInputs};
 use crate::config::{Method, ServeConfig};
 use crate::index::KeyStore;
-use crate::kvcache::TieredKvCache;
+use crate::kvcache::{StaticPattern, TieredKvCache};
 use crate::metrics::{PhaseBreakdown, PhaseTimer};
 use crate::model::maintain::{
     run_compact, run_drain, run_evict, CompactJob, Done, DoneKind, DrainJob, EvictJob, Job,
@@ -1045,7 +1045,231 @@ impl Session {
     }
 }
 
+impl Session {
+    /// Approximate heap bytes of the whole session state (KV caches,
+    /// query histories, group stores/maps, index structures): the resident
+    /// budget currency of the `serving.session_cache` registry.
+    pub fn state_bytes(&self) -> usize {
+        let mut total = self.x_last.len() * 4;
+        for layer in &self.caches {
+            for c in layer {
+                total += c.len() * 2 * c.dim() * 4;
+            }
+        }
+        for layer in &self.q_history {
+            for m in layer {
+                total += m.as_slice().len() * 4;
+            }
+        }
+        for layer in &self.recent_q {
+            for m in layer {
+                total += m.as_slice().len() * 4;
+            }
+        }
+        total + self.index_memory_bytes()
+    }
+}
+
 impl Engine {
+    /// Serialize `sess` into the versioned binary snapshot format (see
+    /// [`crate::store`]): pending maintenance is flushed first so the
+    /// image is a **single-generation, replay-free** structural copy —
+    /// KV caches with their raw tier boundaries, per-group segmented
+    /// stores + generation-stamped id maps, and every head's index
+    /// family serialized structurally. Restoring it re-pays neither the
+    /// prefill nor any index build, and searches over the restored
+    /// session are bit-identical. Returns the bytes written.
+    pub fn snapshot_session(
+        &self,
+        sess: &mut Session,
+        out: &mut dyn std::io::Write,
+    ) -> Result<u64> {
+        sess.flush_maintenance();
+        let spec = self.spec().clone();
+        anyhow::ensure!(
+            sess.retrievers.len() == spec.layers && sess.groups.len() == spec.layers,
+            "snapshot requires a fully built session (retrievers + groups)"
+        );
+        let mut w = crate::store::codec::SnapWriter::new(out);
+        w.raw(crate::store::MAGIC)?;
+        w.u32(crate::store::VERSION)?;
+        // Spec fingerprint: a snapshot only ever restores into an engine
+        // of identical geometry.
+        w.usize(spec.layers)?;
+        w.usize(spec.q_heads)?;
+        w.usize(spec.kv_heads)?;
+        w.usize(spec.head_dim)?;
+        w.usize(spec.d_model)?;
+        w.usize(spec.vocab)?;
+        w.str(sess.method.label())?;
+        w.usize(sess.len)?;
+        w.f32s(&sess.x_last)?;
+        w.u64(sess.scanned_total)?;
+        w.u64(sess.retrievals)?;
+        w.u64(sess.drained_tokens)?;
+        w.u64(sess.drains)?;
+        w.bool(sess.had_removals)?;
+        for layer in 0..spec.layers {
+            for kvh in 0..spec.kv_heads {
+                let cache = &sess.caches[layer][kvh];
+                w.usize(cache.pattern().sink)?;
+                w.usize(cache.pattern().window)?;
+                w.matrix(cache.keys())?;
+                w.matrix(cache.values())?;
+                let (prefill_len, indexed_end, retired_end) = cache.persist_bounds();
+                w.usize(prefill_len)?;
+                w.usize(indexed_end)?;
+                w.usize(retired_end)?;
+            }
+        }
+        for layer in 0..spec.layers {
+            for h in 0..spec.q_heads {
+                w.matrix(&sess.q_history[layer][h])?;
+            }
+        }
+        for layer in 0..spec.layers {
+            for h in 0..spec.q_heads {
+                w.matrix(&sess.recent_q[layer][h])?;
+            }
+        }
+        for layer in 0..spec.layers {
+            for kvh in 0..spec.kv_heads {
+                crate::store::save_group(&mut w, &sess.groups[layer][kvh])?;
+            }
+        }
+        // Heads persist structurally when every one of them can (the four
+        // index families, Full, StreamingLLM); otherwise the snapshot
+        // records KV + groups only and restore rebuilds the retrievers —
+        // still no re-prefill, just the (cheap) fixed-set build.
+        let all_saved = sess
+            .retrievers
+            .iter()
+            .all(|layer| layer.iter().all(|r| r.supports_save()));
+        w.bool(all_saved)?;
+        if all_saved {
+            for layer in 0..spec.layers {
+                for h in 0..spec.q_heads {
+                    sess.retrievers[layer][h].save_state(&mut w)?;
+                }
+            }
+        }
+        Ok(w.bytes_written())
+    }
+
+    /// Rebuild a session from a snapshot stream: the exact inverse of
+    /// [`Engine::snapshot_session`]. The restored session decodes its
+    /// next token with zero re-prefill and zero index-rebuild work (its
+    /// maintenance stats start at zero and stay there until real drains
+    /// happen), and its searches are bit-identical to the source's.
+    pub fn restore_session(&self, input: &mut dyn std::io::Read) -> Result<Session> {
+        let spec = self.spec().clone();
+        let mut r = crate::store::codec::SnapReader::new(input);
+        let mut magic = [0u8; 4];
+        r.raw(&mut magic)?;
+        anyhow::ensure!(&magic == crate::store::MAGIC, "not a session snapshot");
+        let version = r.u32()?;
+        anyhow::ensure!(
+            version == crate::store::VERSION,
+            "snapshot format v{version} != supported v{} (version policy: refuse, re-prefill)",
+            crate::store::VERSION
+        );
+        for (name, want) in [
+            ("layers", spec.layers),
+            ("q_heads", spec.q_heads),
+            ("kv_heads", spec.kv_heads),
+            ("head_dim", spec.head_dim),
+            ("d_model", spec.d_model),
+            ("vocab", spec.vocab),
+        ] {
+            let got = r.usize()?;
+            anyhow::ensure!(got == want, "snapshot {name} {got} != engine {want}");
+        }
+        let method_label = r.str()?;
+        let method = Method::parse(&method_label)
+            .ok_or_else(|| anyhow::anyhow!("unknown method `{method_label}` in snapshot"))?;
+        let len = r.usize()?;
+        let x_last = r.f32s()?;
+        anyhow::ensure!(x_last.len() == spec.d_model, "snapshot hidden-state width mismatch");
+        let scanned_total = r.u64()?;
+        let retrievals = r.u64()?;
+        let drained_tokens = r.u64()?;
+        let drains = r.u64()?;
+        let had_removals = r.bool()?;
+        let mut caches: Vec<Vec<TieredKvCache>> = Vec::with_capacity(spec.layers);
+        for _ in 0..spec.layers {
+            let mut layer = Vec::with_capacity(spec.kv_heads);
+            for _ in 0..spec.kv_heads {
+                let pattern = StaticPattern { sink: r.usize()?, window: r.usize()? };
+                let keys = r.matrix()?;
+                let values = r.matrix()?;
+                let bounds = (r.usize()?, r.usize()?, r.usize()?);
+                anyhow::ensure!(keys.cols() == spec.head_dim, "snapshot KV head-dim mismatch");
+                layer.push(TieredKvCache::from_parts(pattern, keys, values, bounds));
+            }
+            caches.push(layer);
+        }
+        let mut q_history: Vec<Vec<Matrix>> = Vec::with_capacity(spec.layers);
+        for _ in 0..spec.layers {
+            let mut layer = Vec::with_capacity(spec.q_heads);
+            for _ in 0..spec.q_heads {
+                layer.push(r.matrix()?);
+            }
+            q_history.push(layer);
+        }
+        let mut recent_q: Vec<Vec<Matrix>> = Vec::with_capacity(spec.layers);
+        for _ in 0..spec.layers {
+            let mut layer = Vec::with_capacity(spec.q_heads);
+            for _ in 0..spec.q_heads {
+                layer.push(r.matrix()?);
+            }
+            recent_q.push(layer);
+        }
+        let mut groups: Vec<Vec<Arc<GroupShared>>> = Vec::with_capacity(spec.layers);
+        for _ in 0..spec.layers {
+            let mut layer = Vec::with_capacity(spec.kv_heads);
+            for _ in 0..spec.kv_heads {
+                layer.push(crate::store::load_group(&mut r)?);
+            }
+            groups.push(layer);
+        }
+        let group_size = spec.group_size();
+        let (retrievers, groups) = if r.bool()? {
+            let mut retrievers: Vec<Vec<Arc<dyn HostRetriever>>> =
+                Vec::with_capacity(spec.layers);
+            for layer in 0..spec.layers {
+                let mut heads: Vec<Arc<dyn HostRetriever>> = Vec::with_capacity(spec.q_heads);
+                for h in 0..spec.q_heads {
+                    let group = groups[layer][h / group_size].clone();
+                    heads.push(Arc::from(crate::baselines::restore_retriever(&mut r, group)?));
+                }
+                retrievers.push(heads);
+            }
+            (retrievers, groups)
+        } else {
+            // Heads were not persisted (a non-persistable baseline is in
+            // the mix): rebuild them from the restored caches/queries.
+            // Still no re-prefill — only the retriever construction.
+            self.build_retrievers_with(&caches, &q_history, method)?
+        };
+        Ok(Session {
+            method,
+            caches,
+            q_history,
+            retrievers,
+            groups,
+            maint: MaintenanceState::new(),
+            recent_q,
+            host_ids: Vec::new(),
+            x_last,
+            len,
+            scanned_total,
+            retrievals,
+            drained_tokens,
+            drains,
+            had_removals,
+        })
+    }
+
     /// Build a session for `method` from an existing prefill state —
     /// re-runs only the retriever construction (index build), sharing the
     /// expensive prefill across methods in the accuracy experiments.
@@ -1059,19 +1283,57 @@ impl Engine {
         Ok(sess)
     }
 
-    /// Fork a live session into an independent continuation: the KV state
-    /// is cloned and fresh retrievers/indexes are built over its indexed
-    /// tier (shared mutable index state across sessions would let one
-    /// fork's drains corrupt the other's dense-id mapping). Pending
-    /// maintenance on the base is flushed first so the fork can't lose
-    /// in-flight drains.
+    /// Fork a live session into an independent continuation, copy-on-write
+    /// (the PR-2 "cheap forks" follow-up, built on the persistence
+    /// machinery's structural-sharing discipline): each GQA group is
+    /// forked by sharing the segmented store's chunks and the immutable id
+    /// map by `Arc` ([`GroupShared::fork`]), and each index-backed head
+    /// shares the base's published front `Arc` outright — **nothing is
+    /// copied at fork time**; the first maintenance op on either side
+    /// clones before mutating (`IndexRetriever::apply` only ever writes to
+    /// exclusively-owned buffers). The fork keeps the base's store
+    /// generation, so its fronts pair with its maps exactly as the base's
+    /// did. Heads that cannot fork cheaply (the fixed-set baselines with
+    /// interior build state) fall back to the old full retriever rebuild.
+    /// Pending maintenance on the base is flushed first so the fork can't
+    /// lose in-flight drains.
     pub fn fork_session(&self, base: &mut Session) -> Result<Session> {
         base.flush_maintenance();
         let mut sess = base.fork_state();
-        let (retrievers, groups) =
-            self.build_retrievers_with(&sess.caches, &sess.q_history, base.method)?;
-        sess.retrievers = retrievers;
-        sess.groups = groups;
+        let spec = self.spec();
+        let group_size = spec.group_size();
+        let mut groups: Vec<Vec<Arc<GroupShared>>> = Vec::with_capacity(spec.layers);
+        let mut retrievers: Vec<Vec<Arc<dyn HostRetriever>>> = Vec::with_capacity(spec.layers);
+        let mut cow_ok = base.retrievers.len() == spec.layers && base.groups.len() == spec.layers;
+        'layers: for layer in 0..spec.layers {
+            if !cow_ok {
+                break;
+            }
+            let shared: Vec<Arc<GroupShared>> =
+                base.groups[layer].iter().map(|g| g.fork()).collect();
+            let mut heads: Vec<Arc<dyn HostRetriever>> = Vec::with_capacity(spec.q_heads);
+            for h in 0..spec.q_heads {
+                match base.retrievers[layer][h].fork_with_group(shared[h / group_size].clone())
+                {
+                    Some(r) => heads.push(Arc::from(r)),
+                    None => {
+                        cow_ok = false;
+                        break 'layers;
+                    }
+                }
+            }
+            groups.push(shared);
+            retrievers.push(heads);
+        }
+        if cow_ok {
+            sess.retrievers = retrievers;
+            sess.groups = groups;
+        } else {
+            let (retrievers, groups) =
+                self.build_retrievers_with(&sess.caches, &sess.q_history, base.method)?;
+            sess.retrievers = retrievers;
+            sess.groups = groups;
+        }
         Ok(sess)
     }
 

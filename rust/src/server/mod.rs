@@ -4,16 +4,27 @@
 //!
 //! ```text
 //! → {"prompt": [1,2,3], "max_tokens": 8}
+//! → {"prompt": [1,2,3], "max_tokens": 8, "session": "open", "session_id": 7}
+//! → {"prompt": [4,5],   "max_tokens": 8, "session": "continue", "session_id": 7}
+//! → {"session": "close", "session_id": 7}
 //! ← {"event": "token", "id": 1, "token": 42}          (streamed)
 //! ← {"event": "done", "id": 1, "tokens": [...], "ttft_s": ..., "tpot_s": ...}
 //! ← {"event": "error", "id": 1, "message": "..."}
 //! ```
 //!
+//! Session verbs drive the multi-turn registry: `open` retains the
+//! finished session under `session_id`; `continue` resumes it (resident
+//! in RAM or parked on disk — either way **without re-prefill and without
+//! index rebuild**) and extends it with the new prompt tokens; `close`
+//! drops it. The done event reports the resume provenance
+//! (`resumed_from_disk`, `resume_s`, `snapshot_bytes`) and the replica's
+//! cumulative park/resume counters.
+//!
 //! Implemented on std::net + threads (the vendored crate set has no async
 //! runtime); one handler thread per connection, which is plenty for the
 //! single-digit-replica deployments this repo targets.
 
-use crate::coordinator::{router::Router, Event, Request};
+use crate::coordinator::{router::Router, Event, Request, SessionMode, SessionSpec};
 use crate::util::json::{self, Value};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -98,15 +109,31 @@ fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
 
 fn parse_request(line: &str, id: u64) -> Result<Request> {
     let v = json::parse(line)?;
-    let prompt = v
-        .get("prompt")
-        .and_then(Value::as_arr)
-        .context("missing prompt array")?
-        .iter()
-        .map(|t| t.as_usize().map(|x| x as u32).context("non-numeric token"))
-        .collect::<Result<Vec<u32>>>()?;
-    let max_tokens = v.get("max_tokens").and_then(Value::as_usize).unwrap_or(16);
-    Ok(Request { id, prompt, max_tokens })
+    let session = match v.get("session").and_then(Value::as_str) {
+        None => None,
+        Some(verb) => {
+            let mode = SessionMode::parse(verb)
+                .ok_or_else(|| anyhow::anyhow!("unknown session verb `{verb}`"))?;
+            let session_id = v
+                .get("session_id")
+                .and_then(Value::as_u64)
+                .context("session verb requires a numeric session_id")?;
+            Some(SessionSpec { session_id, mode })
+        }
+    };
+    let close = matches!(session, Some(SessionSpec { mode: SessionMode::Close, .. }));
+    let prompt = match v.get("prompt").and_then(Value::as_arr) {
+        Some(arr) => arr
+            .iter()
+            .map(|t| t.as_usize().map(|x| x as u32).context("non-numeric token"))
+            .collect::<Result<Vec<u32>>>()?,
+        // `close` is a registry operation: no prompt to decode.
+        None if close => Vec::new(),
+        None => anyhow::bail!("missing prompt array"),
+    };
+    let max_tokens =
+        v.get("max_tokens").and_then(Value::as_usize).unwrap_or(if close { 0 } else { 16 });
+    Ok(Request { id, prompt, max_tokens, session })
 }
 
 fn stream_events(
@@ -141,7 +168,12 @@ fn stream_events(
                     .set("maint_swaps", m.maint_swaps)
                     .set("maint_swap_s_mean", m.maint_swap_s_mean)
                     .set("maint_queue_peak", m.maint_queue_peak)
-                    .set("tombstone_ratio", m.tombstone_ratio);
+                    .set("tombstone_ratio", m.tombstone_ratio)
+                    .set("resumed_from_disk", m.resumed_from_disk)
+                    .set("resume_s", m.resume_s)
+                    .set("snapshot_bytes", m.snapshot_bytes)
+                    .set("session_parks", m.session_parks)
+                    .set("session_resumes", m.session_resumes);
                 writeln!(out, "{}", o.to_string())?;
                 return Ok(());
             }
@@ -179,7 +211,50 @@ impl Client {
         let mut o = Value::obj();
         o.set("prompt", prompt.iter().map(|&t| t as usize).collect::<Vec<usize>>())
             .set("max_tokens", max_tokens);
-        writeln!(self.writer, "{}", o.to_string())?;
+        self.roundtrip(o)
+    }
+
+    /// First turn of a multi-turn session: prefill + generate, then the
+    /// server retains the session under `session_id`.
+    pub fn open_session(
+        &mut self,
+        session_id: u64,
+        prompt: &[u32],
+        max_tokens: usize,
+    ) -> Result<(Vec<u32>, Value)> {
+        let mut o = Value::obj();
+        o.set("prompt", prompt.iter().map(|&t| t as usize).collect::<Vec<usize>>())
+            .set("max_tokens", max_tokens)
+            .set("session", "open")
+            .set("session_id", session_id);
+        self.roundtrip(o)
+    }
+
+    /// Later turn: the server resumes the retained session (resident or
+    /// parked on disk) and decode-extends it with `prompt` — no prefill.
+    pub fn continue_session(
+        &mut self,
+        session_id: u64,
+        prompt: &[u32],
+        max_tokens: usize,
+    ) -> Result<(Vec<u32>, Value)> {
+        let mut o = Value::obj();
+        o.set("prompt", prompt.iter().map(|&t| t as usize).collect::<Vec<usize>>())
+            .set("max_tokens", max_tokens)
+            .set("session", "continue")
+            .set("session_id", session_id);
+        self.roundtrip(o)
+    }
+
+    /// Drop a retained session from the server's RAM and disk.
+    pub fn close_session(&mut self, session_id: u64) -> Result<Value> {
+        let mut o = Value::obj();
+        o.set("session", "close").set("session_id", session_id);
+        Ok(self.roundtrip(o)?.1)
+    }
+
+    fn roundtrip(&mut self, req: Value) -> Result<(Vec<u32>, Value)> {
+        writeln!(self.writer, "{}", req.to_string())?;
         let mut tokens = Vec::new();
         let mut line = String::new();
         loop {
@@ -220,5 +295,33 @@ mod tests {
     fn parse_request_rejects_garbage() {
         assert!(parse_request("{}", 1).is_err());
         assert!(parse_request("not json", 1).is_err());
+    }
+
+    #[test]
+    fn parse_session_verbs() {
+        let r = parse_request(
+            r#"{"prompt": [1], "max_tokens": 2, "session": "open", "session_id": 9}"#,
+            1,
+        )
+        .unwrap();
+        assert_eq!(r.session, Some(SessionSpec { session_id: 9, mode: SessionMode::Open }));
+        let r = parse_request(
+            r#"{"prompt": [2], "session": "continue", "session_id": 9}"#,
+            2,
+        )
+        .unwrap();
+        assert_eq!(r.session.unwrap().mode, SessionMode::Continue);
+        // Close needs no prompt; defaults to zero generated tokens.
+        let r = parse_request(r#"{"session": "close", "session_id": 9}"#, 3).unwrap();
+        assert_eq!(r.session.unwrap().mode, SessionMode::Close);
+        assert!(r.prompt.is_empty());
+        assert_eq!(r.max_tokens, 0);
+        // Verb without id, and unknown verbs, are rejected.
+        assert!(parse_request(r#"{"prompt": [1], "session": "open"}"#, 4).is_err());
+        assert!(
+            parse_request(r#"{"prompt": [1], "session": "fork", "session_id": 1}"#, 5).is_err()
+        );
+        // A non-session request without a prompt is still rejected.
+        assert!(parse_request(r#"{"max_tokens": 4}"#, 6).is_err());
     }
 }

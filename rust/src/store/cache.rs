@@ -1,0 +1,287 @@
+//! The disk-spilling multi-turn session cache: the storage half of the
+//! coordinator's session registry.
+//!
+//! A finished turn's [`Session`] is inserted here instead of dropped. It
+//! stays **resident** (decode-ready, zero resume cost) until the RAM
+//! budget (`serving.session_cache.max_resident_bytes`) overflows, at which
+//! point the least-recently-used session is **parked**: snapshotted to
+//! `spill_dir` through the versioned format and freed from RAM. The next
+//! turn resumes it transparently — resident hit, disk restore, or a
+//! definitive miss. When parking would exceed `max_disk_bytes` the insert
+//! fails with backpressure instead of silently dropping state: the caller
+//! rejects the request, exactly like the admission queue rejects past
+//! `max_queue`.
+//!
+//! Lifecycle of a session id through this cache:
+//!
+//! ```text
+//! active (decoding) → resident (RAM, LRU) → parked (disk) → resumed ↺
+//!                                   └────────── closed / evicted ──┘
+//! ```
+//!
+//! One cache per replica worker: sessions never cross replica boundaries
+//! (the router pins a session id to its replica), so no locking is needed
+//! — the worker thread owns the whole registry.
+
+use crate::config::SessionCacheConfig;
+use crate::model::{Engine, Session};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Cumulative registry counters, surfaced through the done event.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionCacheStats {
+    /// Sessions parked to disk (LRU spills).
+    pub parks: u64,
+    /// Sessions resumed from disk.
+    pub resumes: u64,
+    /// Total snapshot bytes written across all parks.
+    pub park_bytes_total: u64,
+    /// Inserts refused because the disk budget was exhausted.
+    pub backpressure_rejects: u64,
+}
+
+struct Resident {
+    sess: Session,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Parked {
+    path: PathBuf,
+    bytes: u64,
+}
+
+/// A session handed back for its next turn.
+pub struct ResumedSession {
+    pub sess: Session,
+    /// True when the session was parked and came back through a snapshot.
+    pub from_disk: bool,
+    /// Wall-clock of the disk restore (0 for resident hits).
+    pub resume_s: f64,
+    /// On-disk snapshot size the session was restored from (0 for
+    /// resident hits).
+    pub snapshot_bytes: u64,
+}
+
+/// The per-replica session registry storage (see module docs).
+pub struct SessionCache {
+    cfg: SessionCacheConfig,
+    spill_dir: PathBuf,
+    resident: HashMap<u64, Resident>,
+    parked: HashMap<u64, Parked>,
+    disk_bytes: u64,
+    clock: u64,
+    pub stats: SessionCacheStats,
+}
+
+impl SessionCache {
+    pub fn new(cfg: SessionCacheConfig) -> SessionCache {
+        let spill_dir = if cfg.spill_dir.is_empty() {
+            // Per-instance default: two replicas of one process must not
+            // collide on `session-<id>.ras` names (the router pins ids to
+            // replicas, but nothing forces distinct configured dirs).
+            static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+            let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            std::env::temp_dir().join(format!("ra-sessions-{}-{seq}", std::process::id()))
+        } else {
+            PathBuf::from(&cfg.spill_dir)
+        };
+        SessionCache {
+            cfg,
+            spill_dir,
+            resident: HashMap::new(),
+            parked: HashMap::new(),
+            disk_bytes: 0,
+            clock: 0,
+            stats: SessionCacheStats::default(),
+        }
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn parked_count(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Bytes currently parked on disk.
+    pub fn disk_bytes(&self) -> u64 {
+        self.disk_bytes
+    }
+
+    /// Whether a session id is known (resident or parked).
+    pub fn contains(&self, id: u64) -> bool {
+        self.resident.contains_key(&id) || self.parked.contains_key(&id)
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.resident.values().map(|e| e.bytes).sum()
+    }
+
+    /// Retain a finished turn's session for the next one, then LRU-park
+    /// anything past the RAM budget. A re-inserted id supersedes its
+    /// previous state (the turn that just finished IS the session now).
+    /// Errors mean backpressure: the disk budget is exhausted and the
+    /// registry refused to grow — the caller should reject the request.
+    /// On error the NEW session is dropped (it was never promised to the
+    /// client — its request fails) so the resident set cannot creep past
+    /// the budget one rejected session at a time; previously-retained
+    /// sessions are never sacrificed to admit a new one.
+    pub fn insert(&mut self, engine: &Engine, id: u64, sess: Session) -> Result<()> {
+        self.drop_parked(id);
+        self.clock += 1;
+        let bytes = sess.state_bytes();
+        self.resident.insert(id, Resident { sess, bytes, last_used: self.clock });
+        let spilled = self.spill_over_budget(engine);
+        if spilled.is_err() {
+            self.resident.remove(&id);
+        }
+        spilled
+    }
+
+    fn spill_over_budget(&mut self, engine: &Engine) -> Result<()> {
+        while self.resident_bytes() > self.cfg.max_resident_bytes && !self.resident.is_empty() {
+            let victim = self
+                .resident
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&id, _)| id)
+                .expect("non-empty resident set");
+            self.park(engine, victim)?;
+        }
+        Ok(())
+    }
+
+    /// Park one resident session to disk via the snapshot format.
+    fn park(&mut self, engine: &Engine, id: u64) -> Result<u64> {
+        let mut entry = self.resident.remove(&id).context("park: unknown session")?;
+        // Estimate-based pre-check: when the budget is already exhausted,
+        // reject before serializing anything — a full snapshot write that
+        // is then deleted would transiently overshoot the disk budget (the
+        // very thing it bounds) and repeat that waste on every later turn.
+        // `state_bytes` tracks the snapshot size to within its index/KV
+        // accounting, so the exact post-write check below rarely fires.
+        if self.disk_bytes.saturating_add(entry.bytes as u64) > self.cfg.max_disk_bytes as u64 {
+            let est = entry.bytes;
+            self.resident.insert(id, entry);
+            self.stats.backpressure_rejects += 1;
+            bail!(
+                "session cache disk budget exhausted (backpressure): {} + ~{est} > {} bytes",
+                self.disk_bytes,
+                self.cfg.max_disk_bytes
+            );
+        }
+        std::fs::create_dir_all(&self.spill_dir)
+            .with_context(|| format!("create spill dir {}", self.spill_dir.display()))?;
+        let path = self.spill_dir.join(format!("session-{id}.ras"));
+        let file = std::fs::File::create(&path)
+            .with_context(|| format!("create spill file {}", path.display()))?;
+        let mut buf = std::io::BufWriter::new(file);
+        // A failed write (disk genuinely full, I/O error) must never lose
+        // the session: put it back resident and surface the error.
+        let written = engine
+            .snapshot_session(&mut entry.sess, &mut buf)
+            .and_then(|b| buf.flush().context("flush spill file").map(|()| b));
+        let bytes = match written {
+            Ok(b) => b,
+            Err(e) => {
+                std::fs::remove_file(&path).ok();
+                self.resident.insert(id, entry);
+                self.stats.backpressure_rejects += 1;
+                return Err(e);
+            }
+        };
+        drop(buf);
+        if self.disk_bytes.saturating_add(bytes) > self.cfg.max_disk_bytes as u64 {
+            // Backpressure: undo the write, keep the session resident, and
+            // surface the rejection — never silently lose session state.
+            std::fs::remove_file(&path).ok();
+            self.resident.insert(id, entry);
+            self.stats.backpressure_rejects += 1;
+            bail!(
+                "session cache disk budget exhausted (backpressure): {} + {bytes} > {} bytes",
+                self.disk_bytes,
+                self.cfg.max_disk_bytes
+            );
+        }
+        self.parked.insert(id, Parked { path, bytes });
+        self.disk_bytes += bytes;
+        self.stats.parks += 1;
+        self.stats.park_bytes_total += bytes;
+        Ok(bytes)
+    }
+
+    /// Hand a session back for its next turn: resident hit (free), disk
+    /// resume (snapshot restore, no re-prefill, no index rebuild), or
+    /// `None` for an unknown id.
+    pub fn take(&mut self, engine: &Engine, id: u64) -> Result<Option<ResumedSession>> {
+        self.clock += 1;
+        if let Some(e) = self.resident.remove(&id) {
+            return Ok(Some(ResumedSession {
+                sess: e.sess,
+                from_disk: false,
+                resume_s: 0.0,
+                snapshot_bytes: 0,
+            }));
+        }
+        // Leave the parked entry in place until the restore SUCCEEDS: a
+        // transient open/read failure must not orphan the spill file,
+        // leak its disk_bytes accounting, or destroy a session whose
+        // snapshot is intact (the caller can simply retry the turn).
+        let Some(p) = self.parked.get(&id) else {
+            return Ok(None);
+        };
+        let (path, bytes) = (p.path.clone(), p.bytes);
+        let t = Instant::now();
+        let file = std::fs::File::open(&path)
+            .with_context(|| format!("open spill file {}", path.display()))?;
+        let mut buf = std::io::BufReader::new(file);
+        let sess = engine.restore_session(&mut buf)?;
+        self.parked.remove(&id);
+        std::fs::remove_file(&path).ok();
+        self.disk_bytes = self.disk_bytes.saturating_sub(bytes);
+        self.stats.resumes += 1;
+        Ok(Some(ResumedSession {
+            sess,
+            from_disk: true,
+            resume_s: t.elapsed().as_secs_f64(),
+            snapshot_bytes: bytes,
+        }))
+    }
+
+    /// Close a session (the explicit `close` verb): drop it from RAM and
+    /// disk. Returns whether the id was known.
+    pub fn close(&mut self, id: u64) -> bool {
+        let was_resident = self.resident.remove(&id).is_some();
+        let was_parked = self.drop_parked(id);
+        was_resident || was_parked
+    }
+
+    fn drop_parked(&mut self, id: u64) -> bool {
+        if let Some(p) = self.parked.remove(&id) {
+            std::fs::remove_file(&p.path).ok();
+            self.disk_bytes = self.disk_bytes.saturating_sub(p.bytes);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl Drop for SessionCache {
+    fn drop(&mut self) {
+        // Best-effort hygiene: spill files are per-process scratch, not a
+        // restart-recovery log (that is a named ROADMAP follow-up), so a
+        // dying replica cleans its own litter.
+        let ids: Vec<u64> = self.parked.keys().copied().collect();
+        for id in ids {
+            self.drop_parked(id);
+        }
+        std::fs::remove_dir(&self.spill_dir).ok();
+    }
+}

@@ -1,0 +1,315 @@
+//! The snapshot wire codec: little-endian, length-prefixed primitives.
+//!
+//! Everything the persistence subsystem writes goes through these two
+//! types, so the on-disk format has exactly one definition. The codec is
+//! deliberately dumb — fixed-width little-endian integers, `u64` length
+//! prefixes, raw f32 payloads — because the snapshot's value is in *what*
+//! is serialized (a replay-free structural image of the session), not in
+//! clever encoding. Corruption is detected by the magic/version header and
+//! by per-field sanity limits at the call sites, never by trusting a
+//! length prefix to allocate unbounded memory: [`SnapReader::u32s`] and
+//! friends cap a single vector at [`MAX_VEC_LEN`] elements.
+
+use crate::tensor::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Upper bound on a single length-prefixed vector (1G elements): a
+/// corrupted prefix fails loudly instead of attempting a huge allocation.
+pub const MAX_VEC_LEN: u64 = 1 << 30;
+
+/// Elements per stack-buffered encode/decode chunk (16 KB of bytes).
+const CHUNK_ELEMS: usize = 4096;
+
+/// Byte-counting writer over any `io::Write` sink.
+pub struct SnapWriter<'a> {
+    w: &'a mut dyn Write,
+    bytes: u64,
+}
+
+impl<'a> SnapWriter<'a> {
+    pub fn new(w: &'a mut dyn Write) -> SnapWriter<'a> {
+        SnapWriter { w, bytes: 0 }
+    }
+
+    /// Bytes written so far (the done-event's `snapshot_bytes`).
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn raw(&mut self, data: &[u8]) -> Result<()> {
+        self.w.write_all(data).context("snapshot write")?;
+        self.bytes += data.len() as u64;
+        Ok(())
+    }
+
+    pub fn u8(&mut self, v: u8) -> Result<()> {
+        self.raw(&[v])
+    }
+
+    pub fn bool(&mut self, v: bool) -> Result<()> {
+        self.u8(v as u8)
+    }
+
+    pub fn u32(&mut self, v: u32) -> Result<()> {
+        self.raw(&v.to_le_bytes())
+    }
+
+    pub fn u64(&mut self, v: u64) -> Result<()> {
+        self.raw(&v.to_le_bytes())
+    }
+
+    pub fn usize(&mut self, v: usize) -> Result<()> {
+        self.u64(v as u64)
+    }
+
+    pub fn f32(&mut self, v: f32) -> Result<()> {
+        self.raw(&v.to_le_bytes())
+    }
+
+    pub fn f64(&mut self, v: f64) -> Result<()> {
+        self.raw(&v.to_le_bytes())
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) -> Result<()> {
+        self.u64(s.len() as u64)?;
+        self.raw(s.as_bytes())
+    }
+
+    /// Length-prefixed `u32` vector. Encoded through a fixed stack chunk,
+    /// not a full intermediate copy: a 128K-row store payload would
+    /// otherwise allocate its own size over again per matrix while
+    /// parking, on the serving worker thread.
+    pub fn u32s(&mut self, v: &[u32]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        let mut buf = [0u8; CHUNK_ELEMS * 4];
+        for chunk in v.chunks(CHUNK_ELEMS) {
+            let mut n = 0;
+            for &x in chunk {
+                buf[n..n + 4].copy_from_slice(&x.to_le_bytes());
+                n += 4;
+            }
+            self.raw(&buf[..n])?;
+        }
+        Ok(())
+    }
+
+    /// Length-prefixed byte vector (tombstone bitsets, node levels).
+    pub fn bytes(&mut self, v: &[u8]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        self.raw(v)
+    }
+
+    /// Length-prefixed `f32` vector (chunked like [`SnapWriter::u32s`]).
+    pub fn f32s(&mut self, v: &[f32]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        let mut buf = [0u8; CHUNK_ELEMS * 4];
+        for chunk in v.chunks(CHUNK_ELEMS) {
+            let mut n = 0;
+            for &x in chunk {
+                buf[n..n + 4].copy_from_slice(&x.to_le_bytes());
+                n += 4;
+            }
+            self.raw(&buf[..n])?;
+        }
+        Ok(())
+    }
+
+    /// Row-major matrix: rows, cols, then the f32 payload.
+    pub fn matrix(&mut self, m: &Matrix) -> Result<()> {
+        self.u64(m.rows() as u64)?;
+        self.u64(m.cols() as u64)?;
+        self.f32s(m.as_slice())
+    }
+}
+
+/// Checked reader over any `io::Read` source.
+pub struct SnapReader<'a> {
+    r: &'a mut dyn Read,
+}
+
+impl<'a> SnapReader<'a> {
+    pub fn new(r: &'a mut dyn Read) -> SnapReader<'a> {
+        SnapReader { r }
+    }
+
+    pub fn raw(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.r.read_exact(buf).context("snapshot read (truncated?)")
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.raw(&mut b)?;
+        Ok(b[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.raw(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.raw(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        let mut b = [0u8; 4];
+        self.raw(&mut b)?;
+        Ok(f32::from_le_bytes(b))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.raw(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+
+    fn checked_len(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        if n > MAX_VEC_LEN {
+            bail!("snapshot vector length {n} exceeds sanity bound");
+        }
+        Ok(n as usize)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.checked_len()?;
+        let mut buf = vec![0u8; n];
+        self.raw(&mut buf)?;
+        String::from_utf8(buf).context("snapshot string is not UTF-8")
+    }
+
+    /// Decoded through a fixed stack chunk: no transient byte buffer the
+    /// size of the payload (mirrors [`SnapWriter::u32s`]).
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.checked_len()?;
+        // Capacity capped: a corrupted length should fail on the first
+        // short read, not commit a giant allocation up front.
+        let mut out = Vec::with_capacity(n.min(1 << 22));
+        let mut buf = [0u8; CHUNK_ELEMS * 4];
+        let mut remaining = n;
+        while remaining > 0 {
+            let take = remaining.min(CHUNK_ELEMS);
+            self.raw(&mut buf[..take * 4])?;
+            out.extend(
+                buf[..take * 4]
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+            );
+            remaining -= take;
+        }
+        Ok(out)
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.checked_len()?;
+        let mut buf = vec![0u8; n];
+        self.raw(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Decoded through a fixed stack chunk (see [`SnapReader::u32s`]).
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.checked_len()?;
+        // Capacity capped: a corrupted length should fail on the first
+        // short read, not commit a giant allocation up front.
+        let mut out = Vec::with_capacity(n.min(1 << 22));
+        let mut buf = [0u8; CHUNK_ELEMS * 4];
+        let mut remaining = n;
+        while remaining > 0 {
+            let take = remaining.min(CHUNK_ELEMS);
+            self.raw(&mut buf[..take * 4])?;
+            out.extend(
+                buf[..take * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+            );
+            remaining -= take;
+        }
+        Ok(out)
+    }
+
+    pub fn matrix(&mut self) -> Result<Matrix> {
+        let rows = self.usize()?;
+        let cols = self.usize()?;
+        let data = self.f32s()?;
+        if data.len() != rows * cols {
+            bail!("snapshot matrix payload {} != {rows}x{cols}", data.len());
+        }
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut w = SnapWriter::new(&mut buf);
+            w.u8(7).unwrap();
+            w.bool(true).unwrap();
+            w.u32(0xDEADBEEF).unwrap();
+            w.u64(u64::MAX - 3).unwrap();
+            w.f32(-1.5).unwrap();
+            w.f64(std::f64::consts::PI).unwrap();
+            w.str("snapshot").unwrap();
+            w.u32s(&[1, 2, 3]).unwrap();
+            w.bytes(&[9, 8]).unwrap();
+            w.f32s(&[0.25, -0.5]).unwrap();
+            w.matrix(&Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])).unwrap();
+            assert_eq!(w.bytes_written(), buf.len() as u64);
+        }
+        let mut src = buf.as_slice();
+        let mut r = SnapReader::new(&mut src);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.str().unwrap(), "snapshot");
+        assert_eq!(r.u32s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.bytes().unwrap(), vec![9, 8]);
+        assert_eq!(r.f32s().unwrap(), vec![0.25, -0.5]);
+        let m = r.matrix().unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut w = SnapWriter::new(&mut buf);
+            w.u32s(&[1, 2, 3, 4]).unwrap();
+        }
+        buf.truncate(buf.len() - 2);
+        let mut src = buf.as_slice();
+        let mut r = SnapReader::new(&mut src);
+        assert!(r.u32s().is_err());
+        // Absurd length prefixes are rejected before allocation.
+        let mut bogus: Vec<u8> = Vec::new();
+        {
+            let mut w = SnapWriter::new(&mut bogus);
+            w.u64(u64::MAX).unwrap();
+        }
+        let mut src = bogus.as_slice();
+        let mut r = SnapReader::new(&mut src);
+        assert!(r.u32s().is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! The session persistence subsystem: versioned binary snapshots of a
+//! session's host state, and the disk-spilling multi-turn session cache
+//! built on top of them.
+//!
+//! RetrievalAttention's premise is that the KV state worth keeping is too
+//! big for the GPU, so it lives in CPU memory behind ANN indexes — but at
+//! serving scale CPU RAM is just the next tier to overflow, and a session
+//! that cannot outlive its request re-pays the full prefill *and* the full
+//! index build on every chat turn. This module is the storage-engine layer
+//! (RetroInfer's "the KV cache is a vector storage engine", taken across
+//! the request boundary):
+//!
+//! * [`codec`] — the little-endian snapshot wire codec.
+//! * Snapshot format — [`Engine::snapshot_session`] /
+//!   [`Engine::restore_session`] (in `model::engine`) write/read a
+//!   **replay-free structural image**: maintenance is flushed first so the
+//!   image is single-generation — `SegmentedStore` chunks (mirrors rebuilt
+//!   deterministically from the quant mode), per-GQA-group dense→absolute
+//!   id maps with their store generations, and all four index families
+//!   serialized structurally (flat/IVF id+vector lists, HNSW adjacency +
+//!   level-draw RNG stream, RoarGraph CSR + patch/extra overlays). A
+//!   restored session therefore answers its next decode step with zero
+//!   re-prefill and zero index-rebuild work, and its searches are
+//!   bit-identical to the source session's.
+//! * [`cache`] — the coordinator-level session registry's storage half:
+//!   finished sessions stay resident up to `serving.session_cache.
+//!   max_resident_bytes`, LRU-park to `spill_dir` through the snapshot
+//!   format, resume transparently on the next turn, and reject with
+//!   backpressure when `max_disk_bytes` is exhausted.
+//!
+//! ## Format version policy
+//!
+//! Every snapshot opens with [`MAGIC`] + [`VERSION`]. The version bumps on
+//! ANY layout change; readers refuse mismatched versions outright (a
+//! parked session from another build re-pays its prefill rather than risk
+//! a silently-misparsed index). Family and retriever tags are append-only:
+//! tags are never reused or renumbered within a version.
+//!
+//! [`Engine::snapshot_session`]: crate::model::Engine::snapshot_session
+//! [`Engine::restore_session`]: crate::model::Engine::restore_session
+
+pub mod cache;
+pub mod codec;
+
+pub use cache::{ResumedSession, SessionCache, SessionCacheStats};
+
+use crate::baselines::GroupShared;
+use crate::index::KeyStore;
+use crate::kernel::QuantMode;
+use anyhow::{bail, Result};
+use codec::{SnapReader, SnapWriter};
+use std::sync::Arc;
+
+/// Snapshot file magic ("RetrievalAttention Session Snapshot").
+pub const MAGIC: &[u8; 4] = b"RASS";
+
+/// Current snapshot format version (see the module-level version policy).
+pub const VERSION: u32 = 1;
+
+fn quant_tag(mode: QuantMode) -> u8 {
+    match mode {
+        QuantMode::Off => 0,
+        QuantMode::Fp16 => 1,
+        QuantMode::Int8 => 2,
+    }
+}
+
+fn quant_from_tag(tag: u8) -> Result<QuantMode> {
+    Ok(match tag {
+        0 => QuantMode::Off,
+        1 => QuantMode::Fp16,
+        2 => QuantMode::Int8,
+        other => bail!("unknown quant-mode tag {other} in snapshot"),
+    })
+}
+
+/// Serialize a segmented key store chunk-by-chunk: the restore preserves
+/// segment boundaries exactly, and the quantized mirrors are rebuilt
+/// deterministically from the mode ([`crate::kernel::QuantChunk::build`]
+/// is a pure function of the chunk payload), so the round trip is
+/// bit-identical including scan-tier scores.
+pub fn save_store(w: &mut SnapWriter<'_>, store: &KeyStore) -> Result<()> {
+    w.usize(store.cols())?;
+    w.u8(quant_tag(store.quant_mode()))?;
+    w.usize(store.segment_count())?;
+    for seg in store.segments() {
+        w.matrix(seg)?;
+    }
+    Ok(())
+}
+
+/// Inverse of [`save_store`].
+pub fn load_store(r: &mut SnapReader<'_>) -> Result<KeyStore> {
+    let cols = r.usize()?;
+    let quant = quant_from_tag(r.u8()?)?;
+    let n_segments = r.usize()?;
+    let mut chunks = Vec::with_capacity(n_segments);
+    for _ in 0..n_segments {
+        chunks.push(r.matrix()?);
+    }
+    Ok(KeyStore::from_chunks(cols, chunks, quant))
+}
+
+/// Serialize one GQA group's shared state: the segmented key store plus
+/// the generation-stamped dense→absolute id map. Written once per group
+/// (Appendix C's single-copy layout survives the snapshot).
+pub fn save_group(w: &mut SnapWriter<'_>, group: &GroupShared) -> Result<()> {
+    let store = group.keys();
+    let map = group.id_map();
+    save_store(w, &store)?;
+    w.u64(map.store_gen)?;
+    w.u32s(&map.ids)?;
+    Ok(())
+}
+
+/// Inverse of [`save_group`]: the restored group comes back under the
+/// saved store generation, so restored index fronts pair with it exactly.
+/// The id map may be LONGER than the store — groups whose heads never
+/// read keys (Full / StreamingLLM) grow the map on drains without
+/// growing the store — but never shorter (an index over unmapped rows
+/// would return unmappable dense ids).
+pub fn load_group(r: &mut SnapReader<'_>) -> Result<Arc<GroupShared>> {
+    let store = load_store(r)?;
+    let store_gen = r.u64()?;
+    let ids = r.u32s()?;
+    if ids.len() < store.rows() {
+        bail!(
+            "group snapshot: id map ({}) shorter than store ({} rows)",
+            ids.len(),
+            store.rows()
+        );
+    }
+    Ok(GroupShared::restore(store, ids, store_gen))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn store_roundtrip_preserves_chunks_and_mirrors() {
+        let mut rng = Rng::seed_from(3);
+        let mut store =
+            KeyStore::from_matrix(Matrix::from_fn(96, 16, |_, _| rng.normal())).with_quant(QuantMode::Int8);
+        for _ in 0..5 {
+            store = store.append_rows(Matrix::from_fn(8, 16, |_, _| rng.normal()));
+        }
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut w = SnapWriter::new(&mut buf);
+            save_store(&mut w, &store).unwrap();
+        }
+        let mut src = buf.as_slice();
+        let mut r = SnapReader::new(&mut src);
+        let back = load_store(&mut r).unwrap();
+        assert_eq!(back.rows(), store.rows());
+        assert_eq!(back.segment_count(), store.segment_count());
+        assert_eq!(back.quant_mode(), store.quant_mode());
+        assert_eq!(back.mirrored_segments(), store.mirrored_segments());
+        let q: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).sin()).collect();
+        for i in 0..store.rows() {
+            assert_eq!(back.row(i), store.row(i), "row {i} diverged");
+            assert_eq!(
+                back.score(&q, i).to_bits(),
+                store.score(&q, i).to_bits(),
+                "scan-tier score {i} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn group_roundtrip_keeps_generation_and_map() {
+        let mut rng = Rng::seed_from(9);
+        let store = KeyStore::from_matrix(Matrix::from_fn(32, 8, |_, _| rng.normal()));
+        let ids: Vec<u32> = (0..32u32).map(|i| i + 640).collect();
+        let group = GroupShared::restore(store, ids.clone(), 3);
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut w = SnapWriter::new(&mut buf);
+            save_group(&mut w, &group).unwrap();
+        }
+        let mut src = buf.as_slice();
+        let mut r = SnapReader::new(&mut src);
+        let back = load_group(&mut r).unwrap();
+        assert_eq!(back.store_generation(), 3);
+        assert_eq!(back.id_map().ids, ids);
+        assert_eq!(back.keys().rows(), 32);
+        assert_eq!(back.keys().row(7), group.keys().row(7));
+    }
+}

@@ -16,6 +16,18 @@ impl Rng {
         Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
     }
 
+    /// The raw generator state (session persistence: HNSW's level-draw
+    /// stream must survive a snapshot so post-restore inserts stay
+    /// deterministic with the never-snapshotted session).
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Resume a generator at a previously captured [`Rng::state`].
+    pub fn from_state(state: u64) -> Self {
+        Rng { state }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);

@@ -395,10 +395,11 @@ fn truncate_and_fork_across_reclaim_generation() {
     let gen = sess.groups[0][0].store_generation();
     assert!(gen > 0);
 
-    // Fork after the bump: the fork rebuilds fresh groups (generation 0)
-    // over the surviving tiers and decodes independently.
+    // Fork after the bump: the copy-on-write fork shares the base's
+    // frozen state — including its store generation, so its fronts pair
+    // with its maps exactly as the base's did — and decodes independently.
     let mut fork = eng.fork_session(&mut sess).unwrap();
-    assert_eq!(fork.groups[0][0].store_generation(), 0);
+    assert_eq!(fork.groups[0][0].store_generation(), gen);
     assert_eq!(fork.len, sess.len);
     let out = eng.decode_step(&mut fork, 5).unwrap();
     assert!((out.token as usize) < eng.spec().vocab);

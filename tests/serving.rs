@@ -27,7 +27,7 @@ fn replica_serves_one_request() {
     let replica = Replica::spawn(cfg(Method::RetrievalAttention));
     let mut rng = Rng::seed_from(1);
     let s = tasks::passkey(&mut rng, 700, 0.3);
-    let rx = replica.submit(Request { id: 1, prompt: s.prompt.clone(), max_tokens: 2 });
+    let rx = replica.submit(Request { id: 1, prompt: s.prompt.clone(), max_tokens: 2, session: None });
     let (tokens, m) = collect(&rx).unwrap();
     assert_eq!(tokens.len(), 2);
     assert!(s.passed(&tokens), "wrong answer: {tokens:?} want {:?}", s.expect);
@@ -44,7 +44,7 @@ fn continuous_batching_interleaves_sessions() {
         .iter()
         .enumerate()
         .map(|(i, s)| {
-            replica.submit(Request { id: i as u64, prompt: s.prompt.clone(), max_tokens: 2 })
+            replica.submit(Request { id: i as u64, prompt: s.prompt.clone(), max_tokens: 2, session: None })
         })
         .collect();
     for (rx, s) in rxs.iter().zip(samples.iter()) {
@@ -66,6 +66,7 @@ fn router_balances_load() {
                 id: router.next_request_id(),
                 prompt: s.prompt,
                 max_tokens: 1,
+                session: None,
             })
         })
         .collect();
@@ -93,6 +94,33 @@ fn tcp_roundtrip_with_streaming() {
 }
 
 #[test]
+fn tcp_session_verbs_roundtrip() {
+    use retrieval_attention::util::json::Value;
+    let router = Arc::new(Router::spawn(cfg(Method::RetrievalAttention), 1));
+    let server = Server::start(router, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    let mut rng = Rng::seed_from(12);
+    let s = tasks::passkey(&mut rng, 500, 0.4);
+    // Turn 1: open retains the session server-side.
+    let (t1, _) = client.open_session(7, &s.prompt, 2).unwrap();
+    assert!(s.passed(&t1), "turn 1 wrong over TCP: {t1:?}");
+    // Turn 2: continue decode-extends without prefill (resident hit under
+    // the default RAM budget).
+    let (t2, done2) = client.continue_session(7, &[5, 1], 2).unwrap();
+    assert_eq!(t2.len(), 2);
+    assert_eq!(done2.get("resumed_from_disk").and_then(Value::as_bool), Some(false));
+    assert!(done2.get("resume_s").and_then(Value::as_f64).is_some());
+    // Close, then a further continue fails cleanly.
+    let closed = client.close_session(7).unwrap();
+    assert_eq!(closed.req_str("event").unwrap(), "done");
+    assert!(client.continue_session(7, &[1], 1).is_err());
+    // The connection still serves sessionless requests.
+    let s2 = tasks::passkey(&mut rng, 500, 0.8);
+    let (tokens, _) = client.generate(&s2.prompt, 2).unwrap();
+    assert!(s2.passed(&tokens));
+}
+
+#[test]
 fn vllm_like_admission_rejects_oom() {
     let mut c = cfg(Method::VllmLike);
     c.hw = "rtx4090".into(); // 24GB budget; induction weights tiny but the
@@ -102,7 +130,7 @@ fn vllm_like_admission_rejects_oom() {
     // 600-token prompt: KV fits easily (induction-mini is tiny) => succeeds.
     let mut rng = Rng::seed_from(5);
     let s = tasks::passkey(&mut rng, 600, 0.5);
-    let rx = replica.submit(Request { id: 1, prompt: s.prompt, max_tokens: 1 });
+    let rx = replica.submit(Request { id: 1, prompt: s.prompt, max_tokens: 1, session: None });
     assert!(collect(&rx).is_ok(), "small vllm-like request must be admitted");
 }
 
@@ -161,7 +189,7 @@ fn truncate_and_fork_sessions() {
 fn bad_request_fails_gracefully() {
     let replica = Replica::spawn(cfg(Method::RetrievalAttention));
     // Empty prompt must fail, not crash the worker.
-    let rx = replica.submit(Request { id: 9, prompt: vec![], max_tokens: 1 });
+    let rx = replica.submit(Request { id: 9, prompt: vec![], max_tokens: 1, session: None });
     match rx.recv().unwrap() {
         Event::Failed(id, msg) => {
             assert_eq!(id, 9);
@@ -172,7 +200,7 @@ fn bad_request_fails_gracefully() {
     // The worker must still serve subsequent requests.
     let mut rng = Rng::seed_from(6);
     let s = tasks::passkey(&mut rng, 400, 0.2);
-    let rx = replica.submit(Request { id: 10, prompt: s.prompt.clone(), max_tokens: 2 });
+    let rx = replica.submit(Request { id: 10, prompt: s.prompt.clone(), max_tokens: 2, session: None });
     let (tokens, _) = collect(&rx).unwrap();
     assert!(s.passed(&tokens));
 }

@@ -1,0 +1,87 @@
+//! Spill/resume soak: park/resume churn over many concurrent sessions.
+//!
+//! Every finished turn is forced to disk (`max_resident_bytes = 0`), so a
+//! round-robin of N sessions × M turns exercises the full
+//! active → resident → parked → resumed cycle N×M times, with the async
+//! maintenance worker ON (snapshot-time flushes race real background
+//! drains here). Run serialized (`--test-threads=1`) and timeout-guarded
+//! in CI, like the maintenance-concurrency suite.
+
+use retrieval_attention::config::{Method, ServeConfig};
+use retrieval_attention::coordinator::{collect, Replica, Request, SessionMode, SessionSpec};
+use retrieval_attention::kvcache::StaticPattern;
+use retrieval_attention::util::rng::Rng;
+use retrieval_attention::workload::tasks;
+
+#[test]
+fn park_resume_churn_over_many_sessions() {
+    let mut cfg = ServeConfig::default();
+    cfg.model = "induction-mini".into();
+    cfg.method = Method::RetrievalAttention;
+    cfg.pattern = StaticPattern { sink: 32, window: 128 };
+    cfg.retrieval.top_k = 32;
+    cfg.retrieval.ef = 64;
+    // Low watermark so the later turns' decode-extends push overflow past
+    // it: real background drains land between parks and resumes.
+    cfg.retrieval.maintenance.drain_watermark = 8;
+    cfg.serving.session_cache.max_resident_bytes = 0; // every turn parks
+    let rep = Replica::spawn(cfg);
+
+    const SESSIONS: u64 = 12;
+    const TURNS: usize = 3;
+    let mut rng = Rng::seed_from(5);
+    let samples: Vec<_> = (0..SESSIONS).map(|_| tasks::passkey(&mut rng, 400, 0.3)).collect();
+
+    let mut req_id = 0u64;
+    let mut last_metrics = None;
+    for turn in 0..TURNS {
+        // Interleave: session 0's turn 2 only runs after every session's
+        // turn 1 parked, so each resume really comes off disk.
+        for (si, s) in samples.iter().enumerate() {
+            req_id += 1;
+            let (mode, prompt) = if turn == 0 {
+                (SessionMode::Open, s.prompt.clone())
+            } else {
+                (SessionMode::Continue, vec![7 + turn as u32, 3, si as u32 % 5 + 1])
+            };
+            let rx = rep.submit(Request {
+                id: req_id,
+                prompt,
+                max_tokens: 2,
+                session: Some(SessionSpec { session_id: si as u64, mode }),
+            });
+            let (tokens, m) = collect(&rx).unwrap_or_else(|e| {
+                panic!("session {si} turn {turn} failed: {e}");
+            });
+            assert_eq!(tokens.len(), 2, "session {si} turn {turn}");
+            if turn == 0 {
+                assert!(s.passed(&tokens), "session {si}: wrong first answer {tokens:?}");
+                assert!(!m.resumed_from_disk);
+            } else {
+                assert!(m.resumed_from_disk, "session {si} turn {turn} should come off disk");
+                assert!(m.snapshot_bytes > 0);
+            }
+            last_metrics = Some(m);
+        }
+    }
+    let m = last_metrics.expect("ran turns");
+    // Every turn parked and every turn >= 2 resumed.
+    assert_eq!(m.session_parks, SESSIONS * TURNS as u64, "park churn miscounted");
+    assert_eq!(m.session_resumes, SESSIONS * (TURNS as u64 - 1), "resume churn miscounted");
+
+    // Close everything; the replica stays healthy afterwards.
+    for si in 0..SESSIONS {
+        req_id += 1;
+        let rx = rep.submit(Request {
+            id: req_id,
+            prompt: vec![],
+            max_tokens: 0,
+            session: Some(SessionSpec { session_id: si, mode: SessionMode::Close }),
+        });
+        collect(&rx).unwrap_or_else(|e| panic!("close {si} failed: {e}"));
+    }
+    let s = tasks::passkey(&mut Rng::seed_from(9), 400, 0.6);
+    let rx = rep.submit(Request { id: req_id + 1, prompt: s.prompt.clone(), max_tokens: 2, session: None });
+    let (tokens, _) = collect(&rx).unwrap();
+    assert!(s.passed(&tokens), "replica unhealthy after soak");
+}
