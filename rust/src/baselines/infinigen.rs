@@ -94,7 +94,8 @@ mod tests {
     fn build(n: usize, d: usize, seed: u64) -> (InfiniGenRetriever, KeyStore, Vec<u32>) {
         let (keys, ids, queries) = test_inputs(n, d, seed);
         let cfg = RetrievalConfig::default();
-        let inp = RetrieverInputs::from_parts(keys.clone(), ids.clone(), &queries, 0.25, &cfg, seed);
+        let inp =
+            RetrieverInputs::from_parts(keys.clone(), ids.clone(), &queries, 0.25, &cfg, seed);
         (InfiniGenRetriever::build(&inp), keys, ids)
     }
 

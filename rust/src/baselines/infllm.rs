@@ -103,7 +103,8 @@ mod tests {
     fn build(n: usize, seed: u64) -> (InfLlmRetriever, KeyStore, Vec<u32>) {
         let (keys, ids, queries) = test_inputs(n, 16, seed);
         let cfg = RetrievalConfig::default();
-        let inp = RetrieverInputs::from_parts(keys.clone(), ids.clone(), &queries, 0.25, &cfg, seed);
+        let inp =
+            RetrieverInputs::from_parts(keys.clone(), ids.clone(), &queries, 0.25, &cfg, seed);
         (InfLlmRetriever::build(&inp), keys, ids)
     }
 

@@ -45,7 +45,20 @@ use crate::index::{
 };
 use crate::tensor::Matrix;
 use crate::util::swap::Published;
-use std::sync::{Arc, Mutex};
+use crate::util::sync::{yield_now, Arc, AtomicBool, Mutex, Ordering};
+
+/// Retries of the retrieve front/map pairing loop before each voluntary
+/// yield, and spins reclaiming the spare buffer before falling back to a
+/// clone. Tiny under loom so the model checker reaches the yield and
+/// clone-fallback arms within a handful of scheduling points.
+#[cfg(not(loom))]
+const RETRIEVE_SPINS_BEFORE_YIELD: u32 = 64;
+#[cfg(loom)]
+const RETRIEVE_SPINS_BEFORE_YIELD: u32 = 1;
+#[cfg(not(loom))]
+const RECLAIM_SPINS_BEFORE_CLONE: u32 = 1_000;
+#[cfg(loom)]
+const RECLAIM_SPINS_BEFORE_CLONE: u32 = 2;
 
 /// Result of one host retrieval: *absolute* token ids + scan count.
 #[derive(Clone, Debug, Default)]
@@ -106,7 +119,14 @@ pub struct GroupShared {
     /// Reverse lookups then fall back from binary search to a one-shot
     /// hash map (where the later dense slot wins; the earlier one is
     /// already tombstoned).
-    unsorted: std::sync::atomic::AtomicBool,
+    ///
+    /// Release/Acquire, not Relaxed: the flag's `true` must not become
+    /// visible before the unsorted map publish it describes — a reader
+    /// that Acquire-loads `false` after the Release store would otherwise
+    /// binary-search a map that is no longer ascending. (The map publish
+    /// itself is also fenced by `Published`, but the flag must carry its
+    /// own edge so the pairing never depends on which load happens first.)
+    unsorted: AtomicBool,
 }
 
 impl GroupShared {
@@ -118,7 +138,7 @@ impl GroupShared {
                 cur: Arc::new(IdMap { store_gen: 0, ids }),
                 prev: None,
             }),
-            unsorted: std::sync::atomic::AtomicBool::new(false),
+            unsorted: AtomicBool::new(false),
         })
     }
 
@@ -139,7 +159,7 @@ impl GroupShared {
                 cur: Arc::new(IdMap { store_gen, ids }),
                 prev: None,
             }),
-            unsorted: std::sync::atomic::AtomicBool::new(unsorted),
+            unsorted: AtomicBool::new(unsorted),
         })
     }
 
@@ -155,9 +175,7 @@ impl GroupShared {
         Arc::new(GroupShared {
             store: Published::new(self.keys()),
             maps: Published::new(MapPair { cur: maps.cur.clone(), prev: None }),
-            unsorted: std::sync::atomic::AtomicBool::new(
-                self.unsorted.load(std::sync::atomic::Ordering::Acquire),
-            ),
+            unsorted: AtomicBool::new(self.unsorted.load(Ordering::Acquire)),
         })
     }
 
@@ -202,7 +220,7 @@ impl GroupShared {
             _ => true,
         };
         if !boundary_ok || new_ids.windows(2).any(|w| w[1] <= w[0]) {
-            self.unsorted.store(true, std::sync::atomic::Ordering::Release);
+            self.unsorted.store(true, Ordering::Release);
         }
         ids.extend_from_slice(new_ids);
         self.maps.publish(Arc::new(MapPair {
@@ -271,7 +289,7 @@ impl GroupShared {
     /// skipped.
     pub fn dense_ids_for(&self, absolute_ids: &[u32]) -> Vec<u32> {
         let ids = self.id_map();
-        if !self.unsorted.load(std::sync::atomic::Ordering::Acquire) {
+        if !self.unsorted.load(Ordering::Acquire) {
             return absolute_ids
                 .iter()
                 .filter_map(|a| ids.binary_search(a).ok().map(|d| d as u32))
@@ -792,6 +810,11 @@ impl IndexRetriever {
     /// Left/right apply: see the type docs. Serialised by the back mutex;
     /// readers are never blocked (they hold only `Arc` snapshots).
     fn apply(&self, op: IndexOp) -> bool {
+        // Poisoning is deliberately FATAL here, unlike `Published`'s
+        // recover-and-continue: a panic inside a previous apply can leave
+        // the spare/op-log pair mid-replay, and replaying a half-applied
+        // log would corrupt the index. (Readers are unaffected either way
+        // — they only touch the published front.)
         let mut back = self.back.lock().expect("back buffer poisoned");
         let mut front: FrontIndex = match back.spare.take() {
             Some(mut arc) => {
@@ -805,7 +828,7 @@ impl IndexRetriever {
                     match Arc::try_unwrap(arc) {
                         Ok(b) => break b,
                         Err(again) => {
-                            if spins >= 1_000 {
+                            if spins >= RECLAIM_SPINS_BEFORE_CLONE {
                                 break FrontIndex {
                                     index: again.index.clone_index(),
                                     store_gen: again.store_gen,
@@ -813,7 +836,7 @@ impl IndexRetriever {
                             }
                             arc = again;
                             spins += 1;
-                            std::thread::yield_now();
+                            yield_now();
                         }
                     }
                 }
@@ -856,8 +879,10 @@ impl HostRetriever for IndexRetriever {
             let front = self.front.load();
             let Some(ids) = self.group.map_for_generation(front.store_gen) else {
                 spins += 1;
-                if spins >= 64 {
-                    std::thread::yield_now();
+                if spins >= RETRIEVE_SPINS_BEFORE_YIELD {
+                    // Facade yield: under loom this is the voluntary hand-off
+                    // that lets the republishing worker run.
+                    yield_now();
                 }
                 continue;
             };
@@ -990,7 +1015,8 @@ mod tests {
         let keys = KeyStore::from_matrix(Matrix::from_fn(n, d, |_, _| rng.normal()));
         // Absolute ids offset by the sink size (host tokens start past it).
         let ids: Vec<u32> = (0..n as u32).map(|i| i + 128).collect();
-        let queries = Matrix::from_fn(64, d, |_, c| rng.normal() + if c < d / 4 { 1.5 } else { 0.0 });
+        let queries =
+            Matrix::from_fn(64, d, |_, c| rng.normal() + if c < d / 4 { 1.5 } else { 0.0 });
         (keys, ids, queries)
     }
 

@@ -106,7 +106,8 @@ mod tests {
     fn build(n: usize, seed: u64) -> (QuestRetriever, KeyStore, Vec<u32>) {
         let (keys, ids, queries) = test_inputs(n, 16, seed);
         let cfg = RetrievalConfig::default();
-        let inp = RetrieverInputs::from_parts(keys.clone(), ids.clone(), &queries, 0.25, &cfg, seed);
+        let inp =
+            RetrieverInputs::from_parts(keys.clone(), ids.clone(), &queries, 0.25, &cfg, seed);
         (QuestRetriever::build(&inp), keys, ids)
     }
 

@@ -22,11 +22,10 @@ use crate::config::ServeConfig;
 use crate::metrics::PhaseBreakdown;
 use crate::model::{Engine, Session};
 use crate::store::SessionCache;
+use crate::util::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use crate::util::sync::{Arc, AtomicUsize, Ordering};
 use anyhow::Result;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
 use std::time::Instant;
 
 /// What a request wants done with its session (the multi-turn lifecycle).
@@ -169,6 +168,10 @@ struct Admitted {
 /// Handle to one replica worker (engine thread).
 pub struct Replica {
     tx: Sender<Job>,
+    // Relaxed (allowlisted counter): a load-balancing hint the router
+    // reads to pick the least-loaded replica. Channel send/recv already
+    // orders the jobs themselves; a momentarily stale count only costs a
+    // slightly suboptimal routing choice, never correctness.
     outstanding: Arc<AtomicUsize>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
@@ -198,8 +201,12 @@ impl Replica {
                 };
                 worker_loop(&engine, &cfg, rx, &out_clone);
             })
-            .expect("spawn replica worker");
-        Replica { tx, outstanding, handle: Some(handle) }
+            // A failed OS-thread spawn must not panic the caller: with
+            // `handle` empty the closure (and `rx`) is dropped, so every
+            // submit fails over the closed channel into an explicit
+            // Event::Failed("replica worker is gone").
+            .ok();
+        Replica { tx, outstanding, handle }
     }
 
     /// Submit a request; events stream on the returned receiver. If the
@@ -303,8 +310,7 @@ fn worker_loop(
                     break;
                 }
             }
-            if matches!(job.req.session, Some(SessionSpec { mode: SessionMode::Close, .. })) {
-                let spec = job.req.session.expect("checked above");
+            if let Some(spec @ SessionSpec { mode: SessionMode::Close, .. }) = job.req.session {
                 let known = sessions.close(spec.session_id);
                 outstanding.fetch_sub(1, Ordering::Relaxed);
                 if known {

@@ -6,12 +6,13 @@
 
 use super::{Event, Replica, Request};
 use crate::config::ServeConfig;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::Receiver;
+use crate::util::sync::{mpsc::Receiver, AtomicU64, Ordering};
 
 /// A fleet of replicas behind one submit() entry point.
 pub struct Router {
     replicas: Vec<Replica>,
+    // Relaxed (allowlisted counters): `rr` only spreads tie-breaks and
+    // `next_id` only needs uniqueness; neither guards any other memory.
     rr: AtomicU64,
     next_id: AtomicU64,
 }

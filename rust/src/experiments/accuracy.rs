@@ -53,8 +53,24 @@ pub fn table2(ctx: &ExpCtx) -> Result<()> {
 
     // Task name -> samples.
     let task_list: Vec<(&str, Vec<Sample>)> = vec![
-        ("Retr.N", (0..ns).map(|_| { let d = rng_depth(&mut rng); tasks::number(&mut rng, len, d, 4) }).collect()),
-        ("Retr.P", (0..ns).map(|_| { let d = rng_depth(&mut rng); tasks::passkey(&mut rng, len, d) }).collect()),
+        (
+            "Retr.N",
+            (0..ns)
+                .map(|_| {
+                    let d = rng_depth(&mut rng);
+                    tasks::number(&mut rng, len, d, 4)
+                })
+                .collect(),
+        ),
+        (
+            "Retr.P",
+            (0..ns)
+                .map(|_| {
+                    let d = rng_depth(&mut rng);
+                    tasks::passkey(&mut rng, len, d)
+                })
+                .collect(),
+        ),
         ("Retr.KV", (0..ns).map(|_| tasks::kv_retrieval(&mut rng, len, len / 16)).collect()),
         ("Code.D", (0..ns).map(|_| tasks::realistic_analogue(&mut rng, len, 0.8)).collect()),
         ("Math.F", (0..ns).map(|_| tasks::realistic_analogue(&mut rng, len, 0.8)).collect()),
@@ -251,9 +267,33 @@ pub fn table9(ctx: &ExpCtx) -> Result<()> {
     let mut rng = Rng::seed_from(ctx.seed ^ 9);
 
     let task_list: Vec<(&str, Vec<Sample>)> = vec![
-        ("S1", (0..ns).map(|_| { let d = rng_depth(&mut rng); tasks::ruler_single(&mut rng, len, 1, d) }).collect()),
-        ("S2", (0..ns).map(|_| { let d = rng_depth(&mut rng); tasks::ruler_single(&mut rng, len, 2, d) }).collect()),
-        ("S3", (0..ns).map(|_| { let d = rng_depth(&mut rng); tasks::ruler_single(&mut rng, len, 3, d) }).collect()),
+        (
+            "S1",
+            (0..ns)
+                .map(|_| {
+                    let d = rng_depth(&mut rng);
+                    tasks::ruler_single(&mut rng, len, 1, d)
+                })
+                .collect(),
+        ),
+        (
+            "S2",
+            (0..ns)
+                .map(|_| {
+                    let d = rng_depth(&mut rng);
+                    tasks::ruler_single(&mut rng, len, 2, d)
+                })
+                .collect(),
+        ),
+        (
+            "S3",
+            (0..ns)
+                .map(|_| {
+                    let d = rng_depth(&mut rng);
+                    tasks::ruler_single(&mut rng, len, 3, d)
+                })
+                .collect(),
+        ),
         ("M1", (0..ns).map(|_| tasks::ruler_multi(&mut rng, len, 4)).collect()),
         ("MQ", tasks::ruler_multi_query(&mut rng, len, ns)),
         ("MV", (0..ns).map(|_| tasks::ruler_multi_value(&mut rng, len, 3)).collect()),
@@ -315,7 +355,7 @@ pub fn table10(ctx: &ExpCtx) -> Result<()> {
     let (full_score, _) = eval_method(&engine, &bases, Method::Full)?;
     rows.insert(0, vec!["FullAttention".into(), fmt_pct(full_score)]);
     rep.table(&["Budget policy", "Retr.KV"], &rows);
-    rep.para("Paper shape: pyramid allocation is within noise of uniform (Tab 10: 16.0 vs 14.5 on Retr.KV).");
+    rep.para("Paper shape: pyramid is within noise of uniform (Tab 10: 16.0 vs 14.5 on Retr.KV).");
     rep.write(ctx)
 }
 
@@ -338,9 +378,15 @@ pub fn table11(ctx: &ExpCtx) -> Result<()> {
     let samples: Vec<Sample> =
         (0..ns).map(|_| tasks::kv_retrieval(&mut rng, len, len / 16)).collect();
     let bases = prefill_bases(&engine, samples)?;
-    let methods =
-        [Method::Full, Method::StreamingLlm, Method::Quest, Method::Flat, Method::RetrievalAttention];
-    let lat = super::latency::method_latencies(ctx, "yi9-mini", if ctx.full { 32768 } else { 8192 }, &methods)?;
+    let methods = [
+        Method::Full,
+        Method::StreamingLlm,
+        Method::Quest,
+        Method::Flat,
+        Method::RetrievalAttention,
+    ];
+    let ctx_len = if ctx.full { 32768 } else { 8192 };
+    let lat = super::latency::method_latencies(ctx, "yi9-mini", ctx_len, &methods)?;
     let mut rows = Vec::new();
     for (i, &m) in methods.iter().enumerate() {
         let (score, _) = eval_method(&engine, &bases, m)?;

@@ -37,7 +37,8 @@ impl Report {
     /// Emit a markdown table; also mirrors rows into the CSV buffer.
     pub fn table(&mut self, header: &[&str], rows: &[Vec<String>]) {
         let _ = writeln!(self.md, "| {} |", header.join(" | "));
-        let _ = writeln!(self.md, "|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        let seps = header.iter().map(|_| "---").collect::<Vec<_>>().join("|");
+        let _ = writeln!(self.md, "|{}|", seps);
         for row in rows {
             let _ = writeln!(self.md, "| {} |", row.join(" | "));
         }

@@ -291,7 +291,14 @@ pub fn table5(ctx: &ExpCtx) -> Result<()> {
         ]);
     }
     rep.table(
-        &["Method", "Vector search (s)", "Attention (s)", "Others (s)", "Total (s)", "Search share"],
+        &[
+            "Method",
+            "Vector search (s)",
+            "Attention (s)",
+            "Others (s)",
+            "Total (s)",
+            "Search share",
+        ],
         &rows,
     );
     rep.para(

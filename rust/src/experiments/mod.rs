@@ -45,7 +45,7 @@ type ExpFn = fn(&ExpCtx) -> Result<()>;
 /// The experiment registry: paper artifact id → driver.
 pub const REGISTRY: &[(&str, ExpFn, &str)] = &[
     ("table1", latency::table1, "Full-attention decode latency & KV bytes vs context (Tab 1)"),
-    ("fig2", sparsity::fig2, "Dynamic sparsity: recovery ratio per head, dynamic vs static (Fig 2)"),
+    ("fig2", sparsity::fig2, "Dynamic sparsity: recovery ratio, dynamic vs static (Fig 2)"),
     ("fig3a", index_exp::fig3a, "Recall vs scan%: Q->K vs K->K for IVF/HNSW (Fig 3a)"),
     ("fig3b", index_exp::fig3b, "Mahalanobis OOD distances (Fig 3b)"),
     ("table2", accuracy::table2, "Infinity-Bench-style accuracy, all methods (Tab 2)"),

@@ -147,7 +147,9 @@ mod tests {
 
     #[test]
     fn yi9b_has_more_layers() {
-        assert!(ModelGeometry::YI_9B.kv_bytes_per_token() > ModelGeometry::YI_6B.kv_bytes_per_token());
+        assert!(
+            ModelGeometry::YI_9B.kv_bytes_per_token() > ModelGeometry::YI_6B.kv_bytes_per_token()
+        );
     }
 
     #[test]

@@ -203,7 +203,12 @@ impl VectorIndex for FlatIndex {
     }
 
     /// Exact scan has no structure to maintain: adopt the grown store.
-    fn insert_batch(&mut self, keys: KeyStore, new: Range<usize>, _ctx: &InsertContext<'_>) -> bool {
+    fn insert_batch(
+        &mut self,
+        keys: KeyStore,
+        new: Range<usize>,
+        _ctx: &InsertContext<'_>,
+    ) -> bool {
         debug_assert_eq!(new.end, keys.rows());
         debug_assert_eq!(new.start, self.keys.rows());
         self.keys = keys;

@@ -5,7 +5,9 @@
 //! into a local optimum"), because edges reflect the key distribution while
 //! decode queries come from the OOD query distribution.
 
-use super::{InsertContext, KeyStore, RemapPlan, SearchParams, SearchResult, VectorIndex, VisitedSet};
+use super::{
+    InsertContext, KeyStore, RemapPlan, SearchParams, SearchResult, VectorIndex, VisitedSet,
+};
 use crate::tensor::dot;
 
 use crate::util::rng::Rng;
@@ -237,7 +239,15 @@ impl HnswIndex {
         }
         // Beam search + connect on layers lvl..=0.
         for l in (0..=lvl.min(entry_lvl)).rev() {
-            let w = beam_search(&self.keys, &self.layers[l], &q, &[ep], self.ef_construction, visited).0;
+            let w = beam_search(
+                &self.keys,
+                &self.layers[l],
+                &q,
+                &[ep],
+                self.ef_construction,
+                visited,
+            )
+            .0;
             let m_l = if l == 0 { self.m * 2 } else { self.m };
             let selected = select_neighbors(&w, m_l);
             for &nb in &selected {
@@ -515,7 +525,12 @@ impl VectorIndex for HnswIndex {
 
     /// Online insert = the build-time wiring, one node at a time, over the
     /// grown key store.
-    fn insert_batch(&mut self, keys: KeyStore, new: Range<usize>, _ctx: &InsertContext<'_>) -> bool {
+    fn insert_batch(
+        &mut self,
+        keys: KeyStore,
+        new: Range<usize>,
+        _ctx: &InsertContext<'_>,
+    ) -> bool {
         debug_assert_eq!(new.end, keys.rows());
         debug_assert_eq!(new.start, self.keys.rows());
         self.keys = keys;

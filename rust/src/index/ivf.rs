@@ -151,7 +151,12 @@ impl VectorIndex for IvfIndex {
     /// rule `kmeans` used for the base assignment) — exactly how Faiss'
     /// `IndexIVFFlat::add` grows an inverted file without retraining the
     /// quantiser.
-    fn insert_batch(&mut self, keys: KeyStore, new: Range<usize>, _ctx: &InsertContext<'_>) -> bool {
+    fn insert_batch(
+        &mut self,
+        keys: KeyStore,
+        new: Range<usize>,
+        _ctx: &InsertContext<'_>,
+    ) -> bool {
         debug_assert_eq!(new.end, keys.rows());
         debug_assert_eq!(new.start, self.keys.rows());
         let mut cbuf: Vec<f32> = Vec::with_capacity(self.centroids.rows());

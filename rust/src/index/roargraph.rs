@@ -53,7 +53,9 @@
 //! tombstone ratio the graph re-projects itself (the amortised rebuild),
 //! keeping traversal cost proportional to the live set.
 
-use super::{InsertContext, KeyStore, RemapPlan, SearchParams, SearchResult, VectorIndex, VisitedSet};
+use super::{
+    InsertContext, KeyStore, RemapPlan, SearchParams, SearchResult, VectorIndex, VisitedSet,
+};
 use crate::tensor::{argtopk, dot, Matrix};
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
@@ -200,7 +202,8 @@ impl RoarGraph {
         // --- Entry points: top keys by IP with the mean training query. ---
         let mean_q = crate::tensor::col_mean(queries);
         let entry_scores: Vec<f32> = (0..n).map(|i| dot(&mean_q, keys.row(i))).collect();
-        let entries: Vec<u32> = argtopk(&entry_scores, 4.min(n)).into_iter().map(|i| i as u32).collect();
+        let entries: Vec<u32> =
+            argtopk(&entry_scores, 4.min(n)).into_iter().map(|i| i as u32).collect();
 
         // Retain a strided training subsample for amortised rebuilds.
         let train = queries.subsample_strided(TRAIN_CAP);

@@ -51,7 +51,7 @@ pub mod neon;
 
 pub use quant::{QuantChunk, QuantMode};
 
-use std::sync::OnceLock;
+use crate::util::sync::OnceLock;
 
 /// Which kernel backend is live for this process.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -117,6 +117,9 @@ pub fn active() -> Dispatch {
 #[inline]
 pub fn prefetch<T>(p: *const T) {
     #[cfg(target_arch = "x86_64")]
+    // SAFETY: PREFETCH is a pure hint — it never faults and never
+    // dereferences, so any pointer value (null, dangling, misaligned) is
+    // acceptable; SSE is baseline on x86_64 so the instruction exists.
     unsafe {
         core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(p as *const i8);
     }
@@ -134,6 +137,9 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len(), "dot operand lengths differ");
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm is reached only when `active()` returned Avx2,
+        // i.e. runtime detection confirmed AVX2+FMA — the target-feature
+        // contract of the x86 kernel; operand lengths were checked above.
         Dispatch::Avx2 => unsafe { x86::dot(a, b) },
         #[cfg(target_arch = "aarch64")]
         Dispatch::Neon => neon::dot(a, b),
@@ -148,6 +154,9 @@ pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len(), "l2_sq operand lengths differ");
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm is reached only when `active()` returned Avx2,
+        // i.e. runtime detection confirmed AVX2+FMA — the target-feature
+        // contract of the x86 kernel; operand lengths were checked above.
         Dispatch::Avx2 => unsafe { x86::l2_sq(a, b) },
         #[cfg(target_arch = "aarch64")]
         Dispatch::Neon => neon::l2_sq(a, b),
@@ -167,6 +176,9 @@ pub fn dot_rows(q: &[f32], rows: &[f32], cols: usize, out: &mut Vec<f32>) {
     debug_assert_eq!(rows.len() % cols, 0, "rows buffer is not row-aligned");
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm is reached only when `active()` returned Avx2,
+        // i.e. runtime detection confirmed AVX2+FMA — the target-feature
+        // contract of the x86 kernel; operand lengths were checked above.
         Dispatch::Avx2 => unsafe { x86::dot_rows(q, rows, cols, out) },
         #[cfg(target_arch = "aarch64")]
         Dispatch::Neon => neon::dot_rows(q, rows, cols, out),
@@ -185,6 +197,9 @@ pub fn dot_gather(q: &[f32], rows: &[f32], cols: usize, ids: &[u32], out: &mut V
     assert_eq!(q.len(), cols, "query length != row width");
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm is reached only when `active()` returned Avx2,
+        // i.e. runtime detection confirmed AVX2+FMA — the target-feature
+        // contract of the x86 kernel; operand lengths were checked above.
         Dispatch::Avx2 => unsafe { x86::dot_gather(q, rows, cols, ids, out) },
         #[cfg(target_arch = "aarch64")]
         Dispatch::Neon => neon::dot_gather(q, rows, cols, ids, out),
@@ -202,6 +217,9 @@ pub fn l2_rows(q: &[f32], rows: &[f32], cols: usize, out: &mut Vec<f32>) {
     assert_eq!(q.len(), cols, "query length != row width");
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm is reached only when `active()` returned Avx2,
+        // i.e. runtime detection confirmed AVX2+FMA — the target-feature
+        // contract of the x86 kernel; operand lengths were checked above.
         Dispatch::Avx2 => unsafe { x86::l2_rows(q, rows, cols, out) },
         #[cfg(target_arch = "aarch64")]
         Dispatch::Neon => neon::l2_rows(q, rows, cols, out),
@@ -215,6 +233,9 @@ pub fn dot_f16(q: &[f32], row: &[u16]) -> f32 {
     assert_eq!(q.len(), row.len(), "dot_f16 operand lengths differ");
     #[cfg(target_arch = "x86_64")]
     if active() == Dispatch::Avx2 {
+        // SAFETY: Avx2 dispatch means runtime detection confirmed
+        // AVX2+FMA — the target-feature contract of the x86 kernel;
+        // operand lengths were checked above.
         return unsafe { x86::dot_f16(q, row) };
     }
     #[cfg(target_arch = "aarch64")]
@@ -231,6 +252,9 @@ pub fn dot_i8(q: &[f32], row: &[i8]) -> f32 {
     assert_eq!(q.len(), row.len(), "dot_i8 operand lengths differ");
     #[cfg(target_arch = "x86_64")]
     if active() == Dispatch::Avx2 {
+        // SAFETY: Avx2 dispatch means runtime detection confirmed
+        // AVX2+FMA — the target-feature contract of the x86 kernel;
+        // operand lengths were checked above.
         return unsafe { x86::dot_i8(q, row) };
     }
     #[cfg(target_arch = "aarch64")]
@@ -249,6 +273,9 @@ pub fn dot_rows_f16(q: &[f32], rows: &[u16], cols: usize, out: &mut Vec<f32>) {
     assert_eq!(q.len(), cols, "query length != row width");
     #[cfg(target_arch = "x86_64")]
     if active() == Dispatch::Avx2 {
+        // SAFETY: Avx2 dispatch means runtime detection confirmed
+        // AVX2+FMA — the target-feature contract of the x86 kernel;
+        // operand lengths were checked above.
         return unsafe { x86::dot_rows_f16(q, rows, cols, out) };
     }
     #[cfg(target_arch = "aarch64")]
@@ -268,6 +295,9 @@ pub fn dot_rows_i8(q: &[f32], rows: &[i8], scales: &[f32], cols: usize, out: &mu
     assert_eq!(q.len(), cols, "query length != row width");
     #[cfg(target_arch = "x86_64")]
     if active() == Dispatch::Avx2 {
+        // SAFETY: Avx2 dispatch means runtime detection confirmed
+        // AVX2+FMA — the target-feature contract of the x86 kernel;
+        // operand lengths were checked above.
         return unsafe { x86::dot_rows_i8(q, rows, scales, cols, out) };
     }
     #[cfg(target_arch = "aarch64")]

@@ -21,6 +21,10 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let chunks = n / 8;
+    // SAFETY: NEON is a baseline aarch64 feature, so the intrinsics are
+    // always executable; every vld1q_f32 reads lanes i*8..i*8+8 with
+    // i < chunks = n/8, staying inside both slices (the public dispatch
+    // wrapper asserts a.len() == b.len()).
     unsafe {
         let mut acc0 = vdupq_n_f32(0.0);
         let mut acc1 = vdupq_n_f32(0.0);
@@ -56,6 +60,8 @@ pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let chunks = n / 8;
+    // SAFETY: as in [`dot`] — baseline NEON, and every load stays within
+    // the first chunks*8 <= len elements of both equal-length slices.
     unsafe {
         let mut acc0 = vdupq_n_f32(0.0);
         let mut acc1 = vdupq_n_f32(0.0);
@@ -120,6 +126,9 @@ pub fn dot_f16(q: &[f32], row: &[u16]) -> f32 {
     debug_assert_eq!(q.len(), row.len());
     let n = q.len();
     let chunks = n / 8;
+    // SAFETY: baseline NEON; vld1q_u16/vld1q_f32 read lanes i*8..i*8+8
+    // with i < chunks = n/8, inside both equal-length slices (length
+    // equality is asserted by the public dispatch wrapper).
     unsafe {
         let mut acc0 = vdupq_n_f32(0.0);
         let mut acc1 = vdupq_n_f32(0.0);
@@ -156,6 +165,9 @@ pub fn dot_i8(q: &[f32], row: &[i8]) -> f32 {
     debug_assert_eq!(q.len(), row.len());
     let n = q.len();
     let chunks = n / 8;
+    // SAFETY: baseline NEON; vld1_s8/vld1q_f32 read lanes i*8..i*8+8 with
+    // i < chunks = n/8, inside both equal-length slices (length equality
+    // is asserted by the public dispatch wrapper).
     unsafe {
         let mut acc0 = vdupq_n_f32(0.0);
         let mut acc1 = vdupq_n_f32(0.0);

@@ -16,6 +16,10 @@ use core::arch::x86_64::*;
 const PREFETCH_AHEAD: usize = 4;
 
 /// Horizontal reduction matching [`super::scalar::tree8`] bit-for-bit.
+///
+/// # Safety
+/// Requires AVX; only called from the `#[target_feature(avx2,fma)]`
+/// kernels below, whose own contract guarantees it.
 #[inline]
 unsafe fn sum8(v: __m256) -> f32 {
     let mut lanes = [0.0f32; 8];

@@ -264,13 +264,21 @@ impl SegmentedStore {
 
     /// Batched scan-tier contiguous scan of segment `s`, segment-local
     /// rows `[lo, hi)`, appended to `out` (the flat-scan hot path).
-    pub fn score_segment_range(&self, q: &[f32], s: usize, lo: usize, hi: usize, out: &mut Vec<f32>) {
+    pub fn score_segment_range(
+        &self,
+        q: &[f32],
+        s: usize,
+        lo: usize,
+        hi: usize,
+        out: &mut Vec<f32>,
+    ) {
         debug_assert!(hi <= self.segments[s].rows());
         match self.mirrors[s].as_deref() {
             Some(ch) => ch.score_range(q, lo, hi, out),
             None => {
                 let seg = &self.segments[s];
-                kernel::dot_rows(q, &seg.as_slice()[lo * self.cols..hi * self.cols], self.cols, out);
+                let rows = &seg.as_slice()[lo * self.cols..hi * self.cols];
+                kernel::dot_rows(q, rows, self.cols, out);
             }
         }
     }

@@ -53,6 +53,14 @@
 //! * [`hw`] — hardware profiles and KV-cache memory arithmetic.
 //! * [`metrics`] — latency histograms and per-phase breakdowns.
 
+// Clippy is *enforced* crate-wide (deny, not advisory): the bug-shaped
+// bundles are hard errors everywhere — `make clippy` and the CI lint job
+// rely on these attributes, not on command-line flags. Style/complexity
+// stay warnings (visible, not red) so a rustc upgrade cannot brick the
+// build over idiom churn.
+#![deny(clippy::correctness, clippy::suspicious, clippy::perf)]
+#![warn(clippy::all)]
+
 pub mod attention;
 #[macro_use]
 pub mod util;
@@ -62,8 +70,9 @@ pub mod coordinator;
 pub mod experiments;
 pub mod hw;
 pub mod index;
-// Clippy is *enforced* (deny, not advisory) for the kernel subsystem: the
-// `make clippy-kernel` CI gate relies on this attribute.
+// The kernel subsystem additionally denies the style/complexity bundles:
+// it is small, hot, and unsafe-bearing, so it holds the strictest bar
+// (the `make clippy-kernel` CI gate relies on this attribute).
 #[deny(clippy::all)]
 pub mod kernel;
 pub mod kvcache;

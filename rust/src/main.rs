@@ -159,7 +159,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
         sample.expect
     );
     let replica = retrieval_attention::coordinator::Replica::spawn(cfg);
-    let events = replica.submit(Request { id: 1, prompt: sample.prompt.clone(), max_tokens, session: None });
+    let events =
+        replica.submit(Request { id: 1, prompt: sample.prompt.clone(), max_tokens, session: None });
     let (tokens, metrics) = collect(&events)?;
     println!("generated: {tokens:?}");
     println!(

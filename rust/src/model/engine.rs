@@ -207,7 +207,9 @@ impl Engine {
         anyhow::ensure!(n > 0, "empty prompt");
 
         let mut caches: Vec<Vec<TieredKvCache>> = (0..spec.layers)
-            .map(|_| (0..spec.kv_heads).map(|_| TieredKvCache::new(spec.head_dim, pattern)).collect())
+            .map(|_| {
+                (0..spec.kv_heads).map(|_| TieredKvCache::new(spec.head_dim, pattern)).collect()
+            })
             .collect();
         let mut q_history: Vec<Vec<Matrix>> = (0..spec.layers)
             .map(|_| (0..spec.q_heads).map(|_| Matrix::zeros(0, spec.head_dim)).collect())

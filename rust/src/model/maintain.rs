@@ -43,10 +43,9 @@ use crate::baselines::{GroupShared, HostRetriever};
 use crate::index::{InsertContext, RemapPlan};
 use crate::tensor::Matrix;
 use crate::util::parallel;
+use crate::util::sync::mpsc::{self, Receiver, Sender};
+use crate::util::sync::{Arc, AtomicUsize, Ordering};
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
 use std::time::Instant;
 
 /// One group's overflow batch, snapshotted by the engine.
@@ -288,6 +287,10 @@ fn run_job(job: &Job) -> Option<Done> {
 struct WorkerHandle {
     tx: Option<Sender<Job>>,
     done_rx: Receiver<Done>,
+    /// Kept for the no-thread fallback: when the OS refuses to spawn the
+    /// worker, `submit` executes jobs inline and completions still flow
+    /// through the same channel the poll/flush paths already read.
+    done_tx: Sender<Done>,
     depth: Arc<AtomicUsize>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
@@ -298,38 +301,55 @@ impl WorkerHandle {
         let (done_tx, done_rx) = mpsc::channel::<Done>();
         let depth = Arc::new(AtomicUsize::new(0));
         let depth_w = depth.clone();
-        let handle = std::thread::Builder::new()
-            .name("kv-maintenance".into())
-            .spawn(move || {
-                while let Ok(job) = rx.recv() {
-                    let counted = !matches!(job, Job::Barrier(_));
-                    let done = run_job(&job);
-                    if counted {
-                        depth_w.fetch_sub(1, Ordering::SeqCst);
-                    }
-                    if let Some(done) = done {
-                        if done_tx.send(done).is_err() {
-                            return;
-                        }
+        let done_w = done_tx.clone();
+        let spawned = std::thread::Builder::new().name("kv-maintenance".into()).spawn(move || {
+            while let Ok(job) = rx.recv() {
+                let counted = !matches!(job, Job::Barrier(_));
+                let done = run_job(&job);
+                if counted {
+                    // SeqCst pairs with the submit-side fetch_add: the
+                    // decrement happens only after the job fully executed,
+                    // so a sampled depth can over-count in-flight work but
+                    // never under-count it (queue_peak stays conservative).
+                    depth_w.fetch_sub(1, Ordering::SeqCst);
+                }
+                if let Some(done) = done {
+                    if done_w.send(done).is_err() {
+                        return;
                     }
                 }
-            })
-            .expect("spawn maintenance worker");
-        WorkerHandle { tx: Some(tx), done_rx, depth, handle: Some(handle) }
+            }
+        });
+        match spawned {
+            Ok(h) => WorkerHandle { tx: Some(tx), done_rx, done_tx, depth, handle: Some(h) },
+            // The OS refused a thread (resource exhaustion). Degrade to
+            // executing jobs inline on the submitting thread instead of
+            // panicking the session: maintenance still happens, merely back
+            // on the token path (the PR-1 arrangement) — a latency
+            // regression, never a correctness one.
+            Err(_) => WorkerHandle { tx: None, done_rx, done_tx, depth, handle: None },
+        }
     }
 
     fn submit(&self, job: Job) {
-        if let Some(tx) = &self.tx {
-            // Barriers are flush markers, not work: excluding them from
-            // depth accounting keeps `queue_peak` from reporting a phantom
-            // job on every flush()/shutdown().
-            let counted = !matches!(job, Job::Barrier(_));
-            if counted {
-                self.depth.fetch_add(1, Ordering::SeqCst);
+        let Some(tx) = &self.tx else {
+            // No worker thread (spawn refused at construction): run the
+            // job synchronously. Nothing is ever queued on this path, so
+            // depth accounting stays at zero by construction.
+            if let Some(done) = run_job(&job) {
+                let _ = self.done_tx.send(done);
             }
-            if tx.send(job).is_err() && counted {
-                self.depth.fetch_sub(1, Ordering::SeqCst);
-            }
+            return;
+        };
+        // Barriers are flush markers, not work: excluding them from
+        // depth accounting keeps `queue_peak` from reporting a phantom
+        // job on every flush()/shutdown().
+        let counted = !matches!(job, Job::Barrier(_));
+        if counted {
+            self.depth.fetch_add(1, Ordering::SeqCst);
+        }
+        if tx.send(job).is_err() && counted {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
         }
     }
 
@@ -429,10 +449,7 @@ impl MaintenanceState {
 
     /// Enqueue a job, spawning the worker on first use.
     pub fn submit(&mut self, job: Job) {
-        if self.worker.is_none() {
-            self.worker = Some(WorkerHandle::spawn());
-        }
-        let w = self.worker.as_ref().expect("worker just spawned");
+        let w = self.worker.get_or_insert_with(WorkerHandle::spawn);
         w.submit(job);
         let depth = w.queue_depth();
         if depth > self.stats.queue_peak {

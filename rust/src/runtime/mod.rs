@@ -18,6 +18,7 @@ pub mod manifest;
 pub mod native;
 
 use crate::tensor::Matrix;
+use crate::util::sync::{AtomicU64, Ordering};
 use anyhow::{Context, Result};
 use manifest::{ArtifactMeta, Manifest, PresetMeta};
 use std::collections::HashMap;
@@ -36,7 +37,9 @@ pub struct Runtime {
     preset: String,
     meta: PresetMeta,
     /// Cumulative device-execution count (perf diagnostics).
-    pub exec_count: std::sync::atomic::AtomicU64,
+    /// Relaxed (allowlisted counter): a monotonically increasing
+    /// diagnostic; nothing is published through it.
+    pub exec_count: AtomicU64,
 }
 
 impl Runtime {
@@ -52,7 +55,8 @@ impl Runtime {
             .with_context(|| format!("preset `{preset}` not in manifest"))?
             .clone();
 
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
         let mut execs = HashMap::new();
         for (name, art) in &meta.artifacts {
             let path: PathBuf = dir.join(&art.file);
@@ -69,7 +73,7 @@ impl Runtime {
             backend: Backend::Pjrt { execs },
             preset: preset.to_string(),
             meta,
-            exec_count: std::sync::atomic::AtomicU64::new(0),
+            exec_count: AtomicU64::new(0),
         })
     }
 
@@ -88,7 +92,7 @@ impl Runtime {
             backend: Backend::Native(native::NativeExecutor::new(meta.spec.clone())),
             preset: preset.to_string(),
             meta,
-            exec_count: std::sync::atomic::AtomicU64::new(0),
+            exec_count: AtomicU64::new(0),
         })
     }
 
@@ -147,7 +151,7 @@ impl Runtime {
                 .unwrap_or(inputs.len()),
             "arg count mismatch for {name}"
         );
-        self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
         match &self.backend {
             Backend::Native(ex) => ex.execute(name, inputs),
             Backend::Pjrt { execs } => {
@@ -171,7 +175,7 @@ impl Runtime {
     /// (see EXPERIMENTS.md §Perf — the literal path re-transferred ~30MB
     /// of weights per decode step).
     pub fn exec_b(&self, name: &str, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
         match &self.backend {
             Backend::Native(ex) => {
                 let lits: Vec<&xla::Literal> = inputs.iter().map(|b| b.literal()).collect();
@@ -289,6 +293,6 @@ mod tests {
         let o = literal_to_f32(&outs[0]).unwrap();
         // Uniform values => attention output equals the value vector.
         assert!(o.iter().all(|x| (x - 0.3).abs() < 1e-5));
-        assert!(rt.exec_count.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        assert!(rt.exec_count.load(Ordering::Relaxed) >= 1);
     }
 }

@@ -26,15 +26,15 @@
 
 use crate::coordinator::{router::Router, Event, Request, SessionMode, SessionSpec};
 use crate::util::json::{self, Value};
+use crate::util::sync::{mpsc, Arc, AtomicBool, Ordering};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
 
 /// A running server (drops = stops accepting; existing connections drain).
 pub struct Server {
     pub addr: std::net::SocketAddr,
-    stop: Arc<std::sync::atomic::AtomicBool>,
+    stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -44,11 +44,16 @@ impl Server {
         let listener = TcpListener::bind(addr).context("bind")?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop = Arc::new(AtomicBool::new(false));
         let stop_c = stop.clone();
         let handle = std::thread::spawn(move || {
             loop {
-                if stop_c.load(std::sync::atomic::Ordering::Relaxed) {
+                // Acquire pairs with the Release store in Drop: when the
+                // accept loop observes the stop signal it also observes
+                // everything the stopping thread wrote before raising it.
+                // (Relaxed would "work" for the bool alone but leaves the
+                // shutdown unordered against surrounding teardown.)
+                if stop_c.load(Ordering::Acquire) {
                     return;
                 }
                 match listener.accept() {
@@ -71,7 +76,8 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        // Release: cross-thread shutdown signal (see Acquire load above).
+        self.stop.store(true, Ordering::Release);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -136,11 +142,7 @@ fn parse_request(line: &str, id: u64) -> Result<Request> {
     Ok(Request { id, prompt, max_tokens, session })
 }
 
-fn stream_events(
-    out: &mut TcpStream,
-    id: u64,
-    events: std::sync::mpsc::Receiver<Event>,
-) -> Result<()> {
+fn stream_events(out: &mut TcpStream, id: u64, events: mpsc::Receiver<Event>) -> Result<()> {
     let mut tokens: Vec<u32> = Vec::new();
     loop {
         match events.recv() {

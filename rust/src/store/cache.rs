@@ -25,6 +25,7 @@
 
 use crate::config::SessionCacheConfig;
 use crate::model::{Engine, Session};
+use crate::util::sync::{AtomicU64, Ordering};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::io::Write;
@@ -84,8 +85,9 @@ impl SessionCache {
             // Per-instance default: two replicas of one process must not
             // collide on `session-<id>.ras` names (the router pins ids to
             // replicas, but nothing forces distinct configured dirs).
-            static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-            let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            // Relaxed (allowlisted counter): only uniqueness matters.
+            static SEQ: AtomicU64 = AtomicU64::new(0);
+            let seq = SEQ.fetch_add(1, Ordering::Relaxed);
             std::env::temp_dir().join(format!("ra-sessions-{}-{seq}", std::process::id()))
         } else {
             PathBuf::from(&cfg.spill_dir)
@@ -145,13 +147,11 @@ impl SessionCache {
     }
 
     fn spill_over_budget(&mut self, engine: &Engine) -> Result<()> {
-        while self.resident_bytes() > self.cfg.max_resident_bytes && !self.resident.is_empty() {
-            let victim = self
-                .resident
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(&id, _)| id)
-                .expect("non-empty resident set");
+        while self.resident_bytes() > self.cfg.max_resident_bytes {
+            let victim = self.resident.iter().min_by_key(|(_, e)| e.last_used).map(|(&id, _)| id);
+            // An empty resident set has zero resident_bytes, so a missing
+            // victim means the loop condition is about to go false anyway.
+            let Some(victim) = victim else { break };
             self.park(engine, victim)?;
         }
         Ok(())

@@ -142,8 +142,8 @@ mod tests {
     #[test]
     fn store_roundtrip_preserves_chunks_and_mirrors() {
         let mut rng = Rng::seed_from(3);
-        let mut store =
-            KeyStore::from_matrix(Matrix::from_fn(96, 16, |_, _| rng.normal())).with_quant(QuantMode::Int8);
+        let base = KeyStore::from_matrix(Matrix::from_fn(96, 16, |_, _| rng.normal()));
+        let mut store = base.with_quant(QuantMode::Int8);
         for _ in 0..5 {
             store = store.append_rows(Matrix::from_fn(8, 16, |_, _| rng.normal()));
         }

@@ -117,7 +117,12 @@ mod tests {
 
     #[test]
     fn measures_something() {
-        let mut b = Bencher { warmup: 1, target_time: Duration::from_millis(20), max_iters: 10, results: vec![] };
+        let mut b = Bencher {
+            warmup: 1,
+            target_time: Duration::from_millis(20),
+            max_iters: 10,
+            results: vec![],
+        };
         let s = b.bench("noop-ish", || {
             let mut x = 0u64;
             for i in 0..1000 {
@@ -131,7 +136,12 @@ mod tests {
 
     #[test]
     fn json_output_has_all_cases() {
-        let mut b = Bencher { warmup: 0, target_time: Duration::from_millis(5), max_iters: 5, results: vec![] };
+        let mut b = Bencher {
+            warmup: 0,
+            target_time: Duration::from_millis(5),
+            max_iters: 5,
+            results: vec![],
+        };
         b.bench("a", || 1);
         b.bench("b", || 2);
         let j = b.to_json();

@@ -305,7 +305,8 @@ impl<'a> Parser<'a> {
             self.pos += 1;
         }
         let text = std::str::from_utf8(&self.b[start..self.pos])?;
-        Ok(Value::Num(text.parse::<f64>().map_err(|e| anyhow::anyhow!("bad number `{text}`: {e}"))?))
+        let num = text.parse::<f64>().map_err(|e| anyhow::anyhow!("bad number `{text}`: {e}"))?;
+        Ok(Value::Num(num))
     }
 
     fn string(&mut self) -> anyhow::Result<String> {

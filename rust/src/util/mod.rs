@@ -16,6 +16,9 @@
 //!   with seed reporting on failure).
 //! * [`swap`] — generation-counted `Arc` publication for the
 //!   double-buffered index swap of the online-maintenance worker.
+//! * [`sync`] — the loom-checkable synchronization facade every
+//!   concurrency-bearing module must import instead of `std::sync`
+//!   (enforced by `cargo xtask lint`; see docs/concurrency.md).
 
 pub mod bench;
 pub mod json;
@@ -23,3 +26,4 @@ pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod swap;
+pub mod sync;

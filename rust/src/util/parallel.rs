@@ -6,7 +6,7 @@
 //! `'static` bounds; chunking keeps spawn overhead negligible for the
 //! work sizes involved (each head search is ~10⁵–10⁶ dot products).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{AtomicUsize, Ordering};
 
 /// Number of worker threads to use (physical parallelism).
 pub fn num_threads() -> usize {
@@ -30,6 +30,8 @@ where
     if workers <= 1 {
         return items.iter().map(|t| f(t)).collect();
     }
+    // Relaxed (allowlisted counter): fetch_add only hands out unique
+    // indices; the claimed item's data is synchronized by scope join.
     let next = AtomicUsize::new(0);
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let out_ptr = SendPtr(out.as_mut_ptr());
@@ -94,6 +96,7 @@ where
         }
         return;
     }
+    // Relaxed (allowlisted counter): unique-index claim, as in par_map.
     let next = AtomicUsize::new(0);
     let items_ptr = SendPtr(items.as_mut_ptr());
     std::thread::scope(|s| {
@@ -118,6 +121,8 @@ where
 struct SendPtr<T>(*mut T);
 // SAFETY: the pointer is only dereferenced at disjoint indices.
 unsafe impl<T> Sync for SendPtr<T> {}
+// SAFETY: as above — each slot is written by exactly one worker, and the
+// owning scope outlives every worker.
 unsafe impl<T> Send for SendPtr<T> {}
 
 #[cfg(test)]

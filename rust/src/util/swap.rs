@@ -8,10 +8,17 @@
 //! front or the complete new one. The generation counter is bumped under
 //! the writer lock, so `load_with_generation` returns a mutually
 //! consistent (generation, snapshot) pair — the invariant the
-//! `maintenance_concurrency` suite asserts.
+//! `maintenance_concurrency` suite stresses and `tests/loom_models.rs`
+//! model-checks exhaustively.
+//!
+//! Poisoning: a panicking publisher must not cascade into every decode
+//! reader, so all lock acquisitions recover from poison instead of
+//! unwrapping. That is sound here because the slot's only invariant is
+//! "holds a complete `Arc`", and the `Arc` swap itself cannot panic
+//! halfway — `mem::replace` is a plain pointer move — so a poisoned slot
+//! still holds a complete front.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use crate::util::sync::{Arc, AtomicU64, Ordering, PoisonError, RwLock};
 
 /// A swappable, generation-counted shared value.
 pub struct Published<T: ?Sized> {
@@ -32,13 +39,13 @@ impl<T: ?Sized> Published<T> {
 
     /// Snapshot the current front (one Arc clone under a read lock).
     pub fn load(&self) -> Arc<T> {
-        self.slot.read().expect("Published slot poisoned").clone()
+        self.slot.read().unwrap_or_else(PoisonError::into_inner).clone()
     }
 
     /// Snapshot with its generation; the pair is consistent because the
     /// writer bumps the counter while holding the write lock.
     pub fn load_with_generation(&self) -> (u64, Arc<T>) {
-        let slot = self.slot.read().expect("Published slot poisoned");
+        let slot = self.slot.read().unwrap_or_else(PoisonError::into_inner);
         (self.generation.load(Ordering::Acquire), slot.clone())
     }
 
@@ -50,8 +57,12 @@ impl<T: ?Sized> Published<T> {
     /// Swap in a new front; returns the displaced one (the caller keeps it
     /// as the next back buffer — left/right double buffering).
     pub fn publish(&self, value: Arc<T>) -> Arc<T> {
-        let mut slot = self.slot.write().expect("Published slot poisoned");
+        let mut slot = self.slot.write().unwrap_or_else(PoisonError::into_inner);
         let old = std::mem::replace(&mut *slot, value);
+        // AcqRel pairs with the Acquire loads above: a reader that sees
+        // generation g also sees the slot contents published with it
+        // (the write lock already orders the pair; the ordering keeps
+        // `generation()` meaningful for lock-free gen polling too).
         self.generation.fetch_add(1, Ordering::AcqRel);
         old
     }
@@ -60,6 +71,7 @@ impl<T: ?Sized> Published<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::sync::AtomicBool;
 
     #[test]
     fn publish_returns_the_old_front() {
@@ -88,7 +100,7 @@ mod tests {
         // Writer publishes vectors whose every element equals the
         // generation; readers must never observe a mixed vector.
         let p = Arc::new(Published::new(vec![0u64; 64]));
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop = Arc::new(AtomicBool::new(false));
         let mut readers = Vec::new();
         for _ in 0..4 {
             let p = p.clone();
@@ -112,5 +124,27 @@ mod tests {
             r.join().expect("reader panicked");
         }
         assert_eq!(p.generation(), 500);
+    }
+
+    #[test]
+    fn readers_survive_a_panicking_publisher() {
+        // A writer that panics while holding the slot poisons the lock;
+        // readers and later publishers must recover, not cascade-panic.
+        let p = Arc::new(Published::new(7u32));
+        let p2 = p.clone();
+        let poisoner = std::thread::spawn(move || {
+            let _guard = p2.slot.write().unwrap_or_else(PoisonError::into_inner);
+            panic!("publisher died mid-publish");
+        });
+        assert!(poisoner.join().is_err(), "poisoner must have panicked");
+        // The slot still holds the last complete front.
+        assert_eq!(*p.load(), 7);
+        let (gen, snap) = p.load_with_generation();
+        assert_eq!((gen, *snap), (0, 7));
+        // Publishing through the poisoned lock keeps working.
+        let old = p.publish(Arc::new(8));
+        assert_eq!(*old, 7);
+        assert_eq!(*p.load(), 8);
+        assert_eq!(p.generation(), 1);
     }
 }

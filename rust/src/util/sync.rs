@@ -1,0 +1,53 @@
+//! The loom-checkable synchronization facade.
+//!
+//! Every concurrency-bearing module imports its primitives from here
+//! instead of `std::sync` (enforced by `cargo xtask lint`: direct
+//! `std::sync::atomic` / `std::sync::RwLock` imports outside this file
+//! fail the build). Under a normal build the re-exports are exactly the
+//! `std` types — zero cost. Under `RUSTFLAGS="--cfg loom"` (`make loom`)
+//! they swap for the vendored model checker's instrumented twins, so
+//! `tests/loom_models.rs` can exhaustively explore the interleavings of
+//! `Published`, the GroupShared id-map publish protocol, and the worker
+//! accounting without any change to the code under test.
+//!
+//! What is modeled and what is not:
+//!
+//! * `Arc`, `Mutex`, `RwLock`, `AtomicBool`/`AtomicU32`/`AtomicU64`/
+//!   `AtomicUsize` — swapped for loom twins (`Arc` stays `std`; the
+//!   checker explores interleavings, not leaks).
+//! * [`yield_now`] — `std::thread::yield_now` normally; under loom a
+//!   voluntary scheduling point. Spin-retry loops MUST use this (not
+//!   `std::thread::yield_now`) or the model checker cannot hand the
+//!   token to the writer the loop is waiting on.
+//! * `mpsc`, `OnceLock`, `PoisonError` — always `std`: channels and
+//!   one-shot init are not modeled (loom tests avoid them), and poison
+//!   recovery is pure API surface.
+//!
+//! The `Ordering` policy that goes with the facade (when `Relaxed` is
+//! acceptable, which pairs must be Acquire/Release) is documented in
+//! docs/concurrency.md and enforced by the linter's Relaxed allowlist.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{Arc, Mutex, MutexGuard, RwLock};
+
+// Channels, one-shot init and poison plumbing are never modeled.
+pub use std::sync::{mpsc, OnceLock, PoisonError};
+
+/// Voluntary yield for spin-retry loops (see module docs).
+#[cfg(not(loom))]
+pub fn yield_now() {
+    std::thread::yield_now();
+}
+
+/// Voluntary yield for spin-retry loops (see module docs).
+#[cfg(loom)]
+pub fn yield_now() {
+    loom::thread::yield_now();
+}

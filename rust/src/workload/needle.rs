@@ -20,7 +20,8 @@ pub fn grid(seed: u64, lengths: &[usize], depths: usize, reps: usize) -> Vec<Gri
     for &len in lengths {
         for di in 0..depths {
             let depth = if depths == 1 { 0.5 } else { di as f32 / (depths - 1) as f32 };
-            let samples = (0..reps).map(|_| passkey(&mut rng.fork(di as u64), len, depth)).collect();
+            let samples =
+                (0..reps).map(|_| passkey(&mut rng.fork(di as u64), len, depth)).collect();
             cells.push(GridCell { len, depth, samples });
         }
     }

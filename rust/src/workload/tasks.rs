@@ -37,7 +37,8 @@ fn haystack_with(
     // its own token (nothing precedes it), which makes a match at position
     // 0 self-referential — real benchmarks have a BOS/instruction preamble
     // for the same reason.
-    let at = (((body as f32) * depth) as usize).clamp(PREAMBLE, body.saturating_sub(1).max(PREAMBLE));
+    let at = (((body as f32) * depth) as usize)
+        .clamp(PREAMBLE, body.saturating_sub(1).max(PREAMBLE));
     let mut prompt = Vec::with_capacity(len);
     for _ in 0..at {
         prompt.push(filler(rng));

@@ -1,0 +1,139 @@
+//! Vendored, dependency-free subset of the `loom` systematic concurrency
+//! checker (API-compatible with tokio-rs/loom for the surface this repo
+//! uses). The build is fully offline, so the real crate cannot be pulled
+//! in; this reimplementation keeps the same shape — `loom::model(|| ...)`
+//! plus `loom::sync` / `loom::thread` drop-ins — so the facade in
+//! `rust/src/util/sync.rs` reads exactly like a standard loom setup and
+//! can be swapped for the upstream crate without touching call sites.
+//!
+//! # How it checks
+//!
+//! `model(f)` runs the closure under a *token-passing* cooperative
+//! scheduler: every modeled thread is a real OS thread, but only one is
+//! runnable at a time. Each synchronization operation (atomic access,
+//! lock acquire/release, voluntary yield) is a *scheduling point* where
+//! the scheduler may hand the token to another thread. The explorer
+//! enumerates schedules depth-first: execution 1 takes the first choice
+//! at every point, and each subsequent execution replays a recorded
+//! prefix and flips the last decision that still has untried
+//! alternatives, until the space is exhausted.
+//!
+//! The space is kept tractable with CHESS-style *preemption bounding*:
+//! at most `LOOM_MAX_PREEMPTIONS` (default 2) involuntary context
+//! switches per execution. Empirically almost all real interleaving bugs
+//! need very few preemptions; bound 2 finds, e.g., a publish-order
+//! inversion or a lost update. Voluntary switches (blocking on a held
+//! lock, `yield_now`) are never counted against the bound, so runs
+//! remain complete for protocols that wait.
+//!
+//! # Scope and limitations
+//!
+//! * **Sequential consistency only.** Atomics are modeled as SeqCst
+//!   regardless of the requested `Ordering`: the checker explores
+//!   *interleavings*, not weak-memory reorderings. Ordering-sensitive
+//!   bugs are covered separately by ThreadSanitizer (`make tsan`).
+//! * Threads spawned through `std::thread` directly (not
+//!   `loom::thread::spawn`) are invisible to the scheduler; modeled code
+//!   must keep its parallel fan-outs at width 1 (see
+//!   `tests/loom_models.rs`).
+//! * A model must be deterministic given the schedule (no wall-clock
+//!   branching, no RNG).
+//!
+//! Outside an active model (including when this crate is linked into a
+//! normal, non-`--cfg loom` build), every primitive delegates straight
+//! to its `std::sync` twin with the caller's orderings, so the types are
+//! usable in statics and cost one branch per operation.
+
+use std::sync::Mutex as StdMutex;
+
+mod sched;
+pub mod sync;
+pub mod thread;
+
+use sched::Sched;
+use std::sync::Arc;
+
+/// Serializes model runs: `cargo test` runs tests on parallel threads,
+/// and two concurrently-exploring models would interleave their real OS
+/// threads (harmless for correctness — schedulers are per-model and
+/// threads are tagged with their scheduler — but serial runs keep panic
+/// output readable and memory bounded).
+static MODEL_SERIAL: StdMutex<()> = StdMutex::new(());
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Exhaustively model-check `f` under the default preemption bound
+/// (`LOOM_MAX_PREEMPTIONS`, default 2). Panics if any explored schedule
+/// panics (assertion failure in the model) or deadlocks.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    model_bounded(env_usize("LOOM_MAX_PREEMPTIONS", 2), f);
+}
+
+/// `model` with an explicit preemption bound for tests that need deeper
+/// interleavings than the default.
+pub fn model_bounded<F>(bound: usize, f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let _serial = MODEL_SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    assert!(sched::current().is_none(), "loom: nested model() is not supported");
+    let f = Arc::new(f);
+    let max_iters = env_usize("LOOM_MAX_ITERS", 200_000);
+    let mut prefix: Vec<usize> = Vec::new();
+    let mut iters = 0usize;
+    loop {
+        iters += 1;
+        assert!(
+            iters <= max_iters,
+            "loom: schedule space exceeded LOOM_MAX_ITERS={max_iters}; \
+             shrink the model or raise the cap"
+        );
+        let sched = Sched::new(prefix.clone(), bound);
+        sched::run_root(&sched, f.clone());
+        sched.wait_all_finished();
+        sched.join_os_threads();
+        if let Some(msg) = sched.failure() {
+            panic!(
+                "loom: model failed after {iters} execution(s): {msg}\n\
+                 failing schedule prefix (tids at branch points): {prefix:?}"
+            );
+        }
+        match sched.next_prefix() {
+            Some(p) => prefix = p,
+            None => break,
+        }
+    }
+}
+
+/// Number of executions a model explores (diagnostic helper for the
+/// crate's own tests): runs the model to completion and returns how many
+/// schedules were executed.
+pub fn explore_count<F>(bound: usize, f: F) -> usize
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let _serial = MODEL_SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    assert!(sched::current().is_none(), "loom: nested model() is not supported");
+    let f = Arc::new(f);
+    let mut prefix: Vec<usize> = Vec::new();
+    let mut iters = 0usize;
+    loop {
+        iters += 1;
+        let sched = Sched::new(prefix.clone(), bound);
+        sched::run_root(&sched, f.clone());
+        sched.wait_all_finished();
+        sched.join_os_threads();
+        if let Some(msg) = sched.failure() {
+            panic!("loom: model failed after {iters} execution(s): {msg}");
+        }
+        match sched.next_prefix() {
+            Some(p) => prefix = p,
+            None => return iters,
+        }
+    }
+}

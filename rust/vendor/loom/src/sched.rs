@@ -1,0 +1,413 @@
+//! The token-passing exploration scheduler.
+//!
+//! Exactly one modeled thread holds the execution token at any moment;
+//! everyone else parks on the shared condvar. A thread gives the token
+//! up at *scheduling points* (atomic ops, lock ops, yields, blocking,
+//! finishing), where `pick_next` consults the DFS explorer: replay the
+//! recorded prefix first, then always take the first candidate, and
+//! record every branch point so `next_prefix` can flip the deepest
+//! untried alternative for the following execution.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    Runnable,
+    /// Waiting for `release(rid)`; rids are lock addresses or
+    /// join tokens, opaque and unique within one execution.
+    Blocked(usize),
+    Finished,
+}
+
+/// One recorded branch point: the runnable candidates (in exploration
+/// order) and which index was taken this execution.
+struct Decision {
+    candidates: Vec<usize>,
+    chosen: usize,
+}
+
+struct State {
+    status: Vec<Status>,
+    /// Thread currently holding the execution token.
+    active: usize,
+    /// Index of the next *branch* decision (points with >1 candidate).
+    decision: usize,
+    /// Replay prefix: the tid to take at each of the first
+    /// `prefix.len()` branch decisions.
+    prefix: Vec<usize>,
+    trace: Vec<Decision>,
+    preemptions: usize,
+    /// Scheduling points passed this execution; a runaway count means a
+    /// livelock (spin loop with no modeled yield) and fails the model
+    /// loudly instead of hanging the test under its `timeout` wrapper.
+    steps: usize,
+    failed: Option<String>,
+}
+
+pub(crate) struct Sched {
+    state: Mutex<State>,
+    cv: Condvar,
+    bound: usize,
+    os_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+thread_local! {
+    /// Set on modeled threads only; unregistered threads (e.g. a
+    /// `std::thread::scope` fan-out inside modeled code) fall through to
+    /// plain std behavior at every primitive.
+    static CURRENT: RefCell<Option<(Arc<Sched>, usize)>> = const { RefCell::new(None) };
+}
+
+pub(crate) fn current() -> Option<(Arc<Sched>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Join-wait token for thread `tid`: disjoint from heap addresses.
+fn join_rid(tid: usize) -> usize {
+    usize::MAX - tid
+}
+
+fn payload_str(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+impl Sched {
+    pub(crate) fn new(prefix: Vec<usize>, bound: usize) -> Arc<Sched> {
+        Arc::new(Sched {
+            state: Mutex::new(State {
+                status: Vec::new(),
+                active: 0,
+                decision: 0,
+                prefix,
+                trace: Vec::new(),
+                preemptions: 0,
+                steps: 0,
+                failed: None,
+            }),
+            cv: Condvar::new(),
+            bound,
+            os_handles: Mutex::new(Vec::new()),
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Choose who runs next; returns `None` when every thread finished
+    /// (or on deadlock, which sets `failed`). `voluntary` marks switches
+    /// that must not count against the preemption bound (blocking,
+    /// `yield_now`).
+    fn pick_next(&self, st: &mut State, cur: usize, voluntary: bool) -> Option<usize> {
+        let runnable: Vec<usize> = st
+            .status
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s, Status::Runnable))
+            .map(|(i, _)| i)
+            .collect();
+        if runnable.is_empty() {
+            if st.status.iter().all(|s| matches!(s, Status::Finished)) {
+                return None;
+            }
+            if st.failed.is_none() {
+                st.failed = Some(format!(
+                    "deadlock: no runnable thread (status: {:?})",
+                    st.status
+                ));
+            }
+            return None;
+        }
+        let cur_runnable = matches!(st.status.get(cur), Some(Status::Runnable));
+        let candidates: Vec<usize> = if !cur_runnable {
+            runnable
+        } else if voluntary {
+            // Voluntary yield: hand the token on. "Stay" is deliberately
+            // NOT an alternative — a yield in a spin loop would otherwise
+            // give the DFS an infinite spin-forever branch. This assumes
+            // yield loops are side-effect free between yields (standard
+            // loom guidance), so re-running the spin body without any
+            // other thread progressing cannot change the outcome.
+            let others: Vec<usize> = runnable.iter().copied().filter(|&t| t != cur).collect();
+            if others.is_empty() {
+                vec![cur]
+            } else {
+                others
+            }
+        } else if st.preemptions >= self.bound {
+            vec![cur]
+        } else {
+            let mut c = vec![cur];
+            c.extend(runnable.iter().copied().filter(|&t| t != cur));
+            c
+        };
+        let chosen = if candidates.len() == 1 {
+            candidates[0]
+        } else {
+            let pick = if st.decision < st.prefix.len() {
+                let want = st.prefix[st.decision];
+                if !candidates.contains(&want) {
+                    // A model must be schedule-deterministic; divergence
+                    // here means it branched on time, RNG, or an
+                    // unregistered thread.
+                    if st.failed.is_none() {
+                        st.failed = Some(format!(
+                            "schedule replay diverged: wanted tid {want}, \
+                             candidates {candidates:?} (model is nondeterministic)"
+                        ));
+                    }
+                    candidates[0]
+                } else {
+                    want
+                }
+            } else {
+                candidates[0]
+            };
+            let idx = candidates.iter().position(|&t| t == pick).unwrap_or(0);
+            st.trace.push(Decision { candidates: candidates.clone(), chosen: idx });
+            st.decision += 1;
+            pick
+        };
+        if !voluntary && cur_runnable && chosen != cur {
+            st.preemptions += 1;
+        }
+        st.active = chosen;
+        Some(chosen)
+    }
+
+    /// Give up the token at a scheduling point. `block_on: Some(rid)`
+    /// parks the thread until `release(rid)`. `quiet` suppresses the
+    /// propagation panic (for calls made while already unwinding).
+    fn switch(&self, tid: usize, block_on: Option<usize>, voluntary: bool, quiet: bool) {
+        let mut st = self.lock();
+        if st.failed.is_some() {
+            drop(st);
+            if quiet {
+                return;
+            }
+            panic!("loom: model failed in another thread");
+        }
+        st.steps += 1;
+        if st.steps > 1_000_000 {
+            st.failed = Some(
+                "livelock suspected: one execution passed 1e6 scheduling points \
+                 (a spin loop without a modeled yield?)"
+                    .to_string(),
+            );
+            self.cv.notify_all();
+            drop(st);
+            if quiet {
+                return;
+            }
+            panic!("loom: model failed in another thread");
+        }
+        if let Some(rid) = block_on {
+            st.status[tid] = Status::Blocked(rid);
+        }
+        match self.pick_next(&mut st, tid, voluntary || block_on.is_some()) {
+            Some(next) if next == tid => {}
+            _ => {
+                // Either another thread was chosen, or pick_next hit a
+                // deadlock (failed set, everyone gets woken to unwind).
+                self.cv.notify_all();
+                loop {
+                    if st.failed.is_some() {
+                        drop(st);
+                        if quiet {
+                            return;
+                        }
+                        panic!("loom: model failed in another thread");
+                    }
+                    if st.active == tid && st.status[tid] == Status::Runnable {
+                        break;
+                    }
+                    st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+    }
+
+    /// A plain scheduling point (before an atomic op / lock attempt).
+    pub(crate) fn yield_point(&self, tid: usize) {
+        self.switch(tid, None, false, std::thread::panicking());
+    }
+
+    /// A voluntary yield (`thread::yield_now` in a spin loop).
+    pub(crate) fn yield_voluntary(&self, tid: usize) {
+        self.switch(tid, None, true, std::thread::panicking());
+    }
+
+    /// Park until `rid` is released. Token-passing makes the caller's
+    /// preceding try-acquire + this block atomic: no other modeled
+    /// thread can run (and release the lock) in between.
+    pub(crate) fn block_on(&self, tid: usize, rid: usize) {
+        self.switch(tid, Some(rid), true, std::thread::panicking());
+    }
+
+    /// Wake every thread parked on `rid` and pass through a scheduling
+    /// point. Called from guard drops, so it must never panic.
+    pub(crate) fn release(&self, tid: usize, rid: usize) {
+        {
+            let mut st = self.lock();
+            for s in st.status.iter_mut() {
+                if *s == Status::Blocked(rid) {
+                    *s = Status::Runnable;
+                }
+            }
+        }
+        self.switch(tid, None, false, true);
+    }
+
+    /// Register a new modeled thread (starts Runnable, runs when
+    /// scheduled). Returns its tid.
+    pub(crate) fn register(&self) -> usize {
+        let mut st = self.lock();
+        st.status.push(Status::Runnable);
+        st.status.len() - 1
+    }
+
+    /// First wait of a freshly spawned thread: hold until the scheduler
+    /// hands it the token. Returns false when the model already failed
+    /// (the thread then skips its body entirely).
+    fn wait_first(&self, tid: usize) -> bool {
+        let mut st = self.lock();
+        loop {
+            if st.failed.is_some() {
+                return false;
+            }
+            if st.active == tid && st.status[tid] == Status::Runnable {
+                return true;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Mark `tid` finished, wake joiners, and pass the token on.
+    fn finish(&self, tid: usize, panic_msg: Option<String>) {
+        let mut st = self.lock();
+        if let Some(m) = panic_msg {
+            st.failed.get_or_insert(m);
+        }
+        st.status[tid] = Status::Finished;
+        let jr = join_rid(tid);
+        for s in st.status.iter_mut() {
+            if *s == Status::Blocked(jr) {
+                *s = Status::Runnable;
+            }
+        }
+        if st.failed.is_none() {
+            let _ = self.pick_next(&mut st, tid, true);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Block the calling modeled thread until `target` finishes.
+    pub(crate) fn join_wait(&self, tid: usize, target: usize) {
+        loop {
+            {
+                let st = self.lock();
+                if st.failed.is_some() {
+                    drop(st);
+                    if std::thread::panicking() {
+                        return;
+                    }
+                    panic!("loom: model failed in another thread");
+                }
+                if st.status[target] == Status::Finished {
+                    return;
+                }
+            }
+            // No other modeled thread can finish `target` between the
+            // check above and parking here (we hold the token).
+            self.block_on(tid, join_rid(target));
+        }
+    }
+
+    pub(crate) fn push_os_handle(&self, h: std::thread::JoinHandle<()>) {
+        self.os_handles.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+    }
+
+    pub(crate) fn wait_all_finished(&self) {
+        let mut st = self.lock();
+        while !st.status.iter().all(|s| matches!(s, Status::Finished)) {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    pub(crate) fn join_os_threads(&self) {
+        let handles: Vec<_> =
+            self.os_handles.lock().unwrap_or_else(|e| e.into_inner()).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    pub(crate) fn failure(&self) -> Option<String> {
+        self.lock().failed.clone()
+    }
+
+    /// DFS step: the prefix for the next execution, or `None` when the
+    /// whole (bounded) schedule space has been explored.
+    pub(crate) fn next_prefix(&self) -> Option<Vec<usize>> {
+        let st = self.lock();
+        for i in (0..st.trace.len()).rev() {
+            let d = &st.trace[i];
+            if d.chosen + 1 < d.candidates.len() {
+                let mut p: Vec<usize> =
+                    st.trace[..i].iter().map(|d| d.candidates[d.chosen]).collect();
+                p.push(d.candidates[d.chosen + 1]);
+                return Some(p);
+            }
+        }
+        None
+    }
+}
+
+/// Spawn a modeled thread running `f`, storing its result in `slot`.
+pub(crate) fn spawn_modeled<T, F>(
+    sched: &Arc<Sched>,
+    f: F,
+    slot: Arc<Mutex<Option<T>>>,
+) -> usize
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let tid = sched.register();
+    let sched2 = Arc::clone(sched);
+    let os = std::thread::spawn(move || {
+        CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&sched2), tid)));
+        if sched2.wait_first(tid) {
+            match catch_unwind(AssertUnwindSafe(f)) {
+                Ok(v) => {
+                    *slot.lock().unwrap_or_else(|e| e.into_inner()) = Some(v);
+                    sched2.finish(tid, None);
+                }
+                Err(p) => sched2.finish(tid, Some(payload_str(p))),
+            }
+        } else {
+            sched2.finish(tid, None);
+        }
+        CURRENT.with(|c| *c.borrow_mut() = None);
+    });
+    sched.push_os_handle(os);
+    tid
+}
+
+/// Launch the model closure as tid 0 of a fresh execution.
+pub(crate) fn run_root<F>(sched: &Arc<Sched>, f: Arc<F>)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let slot: Arc<Mutex<Option<()>>> = Arc::new(Mutex::new(None));
+    let tid = spawn_modeled(sched, move || f(), slot);
+    debug_assert_eq!(tid, 0);
+}

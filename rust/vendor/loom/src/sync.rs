@@ -1,0 +1,319 @@
+//! Modeled `std::sync` twins. Each operation is a scheduling point when
+//! the calling thread belongs to an active model; otherwise it delegates
+//! directly to `std`. Lock blocking is modeled as try-acquire +
+//! park-until-release, so the scheduler (not the OS) decides who wins a
+//! contended lock in every explored order.
+//!
+//! `Arc` is re-exported from `std` unchanged: the checker explores
+//! interleavings, not reference-count leaks.
+
+pub use std::sync::Arc;
+
+use crate::sched;
+use std::ops::{Deref, DerefMut};
+use std::sync::{LockResult, PoisonError, TryLockError};
+
+fn point() {
+    if let Some((sched, tid)) = sched::current() {
+        sched.yield_point(tid);
+    }
+}
+
+/// Park the current modeled thread until `rid` is released. Only called
+/// when `sched::current()` is Some (a failed try-acquire implies a
+/// modeled contender holds the lock; unmodeled threads use OS blocking).
+fn block_on(rid: usize) {
+    if let Some((sched, tid)) = sched::current() {
+        sched.block_on(tid, rid);
+    } else {
+        std::thread::yield_now();
+    }
+}
+
+fn release(rid: usize) {
+    if let Some((sched, tid)) = sched::current() {
+        sched.release(tid, rid);
+    }
+}
+
+// ---------------------------------------------------------------- Mutex
+
+pub struct Mutex<T> {
+    inner: std::sync::Mutex<T>,
+}
+
+pub struct MutexGuard<'a, T> {
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    rid: usize,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Mutex<T> {
+        Mutex { inner: std::sync::Mutex::new(t) }
+    }
+
+    fn rid(&self) -> usize {
+        self as *const Mutex<T> as usize
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if sched::current().is_none() {
+            return match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { inner: Some(g), rid: 0 }),
+                Err(p) => {
+                    Err(PoisonError::new(MutexGuard { inner: Some(p.into_inner()), rid: 0 }))
+                }
+            };
+        }
+        let rid = self.rid();
+        point();
+        loop {
+            match self.inner.try_lock() {
+                Ok(g) => return Ok(MutexGuard { inner: Some(g), rid }),
+                Err(TryLockError::Poisoned(p)) => {
+                    return Err(PoisonError::new(MutexGuard { inner: Some(p.into_inner()), rid }))
+                }
+                Err(TryLockError::WouldBlock) => block_on(rid),
+            }
+        }
+    }
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard taken")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard taken")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the OS lock first, then tell the scheduler: woken
+        // waiters re-try-acquire, so the order matters.
+        drop(self.inner.take());
+        if self.rid != 0 {
+            release(self.rid);
+        }
+    }
+}
+
+// --------------------------------------------------------------- RwLock
+
+pub struct RwLock<T> {
+    inner: std::sync::RwLock<T>,
+}
+
+pub struct RwLockReadGuard<'a, T> {
+    inner: Option<std::sync::RwLockReadGuard<'a, T>>,
+    rid: usize,
+}
+
+pub struct RwLockWriteGuard<'a, T> {
+    inner: Option<std::sync::RwLockWriteGuard<'a, T>>,
+    rid: usize,
+}
+
+impl<T> RwLock<T> {
+    pub const fn new(t: T) -> RwLock<T> {
+        RwLock { inner: std::sync::RwLock::new(t) }
+    }
+
+    fn rid(&self) -> usize {
+        self as *const RwLock<T> as usize
+    }
+
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        if sched::current().is_none() {
+            return match self.inner.read() {
+                Ok(g) => Ok(RwLockReadGuard { inner: Some(g), rid: 0 }),
+                Err(p) => Err(PoisonError::new(RwLockReadGuard {
+                    inner: Some(p.into_inner()),
+                    rid: 0,
+                })),
+            };
+        }
+        let rid = self.rid();
+        point();
+        loop {
+            match self.inner.try_read() {
+                Ok(g) => return Ok(RwLockReadGuard { inner: Some(g), rid }),
+                Err(TryLockError::Poisoned(p)) => {
+                    return Err(PoisonError::new(RwLockReadGuard {
+                        inner: Some(p.into_inner()),
+                        rid,
+                    }))
+                }
+                Err(TryLockError::WouldBlock) => block_on(rid),
+            }
+        }
+    }
+
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        if sched::current().is_none() {
+            return match self.inner.write() {
+                Ok(g) => Ok(RwLockWriteGuard { inner: Some(g), rid: 0 }),
+                Err(p) => Err(PoisonError::new(RwLockWriteGuard {
+                    inner: Some(p.into_inner()),
+                    rid: 0,
+                })),
+            };
+        }
+        let rid = self.rid();
+        point();
+        loop {
+            match self.inner.try_write() {
+                Ok(g) => return Ok(RwLockWriteGuard { inner: Some(g), rid }),
+                Err(TryLockError::Poisoned(p)) => {
+                    return Err(PoisonError::new(RwLockWriteGuard {
+                        inner: Some(p.into_inner()),
+                        rid,
+                    }))
+                }
+                Err(TryLockError::WouldBlock) => block_on(rid),
+            }
+        }
+    }
+}
+
+impl<T> Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard taken")
+    }
+}
+
+impl<T> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        drop(self.inner.take());
+        if self.rid != 0 {
+            release(self.rid);
+        }
+    }
+}
+
+impl<T> Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard taken")
+    }
+}
+
+impl<T> DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard taken")
+    }
+}
+
+impl<T> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        drop(self.inner.take());
+        if self.rid != 0 {
+            release(self.rid);
+        }
+    }
+}
+
+// -------------------------------------------------------------- atomics
+
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    use super::point;
+    use std::sync::atomic::Ordering::SeqCst;
+
+    /// The model explores interleavings under sequential consistency,
+    /// so every modeled access runs SeqCst; outside a model the caller's
+    /// ordering is passed straight through.
+    macro_rules! atomic_common {
+        ($name:ident, $std:ty, $prim:ty) => {
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $prim) -> $name {
+                    $name { inner: <$std>::new(v) }
+                }
+
+                pub fn load(&self, order: Ordering) -> $prim {
+                    if crate::sched::current().is_some() {
+                        point();
+                        self.inner.load(SeqCst)
+                    } else {
+                        self.inner.load(order)
+                    }
+                }
+
+                pub fn store(&self, v: $prim, order: Ordering) {
+                    if crate::sched::current().is_some() {
+                        point();
+                        self.inner.store(v, SeqCst)
+                    } else {
+                        self.inner.store(v, order)
+                    }
+                }
+
+                pub fn swap(&self, v: $prim, order: Ordering) -> $prim {
+                    if crate::sched::current().is_some() {
+                        point();
+                        self.inner.swap(v, SeqCst)
+                    } else {
+                        self.inner.swap(v, order)
+                    }
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    current: $prim,
+                    new: $prim,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$prim, $prim> {
+                    if crate::sched::current().is_some() {
+                        point();
+                        self.inner.compare_exchange(current, new, SeqCst, SeqCst)
+                    } else {
+                        self.inner.compare_exchange(current, new, success, failure)
+                    }
+                }
+            }
+        };
+    }
+
+    macro_rules! atomic_numeric {
+        ($name:ident, $std:ty, $prim:ty) => {
+            atomic_common!($name, $std, $prim);
+
+            impl $name {
+                pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                    if crate::sched::current().is_some() {
+                        point();
+                        self.inner.fetch_add(v, SeqCst)
+                    } else {
+                        self.inner.fetch_add(v, order)
+                    }
+                }
+
+                pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                    if crate::sched::current().is_some() {
+                        point();
+                        self.inner.fetch_sub(v, SeqCst)
+                    } else {
+                        self.inner.fetch_sub(v, order)
+                    }
+                }
+            }
+        };
+    }
+
+    atomic_common!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+    atomic_numeric!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+    atomic_numeric!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    atomic_numeric!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+}

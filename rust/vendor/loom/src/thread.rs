@@ -1,0 +1,60 @@
+//! Modeled threads: `loom::thread::spawn` registers the thread with the
+//! active scheduler so every one of its sync ops becomes a scheduling
+//! point. Outside a model it is a transparent `std::thread` wrapper.
+
+use crate::sched::{self, Sched};
+use std::sync::{Arc, Mutex};
+
+pub struct JoinHandle<T> {
+    inner: Inner<T>,
+}
+
+enum Inner<T> {
+    Std(std::thread::JoinHandle<T>),
+    Model { tid: usize, slot: Arc<Mutex<Option<T>>>, sched: Arc<Sched> },
+}
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    match sched::current() {
+        Some((sched, _)) => {
+            let slot: Arc<Mutex<Option<T>>> = Arc::new(Mutex::new(None));
+            let tid = sched::spawn_modeled(&sched, f, Arc::clone(&slot));
+            JoinHandle { inner: Inner::Model { tid, slot, sched } }
+        }
+        None => JoinHandle { inner: Inner::Std(std::thread::spawn(f)) },
+    }
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.inner {
+            Inner::Std(h) => h.join(),
+            Inner::Model { tid, slot, sched } => {
+                let (_, cur) = sched::current()
+                    .expect("loom: JoinHandle::join called off a modeled thread");
+                sched.join_wait(cur, tid);
+                match slot.lock().unwrap_or_else(|e| e.into_inner()).take() {
+                    Some(v) => Ok(v),
+                    // The target panicked; the model as a whole is already
+                    // failing, surface a join error like std would.
+                    None => Err(Box::new("loom: joined thread panicked")),
+                }
+            }
+        }
+    }
+}
+
+/// In a model: a *voluntary* scheduling point that always hands the
+/// token to another runnable thread (never counted as a preemption), so
+/// spin-retry loops let their writer make progress. Outside a model:
+/// `std::thread::yield_now`.
+pub fn yield_now() {
+    match sched::current() {
+        Some((sched, tid)) => sched.yield_voluntary(tid),
+        None => std::thread::yield_now(),
+    }
+}

@@ -120,7 +120,11 @@ fn session_tiers_account_every_token() {
     let mut sess = eng.prefill(&s.prompt).unwrap();
     let _ = eng.generate(&mut sess, 4).unwrap();
     let cache = &sess.caches[0][0];
-    assert_eq!(cache.len(), 700 + 3, "prompt + decode steps (first + last tokens are not fed back)");
+    assert_eq!(
+        cache.len(),
+        700 + 3,
+        "prompt + decode steps (first + last tokens are not fed back)"
+    );
     let dev = cache.device_ids().len();
     let idx = cache.indexed_ids().len();
     let over = cache.overflow_ids().len();

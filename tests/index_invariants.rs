@@ -331,7 +331,8 @@ fn prop_remove_insert_roundtrip_within_epsilon_and_no_tombstones_returned() {
             );
             // Exhaustive sweep: even asking for everything never surfaces
             // a tombstone.
-            let sweep = idx.search(&vec![0.0f32; d], total, &SearchParams { ef: total, nprobe: 64 });
+            let sweep =
+                idx.search(&vec![0.0f32; d], total, &SearchParams { ef: total, nprobe: 64 });
             for id in &sweep.ids {
                 prop_assert!(!is_removed(*id), "{}: sweep returned tombstoned {id}", idx.name());
             }

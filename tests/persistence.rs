@@ -31,7 +31,8 @@ use retrieval_attention::util::rng::Rng;
 use retrieval_attention::workload::tasks;
 use std::sync::Arc;
 
-const INDEX_METHODS: [Method; 4] = [Method::Flat, Method::Ivf, Method::Hnsw, Method::RetrievalAttention];
+const INDEX_METHODS: [Method; 4] =
+    [Method::Flat, Method::Ivf, Method::Hnsw, Method::RetrievalAttention];
 
 fn head_setup(
     quant: QuantMode,
@@ -205,7 +206,8 @@ fn cow_fork_shares_frozen_state_and_diverges_on_write() {
         &[8000],
         true,
     );
-    assert!(fork.insert_batch(&fgrown, &[8000], &retrieval_attention::index::InsertContext::none()));
+    let ctx = retrieval_attention::index::InsertContext::none();
+    assert!(fork.insert_batch(&fgrown, &[8000], &ctx));
     let mut probe2 = vec![0.0f32; 16];
     probe2[2] = 1.0;
     assert!(fork.retrieve(&probe2, 4).ids.contains(&8000), "fork lost its own insert");
@@ -262,7 +264,12 @@ fn engine_snapshot_roundtrip_decodes_identically() {
         assert_eq!(restored.drains, sess.drains);
         // Zero index-rebuild work on the restored session (the acceptance
         // criterion): no maintenance job of any kind has run.
-        assert_eq!(restored.maint.stats.swaps, 0, "{}: restore did maintenance work", method.label());
+        assert_eq!(
+            restored.maint.stats.swaps,
+            0,
+            "{}: restore did maintenance work",
+            method.label()
+        );
         // Searches over the restored session are bit-identical.
         if method != Method::StreamingLlm {
             let probe: Vec<f32> = sess.caches[0][0].key(200).to_vec();
@@ -280,7 +287,12 @@ fn engine_snapshot_roundtrip_decodes_identically() {
             tok_b = eng.decode_step(&mut restored, tok_b).unwrap().token;
             assert_eq!(tok_a, tok_b, "{}: diverged at step {step}", method.label());
         }
-        assert_eq!(restored.maint.stats.swaps, 0, "{}: decode triggered index work", method.label());
+        assert_eq!(
+            restored.maint.stats.swaps,
+            0,
+            "{}: decode triggered index work",
+            method.label()
+        );
         sess.shutdown_maintenance();
         restored.shutdown_maintenance();
     }

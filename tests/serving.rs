@@ -27,7 +27,8 @@ fn replica_serves_one_request() {
     let replica = Replica::spawn(cfg(Method::RetrievalAttention));
     let mut rng = Rng::seed_from(1);
     let s = tasks::passkey(&mut rng, 700, 0.3);
-    let rx = replica.submit(Request { id: 1, prompt: s.prompt.clone(), max_tokens: 2, session: None });
+    let rx =
+        replica.submit(Request { id: 1, prompt: s.prompt.clone(), max_tokens: 2, session: None });
     let (tokens, m) = collect(&rx).unwrap();
     assert_eq!(tokens.len(), 2);
     assert!(s.passed(&tokens), "wrong answer: {tokens:?} want {:?}", s.expect);
@@ -44,7 +45,9 @@ fn continuous_batching_interleaves_sessions() {
         .iter()
         .enumerate()
         .map(|(i, s)| {
-            replica.submit(Request { id: i as u64, prompt: s.prompt.clone(), max_tokens: 2, session: None })
+            let req =
+                Request { id: i as u64, prompt: s.prompt.clone(), max_tokens: 2, session: None };
+            replica.submit(req)
         })
         .collect();
     for (rx, s) in rxs.iter().zip(samples.iter()) {
@@ -200,7 +203,8 @@ fn bad_request_fails_gracefully() {
     // The worker must still serve subsequent requests.
     let mut rng = Rng::seed_from(6);
     let s = tasks::passkey(&mut rng, 400, 0.2);
-    let rx = replica.submit(Request { id: 10, prompt: s.prompt.clone(), max_tokens: 2, session: None });
+    let rx =
+        replica.submit(Request { id: 10, prompt: s.prompt.clone(), max_tokens: 2, session: None });
     let (tokens, _) = collect(&rx).unwrap();
     assert!(s.passed(&tokens));
 }

@@ -81,7 +81,8 @@ fn park_resume_churn_over_many_sessions() {
         collect(&rx).unwrap_or_else(|e| panic!("close {si} failed: {e}"));
     }
     let s = tasks::passkey(&mut Rng::seed_from(9), 400, 0.6);
-    let rx = rep.submit(Request { id: req_id + 1, prompt: s.prompt.clone(), max_tokens: 2, session: None });
+    let req = Request { id: req_id + 1, prompt: s.prompt.clone(), max_tokens: 2, session: None };
+    let rx = rep.submit(req);
     let (tokens, _) = collect(&rx).unwrap();
     assert!(s.passed(&tokens), "replica unhealthy after soak");
 }

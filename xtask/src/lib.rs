@@ -1,0 +1,4 @@
+//! Repo task runner library. The only task so far is the invariant
+//! linter (`cargo xtask lint`) — see [`lint`].
+
+pub mod lint;

@@ -1,0 +1,402 @@
+//! The repo invariant linter: lexical rules the type system cannot carry.
+//!
+//! Four rules, each encoding a decision documented in
+//! `docs/concurrency.md`:
+//!
+//! 1. **`unsafe` needs a justification.** Every `unsafe` token must sit
+//!    next to a `// SAFETY:` comment (same line, or in the contiguous
+//!    comment/attribute block directly above). `unsafe fn` declarations
+//!    may instead carry a `/// # Safety` doc section — that is the public
+//!    contract form.
+//! 2. **The sync facade is the only door.** `std::sync::atomic` and
+//!    `std::sync::RwLock` may be named only inside `util/sync.rs`;
+//!    everything else imports `crate::util::sync` so `--cfg loom` builds
+//!    swap in the model-checked primitives.
+//! 3. **`Ordering::Relaxed` is allowlisted per file.** Relaxed is correct
+//!    only for pure counters; each allowlisted file carries a
+//!    "Relaxed (allowlisted counter)" rationale comment, and any new use
+//!    must be argued into [`RELAXED_ALLOWLIST`].
+//! 4. **No `.unwrap()` / `.expect(` on serving paths.** Non-test code
+//!    under `model/`, `coordinator/`, `server/` and `store/` must
+//!    propagate or degrade, never panic — a panic there kills a worker
+//!    thread or poisons shared state mid-protocol.
+//!
+//! The linter is deliberately **lexical**: comments and string/char
+//! literals are masked out first, then `#[cfg(test)]` item regions are
+//! tracked by brace depth, then the rules run on what remains. No parser
+//! dependency, no false positives from tokens inside strings or docs.
+
+/// One rule violation at a specific line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Path relative to the linted root (e.g. `kernel/x86.rs`).
+    pub file: String,
+    /// 1-indexed line number.
+    pub line: usize,
+    /// Stable rule identifier (`unsafe-no-safety`, `stray-std-sync`,
+    /// `relaxed-ordering`, `banned-unwrap`).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Files (by `/`-separated path relative to the linted root) allowed to
+/// use `Ordering::Relaxed`. Every entry is a pure counter whose value
+/// guards no other memory; see docs/concurrency.md for the argument.
+pub const RELAXED_ALLOWLIST: &[&str] = &[
+    // Work-claim / index-handout counters; claimed data is synchronized
+    // by scope join (par_map) or channel send (router, coordinator).
+    "util/parallel.rs",
+    "coordinator/mod.rs",
+    "coordinator/router.rs",
+    // Monotonic statistics counters.
+    "runtime/mod.rs",
+    // Spill-dir uniqueness counter.
+    "store/cache.rs",
+];
+
+/// Directories (relative to the linted root) where non-test `.unwrap()` /
+/// `.expect(` are banned.
+pub const NO_PANIC_DIRS: &[&str] = &["model/", "coordinator/", "server/", "store/"];
+
+/// The one file allowed to name `std::sync::atomic` / `std::sync::RwLock`.
+pub const SYNC_FACADE: &str = "util/sync.rs";
+
+/// Lint one file's source. `rel_path` is `/`-separated and relative to
+/// the linted root (`rust/src`); the rules that key on location
+/// (allowlists, banned dirs, the facade itself) match against it.
+pub fn lint_source(rel_path: &str, src: &str) -> Vec<Violation> {
+    let masked = mask(src);
+    let masked_lines: Vec<&str> = masked.lines().collect();
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let test_lines = test_region_lines(&masked_lines);
+
+    let mut out = Vec::new();
+    let is_facade = rel_path == SYNC_FACADE;
+    let relaxed_ok = RELAXED_ALLOWLIST.contains(&rel_path);
+    let no_panic = NO_PANIC_DIRS.iter().any(|d| rel_path.starts_with(d));
+
+    for (i, line) in masked_lines.iter().enumerate() {
+        let ln = i + 1;
+        let in_test = test_lines.get(i).copied().unwrap_or(false);
+
+        if contains_word(line, "unsafe") && !has_safety_adjacent(&masked_lines, &raw_lines, i) {
+            out.push(Violation {
+                file: rel_path.to_string(),
+                line: ln,
+                rule: "unsafe-no-safety",
+                message: "`unsafe` without an adjacent `// SAFETY:` comment \
+                          (or `/// # Safety` doc section for an unsafe fn)"
+                    .to_string(),
+            });
+        }
+
+        if !is_facade && (line.contains("std::sync::atomic") || line.contains("std::sync::RwLock"))
+        {
+            out.push(Violation {
+                file: rel_path.to_string(),
+                line: ln,
+                rule: "stray-std-sync",
+                message: "use crate::util::sync instead of std::sync::atomic / \
+                          std::sync::RwLock (loom facade rule)"
+                    .to_string(),
+            });
+        }
+
+        if !relaxed_ok && line.contains("Ordering::Relaxed") {
+            out.push(Violation {
+                file: rel_path.to_string(),
+                line: ln,
+                rule: "relaxed-ordering",
+                message: "Ordering::Relaxed outside the allowlist; use Acquire/Release \
+                          or argue this file into lint::RELAXED_ALLOWLIST"
+                    .to_string(),
+            });
+        }
+
+        if no_panic && !in_test {
+            // `.expect_err(` never matches: the `(` must follow `expect`.
+            if line.contains(".unwrap()") || line.contains(".expect(") {
+                out.push(Violation {
+                    file: rel_path.to_string(),
+                    line: ln,
+                    rule: "banned-unwrap",
+                    message: "unwrap/expect on a serving path; propagate the error or \
+                              degrade explicitly"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Replace the contents of comments and string/char literals with spaces,
+/// preserving line structure, so token rules never fire inside them.
+/// Handles line and nested block comments, escaped strings, raw (and
+/// byte/raw-byte) strings, and distinguishes char literals from
+/// lifetimes (`'a` / `'static` stay; `'x'`, `'\n'` are masked).
+pub fn mask(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+
+    // Push `count` chars starting at i as blanks (newlines preserved).
+    let blank = |out: &mut String, b: &[char], from: usize, to: usize| {
+        for &c in &b[from..to] {
+            out.push(if c == '\n' { '\n' } else { ' ' });
+        }
+    };
+
+    while i < n {
+        let c = b[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let mut j = i;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            blank(&mut out, &b, i, j);
+            i = j;
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, &b, i, j);
+            i = j;
+            continue;
+        }
+        // Raw / byte / byte-raw strings: r"..", r#".."#, b".." , br#".."#.
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if b[j] == 'b' {
+                j += 1;
+            }
+            let raw = j < n && b[j] == 'r';
+            if raw {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while raw && j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' && (raw || b[i] == 'b') {
+                // Opening found: scan to the matching close.
+                let mut k = j + 1;
+                'scan: while k < n {
+                    if b[k] == '\\' && !raw {
+                        k += 2;
+                        continue;
+                    }
+                    if b[k] == '"' {
+                        let mut h = 0usize;
+                        while h < hashes && k + 1 + h < n && b[k + 1 + h] == '#' {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            k += 1 + hashes;
+                            break 'scan;
+                        }
+                    }
+                    k += 1;
+                }
+                blank(&mut out, &b, i, k.min(n));
+                i = k.min(n);
+                continue;
+            }
+            // Not a string prefix after all: fall through as plain chars.
+        }
+        // Plain string.
+        if c == '"' {
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            blank(&mut out, &b, i, j.min(n));
+            i = j.min(n);
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            // Escaped char: '\X...' up to the closing quote. Start past
+            // the escaped character so '\'' terminates correctly.
+            if i + 1 < n && b[i + 1] == '\\' {
+                let mut j = i + 3;
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                blank(&mut out, &b, i, (j + 1).min(n));
+                i = (j + 1).min(n);
+                continue;
+            }
+            // Simple char: 'x'.
+            if i + 2 < n && b[i + 2] == '\'' {
+                blank(&mut out, &b, i, i + 3);
+                i += 3;
+                continue;
+            }
+            // Lifetime: keep as-is.
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Whether `needle` occurs in `line` as a standalone word (not part of a
+/// longer identifier).
+fn contains_word(line: &str, needle: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(needle) {
+        let start = from + pos;
+        let end = start + needle.len();
+        let pre_ok = start == 0 || !is_ident(bytes[start - 1]);
+        let post_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Whether line `idx` (0-based, containing an `unsafe` token) has a
+/// justification: `SAFETY:` on the same line's comment, or in the
+/// contiguous comment/attribute block directly above. `unsafe fn`
+/// declarations additionally accept a `/// # Safety` doc heading there.
+fn has_safety_adjacent(masked: &[&str], raw: &[&str], idx: usize) -> bool {
+    let accepts_doc = {
+        let m = masked[idx];
+        contains_word(m, "fn") && contains_word(m, "unsafe")
+    };
+    if raw[idx].contains("SAFETY:") {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let t = raw[i].trim_start();
+        if t.starts_with("//") {
+            if t.contains("SAFETY:") || (accepts_doc && t.contains("# Safety")) {
+                return true;
+            }
+            continue;
+        }
+        // Attributes (and blank lines) between the comment and the item
+        // don't break adjacency: `// SAFETY:` above `#[target_feature]`.
+        if t.starts_with("#[") || t.starts_with("#![") || t.is_empty() {
+            continue;
+        }
+        break;
+    }
+    false
+}
+
+/// Per-line flags: true when the line falls inside a `#[cfg(test)]` item
+/// (tracked by brace depth on the masked source). Conservative in the
+/// linter's favor: an un-braced `#[cfg(test)]` item extends to EOF.
+fn test_region_lines(masked: &[&str]) -> Vec<bool> {
+    let mut flags = vec![false; masked.len()];
+    let mut i = 0;
+    while i < masked.len() {
+        if masked[i].contains("#[cfg(test)]") {
+            let mut depth = 0i64;
+            let mut started = false;
+            let mut j = i;
+            while j < masked.len() {
+                for ch in masked[j].chars() {
+                    match ch {
+                        '{' => {
+                            depth += 1;
+                            started = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if started && depth <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            let end = j.min(masked.len() - 1);
+            for f in flags.iter_mut().take(end + 1).skip(i) {
+                *f = true;
+            }
+            i = end + 1;
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+/// Walk `root` recursively and lint every `.rs` file, returning all
+/// violations sorted by (file, line). `root` is typically `rust/src`.
+pub fn lint_tree(root: &std::path::Path) -> std::io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in files {
+        let src = std::fs::read_to_string(&path)?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        out.extend(lint_source(&rel, &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &std::path::Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

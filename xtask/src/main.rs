@@ -1,0 +1,50 @@
+//! `cargo xtask <task>` — repo task runner.
+//!
+//! Tasks:
+//! * `lint` — run the concurrency/unsafe invariant linter over `rust/src`
+//!   (see `xtask/src/lint.rs` and `docs/concurrency.md`). Exits non-zero
+//!   on any violation; CI runs this on every push.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn lint_root() -> PathBuf {
+    // xtask lives at <repo>/xtask; the linted tree is <repo>/rust/src.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("rust").join("src")
+}
+
+fn run_lint() -> ExitCode {
+    let root = lint_root();
+    match xtask::lint::lint_tree(&root) {
+        Ok(violations) if violations.is_empty() => {
+            eprintln!("xtask lint: clean ({})", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                eprintln!("{v}");
+            }
+            eprintln!("xtask lint: {} violation(s)", violations.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("xtask lint: cannot read {}: {e}", root.display());
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => run_lint(),
+        other => {
+            eprintln!(
+                "usage: cargo xtask <task>\n\ntasks:\n  lint   run the repo invariant linter \
+                 over rust/src\n\nunknown task: {:?}",
+                other.unwrap_or("<none>")
+            );
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,33 @@
+// Linter fixture: panics on serving paths. Linted as model/... and as
+// util/... to exercise both sides of the directory rule.
+
+pub fn bad_unwrap(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn bad_expect(v: Option<u32>) -> u32 {
+    v.expect("fixture")
+}
+
+pub fn fine_unwrap_or(v: Option<u32>) -> u32 {
+    v.unwrap_or(0)
+}
+
+pub fn fine_unwrap_or_else(v: Option<u32>) -> u32 {
+    v.unwrap_or_else(|| 0)
+}
+
+pub fn fine_expect_err(v: Result<(), u32>) -> u32 {
+    v.expect_err("fixture")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+        let r: Result<u32, ()> = Ok(2);
+        assert_eq!(r.expect("fine in tests"), 2);
+    }
+}

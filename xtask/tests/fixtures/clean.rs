@@ -1,0 +1,22 @@
+// Linter fixture: decoys that must NOT fire any rule.
+//
+// This comment mentions .unwrap() and .expect("...") and unsafe and
+// std::sync::atomic and Ordering::Relaxed — all masked.
+
+pub fn strings<'a>(s: &'a str) -> String {
+    let _lifetime: &'a str = s;
+    let _char = 'u';
+    let _quote = '"';
+    let _escaped = '\'';
+    let msg = "calling .unwrap() inside a string is unsafe, allegedly";
+    let raw = r#"std::sync::atomic::AtomicBool and "quoted" Ordering::Relaxed"#;
+    let bytes = b"unsafe .expect(";
+    /* block comments may mention unsafe too,
+    even across lines: .unwrap() */
+    format!("{msg}{raw}{}", bytes.len())
+}
+
+pub fn unsafety_is_not_unsafe(unsafety: u32) -> u32 {
+    // The word boundary matters: `unsafety` contains `unsafe`.
+    unsafety + 1
+}

@@ -1,0 +1,39 @@
+// Linter fixture: unsafe with and without justification. Never compiled.
+
+pub fn bad_block(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+pub fn good_block(p: *const u8) -> u8 {
+    // SAFETY: the caller guarantees p is valid (fixture).
+    unsafe { *p }
+}
+
+/// Reads a raw pointer.
+///
+/// # Safety
+/// `p` must be valid for reads.
+pub unsafe fn good_fn(p: *const u8) -> u8 {
+    *p
+}
+
+pub unsafe fn bad_fn(p: *const u8) -> u8 {
+    *p
+}
+
+struct Wrapper(*mut u8);
+
+// SAFETY: fixture — the pointer is never aliased.
+unsafe impl Send for Wrapper {}
+
+unsafe impl Sync for Wrapper {}
+
+pub fn trailing(p: *const u8) -> u8 {
+    unsafe { *p } // SAFETY: same-line justification counts.
+}
+
+// SAFETY: attributes between the comment and the item keep adjacency.
+#[inline]
+pub unsafe fn attr_between(p: *const u8) -> u8 {
+    *p
+}

@@ -1,0 +1,13 @@
+// Linter fixture: Relaxed ordering outside the allowlist.
+
+use crate::util::sync::{AtomicU64, Ordering};
+
+pub static HITS: AtomicU64 = AtomicU64::new(0);
+
+pub fn record() {
+    HITS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn read() -> u64 {
+    HITS.load(Ordering::Acquire)
+}

@@ -1,0 +1,18 @@
+// Linter fixture: direct std::sync primitives outside the facade.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+pub static COUNT: AtomicUsize = AtomicUsize::new(0);
+
+pub fn bump() -> usize {
+    COUNT.fetch_add(1, Ordering::SeqCst)
+}
+
+pub fn lock(l: &RwLock<u32>) -> u32 {
+    *l.read().unwrap()
+}
+
+pub fn qualified() -> std::sync::atomic::AtomicBool {
+    std::sync::atomic::AtomicBool::new(false)
+}

@@ -1,0 +1,124 @@
+//! Fixture tests for the invariant linter, plus the tree gate: the real
+//! `rust/src` must be lint-clean, enforced on every `cargo test` (tier-1),
+//! not just when CI remembers to run `cargo xtask lint`.
+
+use xtask::lint::{lint_source, lint_tree, Violation};
+
+fn rules<'a>(v: &'a [Violation], rule: &str) -> Vec<&'a Violation> {
+    v.iter().filter(|v| v.rule == rule).collect()
+}
+
+#[test]
+fn missing_safety_fixture() {
+    let src = include_str!("fixtures/missing_safety.rs");
+    let v = lint_source("kernel/missing_safety.rs", src);
+    let unsafe_v = rules(&v, "unsafe-no-safety");
+    // bad_block's block, bad_fn's declaration, and the uncommented
+    // `unsafe impl Sync` — and nothing else.
+    assert_eq!(unsafe_v.len(), 3, "got: {v:?}");
+    let lines: Vec<usize> = unsafe_v.iter().map(|v| v.line).collect();
+    let text: Vec<&str> = src.lines().collect();
+    for &ln in &lines {
+        let l = text[ln - 1];
+        assert!(
+            l.contains("unsafe"),
+            "violation line {ln} does not contain unsafe: {l}"
+        );
+    }
+    // The justified sites are specifically absent.
+    for (ln, l) in text.iter().enumerate() {
+        if l.contains("good_block") || l.contains("good_fn") || l.contains("attr_between") {
+            assert!(!lines.contains(&(ln + 1)), "justified site flagged at {}", ln + 1);
+        }
+    }
+    assert!(rules(&v, "banned-unwrap").is_empty());
+}
+
+#[test]
+fn stray_atomic_fixture() {
+    let src = include_str!("fixtures/stray_atomic.rs");
+    let v = lint_source("index/stray_atomic.rs", src);
+    let stray = rules(&v, "stray-std-sync");
+    // The two imports and the two fully-qualified uses.
+    assert_eq!(stray.len(), 4, "got: {v:?}");
+    // The same source inside the facade file is exempt.
+    let facade = lint_source("util/sync.rs", src);
+    assert!(rules(&facade, "stray-std-sync").is_empty());
+}
+
+#[test]
+fn banned_unwrap_fixture() {
+    let src = include_str!("fixtures/banned_unwrap.rs");
+    let v = lint_source("model/banned_unwrap.rs", src);
+    let banned = rules(&v, "banned-unwrap");
+    // bad_unwrap + bad_expect; the unwrap_or/unwrap_or_else/expect_err
+    // variants and the #[cfg(test)] module are exempt.
+    assert_eq!(banned.len(), 2, "got: {v:?}");
+    let text: Vec<&str> = src.lines().collect();
+    for viol in &banned {
+        assert!(
+            text[viol.line - 1].contains(".unwrap()") || text[viol.line - 1].contains(".expect("),
+            "bogus line {}",
+            viol.line
+        );
+        assert!(
+            !text[viol.line - 1].contains("fine_"),
+            "exempt form flagged at {}",
+            viol.line
+        );
+    }
+    // Outside the banned directories the same code is fine.
+    let outside = lint_source("util/banned_unwrap.rs", src);
+    assert!(rules(&outside, "banned-unwrap").is_empty());
+    // Every banned directory root triggers the rule.
+    for dir in ["model/", "coordinator/", "server/", "store/"] {
+        let v = lint_source(&format!("{dir}x.rs"), "fn f(v: Option<u32>) -> u32 { v.unwrap() }\n");
+        assert_eq!(rules(&v, "banned-unwrap").len(), 1, "{dir}");
+    }
+}
+
+#[test]
+fn relaxed_fixture() {
+    let src = include_str!("fixtures/relaxed.rs");
+    let v = lint_source("model/relaxed.rs", src);
+    // Only the Relaxed line — the Acquire load is fine anywhere.
+    assert_eq!(rules(&v, "relaxed-ordering").len(), 1, "got: {v:?}");
+    // Allowlisted files may use Relaxed.
+    let allowed = lint_source("util/parallel.rs", src);
+    assert!(rules(&allowed, "relaxed-ordering").is_empty());
+}
+
+#[test]
+fn clean_fixture_has_no_violations() {
+    let src = include_str!("fixtures/clean.rs");
+    let v = lint_source("model/clean.rs", src);
+    assert!(v.is_empty(), "decoys fired: {v:?}");
+}
+
+#[test]
+fn masking_strips_comments_and_strings_only() {
+    use xtask::lint::mask;
+    let src = "let a = \"unsafe\"; // unsafe\nlet b = r#\"x\"y\"#; /* .unwrap() */ let c = 'x';\n";
+    let m = mask(src);
+    assert!(!m.contains("unsafe"));
+    assert!(!m.contains(".unwrap()"));
+    assert!(m.contains("let a"));
+    assert!(m.contains("let b"));
+    assert!(m.contains("let c"));
+    // Line structure is preserved for stable line numbers.
+    assert_eq!(m.lines().count(), src.lines().count());
+}
+
+/// The tree gate: rust/src itself must be lint-clean. This runs in plain
+/// `cargo test` (tier-1), so a violation fails the suite even if nobody
+/// runs `cargo xtask lint`.
+#[test]
+fn tree_is_lint_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../rust/src");
+    let violations = lint_tree(&root).expect("rust/src must be readable");
+    assert!(
+        violations.is_empty(),
+        "rust/src has lint violations:\n{}",
+        violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
