@@ -15,6 +15,11 @@
 //! contrast for the streaming-eviction regime (generation-based dense-id
 //! remap epochs vs tombstones-only).
 //!
+//! New with the continuous-batching scheduler: a multi-session throughput
+//! profile (1/4/16 resident sessions driven through `Engine::decode_wave`)
+//! reporting tokens/sec/replica and p50 inter-token latency, recorded
+//! under `multi_session` in the `BENCH_decode.json` summary.
+//!
 //! `cargo bench --bench decode_latency [-- full]`
 //!
 //! Runs against PJRT artifacts when present, the native backend otherwise.
@@ -73,6 +78,70 @@ fn growth_profile(
     let early: f64 = per_token[..w].iter().sum::<f64>() / w as f64;
     let late: f64 = per_token[per_token.len() - w..].iter().sum::<f64>() / w as f64;
     (early, late, sess.drained_tokens, sess.drains)
+}
+
+/// Continuous-batching throughput: `residents` synthetic sessions decoded
+/// together through `Engine::decode_wave` — the replica worker's fused
+/// step — bypassing the channel/scheduler layer so the numbers isolate
+/// the wave fusion itself from thread-scheduling noise. Each wave emits
+/// one token per resident, so a wave's duration IS every resident's
+/// inter-token latency, and tokens/sec/replica is residents × waves over
+/// the measured wall time.
+fn multi_session_profile(engine: &Engine, residents: &[usize], n: usize, waves: usize) -> Value {
+    use retrieval_attention::model::WaveItem;
+    let spec = engine.spec().clone();
+    let mut cases: Vec<Value> = Vec::new();
+    for &r in residents {
+        let mut sessions: Vec<_> = (0..r)
+            .map(|_| {
+                engine
+                    .synthetic_session(heads_for(&spec, n), Method::RetrievalAttention)
+                    .expect("session")
+            })
+            .collect();
+        let mut toks: Vec<u32> = (1..=r as u32).collect();
+        let mut wave_s: Vec<f64> = Vec::with_capacity(waves);
+        // Wave 0 is warmup (first-touch allocation, index warm paths).
+        for w in 0..=waves {
+            let mut items: Vec<WaveItem> = sessions
+                .iter_mut()
+                .zip(toks.iter())
+                .map(|(sess, &token)| WaveItem { sess, token })
+                .collect();
+            let t = std::time::Instant::now();
+            let outs = engine.decode_wave(&mut items);
+            let dt = t.elapsed().as_secs_f64();
+            drop(items);
+            for (tok, out) in toks.iter_mut().zip(outs) {
+                *tok = black_box(out.expect("wave decode").token % 97);
+            }
+            if w > 0 {
+                wave_s.push(dt);
+            }
+        }
+        for sess in &mut sessions {
+            sess.shutdown_maintenance();
+        }
+        let wall: f64 = wave_s.iter().sum();
+        let mut sorted = wave_s.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let p50 = sorted[sorted.len() / 2];
+        let tokens = (r * waves) as f64;
+        let tps = if wall > 0.0 { tokens / wall } else { 0.0 };
+        println!(
+            "multi-session/residents={r}: n={n} waves={waves} \
+             tokens/s/replica={tps:.1} p50-inter-token={:.3}ms",
+            p50 * 1e3,
+        );
+        let mut o = Value::obj();
+        o.set("residents", r)
+            .set("n", n)
+            .set("waves", waves)
+            .set("tokens_per_s_replica", tps)
+            .set("p50_inter_token_s", p50);
+        cases.push(o);
+    }
+    Value::Arr(cases)
 }
 
 /// The search-phase profile of the tentpole: quantized scan tier
@@ -218,6 +287,7 @@ fn write_bench_summary(
     search: Value,
     decode_cases: Option<Value>,
     session_snapshot: Option<Value>,
+    multi_session: Option<Value>,
 ) {
     let mut out = Value::obj();
     out.set("profile", profile)
@@ -228,6 +298,9 @@ fn write_bench_summary(
     }
     if let Some(snap) = session_snapshot {
         out.set("session_snapshot", snap);
+    }
+    if let Some(ms) = multi_session {
+        out.set("multi_session", ms);
     }
     std::fs::write("BENCH_decode.json", out.to_string_pretty()).ok();
 }
@@ -258,7 +331,10 @@ fn smoke() {
     cfg.model = "llama3-mini".into();
     let engine = Engine::from_config(cfg).expect("engine");
     let snap = session_snapshot_profile(&engine, &[1_024]);
-    write_bench_summary("smoke", search, None, Some(snap));
+    // Tiny continuous-batching profile: the wave entry point must produce
+    // throughput numbers even at smoke geometry.
+    let ms = multi_session_profile(&engine, &[1, 2], 512, 3);
+    write_bench_summary("smoke", search, None, Some(snap), Some(ms));
     let text = std::fs::read_to_string("BENCH_decode.json").expect("BENCH_decode.json missing");
     let v = json::parse(&text).expect("BENCH_decode.json must parse");
     let cases = v.get("search_phase").and_then(Value::as_arr).expect("search_phase array");
@@ -271,6 +347,14 @@ fn smoke() {
     for c in snaps {
         let bytes = c.get("bytes_on_disk").and_then(Value::as_f64).expect("bytes field");
         assert!(bytes > 0.0, "empty session snapshot in smoke profile");
+    }
+    let ms = v.get("multi_session").and_then(Value::as_arr).expect("multi_session array");
+    assert!(!ms.is_empty(), "no multi-session cases recorded");
+    for c in ms {
+        let tps = c.get("tokens_per_s_replica").and_then(Value::as_f64).expect("throughput field");
+        assert!(tps > 0.0, "implausible multi-session throughput: {tps}");
+        let p50 = c.get("p50_inter_token_s").and_then(Value::as_f64).expect("p50 field");
+        assert!(p50 > 0.0, "implausible inter-token p50: {p50}");
     }
     println!(
         "bench-smoke: OK ({} search-phase cases, kernel = {})",
@@ -321,6 +405,12 @@ fn main() {
     // session-rebuild cost a `continue` turn avoids (64K/128K in full). ---
     let snap_lengths: &[usize] = if full { &[65_536, 131_072] } else { &[16_384] };
     let session_snapshot = session_snapshot_profile(&engine, snap_lengths);
+
+    // --- Continuous batching: tokens/sec/replica and p50 inter-token
+    // latency at 1/4/16 resident sessions through the fused wave step. ---
+    let ms_n = if full { 8_192 } else { 2_048 };
+    let ms_waves = if full { 32 } else { 12 };
+    let multi_session = multi_session_profile(&engine, &[1, 4, 16], ms_n, ms_waves);
 
     // --- Long-generation flatness: worker on / sync drain / drain off. ---
     let n = if full { 16_384 } else { 2_048 };
@@ -469,5 +559,6 @@ fn main() {
         search,
         Some(b.to_json()),
         Some(session_snapshot),
+        Some(multi_session),
     );
 }

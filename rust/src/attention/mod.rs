@@ -73,6 +73,84 @@ pub fn attend_subset(
     PartialAttention { o: acc, lse: m + l.ln() }
 }
 
+/// Multi-query attention for one GQA group: every query head's attention
+/// over its own candidate id set of the group's shared `(keys, values)`.
+/// The heads' id sets are unioned and ALL heads are scored against the
+/// union rows in one batched multi-query gather
+/// ([`kernel::dot_gather_mq`]) — each candidate key row is read once per
+/// group instead of once per head. This is the wave scheduler's fused
+/// host-attention read.
+///
+/// **Bit-identical** to calling [`attend_subset`] once per head: the
+/// per-(query, row) dot products go through the same backend `dot`
+/// reduction, and each head's two-pass softmax accumulates in its own id
+/// order over exactly the logit values `dot_gather` would have produced.
+pub fn attend_group_mq(
+    qs: &[f32],
+    keys: &Matrix,
+    values: &Matrix,
+    per_head_ids: &[&[u32]],
+    scale: f32,
+) -> Vec<PartialAttention> {
+    let d = values.cols();
+    let cols = keys.cols();
+    let nq = per_head_ids.len();
+    debug_assert_eq!(qs.len(), nq * cols, "query block length != heads × head_dim");
+    // Union of every head's candidate set (sorted ⇒ binary-searchable).
+    let mut union: Vec<u32> =
+        Vec::with_capacity(per_head_ids.iter().map(|ids| ids.len()).sum());
+    for ids in per_head_ids {
+        union.extend_from_slice(ids);
+    }
+    union.sort_unstable();
+    union.dedup();
+    if union.is_empty() {
+        return (0..nq).map(|_| PartialAttention::empty(d)).collect();
+    }
+    // One multi-query gather: every head scored against the union rows.
+    let mut z_all: Vec<f32> = Vec::with_capacity(nq * union.len());
+    kernel::dot_gather_mq(qs, nq, keys.as_slice(), cols, &union, &mut z_all);
+    (0..nq)
+        .map(|h| {
+            let ids = per_head_ids[h];
+            if ids.is_empty() {
+                return PartialAttention::empty(d);
+            }
+            let zrow = &z_all[h * union.len()..(h + 1) * union.len()];
+            // This head's logits in ITS id order — the exact values a
+            // per-head `dot_gather` would produce, picked out of the
+            // union row (every id is in the union by construction).
+            let mut z: Vec<f32> = Vec::with_capacity(ids.len());
+            for &id in ids {
+                let j = union
+                    .binary_search(&id)
+                    .expect("candidate id missing from its own union");
+                z.push(zrow[j]);
+            }
+            // Two-pass softmax, op-for-op the `attend_subset` form.
+            let mut m = f32::NEG_INFINITY;
+            for v in z.iter_mut() {
+                *v *= scale;
+                if *v > m {
+                    m = *v;
+                }
+            }
+            let mut l = 0.0f32;
+            let mut acc = vec![0.0f32; d];
+            for (&id, &zv) in ids.iter().zip(z.iter()) {
+                let p = (zv - m).exp();
+                l += p;
+                axpy(p, values.row(id as usize), &mut acc);
+            }
+            let inv = 1.0 / l;
+            for a in acc.iter_mut() {
+                *a *= inv;
+            }
+            PartialAttention { o: acc, lse: m + l.ln() }
+        })
+        .collect()
+}
+
 /// Full attention over all tokens `0..keys.rows()`.
 pub fn full_attention(q: &[f32], keys: &Matrix, values: &Matrix, scale: f32) -> Vec<f32> {
     let ids: Vec<u32> = (0..keys.rows() as u32).collect();
@@ -237,6 +315,44 @@ mod tests {
         let mut out3 = vec![3.0f32; 4];
         assert_eq!(combine_into(&[(empty, f32::NEG_INFINITY)], &mut out3), f32::NEG_INFINITY);
         assert_eq!(out3, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn group_mq_is_bitwise_identical_to_per_head_subset() {
+        // The wave scheduler's fused read must not perturb a single bit:
+        // every head of the group, scored through the union gather, must
+        // reproduce `attend_subset` exactly — overlapping sets, disjoint
+        // sets, a head owning the whole range, and an empty head.
+        let n = 120usize;
+        let d = 16usize;
+        let nq = 4usize;
+        let mut rng = Rng::seed_from(77);
+        let k = Matrix::from_fn(n, d, |_, _| rng.f32() - 0.5);
+        let v = Matrix::from_fn(n, d, |_, _| rng.f32() - 0.5);
+        let qs: Vec<f32> = (0..nq * d).map(|_| rng.f32() - 0.5).collect();
+        let sets: Vec<Vec<u32>> = vec![
+            (0..40).collect(),
+            (20..90).step_by(3).collect(),
+            (0..n as u32).collect(),
+            Vec::new(),
+        ];
+        let per_head: Vec<&[u32]> = sets.iter().map(|s| s.as_slice()).collect();
+        let scale = 0.31;
+        let fused = attend_group_mq(&qs, &k, &v, &per_head, scale);
+        assert_eq!(fused.len(), nq);
+        for h in 0..nq {
+            let solo = attend_subset(&qs[h * d..(h + 1) * d], &k, &v, &sets[h], scale);
+            assert_eq!(solo.lse.to_bits(), fused[h].lse.to_bits(), "head {h} lse diverged");
+            for (a, b) in solo.o.iter().zip(fused[h].o.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "head {h} output diverged");
+            }
+        }
+        // All-empty group: every head is the empty partial.
+        let empty_sets: Vec<&[u32]> = vec![&[], &[], &[], &[]];
+        for p in attend_group_mq(&qs, &k, &v, &empty_sets, scale) {
+            assert_eq!(p.o, vec![0.0; d]);
+            assert_eq!(p.lse, f32::NEG_INFINITY);
+        }
     }
 
     #[test]

@@ -293,11 +293,30 @@ pub struct SchedulerConfig {
     pub max_batch: usize,
     /// Queue depth before admission rejects new requests (backpressure).
     pub max_queue: usize,
+    /// Resident sessions scheduled per decode wave. `0` (the default) is
+    /// unthrottled: every resident session decodes one token per wave.
+    /// A positive value bounds the fused kernel dispatch width; skipped
+    /// sessions accumulate wait and win future picks (longest-wait
+    /// first, admission-order tiebreak).
+    pub wave_size: usize,
+    /// Fairness bound for a throttled wave (`wave_size > 0`): a session
+    /// about to sit out this many consecutive waves is force-included
+    /// regardless of the throttle, so no session's inter-token gap ever
+    /// exceeds `fairness_waves` waves. `0` disables the floor (pure
+    /// longest-wait-first, starvation possible only if waits tie
+    /// forever, which the monotone wait counter prevents anyway).
+    pub fairness_waves: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_sessions: 64, max_batch: 8, max_queue: 256 }
+        SchedulerConfig {
+            max_sessions: 64,
+            max_batch: 8,
+            max_queue: 256,
+            wave_size: 0,
+            fairness_waves: 4,
+        }
     }
 }
 
@@ -379,7 +398,9 @@ impl ServeConfig {
         let mut s = Value::obj();
         s.set("max_sessions", self.scheduler.max_sessions)
             .set("max_batch", self.scheduler.max_batch)
-            .set("max_queue", self.scheduler.max_queue);
+            .set("max_queue", self.scheduler.max_queue)
+            .set("wave_size", self.scheduler.wave_size)
+            .set("fairness_waves", self.scheduler.fairness_waves);
         o.set("scheduler", s);
         let mut sc = Value::obj();
         sc.set("max_resident_bytes", self.serving.session_cache.max_resident_bytes)
@@ -479,6 +500,12 @@ impl ServeConfig {
             if let Some(x) = s.get("max_queue").and_then(Value::as_usize) {
                 c.scheduler.max_queue = x;
             }
+            if let Some(x) = s.get("wave_size").and_then(Value::as_usize) {
+                c.scheduler.wave_size = x;
+            }
+            if let Some(x) = s.get("fairness_waves").and_then(Value::as_usize) {
+                c.scheduler.fairness_waves = x;
+            }
         }
         if let Some(sv) = v.get("serving") {
             if let Some(sc) = sv.get("session_cache") {
@@ -530,6 +557,24 @@ mod tests {
         assert_eq!(back.retrieval.top_k, c.retrieval.top_k);
         assert_eq!(back.scheduler.max_batch, c.scheduler.max_batch);
         assert_eq!(back.retrieval.maintenance, c.retrieval.maintenance);
+    }
+
+    #[test]
+    fn scheduler_wave_knobs_roundtrip_and_default() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.scheduler.wave_size, 0, "unthrottled by default");
+        assert_eq!(c.scheduler.fairness_waves, 4);
+        c.scheduler.wave_size = 3;
+        c.scheduler.fairness_waves = 9;
+        let back = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.scheduler.wave_size, 3);
+        assert_eq!(back.scheduler.fairness_waves, 9);
+        // Absent knobs fall back to defaults.
+        let v = json::parse(r#"{"scheduler":{"max_batch":2}}"#).unwrap();
+        let parsed = ServeConfig::from_json(&v).unwrap();
+        assert_eq!(parsed.scheduler.max_batch, 2);
+        assert_eq!(parsed.scheduler.wave_size, 0);
+        assert_eq!(parsed.scheduler.fairness_waves, 4);
     }
 
     #[test]

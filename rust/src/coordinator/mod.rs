@@ -7,24 +7,31 @@
 //!            |        PJRT handles live on one thread)
 //!            |        ├─ admission: bounded queue (backpressure)
 //!            |        ├─ prefill: FCFS
-//!            |        └─ decode: continuous batching — every active
-//!            |             session advances one token per engine round,
-//!            |             up to `max_batch` sessions interleaved
+//!            |        └─ decode: continuous batching — each loop turn is
+//!            |             one WAVE: a fairness-bounded pick of resident
+//!            |             sessions advances one token in a single fused
+//!            |             engine dispatch (`Engine::decode_wave`), with
+//!            |             admit/join mid-stream and retire on completion
 //!            └─ least-outstanding-requests replica choice
 //! ```
 //!
 //! Requests stream tokens back over a channel as they decode (the TTFT /
-//! TPOT split every serving paper reports).
+//! TPOT split every serving paper reports). The wave loop's headline
+//! invariant: batched decode is **bit-identical** to stepping each
+//! session alone (`tests/scheduler.rs` locks this in across index
+//! families and quant modes).
 
 pub mod router;
+pub mod scheduler;
 
 use crate::config::ServeConfig;
-use crate::metrics::PhaseBreakdown;
-use crate::model::{Engine, Session};
+use crate::metrics::{PhaseBreakdown, WaveTelemetry};
+use crate::model::{Engine, Session, WaveItem};
 use crate::store::SessionCache;
 use crate::util::sync::mpsc::{self, Receiver, Sender, TryRecvError};
-use crate::util::sync::{Arc, AtomicUsize, Ordering};
+use crate::util::sync::Arc;
 use anyhow::Result;
+use scheduler::{pick_wave, SlotBoard};
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -131,6 +138,17 @@ pub struct RequestMetrics {
     pub session_parks: u64,
     /// Cumulative sessions this replica has resumed from disk.
     pub session_resumes: u64,
+    /// Peak admission-queue depth observed while this request was active.
+    pub queue_depth_peak: usize,
+    /// Mean sessions scheduled per wave while this request was resident
+    /// (replica wave occupancy, the batching win the scheduler realizes).
+    pub wave_occupancy_mean: f64,
+    /// Largest inter-token gap this request saw, in waves (1 = scheduled
+    /// every wave; bounded by `scheduler.fairness_waves` under saturation).
+    pub max_gap_waves: u64,
+    /// Replica-wide token throughput (tokens/s across ALL sessions)
+    /// over this request's residency window.
+    pub replica_tokens_per_s: f64,
 }
 
 struct Job {
@@ -153,6 +171,19 @@ struct Active {
     snapshot_bytes: u64,
     /// A failed step poisons the session: it is never retained.
     failed: bool,
+    /// Admission sequence number (FIFO tiebreak in the wave pick).
+    seq: u64,
+    /// Consecutive waves this session has sat eligible-but-unscheduled.
+    waited: u64,
+    /// Largest inter-token gap seen, in waves.
+    max_gap_waves: u64,
+    /// Peak admission-queue depth observed during residency.
+    queue_peak: usize,
+    /// Telemetry snapshots at admission, differenced at retirement.
+    admitted_at: Instant,
+    waves_at_admit: u64,
+    sched_at_admit: u64,
+    tokens_at_admit: u64,
 }
 
 /// Admission outcome: the decode-ready session plus, for continuations,
@@ -168,11 +199,10 @@ struct Admitted {
 /// Handle to one replica worker (engine thread).
 pub struct Replica {
     tx: Sender<Job>,
-    // Relaxed (allowlisted counter): a load-balancing hint the router
-    // reads to pick the least-loaded replica. Channel send/recv already
-    // orders the jobs themselves; a momentarily stale count only costs a
-    // slightly suboptimal routing choice, never correctness.
-    outstanding: Arc<AtomicUsize>,
+    /// The slot protocol: exactly-once in-flight accounting, the
+    /// queue-depth gauge, and the stop flag ([`scheduler::SlotBoard`];
+    /// loom-modeled in `tests/loom_models.rs`).
+    board: Arc<SlotBoard>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -181,8 +211,8 @@ impl Replica {
     /// thread (PJRT handles are not Send).
     pub fn spawn(cfg: ServeConfig) -> Replica {
         let (tx, rx) = mpsc::channel::<Job>();
-        let outstanding = Arc::new(AtomicUsize::new(0));
-        let out_clone = outstanding.clone();
+        let board = Arc::new(SlotBoard::new());
+        let board_clone = board.clone();
         let handle = std::thread::Builder::new()
             .name("replica-worker".into())
             .spawn(move || {
@@ -190,23 +220,26 @@ impl Replica {
                     Ok(e) => e,
                     Err(e) => {
                         // Drain jobs with failures until the channel closes.
+                        // Nothing was published for these jobs, so retire
+                        // straight away — before the terminal event, as on
+                        // every other path.
                         while let Ok(job) = rx.recv() {
+                            board_clone.retire();
                             let _ = job
                                 .reply
                                 .send(Event::Failed(job.req.id, format!("engine init: {e}")));
-                            out_clone.fetch_sub(1, Ordering::Relaxed);
                         }
                         return;
                     }
                 };
-                worker_loop(&engine, &cfg, rx, &out_clone);
+                worker_loop(&engine, &cfg, rx, &board_clone);
             })
             // A failed OS-thread spawn must not panic the caller: with
             // `handle` empty the closure (and `rx`) is dropped, so every
             // submit fails over the closed channel into an explicit
             // Event::Failed("replica worker is gone").
             .ok();
-        Replica { tx, outstanding, handle }
+        Replica { tx, board, handle }
     }
 
     /// Submit a request; events stream on the returned receiver. If the
@@ -216,10 +249,16 @@ impl Replica {
     /// failure event.
     pub fn submit(&self, req: Request) -> Receiver<Event> {
         let (reply, events) = mpsc::channel();
-        self.outstanding.fetch_add(1, Ordering::Relaxed);
+        if self.board.stopped() {
+            let _ = reply.send(Event::Failed(req.id, "replica worker is gone".into()));
+            return events;
+        }
+        // Enter the board BEFORE the send so the job is never in flight
+        // yet invisible to `outstanding()`.
+        self.board.enter();
         let job = Job { req, reply, submitted: Instant::now() };
         if let Err(send_err) = self.tx.send(job) {
-            self.outstanding.fetch_sub(1, Ordering::Relaxed);
+            self.board.retire();
             let job = send_err.0;
             let _ = job
                 .reply
@@ -228,14 +267,25 @@ impl Replica {
         events
     }
 
+    /// Submitted-but-unfinished requests, counted exactly once no matter
+    /// how many waves a session stays resident (the slot board's
+    /// enter-once/retire-once contract).
     pub fn outstanding(&self) -> usize {
-        self.outstanding.load(Ordering::Relaxed)
+        self.board.in_flight()
+    }
+
+    /// Jobs parked in the worker's admission queue (the backlog behind
+    /// the resident set).
+    pub fn queue_depth(&self) -> usize {
+        self.board.queued()
     }
 }
 
 impl Drop for Replica {
     fn drop(&mut self) {
-        // Closing the channel stops the worker after the current round.
+        // Refuse new submissions, then close the channel: the worker
+        // drains its resident set and exits after the current wave.
+        self.board.raise_stop();
         let (dummy_tx, _) = mpsc::channel();
         let _ = std::mem::replace(&mut self.tx, dummy_tx);
         if let Some(h) = self.handle.take() {
@@ -244,14 +294,65 @@ impl Drop for Replica {
     }
 }
 
-/// The replica scheduling loop: FCFS prefill + continuous decode batching
-/// + the per-replica session registry (open/continue/close).
-fn worker_loop(
-    engine: &Engine,
-    cfg: &ServeConfig,
-    rx: Receiver<Job>,
-    outstanding: &AtomicUsize,
+/// Disjoint mutable borrows of `active` at strictly increasing indices
+/// (the wave's scheduled subset, handed to `Engine::decode_wave`).
+fn select_mut<'a>(active: &'a mut [Active], idxs: &[usize]) -> Vec<&'a mut Active> {
+    let mut out = Vec::with_capacity(idxs.len());
+    let mut rest = active;
+    let mut base = 0usize;
+    for &i in idxs {
+        let (_, tail) = rest.split_at_mut(i - base);
+        let Some((item, tail)) = tail.split_first_mut() else { break };
+        out.push(item);
+        rest = tail;
+        base = i + 1;
+    }
+    out
+}
+
+/// Apply one decode-step outcome to an active session: stream the token
+/// (or the failure) and mark the session finished when its budget is met.
+fn apply_step(
+    a: &mut Active,
+    step: Result<(u32, PhaseBreakdown)>,
+    wave: &mut WaveTelemetry,
+    finished: &mut Vec<usize>,
+    idx: usize,
 ) {
+    match step {
+        Ok((tok, bd)) => {
+            a.decode_bd.add(&bd);
+            a.produced.push(tok);
+            a.cur = tok;
+            if a.first_token_at.is_none() {
+                a.first_token_at = Some(Instant::now());
+            }
+            let _ = a.job.reply.send(Event::Token(a.job.req.id, tok));
+            wave.tokens_emitted += 1;
+            if a.produced.len() >= a.job.req.max_tokens {
+                finished.push(idx);
+            }
+        }
+        Err(e) => {
+            let _ = a.job.reply.send(Event::Failed(a.job.req.id, e.to_string()));
+            a.failed = true;
+            finished.push(idx);
+        }
+    }
+}
+
+/// The replica scheduling loop: FCFS prefill admission + wave-style
+/// continuous decode batching + the per-replica session registry
+/// (open/continue/close).
+///
+/// Each loop turn is one **wave**: intake new jobs, admit up to
+/// `scheduler.max_batch` resident sessions, pick a fairness-bounded
+/// subset of up to `scheduler.wave_size` of them
+/// ([`scheduler::pick_wave`]), then advance every picked session one
+/// token in a single fused dispatch ([`Engine::decode_wave`]) —
+/// candidate scoring and host attention batched across sessions,
+/// bit-identical to stepping each session alone.
+fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &SlotBoard) {
     let mut waiting: VecDeque<Job> = VecDeque::new();
     let mut active: Vec<Active> = Vec::new();
     // The session registry: finished sessions stay resident up to the RAM
@@ -259,6 +360,9 @@ fn worker_loop(
     // the next turn. Owned by this thread — sessions never cross replicas
     // (the router pins session ids).
     let mut sessions = SessionCache::new(cfg.serving.session_cache.clone());
+    // Replica-wide wave telemetry + admission sequence numbers.
+    let mut wave = WaveTelemetry::default();
+    let mut next_seq = 0u64;
 
     loop {
         // Pull new jobs. Block only when fully idle.
@@ -266,7 +370,7 @@ fn worker_loop(
             match rx.try_recv() {
                 Ok(job) => {
                     if waiting.len() >= cfg.scheduler.max_queue {
-                        outstanding.fetch_sub(1, Ordering::Relaxed);
+                        board.retire();
                         let _ = job.reply.send(Event::Failed(
                             job.req.id,
                             "queue full (backpressure)".into(),
@@ -290,8 +394,9 @@ fn worker_loop(
                 Err(_) => return,
             }
         }
+        board.set_queued(waiting.len());
 
-        // Admit work while there is decode capacity. Close verbs are
+        // Admit work while there is resident capacity. Close verbs are
         // registry operations, not decodes: handled inline.
         while active.len() < cfg.scheduler.max_batch {
             let Some(job) = waiting.pop_front() else { break };
@@ -299,8 +404,9 @@ fn worker_loop(
             // wait for it to retire (the registry only holds finished
             // turns): defer it rather than mis-report "unknown session"
             // to a client that pipelined its turns. Admission is FCFS, so
-            // stop admitting behind it; the decode rounds below always
-            // make progress, so the deferral cannot deadlock.
+            // stop admitting behind it; the waves below always make
+            // progress, so the deferral cannot deadlock and cannot stall
+            // the sessions already resident.
             if let Some(spec) = job.req.session {
                 let busy = active.iter().any(|a| {
                     a.job.req.session.map(|s| s.session_id == spec.session_id).unwrap_or(false)
@@ -312,7 +418,10 @@ fn worker_loop(
             }
             if let Some(spec @ SessionSpec { mode: SessionMode::Close, .. }) = job.req.session {
                 let known = sessions.close(spec.session_id);
-                outstanding.fetch_sub(1, Ordering::Relaxed);
+                // Registry op done: free the slot before the client hears
+                // the outcome (a client acting on Done must observe the
+                // freed capacity — the exactly-once accounting contract).
+                board.retire();
                 if known {
                     let metrics = RequestMetrics {
                         session_parks: sessions.stats.parks,
@@ -350,7 +459,16 @@ fn worker_loop(
                         resume_s: adm.resume_s,
                         snapshot_bytes: adm.snapshot_bytes,
                         failed: false,
+                        seq: next_seq,
+                        waited: 0,
+                        max_gap_waves: 0,
+                        queue_peak: waiting.len(),
+                        admitted_at: Instant::now(),
+                        waves_at_admit: wave.waves,
+                        sched_at_admit: wave.scheduled_total,
+                        tokens_at_admit: wave.tokens_emitted,
                     };
+                    next_seq += 1;
                     // A continuation already decoded its first token (the
                     // last prompt token's decode step). With max_tokens=0
                     // the token is discarded un-emitted — the KV grew
@@ -363,52 +481,86 @@ fn worker_loop(
                             a.cur = tok;
                             a.first_token_at = Some(Instant::now());
                             let _ = a.job.reply.send(Event::Token(a.job.req.id, tok));
+                            wave.tokens_emitted += 1;
                         }
                     }
                     active.push(a);
                 }
                 Err(e) => {
-                    outstanding.fetch_sub(1, Ordering::Relaxed);
+                    board.retire();
                     let _ = job.reply.send(Event::Failed(job.req.id, e.to_string()));
                 }
             }
         }
+        board.set_queued(waiting.len());
 
-        // One decode round: every active session advances one token.
+        // Pre-pass: already-satisfied sessions (continuation whose first
+        // token filled the budget, or max_tokens == 0) retire without
+        // stepping; everyone else is eligible for this wave.
         let mut finished: Vec<usize> = Vec::new();
+        let mut eligible: Vec<usize> = Vec::new();
         for (idx, a) in active.iter_mut().enumerate() {
+            a.queue_peak = a.queue_peak.max(waiting.len());
             if a.produced.len() >= a.job.req.max_tokens {
-                // Already satisfied (continuation whose first token filled
-                // the budget, or max_tokens == 0): retire without stepping.
                 finished.push(idx);
-                continue;
-            }
-            let step = if a.produced.is_empty() {
-                engine.first_token(&a.sess).map(|t| (t, PhaseBreakdown::default()))
             } else {
-                engine.decode_step(&mut a.sess, a.cur).map(|o| (o.token, o.breakdown))
-            };
-            match step {
-                Ok((tok, bd)) => {
-                    a.decode_bd.add(&bd);
-                    a.produced.push(tok);
-                    a.cur = tok;
-                    if a.first_token_at.is_none() {
-                        a.first_token_at = Some(Instant::now());
-                    }
-                    let _ = a.job.reply.send(Event::Token(a.job.req.id, tok));
-                    if a.produced.len() >= a.job.req.max_tokens {
-                        finished.push(idx);
-                    }
+                eligible.push(idx);
+            }
+        }
+
+        // Wave pick + fused decode step.
+        if !eligible.is_empty() {
+            let waited: Vec<u64> = eligible.iter().map(|&i| active[i].waited).collect();
+            let seqs: Vec<u64> = eligible.iter().map(|&i| active[i].seq).collect();
+            let picked: Vec<usize> =
+                pick_wave(cfg.scheduler.wave_size, cfg.scheduler.fairness_waves, &waited, &seqs)
+                    .into_iter()
+                    .map(|j| eligible[j])
+                    .collect();
+            wave.waves += 1;
+            wave.scheduled_total += picked.len() as u64;
+            // Cadence accounting: a scheduled session's inter-token gap is
+            // its skipped waves plus this one; a skipped session ages.
+            let mut picked_set = vec![false; active.len()];
+            for &i in &picked {
+                picked_set[i] = true;
+            }
+            for &i in &eligible {
+                let a = &mut active[i];
+                if picked_set[i] {
+                    a.max_gap_waves = a.max_gap_waves.max(a.waited + 1);
+                    a.waited = 0;
+                } else {
+                    a.waited += 1;
                 }
-                Err(e) => {
-                    let _ = a.job.reply.send(Event::Failed(a.job.req.id, e.to_string()));
-                    a.failed = true;
-                    finished.push(idx);
+            }
+            // First-token steps (fresh prefills) are a bare lm_head over
+            // the prefill activations — no KV append, nothing to fuse.
+            let (firsts, steps): (Vec<usize>, Vec<usize>) =
+                picked.iter().copied().partition(|&i| active[i].produced.is_empty());
+            for i in firsts {
+                let a = &mut active[i];
+                let step = engine.first_token(&a.sess).map(|t| (t, PhaseBreakdown::default()));
+                apply_step(a, step, &mut wave, &mut finished, i);
+            }
+            // The fused wave step: every remaining picked session advances
+            // one token in a single multi-session engine dispatch.
+            if !steps.is_empty() {
+                let mut selected = select_mut(&mut active, &steps);
+                let mut items: Vec<WaveItem> = selected
+                    .iter_mut()
+                    .map(|a| WaveItem { sess: &mut a.sess, token: a.cur })
+                    .collect();
+                let results = engine.decode_wave(&mut items);
+                drop(items);
+                for ((a, res), &i) in selected.into_iter().zip(results).zip(steps.iter()) {
+                    apply_step(a, res.map(|o| (o.token, o.breakdown)), &mut wave, &mut finished, i);
                 }
             }
         }
+
         // Retire finished sessions (reverse order keeps indices valid).
+        finished.sort_unstable();
         for idx in finished.into_iter().rev() {
             let mut a = active.swap_remove(idx);
             // Quiesce the background maintenance worker so the drain/evict
@@ -422,6 +574,11 @@ fn worker_loop(
             let n_out = a.produced.len();
             let decode_total = a.decode_bd.total();
             let maint = a.sess.maint.stats;
+            // Wave telemetry deltas over this request's residency window.
+            let waves_delta = wave.waves.saturating_sub(a.waves_at_admit);
+            let sched_delta = wave.scheduled_total.saturating_sub(a.sched_at_admit);
+            let tokens_delta = wave.tokens_emitted.saturating_sub(a.tokens_at_admit);
+            let resident_s = a.admitted_at.elapsed().as_secs_f64();
             let mut metrics = RequestMetrics {
                 prompt_tokens: a.job.req.prompt.len(),
                 output_tokens: n_out,
@@ -443,31 +600,42 @@ fn worker_loop(
                 snapshot_bytes: a.snapshot_bytes,
                 session_parks: sessions.stats.parks,
                 session_resumes: sessions.stats.resumes,
+                queue_depth_peak: a.queue_peak,
+                wave_occupancy_mean: if waves_delta > 0 {
+                    sched_delta as f64 / waves_delta as f64
+                } else {
+                    0.0
+                },
+                max_gap_waves: a.max_gap_waves,
+                replica_tokens_per_s: if resident_s > 0.0 {
+                    tokens_delta as f64 / resident_s
+                } else {
+                    0.0
+                },
             };
-            // Decrement BEFORE the Done event so a client that reads Done
-            // observes the freed capacity (load-balancing correctness).
-            outstanding.fetch_sub(1, Ordering::Relaxed);
             // Session-tracked turns retain their session for the next one
             // (a failed step poisons it — never retain half-decoded
             // state). Retention may LRU-park colder sessions to disk; if
             // the disk budget is exhausted the registry refuses, and that
             // backpressure surfaces as this request's failure.
             let retain = if a.failed { None } else { a.job.req.session };
-            match retain {
+            let event = match retain {
                 Some(spec) => match sessions.insert(engine, spec.session_id, a.sess) {
                     Ok(()) => {
                         metrics.session_parks = sessions.stats.parks;
                         metrics.session_resumes = sessions.stats.resumes;
-                        let _ = a.job.reply.send(Event::Done(a.job.req.id, metrics));
+                        Event::Done(a.job.req.id, metrics)
                     }
-                    Err(e) => {
-                        let _ = a.job.reply.send(Event::Failed(a.job.req.id, e.to_string()));
-                    }
+                    Err(e) => Event::Failed(a.job.req.id, e.to_string()),
                 },
-                None => {
-                    let _ = a.job.reply.send(Event::Done(a.job.req.id, metrics));
-                }
-            }
+                None => Event::Done(a.job.req.id, metrics),
+            };
+            // Retire AFTER the session's results are published (tokens
+            // streamed, registry updated) and BEFORE the client hears the
+            // terminal event, so a client acting on Done observes the
+            // freed capacity (load-balancing + exactly-once accounting).
+            board.retire();
+            let _ = a.job.reply.send(event);
         }
     }
 }

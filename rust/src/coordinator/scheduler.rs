@@ -1,0 +1,181 @@
+//! Replica-level continuous-batching primitives: the **slot board** that
+//! tracks in-flight work across wave boundaries, and the **wave-pick**
+//! policy that decides which resident sessions decode this wave.
+//!
+//! The slot board replaces the raw `outstanding` counter the replica used
+//! to carry. Its contract is the exactly-once invariant the serving tests
+//! lock in: every job `enter()`s the board once (in `Replica::submit`,
+//! before the channel send) and `retire()`s once — on exactly one of the
+//! terminal paths (done, failed, rejected, drained-at-shutdown) — so
+//! `in_flight()` never double-counts a session that stays resident across
+//! wave boundaries and never goes negative.
+//!
+//! Memory ordering: this file is deliberately **not** on the
+//! `Ordering::Relaxed` allowlist (`xtask lint`). The counters are part of
+//! a cross-thread protocol — a client observing `in_flight() == 0` must
+//! also observe the effects of the retirements that got it there — so all
+//! writes are `Release` and all reads `Acquire`. The loom model in
+//! `tests/loom_models.rs` (`slot_protocol_model`) checks the protocol:
+//! publish-the-result *before* retiring the slot, observers that see the
+//! count drain must see every published result.
+
+use crate::util::sync::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Shared admission/retirement board for one replica worker.
+#[derive(Debug, Default)]
+pub struct SlotBoard {
+    /// Jobs ever admitted to the replica (monotone).
+    admitted: AtomicU64,
+    /// Jobs fully retired (monotone; `retired <= admitted`).
+    retired: AtomicU64,
+    /// Jobs sitting in the worker's waiting queue (gauge, worker-owned).
+    queued: AtomicUsize,
+    /// Raised when the replica is shutting down; `submit` fast-fails.
+    stop: AtomicBool,
+}
+
+impl SlotBoard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one job entering the replica. Called by the submitter
+    /// *before* the channel send so the job is never invisible.
+    pub fn enter(&self) {
+        self.admitted.fetch_add(1, Ordering::Release);
+    }
+
+    /// Record one job leaving the replica. Must be called exactly once
+    /// per entered job, *after* its results have been published (tokens
+    /// streamed, session retained) and *before* its terminal Done/Failed
+    /// event — a client acting on the event must observe the freed slot.
+    pub fn retire(&self) {
+        self.retired.fetch_add(1, Ordering::Release);
+    }
+
+    /// Jobs entered but not yet retired. Reads `retired` first so a
+    /// concurrent `enter`/`retire` pair can only make the result
+    /// conservatively high, never negative.
+    pub fn in_flight(&self) -> usize {
+        let retired = self.retired.load(Ordering::Acquire);
+        let admitted = self.admitted.load(Ordering::Acquire);
+        admitted.saturating_sub(retired) as usize
+    }
+
+    /// Worker-side gauge: jobs currently parked in the waiting queue.
+    pub fn set_queued(&self, n: usize) {
+        self.queued.store(n, Ordering::Release);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queued.load(Ordering::Acquire)
+    }
+
+    /// Signal shutdown: submitters observing this refuse new work.
+    pub fn raise_stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+}
+
+/// Pick which resident sessions decode this wave.
+///
+/// `waited[i]` is how many consecutive waves session `i` has sat
+/// unscheduled; `seq[i]` is its admission sequence number (FIFO
+/// tiebreak). `wave_size == 0` means unthrottled: every resident session
+/// decodes every wave. Otherwise the `wave_size` longest-waiting
+/// sessions are picked, and — the fairness bound — any session that
+/// would otherwise reach `fairness_waves` consecutive unscheduled waves
+/// is force-included, so no admitted session's inter-token gap ever
+/// exceeds `fairness_waves` waves even under saturation.
+pub fn pick_wave(
+    wave_size: usize,
+    fairness_waves: usize,
+    waited: &[u64],
+    seq: &[u64],
+) -> Vec<usize> {
+    let n = waited.len();
+    debug_assert_eq!(seq.len(), n);
+    if wave_size == 0 || n <= wave_size {
+        return (0..n).collect();
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| waited[b].cmp(&waited[a]).then(seq[a].cmp(&seq[b])));
+    let mut picked: Vec<usize> = order[..wave_size].to_vec();
+    // Hard fairness floor: a session skipped this wave would enter the
+    // next pick with waited+1; force it in before it crosses the bound.
+    if fairness_waves > 0 {
+        for &i in &order[wave_size..] {
+            if waited[i] + 1 >= fairness_waves as u64 {
+                picked.push(i);
+            }
+        }
+    }
+    picked.sort_unstable();
+    picked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_board_counts_exactly_once() {
+        let b = SlotBoard::new();
+        assert_eq!(b.in_flight(), 0);
+        b.enter();
+        b.enter();
+        assert_eq!(b.in_flight(), 2);
+        // A session staying resident across many waves is still one job.
+        b.retire();
+        assert_eq!(b.in_flight(), 1);
+        b.retire();
+        assert_eq!(b.in_flight(), 0);
+        assert!(!b.stopped());
+        b.raise_stop();
+        assert!(b.stopped());
+    }
+
+    #[test]
+    fn queued_gauge_tracks_worker_queue() {
+        let b = SlotBoard::new();
+        assert_eq!(b.queued(), 0);
+        b.set_queued(7);
+        assert_eq!(b.queued(), 7);
+        b.set_queued(0);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn unthrottled_wave_schedules_everyone() {
+        let waited = [0u64, 3, 1];
+        let seq = [0u64, 1, 2];
+        assert_eq!(pick_wave(0, 4, &waited, &seq), vec![0, 1, 2]);
+        assert_eq!(pick_wave(8, 4, &waited, &seq), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn bounded_wave_prefers_longest_waiting_fifo_tiebreak() {
+        let waited = [0u64, 2, 2, 0];
+        let seq = [0u64, 1, 2, 3];
+        // Two slots: both waited=2 sessions win; FIFO among equals.
+        assert_eq!(pick_wave(2, 8, &waited, &seq), vec![1, 2]);
+        // One slot: the earlier-admitted of the starved pair.
+        assert_eq!(pick_wave(1, 8, &waited, &seq), vec![1]);
+    }
+
+    #[test]
+    fn fairness_bound_force_includes_starved_sessions() {
+        // Four sessions all about to cross a fairness bound of 3 waves:
+        // a wave_size of 1 must still include every one of them.
+        let waited = [2u64, 2, 2, 2];
+        let seq = [0u64, 1, 2, 3];
+        assert_eq!(pick_wave(1, 3, &waited, &seq), vec![0, 1, 2, 3]);
+        // Below the bound the throttle applies.
+        let waited = [1u64, 1, 1, 1];
+        assert_eq!(pick_wave(1, 3, &waited, &seq), vec![0]);
+    }
+}

@@ -207,6 +207,41 @@ pub fn dot_gather(q: &[f32], rows: &[f32], cols: usize, ids: &[u32], out: &mut V
     }
 }
 
+/// Multi-query gather-scores: `nq` queries (concatenated in `qs`, each
+/// `cols` wide) against the rows named by `ids`, appended to `out`
+/// **query-major** — `out[qi * ids.len() + j] = dot(q_qi, row ids[j])`.
+///
+/// The inner loop is id-major: each gathered key row is loaded ONCE and
+/// scored against every query while it is cache-hot — for a GQA group of
+/// `nq` heads sharing a key store this reads `nq`× fewer key bytes than
+/// `nq` separate [`dot_gather`] calls. Per (query, row) the reduction is
+/// the same backend `dot`, so the scores are bit-identical to the
+/// single-query form (property-locked below).
+#[inline]
+pub fn dot_gather_mq(
+    qs: &[f32],
+    nq: usize,
+    rows: &[f32],
+    cols: usize,
+    ids: &[u32],
+    out: &mut Vec<f32>,
+) {
+    if cols == 0 || nq == 0 || ids.is_empty() {
+        return;
+    }
+    assert_eq!(qs.len(), nq * cols, "query block length != nq × row width");
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm is reached only when `active()` returned Avx2,
+        // i.e. runtime detection confirmed AVX2+FMA — the target-feature
+        // contract of the x86 kernel; operand lengths were checked above.
+        Dispatch::Avx2 => unsafe { x86::dot_gather_mq(qs, nq, rows, cols, ids, out) },
+        #[cfg(target_arch = "aarch64")]
+        Dispatch::Neon => neon::dot_gather_mq(qs, nq, rows, cols, ids, out),
+        _ => scalar::dot_gather_mq(qs, nq, rows, cols, ids, out),
+    }
+}
+
 /// Squared distances of `q` to every row of a contiguous row-major buffer,
 /// appended to `out` (IVF/k-means centroid assignment).
 #[inline]
@@ -363,6 +398,38 @@ mod tests {
             let want = l2_sq(&q, &rows[r * cols..(r + 1) * cols]);
             assert_eq!(s.to_bits(), want.to_bits(), "l2_rows row {r}");
         }
+    }
+
+    #[test]
+    fn multi_query_gather_matches_per_query_gather_bitwise() {
+        // The wave scheduler's fused scoring path: id-major multi-query
+        // gather must reproduce the per-query gather bit-for-bit for
+        // every query, including odd widths and a single id.
+        for (nq, cols, rows_n) in [(1usize, 48usize, 37usize), (4, 33, 19), (8, 64, 1)] {
+            let (qs, _) = vecs(nq * cols, (nq * cols) as u64 + 11);
+            let (rows, _) = vecs(cols * rows_n, (cols * rows_n) as u64 + 13);
+            let ids: Vec<u32> = (0..rows_n as u32).rev().collect();
+            let mut fused = Vec::new();
+            dot_gather_mq(&qs, nq, &rows, cols, &ids, &mut fused);
+            assert_eq!(fused.len(), nq * ids.len());
+            for qi in 0..nq {
+                let mut solo = Vec::new();
+                dot_gather(&qs[qi * cols..(qi + 1) * cols], &rows, cols, &ids, &mut solo);
+                for (j, &want) in solo.iter().enumerate() {
+                    assert_eq!(
+                        fused[qi * ids.len() + j].to_bits(),
+                        want.to_bits(),
+                        "dot_gather_mq q{qi} id {j} under {:?}",
+                        active()
+                    );
+                }
+            }
+        }
+        // Degenerate inputs append nothing.
+        let mut out = vec![1.0f32];
+        dot_gather_mq(&[], 0, &[1.0, 2.0], 2, &[0], &mut out);
+        dot_gather_mq(&[1.0, 2.0], 1, &[1.0, 2.0], 2, &[], &mut out);
+        assert_eq!(out.len(), 1);
     }
 
     #[test]

@@ -68,6 +68,28 @@ pub fn dot_gather(q: &[f32], rows: &[f32], cols: usize, ids: &[u32], out: &mut V
     }
 }
 
+/// Multi-query gather scores, query-major output, id-major loop: each
+/// gathered row is loaded once and scored against every query with the
+/// same [`dot`] as the single-query form (so scores are bit-identical).
+pub fn dot_gather_mq(
+    qs: &[f32],
+    nq: usize,
+    rows: &[f32],
+    cols: usize,
+    ids: &[u32],
+    out: &mut Vec<f32>,
+) {
+    let base = out.len();
+    out.resize(base + nq * ids.len(), 0.0);
+    for (j, &id) in ids.iter().enumerate() {
+        let off = id as usize * cols;
+        let row = &rows[off..off + cols];
+        for qi in 0..nq {
+            out[base + qi * ids.len() + j] = dot(&qs[qi * cols..(qi + 1) * cols], row);
+        }
+    }
+}
+
 pub fn l2_rows(q: &[f32], rows: &[f32], cols: usize, out: &mut Vec<f32>) {
     out.reserve(rows.len() / cols);
     for row in rows.chunks_exact(cols) {

@@ -107,6 +107,41 @@ pub unsafe fn dot_gather(q: &[f32], rows: &[f32], cols: usize, ids: &[u32], out:
     }
 }
 
+/// Multi-query gather scores, query-major output, id-major loop: each
+/// gathered row is loaded once (with the same [`PREFETCH_AHEAD`] software
+/// prefetch as [`dot_gather`]) and scored against every query with the
+/// same [`dot`], so scores are bit-identical to the single-query form.
+///
+/// # Safety
+/// Requires AVX2 + FMA (runtime-detected by the caller).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_gather_mq(
+    qs: &[f32],
+    nq: usize,
+    rows: &[f32],
+    cols: usize,
+    ids: &[u32],
+    out: &mut Vec<f32>,
+) {
+    let base_len = out.len();
+    out.resize(base_len + nq * ids.len(), 0.0);
+    let base = rows.as_ptr();
+    for (j, &id) in ids.iter().enumerate() {
+        if let Some(&nxt) = ids.get(j + PREFETCH_AHEAD) {
+            // wrapping_add: prefetch never faults, but computing an
+            // out-of-allocation pointer with `add` would still be UB if a
+            // caller ever passed a bogus id (the scoring slice below
+            // bounds-checks it properly).
+            _mm_prefetch::<_MM_HINT_T0>(base.wrapping_add(nxt as usize * cols) as *const i8);
+        }
+        let off = id as usize * cols;
+        let row = &rows[off..off + cols];
+        for qi in 0..nq {
+            out[base_len + qi * ids.len() + j] = dot(&qs[qi * cols..(qi + 1) * cols], row);
+        }
+    }
+}
+
 /// Batched contiguous row squared distances.
 ///
 /// # Safety

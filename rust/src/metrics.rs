@@ -119,6 +119,20 @@ impl PhaseBreakdown {
     }
 }
 
+/// Replica-level wave-scheduler counters, owned by the worker loop. A
+/// request snapshots these at admission and takes deltas at retirement,
+/// which is how per-request wave occupancy and replica throughput land in
+/// [`crate::coordinator::RequestMetrics`] without any shared state.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WaveTelemetry {
+    /// Decode waves executed since the worker started.
+    pub waves: u64,
+    /// Total (session, wave) schedule slots filled across all waves.
+    pub scheduled_total: u64,
+    /// Tokens emitted across all resident sessions.
+    pub tokens_emitted: u64,
+}
+
 /// Scoped phase timer: accumulates elapsed time into a breakdown slot.
 pub struct PhaseTimer {
     start: Instant,

@@ -28,10 +28,11 @@
 //! captures per-head query histories, which become RoarGraph's training
 //! set.
 
-use crate::attention::{attend_subset, combine_into, PartialAttention};
+use crate::attention::{attend_group_mq, attend_subset, combine_into, PartialAttention};
 use crate::baselines::{build_retriever, GroupShared, HostRetriever, RetrieverInputs};
 use crate::config::{Method, ServeConfig};
 use crate::index::KeyStore;
+use crate::kernel;
 use crate::kvcache::{StaticPattern, TieredKvCache};
 use crate::metrics::{PhaseBreakdown, PhaseTimer};
 use crate::model::maintain::{
@@ -127,6 +128,13 @@ pub struct Session {
 pub struct DecodeOutput {
     pub token: u32,
     pub breakdown: PhaseBreakdown,
+}
+
+/// One session's slot in a fused decode wave ([`Engine::decode_wave`]):
+/// the session to advance and the token to feed it.
+pub struct WaveItem<'a> {
+    pub sess: &'a mut Session,
+    pub token: u32,
 }
 
 /// Retriever construction result: per-(layer, q_head) retrievers plus the
@@ -454,159 +462,337 @@ impl Engine {
     }
 
     /// One decode step (Algorithm 1). Feeds `token`, returns the next.
+    ///
+    /// Implemented as a single-slot wave: [`Engine::decode_wave`] is the
+    /// primary decode path, and a one-item wave performs exactly the
+    /// serial per-session computation.
     pub fn decode_step(&self, sess: &mut Session, token: u32) -> Result<DecodeOutput> {
+        let mut wave = [WaveItem { sess, token }];
+        match self.decode_wave(&mut wave).pop() {
+            Some(r) => r,
+            None => Err(anyhow::anyhow!("decode wave returned no result")),
+        }
+    }
+
+    /// One fused decode step for a WAVE of sessions (the continuous-
+    /// batching engine entry; Algorithm 1 per session).
+    ///
+    /// Every session advances exactly one token. Device calls (embed,
+    /// QKV, static attention, FFN, lm_head) stay serial on this thread —
+    /// the runtime handles are `!Send` — but the host-side phases that
+    /// dominate long-context decode are **fused across sessions**:
+    ///
+    /// * candidate retrieval fans every (session, head) pair of the wave
+    ///   into one `par_map` pool (shared batched kernel dispatches);
+    /// * the host attention read scores each (session, GQA-group) with
+    ///   the multi-query gather [`attend_group_mq`] (each candidate key
+    ///   row is read once per group, not once per head) and prefetches
+    ///   the next slot's first candidate rows while the current group's
+    ///   softmax is in flight (wave-style overlap).
+    ///
+    /// **Bit-identity invariant**: fusion only reorders *independent*
+    /// per-session/per-head work whose per-item computation is unchanged,
+    /// and `par_map` is order-preserving — so a wave of N sessions
+    /// produces exactly the tokens each session would produce decoding
+    /// alone (`tests/scheduler.rs` locks this in). Per-session index
+    /// maintenance stays serialized per session at the end of the wave.
+    ///
+    /// Errors are isolated per slot: a failing session yields `Err` in
+    /// its result position and drops out of later phases; the rest of
+    /// the wave completes. Fused-phase wall time is attributed to each
+    /// live session's breakdown in equal shares.
+    pub fn decode_wave(&self, items: &mut [WaveItem]) -> Vec<Result<DecodeOutput>> {
+        let n = items.len();
         let spec = self.spec().clone();
-        let mut bd = PhaseBreakdown::default();
         let scale = self.scale();
         let group = spec.group_size();
         let dh = spec.head_dim;
-        // Per-head id scratch, reused across layers and tokens (sized
-        // lazily so deserialized/forked sessions pick it up too).
-        if sess.host_ids.len() < spec.q_heads {
-            sess.host_ids.resize_with(spec.q_heads, Vec::new);
+        let retrieval_k = &self.cfg.retrieval;
+
+        let mut errs: Vec<Option<anyhow::Error>> = (0..n).map(|_| None).collect();
+        let mut bds: Vec<PhaseBreakdown> = vec![PhaseBreakdown::default(); n];
+        let mut xs: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut qs: Vec<Vec<f32>> = vec![Vec::new(); n];
+        // Previous layer's query vectors (InfiniGen-style speculation).
+        let mut prev_qs: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
+        let mut o_devs: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut lse_devs: Vec<Vec<f32>> = vec![Vec::new(); n];
+
+        // Embed (serial per slot).
+        for (s, it) in items.iter_mut().enumerate() {
+            // Per-head id scratch, reused across layers and tokens (sized
+            // lazily so deserialized/forked sessions pick it up too).
+            if it.sess.host_ids.len() < spec.q_heads {
+                it.sess.host_ids.resize_with(spec.q_heads, Vec::new);
+            }
+            let t = PhaseTimer::start();
+            let r = (|| -> Result<Vec<f32>> {
+                let pos = crate::model::position_code(&spec, it.sess.len);
+                let id_b = self.rt.upload_i32(&[it.token as i32], &[1])?;
+                let pos_b = self.rt.upload_f32(&pos, &[1, spec.d_model])?;
+                let outs = self.rt.exec_b("embed_b1", &[&self.lits.table, &id_b, &pos_b])?;
+                literal_to_f32(&outs[0])
+            })();
+            t.stop_into(&mut bds[s].other);
+            match r {
+                Ok(x) => xs[s] = x,
+                Err(e) => errs[s] = Some(e),
+            }
         }
 
-        // Embed.
-        let t = PhaseTimer::start();
-        let pos = crate::model::position_code(&spec, sess.len);
-        let id_b = self.rt.upload_i32(&[token as i32], &[1])?;
-        let pos_b = self.rt.upload_f32(&pos, &[1, spec.d_model])?;
-        let outs = self.rt.exec_b("embed_b1", &[&self.lits.table, &id_b, &pos_b])?;
-        let mut x = literal_to_f32(&outs[0])?;
-        t.stop_into(&mut bd.other);
-
-        let retrieval_k = &self.cfg.retrieval;
-        // Previous layer's query vector (for InfiniGen-style speculation).
-        let mut prev_q: Option<Vec<f32>> = None;
         for layer in 0..spec.layers {
             let ll = &self.lits.layers[layer];
-            // QKV projection (device).
-            let t = PhaseTimer::start();
-            let x_b = self.rt.upload_f32(&x, &[1, spec.d_model])?;
-            let outs = self.rt.exec_b("qkv_b1", &[&x_b, &ll.g, &ll.wq, &ll.wk, &ll.wv])?;
-            let q = literal_to_f32(&outs[0])?; // [H, dh] (B=1 flattened)
-            let k = literal_to_f32(&outs[1])?;
-            let v = literal_to_f32(&outs[2])?;
-            for kvh in 0..spec.kv_heads {
-                let off = kvh * dh;
-                sess.caches[layer][kvh].append(&k[off..off + dh], &v[off..off + dh]);
-            }
-            // Record decode queries: the attention-aware training side for
-            // online index inserts (RoarGraph wires drained keys with them).
-            let recent_cap = retrieval_k.maintenance.recent_queries;
-            for h in 0..spec.q_heads {
-                push_recent(&mut sess.recent_q[layer][h], &q[h * dh..(h + 1) * dh], recent_cap);
-            }
-            t.stop_into(&mut bd.other);
-
-            // Device partial attention over W (static pattern).
-            let t = PhaseTimer::start();
-            let (o_dev, lse_dev) = self.device_partial(&sess.caches[layer], &q, &spec)?;
-            t.stop_into(&mut bd.attention);
-
-            // Host retrieval (the Table 5 "vector search" phase)...
-            let t = PhaseTimer::start();
-            let budget = retrieval_k.budget.k_for_layer(layer, spec.layers);
-            let heads: Vec<usize> = (0..spec.q_heads).collect();
-            let retrieved: Vec<crate::baselines::Retrieval> = parallel::par_map(&heads, |&h| {
-                let retr = &sess.retrievers[layer][h];
-                let spec_q = if retr.speculates_from_previous_layer() {
-                    prev_q.as_deref().unwrap_or(&q)
-                } else {
-                    &q
+            // QKV projection + KV append + device partial attention over W
+            // (device round-trips: serial per live slot).
+            for (s, it) in items.iter_mut().enumerate() {
+                if errs[s].is_some() {
+                    continue;
+                }
+                let t = PhaseTimer::start();
+                let r = (|| -> Result<Vec<f32>> {
+                    let x_b = self.rt.upload_f32(&xs[s], &[1, spec.d_model])?;
+                    let outs =
+                        self.rt.exec_b("qkv_b1", &[&x_b, &ll.g, &ll.wq, &ll.wk, &ll.wv])?;
+                    let q = literal_to_f32(&outs[0])?; // [H, dh] (B=1 flattened)
+                    let k = literal_to_f32(&outs[1])?;
+                    let v = literal_to_f32(&outs[2])?;
+                    for kvh in 0..spec.kv_heads {
+                        let off = kvh * dh;
+                        it.sess.caches[layer][kvh].append(&k[off..off + dh], &v[off..off + dh]);
+                    }
+                    // Record decode queries: the attention-aware training
+                    // side for online index inserts (RoarGraph wires
+                    // drained keys with them).
+                    let recent_cap = retrieval_k.maintenance.recent_queries;
+                    for h in 0..spec.q_heads {
+                        push_recent(
+                            &mut it.sess.recent_q[layer][h],
+                            &q[h * dh..(h + 1) * dh],
+                            recent_cap,
+                        );
+                    }
+                    Ok(q)
+                })();
+                t.stop_into(&mut bds[s].other);
+                let q = match r {
+                    Ok(q) => q,
+                    Err(e) => {
+                        errs[s] = Some(e);
+                        continue;
+                    }
                 };
-                retr.retrieve(&spec_q[h * dh..(h + 1) * dh], budget)
-            });
-            for r in &retrieved {
-                sess.scanned_total += r.scanned as u64;
-                sess.retrievals += 1;
+                let t = PhaseTimer::start();
+                match self.device_partial(&it.sess.caches[layer], &q, &spec) {
+                    Ok((o, l)) => {
+                        o_devs[s] = o;
+                        lse_devs[s] = l;
+                        qs[s] = q;
+                    }
+                    Err(e) => errs[s] = Some(e),
+                }
+                t.stop_into(&mut bds[s].attention);
             }
-            t.stop_into(&mut bd.search);
 
-            // ...then host partial attention + combine. The per-head id
-            // sets are assembled once into session scratch (no
-            // `retrieved[h].ids` clone per head × layer × token), the
-            // overflow id list is materialised once per GQA group, and
-            // the combine below borrows every partial instead of cloning.
+            let live: Vec<usize> = (0..n).filter(|&s| errs[s].is_none()).collect();
+            if live.is_empty() {
+                break;
+            }
+
+            // Host retrieval (the Table 5 "vector search" phase), FUSED:
+            // every (session, head) pair of the wave shares one batched
+            // fan-out — cross-session candidate scoring in shared kernel
+            // dispatches instead of per-session pools.
+            let budget = retrieval_k.budget.k_for_layer(layer, spec.layers);
             let t = PhaseTimer::start();
-            let overflow: Vec<Vec<u32>> =
-                (0..spec.kv_heads).map(|kvh| sess.caches[layer][kvh].overflow_ids()).collect();
-            let layer_caches = &sess.caches[layer];
-            parallel::par_zip_mut(
-                &mut sess.host_ids[..spec.q_heads],
-                &retrieved,
-                |h, ids, r| {
-                    let cache = &layer_caches[h / group];
-                    ids.clear();
-                    ids.extend_from_slice(&r.ids);
-                    // The overflow buffer (window slid past it, not yet in
-                    // the index) is attended exactly; the maintenance
-                    // worker drains it into the index on a watermark, so
-                    // it stays bounded no matter how long the generation
-                    // runs.
-                    ids.extend_from_slice(&overflow[h / group]);
-                    // Dedup: the worker's index swap can land mid-window,
-                    // so a freshly drained token may surface both from
-                    // retrieval and from the not-yet-advanced overflow
-                    // scan — attending it twice would double its softmax
-                    // weight. Retired (evicted) tokens are dropped here
-                    // synchronously; their index tombstone is async
-                    // reclamation.
-                    ids.sort_unstable();
-                    ids.dedup();
-                    ids.retain(|&id| !cache.is_retired(id as usize));
-                },
-            );
-            let mut attn = vec![0.0f32; spec.q_heads * dh];
-            let host_ids = &sess.host_ids;
-            let host_parts: Vec<PartialAttention> = parallel::par_map(&heads, |&h| {
-                let cache = &layer_caches[h / group];
-                let qv = &q[h * dh..(h + 1) * dh];
-                attend_subset(qv, cache.keys(), cache.values(), &host_ids[h], scale)
-            });
-            for h in 0..spec.q_heads {
-                // Exact γ-combine (Eq. 4/5) over borrowed partials.
-                combine_into(
-                    &[
-                        (&o_dev[h * dh..(h + 1) * dh], lse_dev[h]),
-                        (host_parts[h].o.as_slice(), host_parts[h].lse),
-                    ],
-                    &mut attn[h * dh..(h + 1) * dh],
+            let mut retrieved_all: Vec<Vec<crate::baselines::Retrieval>> =
+                (0..n).map(|_| Vec::new()).collect();
+            {
+                let sess_refs: Vec<&Session> = items.iter().map(|it| &*it.sess).collect();
+                let ret_work: Vec<(usize, usize)> = live
+                    .iter()
+                    .flat_map(|&s| (0..spec.q_heads).map(move |h| (s, h)))
+                    .collect();
+                let flat: Vec<crate::baselines::Retrieval> =
+                    parallel::par_map(&ret_work, |&(s, h)| {
+                        let sess = sess_refs[s];
+                        let retr = &sess.retrievers[layer][h];
+                        let spec_q = if retr.speculates_from_previous_layer() {
+                            prev_qs[s].as_deref().unwrap_or(&qs[s])
+                        } else {
+                            &qs[s]
+                        };
+                        retr.retrieve(&spec_q[h * dh..(h + 1) * dh], budget)
+                    });
+                for (&(s, _h), r) in ret_work.iter().zip(flat) {
+                    retrieved_all[s].push(r);
+                }
+            }
+            let share = t.elapsed_s() / live.len() as f64;
+            for &s in &live {
+                bds[s].search += share;
+                let sess = &mut *items[s].sess;
+                for r in &retrieved_all[s] {
+                    sess.scanned_total += r.scanned as u64;
+                    sess.retrievals += 1;
+                }
+            }
+
+            // Per-slot candidate-set assembly into session scratch (no
+            // `retrieved[h].ids` clone per head × layer × token; overflow
+            // ids materialised once per GQA group).
+            for &s in &live {
+                let t = PhaseTimer::start();
+                let sess = &mut *items[s].sess;
+                let overflow: Vec<Vec<u32>> = (0..spec.kv_heads)
+                    .map(|kvh| sess.caches[layer][kvh].overflow_ids())
+                    .collect();
+                let layer_caches = &sess.caches[layer];
+                parallel::par_zip_mut(
+                    &mut sess.host_ids[..spec.q_heads],
+                    &retrieved_all[s],
+                    |h, ids, r| {
+                        let cache = &layer_caches[h / group];
+                        ids.clear();
+                        ids.extend_from_slice(&r.ids);
+                        // The overflow buffer (window slid past it, not yet
+                        // in the index) is attended exactly; the
+                        // maintenance worker drains it into the index on a
+                        // watermark, so it stays bounded no matter how long
+                        // the generation runs.
+                        ids.extend_from_slice(&overflow[h / group]);
+                        // Dedup: the worker's index swap can land
+                        // mid-window, so a freshly drained token may
+                        // surface both from retrieval and from the
+                        // not-yet-advanced overflow scan — attending it
+                        // twice would double its softmax weight. Retired
+                        // (evicted) tokens are dropped here synchronously;
+                        // their index tombstone is async reclamation.
+                        ids.sort_unstable();
+                        ids.dedup();
+                        ids.retain(|&id| !cache.is_retired(id as usize));
+                    },
                 );
+                t.stop_into(&mut bds[s].attention);
             }
-            t.stop_into(&mut bd.attention);
 
-            // Output projection + FFN (device).
+            // Host partial attention, FUSED: one multi-query gather per
+            // (session, GQA group) — each candidate key row is read once
+            // per group instead of once per head — with the NEXT slot's
+            // first candidate rows prefetched while this group's softmax
+            // is in flight (the wave-overlap read-ahead).
             let t = PhaseTimer::start();
-            let x_b = self.rt.upload_f32(&x, &[1, spec.d_model])?;
-            let attn_b = self.rt.upload_f32(&attn, &[1, spec.q_heads * dh])?;
-            let outs = self.rt.exec_b(
-                "post_b1",
-                &[&x_b, &attn_b, &ll.wo, &ll.g2, &ll.w1, &ll.w3, &ll.w2],
-            )?;
-            x = literal_to_f32(&outs[0])?;
-            t.stop_into(&mut bd.other);
-            prev_q = Some(q);
+            let att_work: Vec<(usize, usize)> = live
+                .iter()
+                .flat_map(|&s| (0..spec.kv_heads).map(move |kvh| (s, kvh)))
+                .collect();
+            let parts: Vec<Vec<PartialAttention>> = {
+                let sess_refs: Vec<&Session> = items.iter().map(|it| &*it.sess).collect();
+                let widx: Vec<usize> = (0..att_work.len()).collect();
+                parallel::par_map(&widx, |&i| {
+                    let (s, kvh) = att_work[i];
+                    let sess = sess_refs[s];
+                    let cache = &sess.caches[layer][kvh];
+                    // Read-ahead: touch the next (session, group) slot's
+                    // first candidate key row so its cache line is in
+                    // flight during this group's score+softmax (safe hint;
+                    // never dereferenced).
+                    if let Some(&(s2, kvh2)) = att_work.get(i + 1) {
+                        let sess2 = sess_refs[s2];
+                        let keys2 = sess2.caches[layer][kvh2].keys();
+                        if let Some(&id) = sess2
+                            .host_ids
+                            .get(kvh2 * group)
+                            .and_then(|ids| ids.first())
+                        {
+                            if let Some(row0) = keys2.as_slice().get(id as usize * keys2.cols())
+                            {
+                                kernel::prefetch(row0 as *const f32);
+                            }
+                        }
+                    }
+                    let per_head: Vec<&[u32]> = (0..group)
+                        .map(|g| sess.host_ids[kvh * group + g].as_slice())
+                        .collect();
+                    let qg = &qs[s][kvh * group * dh..(kvh + 1) * group * dh];
+                    attend_group_mq(qg, cache.keys(), cache.values(), &per_head, scale)
+                })
+            };
+            let share = t.elapsed_s() / live.len() as f64;
+            for &s in &live {
+                bds[s].attention += share;
+            }
+            let mut slot_parts: Vec<Vec<Vec<PartialAttention>>> =
+                (0..n).map(|_| Vec::new()).collect();
+            for ((s, _kvh), p) in att_work.into_iter().zip(parts) {
+                slot_parts[s].push(p);
+            }
+
+            // Exact γ-combine (Eq. 4/5) + output projection + FFN
+            // (device round-trips: serial per live slot).
+            for &s in &live {
+                let t = PhaseTimer::start();
+                let mut attn = vec![0.0f32; spec.q_heads * dh];
+                for h in 0..spec.q_heads {
+                    let p = &slot_parts[s][h / group][h % group];
+                    combine_into(
+                        &[
+                            (&o_devs[s][h * dh..(h + 1) * dh], lse_devs[s][h]),
+                            (p.o.as_slice(), p.lse),
+                        ],
+                        &mut attn[h * dh..(h + 1) * dh],
+                    );
+                }
+                t.stop_into(&mut bds[s].attention);
+                let t = PhaseTimer::start();
+                let r = (|| -> Result<Vec<f32>> {
+                    let x_b = self.rt.upload_f32(&xs[s], &[1, spec.d_model])?;
+                    let attn_b = self.rt.upload_f32(&attn, &[1, spec.q_heads * dh])?;
+                    let outs = self.rt.exec_b(
+                        "post_b1",
+                        &[&x_b, &attn_b, &ll.wo, &ll.g2, &ll.w1, &ll.w3, &ll.w2],
+                    )?;
+                    literal_to_f32(&outs[0])
+                })();
+                t.stop_into(&mut bds[s].other);
+                match r {
+                    Ok(x) => {
+                        xs[s] = x;
+                        prev_qs[s] = Some(std::mem::take(&mut qs[s]));
+                    }
+                    Err(e) => errs[s] = Some(e),
+                }
+            }
         }
 
-        // LM head + greedy sampling.
-        let t = PhaseTimer::start();
-        let x_b = self.rt.upload_f32(&x, &[1, spec.d_model])?;
-        let outs = self.rt.exec_b("lm_head_b1", &[&x_b, &self.lits.gf, &self.lits.wu])?;
-        let logits = literal_to_f32(&outs[0])?;
-        let next = crate::tensor::argtopk(&logits, 1)[0] as u32;
-        sess.x_last = x;
-        sess.len += 1;
-        t.stop_into(&mut bd.other);
-
-        // Online index maintenance: drain overflow buffers that crossed the
-        // watermark into the ANN indexes (batched, fanned out per GQA group
-        // via util::parallel — off the token-critical path above).
-        let t = PhaseTimer::start();
-        self.maintain_indexes(sess);
-        t.stop_into(&mut bd.maintenance);
-
-        Ok(DecodeOutput { token: next, breakdown: bd })
+        // LM head + greedy sampling, then per-session index maintenance —
+        // maintenance stays serialized PER SESSION (each session's worker
+        // protocol and flush order are untouched by the wave fusion).
+        let mut out: Vec<Result<DecodeOutput>> = Vec::with_capacity(n);
+        for (s, it) in items.iter_mut().enumerate() {
+            if let Some(e) = errs[s].take() {
+                out.push(Err(e));
+                continue;
+            }
+            let t = PhaseTimer::start();
+            let next = match self.lm_head(&xs[s]) {
+                Ok(tok) => tok,
+                Err(e) => {
+                    out.push(Err(e));
+                    continue;
+                }
+            };
+            it.sess.x_last = std::mem::take(&mut xs[s]);
+            it.sess.len += 1;
+            t.stop_into(&mut bds[s].other);
+            // Online index maintenance: drain overflow buffers that
+            // crossed the watermark into the ANN indexes (batched, fanned
+            // out per GQA group via util::parallel).
+            let t = PhaseTimer::start();
+            self.maintain_indexes(it.sess);
+            t.stop_into(&mut bds[s].maintenance);
+            out.push(Ok(DecodeOutput { token: next, breakdown: std::mem::take(&mut bds[s]) }));
+        }
+        out
     }
 
     /// Online maintenance: apply completed background work, then enqueue
@@ -869,13 +1055,18 @@ impl Engine {
         Ok((literal_to_f32(&outs[0])?, literal_to_f32(&outs[1])?))
     }
 
-    /// First generated token: lm_head over the prefill's last hidden state.
-    pub fn first_token(&self, sess: &Session) -> Result<u32> {
+    /// LM head + greedy sampling over one hidden state.
+    fn lm_head(&self, x: &[f32]) -> Result<u32> {
         let spec = self.spec();
-        let x_b = self.rt.upload_f32(&sess.x_last, &[1, spec.d_model])?;
+        let x_b = self.rt.upload_f32(x, &[1, spec.d_model])?;
         let outs = self.rt.exec_b("lm_head_b1", &[&x_b, &self.lits.gf, &self.lits.wu])?;
         let logits = literal_to_f32(&outs[0])?;
         Ok(crate::tensor::argtopk(&logits, 1)[0] as u32)
+    }
+
+    /// First generated token: lm_head over the prefill's last hidden state.
+    pub fn first_token(&self, sess: &Session) -> Result<u32> {
+        self.lm_head(&sess.x_last)
     }
 
     /// Generate `max_tokens` greedily from a freshly prefilled session:

@@ -20,7 +20,7 @@ pub mod induction;
 pub mod maintain;
 pub mod weights;
 
-pub use engine::{DecodeOutput, Engine, Session};
+pub use engine::{DecodeOutput, Engine, Session, WaveItem};
 pub use weights::{LayerWeights, Weights};
 
 use crate::runtime::manifest::SpecMeta;

@@ -175,7 +175,11 @@ fn stream_events(out: &mut TcpStream, id: u64, events: mpsc::Receiver<Event>) ->
                     .set("resume_s", m.resume_s)
                     .set("snapshot_bytes", m.snapshot_bytes)
                     .set("session_parks", m.session_parks)
-                    .set("session_resumes", m.session_resumes);
+                    .set("session_resumes", m.session_resumes)
+                    .set("queue_depth_peak", m.queue_depth_peak)
+                    .set("wave_occupancy_mean", m.wave_occupancy_mean)
+                    .set("max_gap_waves", m.max_gap_waves)
+                    .set("replica_tokens_per_s", m.replica_tokens_per_s);
                 writeln!(out, "{}", o.to_string())?;
                 return Ok(());
             }

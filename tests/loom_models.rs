@@ -242,6 +242,106 @@ fn worker_queue_depth_accounting_and_shutdown() {
     });
 }
 
+/// Model 5: the replica slot protocol on the REAL
+/// [`retrieval_attention::coordinator::scheduler::SlotBoard`] (whose
+/// atomics are the loom facade's under `--cfg loom`): a submitter
+/// enters jobs onto the board before queueing them and raises the stop
+/// flag after the last one; the worker drains the queue in waves
+/// ([`pick_wave`] selects within each wave), publishes each job's
+/// result, and only then retires its slot. The invariant under every
+/// schedule: an observer that sees the board drain (`in_flight() == 0`
+/// after stop) must also see every published result — exactly the
+/// contract clients of `Replica::outstanding` rely on.
+fn slot_protocol_model(retire_before_publish: bool) {
+    use loom::sync::atomic::{AtomicBool, Ordering};
+    use loom::sync::Mutex;
+    use retrieval_attention::coordinator::scheduler::{pick_wave, SlotBoard};
+    loom::model(move || {
+        let board = Arc::new(SlotBoard::new());
+        let queue = Arc::new(Mutex::new(Vec::<usize>::new()));
+        let published: Arc<[AtomicBool; 2]> =
+            Arc::new([AtomicBool::new(false), AtomicBool::new(false)]);
+        let submitter = {
+            let board = board.clone();
+            let queue = queue.clone();
+            loom::thread::spawn(move || {
+                for j in 0..2usize {
+                    // Enter BEFORE the queue push (`Replica::submit`): the
+                    // job must never be in flight yet invisible.
+                    board.enter();
+                    queue.lock().unwrap().push(j);
+                }
+                board.raise_stop();
+            })
+        };
+        let worker = {
+            let board = board.clone();
+            let queue = queue.clone();
+            let published = published.clone();
+            loom::thread::spawn(move || loop {
+                // One wave: take whatever is queued, pick within it.
+                let wave: Vec<usize> = std::mem::take(&mut *queue.lock().unwrap());
+                board.set_queued(0);
+                if wave.is_empty() {
+                    if board.stopped() {
+                        break;
+                    }
+                    loom::thread::yield_now();
+                    continue;
+                }
+                let waited = vec![0u64; wave.len()];
+                let seq: Vec<u64> = (0..wave.len() as u64).collect();
+                for &i in &pick_wave(0, 4, &waited, &seq) {
+                    let j = wave[i];
+                    if retire_before_publish {
+                        // The BUG the meta-test below must catch: the
+                        // slot frees before the result exists.
+                        board.retire();
+                        published[j].store(true, Ordering::Release);
+                    } else {
+                        // Publish-then-retire: the real retirement order.
+                        published[j].store(true, Ordering::Release);
+                        board.retire();
+                    }
+                }
+            })
+        };
+        // Observer: once the stop flag is visible every enter() is too
+        // (raise_stop is Release-after-enters); then wait for the drain.
+        loop {
+            if board.stopped() && board.in_flight() == 0 {
+                break;
+            }
+            loom::thread::yield_now();
+        }
+        for (j, flag) in published.iter().enumerate() {
+            assert!(
+                flag.load(Ordering::Acquire),
+                "board drained but job {j}'s result was never published"
+            );
+        }
+        submitter.join().unwrap();
+        worker.join().unwrap();
+        assert_eq!(board.in_flight(), 0);
+        assert_eq!(board.queued(), 0);
+    });
+}
+
+/// The slot protocol holds under every interleaving.
+#[test]
+fn slot_protocol_publish_then_retire_holds() {
+    slot_protocol_model(false);
+}
+
+/// Meta-test: retiring a slot BEFORE publishing its result must be
+/// caught — there is a schedule where the observer sees the board drain
+/// while a result is still unpublished, and the explorer must find it.
+#[test]
+fn slot_protocol_retire_before_publish_is_caught() {
+    let result = std::panic::catch_unwind(|| slot_protocol_model(true));
+    assert!(result.is_err(), "model checker missed retire-before-publish");
+}
+
 /// Protocol mirror of the map-before-front invariant: the "index front"
 /// here is just the highest dense id a search may return, the map the
 /// vector it must index into. Publishing the map first keeps every

@@ -1,0 +1,211 @@
+//! Continuous-batching scheduler suite: the wave loop's headline
+//! invariant — batched decode is **bit-identical** to serial decode —
+//! plus the fairness bound and session-verb liveness under load.
+//!
+//! The equivalence tests run every index family × every quant mode with
+//! inline (synchronous) maintenance: the async worker's completion timing
+//! is scheduler-dependent, so bit-identity is only a meaningful claim
+//! when drains land at deterministic token positions. The wave fusion
+//! itself must then be invisible: `par_map` is order-preserving and the
+//! fused kernels (`dot_gather_mq`, `attend_group_mq`) are property-locked
+//! bitwise against their per-head forms.
+
+use retrieval_attention::config::{Method, ServeConfig};
+use retrieval_attention::coordinator::{collect, Replica, Request, SessionMode, SessionSpec};
+use retrieval_attention::kernel::QuantMode;
+use retrieval_attention::kvcache::StaticPattern;
+use retrieval_attention::model::Engine;
+use retrieval_attention::util::rng::Rng;
+use retrieval_attention::workload::tasks;
+
+fn wave_cfg(method: Method, quant: QuantMode) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.model = "induction-mini".into();
+    cfg.method = method;
+    cfg.pattern = StaticPattern { sink: 32, window: 128 };
+    cfg.retrieval.top_k = 32;
+    cfg.retrieval.quant.mode = quant;
+    // Bit-identity requires deterministic maintenance placement: inline
+    // drains happen at the same token index no matter how sessions are
+    // interleaved across waves. A low watermark makes drains actually
+    // fire inside the decode window under test.
+    cfg.retrieval.maintenance.async_worker = false;
+    cfg.retrieval.maintenance.drain_watermark = 2;
+    cfg
+}
+
+/// Serial reference: each prompt decoded alone on a fresh engine built
+/// from the same config (same seed ⇒ same weights as the replica's).
+fn serial_tokens(cfg: &ServeConfig, prompts: &[Vec<u32>], max_tokens: usize) -> Vec<Vec<u32>> {
+    let eng = Engine::from_config(cfg.clone()).expect("engine init");
+    prompts
+        .iter()
+        .map(|p| {
+            let mut sess = eng.prefill(p).expect("prefill");
+            let (tokens, _) = eng.generate(&mut sess, max_tokens).expect("generate");
+            sess.shutdown_maintenance();
+            tokens
+        })
+        .collect()
+}
+
+/// Batched: all prompts submitted to one replica, decoding together in
+/// fused waves. `stagger` delays each submit so later sessions join
+/// mid-stream while earlier ones are already decoding.
+fn batched_tokens(
+    cfg: &ServeConfig,
+    prompts: &[Vec<u32>],
+    max_tokens: usize,
+    stagger: Option<std::time::Duration>,
+) -> Vec<Vec<u32>> {
+    let replica = Replica::spawn(cfg.clone());
+    let rxs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            if i > 0 {
+                if let Some(d) = stagger {
+                    std::thread::sleep(d);
+                }
+            }
+            replica.submit(Request { id: i as u64, prompt: p.clone(), max_tokens, session: None })
+        })
+        .collect();
+    let out: Vec<Vec<u32>> =
+        rxs.iter().map(|rx| collect(rx).expect("batched request failed").0).collect();
+    assert_eq!(replica.outstanding(), 0, "all requests retired");
+    out
+}
+
+fn passkey_prompts(seed: u64, n: usize, len: usize) -> Vec<Vec<u32>> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n)
+        .map(|i| tasks::passkey(&mut rng, len, 0.15 + 0.3 * i as f64 / n.max(1) as f64).prompt)
+        .collect()
+}
+
+/// The tentpole invariant, across every index family and quant mode:
+/// a wave of sessions produces exactly the tokens each session would
+/// produce decoding alone.
+#[test]
+fn batched_decode_is_bit_identical_to_serial() {
+    let families = [Method::Flat, Method::Ivf, Method::Hnsw, Method::RetrievalAttention];
+    let quants = [QuantMode::Off, QuantMode::Fp16, QuantMode::Int8];
+    for family in families {
+        for quant in quants {
+            let cfg = wave_cfg(family, quant);
+            let prompts = passkey_prompts(42, 2, 288);
+            let serial = serial_tokens(&cfg, &prompts, 3);
+            let batched = batched_tokens(&cfg, &prompts, 3, None);
+            assert_eq!(
+                serial, batched,
+                "wave decode diverged from serial for {family:?}/{quant:?}"
+            );
+        }
+    }
+}
+
+/// Mid-stream joins: sessions admitted while earlier ones are already
+/// waves deep must neither perturb them nor decode differently
+/// themselves.
+#[test]
+fn mid_stream_joins_preserve_bit_identity() {
+    let cfg = wave_cfg(Method::RetrievalAttention, QuantMode::Off);
+    let prompts = passkey_prompts(43, 3, 288);
+    let serial = serial_tokens(&cfg, &prompts, 8);
+    let batched = batched_tokens(&cfg, &prompts, 8, Some(std::time::Duration::from_millis(30)));
+    assert_eq!(serial, batched, "mid-stream join changed decoded tokens");
+}
+
+/// The fairness bound: under saturation (4 residents, wave_size 1) no
+/// session's inter-token gap may exceed `fairness_waves` waves.
+#[test]
+fn throttled_waves_respect_the_fairness_bound() {
+    let mut cfg = wave_cfg(Method::Flat, QuantMode::Off);
+    cfg.scheduler.wave_size = 1;
+    cfg.scheduler.fairness_waves = 3;
+    cfg.scheduler.max_batch = 4;
+    let prompts = passkey_prompts(44, 4, 288);
+    let replica = Replica::spawn(cfg);
+    let rxs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            replica.submit(Request {
+                id: i as u64,
+                prompt: p.clone(),
+                max_tokens: 6,
+                session: None,
+            })
+        })
+        .collect();
+    for (i, rx) in rxs.iter().enumerate() {
+        let (tokens, m) = collect(rx).expect("request failed under saturation");
+        assert_eq!(tokens.len(), 6);
+        assert!(m.max_gap_waves >= 1, "request {i}: gap accounting never ran");
+        assert!(
+            m.max_gap_waves <= 3,
+            "request {i}: inter-token gap {} waves exceeds fairness bound 3",
+            m.max_gap_waves
+        );
+        assert!(m.wave_occupancy_mean > 0.0, "request {i}: occupancy not recorded");
+        assert!(m.replica_tokens_per_s > 0.0, "request {i}: throughput not recorded");
+    }
+    assert_eq!(replica.outstanding(), 0);
+}
+
+/// Session verbs landing mid-stream (continue on a retained session,
+/// close on an unknown one) are registry operations: they must complete
+/// and must never stall a session that is already decoding.
+#[test]
+fn session_verbs_never_stall_other_sessions() {
+    let cfg = wave_cfg(Method::RetrievalAttention, QuantMode::Off);
+    let replica = Replica::spawn(cfg);
+    let mut rng = Rng::seed_from(45);
+    // Turn 1: open retains session 7.
+    let s1 = tasks::passkey(&mut rng, 288, 0.4);
+    let rx = replica.submit(Request {
+        id: 1,
+        prompt: s1.prompt.clone(),
+        max_tokens: 2,
+        session: Some(SessionSpec { session_id: 7, mode: SessionMode::Open }),
+    });
+    let (t1, _) = collect(&rx).expect("open turn failed");
+    assert!(s1.passed(&t1), "open turn wrong: {t1:?}");
+    // A long-running plain request occupies the wave loop...
+    let s2 = tasks::passkey(&mut rng, 288, 0.7);
+    let rx_long = replica.submit(Request {
+        id: 2,
+        prompt: s2.prompt.clone(),
+        max_tokens: 10,
+        session: None,
+    });
+    // ...while a continue turn and a close-of-unknown land mid-stream.
+    let rx_cont = replica.submit(Request {
+        id: 3,
+        prompt: vec![5, 1],
+        max_tokens: 2,
+        session: Some(SessionSpec { session_id: 7, mode: SessionMode::Continue }),
+    });
+    let rx_bogus = replica.submit(Request {
+        id: 4,
+        prompt: Vec::new(),
+        max_tokens: 0,
+        session: Some(SessionSpec { session_id: 99, mode: SessionMode::Close }),
+    });
+    let (t_long, _) = collect(&rx_long).expect("long request stalled");
+    assert_eq!(t_long.len(), 10, "long request lost tokens to a session verb");
+    let (t_cont, _) = collect(&rx_cont).expect("continue turn failed");
+    assert_eq!(t_cont.len(), 2);
+    assert!(collect(&rx_bogus).is_err(), "closing an unknown session must fail");
+    // Clean close of the real session; everything retired exactly once.
+    let rx_close = replica.submit(Request {
+        id: 5,
+        prompt: Vec::new(),
+        max_tokens: 0,
+        session: Some(SessionSpec { session_id: 7, mode: SessionMode::Close }),
+    });
+    assert!(collect(&rx_close).is_ok(), "close of a retained session failed");
+    assert_eq!(replica.outstanding(), 0);
+    assert_eq!(replica.queue_depth(), 0);
+}

@@ -58,6 +58,44 @@ fn continuous_batching_interleaves_sessions() {
 }
 
 #[test]
+fn outstanding_counts_resident_sessions_exactly_once() {
+    // Exactly-once slot accounting: a session scheduled across many waves
+    // is still ONE outstanding request, and the count drops only at
+    // retirement. `max_batch = 1` forces the other submissions to queue so
+    // the queue-depth gauge is exercised too.
+    let mut c = cfg(Method::Flat);
+    c.scheduler.max_batch = 1;
+    let replica = Replica::spawn(c);
+    let mut rng = Rng::seed_from(13);
+    let samples: Vec<_> = (0..3).map(|_| tasks::passkey(&mut rng, 600, 0.5)).collect();
+    let rxs: Vec<_> = samples
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let req =
+                Request { id: i as u64, prompt: s.prompt.clone(), max_tokens: 4, session: None };
+            replica.submit(req)
+        })
+        .collect();
+    // Slots are entered in submit, before the worker sees the job: all
+    // three are in flight now, each counted once (not once per wave).
+    assert_eq!(replica.outstanding(), 3, "one slot per request, entered at submit");
+    let (first_tokens, m0) = collect(&rxs[0]).unwrap();
+    assert!(samples[0].passed(&first_tokens));
+    // Retirement precedes the terminal event, so by the time collect()
+    // returns the first slot is already released.
+    assert!(replica.outstanding() <= 2, "retired request still counted");
+    // With max_batch = 1 the later submissions queued behind the first.
+    assert!(m0.queue_depth_peak >= 1, "queued requests invisible to the gauge");
+    for (rx, s) in rxs.iter().zip(samples.iter()).skip(1) {
+        let (tokens, _) = collect(rx).unwrap();
+        assert!(s.passed(&tokens));
+    }
+    assert_eq!(replica.outstanding(), 0, "slots must drain to zero");
+    assert_eq!(replica.queue_depth(), 0, "queue gauge must drain to zero");
+}
+
+#[test]
 fn router_balances_load() {
     let router = Router::spawn(cfg(Method::StreamingLlm), 2);
     assert_eq!(router.replica_count(), 2);
