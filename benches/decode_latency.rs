@@ -20,6 +20,12 @@
 //! reporting tokens/sec/replica and p50 inter-token latency, recorded
 //! under `multi_session` in the `BENCH_decode.json` summary.
 //!
+//! New with the per-head policy layer: a `head_policy` profile (policy
+//! off vs calibrated-with-streaming-floor at 64K/128K in full mode)
+//! contrasting per-head index bytes, snapshot bytes, maintenance CPU,
+//! and decode throughput — the DuoAttention-style memory the streaming
+//! tier gives back.
+//!
 //! `cargo bench --bench decode_latency [-- full]`
 //!
 //! Runs against PJRT artifacts when present, the native backend otherwise.
@@ -281,6 +287,90 @@ fn session_snapshot_profile(engine: &Engine, lengths: &[usize]) -> Value {
     Value::Arr(cases)
 }
 
+/// Head-policy profile: policy off vs a calibrated run whose override
+/// floor pins the first half of every layer's query heads to the
+/// streaming tier (synthetic geometry gives no natural span-mass signal,
+/// so the floor makes the specialization deterministic; whatever the
+/// live calibration pass decides on top only raises the fraction). Per
+/// config: per-head index bytes, session snapshot bytes, maintenance
+/// CPU, and decode throughput — the memory/CPU the streaming tier
+/// returns and what it costs on the token path.
+fn head_policy_profile(
+    spec: &retrieval_attention::runtime::manifest::SpecMeta,
+    lengths: &[usize],
+    gen: usize,
+) -> Value {
+    use retrieval_attention::baselines::HostRetriever;
+    use retrieval_attention::policy::PolicyMode;
+    let mut cases: Vec<Value> = Vec::new();
+    for &n in lengths {
+        let mut row = Value::obj();
+        row.set("n", n).set("generated", gen);
+        let mut off_head_bytes = 0u64;
+        let mut off_snap_bytes = 0u64;
+        for tag in ["off", "calibrated"] {
+            let mut cfg = ServeConfig::default();
+            cfg.model = "llama3-mini".into();
+            cfg.retrieval.maintenance.drain_watermark = 32;
+            // Inline maintenance: swap_s_total then IS the maintenance
+            // CPU this config spends, not a worker-thread overlap.
+            cfg.retrieval.maintenance.async_worker = false;
+            if tag == "calibrated" {
+                cfg.policy.mode = PolicyMode::Calibrated;
+                cfg.policy.calibration_steps = 8;
+                cfg.policy.force_streaming = (0..spec.layers)
+                    .flat_map(|l| (0..spec.q_heads / 2).map(move |h| (l, h)))
+                    .collect();
+            }
+            let engine = Engine::from_config(cfg).expect("engine");
+            let heads = heads_for(spec, n);
+            let mut sess = engine
+                .synthetic_session(heads, Method::RetrievalAttention)
+                .expect("session");
+            let t = std::time::Instant::now();
+            let mut tok = 1u32;
+            for _ in 0..gen {
+                tok = black_box(engine.decode_step(&mut sess, tok % 97).unwrap().token);
+            }
+            let wall = t.elapsed().as_secs_f64();
+            sess.shutdown_maintenance();
+            let head_bytes: u64 =
+                sess.retrievers.iter().flatten().map(|r| r.memory_bytes() as u64).sum();
+            let snap_bytes = engine
+                .snapshot_session(&mut sess, &mut std::io::sink())
+                .expect("snapshot");
+            let frac = sess.streaming_fraction();
+            let tps = if wall > 0.0 { gen as f64 / wall } else { 0.0 };
+            println!(
+                "head-policy/{tag}: n={n} gen={gen} streaming_frac={frac:.2} \
+                 head_index_bytes={head_bytes} snapshot_bytes={snap_bytes} \
+                 maint_cpu_s={:.4} tokens/s={tps:.1}",
+                sess.maint.stats.swap_s_total,
+            );
+            let mut o = Value::obj();
+            o.set("streaming_fraction", frac)
+                .set("head_index_bytes", head_bytes)
+                .set("snapshot_bytes", snap_bytes)
+                .set("index_bytes_avoided", sess.index_bytes_avoided)
+                .set("maint_cpu_s", sess.maint.stats.swap_s_total)
+                .set("tokens_per_s", tps);
+            if tag == "off" {
+                off_head_bytes = head_bytes;
+                off_snap_bytes = snap_bytes;
+            } else {
+                let saved = |off: u64, now: u64| {
+                    if off > 0 { (off - off.min(now)) as f64 / off as f64 } else { 0.0 }
+                };
+                row.set("head_index_bytes_saved_frac", saved(off_head_bytes, head_bytes));
+                row.set("snapshot_bytes_saved_frac", saved(off_snap_bytes, snap_bytes));
+            }
+            row.set(tag, o);
+        }
+        cases.push(row);
+    }
+    Value::Arr(cases)
+}
+
 /// Write the repo-root perf-trajectory summary (phase medians + recall).
 fn write_bench_summary(
     profile: &str,
@@ -288,6 +378,7 @@ fn write_bench_summary(
     decode_cases: Option<Value>,
     session_snapshot: Option<Value>,
     multi_session: Option<Value>,
+    head_policy: Option<Value>,
 ) {
     let mut out = Value::obj();
     out.set("profile", profile)
@@ -301,6 +392,9 @@ fn write_bench_summary(
     }
     if let Some(ms) = multi_session {
         out.set("multi_session", ms);
+    }
+    if let Some(hp) = head_policy {
+        out.set("head_policy", hp);
     }
     std::fs::write("BENCH_decode.json", out.to_string_pretty()).ok();
 }
@@ -334,7 +428,10 @@ fn smoke() {
     // Tiny continuous-batching profile: the wave entry point must produce
     // throughput numbers even at smoke geometry.
     let ms = multi_session_profile(&engine, &[1, 2], 512, 3);
-    write_bench_summary("smoke", search, None, Some(snap), Some(ms));
+    // Tiny head-policy contrast: the calibrated config must show its
+    // streaming floor and give back per-head index + snapshot bytes.
+    let hp = head_policy_profile(engine.spec(), &[1_024], 12);
+    write_bench_summary("smoke", search, None, Some(snap), Some(ms), Some(hp));
     let text = std::fs::read_to_string("BENCH_decode.json").expect("BENCH_decode.json missing");
     let v = json::parse(&text).expect("BENCH_decode.json must parse");
     let cases = v.get("search_phase").and_then(Value::as_arr).expect("search_phase array");
@@ -355,6 +452,29 @@ fn smoke() {
         assert!(tps > 0.0, "implausible multi-session throughput: {tps}");
         let p50 = c.get("p50_inter_token_s").and_then(Value::as_f64).expect("p50 field");
         assert!(p50 > 0.0, "implausible inter-token p50: {p50}");
+    }
+    let hp = v.get("head_policy").and_then(Value::as_arr).expect("head_policy array");
+    assert!(!hp.is_empty(), "no head-policy cases recorded");
+    for c in hp {
+        let cal = c.get("calibrated").expect("calibrated config");
+        let frac =
+            cal.get("streaming_fraction").and_then(Value::as_f64).expect("fraction field");
+        assert!(frac >= 0.25, "streaming floor not reached: {frac}");
+        let head_saved = c
+            .get("head_index_bytes_saved_frac")
+            .and_then(Value::as_f64)
+            .expect("head savings field");
+        // Per-head index bytes scale with the head count, so the
+        // streaming fraction is (within slack) a floor on the savings.
+        assert!(
+            head_saved >= frac * 0.8,
+            "streaming {frac:.2} of heads saved only {head_saved:.2} of index bytes"
+        );
+        let snap_saved = c
+            .get("snapshot_bytes_saved_frac")
+            .and_then(Value::as_f64)
+            .expect("snapshot savings field");
+        assert!(snap_saved > 0.0, "streaming heads did not shrink the snapshot");
     }
     println!(
         "bench-smoke: OK ({} search-phase cases, kernel = {})",
@@ -411,6 +531,12 @@ fn main() {
     let ms_n = if full { 8_192 } else { 2_048 };
     let ms_waves = if full { 32 } else { 12 };
     let multi_session = multi_session_profile(&engine, &[1, 4, 16], ms_n, ms_waves);
+
+    // --- Head policy: off vs calibrated (64K/128K in full) — the index
+    // bytes, maintenance CPU, and throughput the streaming tier trades. ---
+    let hp_lengths: &[usize] = if full { &[65_536, 131_072] } else { &[16_384] };
+    let hp_gen = if full { 64 } else { 32 };
+    let head_policy = head_policy_profile(&spec, hp_lengths, hp_gen);
 
     // --- Long-generation flatness: worker on / sync drain / drain off. ---
     let n = if full { 16_384 } else { 2_048 };
@@ -560,5 +686,6 @@ fn main() {
         Some(b.to_json()),
         Some(session_snapshot),
         Some(multi_session),
+        Some(head_policy),
     );
 }

@@ -465,6 +465,7 @@ pub trait HostRetriever: Send + Sync {
 const RETRIEVER_INDEX: u8 = 1;
 const RETRIEVER_EMPTY: u8 = 2;
 const RETRIEVER_ALL: u8 = 3;
+const RETRIEVER_STREAMING: u8 = 4;
 
 /// Restore one head from a snapshot stream: the inverse of
 /// [`HostRetriever::save_state`], dispatched on the head tag. `group` is
@@ -476,6 +477,11 @@ pub fn restore_retriever(
     match r.u8()? {
         RETRIEVER_EMPTY => Ok(Box::new(EmptyRetriever)),
         RETRIEVER_ALL => Ok(Box::new(AllRetriever { group })),
+        RETRIEVER_STREAMING => {
+            let sinks = r.usize()?;
+            let window = r.usize()?;
+            Ok(Box::new(StreamingRetriever::new(group, sinks, window)))
+        }
         RETRIEVER_INDEX => {
             let family = r.u8()?;
             let store_gen = r.u64()?;
@@ -598,6 +604,129 @@ pub fn build_retriever(method: Method, inp: RetrieverInputs<'_>) -> Box<dyn Host
             )),
             "RetrievalAttention",
         ),
+    }
+}
+
+/// Policy-aware builder: a query head assigned the streaming tier by the
+/// per-head policy layer ([`crate::policy`]) gets the index-free
+/// [`StreamingRetriever`] instead of the method's ANN index. Only the
+/// index-backed methods participate — the fixed-set baselines already
+/// embody a per-method policy of their own, and replacing them would
+/// change *their* semantics rather than specialize ours.
+pub fn build_retriever_for_policy(
+    method: Method,
+    inp: RetrieverInputs<'_>,
+    policy: crate::policy::HeadPolicy,
+) -> Box<dyn HostRetriever> {
+    if method.index_backed() {
+        if let crate::policy::HeadPolicy::Streaming { sinks, window } = policy {
+            return Box::new(StreamingRetriever::new(inp.group.clone(), sinks, window));
+        }
+    }
+    build_retriever(method, inp)
+}
+
+/// The streaming-head tier (DuoAttention): a constant-length host set —
+/// the group's first `sinks` and last `window` tokens — read straight off
+/// the shared id map. No index, no search, no per-head state beyond two
+/// lengths:
+///
+/// * **Maintenance**: inserts/removals/remaps are trivially "applied"
+///   (the group-level map publish already did everything this head reads),
+///   so a streaming head never blocks a mixed GQA group's drains,
+///   evictions, or reclamation epochs — and holds no dense ids that a
+///   compaction would have to renumber ([`HostRetriever::reclaim_counts`]
+///   is `None`, taking the head out of the epoch trigger entirely).
+/// * **Unlike [`EmptyRetriever`]** it does NOT discard inserts: the
+///   tokens stay live for the group's retrieval heads; this head merely
+///   chooses to read only the window. `discards_inserts` stays false so
+///   exact-method drain gating is unaffected.
+/// * **Reads the latest map generation** on every retrieve, so eviction
+///   and reclamation never strand it (retired ids inside the window are
+///   filtered by the engine's retired-id mask like any retrieved id).
+pub struct StreamingRetriever {
+    group: Arc<GroupShared>,
+    sinks: usize,
+    window: usize,
+}
+
+impl StreamingRetriever {
+    pub fn new(group: Arc<GroupShared>, sinks: usize, window: usize) -> StreamingRetriever {
+        StreamingRetriever { group, sinks, window }
+    }
+}
+
+impl HostRetriever for StreamingRetriever {
+    /// The constant-length sink+window set; ignores the query entirely
+    /// and scores nothing (`scanned = 0`).
+    fn retrieve(&self, _q: &[f32], _k: usize) -> Retrieval {
+        let map = self.group.id_map();
+        let n = map.len();
+        if n <= self.sinks + self.window {
+            return Retrieval { ids: map.ids.clone(), scanned: 0 };
+        }
+        let mut ids = Vec::with_capacity(self.sinks + self.window);
+        ids.extend_from_slice(&map.ids[..self.sinks]);
+        ids.extend_from_slice(&map.ids[n - self.window..]);
+        Retrieval { ids, scanned: 0 }
+    }
+
+    fn name(&self) -> &'static str {
+        "Streaming"
+    }
+
+    fn supports_insert(&self) -> bool {
+        true
+    }
+
+    fn needs_store(&self) -> bool {
+        false
+    }
+
+    /// The group-level drain already published the grown id map; the
+    /// window slides forward by construction.
+    fn insert_batch(&self, _store: &KeyStore, _ids: &[u32], _ctx: &InsertContext<'_>) -> bool {
+        true
+    }
+
+    fn supports_remove(&self) -> bool {
+        true
+    }
+
+    fn remove_batch(&self, _absolute_ids: &[u32]) -> bool {
+        true
+    }
+
+    fn remove_dense(&self, _dense_ids: &[u32]) -> bool {
+        true
+    }
+
+    fn supports_reclaim(&self) -> bool {
+        true
+    }
+
+    /// No dense state: a remap is complete the moment the group publishes
+    /// the new map, which the next retrieve reads.
+    fn apply_remap(&self, _plan: &Arc<RemapPlan>) -> bool {
+        true
+    }
+
+    fn supports_save(&self) -> bool {
+        true
+    }
+
+    /// The host set is a view over the group map (written once per
+    /// group); only the tag and the two window lengths are head-local —
+    /// this is exactly the "snapshots omit index state for streaming
+    /// heads" saving.
+    fn save_state(&self, w: &mut crate::store::codec::SnapWriter<'_>) -> anyhow::Result<()> {
+        w.u8(RETRIEVER_STREAMING)?;
+        w.usize(self.sinks)?;
+        w.usize(self.window)
+    }
+
+    fn fork_with_group(&self, group: Arc<GroupShared>) -> Option<Box<dyn HostRetriever>> {
+        Some(Box::new(StreamingRetriever { group, sinks: self.sinks, window: self.window }))
     }
 }
 
@@ -1211,5 +1340,68 @@ mod tests {
         assert!(EmptyRetriever.retrieve(&[0.0; 8], 4).ids.is_empty());
         assert!(EmptyRetriever.supports_remove());
         assert!(EmptyRetriever.remove_batch(&[1]));
+    }
+
+    #[test]
+    fn streaming_retriever_window_semantics() {
+        let (keys, ids, _) = test_inputs(64, 8, 11);
+        let group = GroupShared::new(keys, ids.clone());
+        let r = StreamingRetriever::new(group.clone(), 4, 8);
+        // Long map: first `sinks` ∪ last `window`, nothing scanned.
+        let out = r.retrieve(&[0.0; 8], 32);
+        assert_eq!(out.scanned, 0);
+        let mut want: Vec<u32> = ids[..4].to_vec();
+        want.extend_from_slice(&ids[64 - 8..]);
+        assert_eq!(out.ids, want);
+        // The window follows group growth with no insert participation.
+        group.extend(Matrix::zeros(0, 8), &[900, 901], false);
+        let out = r.retrieve(&[0.0; 8], 32);
+        assert_eq!(out.ids.len(), 12);
+        assert!(out.ids.ends_with(&[900, 901]));
+        assert!(!out.ids.contains(&ids[4]));
+        // Short map (len <= sinks+window): everything, no duplicates.
+        let (keys, short_ids, _) = test_inputs(6, 8, 12);
+        let small = GroupShared::new(keys, short_ids.clone());
+        let out = StreamingRetriever::new(small, 4, 8).retrieve(&[0.0; 8], 32);
+        assert_eq!(out.ids, short_ids);
+    }
+
+    #[test]
+    fn streaming_retriever_is_maintenance_inert() {
+        let (keys, ids, _) = test_inputs(32, 8, 13);
+        let group = GroupShared::new(keys.clone(), ids.clone());
+        let r = StreamingRetriever::new(group, 4, 8);
+        assert!(r.supports_insert() && !r.discards_inserts() && !r.needs_store());
+        assert!(r.insert_batch(&keys, &ids[..2], &InsertContext::none()));
+        assert!(r.supports_remove() && r.remove_batch(&ids[..2]) && r.remove_dense(&[0, 1]));
+        assert!(r.supports_reclaim());
+        assert_eq!(r.tombstones(), 0);
+        assert!(r.dense_dead_ids().is_empty());
+        assert_eq!(r.reclaim_counts(), None, "must not gate reclamation epochs");
+        assert_eq!(r.indexed_len(), None, "must not gate drain validation");
+        assert_eq!(r.memory_bytes(), 0);
+    }
+
+    #[test]
+    fn streaming_retriever_save_restore_and_fork() {
+        let (keys, ids, _) = test_inputs(64, 8, 14);
+        let group = GroupShared::new(keys, ids);
+        let r = StreamingRetriever::new(group.clone(), 4, 8);
+        assert!(r.supports_save());
+        let mut buf = Vec::new();
+        {
+            let mut w = crate::store::codec::SnapWriter::new(&mut buf);
+            r.save_state(&mut w).expect("save");
+        }
+        let mut src = &buf[..];
+        let mut rd = crate::store::codec::SnapReader::new(&mut src);
+        let restored = restore_retriever(&mut rd, group.clone()).expect("restore");
+        assert_eq!(restored.name(), "Streaming");
+        assert_eq!(restored.retrieve(&[0.0; 8], 32).ids, r.retrieve(&[0.0; 8], 32).ids);
+        // COW fork: the clone reads the new group's map.
+        let (keys2, ids2, _) = test_inputs(6, 8, 15);
+        let g2 = GroupShared::new(keys2, ids2.clone());
+        let forked = r.fork_with_group(g2).expect("streaming forks structurally");
+        assert_eq!(forked.retrieve(&[0.0; 8], 32).ids, ids2);
     }
 }

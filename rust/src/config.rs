@@ -9,6 +9,7 @@
 use crate::attention::budget::BudgetPolicy;
 use crate::kernel::QuantMode;
 use crate::kvcache::StaticPattern;
+use crate::policy::HeadPolicyConfig;
 use crate::util::json::{self, Value};
 use std::path::Path;
 
@@ -74,6 +75,19 @@ impl Method {
 
     pub fn parse(s: &str) -> Option<Method> {
         Method::ALL.iter().copied().find(|m| m.label().eq_ignore_ascii_case(s))
+    }
+
+    /// Whether the method's host tier is an ANN index over the full host
+    /// set. These are the methods the per-head policy layer
+    /// ([`crate::policy`]) can specialize: a streaming head swaps its
+    /// index for a constant sink+window view. The fixed-set baselines
+    /// (StreamingLLM, SnapKV, ...) already embody a per-method policy of
+    /// their own and are left untouched.
+    pub fn index_backed(&self) -> bool {
+        matches!(
+            self,
+            Method::Flat | Method::Ivf | Method::Hnsw | Method::RetrievalAttention
+        )
     }
 }
 
@@ -328,6 +342,10 @@ pub struct ServeConfig {
     pub method: Method,
     pub pattern: StaticPattern,
     pub retrieval: RetrievalConfig,
+    /// Per-head retrieval-vs-streaming policy (DuoAttention). A separate
+    /// top-level block (not inside `retrieval`) because it carries
+    /// override lists — `retrieval` stays `Copy`.
+    pub policy: HeadPolicyConfig,
     pub scheduler: SchedulerConfig,
     pub serving: ServingConfig,
     /// Hardware profile name for modeled numbers ("localhost" = raw).
@@ -345,6 +363,7 @@ impl Default for ServeConfig {
             method: Method::RetrievalAttention,
             pattern: StaticPattern::PAPER,
             retrieval: RetrievalConfig::default(),
+            policy: HeadPolicyConfig::default(),
             scheduler: SchedulerConfig::default(),
             serving: ServingConfig::default(),
             hw: "localhost".into(),
@@ -395,6 +414,7 @@ impl ServeConfig {
             }
         }
         o.set("retrieval", r);
+        o.set("policy", self.policy.to_json());
         let mut s = Value::obj();
         s.set("max_sessions", self.scheduler.max_sessions)
             .set("max_batch", self.scheduler.max_batch)
@@ -489,6 +509,9 @@ impl ServeConfig {
                     other => anyhow::bail!("unknown budget policy `{other}`"),
                 };
             }
+        }
+        if let Some(p) = v.get("policy") {
+            c.policy.apply_json(p)?;
         }
         if let Some(s) = v.get("scheduler") {
             if let Some(x) = s.get("max_sessions").and_then(Value::as_usize) {
@@ -652,6 +675,39 @@ mod tests {
         assert_eq!(parsed.serving.session_cache, SessionCacheConfig::default());
         assert!(parsed.serving.session_cache.max_resident_bytes > 0);
         assert!(parsed.serving.session_cache.spill_dir.is_empty());
+    }
+
+    #[test]
+    fn head_policy_roundtrips_and_defaults_off() {
+        use crate::policy::PolicyMode;
+        let mut c = ServeConfig::default();
+        assert_eq!(c.policy, HeadPolicyConfig::default());
+        assert_eq!(c.policy.mode, PolicyMode::Off, "policy layer defaults off");
+        c.policy = HeadPolicyConfig {
+            mode: PolicyMode::Calibrated,
+            calibration_steps: 3,
+            mass_threshold: 0.75,
+            sinks: 16,
+            window: 256,
+            force_streaming: vec![(0, 1), (2, 0)],
+            force_retrieval: vec![(1, 1)],
+        };
+        let back = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.policy, c.policy);
+        // Absent block falls back to defaults.
+        let v = json::parse(r#"{"retrieval":{"top_k":5}}"#).unwrap();
+        let parsed = ServeConfig::from_json(&v).unwrap();
+        assert_eq!(parsed.policy, HeadPolicyConfig::default());
+        // Partial block keeps the other defaults; bad modes are loud.
+        let v = json::parse(r#"{"policy":{"mode":"static","sinks":9}}"#).unwrap();
+        let parsed = ServeConfig::from_json(&v).unwrap();
+        assert_eq!(parsed.policy.mode, PolicyMode::Static);
+        assert_eq!(parsed.policy.sinks, 9);
+        assert_eq!(parsed.policy.window, HeadPolicyConfig::default().window);
+        let v = json::parse(r#"{"policy":{"mode":"bogus"}}"#).unwrap();
+        assert!(ServeConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"policy":{"force_streaming":[[0]]}}"#).unwrap();
+        assert!(ServeConfig::from_json(&v).is_err(), "malformed pair rejected");
     }
 
     #[test]

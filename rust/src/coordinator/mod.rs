@@ -149,6 +149,12 @@ pub struct RequestMetrics {
     /// Replica-wide token throughput (tokens/s across ALL sessions)
     /// over this request's residency window.
     pub replica_tokens_per_s: f64,
+    /// Fraction of the session's query heads on the streaming tier
+    /// (sink+window, index-free) at retirement.
+    pub streaming_head_fraction: f64,
+    /// Host index bytes released by streaming-head specialization over
+    /// the session's lifetime (0 when the policy layer is off).
+    pub index_bytes_avoided: u64,
 }
 
 struct Job {
@@ -612,6 +618,8 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
                 } else {
                     0.0
                 },
+                streaming_head_fraction: a.sess.streaming_fraction(),
+                index_bytes_avoided: a.sess.index_bytes_avoided,
             };
             // Session-tracked turns retain their session for the next one
             // (a failed step poisons it — never retain half-decoded

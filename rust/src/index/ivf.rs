@@ -217,6 +217,10 @@ impl VectorIndex for IvfIndex {
         self.keys.is_quantized()
     }
 
+    fn supports_exact_rerank(&self) -> bool {
+        true
+    }
+
     fn score_exact(&self, query: &[f32], id: u32) -> f32 {
         self.keys.score_exact(query, id as usize)
     }

@@ -302,18 +302,30 @@ pub trait VectorIndex: Send + Sync {
         false
     }
 
+    /// Whether this family backs [`VectorIndex::score_exact`] with a real
+    /// f32 row read (all four in-crate families do). This is the
+    /// capability [`search_rerank`] gates on: a family that reports
+    /// `scan_quantized()` without this degrades to a plain (approximate-
+    /// order) search instead of re-ranking against the sentinel scores —
+    /// a quality fallback, never a worker panic (the no-panic policy
+    /// `cargo xtask lint` enforces on the serving path).
+    fn supports_exact_rerank(&self) -> bool {
+        false
+    }
+
     /// Exact f32 inner product of `query` with dense row `id`, read from
     /// the index's **own** key store — the same generation as the dense
     /// ids its searches return, so this is always safe to call on a
     /// search result even mid-reclamation. Backs the
     /// `retrieval.quant.rerank` exact re-scoring pass.
     ///
-    /// The default PANICS rather than returning a sentinel: a family that
-    /// reports `scan_quantized()` without overriding this would otherwise
-    /// silently collapse every re-ranked result.
+    /// The default returns `f32::NEG_INFINITY` (ranks the row last and
+    /// can never be mistaken for a plausible score). Callers must gate on
+    /// [`VectorIndex::supports_exact_rerank`] — [`search_rerank`] does —
+    /// so the sentinel is unreachable on the serving path.
     fn score_exact(&self, query: &[f32], id: u32) -> f32 {
         let _ = (query, id);
-        unimplemented!("{}: scan_quantized() requires a score_exact override", self.name())
+        f32::NEG_INFINITY
     }
 
     /// Batched [`VectorIndex::score_exact`] over a candidate pool,
@@ -424,7 +436,7 @@ pub fn search_rerank(
     rerank: usize,
     params: &SearchParams,
 ) -> SearchResult {
-    if rerank <= 1 || k == 0 || !index.scan_quantized() {
+    if rerank <= 1 || k == 0 || !index.scan_quantized() || !index.supports_exact_rerank() {
         return index.search(query, k, params);
     }
     let pool = k.saturating_mul(rerank);

@@ -38,6 +38,10 @@
 //!   drains overflow buffers into the per-head indexes on a configurable
 //!   watermark, keeping per-token decode cost bounded for arbitrarily
 //!   long generations.
+//! * [`policy`] — the per-head retrieval-vs-streaming policy layer
+//!   (DuoAttention): streaming heads keep a constant-length sink+window
+//!   set and no index at all, assigned by a free online attention-mass
+//!   calibration pass or static config overrides.
 //! * [`runtime`] — artifact loading and execution (the "device"): PJRT
 //!   when compiled artifacts exist, a native Rust executor of the same
 //!   entry points otherwise.
@@ -78,6 +82,7 @@ pub mod kernel;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod policy;
 pub mod runtime;
 pub mod server;
 pub mod store;

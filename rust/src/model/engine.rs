@@ -29,8 +29,11 @@
 //! set.
 
 use crate::attention::{attend_group_mq, attend_subset, combine_into, PartialAttention};
-use crate::baselines::{build_retriever, GroupShared, HostRetriever, RetrieverInputs};
+use crate::baselines::{
+    build_retriever_for_policy, GroupShared, HostRetriever, RetrieverInputs, StreamingRetriever,
+};
 use crate::config::{Method, ServeConfig};
+use crate::policy::{Calibrator, HeadPolicy, PolicyMap, PolicyMode};
 use crate::index::KeyStore;
 use crate::kernel;
 use crate::kvcache::{StaticPattern, TieredKvCache};
@@ -122,6 +125,17 @@ pub struct Session {
     /// slots — until then the reclaim trigger skips its per-group front
     /// polling entirely (sessions that never remove pay nothing).
     pub had_removals: bool,
+    /// Per-(layer, q_head) retrieval-vs-streaming assignment (the policy
+    /// layer). All-Retrieval when the policy is off or the method is not
+    /// index-backed; mirrors which heads hold a [`StreamingRetriever`].
+    pub policy: PolicyMap,
+    /// In-flight calibration pass: `Some` only while profiling decode
+    /// steps are still being accumulated under `PolicyMode::Calibrated`.
+    pub calib: Option<Calibrator>,
+    /// Host index bytes released by streaming-head specialization (the
+    /// done-event metric; 0 until a calibration decides, since statically
+    /// assigned heads never build an index in the first place).
+    pub index_bytes_avoided: u64,
 }
 
 /// One decode step's outputs.
@@ -297,7 +311,9 @@ impl Engine {
             }
         }
 
-        let (retrievers, groups) = self.build_retrievers(&caches, &q_history)?;
+        let policy = self.initial_policy(self.cfg.method);
+        let (retrievers, groups) =
+            self.build_retrievers_with(&caches, &q_history, self.cfg.method, &policy)?;
         let recent_q = self.empty_recent_rings();
         Ok(Session {
             method: self.cfg.method,
@@ -315,7 +331,34 @@ impl Engine {
             drained_tokens: 0,
             drains: 0,
             had_removals: false,
+            calib: self.new_calibrator(self.cfg.method),
+            policy,
+            index_bytes_avoided: 0,
         })
+    }
+
+    /// The build-time policy for `method`: the static override map. Under
+    /// `calibrated` mode heads start Retrieval (minus overrides) and flip
+    /// only after the profiling window closes; non-index-backed methods
+    /// are never specialized — their assignment stays the identity.
+    fn initial_policy(&self, method: Method) -> PolicyMap {
+        let spec = self.spec();
+        if method.index_backed() {
+            self.cfg.policy.static_map(spec.layers, spec.q_heads)
+        } else {
+            PolicyMap::all_retrieval(spec.layers, spec.q_heads)
+        }
+    }
+
+    /// A fresh profiling pass when the config asks for one and the method
+    /// can act on its verdict.
+    fn new_calibrator(&self, method: Method) -> Option<Calibrator> {
+        let spec = self.spec();
+        if method.index_backed() && self.cfg.policy.mode == PolicyMode::Calibrated {
+            Some(Calibrator::new(spec.layers, spec.q_heads, self.cfg.policy.calibration_steps))
+        } else {
+            None
+        }
     }
 
     /// Fresh (empty) recent-query rings, one per (layer, q_head).
@@ -360,23 +403,17 @@ impl Engine {
         Ok(attn)
     }
 
-    /// Build host retrievers for every (layer, q_head).
-    fn build_retrievers(
-        &self,
-        caches: &[Vec<TieredKvCache>],
-        q_history: &[Vec<Matrix>],
-    ) -> Result<RetrieverBuild> {
-        self.build_retrievers_with(caches, q_history, self.cfg.method)
-    }
-
-    /// Build host retrievers for an explicit method. Also returns the
-    /// per-(layer, kv_head) dense host key stores the retrievers index
-    /// into — the engine keeps them to grow the searchable set on drains.
+    /// Build host retrievers for an explicit method under a per-head
+    /// policy (streaming heads get the index-free window view instead of
+    /// the method's index). Also returns the per-(layer, kv_head) dense
+    /// host key stores the retrievers index into — the engine keeps them
+    /// to grow the searchable set on drains.
     fn build_retrievers_with(
         &self,
         caches: &[Vec<TieredKvCache>],
         q_history: &[Vec<Matrix>],
         method: Method,
+        policy: &PolicyMap,
     ) -> Result<RetrieverBuild> {
         let spec = self.spec();
         let group = spec.group_size();
@@ -421,6 +458,10 @@ impl Engine {
             let built: Vec<Arc<dyn HostRetriever>> = parallel::par_map(&heads, |&h| {
                 let kvh = h / group;
                 let g = &shared[kvh];
+                // The head's policy rides through `build_retriever_for_policy`
+                // on every branch: a streaming head never builds an index,
+                // empty group or not.
+                let pol = policy.get(layer, h);
                 if g.keys().rows() == 0 {
                     // Prompt fits entirely in the device static pattern:
                     // nothing is offloaded *yet*. Index methods fall back
@@ -439,13 +480,17 @@ impl Engine {
                         Method::Full | Method::VllmLike => method,
                         _ => Method::StreamingLlm,
                     };
-                    return Arc::from(build_retriever(fb, RetrieverInputs {
-                        group: g.clone(),
-                        prefill_queries: &subsampled[h],
-                        scale,
-                        cfg: &cfg,
-                        seed,
-                    })) as Arc<dyn HostRetriever>;
+                    return Arc::from(build_retriever_for_policy(
+                        fb,
+                        RetrieverInputs {
+                            group: g.clone(),
+                            prefill_queries: &subsampled[h],
+                            scale,
+                            cfg: &cfg,
+                            seed,
+                        },
+                        pol,
+                    )) as Arc<dyn HostRetriever>;
                 }
                 let inp = RetrieverInputs {
                     group: g.clone(),
@@ -454,7 +499,7 @@ impl Engine {
                     cfg: &cfg,
                     seed: seed ^ ((layer * 131 + h) as u64),
                 };
-                Arc::from(build_retriever(method, inp))
+                Arc::from(build_retriever_for_policy(method, inp, pol))
             });
             retrievers.push(built);
         }
@@ -734,6 +779,13 @@ impl Engine {
                 let mut attn = vec![0.0f32; spec.q_heads * dh];
                 for h in 0..spec.q_heads {
                     let p = &slot_parts[s][h / group][h % group];
+                    // The profiling signal is free: the two partials'
+                    // LSEs in hand here ARE the device-span-vs-rest mass
+                    // split the policy calibration needs (DuoAttention's
+                    // sink+window score, no extra attention pass).
+                    if let Some(c) = items[s].sess.calib.as_mut() {
+                        c.record(layer, h, Calibrator::span_mass(lse_devs[s][h], p.lse));
+                    }
                     combine_into(
                         &[
                             (&o_devs[s][h * dh..(h + 1) * dh], lse_devs[s][h]),
@@ -784,6 +836,17 @@ impl Engine {
             it.sess.x_last = std::mem::take(&mut xs[s]);
             it.sess.len += 1;
             t.stop_into(&mut bds[s].other);
+            // Calibration bookkeeping: one profiling step accumulated
+            // across all layers; once the window closes, commit the
+            // verdict (streaming heads release their index for the group
+            // window view) before this step's maintenance runs.
+            if let Some(c) = it.sess.calib.as_mut() {
+                if c.end_step() {
+                    let decided = c.decide(&self.cfg.policy);
+                    it.sess.calib = None;
+                    self.apply_policy(it.sess, &decided);
+                }
+            }
             // Online index maintenance: drain overflow buffers that
             // crossed the watermark into the ANN indexes (batched, fanned
             // out per GQA group via util::parallel).
@@ -793,6 +856,36 @@ impl Engine {
             out.push(Ok(DecodeOutput { token: next, breakdown: std::mem::take(&mut bds[s]) }));
         }
         out
+    }
+
+    /// Commit a decided policy to a live session: every head flipping
+    /// Retrieval→Streaming drops its index in favor of the group window
+    /// view, and the released index heap is accounted in
+    /// `index_bytes_avoided`. Flips never go the other way — `decide`
+    /// honors the same override lists the build did, so a head that
+    /// started streaming stays streaming — which means no index is ever
+    /// (re)built here. In-flight maintenance holding the old retriever's
+    /// `Arc` completes harmlessly against it; the group-level store/map
+    /// growth it publishes is what the streaming view reads anyway.
+    fn apply_policy(&self, sess: &mut Session, decided: &PolicyMap) {
+        let spec = self.spec();
+        let group_size = spec.group_size();
+        for layer in 0..spec.layers {
+            for h in 0..spec.q_heads {
+                let pol = decided.get(layer, h);
+                if let HeadPolicy::Streaming { sinks, window } = pol {
+                    if sess.policy.get(layer, h).is_streaming() {
+                        continue;
+                    }
+                    sess.index_bytes_avoided +=
+                        sess.retrievers[layer][h].memory_bytes() as u64;
+                    let g = sess.groups[layer][h / group_size].clone();
+                    sess.retrievers[layer][h] =
+                        Arc::new(StreamingRetriever::new(g, sinks, window));
+                    sess.policy.set(layer, h, pol);
+                }
+            }
+        }
     }
 
     /// Online maintenance: apply completed background work, then enqueue
@@ -937,8 +1030,14 @@ impl Engine {
                     && sess.had_removals
                     && !sess.maint.inflight.contains(&(layer, kvh))
                 {
-                    let (live, dead) = sess.retrievers[layer][kvh * group]
-                        .reclaim_counts()
+                    // First head that REPORTS counts speaks for the group
+                    // (heads with no dense state — streaming windows —
+                    // return `None` and must not mask their siblings'
+                    // tombstones).
+                    let (live, dead) = (0..group)
+                        .find_map(|g| {
+                            sess.retrievers[layer][kvh * group + g].reclaim_counts()
+                        })
                         .unwrap_or((0, 0));
                     let claimable = live > 0
                         && dead > 0
@@ -1131,7 +1230,19 @@ impl Session {
             drained_tokens: 0,
             drains: 0,
             had_removals: false,
+            // The assignment and any mid-flight profiling carry over (the
+            // fork continues the same text); released-bytes accounting is
+            // per-session and starts at zero.
+            policy: self.policy.clone(),
+            calib: self.calib.clone(),
+            index_bytes_avoided: 0,
         }
+    }
+
+    /// Fraction of query heads on the streaming tier (the done-event /
+    /// bench metric).
+    pub fn streaming_fraction(&self) -> f64 {
+        self.policy.streaming_fraction()
     }
 
     /// Snapshot of a group's shared dense key store.
@@ -1277,6 +1388,28 @@ impl Engine {
         sess: &mut Session,
         out: &mut dyn std::io::Write,
     ) -> Result<u64> {
+        self.snapshot_session_versioned(sess, out, crate::store::VERSION)
+    }
+
+    /// [`Engine::snapshot_session`] at an explicit format version. The
+    /// only other supported version is the previous one (v1, no per-head
+    /// policy section) — kept writable so the cross-version restore path
+    /// stays testable against bytes this build produced itself. A v1
+    /// image cannot represent streaming heads and refuses to try.
+    pub fn snapshot_session_versioned(
+        &self,
+        sess: &mut Session,
+        out: &mut dyn std::io::Write,
+        version: u32,
+    ) -> Result<u64> {
+        anyhow::ensure!(
+            version == crate::store::VERSION || version == crate::store::V1,
+            "cannot write snapshot format v{version}"
+        );
+        anyhow::ensure!(
+            version >= crate::store::VERSION || sess.policy.num_streaming() == 0,
+            "v1 snapshots cannot carry streaming heads"
+        );
         sess.flush_maintenance();
         let spec = self.spec().clone();
         anyhow::ensure!(
@@ -1285,7 +1418,7 @@ impl Engine {
         );
         let mut w = crate::store::codec::SnapWriter::new(out);
         w.raw(crate::store::MAGIC)?;
-        w.u32(crate::store::VERSION)?;
+        w.u32(version)?;
         // Spec fingerprint: a snapshot only ever restores into an engine
         // of identical geometry.
         w.usize(spec.layers)?;
@@ -1302,6 +1435,22 @@ impl Engine {
         w.u64(sess.drained_tokens)?;
         w.u64(sess.drains)?;
         w.bool(sess.had_removals)?;
+        // v2: the per-head policy section (assignment vector, released
+        // bytes, any in-flight calibration). Streaming heads then persist
+        // as two lengths in the retriever section below — their index
+        // state simply does not exist to be written.
+        if version >= 2 {
+            crate::store::save_policy(&mut w, &sess.policy)?;
+            w.u64(sess.index_bytes_avoided)?;
+            w.bool(sess.calib.is_some())?;
+            if let Some(c) = &sess.calib {
+                w.usize(c.steps_done)?;
+                w.usize(c.target_steps)?;
+                for layer in &c.mass {
+                    w.f32s(layer)?;
+                }
+            }
+        }
         for layer in 0..spec.layers {
             for kvh in 0..spec.kv_heads {
                 let cache = &sess.caches[layer][kvh];
@@ -1361,8 +1510,12 @@ impl Engine {
         r.raw(&mut magic)?;
         anyhow::ensure!(&magic == crate::store::MAGIC, "not a session snapshot");
         let version = r.u32()?;
+        // Version policy: the current format plus a read path for the
+        // immediately preceding one (v1 = no policy section ⇒ every head
+        // restores as Retrieval); anything else is refused and the caller
+        // re-prefills.
         anyhow::ensure!(
-            version == crate::store::VERSION,
+            version == crate::store::VERSION || version == crate::store::V1,
             "snapshot format v{version} != supported v{} (version policy: refuse, re-prefill)",
             crate::store::VERSION
         );
@@ -1388,6 +1541,29 @@ impl Engine {
         let drained_tokens = r.u64()?;
         let drains = r.u64()?;
         let had_removals = r.bool()?;
+        let (policy, index_bytes_avoided, calib) = if version >= 2 {
+            let policy = crate::store::load_policy(&mut r, spec.layers, spec.q_heads)?;
+            let bytes_avoided = r.u64()?;
+            let calib = if r.bool()? {
+                let steps_done = r.usize()?;
+                let target_steps = r.usize()?;
+                let mut mass = Vec::with_capacity(spec.layers);
+                for _ in 0..spec.layers {
+                    let row = r.f32s()?;
+                    anyhow::ensure!(
+                        row.len() == spec.q_heads,
+                        "snapshot calibration row width mismatch"
+                    );
+                    mass.push(row);
+                }
+                Some(Calibrator { steps_done, target_steps, mass })
+            } else {
+                None
+            };
+            (policy, bytes_avoided, calib)
+        } else {
+            (PolicyMap::all_retrieval(spec.layers, spec.q_heads), 0, None)
+        };
         let mut caches: Vec<Vec<TieredKvCache>> = Vec::with_capacity(spec.layers);
         for _ in 0..spec.layers {
             let mut layer = Vec::with_capacity(spec.kv_heads);
@@ -1440,9 +1616,10 @@ impl Engine {
             (retrievers, groups)
         } else {
             // Heads were not persisted (a non-persistable baseline is in
-            // the mix): rebuild them from the restored caches/queries.
-            // Still no re-prefill — only the retriever construction.
-            self.build_retrievers_with(&caches, &q_history, method)?
+            // the mix): rebuild them from the restored caches/queries
+            // under the restored policy. Still no re-prefill — only the
+            // retriever construction.
+            self.build_retrievers_with(&caches, &q_history, method, &policy)?
         };
         Ok(Session {
             method,
@@ -1460,6 +1637,9 @@ impl Engine {
             drained_tokens,
             drains,
             had_removals,
+            policy,
+            calib,
+            index_bytes_avoided,
         })
     }
 
@@ -1468,11 +1648,17 @@ impl Engine {
     /// expensive prefill across methods in the accuracy experiments.
     pub fn session_for_method(&self, base: &Session, method: Method) -> Result<Session> {
         let mut sess = base.fork_state();
+        // The policy is re-derived for the NEW method, not inherited: a
+        // calibration verdict for RoarGraph heads says nothing about a
+        // Flat comparator, and non-index-backed methods never specialize.
+        let policy = self.initial_policy(method);
         let (retrievers, groups) =
-            self.build_retrievers_with(&sess.caches, &sess.q_history, method)?;
+            self.build_retrievers_with(&sess.caches, &sess.q_history, method, &policy)?;
         sess.method = method;
         sess.retrievers = retrievers;
         sess.groups = groups;
+        sess.policy = policy;
+        sess.calib = self.new_calibrator(method);
         Ok(sess)
     }
 
@@ -1522,8 +1708,14 @@ impl Engine {
             sess.retrievers = retrievers;
             sess.groups = groups;
         } else {
-            let (retrievers, groups) =
-                self.build_retrievers_with(&sess.caches, &sess.q_history, base.method)?;
+            // `fork_state` copied the base's policy; the rebuild honors it
+            // (streaming heads come back as window views, not indexes).
+            let (retrievers, groups) = self.build_retrievers_with(
+                &sess.caches,
+                &sess.q_history,
+                base.method,
+                &sess.policy,
+            )?;
             sess.retrievers = retrievers;
             sess.groups = groups;
         }
@@ -1574,8 +1766,12 @@ impl Engine {
             }
         }
         if !removable {
-            let (retrievers, groups) =
-                self.build_retrievers_with(&sess.caches, &sess.q_history, sess.method)?;
+            let (retrievers, groups) = self.build_retrievers_with(
+                &sess.caches,
+                &sess.q_history,
+                sess.method,
+                &sess.policy,
+            )?;
             sess.retrievers = retrievers;
             sess.groups = groups;
         }
@@ -1624,7 +1820,9 @@ impl Engine {
             caches.push(layer_caches);
             q_history.push(layer_hist);
         }
-        let (retrievers, groups) = self.build_retrievers_with(&caches, &q_history, method)?;
+        let policy = self.initial_policy(method);
+        let (retrievers, groups) =
+            self.build_retrievers_with(&caches, &q_history, method, &policy)?;
         let recent_q = self.empty_recent_rings();
         Ok(Session {
             method,
@@ -1642,6 +1840,9 @@ impl Engine {
             drained_tokens: 0,
             drains: 0,
             had_removals: false,
+            calib: self.new_calibrator(method),
+            policy,
+            index_bytes_avoided: 0,
         })
     }
 }

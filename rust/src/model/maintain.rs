@@ -135,10 +135,14 @@ pub fn run_drain(j: &DrainJob) -> Done {
     // assert — a panic here would kill the worker on the one path that is
     // explicitly documented as retryable.)
     let map_len = j.group.id_map().len();
+    // Representative = the first head that HAS an indexed tier: streaming
+    // window heads report `indexed_len() == None` and must neither vouch
+    // for nor veto their indexed siblings. A group with no indexed head
+    // at all is vacuously in sync (nothing holds dense state).
     let first_in_sync = j
         .heads
-        .first()
-        .map(|h| h.indexed_len().map(|live| live + h.tombstones() == map_len).unwrap_or(true))
+        .iter()
+        .find_map(|h| h.indexed_len().map(|live| live + h.tombstones() == map_len))
         .unwrap_or(true);
     if !first_in_sync {
         return Done {
@@ -159,11 +163,19 @@ pub fn run_drain(j: &DrainJob) -> Done {
         j.heads[h].insert_batch(&store, &j.ids, &ctx)
     });
     // Heads of one group share the store, the id stream and the index
-    // family, so a later head cannot diverge from head 0. If one somehow
-    // did, committing is still the safe direction (PR-1 semantics): that
-    // head merely misses the new keys, whereas refusing after the publish
-    // above would wedge the group's store-sync check forever.
-    let ok = oks.first().copied().unwrap_or(true);
+    // family, so a later indexed head cannot diverge from the first. If
+    // one somehow did, committing is still the safe direction (PR-1
+    // semantics): that head merely misses the new keys, whereas refusing
+    // after the publish above would wedge the group's store-sync check
+    // forever. The verdict comes from the first INDEXED head — a
+    // streaming head's unconditional `true` must not mask a refusal.
+    let ok = j
+        .heads
+        .iter()
+        .zip(&oks)
+        .find_map(|(h, &o)| h.indexed_len().map(|_| o))
+        .or_else(|| oks.first().copied())
+        .unwrap_or(true);
     debug_assert!(
         oks.iter().all(|&o| o),
         "GQA group diverged during drain (layer {} kvh {})",
@@ -216,11 +228,17 @@ pub fn run_compact(j: &CompactJob) -> Done {
     if j.heads.is_empty() || !j.heads.iter().all(|h| h.supports_reclaim()) {
         return fail(t);
     }
-    // Plan from head 0's tombstone set: every head of a group receives
-    // the identical remove stream, so head 0 is representative (per-head
-    // deadness is still carried through each family's remap, so a
-    // diverged head degrades to extra tombstones, never resurrections).
-    let dead = j.heads[0].dense_dead_ids();
+    // Plan from the first DENSE head's tombstone set: every indexed head
+    // of a group receives the identical remove stream, so any one of them
+    // is representative (per-head deadness is still carried through each
+    // family's remap, so a diverged head degrades to extra tombstones,
+    // never resurrections). Streaming window heads hold no dense ids —
+    // they are skipped here, and a group made entirely of them has
+    // nothing to reclaim.
+    let Some(dense_rep) = j.heads.iter().find(|h| h.reclaim_counts().is_some()) else {
+        return fail(t);
+    };
+    let dead = dense_rep.dense_dead_ids();
     let old_map = j.group.id_map();
     let old_store = j.group.keys();
     let old_len = old_map.len();
@@ -233,10 +251,13 @@ pub fn run_compact(j: &CompactJob) -> Done {
     // *after* the map had already moved to the new generation, stranding
     // that head on a generation the next epoch would garbage-collect.
     // Refusing here mutates nothing; the engine retries on a later step.
+    // Heads without dense state (`reclaim_counts() == None` — streaming
+    // windows) are vacuously in sync: their remap is the map publish
+    // itself.
     let all_in_sync = j
         .heads
         .iter()
-        .all(|h| h.reclaim_counts().map(|(live, dead)| live + dead == old_len).unwrap_or(false));
+        .all(|h| h.reclaim_counts().map(|(live, dead)| live + dead == old_len).unwrap_or(true));
     if !all_in_sync {
         return fail(t);
     }
@@ -591,6 +612,75 @@ mod tests {
         assert_eq!(dones.len(), 1);
         assert!(!dones[0].ok);
         assert_eq!(group.store_generation(), 1);
+    }
+
+    #[test]
+    fn mixed_policy_group_drains_evicts_and_compacts() {
+        // A GQA group with a streaming head FIRST (the representative-pick
+        // regression): drains must validate against the indexed sibling,
+        // evictions must tombstone it, and the reclamation epoch must plan
+        // from it — the streaming head rides along holding no dense state.
+        use crate::baselines::StreamingRetriever;
+        let (group, queries) = group_setup(48, 8, 21);
+        let cfg = RetrievalConfig::default();
+        let inp = RetrieverInputs {
+            group: group.clone(),
+            prefill_queries: &queries,
+            scale: 0.35,
+            cfg: &cfg,
+            seed: 21,
+        };
+        let indexed: Arc<dyn HostRetriever> = Arc::from(build_retriever(Method::Flat, inp));
+        let streaming: Arc<dyn HostRetriever> =
+            Arc::new(StreamingRetriever::new(group.clone(), 4, 8));
+        let heads = vec![streaming.clone(), indexed.clone()];
+        let mut state = MaintenanceState::new();
+        let mut rng = Rng::seed_from(22);
+        state.submit(Job::Drain(DrainJob {
+            layer: 0,
+            kvh: 0,
+            rows: Matrix::from_fn(8, 8, |_, _| rng.normal()),
+            ids: (48..56).collect(),
+            upto: 56,
+            grow_store: true,
+            heads: heads.clone(),
+            queries: vec![None, None],
+            group: group.clone(),
+        }));
+        let dones = state.flush();
+        assert_eq!(dones.len(), 1);
+        assert!(dones[0].ok);
+        assert_eq!(group.id_map().len(), 56);
+        assert_eq!(indexed.indexed_len(), Some(56));
+        // The streaming head's recent window covers the drained tail
+        // without having participated in the insert.
+        let out = streaming.retrieve(&[0.0; 8], 16);
+        assert!(out.ids.ends_with(&[54, 55]));
+        assert_eq!(out.scanned, 0);
+        state.submit(Job::Evict(EvictJob {
+            layer: 0,
+            kvh: 0,
+            ids: (0..12).collect(),
+            heads: heads.clone(),
+            group: group.clone(),
+        }));
+        state.submit(Job::Compact(CompactJob {
+            layer: 0,
+            kvh: 0,
+            heads: heads.clone(),
+            group: group.clone(),
+        }));
+        let dones = state.shutdown();
+        assert_eq!(dones.len(), 2);
+        assert!(dones.iter().all(|d| d.ok), "mixed group wedged maintenance");
+        assert!(matches!(dones[1].kind, DoneKind::Compacted { dropped: 12 }));
+        assert_eq!(group.id_map().len(), 44);
+        assert_eq!(group.store_generation(), 1);
+        assert_eq!(indexed.indexed_len(), Some(44));
+        // The streaming head reads the compacted map transparently.
+        let out = streaming.retrieve(&[0.0; 8], 16);
+        assert!(!out.ids.contains(&0), "reclaimed id surfaced in window");
+        assert!(out.ids.contains(&12));
     }
 
     #[test]

@@ -1,0 +1,441 @@
+//! The per-head attention policy layer: retrieval heads vs. streaming
+//! heads (DuoAttention).
+//!
+//! DuoAttention's observation is that only a fraction of attention heads
+//! are true *retrieval* heads — heads whose output degrades when distant
+//! tokens are dropped. The rest are *streaming* heads: they attend almost
+//! exclusively to the attention sinks plus a recent window, and need no
+//! long-context ANN index at all. This module holds the policy model:
+//!
+//! * [`HeadPolicy`] — what one query head gets: the full indexed
+//!   retrieval tier, or a constant-length sink+window set.
+//! * [`HeadPolicyConfig`] — the `retrieval.policy` config block: the
+//!   assignment mode, the calibration knobs, and static override lists.
+//! * [`PolicyMap`] — the per-(layer, query-head) assignment carried by a
+//!   session (and persisted in RASS v2 snapshots).
+//! * [`Calibrator`] — the training-free online profiling pass: the decode
+//!   path already computes, per head, the softmax partition between the
+//!   device static set (exactly the sink+window span) and the retrieved
+//!   host set — so the fraction of attention mass a head places on the
+//!   span is `exp(lse_dev − lse_merged)`, free of any extra compute.
+//!   Heads whose mean span-mass over `calibration_steps` decode steps
+//!   meets `mass_threshold` are flipped to streaming.
+//!
+//! The policy only changes behaviour for the index-backed methods
+//! (Flat / IVF / HNSW / RetrievalAttention): the fixed-set baselines
+//! already embody a per-method policy of their own. With `mode = off`
+//! (the default) every code path is byte-for-byte the pre-policy one.
+
+use crate::util::json::Value;
+
+/// What one query head's host-side retrieval tier looks like.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadPolicy {
+    /// Full indexed tier: ANN search over the host keys every step.
+    Retrieval,
+    /// Constant-length tier: the first `sinks` and last `window` host
+    /// tokens of the head's GQA group, no index, no search.
+    Streaming { sinks: usize, window: usize },
+}
+
+impl HeadPolicy {
+    pub fn is_streaming(&self) -> bool {
+        matches!(self, HeadPolicy::Streaming { .. })
+    }
+}
+
+/// How head policies are assigned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyMode {
+    /// Policy layer disabled: every head is a retrieval head and every
+    /// code path is the pre-policy one (the default).
+    Off,
+    /// Assignment comes purely from the config's override lists at
+    /// session-build time; no profiling pass runs.
+    Static,
+    /// Online calibration: profile `calibration_steps` decode steps,
+    /// then flip heads whose sink+window attention mass meets
+    /// `mass_threshold` (override lists still apply on top).
+    Calibrated,
+}
+
+impl PolicyMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyMode::Off => "off",
+            PolicyMode::Static => "static",
+            PolicyMode::Calibrated => "calibrated",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyMode> {
+        [PolicyMode::Off, PolicyMode::Static, PolicyMode::Calibrated]
+            .into_iter()
+            .find(|m| m.label().eq_ignore_ascii_case(s))
+    }
+}
+
+/// The `retrieval.policy` config block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HeadPolicyConfig {
+    pub mode: PolicyMode,
+    /// Profiling decode steps before the calibrated assignment is applied.
+    pub calibration_steps: usize,
+    /// Mean sink+window attention-mass fraction at or above which a head
+    /// is flipped to streaming (DuoAttention's retrieval heads sit far
+    /// below this; its streaming heads sit essentially at 1.0).
+    pub mass_threshold: f32,
+    /// Host-side sink tokens a streaming head keeps reading.
+    pub sinks: usize,
+    /// Host-side recent-window tokens a streaming head keeps reading.
+    pub window: usize,
+    /// `(layer, query_head)` pairs forced to streaming regardless of the
+    /// calibration outcome (or, in `static` mode, the whole assignment).
+    pub force_streaming: Vec<(usize, usize)>,
+    /// `(layer, query_head)` pairs pinned to retrieval no matter what the
+    /// profiling says. Wins over `force_streaming` on conflict: pinning a
+    /// head to the exact tier is the safe direction.
+    pub force_retrieval: Vec<(usize, usize)>,
+}
+
+impl Default for HeadPolicyConfig {
+    fn default() -> Self {
+        HeadPolicyConfig {
+            mode: PolicyMode::Off,
+            calibration_steps: 16,
+            mass_threshold: 0.98,
+            sinks: 128,
+            window: 1024,
+            force_streaming: Vec::new(),
+            force_retrieval: Vec::new(),
+        }
+    }
+}
+
+fn pairs_to_json(pairs: &[(usize, usize)]) -> Value {
+    Value::Arr(
+        pairs
+            .iter()
+            .map(|&(l, h)| Value::Arr(vec![Value::from(l), Value::from(h)]))
+            .collect(),
+    )
+}
+
+fn pairs_from_json(v: &Value, field: &str) -> anyhow::Result<Vec<(usize, usize)>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("policy.{field} must be an array of [layer, head]"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let pair = item.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+            anyhow::anyhow!("policy.{field} entries must be [layer, head] pairs")
+        })?;
+        match (pair[0].as_usize(), pair[1].as_usize()) {
+            (Some(l), Some(h)) => out.push((l, h)),
+            _ => anyhow::bail!("policy.{field} entries must be numeric [layer, head] pairs"),
+        }
+    }
+    Ok(out)
+}
+
+impl HeadPolicyConfig {
+    /// Whether the policy layer does anything at all.
+    pub fn enabled(&self) -> bool {
+        self.mode != PolicyMode::Off
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("mode", self.mode.label())
+            .set("calibration_steps", self.calibration_steps)
+            .set("mass_threshold", self.mass_threshold as f64)
+            .set("sinks", self.sinks)
+            .set("window", self.window)
+            .set("force_streaming", pairs_to_json(&self.force_streaming))
+            .set("force_retrieval", pairs_to_json(&self.force_retrieval));
+        o
+    }
+
+    /// Overlay fields present in `v` onto `self` (the config system's
+    /// absent-fields-keep-defaults discipline).
+    pub fn apply_json(&mut self, v: &Value) -> anyhow::Result<()> {
+        if let Some(m) = v.get("mode").and_then(Value::as_str) {
+            self.mode = PolicyMode::parse(m)
+                .ok_or_else(|| anyhow::anyhow!("unknown policy mode `{m}`"))?;
+        }
+        if let Some(x) = v.get("calibration_steps").and_then(Value::as_usize) {
+            self.calibration_steps = x;
+        }
+        if let Some(x) = v.get("mass_threshold").and_then(Value::as_f64) {
+            self.mass_threshold = x as f32;
+        }
+        if let Some(x) = v.get("sinks").and_then(Value::as_usize) {
+            self.sinks = x;
+        }
+        if let Some(x) = v.get("window").and_then(Value::as_usize) {
+            self.window = x;
+        }
+        if let Some(x) = v.get("force_streaming") {
+            self.force_streaming = pairs_from_json(x, "force_streaming")?;
+        }
+        if let Some(x) = v.get("force_retrieval") {
+            self.force_retrieval = pairs_from_json(x, "force_retrieval")?;
+        }
+        Ok(())
+    }
+
+    /// The assignment available without profiling: every head retrieval,
+    /// minus the override lists. This is the whole policy in `static`
+    /// mode, and the session-build starting point in `calibrated` mode
+    /// (heads flip only after the profiling pass completes).
+    pub fn static_map(&self, layers: usize, q_heads: usize) -> PolicyMap {
+        let mut map = PolicyMap::all_retrieval(layers, q_heads);
+        if self.mode == PolicyMode::Off {
+            return map;
+        }
+        for &(l, h) in &self.force_streaming {
+            map.set(l, h, HeadPolicy::Streaming { sinks: self.sinks, window: self.window });
+        }
+        for &(l, h) in &self.force_retrieval {
+            map.set(l, h, HeadPolicy::Retrieval);
+        }
+        map
+    }
+}
+
+/// The per-(layer, query-head) policy assignment a session carries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PolicyMap {
+    /// `heads[layer][q_head]`.
+    pub heads: Vec<Vec<HeadPolicy>>,
+}
+
+impl PolicyMap {
+    /// The identity assignment: every head keeps the full indexed tier.
+    pub fn all_retrieval(layers: usize, q_heads: usize) -> PolicyMap {
+        PolicyMap { heads: vec![vec![HeadPolicy::Retrieval; q_heads]; layers] }
+    }
+
+    /// Policy of one head; out-of-range coordinates (an override list
+    /// naming a head the model doesn't have) read as `Retrieval`.
+    pub fn get(&self, layer: usize, head: usize) -> HeadPolicy {
+        self.heads
+            .get(layer)
+            .and_then(|l| l.get(head))
+            .copied()
+            .unwrap_or(HeadPolicy::Retrieval)
+    }
+
+    /// Set one head's policy; out-of-range coordinates are ignored.
+    pub fn set(&mut self, layer: usize, head: usize, p: HeadPolicy) {
+        if let Some(slot) = self.heads.get_mut(layer).and_then(|l| l.get_mut(head)) {
+            *slot = p;
+        }
+    }
+
+    pub fn num_streaming(&self) -> usize {
+        self.heads.iter().flatten().filter(|p| p.is_streaming()).count()
+    }
+
+    pub fn num_heads(&self) -> usize {
+        self.heads.iter().map(Vec::len).sum()
+    }
+
+    /// Fraction of heads assigned the streaming tier (the done-event /
+    /// bench metric; 0.0 for an empty or all-retrieval map).
+    pub fn streaming_fraction(&self) -> f64 {
+        let total = self.num_heads();
+        if total == 0 {
+            0.0
+        } else {
+            self.num_streaming() as f64 / total as f64
+        }
+    }
+}
+
+/// The online profiling pass: accumulates, per head, the fraction of
+/// attention mass the decode step placed on the device static set (the
+/// sink+window span). The signal is free — the engine already holds both
+/// partials' log-sum-exps when it γ-combines them.
+#[derive(Clone, Debug)]
+pub struct Calibrator {
+    /// Completed profiling decode steps.
+    pub steps_done: usize,
+    /// Profiling steps required before the assignment is applied.
+    pub target_steps: usize,
+    /// Accumulated span-mass fraction per `[layer][q_head]` (f32 so the
+    /// snapshot round-trip is exact).
+    pub mass: Vec<Vec<f32>>,
+}
+
+impl Calibrator {
+    pub fn new(layers: usize, q_heads: usize, target_steps: usize) -> Calibrator {
+        Calibrator {
+            steps_done: 0,
+            target_steps,
+            mass: vec![vec![0.0; q_heads]; layers],
+        }
+    }
+
+    /// Accumulate one head's span-mass fraction for the current step.
+    pub fn record(&mut self, layer: usize, head: usize, frac: f32) {
+        if let Some(slot) = self.mass.get_mut(layer).and_then(|l| l.get_mut(head)) {
+            *slot += frac;
+        }
+    }
+
+    /// Numerically stable span-mass fraction from the two partials' LSEs:
+    /// `exp(lse_span) / (exp(lse_span) + exp(lse_rest))`. A head with no
+    /// host-side partial (`lse_rest = -inf`) has all its mass on the span.
+    pub fn span_mass(lse_span: f32, lse_rest: f32) -> f32 {
+        if !lse_rest.is_finite() {
+            return 1.0;
+        }
+        if !lse_span.is_finite() {
+            return 0.0;
+        }
+        let m = lse_span.max(lse_rest);
+        let a = (lse_span - m).exp();
+        let b = (lse_rest - m).exp();
+        a / (a + b)
+    }
+
+    /// Mark one decode step complete; returns `true` once the profiling
+    /// budget is spent and the assignment should be decided.
+    pub fn end_step(&mut self) -> bool {
+        self.steps_done += 1;
+        self.steps_done >= self.target_steps
+    }
+
+    /// Decide the assignment: mean span mass ≥ threshold ⇒ streaming,
+    /// then the config's override lists on top (retrieval pin wins).
+    pub fn decide(&self, cfg: &HeadPolicyConfig) -> PolicyMap {
+        let layers = self.mass.len();
+        let q_heads = self.mass.first().map(Vec::len).unwrap_or(0);
+        let mut map = PolicyMap::all_retrieval(layers, q_heads);
+        if self.steps_done > 0 {
+            for (l, layer) in self.mass.iter().enumerate() {
+                for (h, &acc) in layer.iter().enumerate() {
+                    let mean = acc / self.steps_done as f32;
+                    if mean >= cfg.mass_threshold {
+                        map.set(
+                            l,
+                            h,
+                            HeadPolicy::Streaming { sinks: cfg.sinks, window: cfg.window },
+                        );
+                    }
+                }
+            }
+        }
+        for &(l, h) in &cfg.force_streaming {
+            map.set(l, h, HeadPolicy::Streaming { sinks: cfg.sinks, window: cfg.window });
+        }
+        for &(l, h) in &cfg.force_retrieval {
+            map.set(l, h, HeadPolicy::Retrieval);
+        }
+        map
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_off_and_roundtrips() {
+        let cfg = HeadPolicyConfig::default();
+        assert!(!cfg.enabled());
+        let mut back = HeadPolicyConfig::default();
+        back.apply_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        // Off-mode static map is the identity assignment even with
+        // overrides present (the layer is disabled).
+        let mut off = cfg.clone();
+        off.force_streaming = vec![(0, 1)];
+        assert_eq!(off.static_map(2, 4).num_streaming(), 0);
+    }
+
+    #[test]
+    fn config_roundtrips_with_overrides() {
+        let cfg = HeadPolicyConfig {
+            mode: PolicyMode::Calibrated,
+            calibration_steps: 4,
+            mass_threshold: 0.5,
+            sinks: 8,
+            window: 64,
+            force_streaming: vec![(0, 2), (1, 3)],
+            force_retrieval: vec![(0, 0)],
+        };
+        let mut back = HeadPolicyConfig::default();
+        back.apply_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        assert!(PolicyMode::parse("nope").is_none());
+    }
+
+    #[test]
+    fn static_map_applies_overrides_with_retrieval_precedence() {
+        let cfg = HeadPolicyConfig {
+            mode: PolicyMode::Static,
+            force_streaming: vec![(0, 1), (1, 0), (1, 0)],
+            force_retrieval: vec![(1, 0)],
+            ..HeadPolicyConfig::default()
+        };
+        let map = cfg.static_map(2, 2);
+        assert!(map.get(0, 1).is_streaming());
+        assert_eq!(map.get(1, 0), HeadPolicy::Retrieval, "retrieval pin wins");
+        assert_eq!(map.num_streaming(), 1);
+        assert!((map.streaming_fraction() - 0.25).abs() < 1e-12);
+        // Out-of-range overrides are ignored, and reads past the model
+        // geometry come back Retrieval.
+        let cfg2 = HeadPolicyConfig {
+            mode: PolicyMode::Static,
+            force_streaming: vec![(9, 9)],
+            ..HeadPolicyConfig::default()
+        };
+        assert_eq!(cfg2.static_map(2, 2).num_streaming(), 0);
+        assert_eq!(map.get(9, 9), HeadPolicy::Retrieval);
+    }
+
+    #[test]
+    fn span_mass_is_stable_and_bounded() {
+        assert_eq!(Calibrator::span_mass(0.0, f32::NEG_INFINITY), 1.0);
+        assert_eq!(Calibrator::span_mass(f32::NEG_INFINITY, 0.0), 0.0);
+        let half = Calibrator::span_mass(3.0, 3.0);
+        assert!((half - 0.5).abs() < 1e-6);
+        // Huge magnitudes don't overflow.
+        let big = Calibrator::span_mass(500.0, 490.0);
+        assert!(big > 0.99 && big <= 1.0);
+        let small = Calibrator::span_mass(-500.0, -490.0);
+        assert!(small < 0.01 && small >= 0.0);
+    }
+
+    #[test]
+    fn calibrator_flips_high_mass_heads_and_respects_overrides() {
+        let cfg = HeadPolicyConfig {
+            mode: PolicyMode::Calibrated,
+            calibration_steps: 2,
+            mass_threshold: 0.9,
+            sinks: 4,
+            window: 16,
+            force_streaming: vec![(0, 3)],
+            force_retrieval: vec![(0, 1)],
+            ..HeadPolicyConfig::default()
+        };
+        let mut cal = Calibrator::new(1, 4, cfg.calibration_steps);
+        for _ in 0..2 {
+            cal.record(0, 0, 0.99); // streaming by mass
+            cal.record(0, 1, 0.99); // ...but pinned retrieval
+            cal.record(0, 2, 0.10); // retrieval by mass
+            cal.record(0, 3, 0.10); // ...but forced streaming
+        }
+        assert!(!cal.end_step());
+        assert!(cal.end_step());
+        let map = cal.decide(&cfg);
+        assert_eq!(map.get(0, 0), HeadPolicy::Streaming { sinks: 4, window: 16 });
+        assert_eq!(map.get(0, 1), HeadPolicy::Retrieval);
+        assert_eq!(map.get(0, 2), HeadPolicy::Retrieval);
+        assert!(map.get(0, 3).is_streaming());
+        assert_eq!(map.num_streaming(), 2);
+        assert_eq!(map.num_heads(), 4);
+    }
+}

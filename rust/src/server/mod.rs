@@ -179,7 +179,9 @@ fn stream_events(out: &mut TcpStream, id: u64, events: mpsc::Receiver<Event>) ->
                     .set("queue_depth_peak", m.queue_depth_peak)
                     .set("wave_occupancy_mean", m.wave_occupancy_mean)
                     .set("max_gap_waves", m.max_gap_waves)
-                    .set("replica_tokens_per_s", m.replica_tokens_per_s);
+                    .set("replica_tokens_per_s", m.replica_tokens_per_s)
+                    .set("streaming_head_fraction", m.streaming_head_fraction)
+                    .set("index_bytes_avoided", m.index_bytes_avoided);
                 writeln!(out, "{}", o.to_string())?;
                 return Ok(());
             }

@@ -31,10 +31,19 @@
 //! ## Format version policy
 //!
 //! Every snapshot opens with [`MAGIC`] + [`VERSION`]. The version bumps on
-//! ANY layout change; readers refuse mismatched versions outright (a
-//! parked session from another build re-pays its prefill rather than risk
-//! a silently-misparsed index). Family and retriever tags are append-only:
-//! tags are never reused or renumbered within a version.
+//! ANY layout change. Readers accept the current version plus a
+//! read-compat path for the immediately preceding one ([`V1`] images have
+//! no per-head policy section; every head restores as `Retrieval`) and
+//! refuse anything else outright (a parked session from another build
+//! re-pays its prefill rather than risk a silently-misparsed index).
+//! Family and retriever tags are append-only: tags are never reused or
+//! renumbered within a version.
+//!
+//! v2 (this version) adds, immediately after the `had_removals` flag: the
+//! per-head policy vector ([`save_policy`]), the session's released index
+//! bytes, and any in-flight calibration pass. Streaming heads persist in
+//! the retriever section as a tag plus two window lengths — their index
+//! state does not exist, which is exactly the snapshot-bytes saving.
 //!
 //! [`Engine::snapshot_session`]: crate::model::Engine::snapshot_session
 //! [`Engine::restore_session`]: crate::model::Engine::restore_session
@@ -55,7 +64,12 @@ use std::sync::Arc;
 pub const MAGIC: &[u8; 4] = b"RASS";
 
 /// Current snapshot format version (see the module-level version policy).
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
+
+/// The previous format version, still readable (and writable via
+/// [`crate::model::Engine::snapshot_session_versioned`] for the
+/// cross-version restore test): v1 has no per-head policy section.
+pub const V1: u32 = 1;
 
 fn quant_tag(mode: QuantMode) -> u8 {
     match mode {
@@ -133,6 +147,55 @@ pub fn load_group(r: &mut SnapReader<'_>) -> Result<Arc<GroupShared>> {
     Ok(GroupShared::restore(store, ids, store_gen))
 }
 
+/// Per-head policy tags (append-only, like the retriever tags).
+const POLICY_RETRIEVAL: u8 = 0;
+const POLICY_STREAMING: u8 = 1;
+
+/// Serialize the per-(layer, q_head) policy vector: one tag per head,
+/// streaming heads followed by their two window lengths.
+pub fn save_policy(w: &mut SnapWriter<'_>, policy: &crate::policy::PolicyMap) -> Result<()> {
+    for layer in &policy.heads {
+        for p in layer {
+            match *p {
+                crate::policy::HeadPolicy::Retrieval => w.u8(POLICY_RETRIEVAL)?,
+                crate::policy::HeadPolicy::Streaming { sinks, window } => {
+                    w.u8(POLICY_STREAMING)?;
+                    w.usize(sinks)?;
+                    w.usize(window)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Inverse of [`save_policy`] for a known engine geometry.
+pub fn load_policy(
+    r: &mut SnapReader<'_>,
+    layers: usize,
+    q_heads: usize,
+) -> Result<crate::policy::PolicyMap> {
+    let mut policy = crate::policy::PolicyMap::all_retrieval(layers, q_heads);
+    for layer in 0..layers {
+        for h in 0..q_heads {
+            match r.u8()? {
+                POLICY_RETRIEVAL => {}
+                POLICY_STREAMING => {
+                    let sinks = r.usize()?;
+                    let window = r.usize()?;
+                    policy.set(
+                        layer,
+                        h,
+                        crate::policy::HeadPolicy::Streaming { sinks, window },
+                    );
+                }
+                other => bail!("unknown head-policy tag {other} in snapshot"),
+            }
+        }
+    }
+    Ok(policy)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +231,22 @@ mod tests {
                 "scan-tier score {i} diverged"
             );
         }
+    }
+
+    #[test]
+    fn policy_roundtrip_preserves_mixed_assignment() {
+        use crate::policy::{HeadPolicy, PolicyMap};
+        let mut policy = PolicyMap::all_retrieval(2, 4);
+        policy.set(0, 1, HeadPolicy::Streaming { sinks: 16, window: 64 });
+        policy.set(1, 3, HeadPolicy::Streaming { sinks: 8, window: 32 });
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut w = SnapWriter::new(&mut buf);
+            save_policy(&mut w, &policy).unwrap();
+        }
+        let mut src = buf.as_slice();
+        let mut r = SnapReader::new(&mut src);
+        assert_eq!(load_policy(&mut r, 2, 4).unwrap(), policy);
     }
 
     #[test]

@@ -417,6 +417,102 @@ fn multi_turn_through_disk_matches_always_resident() {
 }
 
 #[test]
+fn v1_snapshot_restores_into_v2_engine_as_all_retrieval() {
+    // Cross-version compatibility: a v1 snapshot (no per-head policy
+    // section) written by the current engine restores under the v2 read
+    // path with every head on the retrieval tier, and keeps decoding
+    // bit-identically to the never-snapshotted session.
+    let eng = Engine::from_config(engine_cfg(Method::RetrievalAttention)).expect("engine init");
+    let mut rng = Rng::seed_from(83);
+    let s = tasks::passkey(&mut rng, 700, 0.35);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    let _ = eng.generate(&mut sess, 2).unwrap();
+
+    let mut v1: Vec<u8> = Vec::new();
+    eng.snapshot_session_versioned(&mut sess, &mut v1, retrieval_attention::store::V1).unwrap();
+    let mut v2: Vec<u8> = Vec::new();
+    eng.snapshot_session(&mut sess, &mut v2).unwrap();
+    // v2 carries the policy section on top of everything v1 has.
+    assert!(v2.len() > v1.len(), "v2 snapshot not larger: {} <= {}", v2.len(), v1.len());
+
+    let mut src = v1.as_slice();
+    let mut restored = eng.restore_session(&mut src).unwrap();
+    assert_eq!(restored.len, sess.len);
+    assert_eq!(restored.streaming_fraction(), 0.0, "v1 restore must be all-retrieval");
+    assert_eq!(restored.index_bytes_avoided, 0);
+    let mut tok_a = 5u32;
+    let mut tok_b = 5u32;
+    for step in 0..4 {
+        tok_a = eng.decode_step(&mut sess, tok_a).unwrap().token;
+        tok_b = eng.decode_step(&mut restored, tok_b).unwrap().token;
+        assert_eq!(tok_a, tok_b, "v1-restored session diverged at step {step}");
+    }
+    sess.shutdown_maintenance();
+    restored.shutdown_maintenance();
+}
+
+#[test]
+fn v2_snapshot_carries_streaming_heads_and_refuses_v1() {
+    // A mixed-policy session round-trips its per-head assignment through
+    // the v2 policy section — and cannot be written as v1, because tag-4
+    // (streaming) retrievers without a policy vector would restore
+    // inconsistently.
+    use retrieval_attention::policy::PolicyMode;
+    let mut cfg = engine_cfg(Method::RetrievalAttention);
+    // Low watermark so the indexed tier actually holds drained rows and
+    // the streaming head's index-free snapshot shows up as saved bytes.
+    cfg.retrieval.maintenance.drain_watermark = 16;
+    let mut scfg = cfg.clone();
+    scfg.policy.mode = PolicyMode::Static;
+    scfg.policy.force_streaming = vec![(1, 0)];
+    scfg.policy.sinks = 8;
+    scfg.policy.window = 32;
+
+    let mut rng = Rng::seed_from(89);
+    let s = tasks::passkey(&mut rng, 700, 0.45);
+    let eng = Engine::from_config(cfg).expect("engine init");
+    let seng = Engine::from_config(scfg).expect("engine init");
+    let mut plain = eng.prefill(&s.prompt).unwrap();
+    let mut mixed = seng.prefill(&s.prompt).unwrap();
+    let _ = eng.generate(&mut plain, 4).unwrap();
+    let _ = seng.generate(&mut mixed, 4).unwrap();
+    assert_eq!(mixed.streaming_fraction(), 0.5);
+
+    let mut err = Vec::new();
+    let refused = seng.snapshot_session_versioned(&mut mixed, &mut err, retrieval_attention::store::V1);
+    assert!(refused.is_err(), "v1 write of a streaming session must be refused");
+
+    let mut pbuf: Vec<u8> = Vec::new();
+    let mut mbuf: Vec<u8> = Vec::new();
+    eng.snapshot_session(&mut plain, &mut pbuf).unwrap();
+    seng.snapshot_session(&mut mixed, &mut mbuf).unwrap();
+    // The streaming head persists as a 17-byte stub instead of a full
+    // index: the mixed session's snapshot must be strictly smaller.
+    assert!(
+        mbuf.len() < pbuf.len(),
+        "streaming head did not shrink the snapshot: {} >= {}",
+        mbuf.len(),
+        pbuf.len()
+    );
+
+    let mut src = mbuf.as_slice();
+    let mut restored = seng.restore_session(&mut src).unwrap();
+    assert_eq!(restored.streaming_fraction(), 0.5, "policy section lost in round-trip");
+    assert_eq!(restored.policy, mixed.policy);
+    // And it keeps decoding identically to the live mixed session.
+    let mut tok_a = 5u32;
+    let mut tok_b = 5u32;
+    for step in 0..4 {
+        tok_a = seng.decode_step(&mut mixed, tok_a).unwrap().token;
+        tok_b = seng.decode_step(&mut restored, tok_b).unwrap().token;
+        assert_eq!(tok_a, tok_b, "mixed-policy restore diverged at step {step}");
+    }
+    plain.shutdown_maintenance();
+    mixed.shutdown_maintenance();
+    restored.shutdown_maintenance();
+}
+
+#[test]
 fn disk_exhaustion_rejects_with_backpressure() {
     let mut cfg = serving_cfg(0);
     cfg.serving.session_cache.max_disk_bytes = 64; // nothing fits

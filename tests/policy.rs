@@ -1,0 +1,167 @@
+//! Head-policy layer tests: the streaming tier's attention semantics
+//! and the calibrated Retrieval→Streaming flip, end to end.
+//!
+//! The load-bearing claims:
+//!
+//! 1. **Span restriction**: a streaming head's host partial is exactly
+//!    full attention restricted to the sink+window id set — the
+//!    retriever returns precisely that span, and `attend_subset` over it
+//!    matches a from-scratch softmax reference (property-tested over
+//!    random keys/queries and span geometries).
+//! 2. **Live specialization**: a calibrated session starts all-retrieval,
+//!    flips qualifying heads after the profiling budget, releases the
+//!    flipped heads' index bytes, and keeps decoding.
+
+use retrieval_attention::attention::attend_subset;
+use retrieval_attention::baselines::{HostRetriever, RetrieverInputs, StreamingRetriever};
+use retrieval_attention::config::{RetrievalConfig, ServeConfig};
+use retrieval_attention::index::KeyStore;
+use retrieval_attention::kvcache::StaticPattern;
+use retrieval_attention::model::Engine;
+use retrieval_attention::policy::PolicyMode;
+use retrieval_attention::tensor::Matrix;
+use retrieval_attention::util::rng::Rng;
+use retrieval_attention::workload::tasks;
+
+/// Reference restricted attention: plain two-pass softmax over exactly
+/// the given rows, accumulated in f64 so rounding differences from the
+/// production kernel stay within float tolerance.
+fn reference_attention(q: &[f32], keys: &Matrix, values: &Matrix, ids: &[u32], scale: f32) -> (Vec<f32>, f32) {
+    let d = values.cols();
+    let logits: Vec<f64> = ids
+        .iter()
+        .map(|&id| {
+            let k = keys.row(id as usize);
+            q.iter().zip(k).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>() * scale as f64
+        })
+        .collect();
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let weights: Vec<f64> = logits.iter().map(|&l| (l - m).exp()).collect();
+    let z: f64 = weights.iter().sum();
+    let mut o = vec![0.0f64; d];
+    for (w, &id) in weights.iter().zip(ids) {
+        for (acc, &v) in o.iter_mut().zip(values.row(id as usize)) {
+            *acc += w * v as f64;
+        }
+    }
+    (o.iter().map(|&x| (x / z) as f32).collect(), (m + z.ln()) as f32)
+}
+
+#[test]
+fn streaming_head_partial_is_full_attention_restricted_to_its_span() {
+    let mut rng = Rng::seed_from(101);
+    let d = 16usize;
+    let scale = 1.0 / (d as f32).sqrt();
+    // Span geometries: truncating, exactly-covering, and over-covering
+    // (short map ⇒ the whole history, i.e. unrestricted full attention).
+    for (n, sinks, window) in [(96usize, 8usize, 16usize), (24, 8, 16), (12, 8, 16), (64, 0, 32)] {
+        let keys = Matrix::from_fn(n, d, |_, _| rng.normal());
+        let values = Matrix::from_fn(n, d, |_, _| rng.normal());
+        let queries = Matrix::from_fn(4, d, |_, _| rng.normal());
+        let cfg = RetrievalConfig::default();
+        let inp = RetrieverInputs::from_parts(
+            KeyStore::from_matrix(keys.clone()),
+            (0..n as u32).collect(),
+            &queries,
+            scale,
+            &cfg,
+            7,
+        );
+        let head = StreamingRetriever::new(inp.group.clone(), sinks, window);
+        let expected: Vec<u32> = if n <= sinks + window {
+            (0..n as u32).collect()
+        } else {
+            (0..sinks as u32).chain((n - window) as u32..n as u32).collect()
+        };
+        for trial in 0..20 {
+            let q: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let got = head.retrieve(&q, 0);
+            assert_eq!(got.ids, expected, "n={n} sinks={sinks} window={window}: wrong span");
+            assert_eq!(got.scanned, 0, "streaming head must not report index scans");
+            let p = attend_subset(&q, &keys, &values, &got.ids, scale);
+            let (ro, rlse) = reference_attention(&q, &keys, &values, &expected, scale);
+            assert!(
+                (p.lse - rlse).abs() < 1e-4,
+                "n={n} trial={trial}: lse {} vs reference {rlse}",
+                p.lse
+            );
+            for (i, (&a, &b)) in p.o.iter().zip(&ro).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "n={n} trial={trial}: output[{i}] {a} vs reference {b}"
+                );
+            }
+        }
+    }
+}
+
+fn calibrated_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.model = "induction-mini".into();
+    cfg.pattern = StaticPattern { sink: 32, window: 128 };
+    cfg.retrieval.top_k = 32;
+    cfg.retrieval.maintenance.async_worker = false;
+    cfg.retrieval.maintenance.drain_watermark = 16;
+    cfg.policy.mode = PolicyMode::Calibrated;
+    cfg.policy.calibration_steps = 2;
+    cfg.policy.sinks = 8;
+    cfg.policy.window = 32;
+    cfg
+}
+
+#[test]
+fn calibrated_session_flips_heads_and_keeps_decoding() {
+    // Threshold 0: every head qualifies, so the flip is guaranteed once
+    // the profiling budget is spent — the live-swap path under test.
+    let mut cfg = calibrated_cfg();
+    cfg.policy.mass_threshold = 0.0;
+    let eng = Engine::from_config(cfg).expect("engine init");
+    let mut rng = Rng::seed_from(103);
+    let s = tasks::passkey(&mut rng, 400, 0.4);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    assert_eq!(sess.streaming_fraction(), 0.0, "calibrated sessions start all-retrieval");
+    assert!(sess.calib.is_some(), "no calibrator attached");
+    let before = sess.index_memory_bytes();
+
+    // generate(3) = first token from the prefill state + 2 decode steps,
+    // exactly the calibration budget.
+    let (tokens, _) = eng.generate(&mut sess, 3).unwrap();
+    assert_eq!(tokens.len(), 3);
+    assert_eq!(sess.streaming_fraction(), 1.0, "flip did not land after the budget");
+    assert!(sess.calib.is_none(), "calibrator must retire after deciding");
+    assert!(
+        sess.index_bytes_avoided > 0,
+        "flip released no index bytes (indexes were non-empty before it)"
+    );
+    assert!(
+        sess.index_memory_bytes() < before,
+        "per-head index memory did not shrink after the flip"
+    );
+
+    // The specialized session keeps decoding (streaming heads now feed
+    // the combine step from their sink+window span only).
+    let mut tok = 5u32;
+    for _ in 0..6 {
+        tok = eng.decode_step(&mut sess, tok).unwrap().token;
+        assert!((tok as usize) < eng.spec().vocab);
+    }
+    sess.shutdown_maintenance();
+}
+
+#[test]
+fn unreachable_threshold_never_flips() {
+    // Mass can never exceed 1, so threshold 2 pins every head on the
+    // retrieval tier through the same calibration machinery.
+    let mut cfg = calibrated_cfg();
+    cfg.policy.mass_threshold = 2.0;
+    let eng = Engine::from_config(cfg).expect("engine init");
+    let mut rng = Rng::seed_from(107);
+    let s = tasks::passkey(&mut rng, 400, 0.6);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    let (tokens, _) = eng.generate(&mut sess, 4).unwrap();
+    assert_eq!(tokens.len(), 4);
+    assert_eq!(sess.streaming_fraction(), 0.0, "nothing should qualify at threshold 2");
+    assert!(sess.calib.is_none(), "calibrator still live past its budget");
+    assert_eq!(sess.index_bytes_avoided, 0);
+    sess.shutdown_maintenance();
+}

@@ -154,6 +154,79 @@ fn throttled_waves_respect_the_fairness_bound() {
     assert_eq!(replica.outstanding(), 0);
 }
 
+/// The head-policy layer's do-no-harm invariant, across every index
+/// family and quant mode: a calibrated policy whose decision is forced
+/// back to all-Retrieval (mass threshold met everywhere, but every head
+/// pinned by `force_retrieval`) decodes bit-identically to policy-off.
+/// Calibration rides the LSEs the combine step already computes, so a
+/// no-flip decision must be invisible to the token stream.
+#[test]
+fn forced_all_retrieval_policy_is_bit_identical_to_policy_off() {
+    use retrieval_attention::policy::PolicyMode;
+    let families = [Method::Flat, Method::Ivf, Method::Hnsw, Method::RetrievalAttention];
+    let quants = [QuantMode::Off, QuantMode::Fp16, QuantMode::Int8];
+    for family in families {
+        for quant in quants {
+            let off = wave_cfg(family, quant);
+            let mut forced = wave_cfg(family, quant);
+            forced.policy.mode = PolicyMode::Calibrated;
+            forced.policy.calibration_steps = 2;
+            // Threshold 0 makes every head WANT to flip; the retrieval
+            // pins must win, leaving the decode untouched.
+            forced.policy.mass_threshold = 0.0;
+            forced.policy.force_retrieval = vec![(0, 0), (1, 0)];
+            let prompts = passkey_prompts(46, 2, 288);
+            // 4 tokens: the decision lands after step 2, mid-stream.
+            let baseline = serial_tokens(&off, &prompts, 4);
+            assert_eq!(
+                baseline,
+                serial_tokens(&forced, &prompts, 4),
+                "forced-all-retrieval serial decode diverged for {family:?}/{quant:?}"
+            );
+            assert_eq!(
+                baseline,
+                batched_tokens(&forced, &prompts, 4, None),
+                "forced-all-retrieval wave decode diverged for {family:?}/{quant:?}"
+            );
+        }
+    }
+}
+
+/// Mixed-policy sessions (streaming layer 1, retrieval layer 0 on the
+/// 2-layer induction model) must keep the batched-vs-serial invariant:
+/// heterogeneous retriever stacks fuse into waves without perturbing
+/// either tier. Also checks the policy metrics surface in done events.
+#[test]
+fn mixed_policy_sessions_keep_batched_serial_identity() {
+    use retrieval_attention::policy::PolicyMode;
+    let mut cfg = wave_cfg(Method::RetrievalAttention, QuantMode::Off);
+    cfg.policy.mode = PolicyMode::Static;
+    cfg.policy.force_streaming = vec![(1, 0)];
+    // Small span so the streaming head actually truncates the drained
+    // overflow (≈128 ids by end of decode) instead of returning it all.
+    cfg.policy.sinks = 8;
+    cfg.policy.window = 32;
+    let prompts = passkey_prompts(47, 3, 288);
+    let serial = serial_tokens(&cfg, &prompts, 8);
+    let replica = Replica::spawn(cfg.clone());
+    let rxs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            replica.submit(Request { id: i as u64, prompt: p.clone(), max_tokens: 8, session: None })
+        })
+        .collect();
+    for (i, rx) in rxs.iter().enumerate() {
+        let (tokens, m) = collect(rx).expect("mixed-policy request failed");
+        assert_eq!(tokens, serial[i], "mixed-policy wave diverged from serial for prompt {i}");
+        assert_eq!(
+            m.streaming_head_fraction, 0.5,
+            "request {i}: expected 1 of 2 heads streaming"
+        );
+    }
+    assert_eq!(replica.outstanding(), 0);
+}
+
 /// Session verbs landing mid-stream (continue on a retained session,
 /// close on an unknown one) are registry operations: they must complete
 /// and must never stall a session that is already decoding.
