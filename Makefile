@@ -8,6 +8,10 @@
 #                   outside the util::sync facade, Ordering::Relaxed only
 #                   in allowlisted counter files, no unwrap/expect in the
 #                   serving-path modules.
+#   make test-faults — deterministic fault-injection matrix (the
+#                   `failpoints` feature): injected IO errors, partial
+#                   writes, and panics at every instrumented site must
+#                   degrade cleanly (see docs/robustness.md).
 #   make loom     — exhaustive model checking of the publish/swap
 #                   protocols (tests/loom_models.rs) under the vendored
 #                   loom checker; the sync facade swaps to instrumented
@@ -24,7 +28,7 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test test-concurrency test-session-soak test-scalar fmt-check clippy clippy-kernel lint loom miri tsan bench bench-smoke artifacts clean
+.PHONY: verify build test test-concurrency test-session-soak test-faults test-scalar fmt-check clippy clippy-kernel lint loom miri tsan bench bench-smoke artifacts clean
 
 verify: build test
 	$(MAKE) fmt-check
@@ -48,6 +52,16 @@ test-concurrency:
 # gate); `timeout` fails fast on a wedged restore or registry.
 test-session-soak:
 	timeout 900 $(CARGO) test -q --test session_soak -- --test-threads=1
+
+# Deterministic fault-injection matrix (tests/fault_injection.rs) under
+# the `failpoints` feature: every instrumented spill/codec/maintenance/
+# wave/worker site is driven with injected errors and panics, including
+# the worker-kill → respawn → durable-recovery path. The failpoint
+# registry is process-global, hence serialized; `timeout` fails fast if
+# a "contained" fault actually wedges the replica (see
+# docs/robustness.md).
+test-faults:
+	timeout 900 $(CARGO) test -q --features failpoints --test fault_injection -- --test-threads=1
 
 # Full suite with SIMD force-disabled: the scalar fallback must keep every
 # platform green (the kernel dispatch acceptance gate).

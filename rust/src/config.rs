@@ -279,6 +279,19 @@ pub struct SessionCacheConfig {
     /// Disk budget for parked snapshots; exhaustion rejects the insert
     /// with backpressure instead of silently dropping session state.
     pub max_disk_bytes: usize,
+    /// Treat the spill tier as per-process scratch: a dropped cache
+    /// deletes its parked snapshots and directory. `false` (the default
+    /// for a configured `spill_dir`) makes the tier durable — parked
+    /// sessions survive a crash or deploy and are re-registered by the
+    /// boot scan. Forced `true` when `spill_dir` is empty: the
+    /// per-process temp directory can never be rediscovered, so durable
+    /// files there would only be litter.
+    pub ephemeral_spill: bool,
+    /// Extra attempts for transient spill IO (park writes, restore
+    /// opens) before the error surfaces. `0` fails on first error.
+    pub spill_retries: usize,
+    /// Base backoff between spill retries, doubling per attempt.
+    pub spill_retry_backoff_ms: u64,
 }
 
 impl Default for SessionCacheConfig {
@@ -287,15 +300,38 @@ impl Default for SessionCacheConfig {
             max_resident_bytes: 512 << 20,
             spill_dir: String::new(),
             max_disk_bytes: 8 << 30,
+            ephemeral_spill: false,
+            spill_retries: 2,
+            spill_retry_backoff_ms: 10,
         }
     }
 }
 
 /// Serving-layer (coordinator/replica) knobs beyond raw scheduling.
-#[derive(Clone, Debug, PartialEq, Eq, Default)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ServingConfig {
     /// The multi-turn session registry's storage budget.
     pub session_cache: SessionCacheConfig,
+    /// Per-request deadline for the event stream, in milliseconds: a
+    /// request whose replica stops producing events for this long fails
+    /// with a timeout instead of blocking `collect` forever (a
+    /// dead-but-connected worker). `0` disables the deadline.
+    pub request_deadline_ms: u64,
+    /// Times the router's supervisor will respawn a crashed replica
+    /// worker before giving up and failing its requests outright.
+    pub max_respawns: u32,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            session_cache: SessionCacheConfig::default(),
+            // 0 = no deadline: existing single-process deployments block
+            // indefinitely, exactly as before this knob existed.
+            request_deadline_ms: 0,
+            max_respawns: 3,
+        }
+    }
 }
 
 /// Scheduler/batcher limits.
@@ -425,9 +461,14 @@ impl ServeConfig {
         let mut sc = Value::obj();
         sc.set("max_resident_bytes", self.serving.session_cache.max_resident_bytes)
             .set("spill_dir", self.serving.session_cache.spill_dir.as_str())
-            .set("max_disk_bytes", self.serving.session_cache.max_disk_bytes);
+            .set("max_disk_bytes", self.serving.session_cache.max_disk_bytes)
+            .set("ephemeral_spill", self.serving.session_cache.ephemeral_spill)
+            .set("spill_retries", self.serving.session_cache.spill_retries)
+            .set("spill_retry_backoff_ms", self.serving.session_cache.spill_retry_backoff_ms);
         let mut sv = Value::obj();
         sv.set("session_cache", sc);
+        sv.set("request_deadline_ms", self.serving.request_deadline_ms)
+            .set("max_respawns", self.serving.max_respawns as u64);
         o.set("serving", sv);
         o.set("hw", self.hw.as_str());
         o.set("artifacts_dir", self.artifacts_dir.as_str());
@@ -541,6 +582,21 @@ impl ServeConfig {
                 if let Some(x) = sc.get("max_disk_bytes").and_then(Value::as_usize) {
                     c.serving.session_cache.max_disk_bytes = x;
                 }
+                if let Some(x) = sc.get("ephemeral_spill").and_then(Value::as_bool) {
+                    c.serving.session_cache.ephemeral_spill = x;
+                }
+                if let Some(x) = sc.get("spill_retries").and_then(Value::as_usize) {
+                    c.serving.session_cache.spill_retries = x;
+                }
+                if let Some(x) = sc.get("spill_retry_backoff_ms").and_then(Value::as_u64) {
+                    c.serving.session_cache.spill_retry_backoff_ms = x;
+                }
+            }
+            if let Some(x) = sv.get("request_deadline_ms").and_then(Value::as_u64) {
+                c.serving.request_deadline_ms = x;
+            }
+            if let Some(x) = sv.get("max_respawns").and_then(Value::as_u64) {
+                c.serving.max_respawns = x as u32;
             }
         }
         if let Some(h) = v.get("hw").and_then(Value::as_str) {
@@ -664,17 +720,30 @@ mod tests {
             max_resident_bytes: 0,
             spill_dir: "/tmp/ra-spill".into(),
             max_disk_bytes: 1 << 20,
+            ephemeral_spill: true,
+            spill_retries: 5,
+            spill_retry_backoff_ms: 25,
         };
+        c.serving.request_deadline_ms = 1500;
+        c.serving.max_respawns = 7;
         let back = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.serving.session_cache.max_resident_bytes, 0);
         assert_eq!(back.serving.session_cache.spill_dir, "/tmp/ra-spill");
         assert_eq!(back.serving.session_cache.max_disk_bytes, 1 << 20);
+        assert!(back.serving.session_cache.ephemeral_spill);
+        assert_eq!(back.serving.session_cache.spill_retries, 5);
+        assert_eq!(back.serving.session_cache.spill_retry_backoff_ms, 25);
+        assert_eq!(back.serving.request_deadline_ms, 1500);
+        assert_eq!(back.serving.max_respawns, 7);
         // Absent block falls back to defaults.
         let v = json::parse(r#"{"retrieval":{"top_k":5}}"#).unwrap();
         let parsed = ServeConfig::from_json(&v).unwrap();
         assert_eq!(parsed.serving.session_cache, SessionCacheConfig::default());
         assert!(parsed.serving.session_cache.max_resident_bytes > 0);
         assert!(parsed.serving.session_cache.spill_dir.is_empty());
+        assert!(!parsed.serving.session_cache.ephemeral_spill, "durable by default");
+        assert_eq!(parsed.serving.request_deadline_ms, 0, "no deadline by default");
+        assert_eq!(parsed.serving.max_respawns, 3);
     }
 
     #[test]

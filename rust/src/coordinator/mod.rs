@@ -28,12 +28,13 @@ use crate::config::ServeConfig;
 use crate::metrics::{PhaseBreakdown, WaveTelemetry};
 use crate::model::{Engine, Session, WaveItem};
 use crate::store::SessionCache;
-use crate::util::sync::mpsc::{self, Receiver, Sender, TryRecvError};
-use crate::util::sync::Arc;
+use crate::util::contain::contained;
+use crate::util::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use crate::util::sync::{Arc, Mutex, PoisonError};
 use anyhow::Result;
 use scheduler::{pick_wave, SlotBoard};
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// What a request wants done with its session (the multi-turn lifecycle).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -202,8 +203,9 @@ struct Admitted {
     snapshot_bytes: u64,
 }
 
-/// Handle to one replica worker (engine thread).
-pub struct Replica {
+/// One generation of a replica worker: channel, slot board, thread.
+/// Replaced wholesale on a supervised respawn.
+struct WorkerGen {
     tx: Sender<Job>,
     /// The slot protocol: exactly-once in-flight accounting, the
     /// queue-depth gauge, and the stop flag ([`scheduler::SlotBoard`];
@@ -212,10 +214,8 @@ pub struct Replica {
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
-impl Replica {
-    /// Spawn a replica: the engine is constructed *inside* the worker
-    /// thread (PJRT handles are not Send).
-    pub fn spawn(cfg: ServeConfig) -> Replica {
+impl WorkerGen {
+    fn spawn(cfg: ServeConfig) -> WorkerGen {
         let (tx, rx) = mpsc::channel::<Job>();
         let board = Arc::new(SlotBoard::new());
         let board_clone = board.clone();
@@ -245,26 +245,106 @@ impl Replica {
             // submit fails over the closed channel into an explicit
             // Event::Failed("replica worker is gone").
             .ok();
-        Replica { tx, board, handle }
+        WorkerGen { tx, board, handle }
+    }
+
+    /// Whether the worker thread has exited. A worker only returns when
+    /// its channel closes (orderly shutdown) — any other exit is a crash
+    /// (a panic that escaped the per-session containment).
+    fn dead(&self) -> bool {
+        self.handle.as_ref().map(|h| h.is_finished()).unwrap_or(true)
+    }
+
+    fn shutdown(&mut self) {
+        // Refuse new submissions, then close the channel: the worker
+        // drains its resident set and exits after the current wave.
+        self.board.raise_stop();
+        let (dummy_tx, _) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.tx, dummy_tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Handle to one **supervised** replica worker (engine thread).
+///
+/// If the worker thread dies — a panic that escaped per-session
+/// containment — the next `submit` respawns it, up to
+/// `serving.max_respawns` times. Crash semantics: requests in flight at
+/// the crash fail (their reply channels disconnect, which `collect`
+/// reports cleanly), but **parked sessions survive** — the respawned
+/// worker's `SessionCache` boot-scans the same configured `spill_dir`
+/// and re-registers every durable snapshot, so `continue` turns keep
+/// working across the crash. The respawn allocates a fresh slot board:
+/// the dead generation's in-flight count dies with it.
+pub struct Replica {
+    cfg: ServeConfig,
+    gen: Mutex<WorkerGen>,
+    /// Respawns consumed (`<= cfg.serving.max_respawns`).
+    respawns: Mutex<u32>,
+}
+
+impl Replica {
+    /// Spawn a replica: the engine is constructed *inside* the worker
+    /// thread (PJRT handles are not Send).
+    pub fn spawn(cfg: ServeConfig) -> Replica {
+        let gen = Mutex::new(WorkerGen::spawn(cfg.clone()));
+        Replica { cfg, gen, respawns: Mutex::new(0) }
+    }
+
+    fn lock_gen(&self) -> crate::util::sync::MutexGuard<'_, WorkerGen> {
+        // Poison recovery: a panicking submitter cannot brick the replica
+        // handle — the guarded state is a plain handle triple, valid at
+        // every step, so the poisoned payload is safe to adopt.
+        self.gen.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Supervision: if the current worker generation crashed, respawn it
+    /// (bounded by `serving.max_respawns`). Returns false when the
+    /// replica is dead for good.
+    fn ensure_alive(&self, gen: &mut WorkerGen) -> bool {
+        if gen.board.stopped() {
+            return false; // orderly shutdown, not a crash
+        }
+        if !gen.dead() {
+            return true;
+        }
+        let mut used = self.respawns.lock().unwrap_or_else(PoisonError::into_inner);
+        if *used >= self.cfg.serving.max_respawns {
+            return false;
+        }
+        *used += 1;
+        // Reap the dead generation (join is immediate: the thread has
+        // exited), then replace it wholesale. Jobs queued to the dead
+        // worker fail by disconnect; parked sessions come back via the
+        // new worker's spill-dir boot scan.
+        if let Some(h) = gen.handle.take() {
+            let _ = h.join();
+        }
+        *gen = WorkerGen::spawn(self.cfg.clone());
+        true
     }
 
     /// Submit a request; events stream on the returned receiver. If the
-    /// worker is already gone the receiver carries an explicit
+    /// worker is gone (orderly shutdown, or crashed with the respawn
+    /// budget exhausted) the receiver carries an explicit
     /// [`Event::Failed`] — not a bare disconnect that `collect` would
     /// report as "replica dropped the request" without ever seeing a
     /// failure event.
     pub fn submit(&self, req: Request) -> Receiver<Event> {
         let (reply, events) = mpsc::channel();
-        if self.board.stopped() {
+        let mut gen = self.lock_gen();
+        if !self.ensure_alive(&mut gen) {
             let _ = reply.send(Event::Failed(req.id, "replica worker is gone".into()));
             return events;
         }
         // Enter the board BEFORE the send so the job is never in flight
         // yet invisible to `outstanding()`.
-        self.board.enter();
+        gen.board.enter();
         let job = Job { req, reply, submitted: Instant::now() };
-        if let Err(send_err) = self.tx.send(job) {
-            self.board.retire();
+        if let Err(send_err) = gen.tx.send(job) {
+            gen.board.retire();
             let job = send_err.0;
             let _ = job
                 .reply
@@ -277,26 +357,24 @@ impl Replica {
     /// how many waves a session stays resident (the slot board's
     /// enter-once/retire-once contract).
     pub fn outstanding(&self) -> usize {
-        self.board.in_flight()
+        self.lock_gen().board.in_flight()
     }
 
     /// Jobs parked in the worker's admission queue (the backlog behind
     /// the resident set).
     pub fn queue_depth(&self) -> usize {
-        self.board.queued()
+        self.lock_gen().board.queued()
+    }
+
+    /// Worker respawns consumed so far (supervision telemetry).
+    pub fn respawn_count(&self) -> u32 {
+        *self.respawns.lock().unwrap_or_else(PoisonError::into_inner)
     }
 }
 
 impl Drop for Replica {
     fn drop(&mut self) {
-        // Refuse new submissions, then close the channel: the worker
-        // drains its resident set and exits after the current wave.
-        self.board.raise_stop();
-        let (dummy_tx, _) = mpsc::channel();
-        let _ = std::mem::replace(&mut self.tx, dummy_tx);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.lock_gen().shutdown();
     }
 }
 
@@ -340,7 +418,10 @@ fn apply_step(
             }
         }
         Err(e) => {
-            let _ = a.job.reply.send(Event::Failed(a.job.req.id, e.to_string()));
+            // `{:#}` keeps the full context chain: "parking LRU victim
+            // session N: ... (backpressure)" must survive to the client,
+            // not just the outermost context line.
+            let _ = a.job.reply.send(Event::Failed(a.job.req.id, format!("{e:#}")));
             a.failed = true;
             finished.push(idx);
         }
@@ -371,6 +452,12 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
     let mut next_seq = 0u64;
 
     loop {
+        // Supervision kill switch (panic-only site, test builds only): a
+        // Panic action here kills the worker thread mid-service, which is
+        // how tests exercise the router-side respawn + durable-recovery
+        // path. Error actions are ignored — there is no job to fail here.
+        let _ = crate::util::failpoint::trigger("worker.step");
+
         // Pull new jobs. Block only when fully idle.
         loop {
             match rx.try_recv() {
@@ -444,7 +531,12 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
                 continue;
             }
             let t = Instant::now();
-            match admit(engine, &mut sessions, &job) {
+            // Containment: a panic during admission (prefill, resume,
+            // decode-extend) fails THIS request — the worker, its resident
+            // sessions, and its registry all survive. The admitted-or-not
+            // state is unambiguous: a panicking admission never returned a
+            // session, so there is nothing half-built to poison.
+            match contained("session admission", || admit(engine, &mut sessions, &job)) {
                 Ok(adm) => {
                     // Continuations skip prefill entirely: their admission
                     // cost is the resume (reported as resume_s) plus the
@@ -494,7 +586,7 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
                 }
                 Err(e) => {
                     board.retire();
-                    let _ = job.reply.send(Event::Failed(job.req.id, e.to_string()));
+                    let _ = job.reply.send(Event::Failed(job.req.id, format!("{e:#}")));
                 }
             }
         }
@@ -546,18 +638,32 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
                 picked.iter().copied().partition(|&i| active[i].produced.is_empty());
             for i in firsts {
                 let a = &mut active[i];
-                let step = engine.first_token(&a.sess).map(|t| (t, PhaseBreakdown::default()));
+                let step = contained("first-token step", || engine.first_token(&a.sess))
+                    .map(|t| (t, PhaseBreakdown::default()));
                 apply_step(a, step, &mut wave, &mut finished, i);
             }
             // The fused wave step: every remaining picked session advances
-            // one token in a single multi-session engine dispatch.
+            // one token in a single multi-session engine dispatch. The
+            // engine contains per-session panics itself (the panicking
+            // slot fails, survivors' tokens stay bit-identical); this
+            // outer wrap is the backstop for a panic in the fused/shared
+            // phases, where no per-slot attribution exists — the whole
+            // wave fails, every picked session is poisoned-and-failed,
+            // and the worker keeps serving everything else.
             if !steps.is_empty() {
                 let mut selected = select_mut(&mut active, &steps);
                 let mut items: Vec<WaveItem> = selected
                     .iter_mut()
                     .map(|a| WaveItem { sess: &mut a.sess, token: a.cur })
                     .collect();
-                let results = engine.decode_wave(&mut items);
+                let results = match contained("fused wave step", || Ok(engine.decode_wave(&mut items)))
+                {
+                    Ok(r) => r,
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        (0..items.len()).map(|_| Err(anyhow::anyhow!("{msg}"))).collect()
+                    }
+                };
                 drop(items);
                 for ((a, res), &i) in selected.into_iter().zip(results).zip(steps.iter()) {
                     apply_step(a, res.map(|o| (o.token, o.breakdown)), &mut wave, &mut finished, i);
@@ -628,14 +734,22 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
             // backpressure surfaces as this request's failure.
             let retain = if a.failed { None } else { a.job.req.session };
             let event = match retain {
-                Some(spec) => match sessions.insert(engine, spec.session_id, a.sess) {
-                    Ok(()) => {
-                        metrics.session_parks = sessions.stats.parks;
-                        metrics.session_resumes = sessions.stats.resumes;
-                        Event::Done(a.job.req.id, metrics)
+                // Containment: retention may LRU-park victims through the
+                // snapshot codec — a panic there fails this request (its
+                // session is dropped, never half-registered) while the
+                // registry and every other resident session survive.
+                Some(spec) => {
+                    match contained("session retention", || {
+                        sessions.insert(engine, spec.session_id, a.sess)
+                    }) {
+                        Ok(()) => {
+                            metrics.session_parks = sessions.stats.parks;
+                            metrics.session_resumes = sessions.stats.resumes;
+                            Event::Done(a.job.req.id, metrics)
+                        }
+                        Err(e) => Event::Failed(a.job.req.id, format!("{e:#}")),
                     }
-                    Err(e) => Event::Failed(a.job.req.id, e.to_string()),
-                },
+                }
                 None => Event::Done(a.job.req.id, metrics),
             };
             // Retire AFTER the session's results are published (tokens
@@ -731,13 +845,35 @@ fn vllm_device_check(engine: &Engine, total_tokens: usize) -> Result<()> {
 
 /// Collect a full generation from an event stream (blocking helper).
 pub fn collect(events: &Receiver<Event>) -> Result<(Vec<u32>, RequestMetrics)> {
+    collect_deadline(events, 0)
+}
+
+/// [`collect`] with a per-event-gap deadline: if more than `deadline_ms`
+/// elapses between consecutive events the request fails with a clean
+/// timeout error instead of blocking forever on a wedged replica.
+/// `deadline_ms == 0` means no deadline (plain blocking collect). The
+/// deadline is per GAP, not end-to-end: a long generation that keeps
+/// streaming tokens never times out, while a replica that stops making
+/// progress surfaces within one deadline.
+pub fn collect_deadline(
+    events: &Receiver<Event>,
+    deadline_ms: u64,
+) -> Result<(Vec<u32>, RequestMetrics)> {
     let mut tokens = Vec::new();
     loop {
-        match events.recv() {
+        let next = if deadline_ms == 0 {
+            events.recv().map_err(|_| RecvTimeoutError::Disconnected)
+        } else {
+            events.recv_timeout(Duration::from_millis(deadline_ms))
+        };
+        match next {
             Ok(Event::Token(_, t)) => tokens.push(t),
             Ok(Event::Done(_, m)) => return Ok((tokens, m)),
             Ok(Event::Failed(_, e)) => anyhow::bail!("request failed: {e}"),
-            Err(_) => anyhow::bail!("replica dropped the request"),
+            Err(RecvTimeoutError::Disconnected) => anyhow::bail!("replica dropped the request"),
+            Err(RecvTimeoutError::Timeout) => {
+                anyhow::bail!("request deadline exceeded ({deadline_ms} ms without progress)")
+            }
         }
     }
 }

@@ -11,6 +11,9 @@ use crate::util::sync::{mpsc::Receiver, AtomicU64, Ordering};
 /// A fleet of replicas behind one submit() entry point.
 pub struct Router {
     replicas: Vec<Replica>,
+    /// The fleet's shared config (deadline and supervision knobs are
+    /// read back out by the server front-end).
+    cfg: ServeConfig,
     // Relaxed (allowlisted counters): `rr` only spreads tie-breaks and
     // `next_id` only needs uniqueness; neither guards any other memory.
     rr: AtomicU64,
@@ -22,12 +25,24 @@ impl Router {
     pub fn spawn(cfg: ServeConfig, n: usize) -> Router {
         assert!(n >= 1);
         let replicas = (0..n).map(|_| Replica::spawn(cfg.clone())).collect();
-        Router { replicas, rr: AtomicU64::new(0), next_id: AtomicU64::new(1) }
+        Router { replicas, cfg, rr: AtomicU64::new(0), next_id: AtomicU64::new(1) }
     }
 
     /// Number of replicas.
     pub fn replica_count(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// Per-request progress deadline (ms between events; 0 = none). The
+    /// server's event-streaming loop enforces this so a wedged replica
+    /// surfaces as a clean timeout failure instead of a hung connection.
+    pub fn request_deadline_ms(&self) -> u64 {
+        self.cfg.serving.request_deadline_ms
+    }
+
+    /// Worker respawns consumed across the fleet (supervision telemetry).
+    pub fn total_respawns(&self) -> u32 {
+        self.replicas.iter().map(|r| r.respawn_count()).sum()
     }
 
     /// Allocate a request id.

@@ -45,6 +45,7 @@ use crate::model::maintain::{
 use crate::model::weights::Weights;
 use crate::runtime::{literal_to_f32, Runtime};
 use crate::tensor::Matrix;
+use crate::util::contain::contained;
 use crate::util::parallel;
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -544,8 +545,18 @@ impl Engine {
     ///
     /// Errors are isolated per slot: a failing session yields `Err` in
     /// its result position and drops out of later phases; the rest of
-    /// the wave completes. Fused-phase wall time is attributed to each
-    /// live session's breakdown in equal shares.
+    /// the wave completes. **Panics in the serial per-slot phases are
+    /// contained the same way** ([`contained`]): the panicking slot
+    /// becomes its `Err` and the survivors — whose per-item computation
+    /// is untouched by construction — finish bit-identically. Panics
+    /// inside the FUSED phases (`par_map` pools) have no per-slot
+    /// attribution and propagate; the coordinator's whole-wave backstop
+    /// catches those. Fused-phase wall time is attributed to each live
+    /// session's breakdown in equal shares.
+    ///
+    /// Fault-injection site `wave.decode` fires in the per-slot embed
+    /// phase (the first serial phase), so an injected error or panic
+    /// lands on exactly one deterministic slot.
     pub fn decode_wave(&self, items: &mut [WaveItem]) -> Vec<Result<DecodeOutput>> {
         let n = items.len();
         let spec = self.spec().clone();
@@ -571,13 +582,14 @@ impl Engine {
                 it.sess.host_ids.resize_with(spec.q_heads, Vec::new);
             }
             let t = PhaseTimer::start();
-            let r = (|| -> Result<Vec<f32>> {
+            let r = contained("wave embed step", || -> Result<Vec<f32>> {
+                crate::util::failpoint::trigger("wave.decode")?;
                 let pos = crate::model::position_code(&spec, it.sess.len);
                 let id_b = self.rt.upload_i32(&[it.token as i32], &[1])?;
                 let pos_b = self.rt.upload_f32(&pos, &[1, spec.d_model])?;
                 let outs = self.rt.exec_b("embed_b1", &[&self.lits.table, &id_b, &pos_b])?;
                 literal_to_f32(&outs[0])
-            })();
+            });
             t.stop_into(&mut bds[s].other);
             match r {
                 Ok(x) => xs[s] = x,
@@ -594,7 +606,7 @@ impl Engine {
                     continue;
                 }
                 let t = PhaseTimer::start();
-                let r = (|| -> Result<Vec<f32>> {
+                let r = contained("wave qkv step", || -> Result<Vec<f32>> {
                     let x_b = self.rt.upload_f32(&xs[s], &[1, spec.d_model])?;
                     let outs =
                         self.rt.exec_b("qkv_b1", &[&x_b, &ll.g, &ll.wq, &ll.wk, &ll.wv])?;
@@ -617,7 +629,7 @@ impl Engine {
                         );
                     }
                     Ok(q)
-                })();
+                });
                 t.stop_into(&mut bds[s].other);
                 let q = match r {
                     Ok(q) => q,
@@ -627,7 +639,9 @@ impl Engine {
                     }
                 };
                 let t = PhaseTimer::start();
-                match self.device_partial(&it.sess.caches[layer], &q, &spec) {
+                match contained("wave device-partial step", || {
+                    self.device_partial(&it.sess.caches[layer], &q, &spec)
+                }) {
                     Ok((o, l)) => {
                         o_devs[s] = o;
                         lse_devs[s] = l;
@@ -796,7 +810,7 @@ impl Engine {
                 }
                 t.stop_into(&mut bds[s].attention);
                 let t = PhaseTimer::start();
-                let r = (|| -> Result<Vec<f32>> {
+                let r = contained("wave post/ffn step", || -> Result<Vec<f32>> {
                     let x_b = self.rt.upload_f32(&xs[s], &[1, spec.d_model])?;
                     let attn_b = self.rt.upload_f32(&attn, &[1, spec.q_heads * dh])?;
                     let outs = self.rt.exec_b(
@@ -804,7 +818,7 @@ impl Engine {
                         &[&x_b, &attn_b, &ll.wo, &ll.g2, &ll.w1, &ll.w3, &ll.w2],
                     )?;
                     literal_to_f32(&outs[0])
-                })();
+                });
                 t.stop_into(&mut bds[s].other);
                 match r {
                     Ok(x) => {
@@ -826,7 +840,7 @@ impl Engine {
                 continue;
             }
             let t = PhaseTimer::start();
-            let next = match self.lm_head(&xs[s]) {
+            let next = match contained("wave lm-head step", || self.lm_head(&xs[s])) {
                 Ok(tok) => tok,
                 Err(e) => {
                     out.push(Err(e));
@@ -1392,10 +1406,9 @@ impl Engine {
     }
 
     /// [`Engine::snapshot_session`] at an explicit format version. The
-    /// only other supported version is the previous one (v1, no per-head
-    /// policy section) — kept writable so the cross-version restore path
-    /// stays testable against bytes this build produced itself. A v1
-    /// image cannot represent streaming heads and refuses to try.
+    /// only other supported version is the previous one (v2, no
+    /// checksummed footer) — kept writable so the cross-version restore
+    /// path stays testable against bytes this build produced itself.
     pub fn snapshot_session_versioned(
         &self,
         sess: &mut Session,
@@ -1403,13 +1416,10 @@ impl Engine {
         version: u32,
     ) -> Result<u64> {
         anyhow::ensure!(
-            version == crate::store::VERSION || version == crate::store::V1,
+            version == crate::store::VERSION || version == crate::store::V2,
             "cannot write snapshot format v{version}"
         );
-        anyhow::ensure!(
-            version >= crate::store::VERSION || sess.policy.num_streaming() == 0,
-            "v1 snapshots cannot carry streaming heads"
-        );
+        crate::util::failpoint::trigger("codec.snapshot")?;
         sess.flush_maintenance();
         let spec = self.spec().clone();
         anyhow::ensure!(
@@ -1435,20 +1445,18 @@ impl Engine {
         w.u64(sess.drained_tokens)?;
         w.u64(sess.drains)?;
         w.bool(sess.had_removals)?;
-        // v2: the per-head policy section (assignment vector, released
+        // v2+: the per-head policy section (assignment vector, released
         // bytes, any in-flight calibration). Streaming heads then persist
         // as two lengths in the retriever section below — their index
         // state simply does not exist to be written.
-        if version >= 2 {
-            crate::store::save_policy(&mut w, &sess.policy)?;
-            w.u64(sess.index_bytes_avoided)?;
-            w.bool(sess.calib.is_some())?;
-            if let Some(c) = &sess.calib {
-                w.usize(c.steps_done)?;
-                w.usize(c.target_steps)?;
-                for layer in &c.mass {
-                    w.f32s(layer)?;
-                }
+        crate::store::save_policy(&mut w, &sess.policy)?;
+        w.u64(sess.index_bytes_avoided)?;
+        w.bool(sess.calib.is_some())?;
+        if let Some(c) = &sess.calib {
+            w.usize(c.steps_done)?;
+            w.usize(c.target_steps)?;
+            for layer in &c.mass {
+                w.f32s(layer)?;
             }
         }
         for layer in 0..spec.layers {
@@ -1495,6 +1503,11 @@ impl Engine {
                 }
             }
         }
+        // v3: close with the checksummed footer — the payload above is
+        // byte-identical to v2, so the compat writer just stops here.
+        if version >= 3 {
+            w.write_footer()?;
+        }
         Ok(w.bytes_written())
     }
 
@@ -1511,14 +1524,14 @@ impl Engine {
         anyhow::ensure!(&magic == crate::store::MAGIC, "not a session snapshot");
         let version = r.u32()?;
         // Version policy: the current format plus a read path for the
-        // immediately preceding one (v1 = no policy section ⇒ every head
-        // restores as Retrieval); anything else is refused and the caller
-        // re-prefills.
+        // immediately preceding one (v2 = same payload, no checksummed
+        // footer); anything else is refused and the caller re-prefills.
         anyhow::ensure!(
-            version == crate::store::VERSION || version == crate::store::V1,
+            version == crate::store::VERSION || version == crate::store::V2,
             "snapshot format v{version} != supported v{} (version policy: refuse, re-prefill)",
             crate::store::VERSION
         );
+        crate::util::failpoint::trigger("codec.restore")?;
         for (name, want) in [
             ("layers", spec.layers),
             ("q_heads", spec.q_heads),
@@ -1541,28 +1554,24 @@ impl Engine {
         let drained_tokens = r.u64()?;
         let drains = r.u64()?;
         let had_removals = r.bool()?;
-        let (policy, index_bytes_avoided, calib) = if version >= 2 {
-            let policy = crate::store::load_policy(&mut r, spec.layers, spec.q_heads)?;
-            let bytes_avoided = r.u64()?;
-            let calib = if r.bool()? {
-                let steps_done = r.usize()?;
-                let target_steps = r.usize()?;
-                let mut mass = Vec::with_capacity(spec.layers);
-                for _ in 0..spec.layers {
-                    let row = r.f32s()?;
-                    anyhow::ensure!(
-                        row.len() == spec.q_heads,
-                        "snapshot calibration row width mismatch"
-                    );
-                    mass.push(row);
-                }
-                Some(Calibrator { steps_done, target_steps, mass })
-            } else {
-                None
-            };
-            (policy, bytes_avoided, calib)
+        // v2+ payload: the per-head policy section.
+        let policy = crate::store::load_policy(&mut r, spec.layers, spec.q_heads)?;
+        let index_bytes_avoided = r.u64()?;
+        let calib = if r.bool()? {
+            let steps_done = r.usize()?;
+            let target_steps = r.usize()?;
+            let mut mass = Vec::with_capacity(spec.layers);
+            for _ in 0..spec.layers {
+                let row = r.f32s()?;
+                anyhow::ensure!(
+                    row.len() == spec.q_heads,
+                    "snapshot calibration row width mismatch"
+                );
+                mass.push(row);
+            }
+            Some(Calibrator { steps_done, target_steps, mass })
         } else {
-            (PolicyMap::all_retrieval(spec.layers, spec.q_heads), 0, None)
+            None
         };
         let mut caches: Vec<Vec<TieredKvCache>> = Vec::with_capacity(spec.layers);
         for _ in 0..spec.layers {
@@ -1621,6 +1630,11 @@ impl Engine {
             // retriever construction.
             self.build_retrievers_with(&caches, &q_history, method, &policy)?
         };
+        // v3: verify the checksummed footer before handing anything back —
+        // a parse that "succeeded" over flipped bits dies here, cleanly.
+        if version >= 3 {
+            r.verify_footer()?;
+        }
         Ok(Session {
             method,
             caches,

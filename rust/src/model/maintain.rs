@@ -153,6 +153,18 @@ pub fn run_drain(j: &DrainJob) -> Done {
             ok: false,
         };
     }
+    // Fault-injection site: an injected failure here lands BEFORE the
+    // publish below, so it exercises exactly the documented clean-retry
+    // path (ok: false, nothing mutated, engine retries on a later step).
+    if crate::util::failpoint::trigger("maint.drain.publish").is_err() {
+        return Done {
+            layer: j.layer,
+            kvh: j.kvh,
+            kind: DoneKind::Drained { upto: j.upto, count },
+            swap_s: t.elapsed().as_secs_f64(),
+            ok: false,
+        };
+    }
     // Publish the id map first, then the grown store, then the per-head
     // index fronts: a decode reader that observes a swapped index always
     // finds every dense id mapped (snapshot order is the reverse).
@@ -272,6 +284,12 @@ pub fn run_compact(j: &CompactJob) -> Done {
     let new_ids: Vec<u32> = keep.iter().map(|&o| old_map.ids[o as usize]).collect();
     let new_store = plan.store.clone();
     let plan = Arc::new(plan);
+    // Fault-injection site: fires before `publish_remap`, the epoch's
+    // first mutation — an injected failure is a clean skipped epoch
+    // (ok: false), re-triggered by the next eviction/drain.
+    if crate::util::failpoint::trigger("maint.compact.publish").is_err() {
+        return fail(t);
+    }
     j.group.publish_remap(new_ids, new_store, gen);
     let heads: Vec<usize> = (0..j.heads.len()).collect();
     let oks: Vec<bool> = parallel::par_map(&heads, |&h| j.heads[h].apply_remap(&plan));
@@ -304,6 +322,41 @@ fn run_job(job: &Job) -> Option<Done> {
     }
 }
 
+/// [`run_job`] with panic containment: a panic inside a maintenance job
+/// must not kill the worker thread (stranding every later job of the
+/// session in the queue) or unwind into the token path (the inline
+/// fallback runs on the decode thread). The panicked job is reported as
+/// its own `ok: false` completion — the documented clean-retry shape —
+/// synthesized from the job's metadata, so depth accounting and the
+/// engine's in-flight-group bookkeeping stay exact. (The publish
+/// operations inside the jobs are generation-counted atomic swaps with
+/// validate-before-publish discipline, so "retry later" is safe even for
+/// a panic that fired mid-job.) A barrier cannot panic, but the arm
+/// still answers it — a lost flush reply would deadlock `shutdown`.
+fn run_job_contained(job: &Job) -> Option<Done> {
+    match crate::util::contain::contained("maintenance job", || Ok(run_job(job))) {
+        Ok(done) => done,
+        Err(_) => {
+            let (layer, kvh, kind) = match job {
+                Job::Drain(j) => (
+                    j.layer,
+                    j.kvh,
+                    DoneKind::Drained { upto: j.upto, count: j.ids.len() as u64 },
+                ),
+                Job::Evict(j) => {
+                    (j.layer, j.kvh, DoneKind::Evicted { count: j.ids.len() as u64 })
+                }
+                Job::Compact(j) => (j.layer, j.kvh, DoneKind::Compacted { dropped: 0 }),
+                Job::Barrier(tx) => {
+                    let _ = tx.send(());
+                    return None;
+                }
+            };
+            Some(Done { layer, kvh, kind, swap_s: 0.0, ok: false })
+        }
+    }
+}
+
 /// Handle to one session's maintenance thread.
 struct WorkerHandle {
     tx: Option<Sender<Job>>,
@@ -326,7 +379,7 @@ impl WorkerHandle {
         let spawned = std::thread::Builder::new().name("kv-maintenance".into()).spawn(move || {
             while let Ok(job) = rx.recv() {
                 let counted = !matches!(job, Job::Barrier(_));
-                let done = run_job(&job);
+                let done = run_job_contained(&job);
                 if counted {
                     // SeqCst pairs with the submit-side fetch_add: the
                     // decrement happens only after the job fully executed,
@@ -357,7 +410,7 @@ impl WorkerHandle {
             // No worker thread (spawn refused at construction): run the
             // job synchronously. Nothing is ever queued on this path, so
             // depth accounting stays at zero by construction.
-            if let Some(done) = run_job(&job) {
+            if let Some(done) = run_job_contained(&job) {
                 let _ = self.done_tx.send(done);
             }
             return;

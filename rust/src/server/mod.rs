@@ -102,7 +102,7 @@ fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
             Ok(req) => {
                 let id = req.id;
                 let events = router.submit(req);
-                stream_events(&mut out, id, events)?;
+                stream_events(&mut out, id, events, router.request_deadline_ms())?;
             }
             Err(e) => {
                 let mut o = Value::obj();
@@ -142,10 +142,33 @@ fn parse_request(line: &str, id: u64) -> Result<Request> {
     Ok(Request { id, prompt, max_tokens, session })
 }
 
-fn stream_events(out: &mut TcpStream, id: u64, events: mpsc::Receiver<Event>) -> Result<()> {
+/// Stream one request's events onto the wire. `deadline_ms > 0` bounds
+/// the gap between consecutive events (`serving.request_deadline_ms`): a
+/// replica that stops making progress — dead but connected — surfaces as
+/// a clean error event instead of a connection that hangs forever.
+fn stream_events(
+    out: &mut TcpStream,
+    id: u64,
+    events: mpsc::Receiver<Event>,
+    deadline_ms: u64,
+) -> Result<()> {
     let mut tokens: Vec<u32> = Vec::new();
     loop {
-        match events.recv() {
+        let next = if deadline_ms == 0 {
+            events.recv().map_err(|_| mpsc::RecvTimeoutError::Disconnected)
+        } else {
+            events.recv_timeout(std::time::Duration::from_millis(deadline_ms))
+        };
+        match next {
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let mut o = Value::obj();
+                o.set("event", "error").set("id", id).set(
+                    "message",
+                    format!("request deadline exceeded ({deadline_ms} ms without progress)"),
+                );
+                writeln!(out, "{}", o.to_string())?;
+                return Ok(());
+            }
             Ok(Event::Token(_, t)) => {
                 tokens.push(t);
                 let mut o = Value::obj();
@@ -191,7 +214,7 @@ fn stream_events(out: &mut TcpStream, id: u64, events: mpsc::Receiver<Event>) ->
                 writeln!(out, "{}", o.to_string())?;
                 return Ok(());
             }
-            Err(_) => {
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
                 let mut o = Value::obj();
                 o.set("event", "error").set("id", id).set("message", "replica dropped");
                 writeln!(out, "{}", o.to_string())?;
@@ -212,6 +235,16 @@ impl Client {
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    /// Client-side per-read deadline: if the server goes `deadline_ms`
+    /// without sending a line, `roundtrip` fails with a clean deadline
+    /// error instead of blocking forever on a dead-but-connected server.
+    /// `0` clears the deadline.
+    pub fn set_deadline(&mut self, deadline_ms: u64) -> Result<()> {
+        let t = (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
+        self.reader.get_ref().set_read_timeout(t).context("set client read deadline")?;
+        Ok(())
     }
 
     /// Send one request and block until done; returns (tokens, done-object).
@@ -267,7 +300,17 @@ impl Client {
         let mut line = String::new();
         loop {
             line.clear();
-            if self.reader.read_line(&mut line)? == 0 {
+            let n = self.reader.read_line(&mut line).map_err(|e| {
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) {
+                    anyhow::anyhow!("client deadline exceeded waiting for server")
+                } else {
+                    anyhow::Error::from(e)
+                }
+            })?;
+            if n == 0 {
                 anyhow::bail!("server closed connection");
             }
             let v = json::parse(line.trim())?;

@@ -19,16 +19,29 @@
 //!                                   └────────── closed / evicted ──┘
 //! ```
 //!
+//! The spill tier is **durable** (ROADMAP item 4(b)): parks publish
+//! atomically (write-temp → fsync → rename, via [`super::spill`]), every
+//! snapshot carries the v3 checksummed footer, and construction runs a
+//! **boot scan** that re-registers `session-<id>.ras` files already in a
+//! configured `spill_dir` — parked sessions survive a crash or deploy. A
+//! snapshot that fails restore verification is **quarantined** (renamed
+//! `.corrupt`, entry dropped, clean error) — never a panic, and never a
+//! silent half-restored session. Transient IO (open/write) retries with
+//! bounded backoff (`spill_retries` / `spill_retry_backoff_ms`) before
+//! surfacing. Scratch behaviour — delete everything on drop — is the
+//! opt-in `ephemeral_spill` knob, and is forced only when `spill_dir` is
+//! empty (the per-process temp directory can never be rediscovered).
+//!
 //! One cache per replica worker: sessions never cross replica boundaries
 //! (the router pins a session id to its replica), so no locking is needed
 //! — the worker thread owns the whole registry.
 
+use super::spill;
 use crate::config::SessionCacheConfig;
 use crate::model::{Engine, Session};
 use crate::util::sync::{AtomicU64, Ordering};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
-use std::io::Write;
 use std::path::PathBuf;
 use std::time::Instant;
 
@@ -43,6 +56,10 @@ pub struct SessionCacheStats {
     pub park_bytes_total: u64,
     /// Inserts refused because the disk budget was exhausted.
     pub backpressure_rejects: u64,
+    /// Parked sessions re-registered by the boot scan (restart recovery).
+    pub recovered: u64,
+    /// Corrupt snapshots quarantined on a failed restore.
+    pub quarantines: u64,
 }
 
 struct Resident {
@@ -72,6 +89,9 @@ pub struct ResumedSession {
 pub struct SessionCache {
     cfg: SessionCacheConfig,
     spill_dir: PathBuf,
+    /// Delete parked snapshots (and the dir) on drop. Forced on for the
+    /// per-process default dir; the knob for configured dirs.
+    ephemeral: bool,
     resident: HashMap<u64, Resident>,
     parked: HashMap<u64, Parked>,
     disk_bytes: u64,
@@ -81,26 +101,54 @@ pub struct SessionCache {
 
 impl SessionCache {
     pub fn new(cfg: SessionCacheConfig) -> SessionCache {
-        let spill_dir = if cfg.spill_dir.is_empty() {
+        let (spill_dir, ephemeral) = if cfg.spill_dir.is_empty() {
             // Per-instance default: two replicas of one process must not
             // collide on `session-<id>.ras` names (the router pins ids to
             // replicas, but nothing forces distinct configured dirs).
             // Relaxed (allowlisted counter): only uniqueness matters.
+            // Always ephemeral: no future boot could ever find this dir.
             static SEQ: AtomicU64 = AtomicU64::new(0);
             let seq = SEQ.fetch_add(1, Ordering::Relaxed);
-            std::env::temp_dir().join(format!("ra-sessions-{}-{seq}", std::process::id()))
+            let dir =
+                std::env::temp_dir().join(format!("ra-sessions-{}-{seq}", std::process::id()));
+            (dir, true)
         } else {
-            PathBuf::from(&cfg.spill_dir)
+            (PathBuf::from(&cfg.spill_dir), cfg.ephemeral_spill)
         };
-        SessionCache {
+        let mut cache = SessionCache {
             cfg,
             spill_dir,
+            ephemeral,
             resident: HashMap::new(),
             parked: HashMap::new(),
             disk_bytes: 0,
             clock: 0,
             stats: SessionCacheStats::default(),
+        };
+        cache.boot_scan();
+        cache
+    }
+
+    /// Restart recovery: re-register parked snapshots already present in
+    /// the spill dir (a previous process parked them, then crashed or
+    /// deployed away). Registration is by name and size only — the
+    /// snapshot's integrity is proven by its checksummed footer on the
+    /// resume path, where a bad file is quarantined instead of trusted.
+    /// Orphaned `.tmp` files (a crash mid-publish) are deleted by the
+    /// scan; quarantined `.corrupt` files are left untouched.
+    fn boot_scan(&mut self) {
+        let scanned = spill::scan_dir(&self.spill_dir).unwrap_or_default();
+        for s in scanned {
+            self.disk_bytes += s.bytes;
+            self.parked.insert(s.id, Parked { path: s.path, bytes: s.bytes });
+            self.stats.recovered += 1;
         }
+    }
+
+    /// Where this cache parks sessions (resolved once at construction;
+    /// a respawned replica worker re-opens the same directory).
+    pub fn spill_dir(&self) -> &std::path::Path {
+        &self.spill_dir
     }
 
     pub fn resident_count(&self) -> usize {
@@ -143,7 +191,10 @@ impl SessionCache {
         if spilled.is_err() {
             self.resident.remove(&id);
         }
-        spilled
+        // The failing park names its victim: "insert rejected" alone is
+        // useless when the session that overflowed the budget is not the
+        // one that was being parked.
+        spilled.with_context(|| format!("insert of session {id} forced a failing spill"))
     }
 
     fn spill_over_budget(&mut self, engine: &Engine) -> Result<()> {
@@ -152,12 +203,18 @@ impl SessionCache {
             // An empty resident set has zero resident_bytes, so a missing
             // victim means the loop condition is about to go false anyway.
             let Some(victim) = victim else { break };
-            self.park(engine, victim)?;
+            self.park(engine, victim)
+                .with_context(|| format!("parking LRU victim session {victim}"))?;
         }
         Ok(())
     }
 
-    /// Park one resident session to disk via the snapshot format.
+    /// Park one resident session to disk via the snapshot format, through
+    /// the atomic spill-publication path (temp → fsync → rename): a crash
+    /// at any point leaves either the complete snapshot or nothing, and a
+    /// failed write leaves no temp litter. Transient IO errors retry with
+    /// bounded backoff before the park fails; a failed park puts the
+    /// session back resident — a park must never lose state.
     fn park(&mut self, engine: &Engine, id: u64) -> Result<u64> {
         let mut entry = self.resident.remove(&id).context("park: unknown session")?;
         // Estimate-based pre-check: when the budget is already exhausted,
@@ -176,31 +233,32 @@ impl SessionCache {
                 self.cfg.max_disk_bytes
             );
         }
-        std::fs::create_dir_all(&self.spill_dir)
-            .with_context(|| format!("create spill dir {}", self.spill_dir.display()))?;
-        let path = self.spill_dir.join(format!("session-{id}.ras"));
-        let file = std::fs::File::create(&path)
-            .with_context(|| format!("create spill file {}", path.display()))?;
-        let mut buf = std::io::BufWriter::new(file);
+        let written = spill::ensure_dir(&self.spill_dir).and_then(|()| {
+            spill::with_retries(
+                "park session snapshot",
+                self.cfg.spill_retries,
+                self.cfg.spill_retry_backoff_ms,
+                || {
+                    spill::write_atomic(&self.spill_dir, id, |w| {
+                        engine.snapshot_session(&mut entry.sess, w)
+                    })
+                },
+            )
+        });
         // A failed write (disk genuinely full, I/O error) must never lose
         // the session: put it back resident and surface the error.
-        let written = engine
-            .snapshot_session(&mut entry.sess, &mut buf)
-            .and_then(|b| buf.flush().context("flush spill file").map(|()| b));
-        let bytes = match written {
-            Ok(b) => b,
+        let (path, bytes) = match written {
+            Ok(pb) => pb,
             Err(e) => {
-                std::fs::remove_file(&path).ok();
                 self.resident.insert(id, entry);
                 self.stats.backpressure_rejects += 1;
                 return Err(e);
             }
         };
-        drop(buf);
         if self.disk_bytes.saturating_add(bytes) > self.cfg.max_disk_bytes as u64 {
             // Backpressure: undo the write, keep the session resident, and
             // surface the rejection — never silently lose session state.
-            std::fs::remove_file(&path).ok();
+            spill::remove(&path);
             self.resident.insert(id, entry);
             self.stats.backpressure_rejects += 1;
             bail!(
@@ -219,6 +277,15 @@ impl SessionCache {
     /// Hand a session back for its next turn: resident hit (free), disk
     /// resume (snapshot restore, no re-prefill, no index rebuild), or
     /// `None` for an unknown id.
+    ///
+    /// Disk-path failure semantics: an **open** failure is treated as
+    /// transient — retried with backoff, and on final failure the parked
+    /// entry stays registered (its snapshot is intact; the caller can
+    /// retry the turn). A failure **inside the restore** — bad magic,
+    /// refused version, parse error, checksum/footer mismatch — is
+    /// corruption: the file is quarantined (`.corrupt`, bytes preserved
+    /// for diagnosis), the entry is dropped, and a clean error surfaces.
+    /// The caller fails the one request; the replica keeps serving.
     pub fn take(&mut self, engine: &Engine, id: u64) -> Result<Option<ResumedSession>> {
         self.clock += 1;
         if let Some(e) = self.resident.remove(&id) {
@@ -229,21 +296,35 @@ impl SessionCache {
                 snapshot_bytes: 0,
             }));
         }
-        // Leave the parked entry in place until the restore SUCCEEDS: a
-        // transient open/read failure must not orphan the spill file,
-        // leak its disk_bytes accounting, or destroy a session whose
-        // snapshot is intact (the caller can simply retry the turn).
         let Some(p) = self.parked.get(&id) else {
             return Ok(None);
         };
         let (path, bytes) = (p.path.clone(), p.bytes);
+        // Transient-shaped injection point for the whole resume step.
+        crate::util::failpoint::trigger("session.restore")?;
         let t = Instant::now();
-        let file = std::fs::File::open(&path)
-            .with_context(|| format!("open spill file {}", path.display()))?;
+        let file = spill::with_retries(
+            "open parked snapshot",
+            self.cfg.spill_retries,
+            self.cfg.spill_retry_backoff_ms,
+            || spill::open_for_read(&path),
+        )?;
         let mut buf = std::io::BufReader::new(file);
-        let sess = engine.restore_session(&mut buf)?;
+        let sess = match engine.restore_session(&mut buf) {
+            Ok(sess) => sess,
+            Err(e) => {
+                let q = spill::quarantine(&path);
+                self.parked.remove(&id);
+                self.disk_bytes = self.disk_bytes.saturating_sub(bytes);
+                self.stats.quarantines += 1;
+                return Err(e.context(format!(
+                    "session {id} snapshot failed restore; quarantined at {}",
+                    q.display()
+                )));
+            }
+        };
         self.parked.remove(&id);
-        std::fs::remove_file(&path).ok();
+        spill::remove(&path);
         self.disk_bytes = self.disk_bytes.saturating_sub(bytes);
         self.stats.resumes += 1;
         Ok(Some(ResumedSession {
@@ -264,7 +345,7 @@ impl SessionCache {
 
     fn drop_parked(&mut self, id: u64) -> bool {
         if let Some(p) = self.parked.remove(&id) {
-            std::fs::remove_file(&p.path).ok();
+            spill::remove(&p.path);
             self.disk_bytes = self.disk_bytes.saturating_sub(p.bytes);
             true
         } else {
@@ -275,13 +356,18 @@ impl SessionCache {
 
 impl Drop for SessionCache {
     fn drop(&mut self) {
-        // Best-effort hygiene: spill files are per-process scratch, not a
-        // restart-recovery log (that is a named ROADMAP follow-up), so a
-        // dying replica cleans its own litter.
+        // Durable tier (the default for a configured spill_dir): parked
+        // snapshots OUTLIVE this process — the next boot's scan
+        // re-registers them. Only the opt-in ephemeral mode (and the
+        // per-process temp default, which no boot could rediscover)
+        // cleans up after itself.
+        if !self.ephemeral {
+            return;
+        }
         let ids: Vec<u64> = self.parked.keys().copied().collect();
         for id in ids {
             self.drop_parked(id);
         }
-        std::fs::remove_dir(&self.spill_dir).ok();
+        spill::remove_dir(&self.spill_dir);
     }
 }

@@ -9,6 +9,14 @@
 //! by per-field sanity limits at the call sites, never by trusting a
 //! length prefix to allocate unbounded memory: [`SnapReader::u32s`] and
 //! friends cap a single vector at [`MAX_VEC_LEN`] elements.
+//!
+//! Both endpoints additionally maintain a **running FNV-1a/64 checksum**
+//! over every byte they move. A v3 snapshot closes with a checksummed
+//! footer ([`SnapWriter::write_footer`] / [`SnapReader::verify_footer`]):
+//! footer magic, the payload length, and the payload checksum. The footer
+//! turns "parse happened to succeed" into "these are bit-for-bit the
+//! bytes that were written" — a truncated or bit-flipped spill file fails
+//! the verify cleanly instead of restoring a subtly wrong index.
 
 use crate::tensor::Matrix;
 use anyhow::{bail, Context, Result};
@@ -21,15 +29,35 @@ pub const MAX_VEC_LEN: u64 = 1 << 30;
 /// Elements per stack-buffered encode/decode chunk (16 KB of bytes).
 const CHUNK_ELEMS: usize = 4096;
 
-/// Byte-counting writer over any `io::Write` sink.
+/// Footer magic ("RetrievalAttention Snapshot Footer"). Distinct from the
+/// header magic so a truncated-at-zero file can never alias a footer.
+pub const FOOTER_MAGIC: &[u8; 4] = b"RASF";
+
+/// On-disk footer size: magic + payload length (u64) + checksum (u64).
+pub const FOOTER_LEN: u64 = 4 + 8 + 8;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv1a(mut h: u64, data: &[u8]) -> u64 {
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Byte-counting, checksumming writer over any `io::Write` sink.
 pub struct SnapWriter<'a> {
     w: &'a mut dyn Write,
     bytes: u64,
+    sum: u64,
 }
 
 impl<'a> SnapWriter<'a> {
     pub fn new(w: &'a mut dyn Write) -> SnapWriter<'a> {
-        SnapWriter { w, bytes: 0 }
+        SnapWriter { w, bytes: 0, sum: FNV_OFFSET }
     }
 
     /// Bytes written so far (the done-event's `snapshot_bytes`).
@@ -37,10 +65,26 @@ impl<'a> SnapWriter<'a> {
         self.bytes
     }
 
+    /// Running FNV-1a/64 over every byte written so far.
+    pub fn checksum(&self) -> u64 {
+        self.sum
+    }
+
     pub fn raw(&mut self, data: &[u8]) -> Result<()> {
         self.w.write_all(data).context("snapshot write")?;
         self.bytes += data.len() as u64;
+        self.sum = fnv1a(self.sum, data);
         Ok(())
+    }
+
+    /// Close a v3 snapshot: capture (payload length, payload checksum)
+    /// and append the footer. Must be the writer's last call — anything
+    /// written after it would sit outside the verified region.
+    pub fn write_footer(&mut self) -> Result<()> {
+        let (len, sum) = (self.bytes, self.sum);
+        self.raw(FOOTER_MAGIC)?;
+        self.raw(&len.to_le_bytes())?;
+        self.raw(&sum.to_le_bytes())
     }
 
     pub fn u8(&mut self, v: u8) -> Result<()> {
@@ -124,18 +168,54 @@ impl<'a> SnapWriter<'a> {
     }
 }
 
-/// Checked reader over any `io::Read` source.
+/// Checked, checksumming reader over any `io::Read` source.
 pub struct SnapReader<'a> {
     r: &'a mut dyn Read,
+    bytes: u64,
+    sum: u64,
 }
 
 impl<'a> SnapReader<'a> {
     pub fn new(r: &'a mut dyn Read) -> SnapReader<'a> {
-        SnapReader { r }
+        SnapReader { r, bytes: 0, sum: FNV_OFFSET }
+    }
+
+    /// Bytes consumed so far.
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes
     }
 
     pub fn raw(&mut self, buf: &mut [u8]) -> Result<()> {
-        self.r.read_exact(buf).context("snapshot read (truncated?)")
+        self.r.read_exact(buf).context("snapshot read (truncated?)")?;
+        self.bytes += buf.len() as u64;
+        self.sum = fnv1a(self.sum, buf);
+        Ok(())
+    }
+
+    /// Verify a v3 footer against everything read so far. Call exactly
+    /// once, after the last payload field: captures (bytes, checksum),
+    /// then reads and checks the footer. Any mismatch — missing magic,
+    /// length skew (truncation that still parsed), checksum skew (bit
+    /// flips) — is a clean `Err`, never a panic.
+    pub fn verify_footer(&mut self) -> Result<()> {
+        let (len, sum) = (self.bytes, self.sum);
+        let mut magic = [0u8; 4];
+        self.raw(&mut magic).context("snapshot footer missing (truncated?)")?;
+        if &magic != FOOTER_MAGIC {
+            bail!("snapshot footer magic mismatch (corrupt or truncated file)");
+        }
+        let mut b = [0u8; 8];
+        self.raw(&mut b)?;
+        let want_len = u64::from_le_bytes(b);
+        self.raw(&mut b)?;
+        let want_sum = u64::from_le_bytes(b);
+        if want_len != len {
+            bail!("snapshot payload length mismatch: footer says {want_len}, read {len}");
+        }
+        if want_sum != sum {
+            bail!("snapshot checksum mismatch: footer {want_sum:#018x}, computed {sum:#018x}");
+        }
+        Ok(())
     }
 
     pub fn u8(&mut self) -> Result<u8> {
@@ -245,7 +325,11 @@ impl<'a> SnapReader<'a> {
         let rows = self.usize()?;
         let cols = self.usize()?;
         let data = self.f32s()?;
-        if data.len() != rows * cols {
+        // checked_mul: corrupted dims must fail cleanly, not overflow.
+        let want = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow::anyhow!("snapshot matrix dims overflow: {rows}x{cols}"))?;
+        if data.len() != want {
             bail!("snapshot matrix payload {} != {rows}x{cols}", data.len());
         }
         Ok(Matrix::from_vec(rows, cols, data))
@@ -311,5 +395,53 @@ mod tests {
         let mut src = bogus.as_slice();
         let mut r = SnapReader::new(&mut src);
         assert!(r.u32s().is_err());
+    }
+
+    fn footered_payload() -> Vec<u8> {
+        let mut buf: Vec<u8> = Vec::new();
+        let mut w = SnapWriter::new(&mut buf);
+        w.u32s(&[10, 20, 30]).unwrap();
+        w.str("tail").unwrap();
+        w.write_footer().unwrap();
+        buf
+    }
+
+    #[test]
+    fn footer_roundtrips_and_detects_corruption() {
+        let buf = footered_payload();
+        // Clean read: payload fields then a passing verify.
+        let mut src = buf.as_slice();
+        let mut r = SnapReader::new(&mut src);
+        assert_eq!(r.u32s().unwrap(), vec![10, 20, 30]);
+        assert_eq!(r.str().unwrap(), "tail");
+        r.verify_footer().unwrap();
+        assert_eq!(r.bytes_read(), buf.len() as u64);
+        // Any single bit flip in the payload fails the checksum (or the
+        // parse itself); a flip in the footer fails the footer check.
+        for byte in 0..buf.len() {
+            let mut evil = buf.clone();
+            evil[byte] ^= 0x10;
+            let mut src = evil.as_slice();
+            let mut r = SnapReader::new(&mut src);
+            let verdict = r
+                .u32s()
+                .and_then(|_| r.str())
+                .and_then(|_| r.verify_footer());
+            assert!(verdict.is_err(), "bit flip at byte {byte} went undetected");
+        }
+    }
+
+    #[test]
+    fn footer_detects_truncation_at_every_length() {
+        let buf = footered_payload();
+        for keep in 0..buf.len() {
+            let mut src = &buf[..keep];
+            let mut r = SnapReader::new(&mut src);
+            let verdict = r
+                .u32s()
+                .and_then(|_| r.str())
+                .and_then(|_| r.verify_footer());
+            assert!(verdict.is_err(), "truncation to {keep} bytes went undetected");
+        }
     }
 }

@@ -27,29 +27,42 @@
 //!   max_resident_bytes`, LRU-park to `spill_dir` through the snapshot
 //!   format, resume transparently on the next turn, and reject with
 //!   backpressure when `max_disk_bytes` is exhausted.
+//! * [`spill`] — the durable spill-tier IO discipline under the cache:
+//!   atomic write-temp → fsync → rename publication, quarantine of
+//!   corrupt snapshots, boot-time directory scans for restart recovery,
+//!   and bounded retry for transient IO (see docs/robustness.md).
 //!
 //! ## Format version policy
 //!
 //! Every snapshot opens with [`MAGIC`] + [`VERSION`]. The version bumps on
 //! ANY layout change. Readers accept the current version plus a
-//! read-compat path for the immediately preceding one ([`V1`] images have
-//! no per-head policy section; every head restores as `Retrieval`) and
-//! refuse anything else outright (a parked session from another build
-//! re-pays its prefill rather than risk a silently-misparsed index).
-//! Family and retriever tags are append-only: tags are never reused or
-//! renumbered within a version.
+//! read-compat path for the immediately preceding one ([`V2`] images have
+//! no checksummed footer; anything older is refused outright — a parked
+//! session from another build re-pays its prefill rather than risk a
+//! silently-misparsed index). Family and retriever tags are append-only:
+//! tags are never reused or renumbered within a version.
 //!
-//! v2 (this version) adds, immediately after the `had_removals` flag: the
-//! per-head policy vector ([`save_policy`]), the session's released index
-//! bytes, and any in-flight calibration pass. Streaming heads persist in
-//! the retriever section as a tag plus two window lengths — their index
+//! v2 added, immediately after the `had_removals` flag: the per-head
+//! policy vector ([`save_policy`]), the session's released index bytes,
+//! and any in-flight calibration pass. Streaming heads persist in the
+//! retriever section as a tag plus two window lengths — their index
 //! state does not exist, which is exactly the snapshot-bytes saving.
+//!
+//! v3 (this version) appends the checksummed footer
+//! ([`codec::SnapWriter::write_footer`]): footer magic + payload length +
+//! FNV-1a/64 payload checksum. The payload layout is byte-identical to
+//! v2 — only the trailer differs — which is what makes the v2 read-compat
+//! path free: restore parses the same fields and simply skips the footer
+//! verify. The footer is what lets the durable spill tier distinguish "a
+//! snapshot this build wrote, bit-for-bit" from "a file that happens to
+//! parse", so crash-recovery boot scans can trust what they find.
 //!
 //! [`Engine::snapshot_session`]: crate::model::Engine::snapshot_session
 //! [`Engine::restore_session`]: crate::model::Engine::restore_session
 
 pub mod cache;
 pub mod codec;
+pub mod spill;
 
 pub use cache::{ResumedSession, SessionCache, SessionCacheStats};
 
@@ -64,12 +77,12 @@ use std::sync::Arc;
 pub const MAGIC: &[u8; 4] = b"RASS";
 
 /// Current snapshot format version (see the module-level version policy).
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 3;
 
 /// The previous format version, still readable (and writable via
 /// [`crate::model::Engine::snapshot_session_versioned`] for the
-/// cross-version restore test): v1 has no per-head policy section.
-pub const V1: u32 = 1;
+/// cross-version restore test): v2 has no checksummed footer.
+pub const V2: u32 = 2;
 
 fn quant_tag(mode: QuantMode) -> u8 {
     match mode {
@@ -108,7 +121,9 @@ pub fn load_store(r: &mut SnapReader<'_>) -> Result<KeyStore> {
     let cols = r.usize()?;
     let quant = quant_from_tag(r.u8()?)?;
     let n_segments = r.usize()?;
-    let mut chunks = Vec::with_capacity(n_segments);
+    // Capacity capped: a corrupted segment count fails on the first
+    // short matrix read instead of committing a giant allocation.
+    let mut chunks = Vec::with_capacity(n_segments.min(4096));
     for _ in 0..n_segments {
         chunks.push(r.matrix()?);
     }

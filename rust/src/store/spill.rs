@@ -1,0 +1,297 @@
+//! Durable spill-tier IO: every byte the session cache moves to or from
+//! disk goes through these helpers (enforced by the `spill-direct-io`
+//! rule in `cargo xtask lint` — no raw `std::fs::` anywhere else under
+//! `store/`).
+//!
+//! The discipline is the classic storage-engine one:
+//!
+//! * **Atomic publication** — [`write_atomic`] writes `session-<id>.ras`
+//!   as temp file → flush → fsync → rename. A reader (including a boot
+//!   scan after a crash) can only ever observe a complete snapshot or no
+//!   snapshot; a crash mid-write leaves a `.tmp` orphan that
+//!   [`scan_dir`] deletes. A *failed* write removes its own temp file —
+//!   no litter accumulates under repeated faults.
+//! * **Quarantine, not deletion** — [`quarantine`] renames a snapshot
+//!   that failed restore verification to `<name>.corrupt`. The bytes are
+//!   evidence (and manual-recovery material); only the registry entry is
+//!   dropped. Quarantined files are invisible to [`scan_dir`].
+//! * **Bounded retry** — [`with_retries`] wraps transient-prone ops
+//!   (open, write) in a bounded exponential-backoff loop, so a blip does
+//!   not fail a park while a hard-down disk still surfaces promptly.
+//!
+//! Fault-injection sites: `spill.write` (temp-file creation/write),
+//! `spill.commit` (between fsync and rename — the simulated
+//! crash-before-publish), `spill.read` (restore-side open). See
+//! docs/robustness.md.
+
+use crate::util::failpoint;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Canonical spill path for a session id.
+pub fn session_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("session-{id}.ras"))
+}
+
+/// Inverse of [`session_path`] on a file *name*: `session-<id>.ras` →
+/// id. Temp, quarantine and foreign files all return `None`.
+pub fn parse_session_name(name: &str) -> Option<u64> {
+    name.strip_prefix("session-")?.strip_suffix(".ras")?.parse().ok()
+}
+
+/// Create the spill directory (and parents) if missing.
+pub fn ensure_dir(dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create spill dir {}", dir.display()))
+}
+
+/// Best-effort file removal (budget-accounting paths tolerate a file
+/// that is already gone).
+pub fn remove(path: &Path) {
+    std::fs::remove_file(path).ok();
+}
+
+/// Best-effort removal of an (empty) spill directory.
+pub fn remove_dir(dir: &Path) {
+    std::fs::remove_dir(dir).ok();
+}
+
+/// Atomically publish a session snapshot: `write` serializes into a
+/// buffered temp file in `dir`, which is then flushed, fsynced, and
+/// renamed to `session-<id>.ras`. Returns the final path and the bytes
+/// `write` reported. On any failure the temp file is removed and the
+/// final path is untouched (either absent, or still the previous
+/// snapshot — a re-park of the same id replaces atomically).
+pub fn write_atomic(
+    dir: &Path,
+    id: u64,
+    write: impl FnOnce(&mut dyn Write) -> Result<u64>,
+) -> Result<(PathBuf, u64)> {
+    let path = session_path(dir, id);
+    let tmp = dir.join(format!("session-{id}.ras.tmp"));
+    let attempt = (|| -> Result<u64> {
+        failpoint::trigger("spill.write")?;
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("create spill temp {}", tmp.display()))?;
+        let mut buf = std::io::BufWriter::new(file);
+        let bytes = write(&mut buf)?;
+        buf.flush().context("flush spill temp")?;
+        let file = buf
+            .into_inner()
+            .map_err(|e| anyhow::anyhow!("flush spill temp {}: {}", tmp.display(), e.error()))?;
+        // fsync before rename: the rename must never publish a name whose
+        // bytes are still only in the page cache when the machine dies.
+        file.sync_all().with_context(|| format!("fsync spill temp {}", tmp.display()))?;
+        drop(file);
+        failpoint::trigger("spill.commit")?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publish spill file {}", path.display()))?;
+        // Best-effort directory fsync so the rename itself is durable.
+        if let Ok(d) = std::fs::File::open(dir) {
+            d.sync_all().ok();
+        }
+        Ok(bytes)
+    })();
+    match attempt {
+        Ok(bytes) => Ok((path, bytes)),
+        Err(e) => {
+            remove(&tmp);
+            Err(e)
+        }
+    }
+}
+
+/// Open a spill file for restore (the instrumented read-side entry).
+pub fn open_for_read(path: &Path) -> Result<std::fs::File> {
+    failpoint::trigger("spill.read")?;
+    std::fs::File::open(path).with_context(|| format!("open spill file {}", path.display()))
+}
+
+/// Quarantine a snapshot that failed restore verification: rename it to
+/// `<name>.corrupt` and return where the bytes now live. Best-effort —
+/// if even the rename fails (read-only filesystem) the original path is
+/// returned and the file left in place; either way the caller drops the
+/// registry entry, so the file can never be restored from again.
+pub fn quarantine(path: &Path) -> PathBuf {
+    let Some(name) = path.file_name() else {
+        return path.to_path_buf();
+    };
+    let mut qname = name.to_os_string();
+    qname.push(".corrupt");
+    let qpath = path.with_file_name(qname);
+    match std::fs::rename(path, &qpath) {
+        Ok(()) => qpath,
+        Err(_) => path.to_path_buf(),
+    }
+}
+
+/// A parked snapshot rediscovered by a boot scan.
+#[derive(Clone, Debug)]
+pub struct ScannedSession {
+    pub id: u64,
+    pub path: PathBuf,
+    /// On-disk size (the restart-recovery disk accounting).
+    pub bytes: u64,
+}
+
+/// Scan a spill directory at boot: rediscover `session-<id>.ras`
+/// snapshots (returned sorted by id for deterministic accounting),
+/// delete orphaned `.tmp` files (a crash between write and rename), and
+/// skip `.corrupt` quarantine files and anything foreign. A missing
+/// directory is an empty scan, not an error.
+pub fn scan_dir(dir: &Path) -> Result<Vec<ScannedSession>> {
+    let mut out = Vec::new();
+    let rd = match std::fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(_) => return Ok(out),
+    };
+    for entry in rd.flatten() {
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if name.starts_with("session-") && name.ends_with(".ras.tmp") {
+            // Crash litter: a temp file that never got renamed holds an
+            // incomplete snapshot by construction. Its session — if it
+            // exists at all — is the previous `.ras` next to it.
+            remove(&path);
+            continue;
+        }
+        let Some(id) = parse_session_name(name) else {
+            continue;
+        };
+        let bytes = entry.metadata().map(|m| m.len()).unwrap_or(0);
+        out.push(ScannedSession { id, path, bytes });
+    }
+    out.sort_by_key(|s| s.id);
+    Ok(out)
+}
+
+/// Run `op` up to `1 + retries` times, sleeping `backoff_ms` (doubling
+/// per attempt) between tries. Transient spill IO — a busy disk, an AV
+/// scanner holding a handle — resolves inside the loop; a hard failure
+/// surfaces the *last* error with the attempt count attached.
+pub fn with_retries<T>(
+    what: &str,
+    retries: usize,
+    backoff_ms: u64,
+    mut op: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let mut attempt = 0usize;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if attempt < retries => {
+                attempt += 1;
+                if backoff_ms > 0 {
+                    let exp = (attempt - 1).min(6) as u32;
+                    std::thread::sleep(std::time::Duration::from_millis(backoff_ms << exp));
+                }
+                let _ = e; // retried: the next failure carries the story
+            }
+            Err(e) => {
+                return Err(e.context(format!("{what} failed after {} attempt(s)", attempt + 1)));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ra-spill-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        let dir = PathBuf::from("/x");
+        assert_eq!(session_path(&dir, 42), PathBuf::from("/x/session-42.ras"));
+        assert_eq!(parse_session_name("session-42.ras"), Some(42));
+        assert_eq!(parse_session_name("session-42.ras.tmp"), None);
+        assert_eq!(parse_session_name("session-42.ras.corrupt"), None);
+        assert_eq!(parse_session_name("other.ras"), None);
+    }
+
+    #[test]
+    fn write_atomic_publishes_or_leaves_nothing() {
+        let dir = tmpdir("atomic");
+        let (path, bytes) = write_atomic(&dir, 7, |w| {
+            w.write_all(b"snapshot bytes").unwrap();
+            Ok(14)
+        })
+        .unwrap();
+        assert_eq!(bytes, 14);
+        assert_eq!(std::fs::read(&path).unwrap(), b"snapshot bytes");
+        assert!(!dir.join("session-7.ras.tmp").exists(), "temp renamed away");
+        // A failing serializer leaves neither temp nor final file...
+        let err = write_atomic(&dir, 8, |_| anyhow::bail!("disk on fire"));
+        assert!(err.is_err());
+        assert!(!dir.join("session-8.ras.tmp").exists(), "failed write removes temp");
+        assert!(!session_path(&dir, 8).exists());
+        // ...and a failing RE-park keeps the previous snapshot intact.
+        let err = write_atomic(&dir, 7, |_| anyhow::bail!("disk on fire"));
+        assert!(err.is_err());
+        assert_eq!(std::fs::read(&path).unwrap(), b"snapshot bytes");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scan_finds_sessions_cleans_tmp_skips_quarantine() {
+        let dir = tmpdir("scan");
+        std::fs::write(session_path(&dir, 3), b"ccc").unwrap();
+        std::fs::write(session_path(&dir, 1), b"a").unwrap();
+        std::fs::write(dir.join("session-9.ras.tmp"), b"partial").unwrap();
+        std::fs::write(dir.join("session-2.ras.corrupt"), b"bad").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"x").unwrap();
+        let scanned = scan_dir(&dir).unwrap();
+        let ids: Vec<u64> = scanned.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![1, 3], "sorted, quarantine and foreign files skipped");
+        assert_eq!(scanned[1].bytes, 3);
+        assert!(!dir.join("session-9.ras.tmp").exists(), "orphan temp deleted");
+        assert!(dir.join("session-2.ras.corrupt").exists(), "quarantine preserved");
+        // Missing directory scans empty.
+        assert!(scan_dir(Path::new("/nonexistent/ra-spill")).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quarantine_renames_and_preserves_bytes() {
+        let dir = tmpdir("quar");
+        let path = session_path(&dir, 5);
+        std::fs::write(&path, b"garbled").unwrap();
+        let q = quarantine(&path);
+        assert_eq!(q, dir.join("session-5.ras.corrupt"));
+        assert!(!path.exists());
+        assert_eq!(std::fs::read(&q).unwrap(), b"garbled");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retries_are_bounded_and_counted() {
+        let mut calls = 0;
+        let ok: Result<u32> = with_retries("op", 3, 0, || {
+            calls += 1;
+            if calls < 3 {
+                anyhow::bail!("transient");
+            }
+            Ok(99)
+        });
+        assert_eq!(ok.unwrap(), 99);
+        assert_eq!(calls, 3, "succeeded on the third attempt");
+        let mut calls = 0;
+        let err: Result<u32> = with_retries("op", 2, 0, || {
+            calls += 1;
+            anyhow::bail!("hard down")
+        });
+        let msg = format!("{:#}", err.unwrap_err());
+        assert_eq!(calls, 3, "1 + retries attempts");
+        assert!(msg.contains("after 3 attempt(s)"), "{msg}");
+        assert!(msg.contains("hard down"), "{msg}");
+    }
+}

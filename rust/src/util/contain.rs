@@ -1,0 +1,68 @@
+//! Panic containment for per-session work inside a shared worker.
+//!
+//! A replica worker multiplexes many sessions; a panic in one session's
+//! decode step must not strand the others (the slot protocol promises a
+//! terminal event for every admitted job). [`contained`] converts such a
+//! panic into the same `Err` the fallible path already produces, so the
+//! existing per-slot error machinery (poison the session, emit
+//! `Event::Failed`, keep decoding survivors) handles both shapes.
+//!
+//! On `AssertUnwindSafe`: the closures this wraps operate on state that is
+//! either (a) poisoned and dropped on failure — the session and its
+//! activation are never retained once the slot errors — or (b) rebuilt
+//! from scratch by the supervisor (the respawned worker starts from an
+//! empty registry plus the durable spill tier). Nothing broken-invariant
+//! survives the unwind, which is exactly the condition `AssertUnwindSafe`
+//! asserts. Fused cross-session phases are NOT wrapped: a panic inside
+//! `parallel::par_map` propagates through `thread::scope` and is handled
+//! one level up (the worker loop fails the whole wave and respawn-or-
+//! continues), because mid-kernel shared buffers cannot be attributed to
+//! one session.
+
+use anyhow::{anyhow, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Run `f`, converting a panic into `Err` tagged with `what`. The panic
+/// payload's message is preserved when it is a string (the common case:
+/// `panic!`, `assert!`, index-out-of-bounds all produce strings).
+pub fn contained<T>(what: &str, f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(anyhow!("panic in {what}: {msg}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ok_and_err_pass_through() {
+        assert_eq!(contained("t", || Ok(7u32)).unwrap(), 7);
+        let e = contained::<u32>("t", || Err(anyhow!("boom"))).unwrap_err();
+        assert_eq!(e.to_string(), "boom");
+    }
+
+    #[test]
+    fn panic_becomes_error_with_message() {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // keep test output clean
+        let e = contained::<u32>("slot 3", || panic!("kaboom {}", 42)).unwrap_err();
+        let v = contained::<u32>("vec", || {
+            let v: Vec<u32> = vec![];
+            Ok(v[9])
+        })
+        .unwrap_err();
+        std::panic::set_hook(prev);
+        assert!(e.to_string().contains("slot 3"), "{e}");
+        assert!(e.to_string().contains("kaboom 42"), "{e}");
+        assert!(v.to_string().contains("panic in vec"), "{v}");
+    }
+}

@@ -1,0 +1,223 @@
+//! Deterministic fault injection: named failure sites on the serving
+//! stack's IO and publish paths.
+//!
+//! Production code instruments a site with [`trigger`]:
+//!
+//! ```ignore
+//! crate::util::failpoint::trigger("spill.write")?;
+//! ```
+//!
+//! Without the `failpoints` cargo feature the call compiles to an inlined
+//! `Ok(())` — zero branches, zero data, zero cost on the token path. With
+//! the feature (`make test-faults`), a test arms a site with a
+//! [`FailAction`] and every trigger consults the registry:
+//!
+//! * [`FailAction::Error`] — after skipping `after` hits, the next
+//!   `times` triggers return an `Err` tagged with the site name (the
+//!   shape of a transient IO failure or a refused publish).
+//! * [`FailAction::Panic`] — after skipping `after` hits, the next
+//!   trigger panics (the shape of a logic bug inside a wave step). The
+//!   panic message carries the site name so containment layers can
+//!   attribute it.
+//!
+//! Determinism is by construction: actions key off a per-site **hit
+//! counter**, not wall clock or RNG, so a test that arms
+//! `Error { after: 2, times: 1 }` fails exactly the third trigger, every
+//! run, regardless of thread scheduling (the registry is a mutex; hit
+//! order across sessions in one wave is fixed by the serial per-slot
+//! loop). Sites may also be armed from the environment before the first
+//! trigger: `RA_FAILPOINTS="spill.write=error:0:1,wave.decode=panic:2"`
+//! (comma-separated `site=error:after:times` / `site=panic:after`).
+//!
+//! Every instrumented site is listed in [`SITES`]; the fault-injection
+//! matrix (`tests/fault_injection.rs`) iterates that registry so a new
+//! site cannot be added without a degradation story. See
+//! docs/robustness.md for the per-site semantics.
+
+/// Every instrumented site, in dependency order. Keep this in sync with
+/// the `trigger` call sites and the table in docs/robustness.md.
+pub const SITES: &[&str] = &[
+    // Spill tier (store/spill.rs): temp-file write, fsync+rename commit,
+    // and restore-side open/read.
+    "spill.write",
+    "spill.commit",
+    "spill.read",
+    // Snapshot codec boundaries (model/engine.rs): serialization into a
+    // parked snapshot and parse back out of one.
+    "codec.snapshot",
+    "codec.restore",
+    // Maintenance publish points (model/maintain.rs): a failure here must
+    // surface as a clean `Done { ok: false }` retry, never a torn index.
+    "maint.drain.publish",
+    "maint.compact.publish",
+    // Per-session portion of the fused wave step (model/engine.rs).
+    "wave.decode",
+    // Cache-level restore of a parked session (store/cache.rs).
+    "session.restore",
+    // Top of the replica worker loop (coordinator/mod.rs). Panic-only:
+    // arming `Panic` here kills the worker thread between waves, which is
+    // how tests drive the supervised-respawn + durable-recovery path.
+    // `Error` actions are ignored at this site (no job to fail).
+    "worker.step",
+];
+
+/// What an armed site does when triggered (feature `failpoints` only;
+/// the type exists unconditionally so test helpers can name it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailAction {
+    /// Skip `after` hits, then fail the next `times` triggers with an
+    /// `Err`. `times = u64::MAX` fails forever (a hard-down disk).
+    Error { after: u64, times: u64 },
+    /// Skip `after` hits, then panic on the next trigger.
+    Panic { after: u64 },
+}
+
+#[cfg(feature = "failpoints")]
+mod armed {
+    use super::FailAction;
+    use crate::util::sync::{Mutex, OnceLock, PoisonError};
+    use anyhow::{bail, Result};
+    use std::collections::HashMap;
+
+    struct Site {
+        action: Option<FailAction>,
+        hits: u64,
+    }
+
+    fn registry() -> &'static Mutex<HashMap<&'static str, Site>> {
+        static REG: OnceLock<Mutex<HashMap<&'static str, Site>>> = OnceLock::new();
+        REG.get_or_init(|| {
+            let mut m = HashMap::new();
+            for &s in super::SITES {
+                m.insert(s, Site { action: None, hits: 0 });
+            }
+            if let Ok(spec) = std::env::var("RA_FAILPOINTS") {
+                for part in spec.split(',').filter(|p| !p.is_empty()) {
+                    if let Some((site, action)) = parse_env(part) {
+                        if let Some(e) = m.get_mut(site) {
+                            e.action = Some(action);
+                        }
+                    }
+                }
+            }
+            Mutex::new(m)
+        })
+    }
+
+    /// `site=error:after:times` or `site=panic:after` (counts optional;
+    /// `error` alone means fail the first trigger once). Returns a
+    /// 'static site name only for registered sites.
+    fn parse_env(part: &str) -> Option<(&'static str, FailAction)> {
+        let (name, spec) = part.split_once('=')?;
+        let site = super::SITES.iter().copied().find(|s| *s == name.trim())?;
+        let mut f = spec.trim().split(':');
+        let kind = f.next()?;
+        let after = f.next().and_then(|x| x.parse().ok()).unwrap_or(0);
+        let action = match kind {
+            "error" => FailAction::Error {
+                after,
+                times: f.next().and_then(|x| x.parse().ok()).unwrap_or(1),
+            },
+            "panic" => FailAction::Panic { after },
+            _ => return None,
+        };
+        Some((site, action))
+    }
+
+    /// Arm a site. Panics on an unregistered name: a typo in a test must
+    /// fail the test, not silently inject nothing.
+    pub fn arm(site: &str, action: FailAction) {
+        let mut reg = registry().lock().unwrap_or_else(PoisonError::into_inner);
+        let e = reg.get_mut(site).unwrap_or_else(|| panic!("unregistered failpoint `{site}`"));
+        e.action = Some(action);
+        e.hits = 0;
+    }
+
+    /// Disarm one site (its hit counter keeps counting).
+    pub fn disarm(site: &str) {
+        let mut reg = registry().lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(e) = reg.get_mut(site) {
+            e.action = None;
+        }
+    }
+
+    /// Disarm every site and zero all hit counters. Tests run this first:
+    /// the registry is process-global and the matrix is serialized
+    /// (`--test-threads=1`), so each case starts from a clean slate.
+    pub fn reset() {
+        let mut reg = registry().lock().unwrap_or_else(PoisonError::into_inner);
+        for e in reg.values_mut() {
+            e.action = None;
+            e.hits = 0;
+        }
+    }
+
+    /// Times a site has been triggered since the last `reset`/`arm`.
+    pub fn hits(site: &str) -> u64 {
+        let reg = registry().lock().unwrap_or_else(PoisonError::into_inner);
+        reg.get(site).map(|e| e.hits).unwrap_or(0)
+    }
+
+    pub fn trigger(site: &str) -> Result<()> {
+        let mut reg = registry().lock().unwrap_or_else(PoisonError::into_inner);
+        let Some(e) = reg.get_mut(site) else {
+            return Ok(());
+        };
+        let hit = e.hits;
+        e.hits += 1;
+        match e.action {
+            Some(FailAction::Error { after, times }) if hit >= after => {
+                if hit - after < times {
+                    drop(reg);
+                    bail!("injected fault at failpoint `{site}` (hit {hit})");
+                }
+                Ok(())
+            }
+            Some(FailAction::Panic { after }) if hit >= after => {
+                e.action = None; // one-shot: a respawned path must not re-trip
+                drop(reg);
+                panic!("injected panic at failpoint `{site}` (hit {hit})");
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+#[cfg(feature = "failpoints")]
+pub use armed::{arm, disarm, hits, reset, trigger};
+
+/// Release/tier-1 build: every site compiles to an inlined `Ok(())`.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn trigger(_site: &str) -> anyhow::Result<()> {
+    Ok(())
+}
+
+#[cfg(all(test, feature = "failpoints"))]
+mod tests {
+    use super::*;
+
+    // Unit tests share the process-global registry with anything else in
+    // the lib test binary, so keep them in one test body.
+    #[test]
+    fn counting_actions_are_deterministic() {
+        reset();
+        assert!(trigger("spill.write").is_ok(), "unarmed sites pass");
+        arm("spill.write", FailAction::Error { after: 1, times: 2 });
+        assert!(trigger("spill.write").is_ok(), "hit 0 skipped");
+        assert!(trigger("spill.write").is_err(), "hit 1 fails");
+        let err = trigger("spill.write").expect_err("hit 2 fails");
+        assert!(err.to_string().contains("spill.write"), "error names the site");
+        assert!(trigger("spill.write").is_ok(), "budget exhausted");
+        assert_eq!(hits("spill.write"), 4);
+        disarm("spill.write");
+        assert!(trigger("spill.write").is_ok());
+
+        arm("wave.decode", FailAction::Panic { after: 0 });
+        let p = std::panic::catch_unwind(|| trigger("wave.decode"));
+        assert!(p.is_err(), "armed panic fires");
+        assert!(trigger("wave.decode").is_ok(), "panic is one-shot");
+        reset();
+        assert_eq!(hits("wave.decode"), 0);
+    }
+}

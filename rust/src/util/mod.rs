@@ -19,8 +19,14 @@
 //! * [`sync`] — the loom-checkable synchronization facade every
 //!   concurrency-bearing module must import instead of `std::sync`
 //!   (enforced by `cargo xtask lint`; see docs/concurrency.md).
+//! * [`failpoint`] — deterministic fault injection sites (zero-cost
+//!   unless the `failpoints` feature is on; see docs/robustness.md).
+//! * [`contain`] — panic→`Err` containment for per-session work inside
+//!   a shared replica worker.
 
 pub mod bench;
+pub mod contain;
+pub mod failpoint;
 pub mod json;
 pub mod parallel;
 pub mod prop;

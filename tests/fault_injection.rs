@@ -1,0 +1,485 @@
+//! The fault-injection matrix (feature `failpoints`, `make test-faults`):
+//! every instrumented site in [`failpoint::SITES`] is driven here, and a
+//! guard test fails if a site is ever added without coverage.
+//!
+//! The contract under test, per docs/robustness.md:
+//!
+//! * An injected IO error on the **park path** fails exactly the one
+//!   request (with the bounded-retry story in the error text), leaves no
+//!   temp/partial litter in the spill dir, and the replica keeps serving.
+//! * A **transient** fault (one blip within the retry budget) is absorbed
+//!   invisibly on the write side, and on the resume side either retries
+//!   inside the turn (`spill.read`) or fails the turn while keeping the
+//!   parked snapshot restorable (`session.restore`).
+//! * A failure **inside the restore parse** (`codec.restore`) is
+//!   corruption: quarantine, clean error, definitive miss afterwards.
+//! * A fault in a **wave slot** (`wave.decode`, error or panic) fails
+//!   that slot only; survivors' tokens stay bit-identical to a solo
+//!   decode.
+//! * A fault at a **maintenance publish point** yields the documented
+//!   `ok: false` clean-retry completion with nothing mutated, and the
+//!   resubmitted job completes — including when the fault is a panic
+//!   (containment synthesizes the completion).
+//! * A **worker-thread kill** (`worker.step` panic) is supervised: the
+//!   next submit respawns the worker, parked sessions come back through
+//!   the durable spill tier, and the continuation is token-identical to
+//!   a never-crashed control. With the respawn budget at zero the replica
+//!   fails explicitly instead.
+//!
+//! The failpoint registry is process-global, so this suite must run
+//! serialized: `cargo test --features failpoints --test fault_injection
+//! -- --test-threads=1` (the `make test-faults` target).
+#![cfg(feature = "failpoints")]
+
+use retrieval_attention::baselines::{build_retriever, HostRetriever, RetrieverInputs};
+use retrieval_attention::config::{Method, RetrievalConfig, ServeConfig};
+use retrieval_attention::coordinator::{collect, Replica, Request, SessionMode, SessionSpec};
+use retrieval_attention::index::KeyStore;
+use retrieval_attention::kvcache::StaticPattern;
+use retrieval_attention::model::maintain::{
+    CompactJob, DoneKind, DrainJob, EvictJob, Job, MaintenanceState,
+};
+use retrieval_attention::model::{Engine, WaveItem};
+use retrieval_attention::tensor::Matrix;
+use retrieval_attention::util::failpoint::{self, FailAction};
+use retrieval_attention::util::rng::Rng;
+use retrieval_attention::workload::tasks;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn base_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.model = "induction-mini".into();
+    cfg.method = Method::RetrievalAttention;
+    cfg.pattern = StaticPattern { sink: 32, window: 128 };
+    cfg.retrieval.top_k = 32;
+    cfg.retrieval.ef = 64;
+    // Deterministic decodes: inline maintenance, watermark high enough
+    // that the short turns below never drain mid-comparison.
+    cfg.retrieval.maintenance.async_worker = false;
+    cfg.retrieval.maintenance.drain_watermark = 1024;
+    cfg
+}
+
+/// Park-every-turn into a durable (crash-survivable) spill dir.
+fn durable_cfg(dir: &Path) -> ServeConfig {
+    let mut cfg = base_cfg();
+    cfg.serving.session_cache.max_resident_bytes = 0;
+    cfg.serving.session_cache.spill_dir = dir.to_string_lossy().into_owned();
+    cfg.serving.session_cache.ephemeral_spill = false;
+    cfg
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ra-faults-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn turn(
+    id: u64,
+    session_id: u64,
+    mode: SessionMode,
+    prompt: Vec<u32>,
+    max_tokens: usize,
+) -> Request {
+    Request { id, prompt, max_tokens, session: Some(SessionSpec { session_id, mode }) }
+}
+
+/// Guard: a new failpoint site cannot land without a degradation story in
+/// this matrix (and its row in docs/robustness.md).
+#[test]
+fn every_registered_site_is_covered_by_this_matrix() {
+    let covered = [
+        "spill.write",
+        "spill.commit",
+        "spill.read",
+        "codec.snapshot",
+        "codec.restore",
+        "maint.drain.publish",
+        "maint.compact.publish",
+        "wave.decode",
+        "session.restore",
+        "worker.step",
+    ];
+    for site in failpoint::SITES {
+        assert!(
+            covered.contains(site),
+            "failpoint `{site}` has no fault-injection coverage; extend \
+             tests/fault_injection.rs and docs/robustness.md"
+        );
+    }
+}
+
+#[test]
+fn park_path_faults_fail_one_request_and_leave_no_litter() {
+    let dir = tmpdir("park");
+    let rep = Replica::spawn(durable_cfg(&dir));
+    let mut rng = Rng::seed_from(101);
+    // Hard-down faults at each park-path site: the park retries its
+    // bounded budget (1 + spill_retries = 3 attempts), then fails exactly
+    // this request, with no temp or partial file left behind.
+    for (i, site) in ["spill.write", "spill.commit", "codec.snapshot"].into_iter().enumerate() {
+        failpoint::reset();
+        failpoint::arm(site, FailAction::Error { after: 0, times: u64::MAX });
+        let s = tasks::passkey(&mut rng, 400, 0.3);
+        let sid = 10 + i as u64;
+        let rx = rep.submit(turn(sid, sid, SessionMode::Open, s.prompt.clone(), 2));
+        let err =
+            collect(&rx).expect_err("a hard-down park path must fail the session's request");
+        let msg = err.to_string();
+        assert!(msg.contains(&format!("failpoint `{site}`")), "{site}: {msg}");
+        assert!(msg.contains("attempt(s)"), "{site}: retry story lost: {msg}");
+        assert_eq!(failpoint::hits(site), 3, "{site}: retry budget must be bounded");
+        let litter: Vec<String> = std::fs::read_dir(&dir)
+            .map(|rd| {
+                rd.flatten().map(|e| e.file_name().to_string_lossy().into_owned()).collect()
+            })
+            .unwrap_or_default();
+        assert!(litter.is_empty(), "{site}: failed park left litter: {litter:?}");
+        // The failed session was never registered: a continue is a clean
+        // unknown-session error, not a half-parked resume.
+        failpoint::reset();
+        let rx = rep.submit(turn(100 + sid, sid, SessionMode::Continue, vec![1, 2], 1));
+        let err = collect(&rx).expect_err("failed park must not register the session");
+        assert!(err.to_string().contains("unknown session"), "{site}: {err}");
+    }
+    // The replica survived all three storms: a full park/resume cycle.
+    failpoint::reset();
+    let s = tasks::passkey(&mut rng, 400, 0.4);
+    let rx = rep.submit(turn(90, 99, SessionMode::Open, s.prompt.clone(), 2));
+    let (tokens, _) = collect(&rx).expect("replica must keep serving after injected faults");
+    assert!(s.passed(&tokens));
+    let rx = rep.submit(turn(91, 99, SessionMode::Continue, vec![3, 1, 4], 2));
+    let (_, m) = collect(&rx).expect("post-fault continue");
+    assert!(m.resumed_from_disk);
+    drop(rep);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn transient_spill_write_fault_is_absorbed_by_retry() {
+    let dir = tmpdir("transient-write");
+    let rep = Replica::spawn(durable_cfg(&dir));
+    failpoint::reset();
+    failpoint::arm("spill.write", FailAction::Error { after: 0, times: 1 });
+    let mut rng = Rng::seed_from(103);
+    let s = tasks::passkey(&mut rng, 400, 0.3);
+    let rx = rep.submit(turn(1, 1, SessionMode::Open, s.prompt.clone(), 2));
+    let (tokens, _) = collect(&rx).expect("one blip within the retry budget must be invisible");
+    assert!(s.passed(&tokens));
+    assert_eq!(failpoint::hits("spill.write"), 2, "fail once, succeed on the retry");
+    assert!(dir.join("session-1.ras").exists(), "retried park must publish");
+    failpoint::reset();
+    let rx = rep.submit(turn(2, 1, SessionMode::Continue, vec![5, 1], 2));
+    let (_, m) = collect(&rx).expect("continue after retried park");
+    assert!(m.resumed_from_disk);
+    drop(rep);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restore_faults_transient_vs_corruption_semantics() {
+    let dir = tmpdir("restore");
+    let rep = Replica::spawn(durable_cfg(&dir));
+    let mut rng = Rng::seed_from(105);
+    let s = tasks::passkey(&mut rng, 400, 0.3);
+    let rx = rep.submit(turn(1, 3, SessionMode::Open, s.prompt.clone(), 2));
+    collect(&rx).expect("open turn");
+
+    // (a) `spill.read` — transient open blip, retried INSIDE the resume:
+    // the turn itself never sees it.
+    failpoint::reset();
+    failpoint::arm("spill.read", FailAction::Error { after: 0, times: 1 });
+    let rx = rep.submit(turn(2, 3, SessionMode::Continue, vec![5, 1], 2));
+    let (_, m) = collect(&rx).expect("open blip must be retried inside the resume");
+    assert!(m.resumed_from_disk);
+    assert_eq!(failpoint::hits("spill.read"), 2);
+
+    // (b) `session.restore` — the whole resume step fails as transient:
+    // the turn fails, but the parked snapshot stays registered and the
+    // retried turn succeeds (the caller-retries contract).
+    failpoint::reset();
+    failpoint::arm("session.restore", FailAction::Error { after: 0, times: 1 });
+    let rx = rep.submit(turn(3, 3, SessionMode::Continue, vec![5, 1], 2));
+    let err = collect(&rx).expect_err("injected resume fault must fail the turn");
+    assert!(err.to_string().contains("failpoint `session.restore`"), "{err}");
+    assert!(
+        dir.join("session-3.ras").exists(),
+        "a transient resume fault must not consume the snapshot"
+    );
+    failpoint::reset();
+    let rx = rep.submit(turn(4, 3, SessionMode::Continue, vec![5, 1], 2));
+    let (_, m) = collect(&rx).expect("retried turn must resume");
+    assert!(m.resumed_from_disk);
+
+    // (c) `codec.restore` — a failure inside the parse is corruption:
+    // quarantine, clean error, and a definitive miss afterwards.
+    failpoint::reset();
+    failpoint::arm("codec.restore", FailAction::Error { after: 0, times: u64::MAX });
+    let rx = rep.submit(turn(5, 3, SessionMode::Continue, vec![5, 1], 2));
+    let err = collect(&rx).expect_err("parse-level fault must fail the turn");
+    assert!(err.to_string().contains("quarantined"), "{err}");
+    assert!(!dir.join("session-3.ras").exists(), "corrupt snapshot left under live name");
+    assert!(dir.join("session-3.ras.corrupt").exists(), "quarantine file missing");
+    failpoint::reset();
+    let rx = rep.submit(turn(6, 3, SessionMode::Continue, vec![5, 1], 2));
+    let err = collect(&rx).expect_err("quarantined session must be a definitive miss");
+    assert!(err.to_string().contains("unknown session"), "{err}");
+
+    // The replica keeps admitting fresh sessions throughout.
+    let s2 = tasks::passkey(&mut rng, 400, 0.5);
+    let rx = rep.submit(turn(7, 4, SessionMode::Open, s2.prompt.clone(), 2));
+    let (tokens, _) = collect(&rx).expect("replica must survive the restore storm");
+    assert!(s2.passed(&tokens));
+    drop(rep);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wave_slot_faults_are_contained_and_survivors_bit_identical() {
+    let eng = Engine::from_config(base_cfg()).expect("engine init");
+    let ctrl = Engine::from_config(base_cfg()).expect("control engine init");
+    let mut rng = Rng::seed_from(107);
+    let ta = tasks::passkey(&mut rng, 500, 0.3);
+    let tb = tasks::passkey(&mut rng, 500, 0.6);
+    let tc = tasks::passkey(&mut rng, 500, 0.4);
+    let mut sa = eng.prefill(&ta.prompt).unwrap();
+    let mut sb = eng.prefill(&tb.prompt).unwrap();
+    let mut sb_ctrl = ctrl.prefill(&tb.prompt).unwrap();
+
+    // Error action: the injected slot fails cleanly; the survivor's token
+    // is bit-identical to a solo decode of the same session.
+    failpoint::reset();
+    failpoint::arm("wave.decode", FailAction::Error { after: 0, times: 1 });
+    let mut items =
+        vec![WaveItem { sess: &mut sa, token: 5 }, WaveItem { sess: &mut sb, token: 5 }];
+    let out = eng.decode_wave(&mut items);
+    drop(items);
+    assert_eq!(out.len(), 2);
+    match &out[0] {
+        Err(e) => assert!(format!("{e:#}").contains("wave.decode"), "{e:#}"),
+        Ok(_) => panic!("injected slot must fail"),
+    }
+    let tok_b = match &out[1] {
+        Ok(o) => o.token,
+        Err(e) => panic!("survivor slot failed: {e:#}"),
+    };
+    let ctrl_tok = ctrl.decode_step(&mut sb_ctrl, 5).unwrap().token;
+    assert_eq!(tok_b, ctrl_tok, "survivor diverged from solo decode under slot error");
+
+    // Panic action: contained per slot (the wave must not unwind), same
+    // survivor bit-identity — and the survivor keeps decoding in step
+    // with the control afterwards.
+    let mut sc = eng.prefill(&tc.prompt).unwrap();
+    failpoint::reset();
+    failpoint::arm("wave.decode", FailAction::Panic { after: 0 });
+    let mut items =
+        vec![WaveItem { sess: &mut sc, token: 5 }, WaveItem { sess: &mut sb, token: tok_b }];
+    let out = eng.decode_wave(&mut items);
+    drop(items);
+    match &out[0] {
+        Err(e) => assert!(format!("{e:#}").contains("panic"), "{e:#}"),
+        Ok(_) => panic!("panicking slot must fail, not unwind the wave"),
+    }
+    let tok_b2 = match &out[1] {
+        Ok(o) => o.token,
+        Err(e) => panic!("survivor slot failed under sibling panic: {e:#}"),
+    };
+    let ctrl_tok2 = ctrl.decode_step(&mut sb_ctrl, ctrl_tok).unwrap().token;
+    assert_eq!(tok_b2, ctrl_tok2, "survivor diverged from solo decode under slot panic");
+    failpoint::reset();
+    for s in [&mut sa, &mut sb, &mut sc, &mut sb_ctrl] {
+        s.shutdown_maintenance();
+    }
+}
+
+#[test]
+fn maintenance_publish_faults_are_clean_retries() {
+    failpoint::reset();
+    let mut rng = Rng::seed_from(109);
+    let keys = KeyStore::from_matrix(Matrix::from_fn(64, 8, |_, _| rng.normal()));
+    let ids: Vec<u32> = (0..64).collect();
+    let queries = Matrix::from_fn(16, 8, |_, _| rng.normal());
+    let rcfg = RetrievalConfig::default();
+    let inp = RetrieverInputs::from_parts(keys, ids, &queries, 0.35, &rcfg, 7);
+    let group = inp.group.clone();
+    let head: Arc<dyn HostRetriever> = Arc::from(build_retriever(Method::Flat, inp));
+    let mut state = MaintenanceState::new();
+    // Identical job per call: a failed (ok: false) publish mutated
+    // nothing, so the engine's later-step retry resubmits the same batch.
+    let mk_drain = |seed: u64, lo: u32, hi: u32| {
+        let mut r = Rng::seed_from(seed);
+        Job::Drain(DrainJob {
+            layer: 0,
+            kvh: 0,
+            rows: Matrix::from_fn((hi - lo) as usize, 8, |_, _| r.normal()),
+            ids: (lo..hi).collect(),
+            upto: hi as usize,
+            grow_store: true,
+            heads: vec![head.clone()],
+            queries: vec![None],
+            group: group.clone(),
+        })
+    };
+
+    // (a) Injected error before the drain publish: ok = false, nothing
+    // mutated; the resubmitted job lands.
+    failpoint::arm("maint.drain.publish", FailAction::Error { after: 0, times: 1 });
+    state.submit(mk_drain(1, 64, 72));
+    let dones = state.flush();
+    assert_eq!(dones.len(), 1);
+    assert!(!dones[0].ok, "injected publish fault must report a clean retry");
+    assert_eq!(group.id_map().len(), 64, "failed publish must not mutate the group");
+    assert_eq!(head.index_generation(), 0, "failed publish must not swap the front");
+    state.submit(mk_drain(1, 64, 72));
+    let dones = state.flush();
+    assert!(dones[0].ok, "retried drain must land");
+    assert_eq!(group.id_map().len(), 72);
+
+    // (b) Panic inside the job: containment synthesizes the same ok=false
+    // completion from job metadata, and the worker thread survives.
+    failpoint::reset();
+    failpoint::arm("maint.drain.publish", FailAction::Panic { after: 0 });
+    state.submit(mk_drain(2, 72, 80));
+    let dones = state.flush();
+    assert_eq!(dones.len(), 1, "panicked job must still complete (synthesized)");
+    assert!(!dones[0].ok);
+    assert!(matches!(dones[0].kind, DoneKind::Drained { upto: 80, count: 8 }));
+    assert_eq!(group.id_map().len(), 72, "panicked job must not mutate the group");
+    state.submit(mk_drain(2, 72, 80));
+    let dones = state.flush();
+    assert!(dones[0].ok, "worker must survive a contained panic");
+    assert_eq!(group.id_map().len(), 80);
+
+    // (c) Compact publish fault: the epoch is skipped whole — generation
+    // unchanged — and the retried epoch completes.
+    state.submit(Job::Evict(EvictJob {
+        layer: 0,
+        kvh: 0,
+        ids: (0..12).collect(),
+        heads: vec![head.clone()],
+        group: group.clone(),
+    }));
+    let _ = state.flush();
+    failpoint::reset();
+    failpoint::arm("maint.compact.publish", FailAction::Error { after: 0, times: 1 });
+    let mk_compact = || {
+        Job::Compact(CompactJob {
+            layer: 0,
+            kvh: 0,
+            heads: vec![head.clone()],
+            group: group.clone(),
+        })
+    };
+    state.submit(mk_compact());
+    let dones = state.flush();
+    assert!(!dones[0].ok, "injected epoch fault must skip cleanly");
+    assert_eq!(group.store_generation(), 0, "failed epoch must not bump the generation");
+    state.submit(mk_compact());
+    let dones = state.shutdown();
+    assert!(dones[0].ok, "retried epoch must land");
+    assert!(matches!(dones[0].kind, DoneKind::Compacted { dropped: 12 }));
+    assert_eq!(group.store_generation(), 1);
+    failpoint::reset();
+}
+
+#[test]
+fn worker_panic_respawns_and_recovers_parked_sessions() {
+    let dir = tmpdir("respawn");
+    let ctrl_dir = tmpdir("respawn-ctrl");
+    let rep = Replica::spawn(durable_cfg(&dir));
+    let ctrl = Replica::spawn(durable_cfg(&ctrl_dir));
+    let mut rng = Rng::seed_from(111);
+    let s = tasks::passkey(&mut rng, 400, 0.3);
+    for (r, tag) in [(&rep, "victim"), (&ctrl, "control")] {
+        let rx = r.submit(turn(1, 7, SessionMode::Open, s.prompt.clone(), 2));
+        let (tokens, _) = collect(&rx).unwrap_or_else(|e| panic!("{tag} open failed: {e}"));
+        assert!(s.passed(&tokens), "{tag}: wrong first answer");
+    }
+    assert!(dir.join("session-7.ras").exists(), "open turn must have parked durably");
+
+    // Kill the victim's worker thread between waves: the panic-only
+    // `worker.step` site fires at the top of the next loop turn.
+    failpoint::reset();
+    failpoint::arm("worker.step", FailAction::Panic { after: 0 });
+    let rx = rep.submit(Request { id: 2, prompt: s.prompt.clone(), max_tokens: 1, session: None });
+    let _ = collect(&rx); // may complete or die with the worker — both are fine
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    while failpoint::hits("worker.step") == 0 {
+        assert!(std::time::Instant::now() < deadline, "worker never hit the kill switch");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+
+    // The next continue turn respawns the worker, whose boot scan
+    // recovers session 7 from the durable tier. Turns racing the crash
+    // may fail by disconnect (the documented crash semantics) — retry,
+    // exactly as a client would.
+    let cont = vec![9, 2, 6];
+    let mut recovered = None;
+    for attempt in 0..200u64 {
+        let rx = rep.submit(turn(10 + attempt, 7, SessionMode::Continue, cont.clone(), 2));
+        match collect(&rx) {
+            Ok(out) => {
+                recovered = Some(out);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+        }
+    }
+    let (tokens, m) = recovered.expect("continue never succeeded after the crash");
+    assert_eq!(rep.respawn_count(), 1, "supervision must have respawned exactly once");
+    assert!(m.resumed_from_disk, "recovery must come through the durable snapshot");
+
+    // Token-identical continuation vs the never-crashed control replica.
+    let rx = ctrl.submit(turn(3, 7, SessionMode::Continue, cont.clone(), 2));
+    let (ctrl_tokens, cm) = collect(&rx).expect("control continue");
+    assert!(cm.resumed_from_disk);
+    assert_eq!(tokens, ctrl_tokens, "post-crash continuation diverged from control");
+
+    failpoint::reset();
+    drop(rep);
+    drop(ctrl);
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&ctrl_dir);
+}
+
+#[test]
+fn respawn_budget_exhaustion_fails_explicitly() {
+    let mut cfg = base_cfg();
+    cfg.serving.max_respawns = 0;
+    let rep = Replica::spawn(cfg);
+    let mut rng = Rng::seed_from(113);
+    let s = tasks::passkey(&mut rng, 400, 0.5);
+    let rx = rep.submit(Request { id: 1, prompt: s.prompt.clone(), max_tokens: 1, session: None });
+    collect(&rx).expect("replica healthy before the kill");
+
+    failpoint::reset();
+    failpoint::arm("worker.step", FailAction::Panic { after: 0 });
+    let rx = rep.submit(Request { id: 2, prompt: s.prompt.clone(), max_tokens: 1, session: None });
+    let _ = collect(&rx);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    while failpoint::hits("worker.step") == 0 {
+        assert!(std::time::Instant::now() < deadline, "worker never hit the kill switch");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+
+    // With no respawn budget, every further submit must surface the
+    // explicit terminal failure (a disconnect is the only acceptable
+    // interim shape while the dead thread is still being reaped).
+    let mut msg = String::new();
+    for i in 0..200u64 {
+        let rx =
+            rep.submit(Request { id: 10 + i, prompt: vec![1, 2, 3], max_tokens: 1, session: None });
+        msg = collect(&rx)
+            .expect_err("dead replica with no respawn budget must fail")
+            .to_string();
+        if msg.contains("replica worker is gone") {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(msg.contains("replica worker is gone"), "unexpected terminal error: {msg}");
+    assert_eq!(rep.respawn_count(), 0, "exhausted budget must never respawn");
+    failpoint::reset();
+}

@@ -417,46 +417,62 @@ fn multi_turn_through_disk_matches_always_resident() {
 }
 
 #[test]
-fn v1_snapshot_restores_into_v2_engine_as_all_retrieval() {
-    // Cross-version compatibility: a v1 snapshot (no per-head policy
-    // section) written by the current engine restores under the v2 read
-    // path with every head on the retrieval tier, and keeps decoding
-    // bit-identically to the never-snapshotted session.
+fn v2_snapshot_restores_into_v3_engine() {
+    // Cross-version compatibility: a v2 snapshot (same payload as v3, no
+    // checksummed footer) written by the current engine restores under
+    // the v3 read-compat path with its policy intact, and keeps decoding
+    // bit-identically to the never-snapshotted session. Anything older
+    // than v2 is refused on both the write and the read side.
     let eng = Engine::from_config(engine_cfg(Method::RetrievalAttention)).expect("engine init");
     let mut rng = Rng::seed_from(83);
     let s = tasks::passkey(&mut rng, 700, 0.35);
     let mut sess = eng.prefill(&s.prompt).unwrap();
     let _ = eng.generate(&mut sess, 2).unwrap();
 
-    let mut v1: Vec<u8> = Vec::new();
-    eng.snapshot_session_versioned(&mut sess, &mut v1, retrieval_attention::store::V1).unwrap();
     let mut v2: Vec<u8> = Vec::new();
-    eng.snapshot_session(&mut sess, &mut v2).unwrap();
-    // v2 carries the policy section on top of everything v1 has.
-    assert!(v2.len() > v1.len(), "v2 snapshot not larger: {} <= {}", v2.len(), v1.len());
+    eng.snapshot_session_versioned(&mut sess, &mut v2, retrieval_attention::store::V2).unwrap();
+    let mut v3: Vec<u8> = Vec::new();
+    eng.snapshot_session(&mut sess, &mut v3).unwrap();
+    // v3 = v2 payload + the 20-byte checksummed footer, byte-identical
+    // up to the trailer (what makes the read-compat path free).
+    assert_eq!(v3.len(), v2.len() + 20, "footer is exactly the trailer");
+    assert_eq!(&v3[..v2.len()], &v2[..], "v3 payload diverged from v2");
 
-    let mut src = v1.as_slice();
+    let mut src = v2.as_slice();
     let mut restored = eng.restore_session(&mut src).unwrap();
     assert_eq!(restored.len, sess.len);
-    assert_eq!(restored.streaming_fraction(), 0.0, "v1 restore must be all-retrieval");
-    assert_eq!(restored.index_bytes_avoided, 0);
+    assert_eq!(restored.policy, sess.policy, "policy section lost on the v2 read path");
     let mut tok_a = 5u32;
     let mut tok_b = 5u32;
     for step in 0..4 {
         tok_a = eng.decode_step(&mut sess, tok_a).unwrap().token;
         tok_b = eng.decode_step(&mut restored, tok_b).unwrap().token;
-        assert_eq!(tok_a, tok_b, "v1-restored session diverged at step {step}");
+        assert_eq!(tok_a, tok_b, "v2-restored session diverged at step {step}");
     }
+
+    // Version policy, both directions: v1 is no longer writable, and a
+    // v1-stamped stream is refused on read (the caller re-prefills).
+    let mut refused = Vec::new();
+    let err = eng
+        .snapshot_session_versioned(&mut sess, &mut refused, 1)
+        .expect_err("v1 write must be refused");
+    assert!(err.to_string().contains("cannot write"), "unexpected: {err}");
+    let mut v1_stamped = v2.clone();
+    v1_stamped[4..8].copy_from_slice(&1u32.to_le_bytes());
+    let err = eng
+        .restore_session(&mut v1_stamped.as_slice())
+        .expect_err("v1 read must be refused");
+    assert!(format!("{err:#}").contains("version policy"), "unexpected: {err:#}");
     sess.shutdown_maintenance();
     restored.shutdown_maintenance();
 }
 
 #[test]
-fn v2_snapshot_carries_streaming_heads_and_refuses_v1() {
+fn v3_snapshot_carries_streaming_heads_and_detects_corruption() {
     // A mixed-policy session round-trips its per-head assignment through
-    // the v2 policy section — and cannot be written as v1, because tag-4
-    // (streaming) retrievers without a policy vector would restore
-    // inconsistently.
+    // the policy section, streaming heads shrink the snapshot (their
+    // index state is never written), and the v3 footer catches payload
+    // corruption that still parses structurally.
     use retrieval_attention::policy::PolicyMode;
     let mut cfg = engine_cfg(Method::RetrievalAttention);
     // Low watermark so the indexed tier actually holds drained rows and
@@ -477,10 +493,6 @@ fn v2_snapshot_carries_streaming_heads_and_refuses_v1() {
     let _ = eng.generate(&mut plain, 4).unwrap();
     let _ = seng.generate(&mut mixed, 4).unwrap();
     assert_eq!(mixed.streaming_fraction(), 0.5);
-
-    let mut err = Vec::new();
-    let refused = seng.snapshot_session_versioned(&mut mixed, &mut err, retrieval_attention::store::V1);
-    assert!(refused.is_err(), "v1 write of a streaming session must be refused");
 
     let mut pbuf: Vec<u8> = Vec::new();
     let mut mbuf: Vec<u8> = Vec::new();
@@ -507,9 +519,121 @@ fn v2_snapshot_carries_streaming_heads_and_refuses_v1() {
         tok_b = seng.decode_step(&mut restored, tok_b).unwrap().token;
         assert_eq!(tok_a, tok_b, "mixed-policy restore diverged at step {step}");
     }
+
+    // The footer catches corruption the structural parse would accept:
+    // flip one bit in a float field mid-payload — every field still
+    // parses, but the checksum verify at the end refuses the restore.
+    let mut corrupt = mbuf.clone();
+    let mid = corrupt.len() / 2;
+    corrupt[mid] ^= 0x01;
+    let r = seng.restore_session(&mut corrupt.as_slice());
+    assert!(r.is_err(), "bit-flipped snapshot must not restore");
     plain.shutdown_maintenance();
     mixed.shutdown_maintenance();
     restored.shutdown_maintenance();
+}
+
+#[test]
+fn corrupted_spill_files_quarantine_cleanly_under_fuzz() {
+    // The durable-tier corruption contract, fuzzed: take one real parked
+    // snapshot and damage it every way a disk can — single bit flips
+    // sampled across the whole file (header, payload, footer) and
+    // truncations at structural boundaries. Every case must (a) still be
+    // re-registered by the boot scan (integrity is proven lazily, on
+    // resume), (b) fail `take` with a clean quarantine error — no panic,
+    // no half-restored session, (c) preserve the damaged bytes under
+    // `.corrupt` for diagnosis, and (d) drop the id from the registry so
+    // the next turn gets a definitive miss instead of a retry loop on a
+    // file that can never restore. The untouched snapshot must still
+    // resume afterwards — the fuzz must not have been "passing" because
+    // the baseline itself was broken.
+    use retrieval_attention::config::SessionCacheConfig;
+    use retrieval_attention::store::SessionCache;
+
+    let eng = Engine::from_config(engine_cfg(Method::RetrievalAttention)).expect("engine init");
+    let mut rng = Rng::seed_from(97);
+    let s = tasks::passkey(&mut rng, 600, 0.4);
+    let mut sess = eng.prefill(&s.prompt).unwrap();
+    let _ = eng.generate(&mut sess, 2).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("ra-quarantine-fuzz-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cc = SessionCacheConfig {
+        max_resident_bytes: 0, // park immediately
+        spill_dir: dir.to_string_lossy().into_owned(),
+        ephemeral_spill: false, // durable: files outlive the cache
+        ..SessionCacheConfig::default()
+    };
+
+    // Park once to produce the clean on-disk snapshot, then work from its
+    // bytes — each fuzz case rebuilds the directory from scratch.
+    let clean = {
+        let mut cache = SessionCache::new(cc.clone());
+        cache.insert(&eng, 5, sess).expect("park must succeed");
+        assert_eq!(cache.parked_count(), 1);
+        std::fs::read(dir.join("session-5.ras")).expect("parked snapshot must exist")
+    };
+    let n = clean.len();
+    assert!(n > 64, "snapshot implausibly small: {n}");
+
+    // Case list: bit flips sampled evenly across the file (varying which
+    // bit, so zero-byte runs and low/high bits both get coverage), plus
+    // truncations at the header, early/mid payload, and footer edges.
+    let mut cases: Vec<(String, Vec<u8>)> = Vec::new();
+    for off in (0..n).step_by((n / 23).max(1)) {
+        let mut bytes = clean.clone();
+        bytes[off] ^= 1 << (off % 8);
+        cases.push((format!("flip@{off}"), bytes));
+    }
+    for cut in [0usize, 1, 4, 8, n / 3, n / 2, n - 21, n - 1] {
+        cases.push((format!("trunc@{cut}"), clean[..cut].to_vec()));
+    }
+
+    let ras = dir.join("session-5.ras");
+    let corrupt_path = dir.join("session-5.ras.corrupt");
+    for (tag, bytes) in &cases {
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&ras, bytes).unwrap();
+
+        let mut cache = SessionCache::new(cc.clone());
+        assert_eq!(cache.stats.recovered, 1, "{tag}: boot scan must register by name");
+        assert!(cache.contains(5), "{tag}");
+
+        let err = match cache.take(&eng, 5) {
+            Err(e) => e,
+            Ok(_) => panic!("{tag}: corrupt snapshot must not restore"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("quarantined"), "{tag}: not a quarantine error: {msg}");
+        assert_eq!(cache.stats.quarantines, 1, "{tag}");
+        // The damaged file moved aside bit-for-bit; the live name is gone.
+        assert!(!ras.exists(), "{tag}: corrupt file left under its live name");
+        let kept = std::fs::read(&corrupt_path)
+            .unwrap_or_else(|e| panic!("{tag}: no .corrupt file: {e}"));
+        assert_eq!(&kept, bytes, "{tag}: quarantine altered the evidence");
+        // Registry state: definitive miss from here on, zero disk bytes.
+        assert!(!cache.contains(5), "{tag}: quarantined id still registered");
+        assert!(cache.take(&eng, 5).unwrap().is_none(), "{tag}: second take must miss");
+        assert_eq!(cache.disk_bytes(), 0, "{tag}: disk accounting leaked");
+    }
+
+    // Baseline sanity: the clean bytes still restore and decode.
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(&ras, &clean).unwrap();
+    let mut cache = SessionCache::new(cc.clone());
+    let r = cache
+        .take(&eng, 5)
+        .expect("clean snapshot must restore")
+        .expect("clean snapshot must be registered");
+    assert!(r.from_disk);
+    assert_eq!(r.snapshot_bytes, n as u64);
+    let mut resumed = r.sess;
+    let out = eng.decode_step(&mut resumed, 5).unwrap();
+    assert!((out.token as usize) < eng.spec().vocab);
+    resumed.shutdown_maintenance();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -6,7 +6,9 @@
 //! without running the serving stack.
 
 use retrieval_attention::config::{Method, ServeConfig};
-use retrieval_attention::coordinator::{collect, router::Router, Event, Replica, Request};
+use retrieval_attention::coordinator::{
+    collect, collect_deadline, router::Router, Event, Replica, Request,
+};
 use retrieval_attention::kvcache::StaticPattern;
 use retrieval_attention::server::{Client, Server};
 use retrieval_attention::util::rng::Rng;
@@ -224,6 +226,61 @@ fn truncate_and_fork_sessions() {
     // Truncating to an invalid length is refused.
     assert!(eng.truncate_session(&mut sess, 0).is_err());
     assert!(eng.truncate_session(&mut sess, 10_000).is_err());
+}
+
+#[test]
+fn collect_deadline_bounds_the_gap_not_the_generation() {
+    // The deadline is per event GAP: a stream that keeps making progress
+    // never times out, while one that stalls surfaces within one deadline
+    // — and a dropped replica is a distinct, immediate error.
+    let (tx, rx) = std::sync::mpsc::channel::<Event>();
+    tx.send(Event::Token(1, 42)).unwrap();
+    let err = collect_deadline(&rx, 50).expect_err("stalled stream must time out");
+    assert!(
+        err.to_string().contains("deadline exceeded"),
+        "unexpected timeout shape: {err}"
+    );
+    drop(tx);
+    let err = collect_deadline(&rx, 50).expect_err("dropped sender must fail");
+    assert!(
+        err.to_string().contains("replica dropped the request"),
+        "unexpected disconnect shape: {err}"
+    );
+    // deadline_ms == 0 is plain blocking collect: terminal events pass
+    // through untouched.
+    let (tx, rx) = std::sync::mpsc::channel::<Event>();
+    tx.send(Event::Failed(2, "boom".into())).unwrap();
+    let err = collect_deadline(&rx, 0).expect_err("failure event must surface");
+    assert!(err.to_string().contains("boom"), "{err}");
+}
+
+#[test]
+fn client_deadline_surfaces_on_unresponsive_server() {
+    // A server that accepts the connection but never answers: without a
+    // deadline the client would block forever; with one it fails cleanly
+    // and the error names the deadline, not a raw IO kind.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let hold = std::thread::spawn(move || {
+        // Accept and hold the socket open, reading nothing, answering
+        // nothing, until the client has given up.
+        let (_stream, _) = listener.accept().unwrap();
+        std::thread::sleep(std::time::Duration::from_secs(2));
+    });
+    let mut client = Client::connect(addr).unwrap();
+    client.set_deadline(100).unwrap();
+    let start = std::time::Instant::now();
+    let err = client.generate(&[1, 2, 3], 1).expect_err("unanswered request must time out");
+    assert!(
+        err.to_string().contains("client deadline exceeded"),
+        "unexpected error shape: {err}"
+    );
+    assert!(
+        start.elapsed() < std::time::Duration::from_millis(1500),
+        "deadline did not bound the wait"
+    );
+    drop(client);
+    let _ = hold.join();
 }
 
 #[test]

@@ -86,3 +86,100 @@ fn park_resume_churn_over_many_sessions() {
     let (tokens, _) = collect(&rx).unwrap();
     assert!(s.passed(&tokens), "replica unhealthy after soak");
 }
+
+/// The crash-recovery half of the soak: park durably, kill the whole
+/// replica (process-crash stand-in: drop it, keep the spill dir), boot a
+/// fresh replica over the same dir, and prove the boot scan hands back
+/// the exact same continuation a never-crashed replica produces.
+#[test]
+fn park_crash_bootscan_resume_is_token_identical() {
+    let mk_cfg = |dir: &std::path::Path| {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "induction-mini".into();
+        cfg.method = Method::RetrievalAttention;
+        cfg.pattern = StaticPattern { sink: 32, window: 128 };
+        cfg.retrieval.top_k = 32;
+        cfg.retrieval.ef = 64;
+        cfg.retrieval.maintenance.drain_watermark = 8;
+        cfg.serving.session_cache.max_resident_bytes = 0; // every turn parks
+        cfg.serving.session_cache.spill_dir = dir.to_string_lossy().into_owned();
+        cfg.serving.session_cache.ephemeral_spill = false; // survive the "crash"
+        cfg
+    };
+    let dir = std::env::temp_dir().join(format!("ra-soak-crash-{}", std::process::id()));
+    let ctrl_dir = std::env::temp_dir().join(format!("ra-soak-ctrl-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&ctrl_dir);
+
+    const SESSIONS: u64 = 4;
+    let mut rng = Rng::seed_from(21);
+    let samples: Vec<_> = (0..SESSIONS).map(|_| tasks::passkey(&mut rng, 400, 0.3)).collect();
+
+    // Turn 1 on both replicas: identical prompts, identical answers, and
+    // every session parked durably.
+    let rep = Replica::spawn(mk_cfg(&dir));
+    let ctrl = Replica::spawn(mk_cfg(&ctrl_dir));
+    for (r, tag) in [(&rep, "victim"), (&ctrl, "control")] {
+        for (si, s) in samples.iter().enumerate() {
+            let rx = r.submit(Request {
+                id: si as u64 + 1,
+                prompt: s.prompt.clone(),
+                max_tokens: 2,
+                session: Some(SessionSpec { session_id: si as u64, mode: SessionMode::Open }),
+            });
+            let (tokens, _) =
+                collect(&rx).unwrap_or_else(|e| panic!("{tag} open {si} failed: {e}"));
+            assert!(s.passed(&tokens), "{tag} session {si}: wrong first answer");
+        }
+    }
+    for si in 0..SESSIONS {
+        assert!(
+            dir.join(format!("session-{si}.ras")).exists(),
+            "session {si} not parked durably before the crash"
+        );
+    }
+
+    // Crash the victim: drop tears down the replica (worker, cache, RAM
+    // state) but — durable tier — leaves the snapshots on disk.
+    drop(rep);
+    for si in 0..SESSIONS {
+        assert!(
+            dir.join(format!("session-{si}.ras")).exists(),
+            "crash must not take session {si}'s snapshot with it"
+        );
+    }
+
+    // Reboot over the same dir: the boot scan re-registers every parked
+    // session; turn 2 resumes each one with tokens identical to the
+    // control replica that never crashed.
+    let rep = Replica::spawn(mk_cfg(&dir));
+    for (si, _) in samples.iter().enumerate() {
+        let cont = vec![9, si as u32 % 5 + 1, 4];
+        let mut outs = Vec::new();
+        for (r, tag) in [(&rep, "rebooted"), (&ctrl, "control")] {
+            let rx = r.submit(Request {
+                id: 100 + si as u64,
+                prompt: cont.clone(),
+                max_tokens: 3,
+                session: Some(SessionSpec {
+                    session_id: si as u64,
+                    mode: SessionMode::Continue,
+                }),
+            });
+            let (tokens, m) =
+                collect(&rx).unwrap_or_else(|e| panic!("{tag} continue {si} failed: {e}"));
+            assert!(m.resumed_from_disk, "{tag} session {si} must come off disk");
+            assert!(m.snapshot_bytes > 0, "{tag} session {si}");
+            outs.push(tokens);
+        }
+        assert_eq!(
+            outs[0], outs[1],
+            "session {si}: post-crash continuation diverged from control"
+        );
+    }
+
+    drop(rep);
+    drop(ctrl);
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&ctrl_dir);
+}

@@ -1,7 +1,7 @@
 //! The repo invariant linter: lexical rules the type system cannot carry.
 //!
-//! Four rules, each encoding a decision documented in
-//! `docs/concurrency.md`:
+//! Five rules, each encoding a decision documented in
+//! `docs/concurrency.md` (rules 1-4) and `docs/robustness.md` (rule 5):
 //!
 //! 1. **`unsafe` needs a justification.** Every `unsafe` token must sit
 //!    next to a `// SAFETY:` comment (same line, or in the contiguous
@@ -20,6 +20,12 @@
 //!    under `model/`, `coordinator/`, `server/` and `store/` must
 //!    propagate or degrade, never panic — a panic there kills a worker
 //!    thread or poisons shared state mid-protocol.
+//! 5. **Spill IO goes through `store/spill.rs`.** Non-test code under
+//!    `store/` may not name `std::fs::` outside the spill module: the
+//!    atomic-publication / quarantine / failpoint discipline lives
+//!    there, and a raw filesystem call next to it silently bypasses all
+//!    three (crash-safety is a property of the whole tier, not of one
+//!    call site).
 //!
 //! The linter is deliberately **lexical**: comments and string/char
 //! literals are masked out first, then `#[cfg(test)]` item regions are
@@ -34,7 +40,7 @@ pub struct Violation {
     /// 1-indexed line number.
     pub line: usize,
     /// Stable rule identifier (`unsafe-no-safety`, `stray-std-sync`,
-    /// `relaxed-ordering`, `banned-unwrap`).
+    /// `relaxed-ordering`, `banned-unwrap`, `spill-direct-io`).
     pub rule: &'static str,
     pub message: String,
 }
@@ -67,6 +73,10 @@ pub const NO_PANIC_DIRS: &[&str] = &["model/", "coordinator/", "server/", "store
 
 /// The one file allowed to name `std::sync::atomic` / `std::sync::RwLock`.
 pub const SYNC_FACADE: &str = "util/sync.rs";
+
+/// The one file under `store/` allowed to name `std::fs::` — the
+/// failpoint-instrumented spill-tier IO helpers (rule 5).
+pub const SPILL_FACADE: &str = "store/spill.rs";
 
 /// Lint one file's source. `rel_path` is `/`-separated and relative to
 /// the linted root (`rust/src`); the rules that key on location
@@ -132,6 +142,21 @@ pub fn lint_source(rel_path: &str, src: &str) -> Vec<Violation> {
                         .to_string(),
                 });
             }
+        }
+
+        if rel_path.starts_with("store/")
+            && rel_path != SPILL_FACADE
+            && !in_test
+            && line.contains("std::fs::")
+        {
+            out.push(Violation {
+                file: rel_path.to_string(),
+                line: ln,
+                rule: "spill-direct-io",
+                message: "raw std::fs:: under store/; route spill-tier IO through \
+                          store/spill.rs (atomic publish + quarantine + failpoints)"
+                    .to_string(),
+            });
         }
     }
     out

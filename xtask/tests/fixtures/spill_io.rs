@@ -1,0 +1,28 @@
+//! Fixture for the `spill-direct-io` rule: raw `std::fs::` under
+//! `store/` outside the spill facade.
+
+use anyhow::Result;
+
+pub fn bad_direct_write(path: &std::path::Path) -> Result<()> {
+    // Bypasses atomic publication: flagged when this file sits under
+    // store/ (outside store/spill.rs).
+    std::fs::write(path, b"snapshot")?;
+    Ok(())
+}
+
+pub fn bad_direct_remove(path: &std::path::Path) {
+    std::fs::remove_file(path).ok();
+}
+
+pub fn fine_no_io() -> u32 {
+    // A decoy in a string must not fire: "std::fs::write".
+    7
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_helpers_may_touch_fs() {
+        std::fs::read_to_string("/dev/null").ok();
+    }
+}

@@ -89,6 +89,26 @@ fn relaxed_fixture() {
 }
 
 #[test]
+fn spill_io_fixture() {
+    let src = include_str!("fixtures/spill_io.rs");
+    let v = lint_source("store/spill_io.rs", src);
+    let direct = rules(&v, "spill-direct-io");
+    // The two raw std::fs:: calls; the string decoy and the
+    // #[cfg(test)] module are exempt.
+    assert_eq!(direct.len(), 2, "got: {v:?}");
+    let text: Vec<&str> = src.lines().collect();
+    for viol in &direct {
+        assert!(text[viol.line - 1].contains("std::fs::"), "bogus line {}", viol.line);
+    }
+    // The spill facade itself is exempt...
+    let facade = lint_source("store/spill.rs", src);
+    assert!(rules(&facade, "spill-direct-io").is_empty());
+    // ...and so is everything outside store/.
+    let outside = lint_source("model/spill_io.rs", src);
+    assert!(rules(&outside, "spill-direct-io").is_empty());
+}
+
+#[test]
 fn clean_fixture_has_no_violations() {
     let src = include_str!("fixtures/clean.rs");
     let v = lint_source("model/clean.rs", src);
