@@ -37,11 +37,40 @@ use retrieval_attention::index::{
 };
 use retrieval_attention::kernel::{self, QuantMode};
 use retrieval_attention::model::Engine;
+use retrieval_attention::telemetry;
 use retrieval_attention::tensor::Matrix;
 use retrieval_attention::util::bench::{black_box, Bencher};
 use retrieval_attention::util::json::{self, Value};
 use retrieval_attention::util::rng::Rng;
 use retrieval_attention::workload::geometry::{generate, GeometryParams};
+
+/// Allocation-counting global allocator: wraps the system allocator and
+/// counts every `alloc` call, so the smoke profile can assert the
+/// disabled-telemetry hot path performs literally zero allocations.
+struct CountingAlloc;
+
+static ALLOC_CALLS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+// SAFETY: defers every operation to the system allocator unchanged; the
+// counter is a side effect that never touches the returned memory.
+unsafe impl std::alloc::GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
+        std::alloc::System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: std::alloc::Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn heads_for(
     spec: &retrieval_attention::runtime::manifest::SpecMeta,
@@ -396,12 +425,48 @@ fn write_bench_summary(
     if let Some(hp) = head_policy {
         out.set("head_policy", hp);
     }
+    // The process-wide metric registry rides along with every bench run:
+    // the trajectory file records what the instrumented layers actually
+    // counted, not just what the harness timed.
+    out.set("telemetry_registry", telemetry::registry().snapshot());
     std::fs::write("BENCH_decode.json", out.to_string_pretty()).ok();
 }
 
 /// `bench-smoke`: tiny-geometry run asserting the JSON summary is
 /// produced and the kernel dispatch actually selected a backend.
+/// Assert the disabled-telemetry hot path allocates nothing: counter,
+/// gauge, and histogram updates plus a gated span_record must be pure
+/// atomic arithmetic. Runs first in smoke(), while the process is still
+/// single-threaded, so the global allocation counter can't pick up noise
+/// from worker threads.
+fn assert_disabled_telemetry_path_is_allocation_free() {
+    let reg = telemetry::registry();
+    // Handle registration allocates; fetch everything before the window.
+    let c = reg.counter("bench.smoke.counter");
+    let g = reg.gauge("bench.smoke.gauge");
+    let h = reg.histogram("bench.smoke.hist");
+    let mut acc = telemetry::SpanAcc::default();
+    let before = ALLOC_CALLS.load(std::sync::atomic::Ordering::Relaxed);
+    for i in 0..10_000u64 {
+        c.inc();
+        g.set(i as f64);
+        h.record(i as f64 * 1e-6);
+        let t = telemetry::Stopwatch::start();
+        telemetry::span_record(&mut acc, telemetry::Phase::Qkv, t.started(), t.elapsed_s(), 0);
+    }
+    let after = ALLOC_CALLS.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(acc.is_empty(), "spans must be disabled in the bench process");
+    assert_eq!(
+        after - before,
+        0,
+        "disabled-telemetry hot path allocated {} time(s) over 10k iterations",
+        after - before
+    );
+    println!("bench-smoke: disabled-telemetry path performed 0 allocations over 10k ops");
+}
+
 fn smoke() {
+    assert_disabled_telemetry_path_is_allocation_free();
     println!("bench-smoke: kernel dispatch = {}", kernel::active().label());
     #[cfg(target_arch = "x86_64")]
     {
@@ -476,6 +541,19 @@ fn smoke() {
             .expect("snapshot savings field");
         assert!(snap_saved > 0.0, "streaming heads did not shrink the snapshot");
     }
+    // The registry snapshot rides along: the wave profile above decoded
+    // tokens, so the engine counters must be present and non-zero.
+    let treg = v.get("telemetry_registry").expect("telemetry_registry in summary");
+    let tokens = treg
+        .get("counters")
+        .and_then(|c| c.get("engine.tokens_total"))
+        .and_then(Value::as_u64)
+        .expect("engine.tokens_total counter");
+    assert!(tokens > 0, "decode profiles ran but engine.tokens_total is 0");
+    assert!(
+        treg.get("histograms").and_then(|h| h.get("store.snapshot_s")).is_some(),
+        "snapshot profile ran but store.snapshot_s histogram missing"
+    );
     println!(
         "bench-smoke: OK ({} search-phase cases, kernel = {})",
         cases.len(),

@@ -307,6 +307,35 @@ impl Default for SessionCacheConfig {
     }
 }
 
+/// Observability knobs (`serving.telemetry`) — see docs/observability.md
+/// for the metric-name registry and the span taxonomy these feed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Collect structured spans on the decode path (per-request span
+    /// trees in the done event). Off by default: the disabled path is a
+    /// single atomic load with zero allocations, and enabling it never
+    /// changes decoded tokens (locked by the scheduler equivalence
+    /// suite's telemetry-on leg).
+    pub spans: bool,
+    /// Opt-in chrome://tracing output: when non-empty, every span is
+    /// additionally streamed to this file as a trace event (JSON array
+    /// format — loadable even mid-run). Empty ⇒ no trace file.
+    pub trace_path: String,
+    /// Flight-recorder ring capacity (recent structured events kept in
+    /// memory for the supervisor's crash dump). `0` disables recording.
+    pub flightrec_capacity: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            spans: false,
+            trace_path: String::new(),
+            flightrec_capacity: 256,
+        }
+    }
+}
+
 /// Serving-layer (coordinator/replica) knobs beyond raw scheduling.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ServingConfig {
@@ -320,6 +349,8 @@ pub struct ServingConfig {
     /// Times the router's supervisor will respawn a crashed replica
     /// worker before giving up and failing its requests outright.
     pub max_respawns: u32,
+    /// Observability knobs (spans, trace file, flight recorder).
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for ServingConfig {
@@ -330,6 +361,7 @@ impl Default for ServingConfig {
             // indefinitely, exactly as before this knob existed.
             request_deadline_ms: 0,
             max_respawns: 3,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -465,8 +497,13 @@ impl ServeConfig {
             .set("ephemeral_spill", self.serving.session_cache.ephemeral_spill)
             .set("spill_retries", self.serving.session_cache.spill_retries)
             .set("spill_retry_backoff_ms", self.serving.session_cache.spill_retry_backoff_ms);
+        let mut tl = Value::obj();
+        tl.set("spans", self.serving.telemetry.spans)
+            .set("trace_path", self.serving.telemetry.trace_path.as_str())
+            .set("flightrec_capacity", self.serving.telemetry.flightrec_capacity);
         let mut sv = Value::obj();
         sv.set("session_cache", sc);
+        sv.set("telemetry", tl);
         sv.set("request_deadline_ms", self.serving.request_deadline_ms)
             .set("max_respawns", self.serving.max_respawns as u64);
         o.set("serving", sv);
@@ -590,6 +627,17 @@ impl ServeConfig {
                 }
                 if let Some(x) = sc.get("spill_retry_backoff_ms").and_then(Value::as_u64) {
                     c.serving.session_cache.spill_retry_backoff_ms = x;
+                }
+            }
+            if let Some(tl) = sv.get("telemetry") {
+                if let Some(x) = tl.get("spans").and_then(Value::as_bool) {
+                    c.serving.telemetry.spans = x;
+                }
+                if let Some(x) = tl.get("trace_path").and_then(Value::as_str) {
+                    c.serving.telemetry.trace_path = x.to_string();
+                }
+                if let Some(x) = tl.get("flightrec_capacity").and_then(Value::as_usize) {
+                    c.serving.telemetry.flightrec_capacity = x;
                 }
             }
             if let Some(x) = sv.get("request_deadline_ms").and_then(Value::as_u64) {
@@ -744,6 +792,27 @@ mod tests {
         assert!(!parsed.serving.session_cache.ephemeral_spill, "durable by default");
         assert_eq!(parsed.serving.request_deadline_ms, 0, "no deadline by default");
         assert_eq!(parsed.serving.max_respawns, 3);
+    }
+
+    #[test]
+    fn telemetry_roundtrips_and_defaults() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.serving.telemetry, TelemetryConfig::default());
+        assert!(!c.serving.telemetry.spans, "spans off by default");
+        assert!(c.serving.telemetry.trace_path.is_empty(), "no trace file by default");
+        assert_eq!(c.serving.telemetry.flightrec_capacity, 256);
+        c.serving.telemetry = TelemetryConfig {
+            spans: true,
+            trace_path: "/tmp/ra-trace.jsonl".into(),
+            flightrec_capacity: 64,
+        };
+        let back = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.serving.telemetry, c.serving.telemetry);
+        // Absent block falls back to defaults.
+        let v = json::parse(r#"{"serving":{"max_respawns":5}}"#).unwrap();
+        let parsed = ServeConfig::from_json(&v).unwrap();
+        assert_eq!(parsed.serving.telemetry, TelemetryConfig::default());
+        assert_eq!(parsed.serving.max_respawns, 5);
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::config::ServeConfig;
 use crate::metrics::{PhaseBreakdown, WaveTelemetry};
 use crate::model::{Engine, Session, WaveItem};
 use crate::store::SessionCache;
+use crate::telemetry::{self, SpanAcc};
 use crate::util::contain::contained;
 use crate::util::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use crate::util::sync::{Arc, Mutex, PoisonError};
@@ -156,6 +157,15 @@ pub struct RequestMetrics {
     /// Host index bytes released by streaming-head specialization over
     /// the session's lifetime (0 when the policy layer is off).
     pub index_bytes_avoided: u64,
+    /// Cumulative sessions this replica recovered from durable snapshots
+    /// at boot scan (crash recovery provenance, PR 9).
+    pub sessions_recovered: u64,
+    /// Cumulative snapshots this replica quarantined (failed restores
+    /// moved aside rather than deleted).
+    pub snapshots_quarantined: u64,
+    /// Per-request span tree (phase counts + wall seconds), all-zero
+    /// unless the `serving.telemetry.spans` knob is on.
+    pub spans: SpanAcc,
 }
 
 struct Job {
@@ -315,10 +325,32 @@ impl Replica {
             return false;
         }
         *used += 1;
+        telemetry::registry().counter("coordinator.respawns_total").inc();
+        // Record the respawn, THEN dump the flight recorder: the tail of
+        // the dumped JSONL is the event history leading up to the crash,
+        // closed by this respawn marker. The dump lands next to the
+        // durable snapshots the new worker will boot-scan.
+        telemetry::flightrec(
+            "respawn",
+            format!(
+                "replica worker died; respawn {} of {}",
+                *used, self.cfg.serving.max_respawns
+            ),
+        );
+        let dir = if self.cfg.serving.session_cache.spill_dir.is_empty() {
+            std::env::temp_dir()
+        } else {
+            std::path::PathBuf::from(&self.cfg.serving.session_cache.spill_dir)
+        };
+        let _ = telemetry::flightrec_dump(&dir);
         // Reap the dead generation (join is immediate: the thread has
         // exited), then replace it wholesale. Jobs queued to the dead
         // worker fail by disconnect; parked sessions come back via the
-        // new worker's spill-dir boot scan.
+        // new worker's spill-dir boot scan. The fresh generation owns a
+        // fresh `WaveTelemetry` AND a fresh resident set, so admission
+        // snapshots can never straddle a respawn (see the retirement
+        // deltas below, which saturate anyway as a second line of
+        // defense).
         if let Some(h) = gen.handle.take() {
             let _ = h.join();
         }
@@ -394,12 +426,63 @@ fn select_mut<'a>(active: &'a mut [Active], idxs: &[usize]) -> Vec<&'a mut Activ
     out
 }
 
+/// Cached process-registry handles for the worker loop: one name lookup
+/// per worker generation, plain atomic updates per wave after that.
+struct WorkerTele {
+    queue_depth: Arc<telemetry::Gauge>,
+    wave_occupancy: Arc<telemetry::Gauge>,
+    waves: Arc<telemetry::Counter>,
+    admitted: Arc<telemetry::Counter>,
+    retired: Arc<telemetry::Counter>,
+    failed: Arc<telemetry::Counter>,
+    sched_gap_s: Arc<telemetry::Histogram>,
+    resident: Arc<telemetry::Gauge>,
+    parked: Arc<telemetry::Gauge>,
+    disk_bytes: Arc<telemetry::Gauge>,
+    recovered: Arc<telemetry::Gauge>,
+    quarantined: Arc<telemetry::Gauge>,
+    tombstone_ratio: Arc<telemetry::Gauge>,
+}
+
+impl WorkerTele {
+    fn new() -> WorkerTele {
+        let reg = telemetry::registry();
+        WorkerTele {
+            queue_depth: reg.gauge("coordinator.queue_depth"),
+            wave_occupancy: reg.gauge("coordinator.wave_occupancy"),
+            waves: reg.counter("coordinator.waves_total"),
+            admitted: reg.counter("coordinator.admitted_total"),
+            retired: reg.counter("coordinator.retired_total"),
+            failed: reg.counter("coordinator.failed_total"),
+            sched_gap_s: reg.histogram("coordinator.sched_gap_s"),
+            resident: reg.gauge("store.resident_sessions"),
+            parked: reg.gauge("store.parked_sessions"),
+            disk_bytes: reg.gauge("store.disk_bytes"),
+            recovered: reg.gauge("store.sessions_recovered"),
+            quarantined: reg.gauge("store.snapshots_quarantined"),
+            tombstone_ratio: reg.gauge("maintenance.tombstone_ratio"),
+        }
+    }
+
+    /// Refresh the store-family gauges from the replica's registry state
+    /// (called after every operation that can move a session between
+    /// tiers: admission resume, retirement retention, close).
+    fn sync_store(&self, sessions: &SessionCache) {
+        self.resident.set_u64(sessions.resident_count() as u64);
+        self.parked.set_u64(sessions.parked_count() as u64);
+        self.disk_bytes.set_u64(sessions.disk_bytes());
+        self.recovered.set_u64(sessions.stats.recovered);
+        self.quarantined.set_u64(sessions.stats.quarantines);
+    }
+}
+
 /// Apply one decode-step outcome to an active session: stream the token
 /// (or the failure) and mark the session finished when its budget is met.
 fn apply_step(
     a: &mut Active,
     step: Result<(u32, PhaseBreakdown)>,
     wave: &mut WaveTelemetry,
+    tele: &WorkerTele,
     finished: &mut Vec<usize>,
     idx: usize,
 ) {
@@ -422,6 +505,8 @@ fn apply_step(
             // session N: ... (backpressure)" must survive to the client,
             // not just the outermost context line.
             let _ = a.job.reply.send(Event::Failed(a.job.req.id, format!("{e:#}")));
+            tele.failed.inc();
+            telemetry::flightrec("request.fail", format!("req={}: {e:#}", a.job.req.id));
             a.failed = true;
             finished.push(idx);
         }
@@ -450,6 +535,18 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
     // Replica-wide wave telemetry + admission sequence numbers.
     let mut wave = WaveTelemetry::default();
     let mut next_seq = 0u64;
+    let tele = WorkerTele::new();
+    tele.sync_store(&sessions);
+    if sessions.stats.recovered > 0 {
+        telemetry::flightrec(
+            "store.recovered",
+            format!("boot scan re-registered {} parked session(s)", sessions.stats.recovered),
+        );
+    }
+    // End of the previous wave's dispatch: the gap until the next wave
+    // starts is scheduler overhead (intake + admission + pick), the
+    // "wave scheduling gap" the trace file makes visible.
+    let mut wave_ended_at: Option<Instant> = None;
 
     loop {
         // Supervision kill switch (panic-only site, test builds only): a
@@ -488,6 +585,7 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
             }
         }
         board.set_queued(waiting.len());
+        tele.queue_depth.set_u64(waiting.len() as u64);
 
         // Admit work while there is resident capacity. Close verbs are
         // registry operations, not decodes: handled inline.
@@ -511,6 +609,7 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
             }
             if let Some(spec @ SessionSpec { mode: SessionMode::Close, .. }) = job.req.session {
                 let known = sessions.close(spec.session_id);
+                tele.sync_store(&sessions);
                 // Registry op done: free the slot before the client hears
                 // the outcome (a client acting on Done must observe the
                 // freed capacity — the exactly-once accounting contract).
@@ -567,6 +666,18 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
                         tokens_at_admit: wave.tokens_emitted,
                     };
                     next_seq += 1;
+                    tele.admitted.inc();
+                    tele.sync_store(&sessions);
+                    telemetry::flightrec(
+                        "admit",
+                        format!(
+                            "req={} mode={} prompt={} max_tokens={}",
+                            a.job.req.id,
+                            a.job.req.session.map(|s| s.mode.label()).unwrap_or("oneshot"),
+                            a.job.req.prompt.len(),
+                            a.job.req.max_tokens
+                        ),
+                    );
                     // A continuation already decoded its first token (the
                     // last prompt token's decode step). With max_tokens=0
                     // the token is discarded un-emitted — the KV grew
@@ -586,11 +697,17 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
                 }
                 Err(e) => {
                     board.retire();
+                    tele.failed.inc();
+                    telemetry::flightrec(
+                        "admit.fail",
+                        format!("req={}: {e:#}", job.req.id),
+                    );
                     let _ = job.reply.send(Event::Failed(job.req.id, format!("{e:#}")));
                 }
             }
         }
         board.set_queued(waiting.len());
+        tele.queue_depth.set_u64(waiting.len() as u64);
 
         // Pre-pass: already-satisfied sessions (continuation whose first
         // token filled the budget, or max_tokens == 0) retire without
@@ -617,6 +734,15 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
                     .collect();
             wave.waves += 1;
             wave.scheduled_total += picked.len() as u64;
+            tele.waves.inc();
+            tele.wave_occupancy.set(picked.len() as f64);
+            // Scheduling gap: time between the previous wave's dispatch
+            // finishing and this one starting (intake/admission overhead).
+            if let Some(prev) = wave_ended_at {
+                let gap = prev.elapsed().as_secs_f64();
+                tele.sched_gap_s.record(gap);
+                telemetry::trace_emit("wave_gap", prev, gap, 0);
+            }
             // Cadence accounting: a scheduled session's inter-token gap is
             // its skipped waves plus this one; a skipped session ages.
             let mut picked_set = vec![false; active.len()];
@@ -640,7 +766,7 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
                 let a = &mut active[i];
                 let step = contained("first-token step", || engine.first_token(&a.sess))
                     .map(|t| (t, PhaseBreakdown::default()));
-                apply_step(a, step, &mut wave, &mut finished, i);
+                apply_step(a, step, &mut wave, &tele, &mut finished, i);
             }
             // The fused wave step: every remaining picked session advances
             // one token in a single multi-session engine dispatch. The
@@ -666,9 +792,17 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
                 };
                 drop(items);
                 for ((a, res), &i) in selected.into_iter().zip(results).zip(steps.iter()) {
-                    apply_step(a, res.map(|o| (o.token, o.breakdown)), &mut wave, &mut finished, i);
+                    apply_step(
+                        a,
+                        res.map(|o| (o.token, o.breakdown)),
+                        &mut wave,
+                        &tele,
+                        &mut finished,
+                        i,
+                    );
                 }
             }
+            wave_ended_at = Some(Instant::now());
         }
 
         // Retire finished sessions (reverse order keeps indices valid).
@@ -686,7 +820,19 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
             let n_out = a.produced.len();
             let decode_total = a.decode_bd.total();
             let maint = a.sess.maint.stats;
+            // Per-request span tree: everything recorded since this
+            // turn's admission (prefill or restore + decode). Taking it
+            // here (rather than copying) resets the accumulator for the
+            // session's NEXT turn, so retained sessions report per-turn
+            // spans, not lifetime ones.
+            let spans = std::mem::take(&mut a.sess.spans);
             // Wave telemetry deltas over this request's residency window.
+            // Saturating on purpose (satellite of ISSUE 10): admission
+            // snapshots and the `wave` counters are both generation-local
+            // — a respawned worker starts BOTH at zero, so a snapshot can
+            // never legitimately exceed the live counter — but a
+            // wraparound/ordering bug must clamp to 0, not produce a
+            // negative-garbage occupancy or throughput.
             let waves_delta = wave.waves.saturating_sub(a.waves_at_admit);
             let sched_delta = wave.scheduled_total.saturating_sub(a.sched_at_admit);
             let tokens_delta = wave.tokens_emitted.saturating_sub(a.tokens_at_admit);
@@ -726,7 +872,11 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
                 },
                 streaming_head_fraction: a.sess.streaming_fraction(),
                 index_bytes_avoided: a.sess.index_bytes_avoided,
+                sessions_recovered: sessions.stats.recovered,
+                snapshots_quarantined: sessions.stats.quarantines,
+                spans,
             };
+            let tombstone_ratio = metrics.tombstone_ratio;
             // Session-tracked turns retain their session for the next one
             // (a failed step poisons it — never retain half-decoded
             // state). Retention may LRU-park colder sessions to disk; if
@@ -752,6 +902,18 @@ fn worker_loop(engine: &Engine, cfg: &ServeConfig, rx: Receiver<Job>, board: &Sl
                 }
                 None => Event::Done(a.job.req.id, metrics),
             };
+            tele.retired.inc();
+            tele.sync_store(&sessions);
+            tele.tombstone_ratio.set(tombstone_ratio);
+            telemetry::flightrec(
+                "retire",
+                format!(
+                    "req={} tokens={} failed={}",
+                    a.job.req.id,
+                    n_out,
+                    a.failed
+                ),
+            );
             // Retire AFTER the session's results are published (tokens
             // streamed, registry updated) and BEFORE the client hears the
             // terminal event, so a client acting on Done observes the

@@ -105,9 +105,16 @@ fn detect_arch() -> Dispatch {
 }
 
 /// The backend selected for this process (detected once, then cached).
+/// First call also publishes the choice as the `kernel.dispatch` label in
+/// the process metrics registry (the stats verb reports which backend a
+/// fleet replica actually dispatched to).
 #[inline]
 pub fn active() -> Dispatch {
-    *ACTIVE.get_or_init(detect)
+    *ACTIVE.get_or_init(|| {
+        let d = detect();
+        crate::telemetry::registry().set_label("kernel.dispatch", d.label());
+        d
+    })
 }
 
 /// Best-effort software prefetch of the cache line at `p` (no-op off

@@ -56,6 +56,11 @@
 //! * [`experiments`] — one driver per paper table/figure.
 //! * [`hw`] — hardware profiles and KV-cache memory arithmetic.
 //! * [`metrics`] — latency histograms and per-phase breakdowns.
+//! * [`telemetry`] — the unified observability layer: the process-wide
+//!   metrics registry (lock-free counters/gauges + bounded log-bucketed
+//!   histograms), the span facade tracing the decode wave (zero-cost
+//!   when disabled, opt-in chrome://tracing output), and the bounded
+//!   flight recorder the supervisor dumps on a worker crash.
 
 // Clippy is *enforced* crate-wide (deny, not advisory): the bug-shaped
 // bundles are hard errors everywhere — `make clippy` and the CI lint job
@@ -86,5 +91,6 @@ pub mod policy;
 pub mod runtime;
 pub mod server;
 pub mod store;
+pub mod telemetry;
 pub mod tensor;
 pub mod workload;

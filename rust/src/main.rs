@@ -6,6 +6,7 @@
 //! retrieval-attention generate   [--config cfg.json] --prompt-task passkey
 //!                                [--len N] [--max-tokens T] [--method M]
 //! retrieval-attention experiment <id>|all|list [--full] [--out results/]
+//! retrieval-attention stats      [--addr 127.0.0.1:8041] [--json]
 //! retrieval-attention info       [--artifacts artifacts/]
 //! ```
 //!
@@ -15,7 +16,8 @@ use anyhow::{Context, Result};
 use retrieval_attention::config::{Method, ServeConfig};
 use retrieval_attention::coordinator::{collect, router::Router, Request};
 use retrieval_attention::experiments::{self, ExpCtx};
-use retrieval_attention::server::Server;
+use retrieval_attention::server::{Client, Server};
+use retrieval_attention::util::json::Value;
 use retrieval_attention::util::rng::Rng;
 use retrieval_attention::workload::tasks;
 use std::sync::Arc;
@@ -90,6 +92,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "generate" => cmd_generate(&args),
         "experiment" => cmd_experiment(&args),
+        "stats" => cmd_stats(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -110,13 +113,15 @@ fn print_usage() {
          \x20 serve       start the json-lines TCP server\n\
          \x20 generate    run one synthetic prompt through the engine\n\
          \x20 experiment  regenerate a paper table/figure (or `all`, `list`)\n\
+         \x20 stats       dump a running server's telemetry registry\n\
          \x20 info        show artifact manifest / presets\n\
          \n\
          common flags: --config cfg.json --model PRESET --method METHOD\n\
          \x20            --artifacts DIR --top-k K\n\
          serve flags:  --addr HOST:PORT --replicas N\n\
          generate:     --prompt-task passkey|kv|vt --len N --max-tokens T --depth D\n\
-         experiment:   --full --out DIR"
+         experiment:   --full --out DIR\n\
+         stats:        --addr HOST:PORT [--json]"
     );
 }
 
@@ -193,6 +198,80 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         ctx.artifacts_dir = a.to_string();
     }
     experiments::run(id, &ctx)
+}
+
+/// Fetch and pretty-print a running server's telemetry registry
+/// snapshot (`--json` dumps the raw wire object for scripting).
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr: std::net::SocketAddr = args
+        .get("addr")
+        .unwrap_or("127.0.0.1:8041")
+        .parse()
+        .context("--addr must be HOST:PORT")?;
+    let mut client = Client::connect(addr)?;
+    let v = client.stats()?;
+    if args.has("json") {
+        println!("{}", v.to_string());
+        return Ok(());
+    }
+    // Section helper: iterate an object field of the registry snapshot in
+    // sorted key order (Value objects are BTreeMaps).
+    let section = |snapshot: &Value, kind: &str| -> Vec<(String, Value)> {
+        match snapshot.get(kind) {
+            Some(Value::Obj(m)) => m.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+            _ => Vec::new(),
+        }
+    };
+    if let Some(router) = v.get("router") {
+        println!(
+            "router: replicas={} outstanding={} respawns={}",
+            router.get("replicas").and_then(Value::as_u64).unwrap_or(0),
+            router.get("outstanding").and_then(Value::as_u64).unwrap_or(0),
+            router.get("respawns").and_then(Value::as_u64).unwrap_or(0),
+        );
+    }
+    if let Some(n) = v.get("flightrec_len").and_then(Value::as_u64) {
+        println!("flight recorder: {n} buffered event(s)");
+    }
+    let reg = v.get("registry").cloned().unwrap_or_else(Value::obj);
+    let labels = section(&reg, "labels");
+    if !labels.is_empty() {
+        println!("labels:");
+        for (k, val) in labels {
+            println!("  {k} = {}", val.as_str().unwrap_or("?"));
+        }
+    }
+    let counters = section(&reg, "counters");
+    if !counters.is_empty() {
+        println!("counters:");
+        for (k, val) in counters {
+            println!("  {k:<42} {}", val.as_u64().unwrap_or(0));
+        }
+    }
+    let gauges = section(&reg, "gauges");
+    if !gauges.is_empty() {
+        println!("gauges:");
+        for (k, val) in gauges {
+            println!("  {k:<42} {}", val.as_f64().unwrap_or(0.0));
+        }
+    }
+    let hists = section(&reg, "histograms");
+    if !hists.is_empty() {
+        println!("histograms:");
+        println!("  {:<42} {:>8} {:>10} {:>10} {:>10} {:>10}", "name", "count", "mean", "p50", "p99", "max");
+        for (k, h) in hists {
+            let f = |field: &str| h.get(field).and_then(Value::as_f64).unwrap_or(0.0);
+            println!(
+                "  {k:<42} {:>8} {:>10.4} {:>10.4} {:>10.4} {:>10.4}",
+                h.get("count").and_then(Value::as_u64).unwrap_or(0),
+                f("mean"),
+                f("p50"),
+                f("p99"),
+                f("max"),
+            );
+        }
+    }
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

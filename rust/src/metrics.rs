@@ -1,8 +1,14 @@
 //! Latency metrics: histograms, counters, and the per-phase decode
 //! breakdown of Table 5 (vector search / attention / other).
+//!
+//! These are the *per-request / per-bench* value types. The process-wide
+//! always-on view (named counters, gauges, bounded log-bucketed
+//! histograms, spans, the flight recorder) lives in [`crate::telemetry`];
+//! phase timing itself moved there too ([`crate::telemetry::Stopwatch`]),
+//! so one mechanism feeds both the breakdown slots below and the span
+//! trees.
 
-
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Streaming latency recorder with percentile queries. Stores raw samples
 /// (decode benchmarks record at most a few hundred thousand points).
@@ -133,25 +139,6 @@ pub struct WaveTelemetry {
     pub tokens_emitted: u64,
 }
 
-/// Scoped phase timer: accumulates elapsed time into a breakdown slot.
-pub struct PhaseTimer {
-    start: Instant,
-}
-
-impl PhaseTimer {
-    pub fn start() -> Self {
-        PhaseTimer { start: Instant::now() }
-    }
-
-    pub fn stop_into(self, slot: &mut f64) {
-        *slot += self.start.elapsed().as_secs_f64();
-    }
-
-    pub fn elapsed_s(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,11 +178,12 @@ mod tests {
     }
 
     #[test]
-    fn phase_timer_accumulates() {
+    fn stopwatch_accumulates_like_the_old_phase_timer() {
         let mut slot = 0.0;
-        let t = PhaseTimer::start();
+        let t = crate::telemetry::Stopwatch::start();
         std::thread::sleep(Duration::from_millis(5));
-        t.stop_into(&mut slot);
+        let s = t.stop_into(&mut slot);
         assert!(slot >= 0.004);
+        assert!((slot - s).abs() < 1e-15, "returns what it accumulated");
     }
 }

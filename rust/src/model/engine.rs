@@ -37,7 +37,8 @@ use crate::policy::{Calibrator, HeadPolicy, PolicyMap, PolicyMode};
 use crate::index::KeyStore;
 use crate::kernel;
 use crate::kvcache::{StaticPattern, TieredKvCache};
-use crate::metrics::{PhaseBreakdown, PhaseTimer};
+use crate::metrics::PhaseBreakdown;
+use crate::telemetry::{self, Phase, SpanAcc, Stopwatch};
 use crate::model::maintain::{
     run_compact, run_drain, run_evict, CompactJob, Done, DoneKind, DrainJob, EvictJob, Job,
     MaintenanceState,
@@ -137,6 +138,11 @@ pub struct Session {
     /// done-event metric; 0 until a calibration decides, since statically
     /// assigned heads never build an index in the first place).
     pub index_bytes_avoided: u64,
+    /// Per-request span tree (phase hit counts + wall seconds), recorded
+    /// by [`crate::telemetry::span_record`] only while the
+    /// `serving.telemetry.spans` knob is on; stays all-zero otherwise.
+    /// The coordinator resets it at admission and reads it at retirement.
+    pub spans: SpanAcc,
 }
 
 /// One decode step's outputs.
@@ -170,6 +176,9 @@ fn push_recent(ring: &mut Matrix, q: &[f32], cap: usize) {
 
 impl Engine {
     pub fn new(rt: Runtime, weights: Weights, cfg: ServeConfig) -> Result<Engine> {
+        // One-time process-wide telemetry arming (span flag, trace file,
+        // flight-recorder capacity) — idempotent across replicas.
+        telemetry::configure(&cfg.serving.telemetry);
         weights
             .validate(&rt.meta().spec)
             .map_err(|e| anyhow::anyhow!("weights do not match manifest: {e}"))?;
@@ -224,6 +233,7 @@ impl Engine {
     /// Run the prompt through the model (chunked prefill), build host
     /// retrievers, and return a ready-to-decode session.
     pub fn prefill(&self, tokens: &[u32]) -> Result<Session> {
+        let t = Stopwatch::start();
         let spec = self.spec().clone();
         let pattern = self.cfg.pattern;
         let n = tokens.len();
@@ -316,7 +326,7 @@ impl Engine {
         let (retrievers, groups) =
             self.build_retrievers_with(&caches, &q_history, self.cfg.method, &policy)?;
         let recent_q = self.empty_recent_rings();
-        Ok(Session {
+        let mut sess = Session {
             method: self.cfg.method,
             caches,
             q_history,
@@ -335,7 +345,12 @@ impl Engine {
             calib: self.new_calibrator(self.cfg.method),
             policy,
             index_bytes_avoided: 0,
-        })
+            spans: SpanAcc::default(),
+        };
+        let secs = t.elapsed_s();
+        telemetry::span_record(&mut sess.spans, Phase::Prefill, t.started(), secs, 0);
+        telemetry::registry().histogram("engine.prefill_s").record(secs);
+        Ok(sess)
     }
 
     /// The build-time policy for `method`: the static override map. Under
@@ -573,6 +588,10 @@ impl Engine {
         let mut prev_qs: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
         let mut o_devs: Vec<Vec<f32>> = vec![Vec::new(); n];
         let mut lse_devs: Vec<Vec<f32>> = vec![Vec::new(); n];
+        // Wave-level registry accounting, flushed once per wave (never
+        // per token) so the hot loop stays free of registry lookups.
+        let mut scanned_wave = 0u64;
+        let mut tokens_emitted = 0u64;
 
         // Embed (serial per slot).
         for (s, it) in items.iter_mut().enumerate() {
@@ -581,7 +600,7 @@ impl Engine {
             if it.sess.host_ids.len() < spec.q_heads {
                 it.sess.host_ids.resize_with(spec.q_heads, Vec::new);
             }
-            let t = PhaseTimer::start();
+            let t = Stopwatch::start();
             let r = contained("wave embed step", || -> Result<Vec<f32>> {
                 crate::util::failpoint::trigger("wave.decode")?;
                 let pos = crate::model::position_code(&spec, it.sess.len);
@@ -590,7 +609,8 @@ impl Engine {
                 let outs = self.rt.exec_b("embed_b1", &[&self.lits.table, &id_b, &pos_b])?;
                 literal_to_f32(&outs[0])
             });
-            t.stop_into(&mut bds[s].other);
+            let secs = t.stop_into(&mut bds[s].other);
+            telemetry::span_record(&mut it.sess.spans, Phase::Embed, t.started(), secs, s as u64);
             match r {
                 Ok(x) => xs[s] = x,
                 Err(e) => errs[s] = Some(e),
@@ -605,7 +625,7 @@ impl Engine {
                 if errs[s].is_some() {
                     continue;
                 }
-                let t = PhaseTimer::start();
+                let t = Stopwatch::start();
                 let r = contained("wave qkv step", || -> Result<Vec<f32>> {
                     let x_b = self.rt.upload_f32(&xs[s], &[1, spec.d_model])?;
                     let outs =
@@ -630,7 +650,8 @@ impl Engine {
                     }
                     Ok(q)
                 });
-                t.stop_into(&mut bds[s].other);
+                let secs = t.stop_into(&mut bds[s].other);
+                telemetry::span_record(&mut it.sess.spans, Phase::Qkv, t.started(), secs, s as u64);
                 let q = match r {
                     Ok(q) => q,
                     Err(e) => {
@@ -638,7 +659,7 @@ impl Engine {
                         continue;
                     }
                 };
-                let t = PhaseTimer::start();
+                let t = Stopwatch::start();
                 match contained("wave device-partial step", || {
                     self.device_partial(&it.sess.caches[layer], &q, &spec)
                 }) {
@@ -649,7 +670,14 @@ impl Engine {
                     }
                     Err(e) => errs[s] = Some(e),
                 }
-                t.stop_into(&mut bds[s].attention);
+                let secs = t.stop_into(&mut bds[s].attention);
+                telemetry::span_record(
+                    &mut it.sess.spans,
+                    Phase::DeviceAttn,
+                    t.started(),
+                    secs,
+                    s as u64,
+                );
             }
 
             let live: Vec<usize> = (0..n).filter(|&s| errs[s].is_none()).collect();
@@ -662,7 +690,7 @@ impl Engine {
             // fan-out — cross-session candidate scoring in shared kernel
             // dispatches instead of per-session pools.
             let budget = retrieval_k.budget.k_for_layer(layer, spec.layers);
-            let t = PhaseTimer::start();
+            let t = Stopwatch::start();
             let mut retrieved_all: Vec<Vec<crate::baselines::Retrieval>> =
                 (0..n).map(|_| Vec::new()).collect();
             {
@@ -690,8 +718,10 @@ impl Engine {
             for &s in &live {
                 bds[s].search += share;
                 let sess = &mut *items[s].sess;
+                telemetry::span_record(&mut sess.spans, Phase::Retrieval, t.started(), share, s as u64);
                 for r in &retrieved_all[s] {
                     sess.scanned_total += r.scanned as u64;
+                    scanned_wave += r.scanned as u64;
                     sess.retrievals += 1;
                 }
             }
@@ -700,7 +730,7 @@ impl Engine {
             // `retrieved[h].ids` clone per head × layer × token; overflow
             // ids materialised once per GQA group).
             for &s in &live {
-                let t = PhaseTimer::start();
+                let t = Stopwatch::start();
                 let sess = &mut *items[s].sess;
                 let overflow: Vec<Vec<u32>> = (0..spec.kv_heads)
                     .map(|kvh| sess.caches[layer][kvh].overflow_ids())
@@ -731,7 +761,8 @@ impl Engine {
                         ids.retain(|&id| !cache.is_retired(id as usize));
                     },
                 );
-                t.stop_into(&mut bds[s].attention);
+                let secs = t.stop_into(&mut bds[s].attention);
+                telemetry::span_record(&mut sess.spans, Phase::Candidates, t.started(), secs, s as u64);
             }
 
             // Host partial attention, FUSED: one multi-query gather per
@@ -739,7 +770,7 @@ impl Engine {
             // per group instead of once per head — with the NEXT slot's
             // first candidate rows prefetched while this group's softmax
             // is in flight (the wave-overlap read-ahead).
-            let t = PhaseTimer::start();
+            let t = Stopwatch::start();
             let att_work: Vec<(usize, usize)> = live
                 .iter()
                 .flat_map(|&s| (0..spec.kv_heads).map(move |kvh| (s, kvh)))
@@ -779,6 +810,13 @@ impl Engine {
             let share = t.elapsed_s() / live.len() as f64;
             for &s in &live {
                 bds[s].attention += share;
+                telemetry::span_record(
+                    &mut items[s].sess.spans,
+                    Phase::HostAttn,
+                    t.started(),
+                    share,
+                    s as u64,
+                );
             }
             let mut slot_parts: Vec<Vec<Vec<PartialAttention>>> =
                 (0..n).map(|_| Vec::new()).collect();
@@ -789,7 +827,7 @@ impl Engine {
             // Exact γ-combine (Eq. 4/5) + output projection + FFN
             // (device round-trips: serial per live slot).
             for &s in &live {
-                let t = PhaseTimer::start();
+                let t = Stopwatch::start();
                 let mut attn = vec![0.0f32; spec.q_heads * dh];
                 for h in 0..spec.q_heads {
                     let p = &slot_parts[s][h / group][h % group];
@@ -808,8 +846,15 @@ impl Engine {
                         &mut attn[h * dh..(h + 1) * dh],
                     );
                 }
-                t.stop_into(&mut bds[s].attention);
-                let t = PhaseTimer::start();
+                let secs = t.stop_into(&mut bds[s].attention);
+                telemetry::span_record(
+                    &mut items[s].sess.spans,
+                    Phase::GammaCombine,
+                    t.started(),
+                    secs,
+                    s as u64,
+                );
+                let t = Stopwatch::start();
                 let r = contained("wave post/ffn step", || -> Result<Vec<f32>> {
                     let x_b = self.rt.upload_f32(&xs[s], &[1, spec.d_model])?;
                     let attn_b = self.rt.upload_f32(&attn, &[1, spec.q_heads * dh])?;
@@ -819,7 +864,14 @@ impl Engine {
                     )?;
                     literal_to_f32(&outs[0])
                 });
-                t.stop_into(&mut bds[s].other);
+                let secs = t.stop_into(&mut bds[s].other);
+                telemetry::span_record(
+                    &mut items[s].sess.spans,
+                    Phase::Ffn,
+                    t.started(),
+                    secs,
+                    s as u64,
+                );
                 match r {
                     Ok(x) => {
                         xs[s] = x;
@@ -839,7 +891,7 @@ impl Engine {
                 out.push(Err(e));
                 continue;
             }
-            let t = PhaseTimer::start();
+            let t = Stopwatch::start();
             let next = match contained("wave lm-head step", || self.lm_head(&xs[s])) {
                 Ok(tok) => tok,
                 Err(e) => {
@@ -849,7 +901,9 @@ impl Engine {
             };
             it.sess.x_last = std::mem::take(&mut xs[s]);
             it.sess.len += 1;
-            t.stop_into(&mut bds[s].other);
+            tokens_emitted += 1;
+            let secs = t.stop_into(&mut bds[s].other);
+            telemetry::span_record(&mut it.sess.spans, Phase::Ffn, t.started(), secs, s as u64);
             // Calibration bookkeeping: one profiling step accumulated
             // across all layers; once the window closes, commit the
             // verdict (streaming heads release their index for the group
@@ -864,10 +918,30 @@ impl Engine {
             // Online index maintenance: drain overflow buffers that
             // crossed the watermark into the ANN indexes (batched, fanned
             // out per GQA group via util::parallel).
-            let t = PhaseTimer::start();
+            let t = Stopwatch::start();
             self.maintain_indexes(it.sess);
-            t.stop_into(&mut bds[s].maintenance);
+            let secs = t.stop_into(&mut bds[s].maintenance);
+            telemetry::span_record(
+                &mut it.sess.spans,
+                Phase::Maintenance,
+                t.started(),
+                secs,
+                s as u64,
+            );
             out.push(Ok(DecodeOutput { token: next, breakdown: std::mem::take(&mut bds[s]) }));
+        }
+        if tokens_emitted > 0 || scanned_wave > 0 {
+            let reg = telemetry::registry();
+            reg.counter("engine.tokens_total").add(tokens_emitted);
+            // Quantized-vs-exact scored-key attribution: whether this
+            // wave's scans went through the quantized scan tier is a
+            // config-level fact, not a per-key one.
+            let scores = if self.cfg.retrieval.quant.mode == kernel::QuantMode::Off {
+                "kernel.scores_exact_total"
+            } else {
+                "kernel.scores_quantized_total"
+            };
+            reg.counter(scores).add(scanned_wave);
         }
         out
     }
@@ -900,6 +974,17 @@ impl Engine {
                 }
             }
         }
+        let frac = sess.streaming_fraction();
+        let reg = telemetry::registry();
+        reg.gauge("policy.streaming_fraction").set(frac);
+        reg.gauge("policy.index_bytes_avoided").set_u64(sess.index_bytes_avoided);
+        telemetry::flightrec(
+            "policy.decided",
+            format!(
+                "streaming_fraction={frac:.3} index_bytes_avoided={}",
+                sess.index_bytes_avoided
+            ),
+        );
     }
 
     /// Online maintenance: apply completed background work, then enqueue
@@ -1250,6 +1335,7 @@ impl Session {
             policy: self.policy.clone(),
             calib: self.calib.clone(),
             index_bytes_avoided: 0,
+            spans: SpanAcc::default(),
         }
     }
 
@@ -1420,6 +1506,7 @@ impl Engine {
             "cannot write snapshot format v{version}"
         );
         crate::util::failpoint::trigger("codec.snapshot")?;
+        let t = Stopwatch::start();
         sess.flush_maintenance();
         let spec = self.spec().clone();
         anyhow::ensure!(
@@ -1508,7 +1595,11 @@ impl Engine {
         if version >= 3 {
             w.write_footer()?;
         }
-        Ok(w.bytes_written())
+        let bytes = w.bytes_written();
+        let secs = t.elapsed_s();
+        telemetry::span_record(&mut sess.spans, Phase::Snapshot, t.started(), secs, 0);
+        telemetry::registry().histogram("store.snapshot_s").record(secs);
+        Ok(bytes)
     }
 
     /// Rebuild a session from a snapshot stream: the exact inverse of
@@ -1517,6 +1608,7 @@ impl Engine {
     /// maintenance stats start at zero and stay there until real drains
     /// happen), and its searches are bit-identical to the source's.
     pub fn restore_session(&self, input: &mut dyn std::io::Read) -> Result<Session> {
+        let t = Stopwatch::start();
         let spec = self.spec().clone();
         let mut r = crate::store::codec::SnapReader::new(input);
         let mut magic = [0u8; 4];
@@ -1635,7 +1727,7 @@ impl Engine {
         if version >= 3 {
             r.verify_footer()?;
         }
-        Ok(Session {
+        let mut sess = Session {
             method,
             caches,
             q_history,
@@ -1654,7 +1746,12 @@ impl Engine {
             policy,
             calib,
             index_bytes_avoided,
-        })
+            spans: SpanAcc::default(),
+        };
+        let secs = t.elapsed_s();
+        telemetry::span_record(&mut sess.spans, Phase::Restore, t.started(), secs, 0);
+        telemetry::registry().histogram("store.restore_s").record(secs);
+        Ok(sess)
     }
 
     /// Build a session for `method` from an existing prefill state —
@@ -1857,6 +1954,7 @@ impl Engine {
             calib: self.new_calibrator(method),
             policy,
             index_bytes_avoided: 0,
+            spans: SpanAcc::default(),
         })
     }
 }

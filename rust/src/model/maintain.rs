@@ -310,11 +310,49 @@ pub fn run_compact(j: &CompactJob) -> Done {
     }
 }
 
+/// Process-registry + flight-recorder accounting for one completed
+/// maintenance job. Sits on the `run_job` choke point so the async
+/// worker and the inline (`async_worker = false`) path both land here;
+/// per-session `MaintStats` stay the authoritative per-request numbers,
+/// these are the fleet-wide monotone view.
+fn record_done(d: Done) -> Done {
+    let reg = crate::telemetry::registry();
+    let detail = match d.kind {
+        DoneKind::Drained { upto, count } => {
+            if d.ok {
+                reg.counter("maintenance.drains_total").inc();
+                reg.counter("maintenance.drained_tokens_total").add(count);
+            }
+            format!(
+                "drain layer={} kvh={} upto={upto} count={count} ok={}",
+                d.layer, d.kvh, d.ok
+            )
+        }
+        DoneKind::Evicted { count } => {
+            if d.ok {
+                reg.counter("maintenance.evictions_total").inc();
+                reg.counter("maintenance.evicted_tokens_total").add(count);
+            }
+            format!("evict layer={} kvh={} count={count} ok={}", d.layer, d.kvh, d.ok)
+        }
+        DoneKind::Compacted { dropped } => {
+            if d.ok {
+                reg.counter("maintenance.reclaims_total").inc();
+                reg.counter("maintenance.reclaimed_rows_total").add(dropped);
+            }
+            format!("compact layer={} kvh={} dropped={dropped} ok={}", d.layer, d.kvh, d.ok)
+        }
+    };
+    reg.histogram("maintenance.publish_s").record(d.swap_s);
+    crate::telemetry::flightrec("maint", detail);
+    d
+}
+
 fn run_job(job: &Job) -> Option<Done> {
     match job {
-        Job::Drain(j) => Some(run_drain(j)),
-        Job::Evict(j) => Some(run_evict(j)),
-        Job::Compact(j) => Some(run_compact(j)),
+        Job::Drain(j) => Some(record_done(run_drain(j))),
+        Job::Evict(j) => Some(record_done(run_evict(j))),
+        Job::Compact(j) => Some(record_done(run_compact(j))),
         Job::Barrier(tx) => {
             let _ = tx.send(());
             None
@@ -352,7 +390,7 @@ fn run_job_contained(job: &Job) -> Option<Done> {
                     return None;
                 }
             };
-            Some(Done { layer, kvh, kind, swap_s: 0.0, ok: false })
+            Some(record_done(Done { layer, kvh, kind, swap_s: 0.0, ok: false }))
         }
     }
 }

@@ -333,6 +333,11 @@ impl Calibrator {
         for &(l, h) in &cfg.force_retrieval {
             map.set(l, h, HeadPolicy::Retrieval);
         }
+        // Policy-family telemetry: one calibration verdict committed.
+        // (The per-session gauges — streaming fraction, released index
+        // bytes — are set where the verdict is *applied*, since only the
+        // session knows how many bytes its indexes actually held.)
+        crate::telemetry::registry().counter("policy.calibrations_total").inc();
         map
     }
 }

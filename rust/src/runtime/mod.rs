@@ -97,17 +97,26 @@ impl Runtime {
     }
 
     /// Preferred entry point: PJRT when artifacts exist *and* compile,
-    /// otherwise the native backend (with a one-line notice, so CI logs
-    /// show which device actually ran).
+    /// otherwise the native backend. The fallback is recorded in the
+    /// telemetry layer (a `runtime.pjrt_fallbacks_total` counter plus a
+    /// flight-recorder event), not printed: library code stays silent on
+    /// stderr (xtask lint rule 6) and the stats verb / crash dump show
+    /// which device actually ran.
     pub fn load_auto(artifacts_dir: impl AsRef<Path>, preset: &str) -> Result<Runtime> {
         let dir = artifacts_dir.as_ref();
         if dir.join("manifest.json").exists() {
             match Runtime::load(dir, preset) {
                 Ok(rt) => return Ok(rt),
                 Err(e) => {
-                    eprintln!(
-                        "runtime: PJRT load of `{preset}` failed ({e}); \
-                         falling back to the native backend"
+                    crate::telemetry::registry()
+                        .counter("runtime.pjrt_fallbacks_total")
+                        .inc();
+                    crate::telemetry::flightrec(
+                        "runtime.fallback",
+                        format!(
+                            "PJRT load of `{preset}` failed ({e}); \
+                             falling back to the native backend"
+                        ),
                     );
                 }
             }

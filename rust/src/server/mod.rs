@@ -7,8 +7,10 @@
 //! → {"prompt": [1,2,3], "max_tokens": 8, "session": "open", "session_id": 7}
 //! → {"prompt": [4,5],   "max_tokens": 8, "session": "continue", "session_id": 7}
 //! → {"session": "close", "session_id": 7}
+//! → {"stats": true}
 //! ← {"event": "token", "id": 1, "token": 42}          (streamed)
 //! ← {"event": "done", "id": 1, "tokens": [...], "ttft_s": ..., "tpot_s": ...}
+//! ← {"event": "stats", "registry": {...}, "router": {...}}
 //! ← {"event": "error", "id": 1, "message": "..."}
 //! ```
 //!
@@ -96,6 +98,24 @@ fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
         }
         let trimmed = line.trim();
         if trimmed.is_empty() {
+            continue;
+        }
+        // The `stats` verb is a registry read, not a generation request:
+        // answer it inline with one `{"event":"stats", ...}` line carrying
+        // the full process metrics-registry snapshot plus router state.
+        if json::parse(trimmed).ok().and_then(|v| v.get("stats").and_then(Value::as_bool))
+            == Some(true)
+        {
+            let mut o = Value::obj();
+            let mut rt = Value::obj();
+            rt.set("replicas", router.replica_count())
+                .set("outstanding", router.total_outstanding())
+                .set("respawns", router.total_respawns() as u64);
+            o.set("event", "stats")
+                .set("registry", crate::telemetry::registry().snapshot())
+                .set("router", rt)
+                .set("flightrec_len", crate::telemetry::flightrec_len());
+            writeln!(out, "{}", o.to_string())?;
             continue;
         }
         match parse_request(trimmed, router.next_request_id()) {
@@ -204,7 +224,15 @@ fn stream_events(
                     .set("max_gap_waves", m.max_gap_waves)
                     .set("replica_tokens_per_s", m.replica_tokens_per_s)
                     .set("streaming_head_fraction", m.streaming_head_fraction)
-                    .set("index_bytes_avoided", m.index_bytes_avoided);
+                    .set("index_bytes_avoided", m.index_bytes_avoided)
+                    .set("sessions_recovered", m.sessions_recovered)
+                    .set("snapshots_quarantined", m.snapshots_quarantined);
+                // The span tree is present only when spans were recorded
+                // (the `serving.telemetry.spans` knob): an absent key, not
+                // an all-zero subtree, when tracing is off.
+                if !m.spans.is_empty() {
+                    o.set("spans", m.spans.to_json());
+                }
                 writeln!(out, "{}", o.to_string())?;
                 return Ok(());
             }
@@ -292,6 +320,21 @@ impl Client {
         let mut o = Value::obj();
         o.set("session", "close").set("session_id", session_id);
         Ok(self.roundtrip(o)?.1)
+    }
+
+    /// Fetch the server's observability snapshot (the `stats` verb): the
+    /// full process metrics registry (counters / gauges / histograms /
+    /// labels) plus router state, as one `{"event":"stats", ...}` object.
+    pub fn stats(&mut self) -> Result<Value> {
+        let mut o = Value::obj();
+        o.set("stats", true);
+        writeln!(self.writer, "{}", o.to_string())?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "server closed connection");
+        let v = json::parse(line.trim())?;
+        anyhow::ensure!(v.req_str("event")? == "stats", "expected a stats event");
+        Ok(v)
     }
 
     fn roundtrip(&mut self, req: Value) -> Result<(Vec<u32>, Value)> {

@@ -143,6 +143,11 @@ impl SessionCache {
             self.parked.insert(s.id, Parked { path: s.path, bytes: s.bytes });
             self.stats.recovered += 1;
         }
+        if self.stats.recovered > 0 {
+            crate::telemetry::registry()
+                .counter("store.sessions_recovered_total")
+                .add(self.stats.recovered);
+        }
     }
 
     /// Where this cache parks sessions (resolved once at construction;
@@ -227,6 +232,7 @@ impl SessionCache {
             let est = entry.bytes;
             self.resident.insert(id, entry);
             self.stats.backpressure_rejects += 1;
+            crate::telemetry::registry().counter("store.backpressure_rejects_total").inc();
             bail!(
                 "session cache disk budget exhausted (backpressure): {} + ~{est} > {} bytes",
                 self.disk_bytes,
@@ -252,6 +258,7 @@ impl SessionCache {
             Err(e) => {
                 self.resident.insert(id, entry);
                 self.stats.backpressure_rejects += 1;
+                crate::telemetry::registry().counter("store.backpressure_rejects_total").inc();
                 return Err(e);
             }
         };
@@ -261,6 +268,7 @@ impl SessionCache {
             spill::remove(&path);
             self.resident.insert(id, entry);
             self.stats.backpressure_rejects += 1;
+            crate::telemetry::registry().counter("store.backpressure_rejects_total").inc();
             bail!(
                 "session cache disk budget exhausted (backpressure): {} + {bytes} > {} bytes",
                 self.disk_bytes,
@@ -271,6 +279,9 @@ impl SessionCache {
         self.disk_bytes += bytes;
         self.stats.parks += 1;
         self.stats.park_bytes_total += bytes;
+        let reg = crate::telemetry::registry();
+        reg.counter("store.parks_total").inc();
+        reg.counter("store.park_bytes_total").add(bytes);
         Ok(bytes)
     }
 
@@ -317,6 +328,13 @@ impl SessionCache {
                 self.parked.remove(&id);
                 self.disk_bytes = self.disk_bytes.saturating_sub(bytes);
                 self.stats.quarantines += 1;
+                crate::telemetry::registry()
+                    .counter("store.snapshots_quarantined_total")
+                    .inc();
+                crate::telemetry::flightrec(
+                    "quarantine",
+                    format!("session {id} snapshot failed restore; moved to {}", q.display()),
+                );
                 return Err(e.context(format!(
                     "session {id} snapshot failed restore; quarantined at {}",
                     q.display()
@@ -327,6 +345,7 @@ impl SessionCache {
         spill::remove(&path);
         self.disk_bytes = self.disk_bytes.saturating_sub(bytes);
         self.stats.resumes += 1;
+        crate::telemetry::registry().counter("store.resumes_total").inc();
         Ok(Some(ResumedSession {
             sess,
             from_disk: true,

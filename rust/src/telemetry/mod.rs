@@ -1,0 +1,807 @@
+//! Unified telemetry: the process metrics registry, the structured span
+//! facade, and the crash-surviving flight recorder.
+//!
+//! Three parts, one module, threaded through every layer of the serving
+//! stack (see docs/observability.md for the full metric-name registry,
+//! the span taxonomy, and the knob table):
+//!
+//! 1. **Metrics registry** ([`registry`]): a process-wide registry of
+//!    named counters, gauges, and histograms. Registration (first use of
+//!    a name) takes a short-lived `RwLock` write; every *update* is a
+//!    single atomic on a pre-fetched [`Arc`] handle — lock-free on the
+//!    hot path. Histograms are **fixed-size log-bucketed** (one bucket
+//!    per power of two, [`HIST_BUCKETS`] buckets total) rather than
+//!    raw-sample vectors, so a histogram's memory is a constant ~700
+//!    bytes no matter how many million requests it has absorbed.
+//!    Populated by the coordinator (queue depth, wave occupancy,
+//!    respawns), the store (resident/disk bytes, parks, resumes,
+//!    recovered, quarantined), maintenance (drains, reclaims, tombstone
+//!    ratio), policy (streaming fraction, index bytes avoided), and the
+//!    kernel (dispatch backend, quantized vs exact scores). Exposed via
+//!    the server's `{"stats": true}` verb, `Client::stats()`, and the
+//!    `stats` CLI subcommand.
+//!
+//! 2. **Span facade** ([`SpanAcc`], [`Stopwatch`], [`span_record`]):
+//!    structured tracing of the decode wave — prefill, embed, QKV,
+//!    device attention, retrieval, candidate assembly, host attention,
+//!    γ-combine, FFN, maintenance publish — plus the phases the old
+//!    ad-hoc `PhaseTimer` plumbing could not see (snapshot, restore,
+//!    wave-scheduling gaps). Per-request span trees are **aggregated**
+//!    (fixed [`Phase`] slots: count + total seconds each), so a
+//!    thousand-token request emits a bounded tree into its done event
+//!    instead of a thousand raw spans. Collection is gated on the
+//!    `serving.telemetry.spans` knob through [`spans_on`] — one relaxed
+//!    atomic load, no allocation, no timing when disabled — and the
+//!    batched-vs-serial equivalence suite proves decoded tokens are
+//!    bit-identical with spans on (timing never feeds back into
+//!    compute). Opt-in: `serving.telemetry.trace_path` additionally
+//!    streams every span as a `chrome://tracing`-compatible JSON event
+//!    (array format; the trailing `]` is optional, so the file is
+//!    loadable even mid-run or after a crash).
+//!
+//! 3. **Flight recorder** ([`flightrec`], [`flightrec_dump`]): a bounded
+//!    in-memory ring of recent structured events — admissions,
+//!    retirements, maintenance jobs, failpoint hits, quarantines,
+//!    respawns. The replica supervisor dumps it to
+//!    `spill_dir/flightrec-<ts>.jsonl` when a worker dies, turning "the
+//!    replica panicked" into a replayable event history whose tail
+//!    explains the crash. Capacity is `serving.telemetry
+//!    .flightrec_capacity` (0 disables recording entirely).
+//!
+//! Concurrency: every atomic comes from the `util::sync` facade, so
+//! `make loom` swaps in the instrumented twins; all registry state lives
+//! behind a runtime-initialized `OnceLock`, never a const-constructed
+//! static. All orderings here are `Relaxed` (this file is on the
+//! linter's allowlist): telemetry values are monotone diagnostics — no
+//! other memory is published through them.
+
+use crate::config::TelemetryConfig;
+use crate::util::json::Value;
+use crate::util::sync::{
+    Arc, AtomicBool, AtomicU64, Mutex, OnceLock, Ordering, PoisonError, RwLock,
+};
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Metrics registry
+// ---------------------------------------------------------------------------
+
+/// A monotone event counter.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        // Relaxed (allowlisted counter): monotone diagnostic, publishes
+        // nothing.
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-writer-wins instantaneous value (stored as f64 bits).
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        // Relaxed (allowlisted counter): last-writer-wins diagnostic.
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn set_u64(&self, v: u64) {
+        self.set(v as f64);
+    }
+
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Number of log₂ buckets per histogram. Bucket `i` covers values in
+/// `[2^(i-HIST_EXP_OFFSET), 2^(i-HIST_EXP_OFFSET+1))`, spanning ~1e-12
+/// (sub-nanosecond latencies) to ~5e11 (hundreds of GB), which brackets
+/// every quantity the stack records.
+pub const HIST_BUCKETS: usize = 80;
+const HIST_EXP_OFFSET: i64 = 40;
+
+/// Bounded-memory latency/size distribution: fixed log-bucketed counts
+/// plus exact sum/count/max. Unlike `metrics::LatencyHistogram` (a
+/// raw-sample vector for offline bench percentiles), this never grows —
+/// the per-bucket resolution (one power of two, quantile error ≤ 2×) is
+/// the price of million-request uptimes at constant memory.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    /// f64 bits, accumulated by CAS (the facade's atomics have no
+    /// fetch-add for floats).
+    sum_bits: AtomicU64,
+    /// f64 bits; non-negative floats order like their bit patterns.
+    max_bits: AtomicU64,
+}
+
+fn bucket_index(v: f64) -> usize {
+    if v <= 0.0 || !v.is_finite() {
+        return 0;
+    }
+    // Floor of log2(v) straight from the IEEE exponent field.
+    let exp = ((v.to_bits() >> 52) & 0x7ff) as i64 - 1023;
+    (exp + HIST_EXP_OFFSET).clamp(0, HIST_BUCKETS as i64 - 1) as usize
+}
+
+/// Geometric midpoint of bucket `i` — the representative value quantile
+/// queries report.
+fn bucket_value(i: usize) -> f64 {
+    1.5 * ((i as i64 - HIST_EXP_OFFSET) as f64).exp2()
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            max_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Record one observation. Lock-free, allocation-free.
+    pub fn record(&self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        // Relaxed (allowlisted counters): independent diagnostics; a
+        // snapshot racing an update misattributes at most one sample.
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+        let bits = v.to_bits();
+        let mut cur = self.max_bits.load(Ordering::Relaxed);
+        while bits > cur {
+            match self.max_bits.compare_exchange_weak(cur, bits, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Nearest-rank quantile over the bucketed counts; reports the
+    /// matched bucket's geometric midpoint (error ≤ one octave).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total: u64 = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                return bucket_value(i);
+            }
+        }
+        bucket_value(HIST_BUCKETS - 1)
+    }
+
+    fn to_json(&self) -> Value {
+        let count = self.count();
+        let sum = self.sum();
+        let mut o = Value::obj();
+        o.set("count", count)
+            .set("sum", sum)
+            .set("mean", if count == 0 { 0.0 } else { sum / count as f64 })
+            .set("p50", self.quantile(0.50))
+            .set("p90", self.quantile(0.90))
+            .set("p99", self.quantile(0.99))
+            .set("max", self.max());
+        o
+    }
+}
+
+/// The process-wide metric registry (see [`registry`]).
+pub struct Registry {
+    counters: RwLock<HashMap<&'static str, Arc<Counter>>>,
+    gauges: RwLock<HashMap<&'static str, Arc<Gauge>>>,
+    histograms: RwLock<HashMap<&'static str, Arc<Histogram>>>,
+    /// Non-numeric facts (e.g. the kernel dispatch backend).
+    labels: RwLock<HashMap<&'static str, &'static str>>,
+}
+
+fn get_or_register<T>(
+    map: &RwLock<HashMap<&'static str, Arc<T>>>,
+    name: &'static str,
+    make: impl FnOnce() -> T,
+) -> Arc<T> {
+    if let Some(v) = map.read().unwrap_or_else(PoisonError::into_inner).get(name) {
+        return Arc::clone(v);
+    }
+    let mut w = map.write().unwrap_or_else(PoisonError::into_inner);
+    Arc::clone(w.entry(name).or_insert_with(|| Arc::new(make())))
+}
+
+impl Registry {
+    fn new() -> Registry {
+        Registry {
+            counters: RwLock::new(HashMap::new()),
+            gauges: RwLock::new(HashMap::new()),
+            histograms: RwLock::new(HashMap::new()),
+            labels: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// Get-or-register a counter. Hold the returned handle on hot paths
+    /// (updates through it never touch the registry lock).
+    pub fn counter(&self, name: &'static str) -> Arc<Counter> {
+        get_or_register(&self.counters, name, || Counter(AtomicU64::new(0)))
+    }
+
+    pub fn gauge(&self, name: &'static str) -> Arc<Gauge> {
+        get_or_register(&self.gauges, name, || Gauge(AtomicU64::new(0f64.to_bits())))
+    }
+
+    pub fn histogram(&self, name: &'static str) -> Arc<Histogram> {
+        get_or_register(&self.histograms, name, Histogram::new)
+    }
+
+    /// Record a non-numeric fact (last writer wins).
+    pub fn set_label(&self, name: &'static str, value: &'static str) {
+        self.labels.write().unwrap_or_else(PoisonError::into_inner).insert(name, value);
+    }
+
+    /// A point-in-time JSON snapshot of everything registered:
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {...},
+    /// "labels": {...}}`, keys sorted (the JSON object is a BTreeMap).
+    pub fn snapshot(&self) -> Value {
+        let mut counters = Value::obj();
+        for (k, v) in self.counters.read().unwrap_or_else(PoisonError::into_inner).iter() {
+            counters.set(k, v.get());
+        }
+        let mut gauges = Value::obj();
+        for (k, v) in self.gauges.read().unwrap_or_else(PoisonError::into_inner).iter() {
+            gauges.set(k, v.get());
+        }
+        let mut histograms = Value::obj();
+        for (k, v) in self.histograms.read().unwrap_or_else(PoisonError::into_inner).iter() {
+            histograms.set(k, v.to_json());
+        }
+        let mut labels = Value::obj();
+        for (k, v) in self.labels.read().unwrap_or_else(PoisonError::into_inner).iter() {
+            labels.set(k, *v);
+        }
+        let mut out = Value::obj();
+        out.set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", histograms)
+            .set("labels", labels);
+        out
+    }
+}
+
+/// The process-wide registry (lazily constructed; loom-safe because
+/// nothing here is a const-initialized facade atomic).
+pub fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::new)
+}
+
+// ---------------------------------------------------------------------------
+// Span facade
+// ---------------------------------------------------------------------------
+
+/// The span taxonomy — every timed phase on the serving path. Decode-wave
+/// phases (`Embed` … `Ffn`) nest under `decode` in the emitted tree;
+/// fused phases (retrieval, host attention) are attributed to each live
+/// session as an equal share, exactly like the `PhaseBreakdown` shares
+/// the done event has always carried.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Prefill = 0,
+    Embed = 1,
+    Qkv = 2,
+    DeviceAttn = 3,
+    Retrieval = 4,
+    Candidates = 5,
+    HostAttn = 6,
+    GammaCombine = 7,
+    Ffn = 8,
+    Maintenance = 9,
+    Snapshot = 10,
+    Restore = 11,
+}
+
+/// Number of [`Phase`] variants (the fixed width of a [`SpanAcc`]).
+pub const PHASE_COUNT: usize = 12;
+
+const PHASE_NAMES: [&str; PHASE_COUNT] = [
+    "prefill",
+    "embed",
+    "qkv",
+    "device_attn",
+    "retrieval",
+    "candidates",
+    "host_attn",
+    "gamma_combine",
+    "ffn",
+    "maintenance",
+    "snapshot",
+    "restore",
+];
+
+/// Decode-wave children (indices into [`PHASE_NAMES`]).
+const DECODE_CHILDREN: std::ops::Range<usize> = 1..9;
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        PHASE_NAMES[self as usize]
+    }
+}
+
+/// One aggregated span slot: how many times the phase ran and the total
+/// seconds it took.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpanCell {
+    pub count: u64,
+    pub total_s: f64,
+}
+
+/// A bounded, aggregated per-request span tree: one [`SpanCell`] per
+/// [`Phase`]. Cheap to reset, merge, and carry through `RequestMetrics`
+/// regardless of how many tokens the request decoded.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpanAcc {
+    cells: [SpanCell; PHASE_COUNT],
+}
+
+impl SpanAcc {
+    pub fn reset(&mut self) {
+        self.cells = [SpanCell::default(); PHASE_COUNT];
+    }
+
+    #[inline]
+    pub fn record(&mut self, phase: Phase, secs: f64) {
+        let c = &mut self.cells[phase as usize];
+        c.count += 1;
+        c.total_s += secs;
+    }
+
+    pub fn merge(&mut self, other: &SpanAcc) {
+        for (a, b) in self.cells.iter_mut().zip(other.cells.iter()) {
+            a.count += b.count;
+            a.total_s += b.total_s;
+        }
+    }
+
+    pub fn cell(&self, phase: Phase) -> SpanCell {
+        self.cells[phase as usize]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.iter().all(|c| c.count == 0)
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.cells.iter().map(|c| c.total_s).sum()
+    }
+
+    /// The emitted span tree: top-level `prefill` / `decode` (children:
+    /// embed…ffn) / `maintenance` / `snapshot` / `restore`, empty slots
+    /// omitted.
+    pub fn to_json(&self) -> Value {
+        fn cell_json(c: SpanCell) -> Value {
+            let mut o = Value::obj();
+            o.set("count", c.count).set("total_s", c.total_s);
+            o
+        }
+        let mut out = Value::obj();
+        let top = [Phase::Prefill, Phase::Maintenance, Phase::Snapshot, Phase::Restore];
+        for p in top {
+            let c = self.cells[p as usize];
+            if c.count > 0 {
+                out.set(p.name(), cell_json(c));
+            }
+        }
+        let mut decode = Value::obj();
+        let mut decode_total = 0.0;
+        let mut any = false;
+        for i in DECODE_CHILDREN {
+            let c = self.cells[i];
+            if c.count > 0 {
+                decode.set(PHASE_NAMES[i], cell_json(c));
+                decode_total += c.total_s;
+                any = true;
+            }
+        }
+        if any {
+            decode.set("total_s", decode_total);
+            out.set("decode", decode);
+        }
+        out
+    }
+}
+
+/// The one timing mechanism (replaces the old `metrics::PhaseTimer`):
+/// start, then `stop_into` a breakdown slot — which also returns the
+/// elapsed seconds so the same measurement can feed a [`SpanAcc`] and
+/// the trace file without reading the clock twice.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    #[inline]
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    #[inline]
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    #[inline]
+    pub fn started(&self) -> Instant {
+        self.start
+    }
+
+    /// Add the elapsed seconds into a breakdown slot; returns them.
+    #[inline]
+    pub fn stop_into(&self, slot: &mut f64) -> f64 {
+        let s = self.elapsed_s();
+        *slot += s;
+        s
+    }
+}
+
+struct TraceState {
+    /// Span collection on/off (`serving.telemetry.spans`).
+    spans: AtomicBool,
+    /// Whether a chrome-trace writer is open (checked before the mutex).
+    trace_open: AtomicBool,
+    /// Timebase for trace timestamps.
+    epoch: Instant,
+    trace: Mutex<Option<std::io::BufWriter<std::fs::File>>>,
+    flightrec: Mutex<FlightRing>,
+}
+
+fn state() -> &'static TraceState {
+    static STATE: OnceLock<TraceState> = OnceLock::new();
+    STATE.get_or_init(|| TraceState {
+        spans: AtomicBool::new(false),
+        trace_open: AtomicBool::new(false),
+        epoch: Instant::now(),
+        trace: Mutex::new(None),
+        flightrec: Mutex::new(FlightRing::new(FLIGHTREC_DEFAULT_CAPACITY)),
+    })
+}
+
+/// Apply the `serving.telemetry` knobs: toggles span collection, sizes
+/// the flight-recorder ring, and (once) opens the chrome-trace writer if
+/// a path is configured. Engines call this at construction, so every
+/// entry point — serial generate, replica workers, tests — honors the
+/// same config without extra plumbing.
+pub fn configure(cfg: &TelemetryConfig) {
+    let st = state();
+    // Sticky-on: the most permissive config in the process wins. Engines
+    // with different configs coexist (replicas, control engines in
+    // tests), and a later spans-off construction must not silently
+    // disable the tracing an earlier spans-on engine asked for. Span
+    // state is pure timing, so over-collection is always safe.
+    if cfg.spans {
+        // Relaxed (allowlisted): a pure on/off diagnostic gate.
+        st.spans.store(true, Ordering::Relaxed);
+    }
+    {
+        let mut ring = st.flightrec.lock().unwrap_or_else(PoisonError::into_inner);
+        ring.set_capacity(cfg.flightrec_capacity);
+    }
+    if !cfg.trace_path.is_empty() && !st.trace_open.load(Ordering::Relaxed) {
+        let mut g = st.trace.lock().unwrap_or_else(PoisonError::into_inner);
+        if g.is_none() {
+            if let Ok(f) = std::fs::File::create(&cfg.trace_path) {
+                let mut w = std::io::BufWriter::new(f);
+                // Chrome trace "JSON array format": the trailing `]` is
+                // optional, so the file stays loadable after a crash.
+                let _ = writeln!(w, "[");
+                *g = Some(w);
+                st.trace_open.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Whether span collection is enabled. One relaxed load — the entire
+/// cost of the disabled path.
+#[inline]
+pub fn spans_on() -> bool {
+    state().spans.load(Ordering::Relaxed)
+}
+
+/// Record a completed span into a per-request accumulator and, when the
+/// trace file is open, emit a chrome-trace complete event (`ph: "X"`).
+/// `tid` groups events per session/worker lane in the trace viewer.
+/// No-op when spans are disabled — one relaxed load, no allocation, and
+/// no extra clock reads upstream (callers pass seconds they already
+/// measured for the phase breakdown).
+#[inline]
+pub fn span_record(acc: &mut SpanAcc, phase: Phase, started: Instant, secs: f64, tid: u64) {
+    if !spans_on() {
+        return;
+    }
+    acc.record(phase, secs);
+    trace_emit(phase.name(), started, secs, tid);
+}
+
+/// Emit one chrome-trace event if the writer is open (cheap gate first).
+pub fn trace_emit(name: &str, started: Instant, secs: f64, tid: u64) {
+    let st = state();
+    if !st.trace_open.load(Ordering::Relaxed) {
+        return;
+    }
+    let ts_us = started.checked_duration_since(st.epoch).unwrap_or_default().as_micros();
+    let dur_us = (secs * 1e6).max(0.0) as u64;
+    let mut g = st.trace.lock().unwrap_or_else(PoisonError::into_inner);
+    if let Some(w) = g.as_mut() {
+        let _ = writeln!(
+            w,
+            "{{\"name\":{name:?},\"cat\":\"ra\",\"ph\":\"X\",\"pid\":1,\"tid\":{tid},\"ts\":{ts_us},\"dur\":{dur_us}}},"
+        );
+        let _ = w.flush();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flight recorder
+// ---------------------------------------------------------------------------
+
+/// Default bounded ring capacity (`serving.telemetry.flightrec_capacity`).
+pub const FLIGHTREC_DEFAULT_CAPACITY: usize = 256;
+
+#[derive(Clone, Debug)]
+struct FlightEvent {
+    /// Monotone sequence number (orders same-millisecond events).
+    seq: u64,
+    /// Unix milliseconds at record time.
+    ts_ms: u64,
+    kind: &'static str,
+    detail: String,
+}
+
+struct FlightRing {
+    cap: usize,
+    next_seq: u64,
+    events: VecDeque<FlightEvent>,
+}
+
+impl FlightRing {
+    fn new(cap: usize) -> FlightRing {
+        FlightRing { cap, next_seq: 0, events: VecDeque::new() }
+    }
+
+    fn set_capacity(&mut self, cap: usize) {
+        self.cap = cap;
+        while self.events.len() > self.cap {
+            self.events.pop_front();
+        }
+    }
+
+    fn push(&mut self, kind: &'static str, detail: String) {
+        if self.cap == 0 {
+            return;
+        }
+        let ts_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        self.events.push_back(FlightEvent { seq: self.next_seq, ts_ms, kind, detail });
+        self.next_seq += 1;
+        while self.events.len() > self.cap {
+            self.events.pop_front();
+        }
+    }
+}
+
+/// Append one structured event to the flight-recorder ring. Off the
+/// token loop only (admissions, retirements, maintenance completions,
+/// failpoint hits, quarantines, respawns) — it takes a mutex and
+/// allocates the detail string.
+pub fn flightrec(kind: &'static str, detail: impl Into<String>) {
+    let st = state();
+    let mut ring = st.flightrec.lock().unwrap_or_else(PoisonError::into_inner);
+    ring.push(kind, detail.into());
+}
+
+/// Events currently held in the ring.
+pub fn flightrec_len() -> usize {
+    state().flightrec.lock().unwrap_or_else(PoisonError::into_inner).events.len()
+}
+
+/// Dump the ring to `dir/flightrec-<unix_ms>.jsonl` (one JSON object per
+/// line: `{"seq", "ts_ms", "kind", "detail"}`, oldest first). Best
+/// effort and non-panicking — the caller is the crash path; returns the
+/// written path, or `None` when the ring is empty or IO failed.
+pub fn flightrec_dump(dir: &Path) -> Option<PathBuf> {
+    let events: Vec<FlightEvent> = {
+        let ring = state().flightrec.lock().unwrap_or_else(PoisonError::into_inner);
+        ring.events.iter().cloned().collect()
+    };
+    if events.is_empty() {
+        return None;
+    }
+    if std::fs::create_dir_all(dir).is_err() {
+        return None;
+    }
+    let ts = events.last().map(|e| e.ts_ms).unwrap_or(0);
+    let path = dir.join(format!("flightrec-{ts}.jsonl"));
+    let f = std::fs::File::create(&path).ok()?;
+    let mut w = std::io::BufWriter::new(f);
+    for e in &events {
+        let mut o = Value::obj();
+        o.set("seq", e.seq).set("ts_ms", e.ts_ms).set("kind", e.kind).set(
+            "detail",
+            e.detail.as_str(),
+        );
+        if writeln!(w, "{}", o.to_string()).is_err() {
+            return None;
+        }
+    }
+    w.flush().ok()?;
+    Some(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_register_once() {
+        let r = registry();
+        let a = r.counter("test.telemetry.counter");
+        let b = r.counter("test.telemetry.counter");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3, "same name must share one cell");
+        let g = r.gauge("test.telemetry.gauge");
+        g.set(1.5);
+        assert!((r.gauge("test.telemetry.gauge").get() - 1.5).abs() < 1e-12);
+        r.set_label("test.telemetry.label", "value");
+        let snap = r.snapshot();
+        assert_eq!(
+            snap.get("counters").and_then(|c| c.get("test.telemetry.counter")).and_then(Value::as_u64),
+            Some(3)
+        );
+        assert_eq!(
+            snap.get("labels").and_then(|l| l.get("test.telemetry.label")).and_then(Value::as_str),
+            Some("value")
+        );
+    }
+
+    #[test]
+    fn histogram_is_bounded_and_quantiles_are_monotone() {
+        let h = Histogram::new();
+        // A million observations cost no memory growth by construction:
+        // the type is a fixed array of buckets.
+        for i in 1..=1000u64 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.sum() - 500.5).abs() < 1e-6);
+        let (p50, p90, p99) = (h.quantile(0.5), h.quantile(0.9), h.quantile(0.99));
+        assert!(p50 <= p90 && p90 <= p99, "quantiles monotone: {p50} {p90} {p99}");
+        // Log-bucket resolution: within one octave of the true value.
+        assert!(p50 > 0.25 && p50 < 1.0, "p50 of ~0.5 within an octave: {p50}");
+        assert!(h.max() >= 1.0 - 1e-9);
+        // Degenerate inputs land in bucket 0 instead of poisoning stats.
+        h.record(f64::NAN);
+        h.record(-3.0);
+        assert_eq!(h.count(), 1002);
+    }
+
+    #[test]
+    fn bucket_index_covers_extremes() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(f64::INFINITY), 0);
+        assert_eq!(bucket_index(1e-300), 0);
+        assert_eq!(bucket_index(1e300), HIST_BUCKETS - 1);
+        // 1.0 has exponent 0 → bucket HIST_EXP_OFFSET.
+        assert_eq!(bucket_index(1.0), HIST_EXP_OFFSET as usize);
+        assert!(bucket_value(bucket_index(1.0)) >= 1.0);
+    }
+
+    #[test]
+    fn span_acc_tree_shape() {
+        let mut acc = SpanAcc::default();
+        assert!(acc.is_empty());
+        acc.record(Phase::Prefill, 0.5);
+        acc.record(Phase::Retrieval, 0.1);
+        acc.record(Phase::Retrieval, 0.1);
+        acc.record(Phase::HostAttn, 0.2);
+        let mut other = SpanAcc::default();
+        other.record(Phase::Snapshot, 0.3);
+        acc.merge(&other);
+        assert_eq!(acc.cell(Phase::Retrieval).count, 2);
+        assert!((acc.total_s() - 1.2).abs() < 1e-12);
+        let j = acc.to_json();
+        assert!(j.get("prefill").is_some());
+        assert!(j.get("snapshot").is_some());
+        let decode = j.get("decode").expect("decode subtree");
+        assert!(decode.get("retrieval").is_some());
+        assert!((decode.get("total_s").and_then(Value::as_f64).unwrap() - 0.4).abs() < 1e-12);
+        // Empty slots are omitted entirely.
+        assert!(j.get("restore").is_none());
+        assert!(decode.get("ffn").is_none());
+    }
+
+    #[test]
+    fn flight_ring_is_bounded_and_dumps_jsonl() {
+        let st = state();
+        {
+            let mut ring = st.flightrec.lock().unwrap_or_else(PoisonError::into_inner);
+            ring.set_capacity(4);
+            ring.events.clear();
+        }
+        for i in 0..10 {
+            flightrec("test.event", format!("event {i}"));
+        }
+        assert_eq!(flightrec_len(), 4, "ring bounded at capacity");
+        let dir = std::env::temp_dir().join(format!("ra-flightrec-test-{}", std::process::id()));
+        let path = flightrec_dump(&dir).expect("dump succeeds");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        for line in &lines {
+            let v = crate::util::json::parse(line).expect("each line parses");
+            assert_eq!(v.req_str("kind").unwrap(), "test.event");
+        }
+        // The tail is the most recent event.
+        let last = crate::util::json::parse(lines[3]).unwrap();
+        assert!(last.req_str("detail").unwrap().contains("event 9"));
+        std::fs::remove_dir_all(&dir).ok();
+        // Restore the default capacity for other tests in this binary.
+        let mut ring = st.flightrec.lock().unwrap_or_else(PoisonError::into_inner);
+        ring.set_capacity(FLIGHTREC_DEFAULT_CAPACITY);
+        ring.events.clear();
+    }
+
+    #[test]
+    fn stopwatch_accumulates_into_slot() {
+        let mut slot = 0.0;
+        let t = Stopwatch::start();
+        let s = t.stop_into(&mut slot);
+        assert!(s >= 0.0 && (slot - s).abs() < 1e-15);
+        let s2 = t.stop_into(&mut slot);
+        assert!(slot >= s + s2 - 1e-12);
+    }
+}

@@ -169,6 +169,13 @@ mod armed {
             Some(FailAction::Error { after, times }) if hit >= after => {
                 if hit - after < times {
                     drop(reg);
+                    // Flight-recorder breadcrumb BEFORE the injected
+                    // failure: a crash dump's tail names the fault that
+                    // caused it.
+                    crate::telemetry::flightrec(
+                        "failpoint",
+                        format!("injected fault at `{site}` (hit {hit})"),
+                    );
                     bail!("injected fault at failpoint `{site}` (hit {hit})");
                 }
                 Ok(())
@@ -176,6 +183,10 @@ mod armed {
             Some(FailAction::Panic { after }) if hit >= after => {
                 e.action = None; // one-shot: a respawned path must not re-trip
                 drop(reg);
+                crate::telemetry::flightrec(
+                    "failpoint",
+                    format!("injected panic at `{site}` (hit {hit})"),
+                );
                 panic!("injected panic at failpoint `{site}` (hit {hit})");
             }
             _ => Ok(()),

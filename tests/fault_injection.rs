@@ -444,6 +444,133 @@ fn worker_panic_respawns_and_recovers_parked_sessions() {
     let _ = std::fs::remove_dir_all(&ctrl_dir);
 }
 
+/// Kill a replica's worker thread and drive the continue-retry loop until
+/// the respawned worker serves a turn. Returns the recovered turn's
+/// metrics. Shared by the flight-recorder and wave-telemetry tests below.
+fn crash_and_recover(rep: &Replica, prompt: &[u32]) -> retrieval_attention::coordinator::RequestMetrics {
+    failpoint::reset();
+    failpoint::arm("worker.step", FailAction::Panic { after: 0 });
+    let rx = rep.submit(Request { id: 2, prompt: prompt.to_vec(), max_tokens: 1, session: None });
+    let _ = collect(&rx); // may complete or die with the worker — both are fine
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    while failpoint::hits("worker.step") == 0 {
+        assert!(std::time::Instant::now() < deadline, "worker never hit the kill switch");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let mut recovered = None;
+    for attempt in 0..200u64 {
+        let rx = rep.submit(turn(10 + attempt, 7, SessionMode::Continue, vec![9, 2, 6], 2));
+        match collect(&rx) {
+            Ok(out) => {
+                recovered = Some(out);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+        }
+    }
+    let (_, m) = recovered.expect("continue never succeeded after the crash");
+    assert_eq!(rep.respawn_count(), 1, "supervision must have respawned exactly once");
+    m
+}
+
+/// Acceptance: a forced worker crash leaves a parseable flight-recorder
+/// dump in the spill dir whose tail explains the crash — the injected
+/// failpoint event followed by the supervisor's respawn event.
+#[test]
+fn worker_crash_dumps_a_parseable_flight_recorder() {
+    use retrieval_attention::util::json::{self, Value};
+    let dir = tmpdir("flightrec");
+    let rep = Replica::spawn(durable_cfg(&dir));
+    let mut rng = Rng::seed_from(115);
+    let s = tasks::passkey(&mut rng, 400, 0.3);
+    let rx = rep.submit(turn(1, 7, SessionMode::Open, s.prompt.clone(), 2));
+    collect(&rx).expect("open turn");
+    let m = crash_and_recover(&rep, &s.prompt);
+    assert!(m.resumed_from_disk);
+
+    let dump: PathBuf = std::fs::read_dir(&dir)
+        .expect("spill dir readable")
+        .flatten()
+        .map(|e| e.path())
+        .find(|p| {
+            p.file_name()
+                .map(|n| {
+                    let n = n.to_string_lossy();
+                    n.starts_with("flightrec-") && n.ends_with(".jsonl")
+                })
+                .unwrap_or(false)
+        })
+        .expect("respawn must dump a flightrec-<ts>.jsonl into the spill dir");
+    let body = std::fs::read_to_string(&dump).expect("dump readable");
+    let mut kinds = Vec::new();
+    let mut last_seq = 0u64;
+    for (i, line) in body.lines().enumerate() {
+        let v = json::parse(line).unwrap_or_else(|e| panic!("line {} unparseable: {e}", i + 1));
+        let seq = v.get("seq").and_then(Value::as_u64).expect("seq field");
+        assert!(i == 0 || seq > last_seq, "seq must be strictly increasing");
+        last_seq = seq;
+        assert!(v.get("ts_ms").and_then(Value::as_u64).is_some(), "ts_ms field");
+        kinds.push((
+            v.req_str("kind").expect("kind field").to_string(),
+            v.req_str("detail").expect("detail field").to_string(),
+        ));
+    }
+    // The tail explains the crash: the injected worker.step panic is the
+    // last event before the supervisor's respawn record, which is last
+    // (the dump happens at respawn time, after the event is pushed).
+    let (last_kind, _) = kinds.last().expect("dump must not be empty");
+    assert_eq!(last_kind, "respawn", "tail of the dump: {kinds:?}");
+    assert!(
+        kinds.iter().any(|(k, d)| k == "failpoint" && d.contains("worker.step")),
+        "injected failpoint missing from the dump: {kinds:?}"
+    );
+    failpoint::reset();
+    drop(rep);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Regression (wave-telemetry underflow): admission snapshots must never
+/// straddle a respawn. The respawned worker starts a fresh WaveTelemetry
+/// AND a fresh resident set, so a post-crash turn's deltas are computed
+/// against counters that were both born in the same worker generation —
+/// occupancy and throughput stay finite and sane instead of wrapping.
+#[test]
+fn post_respawn_wave_telemetry_never_underflows() {
+    let dir = tmpdir("tele-respawn");
+    let rep = Replica::spawn(durable_cfg(&dir));
+    let mut rng = Rng::seed_from(117);
+    let s = tasks::passkey(&mut rng, 400, 0.3);
+    let rx = rep.submit(turn(1, 7, SessionMode::Open, s.prompt.clone(), 2));
+    let (_, m0) = collect(&rx).expect("open turn");
+    assert_eq!(m0.sessions_recovered, 0, "fresh boot has nothing to recover");
+    let m = crash_and_recover(&rep, &s.prompt);
+    assert!(m.resumed_from_disk);
+    // The recovery counters surface end-to-end (PR 9 provenance).
+    assert!(m.sessions_recovered >= 1, "boot scan must report the recovered session");
+    assert_eq!(m.snapshots_quarantined, 0);
+    // Saturating-delta sanity: a wrapped subtraction would blow any of
+    // these past physical plausibility.
+    assert!(
+        m.wave_occupancy_mean.is_finite() && m.wave_occupancy_mean >= 0.0,
+        "occupancy underflowed: {}",
+        m.wave_occupancy_mean
+    );
+    assert!(
+        m.wave_occupancy_mean <= 1024.0,
+        "occupancy mean {} exceeds any plausible wave size",
+        m.wave_occupancy_mean
+    );
+    assert!(
+        m.replica_tokens_per_s.is_finite() && m.replica_tokens_per_s >= 0.0,
+        "throughput underflowed: {}",
+        m.replica_tokens_per_s
+    );
+    assert!(m.max_gap_waves < 1_000_000, "gap counter wrapped: {}", m.max_gap_waves);
+    failpoint::reset();
+    drop(rep);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn respawn_budget_exhaustion_fails_explicitly() {
     let mut cfg = base_cfg();

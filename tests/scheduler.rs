@@ -227,6 +227,45 @@ fn mixed_policy_sessions_keep_batched_serial_identity() {
     assert_eq!(replica.outstanding(), 0);
 }
 
+/// The telemetry leg of the equivalence suite: decoding with structured
+/// tracing enabled (`serving.telemetry.spans = true`) is bit-identical to
+/// decoding with it off, serial and batched, across every index family.
+/// Spans only read clocks and bump accumulators — they must never touch
+/// the compute. (The spans flag is process-global, so other tests in this
+/// binary may observe it flipping; that is safe for the same reason this
+/// test passes: timing state cannot influence tokens.)
+#[test]
+fn tracing_on_decode_is_bit_identical_to_tracing_off() {
+    let families = [Method::Flat, Method::Ivf, Method::Hnsw, Method::RetrievalAttention];
+    for family in families {
+        let off = wave_cfg(family, QuantMode::Off);
+        let mut on = wave_cfg(family, QuantMode::Off);
+        on.serving.telemetry.spans = true;
+        let prompts = passkey_prompts(48, 2, 288);
+        let baseline = serial_tokens(&off, &prompts, 4);
+        assert_eq!(
+            baseline,
+            serial_tokens(&on, &prompts, 4),
+            "tracing-on serial decode diverged for {family:?}"
+        );
+        assert_eq!(
+            baseline,
+            batched_tokens(&on, &prompts, 4, None),
+            "tracing-on wave decode diverged for {family:?}"
+        );
+    }
+    // With spans on, the done event carries a populated span tree.
+    let mut cfg = wave_cfg(Method::RetrievalAttention, QuantMode::Off);
+    cfg.serving.telemetry.spans = true;
+    let prompts = passkey_prompts(48, 1, 288);
+    let replica = Replica::spawn(cfg);
+    let rx =
+        replica.submit(Request { id: 1, prompt: prompts[0].clone(), max_tokens: 4, session: None });
+    let (_, m) = collect(&rx).expect("traced request failed");
+    assert!(!m.spans.is_empty(), "spans flag on but the request's span tree is empty");
+    assert!(m.spans.total_s() > 0.0, "span tree carries no wall time");
+}
+
 /// Session verbs landing mid-stream (continue on a retained session,
 /// close on an unknown one) are registry operations: they must complete
 /// and must never stall a session that is already decoding.

@@ -1,7 +1,8 @@
 //! The repo invariant linter: lexical rules the type system cannot carry.
 //!
-//! Five rules, each encoding a decision documented in
-//! `docs/concurrency.md` (rules 1-4) and `docs/robustness.md` (rule 5):
+//! Six rules, each encoding a decision documented in
+//! `docs/concurrency.md` (rules 1-4), `docs/robustness.md` (rule 5),
+//! and `docs/observability.md` (rule 6):
 //!
 //! 1. **`unsafe` needs a justification.** Every `unsafe` token must sit
 //!    next to a `// SAFETY:` comment (same line, or in the contiguous
@@ -26,6 +27,13 @@
 //!    there, and a raw filesystem call next to it silently bypasses all
 //!    three (crash-safety is a property of the whole tier, not of one
 //!    call site).
+//! 6. **No bare prints in library code.** `println!` / `eprintln!` in
+//!    non-test library code outside [`PRINT_ALLOWLIST`] is banned: a
+//!    stray print is invisible to the metrics registry and the flight
+//!    recorder, and on the server it corrupts nothing but explains
+//!    nothing either. Diagnostics go through `crate::telemetry`
+//!    (counters, flight-recorder events); user-facing output lives in
+//!    the CLI and the experiment harness.
 //!
 //! The linter is deliberately **lexical**: comments and string/char
 //! literals are masked out first, then `#[cfg(test)]` item regions are
@@ -40,7 +48,8 @@ pub struct Violation {
     /// 1-indexed line number.
     pub line: usize,
     /// Stable rule identifier (`unsafe-no-safety`, `stray-std-sync`,
-    /// `relaxed-ordering`, `banned-unwrap`, `spill-direct-io`).
+    /// `relaxed-ordering`, `banned-unwrap`, `spill-direct-io`,
+    /// `bare-print`).
     pub rule: &'static str,
     pub message: String,
 }
@@ -64,6 +73,11 @@ pub const RELAXED_ALLOWLIST: &[&str] = &[
     "runtime/mod.rs",
     // Spill-dir uniqueness counter.
     "store/cache.rs",
+    // The metrics registry itself: counters, gauges (f64-as-bits
+    // store/load), and histogram buckets are all pure statistics whose
+    // values guard no other memory; CAS loops for sum/max tolerate
+    // Relaxed because each update is a single-word publication.
+    "telemetry/mod.rs",
 ];
 
 /// Path prefixes (relative to the linted root) where non-test
@@ -78,6 +92,13 @@ pub const SYNC_FACADE: &str = "util/sync.rs";
 /// failpoint-instrumented spill-tier IO helpers (rule 5).
 pub const SPILL_FACADE: &str = "store/spill.rs";
 
+/// Path prefixes (relative to the linted root) where `println!` /
+/// `eprintln!` are legitimate (rule 6): the CLI binary, the experiment
+/// harness (paper tables go to stdout by design), the bench reporter,
+/// and the telemetry layer itself — everywhere else diagnostics must go
+/// through the metrics registry or the flight recorder.
+pub const PRINT_ALLOWLIST: &[&str] = &["main.rs", "experiments/", "util/bench.rs", "telemetry/"];
+
 /// Lint one file's source. `rel_path` is `/`-separated and relative to
 /// the linted root (`rust/src`); the rules that key on location
 /// (allowlists, banned dirs, the facade itself) match against it.
@@ -91,6 +112,7 @@ pub fn lint_source(rel_path: &str, src: &str) -> Vec<Violation> {
     let is_facade = rel_path == SYNC_FACADE;
     let relaxed_ok = RELAXED_ALLOWLIST.contains(&rel_path);
     let no_panic = NO_PANIC_DIRS.iter().any(|d| rel_path.starts_with(d));
+    let print_ok = PRINT_ALLOWLIST.iter().any(|d| rel_path.starts_with(d));
 
     for (i, line) in masked_lines.iter().enumerate() {
         let ln = i + 1;
@@ -142,6 +164,18 @@ pub fn lint_source(rel_path: &str, src: &str) -> Vec<Violation> {
                         .to_string(),
                 });
             }
+        }
+
+        if !print_ok && !in_test && (line.contains("println!") || line.contains("eprintln!")) {
+            out.push(Violation {
+                file: rel_path.to_string(),
+                line: ln,
+                rule: "bare-print",
+                message: "bare println!/eprintln! in library code; use crate::telemetry \
+                          (a counter or flight-recorder event) or argue this path into \
+                          lint::PRINT_ALLOWLIST"
+                    .to_string(),
+            });
         }
 
         if rel_path.starts_with("store/")

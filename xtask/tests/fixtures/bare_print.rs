@@ -1,0 +1,31 @@
+//! Fixture for the `bare-print` rule: `println!` / `eprintln!` in
+//! non-test library code outside the print allowlist.
+
+pub fn bad_stdout(n: usize) {
+    println!("processed {n} rows");
+}
+
+pub fn bad_stderr(err: &str) {
+    eprintln!("warning: {err}");
+}
+
+pub fn fine_string_decoy() -> &'static str {
+    // A decoy inside a string must not fire: the masked source blanks
+    // literals before the rules run.
+    "println!(\"not a call site\")"
+}
+
+pub fn fine_writeln(w: &mut impl std::fmt::Write) {
+    // Explicit sinks are fine — the rule targets the process-global
+    // stdout/stderr macros only.
+    let _ = writeln!(w, "routed output");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_print() {
+        println!("test diagnostics are exempt");
+        eprintln!("so is stderr in tests");
+    }
+}

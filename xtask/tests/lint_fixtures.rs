@@ -109,6 +109,30 @@ fn spill_io_fixture() {
 }
 
 #[test]
+fn bare_print_fixture() {
+    let src = include_str!("fixtures/bare_print.rs");
+    let v = lint_source("index/bare_print.rs", src);
+    let bare = rules(&v, "bare-print");
+    // bad_stdout + bad_stderr; the string decoy, the writeln! sink, and
+    // the #[cfg(test)] module are exempt.
+    assert_eq!(bare.len(), 2, "got: {v:?}");
+    let text: Vec<&str> = src.lines().collect();
+    for viol in &bare {
+        assert!(
+            text[viol.line - 1].contains("println!") || text[viol.line - 1].contains("eprintln!"),
+            "bogus line {}",
+            viol.line
+        );
+        assert!(!text[viol.line - 1].contains("fine_"), "exempt form flagged at {}", viol.line);
+    }
+    // Every allowlisted prefix is exempt.
+    for path in ["main.rs", "experiments/tables.rs", "util/bench.rs", "telemetry/mod.rs"] {
+        let allowed = lint_source(path, src);
+        assert!(rules(&allowed, "bare-print").is_empty(), "{path} should be allowlisted");
+    }
+}
+
+#[test]
 fn clean_fixture_has_no_violations() {
     let src = include_str!("fixtures/clean.rs");
     let v = lint_source("model/clean.rs", src);
